@@ -1,0 +1,89 @@
+//! Regenerate every table and figure of the paper's evaluation section and
+//! (optionally) check the headline claims hold in shape.
+//!
+//!     cargo run --release --example paper_figures            # print all
+//!     cargo run --release --example paper_figures -- --check # assert bands
+//!     cargo run --release --example paper_figures -- --csv DIR  # CSV dump
+
+use std::io::Write;
+
+use anyhow::Result;
+use quick_infer::figures;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let check = args.iter().any(|a| a == "--check");
+    let csv_dir = args
+        .iter()
+        .position(|a| a == "--csv")
+        .and_then(|i| args.get(i + 1).cloned());
+
+    let out = &mut std::io::stdout();
+    let f3 = figures::fig3(out)?;
+    let f7 = figures::fig7(out)?;
+    let f8 = figures::fig8(out)?;
+    let t1 = figures::table1(out)?;
+
+    if let Some(dir) = csv_dir {
+        std::fs::create_dir_all(&dir)?;
+        let mut w = std::fs::File::create(format!("{dir}/fig7.csv"))?;
+        writeln!(w, "gpu,batch,fp16_tops,awq_tops,quick_tops")?;
+        for r in &f7 {
+            writeln!(w, "{:?},{},{:.3},{:.3},{:.3}", r.gpu, r.batch, r.fp16, r.awq, r.quick)?;
+        }
+        let mut w = std::fs::File::create(format!("{dir}/fig8.csv"))?;
+        writeln!(w, "model,gpu,batch,fp16_tps,awq_tps,quick_tps")?;
+        for r in &f8 {
+            writeln!(w, "{:?},{:?},{},{:.1},{:.1},{:.1}", r.model, r.gpu, r.batch, r.fp16, r.awq, r.quick)?;
+        }
+        let mut w = std::fs::File::create(format!("{dir}/table1.csv"))?;
+        writeln!(w, "model,fp16_tps,awq_tps,quick_tps")?;
+        for r in &t1 {
+            writeln!(
+                w,
+                "{:?},{:.1},{:.1},{:.1}",
+                r.model, r.fp16.total_tok_per_s, r.awq.total_tok_per_s, r.quick.total_tok_per_s
+            )?;
+        }
+        println!("\nCSV written to {dir}/");
+    }
+
+    if check {
+        println!("\n== headline checks ==");
+        // Fig 3: QUICK removes write-back conflicts entirely.
+        assert_eq!(f3.quick_conflicts, 0, "Fig3: QUICK conflicts");
+        assert!(f3.awq_conflicts > 0, "Fig3: baseline must conflict");
+        println!("fig3: baseline {} conflicts, QUICK 0   OK", f3.awq_conflicts);
+
+        // Fig 7 headline: QUICK/AWQ in 1.33–1.91x at batch 256 (band widened
+        // ±0.1 for the simulated substrate).
+        for r in f7.iter().filter(|r| r.batch == 256) {
+            let s = r.quick / r.awq;
+            assert!((1.23..=2.01).contains(&s), "fig7 {:?}: {s:.2}x", r.gpu);
+            println!("fig7 {:?}: QUICK/AWQ @256 = {s:.2}x   OK", r.gpu);
+        }
+
+        // Fig 8: fp16 OOM where the paper says; QUICK >= AWQ.
+        let mistral256 = f8
+            .iter()
+            .find(|r| matches!(r.model, quick_infer::model::Model::Mistral7B) && r.batch == 256)
+            .unwrap();
+        assert_eq!(mistral256.fp16, 0.0, "fig8: Mistral fp16 @256 must OOM");
+        assert!(mistral256.quick > 0.0);
+        println!("fig8: Mistral-7B/4090 fp16 OOM @256, QUICK {:.0} tok/s   OK", mistral256.quick);
+
+        // Table 1: speedup bands (paper: +27% vs AWQ Vicuna, +29% 70B).
+        for r in &t1 {
+            let vs_awq = r.quick.total_tok_per_s / r.awq.total_tok_per_s - 1.0;
+            assert!(
+                (0.10..0.60).contains(&vs_awq),
+                "table1 {:?}: QUICK vs AWQ {vs_awq:+.2}",
+                r.model
+            );
+            println!("table1 {:?}: QUICK vs AWQ {:+.0}%   OK", r.model, vs_awq * 100.0);
+        }
+        assert!(t1[1].fp16.oom, "table1: 70B fp16 must OOM");
+        println!("all headline checks passed");
+    }
+    Ok(())
+}

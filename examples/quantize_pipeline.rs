@@ -1,0 +1,67 @@
+//! Offline quantization pipeline demo: the deploy-time tool a user runs to
+//! convert fp32 weights into the QUICK on-disk layout, verifying (a) the
+//! Rust packer agrees byte-for-byte with the Python packer (golden files)
+//! and (b) dequantization round-trips within half an LSB.
+//!
+//!     make artifacts && cargo run --release --example quantize_pipeline
+
+use anyhow::Result;
+use quick_infer::quant;
+use quick_infer::runtime::manifest::Manifest;
+use quick_infer::runtime::HostTensor;
+
+fn main() -> Result<()> {
+    let artifacts = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
+    let (manifest, root) = Manifest::load(std::path::Path::new(&artifacts))?;
+    let g = &manifest.pack_golden;
+    let dir = root.join("golden");
+    let (k, n, gs) = (g.k, g.n, g.group_size);
+    println!("pack golden case: {k}x{n}, group {gs}");
+
+    // Load the Python-side fp32 weights and re-run the whole pipeline in Rust.
+    let w = HostTensor::from_bin(&dir, g.w.as_ref().unwrap())?;
+    let t = quant::quantize_groupwise(w.as_f32()?, k, n, gs);
+
+    // 1. Codes must match numpy's quantizer exactly.
+    let codes_py = HostTensor::from_bin(&dir, g.codes.as_ref().unwrap())?;
+    assert_eq!(t.codes, codes_py.as_i32()?, "codes mismatch");
+    println!("codes: MATCH ({} values)", t.codes.len());
+
+    // 2. Packed layouts must be byte-identical.
+    let check_u32 = |name: &str, got: &[u32], spec: &quick_infer::runtime::manifest::BinSpec| -> Result<()> {
+        let want = HostTensor::from_bin(&dir, spec)?;
+        let want_u32: Vec<u32> = match want {
+            HostTensor::U32(v, _) => v,
+            _ => anyhow::bail!("{name}: expected u32 golden"),
+        };
+        assert_eq!(got, &want_u32[..], "{name} mismatch");
+        println!("{name}: MATCH ({} words)", got.len());
+        Ok(())
+    };
+    check_u32("awq layout", &quant::pack_awq(&t.codes, k, n), g.awq_words.as_ref().unwrap())?;
+    check_u32(
+        "quick dequant-order layout",
+        &quant::pack_quick_dequant_order(&t.codes, k, n),
+        g.quick_words.as_ref().unwrap(),
+    )?;
+    check_u32("quick interleaved stream", &quant::pack_quick(&t.codes, k, n), g.quick_stream.as_ref().unwrap())?;
+    check_u32(
+        "qzeros",
+        &quant::pack_qzeros(&t.zeros, k / gs, n),
+        g.qzeros.as_ref().unwrap(),
+    )?;
+
+    // 3. Dequantization round-trip.
+    let dq = quant::dequantize(&t);
+    let dq_py = HostTensor::from_bin(&dir, g.dequant.as_ref().unwrap())?;
+    let max_err = dq
+        .iter()
+        .zip(dq_py.as_f32()?)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    println!("dequant vs python: max err {max_err:.2e}");
+    assert!(max_err < 1e-5);
+
+    println!("quantize_pipeline OK — Rust and Python packers are bit-identical");
+    Ok(())
+}

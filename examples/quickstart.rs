@@ -1,0 +1,41 @@
+//! Quickstart: load an AOT GEMM artifact, run it through PJRT, and verify
+//! against the golden outputs — the smallest end-to-end slice of the stack.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use anyhow::Result;
+use quick_infer::runtime::Runtime;
+
+fn main() -> Result<()> {
+    let artifacts = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
+    let mut rt = Runtime::open(&artifacts)?;
+    println!("PJRT platform: {}", rt.platform());
+
+    // 1. Run the QUICK W4A16 GEMM artifact on its golden inputs.
+    let name = "gemm_quick_m16";
+    let args = rt.golden_args(name)?;
+    println!("executing {name} ({} args)...", args.len());
+    let outs = rt.execute(name, &args)?;
+    let want = rt.golden_outputs(name)?;
+    let err = outs[0].max_abs_diff(&want[0])?;
+    println!("max |out - golden| = {err:.3e}");
+    assert!(err < 1e-3, "golden mismatch");
+
+    // 2. Compare with the AWQ baseline artifact — different offline layout,
+    //    identical math: outputs must agree bitwise-ish.
+    let awq_outs = rt.execute("gemm_awq_m16", &rt.golden_args("gemm_awq_m16")?)?;
+    let cross = outs[0].max_abs_diff(&awq_outs[0])?;
+    println!("max |QUICK - AWQ| = {cross:.3e}");
+    assert!(cross < 1e-4);
+
+    // 3. Offline packing in Rust (the deploy-side tool): quantize a matrix
+    //    and show the QUICK interleave.
+    let (k, n) = (256, 128);
+    let w: Vec<f32> = (0..k * n).map(|i| ((i * 2654435761usize) as f32 / u32::MAX as f32) - 0.5).collect();
+    let t = quick_infer::quant::quantize_groupwise(&w, k, n, 128);
+    let stream = quick_infer::quant::pack_quick(&t.codes, k, n);
+    println!("packed {}x{} -> {} interleaved u32 words", k, n, stream.len());
+
+    println!("quickstart OK");
+    Ok(())
+}

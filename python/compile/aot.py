@@ -1,0 +1,274 @@
+"""AOT pipeline: lower every model/kernel variant to HLO text artifacts.
+
+Python runs ONCE (``make artifacts``); the Rust binary then loads
+``artifacts/hlo/*.hlo.txt`` via ``HloModuleProto::from_text_file`` and never
+touches Python again.
+
+Interchange format is HLO **text**, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version the published ``xla`` crate binds) rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly. Lowered with ``return_tuple=True`` — the Rust side unwraps with
+``to_tuple()``. See /opt/xla-example/README.md.
+
+Outputs
+-------
+artifacts/
+  manifest.json          — artifact index + shapes + golden vector index
+  hlo/<name>.hlo.txt     — one module per (entry, kernel, batch) variant
+  golden/<name>.*.bin    — raw little-endian buffers for Rust integration
+                           tests (inputs and expected outputs)
+  golden/pack_*.bin      — packed-weight buffers for the Rust quant
+                           cross-check (byte-identical packing required)
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import functools
+import hashlib
+import json
+import os
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import pack, quantize
+from .kernels.awq_gemm import awq_gemm
+from .kernels.fp16_gemm import fp16_gemm
+from .kernels.quick_gemm import quick_gemm
+
+# Artifact grid (DESIGN.md §6). Decode batches cover the continuous-batching
+# lane counts the Rust engine uses; GEMM M values mirror Fig. 7's batch axis
+# at CPU-tractable K=N.
+DECODE_BATCHES = (1, 2, 4, 8)
+PREFILL_SEQ = 16
+GEMM_MS = (1, 16, 64, 128)
+GEMM_K = 1024
+GEMM_N = 1024
+SEED = 2024
+
+CFG = M.ModelConfig(
+    vocab=512, d_model=256, n_layers=4, n_heads=4, d_ff=512,
+    max_seq=64, group_size=128,
+)
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants: the baked weights MUST survive the text
+    # round-trip — the default printer elides them as `constant({...})`.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def _spec_of(x) -> dict:
+    return {"dtype": str(x.dtype), "shape": list(x.shape)}
+
+
+def _save_bin(path: Path, arr: np.ndarray) -> dict:
+    arr = np.ascontiguousarray(arr)
+    path.write_bytes(arr.tobytes())
+    return {
+        "path": str(path.name),
+        "dtype": str(arr.dtype),
+        "shape": list(arr.shape),
+        "sha256": hashlib.sha256(arr.tobytes()).hexdigest()[:16],
+    }
+
+
+class Emitter:
+    def __init__(self, out_dir: Path, golden: bool = True):
+        self.out = out_dir
+        self.hlo_dir = out_dir / "hlo"
+        self.gold_dir = out_dir / "golden"
+        self.hlo_dir.mkdir(parents=True, exist_ok=True)
+        self.gold_dir.mkdir(parents=True, exist_ok=True)
+        self.manifest: dict = {
+            "version": 1,
+            "seed": SEED,
+            "model_config": dataclasses.asdict(CFG),
+            "artifacts": [],
+            "pack_golden": {},
+        }
+        self.golden = golden
+
+    def emit(self, name: str, fn, example_args: tuple, meta: dict) -> None:
+        """Lower ``fn(*example_args)``, write HLO + golden vectors."""
+        lowered = jax.jit(fn, keep_unused=True).lower(*example_args)
+        text = to_hlo_text(lowered)
+        (self.hlo_dir / f"{name}.hlo.txt").write_text(text)
+
+        entry: dict = dict(meta)
+        entry["name"] = name
+        entry["path"] = f"hlo/{name}.hlo.txt"
+        entry["args"] = [_spec_of(a) for a in example_args]
+
+        outs = fn(*example_args)
+        if not isinstance(outs, tuple):
+            outs = (outs,)
+        entry["outputs"] = [_spec_of(np.asarray(o)) for o in outs]
+
+        if self.golden:
+            gold_in, gold_out = [], []
+            for i, a in enumerate(example_args):
+                gold_in.append(
+                    _save_bin(self.gold_dir / f"{name}.arg{i}.bin", np.asarray(a))
+                )
+            for j, o in enumerate(outs):
+                gold_out.append(
+                    _save_bin(self.gold_dir / f"{name}.out{j}.bin", np.asarray(o))
+                )
+            entry["golden"] = {"args": gold_in, "outputs": gold_out}
+        self.manifest["artifacts"].append(entry)
+        print(f"  {name}: {len(text) / 1e6:.2f} MB hlo, "
+              f"{len(example_args)} args -> {len(outs)} outs")
+
+    def finish(self) -> None:
+        (self.out / "manifest.json").write_text(
+            json.dumps(self.manifest, indent=1)
+        )
+
+
+# ---------------------------------------------------------------------------
+# GEMM microbench artifacts (Fig. 7's kernel-level comparison, CPU-scaled)
+# ---------------------------------------------------------------------------
+
+def emit_gemms(em: Emitter) -> None:
+    rng = np.random.default_rng(SEED)
+    w = (rng.standard_normal((GEMM_K, GEMM_N)) * 0.05).astype(np.float32)
+    q, s, z = quantize.quantize_groupwise(w, CFG.group_size)
+    wq_quick = pack.pack_quick_dequant_order(q)
+    wq_awq = pack.pack_awq(q)
+    wdq = quantize.dequantize(q, s, z, CFG.group_size)  # fp path uses the
+    # dequantized weights so all three kernels compute the same product.
+
+    for m in GEMM_MS:
+        x = (rng.standard_normal((m, GEMM_K)) * 0.5).astype(np.float32)
+        for kern in M.KERNELS:
+            name = f"gemm_{kern}_m{m}"
+            if kern == "fp16":
+                fn = functools.partial(
+                    lambda x_, w_=jnp.asarray(wdq): (fp16_gemm(x_, w_),)
+                )
+            else:
+                kfn = quick_gemm if kern == "quick" else awq_gemm
+                wq = wq_quick if kern == "quick" else wq_awq
+                fn = functools.partial(
+                    lambda x_, k=kfn, ww=jnp.asarray(wq), ss=jnp.asarray(s),
+                    zz=jnp.asarray(z): (
+                        k(x_, ww, ss, zz, group_size=CFG.group_size),
+                    )
+                )
+            em.emit(
+                name, fn, (jnp.asarray(x),),
+                {"kind": "gemm", "kernel": kern, "m": m, "k": GEMM_K,
+                 "n": GEMM_N, "group_size": CFG.group_size},
+            )
+
+
+# ---------------------------------------------------------------------------
+# Model artifacts (decode + prefill), weights baked as constants
+# ---------------------------------------------------------------------------
+
+def emit_model(em: Emitter) -> None:
+    fp = M.init_params(CFG, seed=SEED)
+    params = {
+        "quick": M.quantize_params(fp, CFG, "quick"),
+        "awq": M.quantize_params(fp, CFG, "awq"),
+        "fp16": fp,
+    }
+    rng = np.random.default_rng(SEED + 1)
+
+    for kern in M.KERNELS:
+        p = jax.tree.map(jnp.asarray, params[kern])
+        for b in DECODE_BATCHES:
+            tokens = rng.integers(0, CFG.vocab, size=(b,)).astype(np.int32)
+            pos = rng.integers(0, CFG.max_seq // 2, size=(b,)).astype(np.int32)
+            kc, vc = M.empty_cache(CFG, b)
+
+            def decode_fn(t, po, k, v, p=p, kern=kern):
+                return M.decode_step(p, CFG, kern, t, po, k, v)
+
+            em.emit(
+                f"decode_{kern}_b{b}", decode_fn,
+                (jnp.asarray(tokens), jnp.asarray(pos), kc, vc),
+                {"kind": "decode", "kernel": kern, "batch": b,
+                 "max_seq": CFG.max_seq},
+            )
+
+        # Prefill: batch 1, fixed padded prompt length.
+        tokens = rng.integers(0, CFG.vocab, size=(1, PREFILL_SEQ)).astype(np.int32)
+        length = np.asarray([PREFILL_SEQ - 3], np.int32)
+        kc, vc = M.empty_cache(CFG, 1)
+
+        def prefill_fn(t, ln, k, v, p=p, kern=kern):
+            return M.prefill(p, CFG, kern, t, ln, k, v)
+
+        em.emit(
+            f"prefill_{kern}_b1_s{PREFILL_SEQ}", prefill_fn,
+            (jnp.asarray(tokens), jnp.asarray(length), kc, vc),
+            {"kind": "prefill", "kernel": kern, "batch": 1,
+             "seq": PREFILL_SEQ, "max_seq": CFG.max_seq},
+        )
+
+
+# ---------------------------------------------------------------------------
+# Pack golden files: Rust quant/ must reproduce these bytes exactly
+# ---------------------------------------------------------------------------
+
+def emit_pack_golden(em: Emitter) -> None:
+    rng = np.random.default_rng(SEED + 2)
+    K, N, G = 64, 32, 32
+    w = rng.standard_normal((K, N)).astype(np.float32)
+    q, s, z = quantize.quantize_groupwise(w, G)
+    stream, perm = pack.pack_quick(q)
+    gold = {
+        "k": K, "n": N, "group_size": G,
+        "w": _save_bin(em.gold_dir / "pack_w.bin", w),
+        "codes": _save_bin(em.gold_dir / "pack_codes.bin", q.astype(np.int32)),
+        "scales": _save_bin(em.gold_dir / "pack_scales.bin", s),
+        "zeros": _save_bin(em.gold_dir / "pack_zeros.bin", z),
+        "awq_words": _save_bin(em.gold_dir / "pack_awq.bin", pack.pack_awq(q)),
+        "quick_words": _save_bin(
+            em.gold_dir / "pack_quick_words.bin", pack.pack_quick_dequant_order(q)
+        ),
+        "quick_stream": _save_bin(em.gold_dir / "pack_quick_stream.bin", stream),
+        "perm": _save_bin(em.gold_dir / "pack_perm.bin", perm.astype(np.int64)),
+        "qzeros": _save_bin(em.gold_dir / "pack_qzeros.bin", pack.pack_qzeros(z)),
+        "dequant": _save_bin(
+            em.gold_dir / "pack_dequant.bin", quantize.dequantize(q, s, z, G)
+        ),
+    }
+    em.manifest["pack_golden"] = gold
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output dir")
+    ap.add_argument("--no-golden", action="store_true")
+    args = ap.parse_args()
+    jax.config.update("jax_platform_name", "cpu")
+
+    out = Path(args.out)
+    em = Emitter(out, golden=not args.no_golden)
+    print("emitting GEMM microbench artifacts...")
+    emit_gemms(em)
+    print("emitting model artifacts...")
+    emit_model(em)
+    print("emitting pack golden files...")
+    emit_pack_golden(em)
+    em.finish()
+    print(f"wrote {len(em.manifest['artifacts'])} artifacts to {out}")
+
+
+if __name__ == "__main__":
+    main()

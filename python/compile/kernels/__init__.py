@@ -1,0 +1,6 @@
+# L1: Pallas kernels for the paper compute hot-spot (W4A16 GEMM) plus the
+# offline packing/interleaving and the pure-jnp oracle.
+from . import pack, quantize, ref  # noqa: F401
+from .awq_gemm import awq_gemm  # noqa: F401
+from .fp16_gemm import fp16_gemm  # noqa: F401
+from .quick_gemm import quick_gemm  # noqa: F401

@@ -1,0 +1,100 @@
+"""Baseline mixed-precision GEMM kernel modeling the original AutoAWQ path.
+
+Same math as ``quick_gemm.py`` but the weights arrive in the stock
+AWQ/FasterTransformer nibble order (``pack.pack_awq``): sequentially unpacked
+nibbles come out in permuted column order, so the kernel must **deinterleave
+with a gather** before the dot. That gather is the Pallas analogue of the
+original CUDA kernel's dequantize → shared-memory write-back → ``ldmatrix``
+round-trip whose bank conflicts QUICK removes (paper Figs. 2–3); in the
+`gpusim` substrate the very same layout difference is what produces the
+conflict counts of Figure 3.
+
+Kept as a first-class kernel (not a test fixture) because every figure in the
+paper benchmarks against it.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from .pack import FT_INV
+from .quantize import PACK_FACTOR
+
+
+def _dequant_block_awq(words, scales_blk, zeros_blk, block_k: int, group_size: int):
+    """Unpack one word block, then *gather* nibbles back to logical order."""
+    shifts = 4 * jnp.arange(PACK_FACTOR, dtype=jnp.uint32)
+    nibbles = (words[:, :, None] >> shifts[None, None, :]) & jnp.uint32(0xF)
+    # The deinterleave the naive layout forces (slot p holds FT_ORDER[p]).
+    # Static per-slot slicing (not a gather with a captured index array):
+    # pallas kernels may not close over array constants.
+    nibbles = jnp.stack([nibbles[:, :, int(s)] for s in FT_INV], axis=-1)
+    bk, w8, _ = nibbles.shape
+    codes = nibbles.reshape(bk, w8 * PACK_FACTOR).astype(jnp.float32)
+    g = block_k // group_size
+    codes = codes.reshape(g, group_size, w8 * PACK_FACTOR)
+    w = (codes - zeros_blk[:, None, :]) * scales_blk[:, None, :]
+    return w.reshape(bk, w8 * PACK_FACTOR)
+
+
+def _awq_kernel(x_ref, qw_ref, s_ref, z_ref, o_ref, *, block_k, group_size):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    w = _dequant_block_awq(qw_ref[...], s_ref[...], z_ref[...], block_k, group_size)
+    o_ref[...] += jnp.dot(x_ref[...], w, preferred_element_type=jnp.float32)
+
+
+def awq_gemm(
+    x,
+    qwords,
+    scales,
+    zeros,
+    *,
+    group_size: int = 128,
+    block_m: int = 16,
+    block_n: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+):
+    """``y = x @ dequant(qwords)`` with stock-AWQ-packed 4-bit weights.
+
+    Interface mirrors :func:`quick_gemm.quick_gemm`; only the offline layout
+    (and hence the in-kernel deinterleave) differs.
+    """
+    M, K = x.shape
+    Kw, W = qwords.shape
+    N = W * PACK_FACTOR
+    assert Kw == K, (Kw, K)
+    block_m = min(block_m, max(M, 1))
+    if K % block_k != 0 or N % block_n != 0:
+        raise ValueError(f"K={K}, N={N} must tile by ({block_k}, {block_n})")
+    if block_k % group_size != 0:
+        raise ValueError("block_k must be a multiple of group_size")
+
+    pad_m = (-M) % block_m
+    if pad_m:
+        x = jnp.pad(x, ((0, pad_m), (0, 0)))
+    Mp = M + pad_m
+    gpb = block_k // group_size
+
+    out = pl.pallas_call(
+        functools.partial(_awq_kernel, block_k=block_k, group_size=group_size),
+        grid=(Mp // block_m, N // block_n, K // block_k),
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda m, n, k: (m, k)),
+            pl.BlockSpec((block_k, block_n // PACK_FACTOR), lambda m, n, k: (k, n)),
+            pl.BlockSpec((gpb, block_n), lambda m, n, k: (k, n)),
+            pl.BlockSpec((gpb, block_n), lambda m, n, k: (k, n)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda m, n, k: (m, n)),
+        out_shape=jax.ShapeDtypeStruct((Mp, N), jnp.float32),
+        interpret=interpret,
+    )(x, qwords, scales, zeros)
+    return out[:M] if pad_m else out

@@ -1,0 +1,86 @@
+"""Activation-aware weight scaling (AWQ, Lin et al. 2023) — the calibration
+step that produces the quantized checkpoints QUICK serves.
+
+AWQ's observation: ~1% of weight channels are *salient* because their input
+activations are large; scaling those channels up before 4-bit quantization
+(and folding the inverse scale into the activations / preceding layer)
+preserves them. We implement the standard per-input-channel grid search:
+
+    s_j = mean(|x_j|)^alpha,   alpha in [0, 1) grid
+    w'[j, :] = w[j, :] * s_j;  quantize w'; at inference x_j is divided
+    by s_j (folded upstream), so the product is unchanged up to
+    quantization error.
+
+The search minimizes ||x @ w  -  (x / s) @ dq(q(w * s))||_F on calibration
+activations. Used offline only (deploy path); the Rust twin in
+`rust/src/quant/search.rs` must agree on the selected alpha (golden test).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from . import quantize
+
+
+def apply_channel_scale(w: np.ndarray, s: np.ndarray) -> np.ndarray:
+    """Scale input channel j of ``w`` (K, N) by ``s[j]``."""
+    return w * s[:, None]
+
+
+def quant_dequant(w: np.ndarray, group_size: int) -> np.ndarray:
+    q, sc, z = quantize.quantize_groupwise(w, group_size)
+    return quantize.dequantize(q, sc, z, group_size)
+
+
+def reconstruction_error(
+    x: np.ndarray, w: np.ndarray, s: np.ndarray, group_size: int
+) -> float:
+    """||x @ w - (x/s) @ dq(q(w*s))||_F, the AWQ objective."""
+    ref = x @ w
+    wq = quant_dequant(apply_channel_scale(w, s), group_size)
+    got = (x / s[None, :]) @ wq
+    return float(np.linalg.norm(ref - got))
+
+
+def search_awq_scales(
+    w: np.ndarray,
+    x_calib: np.ndarray,
+    group_size: int = 128,
+    n_grid: int = 20,
+) -> tuple[np.ndarray, float, float]:
+    """Grid-search the AWQ exponent alpha.
+
+    w: (K, N) weights; x_calib: (B, K) calibration activations.
+    Returns ``(scales (K,), best_alpha, best_err)``; alpha=0 (s=1) is in
+    the grid so the search never does worse than plain quantization.
+    """
+    K = w.shape[0]
+    assert x_calib.shape[1] == K
+    act_mag = np.abs(x_calib).mean(axis=0)  # (K,)
+    act_mag = np.maximum(act_mag, 1e-8)
+
+    best = (np.ones(K, np.float32), 0.0, np.inf)
+    for gi in range(n_grid):
+        alpha = gi / n_grid
+        s = act_mag**alpha
+        # Normalize so scales straddle 1 (keeps dynamic range centered).
+        s = (s / np.sqrt(s.max() * s.min())).astype(np.float32)
+        err = reconstruction_error(x_calib, w, s, group_size)
+        if err < best[2]:
+            best = (s, alpha, err)
+    return best
+
+
+def quantize_awq(
+    w: np.ndarray, x_calib: np.ndarray, group_size: int = 128, n_grid: int = 20
+):
+    """Full AWQ pipeline: search scales, quantize the scaled weights.
+
+    Returns ``(q, qscales, zeros, channel_scales)``; at inference the
+    activation is divided by ``channel_scales`` (folded into the previous
+    RMSNorm in a real deployment).
+    """
+    s, _, _ = search_awq_scales(w, x_calib, group_size, n_grid)
+    q, qs, z = quantize.quantize_groupwise(apply_channel_scale(w, s), group_size)
+    return q, qs, z, s

@@ -1,0 +1,57 @@
+"""Plain full-precision tiled GEMM Pallas kernel — the paper's fp16 baseline.
+
+(The CPU interpret path computes in f32; "fp16" names the *role* — the
+unquantized baseline of Figures 7/8 — not the storage dtype. Real-TPU builds
+would use bf16 inputs with f32 accumulation on the MXU.)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fp16_kernel(x_ref, w_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def fp16_gemm(
+    x,
+    w,
+    *,
+    block_m: int = 16,
+    block_n: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+):
+    """``y = x @ w`` tiled for the MXU. x: (M, K), w: (K, N)."""
+    M, K = x.shape
+    Kw, N = w.shape
+    assert Kw == K
+    block_m = min(block_m, max(M, 1))
+    if K % block_k != 0 or N % block_n != 0:
+        raise ValueError(f"K={K}, N={N} must tile by ({block_k}, {block_n})")
+    pad_m = (-M) % block_m
+    if pad_m:
+        x = jnp.pad(x, ((0, pad_m), (0, 0)))
+    Mp = M + pad_m
+
+    out = pl.pallas_call(
+        _fp16_kernel,
+        grid=(Mp // block_m, N // block_n, K // block_k),
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda m, n, k: (m, k)),
+            pl.BlockSpec((block_k, block_n), lambda m, n, k: (k, n)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda m, n, k: (m, n)),
+        out_shape=jax.ShapeDtypeStruct((Mp, N), jnp.float32),
+        interpret=interpret,
+    )(x, w)
+    return out[:M] if pad_m else out

@@ -1,0 +1,195 @@
+"""Offline int4 packing and the QUICK interleaving permutations.
+
+This file is the Python twin of ``rust/src/quant`` — both sides must produce
+byte-identical buffers (checked by golden-file tests). Three layouts exist:
+
+1. **Linear** (``pack_linear``): word ``j`` of row ``k`` packs the eight
+   logical columns ``8j .. 8j+7`` with column ``8j+i`` in nibble slot ``i``.
+   The "obvious" layout; used only as a reference point.
+
+2. **AWQ / FasterTransformer order** (``pack_awq``): nibble slot ``p`` of a
+   word holds logical column ``8j + FT_ORDER[p]`` with
+   ``FT_ORDER = [0, 2, 4, 6, 1, 3, 5, 7]``. This is the layout AutoAWQ ships:
+   it lets the parallel i4→f16 dequantizer extract even nibbles with a single
+   mask and odd nibbles with one shift+mask (two f16x2 lanes per u32 step).
+   The *cost* is that sequentially-unpacked nibbles come out in permuted
+   column order, so the original kernel must shuffle them back — on GPU this
+   is bound up with the shared-memory write-back that QUICK eliminates.
+
+3. **QUICK order** (``pack_quick``): the dequant-aware reorder of the paper's
+   Figure 5 composed with the ldmatrix-aware fragment interleave of Figure 4
+   (Figure 6 = composition). Columns are pre-permuted by ``FT_ORDER`` *before*
+   AWQ packing, so in-kernel sequential unpack yields logical column order
+   directly — zero in-kernel shuffles. The fragment interleave is applied on
+   top as a row/word permutation (``quick_fragment_perm``) so that, on the
+   paper's hardware, each CUDA thread's ``mma`` fragments are DRAM-contiguous.
+   On TPU (our Pallas kernel) the same property makes one VMEM block
+   dequantize elementwise into exactly the (K_blk, N_blk) tile the MXU
+   consumes — see DESIGN.md §Hardware-Adaptation.
+
+All functions operate on ``(K, N)`` logical codes (values 0..15, int32) and
+return ``(K, N // 8)`` uint32 word arrays (plus permutation metadata).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .quantize import PACK_FACTOR, QMAX
+
+# FasterTransformer parallel-dequant nibble order (paper Fig. 5).
+FT_ORDER = np.array([0, 2, 4, 6, 1, 3, 5, 7], dtype=np.int64)
+# Inverse: logical column i lives in nibble slot FT_INV[i].
+FT_INV = np.argsort(FT_ORDER)
+
+# mma.m16n8k16 fragment geometry (paper §3.2): 32 lanes, each lane owns
+# (row, col) fragments of the 16x8 B-tile; ldmatrix loads 8x8 sub-matrices
+# with lane l holding row l%8's 2-element fragment (Fig. 1).
+MMA_M, MMA_N, MMA_K = 16, 8, 16
+WARP_LANES = 32
+
+
+def _check_qn(q: np.ndarray) -> None:
+    if q.ndim != 2 or q.shape[1] % PACK_FACTOR != 0:
+        raise ValueError(f"bad code shape {q.shape}")
+    if q.min() < 0 or q.max() > QMAX:
+        raise ValueError("codes out of [0, 15]")
+
+
+def pack_words(q: np.ndarray, order: np.ndarray) -> np.ndarray:
+    """Pack (K, N) int4 codes into (K, N//8) u32 words.
+
+    ``order[p]`` = logical offset (within the group of 8) stored in nibble
+    slot ``p`` (slot p occupies bits ``4p .. 4p+3``).
+    """
+    _check_qn(q)
+    K, N = q.shape
+    g = q.reshape(K, N // PACK_FACTOR, PACK_FACTOR).astype(np.uint32)
+    g = g[:, :, order]  # slot p <- logical order[p]
+    shifts = (4 * np.arange(PACK_FACTOR, dtype=np.uint32))[None, None, :]
+    return (g << shifts).sum(axis=2, dtype=np.uint32)
+
+
+def unpack_words(words: np.ndarray, order: np.ndarray) -> np.ndarray:
+    """Inverse of :func:`pack_words` — returns (K, N) int32 codes."""
+    K, W = words.shape
+    shifts = (4 * np.arange(PACK_FACTOR, dtype=np.uint32))[None, None, :]
+    g = (words[:, :, None] >> shifts) & np.uint32(0xF)
+    out = np.empty((K, W, PACK_FACTOR), dtype=np.int32)
+    out[:, :, order] = g.astype(np.int32)  # logical order[p] <- slot p
+    return out.reshape(K, W * PACK_FACTOR)
+
+
+def pack_linear(q: np.ndarray) -> np.ndarray:
+    """Layout 1: slot i holds logical column 8j+i."""
+    return pack_words(q, np.arange(PACK_FACTOR))
+
+
+def pack_awq(q: np.ndarray) -> np.ndarray:
+    """Layout 2: AutoAWQ/FasterTransformer nibble order (FT_ORDER)."""
+    return pack_words(q, FT_ORDER)
+
+
+def unpack_awq(words: np.ndarray) -> np.ndarray:
+    return unpack_words(words, FT_ORDER)
+
+
+def pack_quick_dequant_order(q: np.ndarray) -> np.ndarray:
+    """Layout 3a (Fig. 5): dequant-aware reorder only.
+
+    Equal to AWQ packing of the column-pre-permuted matrix; sequential
+    in-kernel unpack (slot p -> column 8j+p) then yields logical order —
+    i.e. this is ``pack_linear`` viewed through the FT dequantizer. The
+    packed *bits* differ from ``pack_awq``; the *dequantizer* is identical.
+    """
+    return pack_words(q, np.arange(PACK_FACTOR))
+
+
+def ldmatrix_fragment_perm(rows: int, n_words: int) -> np.ndarray:
+    """Layout 3b (Fig. 4): ldmatrix/mma-aware word interleave.
+
+    Returns ``perm`` of length ``rows * n_words`` such that
+    ``flat_out[i] = flat_in[perm[i]]`` reorders the (K, N//8) word grid into
+    the order in which the 32 lanes of a warp consume fragments of
+    consecutive ``MMA_K x MMA_N`` B-tiles of ``mma.m16n8k16``:
+
+      for each (k_tile, n_tile) in row-major tile order, emit the word of
+      (k_tile*16 + lane%16? ...) — concretely lane ``l`` of the warp owns
+      rows ``{l//4, l//4+8}`` and the nibble-pair columns ``2*(l%4)`` of each
+      8x8 sub-matrix (Fig. 1); grouping the two K-halves of the m16n8k16
+      B-operand per lane gives the contiguous-per-lane DRAM order.
+
+    At word granularity (8 columns = one N-tile of the B fragment), tile
+    ``(kt, nt)`` covers rows ``16*kt .. 16*kt+15`` and word column ``nt``.
+    Lane l reads rows ``16*kt + (l % 4) * 4 + ...``: the exact sub-word
+    assignment is below; the function asserts bijectivity.
+    """
+    K = rows
+    W = n_words
+    if K % MMA_K != 0:
+        raise ValueError(f"rows={K} not a multiple of {MMA_K}")
+    perm = np.empty(K * W, dtype=np.int64)
+    idx = 0
+    # ldmatrix.m8n8.x4 for a 16x16 B-operand region = two 8x8 matrices along
+    # K for each of two N-halves; at our word granularity one word = 8
+    # columns = the full n8 extent, so the lane->row map is: lane l loads
+    # row (l % 8) of sub-matrix (l // 8). Sub-matrices are stacked along K:
+    # rows 0-7 (sub 0), 8-15 (sub 1) of the tile.
+    for kt in range(K // MMA_K):
+        for nt in range(W):
+            for lane in range(MMA_K):  # 16 row-fragments per (kt, nt) tile
+                sub, r = divmod(lane, 8)
+                row = kt * MMA_K + sub * 8 + r
+                perm[idx] = row * W + nt
+                idx += 1
+    assert idx == K * W
+    return perm
+
+
+def apply_word_perm(words: np.ndarray, perm: np.ndarray) -> np.ndarray:
+    """Flatten, permute, and return a 1-D interleaved word stream."""
+    flat = words.reshape(-1)
+    return flat[perm]
+
+
+def invert_perm(perm: np.ndarray) -> np.ndarray:
+    inv = np.empty_like(perm)
+    inv[perm] = np.arange(perm.size, dtype=perm.dtype)
+    return inv
+
+
+def pack_quick(q: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Full QUICK layout (Fig. 6): dequant-aware column order composed with
+    the ldmatrix-aware fragment interleave.
+
+    Returns ``(stream, perm)`` where ``stream`` is the 1-D u32 word stream in
+    DRAM order and ``perm`` the applied word permutation (for tests /
+    inversion). The two reorders commute because one permutes nibbles inside
+    words and the other permutes whole words (paper §3.2, "the patterns are
+    independent").
+    """
+    words = pack_quick_dequant_order(q)
+    perm = ldmatrix_fragment_perm(*words.shape)
+    return apply_word_perm(words, perm), perm
+
+
+def unpack_quick(stream: np.ndarray, rows: int, cols: int) -> np.ndarray:
+    """Inverse of :func:`pack_quick` — back to logical (K, N) codes."""
+    W = cols // PACK_FACTOR
+    perm = ldmatrix_fragment_perm(rows, W)
+    words = np.empty(rows * W, dtype=np.uint32)
+    words[perm] = stream
+    return unpack_words(words.reshape(rows, W), np.arange(PACK_FACTOR))
+
+
+def pack_qzeros(zeros: np.ndarray) -> np.ndarray:
+    """Bit-faithful AWQ qzeros packing: (K//G, N) int zero-points ->
+    (K//G, N//8) u32 in FT order (AutoAWQ convention)."""
+    z = zeros.astype(np.int32)
+    if z.min() < 0 or z.max() > QMAX:
+        raise ValueError("zeros out of range")
+    return pack_words(z, FT_ORDER)
+
+
+def unpack_qzeros(words: np.ndarray) -> np.ndarray:
+    return unpack_words(words, FT_ORDER)

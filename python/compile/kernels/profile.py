@@ -1,0 +1,93 @@
+"""L1 structural profiling: VMEM footprint and MXU utilization *estimates*
+for the Pallas kernels, derived from their BlockSpecs (DESIGN.md §8).
+
+Interpret-mode wallclock on CPU says nothing about TPU performance, so the
+optimization signal for the kernel layer is structural:
+
+* VMEM per grid cell = sum of the blocks resident while one kernel body
+  runs (inputs + outputs + the dequantized tile the body materializes).
+  Budget: 16 MiB/core (v4/v5 class).
+* MXU utilization estimate = fraction of the (8, 128)-aligned systolic
+  array the `dot` shapes fill, times an issue-efficiency factor for the
+  number of MXU passes per grid cell.
+* Op overhead = the element-wise dequant work per MXU pass (shift/and/
+  scale are VPU-side and pipeline with the MXU; a gather does not).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+F32 = 4  # bytes
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelProfile:
+    name: str
+    block_m: int
+    block_n: int
+    block_k: int
+    group_size: int
+    vmem_bytes: int
+    mxu_util: float
+    has_relayout: bool
+
+    def render(self) -> str:
+        return (
+            f"{self.name}: blocks ({self.block_m},{self.block_n},{self.block_k}) "
+            f"VMEM {self.vmem_bytes / 1024:.1f} KiB  MXU~{self.mxu_util:.0%}  "
+            f"relayout={'YES' if self.has_relayout else 'no'}"
+        )
+
+
+def profile_gemm_kernel(
+    kind: str,
+    block_m: int = 16,
+    block_n: int = 128,
+    block_k: int = 128,
+    group_size: int = 128,
+) -> KernelProfile:
+    """Structural profile of one of the three kernels at given blocks."""
+    assert kind in ("quick", "awq", "fp16")
+    gpb = block_k // group_size
+    x_blk = block_m * block_k * F32
+    out_blk = block_m * block_n * F32
+    if kind == "fp16":
+        w_blk = block_k * block_n * F32
+        scratch = 0
+        meta = 0
+    else:
+        w_blk = block_k * (block_n // 8) * F32  # packed u32 words
+        meta = 2 * gpb * block_n * F32  # scales + zeros blocks
+        # both quantized kernels materialize the dequantized (bk, bn) tile
+        scratch = block_k * block_n * F32
+    vmem = x_blk + w_blk + meta + scratch + out_blk
+
+    # MXU: (8, 128) lanes; a dot of (bm, bk) @ (bk, bn) fills min(bm,8)x...
+    # estimate = how full the contraction tiles keep the array.
+    sublane_fill = min(block_m, 8) / 8 if block_m < 8 else 1.0
+    lane_fill = min(block_n, 128) / 128
+    k_fill = min(block_k, 128) / 128
+    mxu = sublane_fill * lane_fill * k_fill
+    # The AWQ kernel's deinterleave gather sits between the VMEM load and
+    # the dot: it is a relayout the MXU pipeline stalls behind.
+    has_relayout = kind == "awq"
+    if has_relayout:
+        mxu *= 0.75  # issue bubbles from the gather (structural estimate)
+    return KernelProfile(
+        name=f"{kind}_gemm",
+        block_m=block_m,
+        block_n=block_n,
+        block_k=block_k,
+        group_size=group_size,
+        vmem_bytes=vmem,
+        mxu_util=mxu,
+        has_relayout=has_relayout,
+    )
+
+
+VMEM_BUDGET = 16 * 1024 * 1024  # bytes/core
+
+
+def check_budget(p: KernelProfile) -> bool:
+    return p.vmem_bytes <= VMEM_BUDGET

@@ -1,0 +1,60 @@
+"""Group-wise 4-bit weight quantization (AWQ storage convention).
+
+Logical layout convention used throughout the repo:
+
+  * ``w``       — fp weight matrix of shape ``(K, N)`` (in_features x
+                  out_features), multiplied as ``y = x @ w`` with
+                  ``x: (M, K)``.
+  * ``q``       — unsigned 4-bit codes, ``(K, N)``, values in ``[0, 15]``.
+  * ``scales``  — per-group scales, ``(K // G, N)``.
+  * ``zeros``   — per-group zero-points, ``(K // G, N)``; stored as float so
+                  dequantization is ``w ≈ (q - z) * s``. (AutoAWQ packs the
+                  integer zero-points into ``qzeros``; see ``pack.py`` for the
+                  bit-faithful packed form used by the Rust substrate.)
+
+Groups run along K (the reduction axis), matching AWQ/GPTQ.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+QBITS = 4
+QMAX = (1 << QBITS) - 1  # 15
+PACK_FACTOR = 32 // QBITS  # 8 nibbles per u32 word
+
+
+def quantize_groupwise(
+    w: np.ndarray, group_size: int = 128
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Asymmetric per-group 4-bit quantization of ``w`` (K, N).
+
+    Returns ``(q, scales, zeros)`` with shapes ``(K, N)``, ``(K//G, N)``,
+    ``(K//G, N)``. Zero-points are integral (stored as float32) so that the
+    packed ``qzeros`` form in ``pack.py`` is exact.
+    """
+    K, N = w.shape
+    if K % group_size != 0:
+        raise ValueError(f"K={K} not divisible by group_size={group_size}")
+    G = group_size
+    wg = w.reshape(K // G, G, N)
+    wmin = wg.min(axis=1)  # (K//G, N)
+    wmax = wg.max(axis=1)
+    scales = (wmax - wmin) / QMAX
+    # Guard degenerate all-equal groups.
+    scales = np.where(scales <= 0, 1.0, scales).astype(np.float32)
+    zeros = np.clip(np.round(-wmin / scales), 0, QMAX).astype(np.float32)
+    q = np.round(wg / scales[:, None, :]) + zeros[:, None, :]
+    q = np.clip(q, 0, QMAX).astype(np.int32).reshape(K, N)
+    return q, scales, zeros
+
+
+def dequantize(
+    q: np.ndarray, scales: np.ndarray, zeros: np.ndarray, group_size: int = 128
+) -> np.ndarray:
+    """Inverse of :func:`quantize_groupwise` — ``(q - z) * s`` per group."""
+    K, N = q.shape
+    G = group_size
+    qg = q.reshape(K // G, G, N).astype(np.float32)
+    w = (qg - zeros[:, None, :]) * scales[:, None, :]
+    return w.reshape(K, N).astype(np.float32)

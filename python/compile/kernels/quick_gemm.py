@@ -1,0 +1,107 @@
+"""QUICK mixed-precision (W4A16-style) GEMM as a Pallas kernel.
+
+TPU adaptation of the paper's conflict-free CUDA kernel (DESIGN.md
+§Hardware-Adaptation): the quantized weights are packed **offline** in the
+QUICK dequant-aware order (``pack.pack_quick_dequant_order``), so the kernel
+dequantizes each VMEM block with *purely element-wise* ops — shift, mask,
+scale — straight into the (block_k, block_n) tile the MXU ``dot`` consumes.
+No in-kernel gather, transpose, or scratch round-trip: this is the TPU
+analogue of skipping the shared-memory write-back + ``ldmatrix``.
+
+Contrast with ``awq_gemm.py``, which models the original kernel: same math,
+but the AWQ/FasterTransformer nibble order forces an in-kernel deinterleave
+gather after unpacking (the analogue of the conflicted write-back).
+
+Pallas runs ``interpret=True`` — CPU PJRT cannot execute Mosaic custom calls;
+real-TPU performance is estimated structurally (DESIGN.md §8).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .quantize import PACK_FACTOR
+
+
+def _dequant_block(words, scales_blk, zeros_blk, block_k: int, group_size: int):
+    """Element-wise unpack + dequant of one (block_k, block_n//8) word block.
+
+    Because of the offline QUICK reorder, nibble slot ``p`` *is* logical
+    column ``8j + p``: a reshape finishes the unpack. Returns (block_k,
+    block_n) f32.
+    """
+    shifts = 4 * jnp.arange(PACK_FACTOR, dtype=jnp.uint32)
+    nibbles = (words[:, :, None] >> shifts[None, None, :]) & jnp.uint32(0xF)
+    bk, w8, _ = nibbles.shape
+    codes = nibbles.reshape(bk, w8 * PACK_FACTOR).astype(jnp.float32)
+    # Per-group affine: groups run along K inside the block.
+    g = block_k // group_size
+    codes = codes.reshape(g, group_size, w8 * PACK_FACTOR)
+    w = (codes - zeros_blk[:, None, :]) * scales_blk[:, None, :]
+    return w.reshape(bk, w8 * PACK_FACTOR)
+
+
+def _quick_kernel(x_ref, qw_ref, s_ref, z_ref, o_ref, *, block_k, group_size, k_steps):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    w = _dequant_block(qw_ref[...], s_ref[...], z_ref[...], block_k, group_size)
+    o_ref[...] += jnp.dot(x_ref[...], w, preferred_element_type=jnp.float32)
+
+
+def quick_gemm(
+    x,
+    qwords,
+    scales,
+    zeros,
+    *,
+    group_size: int = 128,
+    block_m: int = 16,
+    block_n: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+):
+    """``y = x @ dequant(qwords)`` with QUICK-interleaved 4-bit weights.
+
+    x: (M, K) f32; qwords: (K, N//8) u32 packed by
+    ``pack.pack_quick_dequant_order``; scales/zeros: (K//G, N) f32.
+    M is padded up to ``block_m`` internally (decode batches can be 1).
+    """
+    M, K = x.shape
+    Kw, W = qwords.shape
+    N = W * PACK_FACTOR
+    assert Kw == K, (Kw, K)
+    block_m = min(block_m, max(M, 1))
+    if K % block_k != 0 or N % block_n != 0:
+        raise ValueError(f"K={K}, N={N} must tile by ({block_k}, {block_n})")
+    if block_k % group_size != 0:
+        raise ValueError("block_k must be a multiple of group_size")
+
+    pad_m = (-M) % block_m
+    if pad_m:
+        x = jnp.pad(x, ((0, pad_m), (0, 0)))
+    Mp = M + pad_m
+    k_steps = K // block_k
+    gpb = block_k // group_size  # scale/zero groups per K-block
+
+    out = pl.pallas_call(
+        functools.partial(
+            _quick_kernel, block_k=block_k, group_size=group_size, k_steps=k_steps
+        ),
+        grid=(Mp // block_m, N // block_n, k_steps),
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda m, n, k: (m, k)),
+            pl.BlockSpec((block_k, block_n // PACK_FACTOR), lambda m, n, k: (k, n)),
+            pl.BlockSpec((gpb, block_n), lambda m, n, k: (k, n)),
+            pl.BlockSpec((gpb, block_n), lambda m, n, k: (k, n)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda m, n, k: (m, n)),
+        out_shape=jax.ShapeDtypeStruct((Mp, N), jnp.float32),
+        interpret=interpret,
+    )(x, qwords, scales, zeros)
+    return out[:M] if pad_m else out

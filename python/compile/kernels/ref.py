@@ -1,0 +1,45 @@
+"""Pure-jnp correctness oracle for the mixed-precision GEMM kernels.
+
+Everything here is straight-line jax.numpy with no Pallas, no packing
+cleverness, and no tiling — the ground truth the kernels are tested against.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from .quantize import PACK_FACTOR
+
+
+def dequant_ref(q, scales, zeros, group_size: int):
+    """``(q - z) * s`` with groups along K. q: (K, N) int; -> (K, N) f32."""
+    K, N = q.shape
+    G = group_size
+    qg = q.reshape(K // G, G, N).astype(jnp.float32)
+    w = (qg - zeros[:, None, :]) * scales[:, None, :]
+    return w.reshape(K, N)
+
+
+def gemm_ref(x, q, scales, zeros, group_size: int):
+    """Oracle W4A16 GEMM: dequantize fully, then one jnp.dot.
+
+    x: (M, K) f32, q: (K, N) int codes. Returns (M, N) f32.
+    """
+    w = dequant_ref(q, scales, zeros, group_size)
+    return jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+def unpack_words_ref(words, order):
+    """jnp twin of pack.unpack_words for in-graph use. words: (K, W) uint32."""
+    shifts = 4 * jnp.arange(PACK_FACTOR, dtype=jnp.uint32)
+    g = (words[:, :, None] >> shifts[None, None, :]) & jnp.uint32(0xF)
+    inv = np.argsort(np.asarray(order))
+    g = g[:, :, inv]  # logical order
+    K, W, _ = g.shape
+    return g.reshape(K, W * PACK_FACTOR).astype(jnp.int32)
+
+
+def gemm_fp16_ref(x, w):
+    """Plain full-precision GEMM oracle."""
+    return jnp.dot(x, w, preferred_element_type=jnp.float32)

@@ -1,0 +1,277 @@
+"""L2: Llama-style decoder in JAX with W4-quantized linears (QUICK kernels).
+
+The model is pure-functional: ``prefill`` and ``decode_step`` take and return
+the KV cache explicitly so the Rust coordinator can thread cache buffers
+between PJRT executions. Every linear layer dispatches to one of the L1
+kernels (``quick`` / ``awq`` baseline / ``fp16``), so the whole network
+lowers into a single HLO module per (kernel, batch) variant.
+
+Weights are *baked into the HLO as constants* at AOT time (aot.py): artifacts
+are self-contained and the Rust request path passes only
+``(tokens, pos, k_cache, v_cache)``. See DESIGN.md §4.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import pack, quantize
+from .kernels.awq_gemm import awq_gemm
+from .kernels.fp16_gemm import fp16_gemm
+from .kernels.quick_gemm import quick_gemm
+
+KERNELS = ("quick", "awq", "fp16")
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Tiny-Llama architecture; all GEMM dims are multiples of 128 so the
+    Pallas tiles fit without remainder handling."""
+
+    vocab: int = 512
+    d_model: int = 256
+    n_layers: int = 4
+    n_heads: int = 4
+    d_ff: int = 512
+    max_seq: int = 128
+    group_size: int = 128
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    def validate(self) -> None:
+        assert self.d_model % self.n_heads == 0
+        for dim in (self.d_model, self.d_ff, self.vocab):
+            assert dim % 128 == 0, f"dim {dim} must tile by 128"
+        assert self.d_model % self.group_size == 0
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> dict[str, Any]:
+    """Random full-precision parameters (numpy, host-side)."""
+    cfg.validate()
+    rng = np.random.default_rng(seed)
+
+    def dense(k, n, scale=None):
+        scale = scale if scale is not None else (2.0 / (k + n)) ** 0.5
+        return (rng.standard_normal((k, n)) * scale).astype(np.float32)
+
+    d, f, v = cfg.d_model, cfg.d_ff, cfg.vocab
+    layers = []
+    for _ in range(cfg.n_layers):
+        layers.append(
+            {
+                "attn_norm": np.ones(d, np.float32),
+                "wq": dense(d, d),
+                "wk": dense(d, d),
+                "wv": dense(d, d),
+                "wo": dense(d, d),
+                "mlp_norm": np.ones(d, np.float32),
+                "w_gate": dense(d, f),
+                "w_up": dense(d, f),
+                "w_down": dense(f, d),
+            }
+        )
+    return {
+        "embed": dense(v, d, scale=0.02),
+        "layers": layers,
+        "final_norm": np.ones(d, np.float32),
+        "lm_head": dense(d, v),
+    }
+
+
+LINEAR_NAMES = ("wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down")
+
+
+def quantize_params(params: dict, cfg: ModelConfig, kernel: str) -> dict:
+    """Quantize every linear to the packed layout ``kernel`` expects.
+
+    ``fp16`` returns weights unchanged. ``quick``/``awq`` replace each (K, N)
+    matrix with ``{"qwords", "scales", "zeros"}`` packed per pack.py.
+    """
+    if kernel == "fp16":
+        return params
+
+    packer = (
+        pack.pack_quick_dequant_order if kernel == "quick" else pack.pack_awq
+    )
+
+    def quant(w):
+        q, s, z = quantize.quantize_groupwise(w, cfg.group_size)
+        return {"qwords": packer(q), "scales": s, "zeros": z}
+
+    out = {
+        "embed": params["embed"],
+        "final_norm": params["final_norm"],
+        "lm_head": quant(params["lm_head"]),
+        "layers": [],
+    }
+    for lyr in params["layers"]:
+        qlyr = dict(lyr)
+        for name in LINEAR_NAMES:
+            qlyr[name] = quant(lyr[name])
+        out["layers"].append(qlyr)
+    return out
+
+
+def _linear(x, w, cfg: ModelConfig, kernel: str):
+    """Dispatch one (M, K) x (K, N) projection to the selected L1 kernel."""
+    if kernel == "fp16":
+        return fp16_gemm(x, w)
+    fn = quick_gemm if kernel == "quick" else awq_gemm
+    return fn(
+        x, w["qwords"], w["scales"], w["zeros"], group_size=cfg.group_size
+    )
+
+
+# ---------------------------------------------------------------------------
+# Model math
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, weight, eps):
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * weight
+
+
+def rope(x, positions, theta, head_dim):
+    """Rotary embedding. x: (B, S, H, hd); positions: (B, S) or (1, S)."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B, S, half)
+    cos = jnp.cos(angles)[:, :, None, :]  # (B, S, 1, half)
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _attention_decode(q, k_cache, v_cache, pos, cfg: ModelConfig):
+    """Single-token attention against the cache.
+
+    q: (B, H, hd); caches: (B, S, H, hd); pos: (B,) current index.
+    Causal mask: attend to cache slots 0..pos inclusive.
+    """
+    scores = jnp.einsum("bhd,bshd->bhs", q, k_cache) / np.sqrt(cfg.head_dim)
+    slot = jnp.arange(cfg.max_seq)[None, None, :]
+    mask = slot <= pos[:, None, None]
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhs,bshd->bhd", probs, v_cache)
+
+
+def _attention_prefill(q, k, v, cfg: ModelConfig):
+    """Full causal attention. q,k,v: (B, S, H, hd)."""
+    S = q.shape[1]
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / np.sqrt(cfg.head_dim)
+    mask = jnp.tril(jnp.ones((S, S), bool))
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def decode_step(params, cfg: ModelConfig, kernel: str, tokens, pos, k_cache, v_cache):
+    """One token of autoregressive decode for a batch.
+
+    tokens: (B,) i32; pos: (B,) i32 per-sequence positions (continuous
+    batching: each lane has its own length); caches: (L, B, S, H, hd) f32.
+    Returns (logits (B, V), k_cache', v_cache').
+    """
+    B = tokens.shape[0]
+    H, hd = cfg.n_heads, cfg.head_dim
+    x = params["embed"][tokens]  # (B, d)
+
+    new_k, new_v = [], []
+    for li, lyr in enumerate(params["layers"]):
+        h = rms_norm(x, lyr["attn_norm"], cfg.norm_eps)
+        q = _linear(h, lyr["wq"], cfg, kernel).reshape(B, 1, H, hd)
+        k = _linear(h, lyr["wk"], cfg, kernel).reshape(B, 1, H, hd)
+        v = _linear(h, lyr["wv"], cfg, kernel).reshape(B, H, hd)
+        q = rope(q, pos[:, None], cfg.rope_theta, hd).reshape(B, H, hd)
+        k = rope(k, pos[:, None], cfg.rope_theta, hd).reshape(B, H, hd)
+
+        # Scatter this step's K/V into each lane's slot `pos[b]`.
+        kc = jax.vmap(
+            lambda cache, val, p: jax.lax.dynamic_update_slice(
+                cache, val[None], (p, 0, 0)
+            )
+        )(k_cache[li], k, pos)
+        vc = jax.vmap(
+            lambda cache, val, p: jax.lax.dynamic_update_slice(
+                cache, val[None], (p, 0, 0)
+            )
+        )(v_cache[li], v, pos)
+        new_k.append(kc)
+        new_v.append(vc)
+
+        attn = _attention_decode(q, kc, vc, pos, cfg).reshape(B, cfg.d_model)
+        x = x + _linear(attn, lyr["wo"], cfg, kernel)
+
+        h = rms_norm(x, lyr["mlp_norm"], cfg.norm_eps)
+        gate = _linear(h, lyr["w_gate"], cfg, kernel)
+        up = _linear(h, lyr["w_up"], cfg, kernel)
+        x = x + _linear(jax.nn.silu(gate) * up, lyr["w_down"], cfg, kernel)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = _linear(x, params["lm_head"], cfg, kernel)
+    return logits, jnp.stack(new_k), jnp.stack(new_v)
+
+
+def prefill(params, cfg: ModelConfig, kernel: str, tokens, length, k_cache, v_cache):
+    """Process a padded prompt. tokens: (B, S) i32, length: (B,) true lengths.
+
+    Returns (last_logits (B, V), k_cache', v_cache') where last_logits is the
+    logits at each lane's final real token (ready for the first sampled
+    token). Padding tokens beyond ``length`` write garbage K/V into slots
+    >= length; the decode-step causal mask (slot <= pos) never reads them.
+    """
+    B, S = tokens.shape
+    H, hd = cfg.n_heads, cfg.head_dim
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    x = params["embed"][tokens]  # (B, S, d)
+
+    new_k, new_v = [], []
+    for li, lyr in enumerate(params["layers"]):
+        h = rms_norm(x, lyr["attn_norm"], cfg.norm_eps)
+        flat = h.reshape(B * S, cfg.d_model)
+        q = _linear(flat, lyr["wq"], cfg, kernel).reshape(B, S, H, hd)
+        k = _linear(flat, lyr["wk"], cfg, kernel).reshape(B, S, H, hd)
+        v = _linear(flat, lyr["wv"], cfg, kernel).reshape(B, S, H, hd)
+        q = rope(q, positions, cfg.rope_theta, hd)
+        k = rope(k, positions, cfg.rope_theta, hd)
+
+        attn = _attention_prefill(q, k, v, cfg).reshape(B * S, cfg.d_model)
+        x = x + _linear(attn, lyr["wo"], cfg, kernel).reshape(B, S, cfg.d_model)
+
+        h = rms_norm(x, lyr["mlp_norm"], cfg.norm_eps).reshape(B * S, cfg.d_model)
+        gate = _linear(h, lyr["w_gate"], cfg, kernel)
+        up = _linear(h, lyr["w_up"], cfg, kernel)
+        mlp = _linear(jax.nn.silu(gate) * up, lyr["w_down"], cfg, kernel)
+        x = x + mlp.reshape(B, S, cfg.d_model)
+
+        # Write prompt K/V into cache slots 0..S-1 (cache max_seq >= S).
+        kc = jnp.zeros_like(k_cache[li]).at[:, :S].set(k)
+        vc = jnp.zeros_like(v_cache[li]).at[:, :S].set(v)
+        new_k.append(kc)
+        new_v.append(vc)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    last = jnp.take_along_axis(
+        x, (length - 1)[:, None, None].astype(jnp.int32), axis=1
+    )[:, 0]  # (B, d)
+    logits = _linear(last, params["lm_head"], cfg, kernel)
+    return logits, jnp.stack(new_k), jnp.stack(new_v)
+
+
+def empty_cache(cfg: ModelConfig, batch: int):
+    shape = (cfg.n_layers, batch, cfg.max_seq, cfg.n_heads, cfg.head_dim)
+    return jnp.zeros(shape, jnp.float32), jnp.zeros(shape, jnp.float32)

@@ -1,0 +1,86 @@
+"""Artifact integrity tests: run after `make artifacts` (skipped when the
+artifacts directory is absent, e.g. on a fresh checkout)."""
+
+import hashlib
+import json
+from pathlib import Path
+
+import pytest
+
+ART = Path(__file__).resolve().parents[2] / "artifacts"
+
+pytestmark = pytest.mark.skipif(
+    not (ART / "manifest.json").exists(), reason="run `make artifacts` first"
+)
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    return json.loads((ART / "manifest.json").read_text())
+
+
+def test_every_artifact_file_exists(manifest):
+    for a in manifest["artifacts"]:
+        p = ART / a["path"]
+        assert p.exists(), a["name"]
+        assert p.stat().st_size > 1000, f"{a['name']} suspiciously small"
+
+
+def test_hlo_constants_not_elided(manifest):
+    """The baked weights must survive the text round-trip: an elided
+    constant prints as `constant({...})` and would silently zero the
+    weights after parsing (regression guard for print_large_constants)."""
+    for a in manifest["artifacts"]:
+        if a["kind"] != "decode" or a["kernel"] != "quick":
+            continue
+        text = (ART / a["path"]).read_text()
+        assert "constant({...})" not in text, a["name"]
+        break
+    else:
+        pytest.fail("no quick decode artifact found")
+
+
+def test_golden_checksums_match(manifest):
+    checked = 0
+    for a in manifest["artifacts"][:6]:  # spot-check a prefix, cheap
+        g = a.get("golden")
+        if not g:
+            continue
+        for spec in g["args"] + g["outputs"]:
+            data = (ART / "golden" / spec["path"]).read_bytes()
+            assert hashlib.sha256(data).hexdigest()[:16] == spec["sha256"], spec
+            checked += 1
+    assert checked > 0
+
+
+def test_decode_grid_is_complete(manifest):
+    """The engine needs a contiguous power-of-two decode ladder per kernel
+    plus one prefill module."""
+    for kern in ("quick", "awq", "fp16"):
+        batches = sorted(
+            a["batch"]
+            for a in manifest["artifacts"]
+            if a["kind"] == "decode" and a["kernel"] == kern
+        )
+        assert batches == [1, 2, 4, 8], (kern, batches)
+        prefills = [
+            a for a in manifest["artifacts"]
+            if a["kind"] == "prefill" and a["kernel"] == kern
+        ]
+        assert len(prefills) == 1
+
+
+def test_arg_specs_match_model_config(manifest):
+    mc = manifest["model_config"]
+    for a in manifest["artifacts"]:
+        if a["kind"] != "decode":
+            continue
+        b = a["batch"]
+        tokens, pos, kc, vc = a["args"]
+        assert tokens["shape"] == [b] and tokens["dtype"] == "int32"
+        assert pos["shape"] == [b]
+        head_dim = mc["d_model"] // mc["n_heads"]
+        want = [mc["n_layers"], b, mc["max_seq"], mc["n_heads"], head_dim]
+        assert kc["shape"] == want and vc["shape"] == want, a["name"]
+        logits = a["outputs"][0]
+        assert logits["shape"] == [b, mc["vocab"]]

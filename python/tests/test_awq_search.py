@@ -1,0 +1,66 @@
+"""AWQ activation-aware scale search tests."""
+
+import numpy as np
+import pytest
+
+from compile.kernels import awq_search, quantize
+
+
+def make_outlier_case(k=128, n=64, b=32, seed=0):
+    """Weights + activations where a few channels carry big activations —
+    the regime AWQ exists for."""
+    rng = np.random.default_rng(seed)
+    w = rng.standard_normal((k, n)).astype(np.float32) * 0.1
+    x = rng.standard_normal((b, k)).astype(np.float32)
+    # 4 salient channels with 30x activations
+    hot = rng.choice(k, size=4, replace=False)
+    x[:, hot] *= 30.0
+    return w, x
+
+
+def test_awq_beats_plain_quantization_with_outliers():
+    w, x = make_outlier_case()
+    s, alpha, err_awq = awq_search.search_awq_scales(w, x, group_size=32)
+    err_plain = awq_search.reconstruction_error(x, w, np.ones(w.shape[0], np.float32), 32)
+    assert err_awq < err_plain * 0.95, (err_awq, err_plain)
+    assert alpha > 0.0  # a nontrivial exponent won
+
+
+def test_alpha_zero_in_grid_never_worse():
+    """Without outliers, the search may pick alpha=0 — but must never do
+    worse than plain quantization."""
+    rng = np.random.default_rng(1)
+    w = rng.standard_normal((64, 32)).astype(np.float32)
+    x = rng.standard_normal((16, 64)).astype(np.float32)
+    _, _, err_awq = awq_search.search_awq_scales(w, x, group_size=32)
+    err_plain = awq_search.reconstruction_error(x, w, np.ones(64, np.float32), 32)
+    assert err_awq <= err_plain + 1e-6
+
+
+def test_scaling_is_mathematically_transparent():
+    """Without quantization, (x/s) @ (w*s) == x @ w exactly-ish."""
+    w, x = make_outlier_case(seed=2)
+    s = np.abs(x).mean(axis=0).astype(np.float32) ** 0.5
+    s /= np.sqrt(s.max() * s.min())
+    ref = x @ w
+    got = (x / s[None, :]) @ awq_search.apply_channel_scale(w, s)
+    np.testing.assert_allclose(ref, got, rtol=1e-4, atol=1e-4)
+
+
+def test_quantize_awq_end_to_end():
+    w, x = make_outlier_case(seed=3)
+    q, qs, z, s = awq_search.quantize_awq(w, x, group_size=32, n_grid=10)
+    assert q.shape == w.shape and s.shape == (w.shape[0],)
+    # Reconstruction through the packed form stays below plain error.
+    wq = quantize.dequantize(q, qs, z, 32)
+    got = (x / s[None, :]) @ wq
+    err = np.linalg.norm(x @ w - got)
+    err_plain = awq_search.reconstruction_error(x, w, np.ones(w.shape[0], np.float32), 32)
+    assert err <= err_plain
+
+
+def test_rejects_shape_mismatch():
+    w = np.zeros((64, 32), np.float32)
+    x = np.zeros((8, 63), np.float32)
+    with pytest.raises(AssertionError):
+        awq_search.search_awq_scales(w, x, group_size=32)

@@ -1,0 +1,102 @@
+"""Hypothesis sweeps: kernel shapes/layouts vs the pure-jnp oracle.
+
+Shapes are drawn small (interpret-mode Pallas is slow) but cover the
+divisibility lattice: group size | block_k | K, N multiples of 128, M
+arbitrary (exercises the padding path).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import pack, quantize, ref
+from compile.kernels.awq_gemm import awq_gemm
+from compile.kernels.quick_gemm import quick_gemm
+
+shape_strategy = st.tuples(
+    st.integers(1, 48),                       # M — any
+    st.sampled_from([128, 256, 384]),         # K — multiple of block_k
+    st.sampled_from([128, 256]),              # N — multiple of block_n
+    st.sampled_from([32, 64, 128]),           # group size
+    st.integers(0, 2**31 - 1),                # seed
+)
+
+
+def _case(m, k, n, g, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((m, k), dtype=np.float32)
+    w = rng.standard_normal((k, n), dtype=np.float32) * 0.1
+    q, s, z = quantize.quantize_groupwise(w, g)
+    return x, q, s, z
+
+
+@settings(max_examples=15, deadline=None)
+@given(shape_strategy)
+def test_quick_gemm_hypothesis(params):
+    m, k, n, g, seed = params
+    x, q, s, z = _case(m, k, n, g, seed)
+    got = quick_gemm(
+        jnp.asarray(x), jnp.asarray(pack.pack_quick_dequant_order(q)),
+        jnp.asarray(s), jnp.asarray(z), group_size=g, block_k=128,
+    )
+    want = ref.gemm_ref(jnp.asarray(x), jnp.asarray(q), jnp.asarray(s),
+                        jnp.asarray(z), g)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(shape_strategy)
+def test_awq_gemm_hypothesis(params):
+    m, k, n, g, seed = params
+    x, q, s, z = _case(m, k, n, g, seed)
+    got = awq_gemm(
+        jnp.asarray(x), jnp.asarray(pack.pack_awq(q)),
+        jnp.asarray(s), jnp.asarray(z), group_size=g, block_k=128,
+    )
+    want = ref.gemm_ref(jnp.asarray(x), jnp.asarray(q), jnp.asarray(s),
+                        jnp.asarray(z), g)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-4)
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    st.integers(1, 8).map(lambda v: v * 16),   # K multiple of 16
+    st.integers(1, 16).map(lambda v: v * 8),   # N multiple of 8
+    st.integers(0, 2**31 - 1),
+)
+def test_pack_roundtrip_hypothesis(k, n, seed):
+    rng = np.random.default_rng(seed)
+    q = rng.integers(0, 16, size=(k, n)).astype(np.int32)
+    stream, _ = pack.pack_quick(q)
+    np.testing.assert_array_equal(pack.unpack_quick(stream, k, n), q)
+    np.testing.assert_array_equal(pack.unpack_awq(pack.pack_awq(q)), q)
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    st.sampled_from([16, 32, 64, 128]),
+    st.integers(1, 32),
+)
+def test_fragment_perm_bijective_hypothesis(rows, words):
+    perm = pack.ldmatrix_fragment_perm(rows, words)
+    assert np.array_equal(np.sort(perm), np.arange(rows * words))
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    st.sampled_from([64, 128, 192]),
+    st.sampled_from([8, 16, 32]),
+    st.sampled_from([16, 32, 64]),
+    st.integers(0, 2**31 - 1),
+)
+def test_quantize_roundtrip_error_hypothesis(k, n, g, seed):
+    if k % g != 0:
+        g = 16  # 16 divides every k above
+    rng = np.random.default_rng(seed)
+    w = rng.standard_normal((k, n), dtype=np.float32)
+    q, s, z = quantize.quantize_groupwise(w, g)
+    w2 = quantize.dequantize(q, s, z, g)
+    err = np.abs(w - w2).reshape(k // g, g, n).max(axis=1)
+    assert np.all(err <= s * 0.5 + 1e-5)

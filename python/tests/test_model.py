@@ -1,0 +1,129 @@
+"""L2 model tests: decode/prefill consistency, quantized-vs-fp parity."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+CFG = M.ModelConfig(n_layers=2, max_seq=32)  # small for test speed
+
+
+@pytest.fixture(scope="module")
+def fp_params():
+    return M.init_params(CFG, seed=0)
+
+
+def _greedy_decode(params, kernel, prompt, n_steps):
+    """Prefill the prompt then greedily decode n_steps tokens."""
+    B, S = 1, len(prompt)
+    pad = CFG.max_seq - S if False else 0
+    tokens = jnp.asarray([prompt], jnp.int32)
+    length = jnp.asarray([S], jnp.int32)
+    kc, vc = M.empty_cache(CFG, B)
+    # prefill uses S = prompt length (padding exercised separately)
+    logits, kc, vc = M.prefill(params, CFG, kernel, tokens, length, kc, vc)
+    out = []
+    pos = S
+    tok = int(jnp.argmax(logits[0]))
+    out.append(tok)
+    for _ in range(n_steps - 1):
+        logits, kc, vc = M.decode_step(
+            params, CFG, kernel,
+            jnp.asarray([tok], jnp.int32), jnp.asarray([pos], jnp.int32),
+            kc, vc,
+        )
+        tok = int(jnp.argmax(logits[0]))
+        out.append(tok)
+        pos += 1
+    return out
+
+
+def test_decode_matches_prefill(fp_params):
+    """Teacher-forcing equivalence: feeding tokens one-by-one through
+    decode_step produces the same last-token logits as prefill."""
+    prompt = [5, 17, 301, 42, 7, 99, 128, 200]
+    B = 1
+    kc, vc = M.empty_cache(CFG, B)
+    logits_pf, _, _ = M.prefill(
+        fp_params, CFG, "fp16",
+        jnp.asarray([prompt], jnp.int32), jnp.asarray([len(prompt)], jnp.int32),
+        kc, vc,
+    )
+    kc, vc = M.empty_cache(CFG, B)
+    logits_ds = None
+    for i, t in enumerate(prompt):
+        logits_ds, kc, vc = M.decode_step(
+            fp_params, CFG, "fp16",
+            jnp.asarray([t], jnp.int32), jnp.asarray([i], jnp.int32), kc, vc,
+        )
+    np.testing.assert_allclose(
+        np.asarray(logits_pf), np.asarray(logits_ds), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_quick_awq_models_identical(fp_params):
+    """The two quantized layouts decode bit-identically (same math)."""
+    qp = M.quantize_params(fp_params, CFG, "quick")
+    ap = M.quantize_params(fp_params, CFG, "awq")
+    prompt = [1, 2, 3, 4]
+    a = _greedy_decode(qp, "quick", prompt, 6)
+    b = _greedy_decode(ap, "awq", prompt, 6)
+    assert a == b
+
+
+def test_quantized_close_to_fp(fp_params):
+    """W4 logits stay close to fp logits (quantization noise only)."""
+    qp = M.quantize_params(fp_params, CFG, "quick")
+    tokens = jnp.asarray([[3, 14, 15, 92]], jnp.int32)
+    length = jnp.asarray([4], jnp.int32)
+    kc, vc = M.empty_cache(CFG, 1)
+    lg_fp, _, _ = M.prefill(fp_params, CFG, "fp16", tokens, length, kc, vc)
+    kc, vc = M.empty_cache(CFG, 1)
+    lg_q, _, _ = M.prefill(qp, CFG, "quick", tokens, length, kc, vc)
+    # correlation of logits should be very high
+    a, b = np.asarray(lg_fp)[0], np.asarray(lg_q)[0]
+    corr = np.corrcoef(a, b)[0, 1]
+    # Random (untrained) weights amplify quantization noise through layers;
+    # >0.95 logit correlation is the expected band for W4 on this config.
+    assert corr > 0.95, corr
+
+
+def test_batched_decode_independent_lanes(fp_params):
+    """Lanes in a decode batch must not interact: batch-of-2 equals two
+    batch-of-1 runs (continuous batching correctness)."""
+    kc2, vc2 = M.empty_cache(CFG, 2)
+    toks = jnp.asarray([7, 9], jnp.int32)
+    pos = jnp.asarray([0, 0], jnp.int32)
+    lg2, kc2, vc2 = M.decode_step(fp_params, CFG, "fp16", toks, pos, kc2, vc2)
+    for lane, t in enumerate([7, 9]):
+        kc1, vc1 = M.empty_cache(CFG, 1)
+        lg1, _, _ = M.decode_step(
+            fp_params, CFG, "fp16",
+            jnp.asarray([t], jnp.int32), jnp.asarray([0], jnp.int32), kc1, vc1,
+        )
+        np.testing.assert_allclose(
+            np.asarray(lg2[lane]), np.asarray(lg1[0]), rtol=1e-5, atol=1e-5
+        )
+
+
+def test_per_lane_positions(fp_params):
+    """Different pos per lane: lane with longer history attends to it."""
+    kc, vc = M.empty_cache(CFG, 2)
+    # seed both lanes' slot 0
+    lg, kc, vc = M.decode_step(
+        fp_params, CFG, "fp16",
+        jnp.asarray([5, 5], jnp.int32), jnp.asarray([0, 0], jnp.int32), kc, vc,
+    )
+    # lane 0 continues at pos 1; lane 1 restarts at pos 0 (fresh seq)
+    lg, kc, vc = M.decode_step(
+        fp_params, CFG, "fp16",
+        jnp.asarray([6, 6], jnp.int32), jnp.asarray([1, 0], jnp.int32), kc, vc,
+    )
+    a, b = np.asarray(lg[0]), np.asarray(lg[1])
+    assert not np.allclose(a, b)  # histories differ -> logits differ
+
+
+def test_config_validation():
+    with pytest.raises(AssertionError):
+        M.ModelConfig(d_model=100).validate()

@@ -1,0 +1,128 @@
+"""Locks the engine's padded-prefill correctness argument (see
+rust/src/coordinator/engine.rs docstring): prefill pads prompts to a fixed
+window; pad slots hold garbage K/V, but decode overwrites slot `pos` before
+attending (mask slot <= pos), so garbage is never visible."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+CFG = M.ModelConfig(n_layers=2, max_seq=32)
+PREFILL_S = 8
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(CFG, seed=3)
+
+
+def _decode_chain(params, kc, vc, first_tok, start_pos, steps):
+    toks = []
+    tok = first_tok
+    pos = start_pos
+    for _ in range(steps):
+        logits, kc, vc = M.decode_step(
+            params, CFG, "fp16",
+            jnp.asarray([tok], jnp.int32), jnp.asarray([pos], jnp.int32),
+            kc, vc,
+        )
+        tok = int(jnp.argmax(logits[0]))
+        toks.append(tok)
+        pos += 1
+    return toks
+
+
+def test_padded_prefill_equals_exact_prefill(params):
+    """Prompt of length 5 padded to window 8 must generate the same
+    continuation as feeding the 5 tokens through unpadded prefill."""
+    prompt = [3, 141, 59, 26, 5]
+    length = len(prompt)
+
+    # Exact: prefill window == prompt length.
+    kc, vc = M.empty_cache(CFG, 1)
+    lg_exact, kc_e, vc_e = M.prefill(
+        params, CFG, "fp16",
+        jnp.asarray([prompt], jnp.int32), jnp.asarray([length], jnp.int32),
+        kc, vc,
+    )
+    tok0_exact = int(jnp.argmax(lg_exact[0]))
+    cont_exact = _decode_chain(params, kc_e, vc_e, tok0_exact, length, 6)
+
+    # Padded: window 8, pad tokens are zeros, true length passed.
+    padded = prompt + [0] * (PREFILL_S - length)
+    kc, vc = M.empty_cache(CFG, 1)
+    lg_pad, kc_p, vc_p = M.prefill(
+        params, CFG, "fp16",
+        jnp.asarray([padded], jnp.int32), jnp.asarray([length], jnp.int32),
+        kc, vc,
+    )
+    tok0_pad = int(jnp.argmax(lg_pad[0]))
+
+    # Last-real-token logits agree exactly (causal mask hides pads).
+    np.testing.assert_allclose(
+        np.asarray(lg_exact), np.asarray(lg_pad), rtol=1e-5, atol=1e-5
+    )
+    assert tok0_exact == tok0_pad
+
+    # Continuation: decode overwrites pad slots before reading them.
+    cont_pad = _decode_chain(params, kc_p, vc_p, tok0_pad, length, 6)
+    assert cont_exact == cont_pad
+
+
+def test_padded_prefill_quick_kernel(params):
+    """Same property through the QUICK quantized kernels."""
+    qp = M.quantize_params(params, CFG, "quick")
+    prompt = [7, 8, 9]
+    length = len(prompt)
+    padded = prompt + [0] * (PREFILL_S - length)
+
+    kc, vc = M.empty_cache(CFG, 1)
+    lg_a, kc_a, vc_a = M.prefill(
+        qp, CFG, "quick",
+        jnp.asarray([prompt], jnp.int32), jnp.asarray([length], jnp.int32),
+        kc, vc,
+    )
+    kc, vc = M.empty_cache(CFG, 1)
+    lg_b, kc_b, vc_b = M.prefill(
+        qp, CFG, "quick",
+        jnp.asarray([padded], jnp.int32), jnp.asarray([length], jnp.int32),
+        kc, vc,
+    )
+    np.testing.assert_allclose(np.asarray(lg_a), np.asarray(lg_b), rtol=1e-5, atol=1e-5)
+
+    # Continuation through the quantized decode path must also agree.
+    def chain(kc, vc, tok, steps=4):
+        toks, pos = [], length
+        for _ in range(steps):
+            logits, kc, vc = M.decode_step(
+                qp, CFG, "quick",
+                jnp.asarray([tok], jnp.int32), jnp.asarray([pos], jnp.int32),
+                kc, vc,
+            )
+            tok = int(jnp.argmax(logits[0]))
+            toks.append(tok)
+            pos += 1
+        return toks
+
+    t = int(jnp.argmax(lg_a[0]))
+    assert chain(kc_a, vc_a, t) == chain(kc_b, vc_b, t)
+
+
+def test_length_one_prompt(params):
+    """Degenerate single-token prompt through the padded window."""
+    padded = [42] + [0] * (PREFILL_S - 1)
+    kc, vc = M.empty_cache(CFG, 1)
+    lg, kc, vc = M.prefill(
+        params, CFG, "fp16",
+        jnp.asarray([padded], jnp.int32), jnp.asarray([1], jnp.int32),
+        kc, vc,
+    )
+    # Must equal a pure decode_step of the same token at pos 0.
+    kc2, vc2 = M.empty_cache(CFG, 1)
+    lg2, _, _ = M.decode_step(
+        params, CFG, "fp16",
+        jnp.asarray([42], jnp.int32), jnp.asarray([0], jnp.int32), kc2, vc2,
+    )
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(lg2), rtol=1e-4, atol=1e-4)

@@ -1,0 +1,50 @@
+//! Ablation bench: decompose QUICK's gain into its three mechanisms
+//! (write-back skip, dequant-aware reorder, tile-size opt — paper §3.1–3.3)
+//! plus the §5 future-work split-K, across the Fig. 7 batch axis.
+
+use quick_infer::gpusim::ablation::{model_quick_variant, QuickVariant};
+use quick_infer::gpusim::kernel_model::Calib;
+use quick_infer::gpusim::Gpu;
+use quick_infer::util::Bench;
+
+fn main() {
+    let dev = Gpu::Rtx4090.spec();
+    let calib = Calib::default();
+    let variants = [
+        ("baseline (AWQ)", QuickVariant::BASELINE),
+        ("-wb-skip", QuickVariant { skip_writeback: false, ..QuickVariant::FULL }),
+        ("-dq-reorder", QuickVariant { dequant_reorder: false, ..QuickVariant::FULL }),
+        ("-tile-opt", QuickVariant { tile_size_opt: false, ..QuickVariant::FULL }),
+        ("+split-k4", QuickVariant { split_k: Some(4), ..QuickVariant::FULL }),
+        ("QUICK (full)", QuickVariant::FULL),
+    ];
+
+    println!("== Ablation: QUICK mechanisms on {} (TOPS, batch x 8192 x 8192) ==", dev.name);
+    print!("{:16}", "variant");
+    let batches = [1u64, 16, 64, 256];
+    for b in batches {
+        print!(" {:>9}", format!("b{b}"));
+    }
+    println!();
+    for (name, v) in variants {
+        print!("{name:16}");
+        for b in batches {
+            let p = model_quick_variant(&dev, &v, b, 8192, 8192, &calib);
+            print!(" {:>9.2}", p.tops);
+        }
+        println!();
+    }
+    println!("\n(read: each '-X' row = full QUICK with mechanism X disabled; the");
+    println!(" drop vs the full row is that mechanism's contribution)");
+
+    println!("\n-- timing --");
+    Bench::fast().run("model_quick_variant sweep (6 variants x 4 batches)", || {
+        let mut acc = 0.0;
+        for (_, v) in &variants {
+            for b in batches {
+                acc += model_quick_variant(&dev, v, b, 8192, 8192, &calib).tops;
+            }
+        }
+        acc
+    });
+}

@@ -1,0 +1,26 @@
+//! Figure 3 bench: shared-memory bank conflicts of the baseline
+//! dequant-write-back vs QUICK, at the paper's 64x8192x8192 workload —
+//! plus timings of the conflict simulator itself.
+
+use quick_infer::figures;
+use quick_infer::gpusim::{trace, BankCounter};
+use quick_infer::util::Bench;
+
+fn main() {
+    figures::fig3(&mut std::io::stdout()).expect("fig3");
+
+    println!("\n-- fig3 micro-benchmarks --");
+    let b = Bench::new();
+    b.run("awq_writeback_tile_trace (BK64xBN128)", || {
+        let mut counter = BankCounter::new();
+        trace::awq_writeback(&mut counter, 128, 32);
+        counter.conflicts
+    });
+    b.run("ldmatrix_tile_trace (16 tiles)", || {
+        let mut counter = BankCounter::new();
+        for base in (0..16u64).map(|i| i * 2048) {
+            counter.access(&trace::ldmatrix_load(72, base), 16);
+        }
+        counter.conflicts
+    });
+}

@@ -1,0 +1,54 @@
+//! Figure 7 bench: mixed-precision GEMM TOPS vs batch on four devices
+//! (cost model), plus — when artifacts exist — *measured* PJRT wall times
+//! of the real Pallas-lowered GEMM artifacts on this CPU testbed.
+
+use quick_infer::figures;
+use quick_infer::gpusim::kernel_model::{model_gemm, Calib, KernelKind};
+use quick_infer::gpusim::Gpu;
+use quick_infer::runtime::Runtime;
+use quick_infer::util::Bench;
+
+/// Measured CPU execution of the AOT GEMM artifacts (numerics substrate —
+/// NOT a GPU perf proxy; trends across kernels still reflect the extra
+/// dequant/shuffle op counts).
+fn measured_pjrt() {
+    let Ok(mut rt) = Runtime::open("artifacts") else {
+        eprintln!("(artifacts missing; skipping measured PJRT GEMM bench)");
+        return;
+    };
+    println!("\n-- measured PJRT CPU GEMM (1024x1024 weights) --");
+    let b = Bench::fast();
+    for kern in ["quick", "awq", "fp16"] {
+        for m in [1u64, 16, 128] {
+            let name = format!("gemm_{kern}_m{m}");
+            if rt.manifest.find(&name).is_none() {
+                continue;
+            }
+            let args = rt.golden_args(&name).expect("golden args");
+            let lits: Vec<xla::Literal> =
+                args.iter().map(|t| t.to_literal().unwrap()).collect();
+            rt.ensure_compiled(&name).expect("compile");
+            b.run(&name, || rt.execute_literals(&name, &lits).expect("exec"));
+        }
+    }
+}
+
+fn main() {
+    figures::fig7(&mut std::io::stdout()).expect("fig7");
+
+    println!("\n-- fig7 model sweep timing --");
+    let calib = Calib::default();
+    Bench::new().run("model_gemm_full_sweep (4 gpus x 3 kernels x 9 batches)", || {
+        let mut acc = 0.0;
+        for gpu in Gpu::ALL {
+            for kind in KernelKind::ALL {
+                for m in figures::FIG7_BATCHES {
+                    acc += model_gemm(&gpu.spec(), kind, m, 8192, 8192, &calib).tops;
+                }
+            }
+        }
+        acc
+    });
+
+    measured_pjrt();
+}

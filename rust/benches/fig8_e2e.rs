@@ -1,0 +1,26 @@
+//! Figure 8 bench: end-to-end decode tokens/s vs batch for the four
+//! (model, GPU) pairs, with OOM cutoffs, from the cost model.
+
+use quick_infer::figures;
+use quick_infer::gpusim::kernel_model::{Calib, KernelKind};
+use quick_infer::gpusim::{decode_step_latency, Gpu};
+use quick_infer::model::Model;
+use quick_infer::util::Bench;
+
+fn main() {
+    figures::fig8(&mut std::io::stdout()).expect("fig8");
+
+    println!("\n-- fig8 micro-benchmarks --");
+    let calib = Calib::default();
+    Bench::new().run("decode_step_model (70B @ b64)", || {
+        decode_step_latency(
+            &Gpu::RtxA6000.spec(),
+            &Model::Llama2_70B.spec(),
+            KernelKind::Quick,
+            64,
+            512,
+            &calib,
+        )
+        .total_s()
+    });
+}

@@ -1,0 +1,103 @@
+//! L3 hot-path microbenchmarks (perf pass, DESIGN.md §8): offline packing
+//! throughput, KV block manager ops, batcher step planning, bank-counter
+//! inner loop, and — with artifacts present — the PJRT decode round-trip
+//! the engine pays per token.
+
+use quick_infer::coordinator::kv_cache::KvBlockManager;
+use quick_infer::coordinator::{Batcher, GenerationRequest, StepPlan};
+use quick_infer::gpusim::{trace, BankCounter};
+use quick_infer::quant;
+use quick_infer::runtime::Runtime;
+use quick_infer::util::Bench;
+
+fn bench_quant(b: &Bench) {
+    println!("-- quant (4096x4096, group 128) --");
+    let (k, n) = (4096usize, 4096usize);
+    let w: Vec<f32> = (0..k * n)
+        .map(|i| ((i as u32).wrapping_mul(2654435761) as f32 / u32::MAX as f32) - 0.5)
+        .collect();
+    let t = quant::quantize_groupwise(&w, k, n, 128);
+    let elems = (k * n) as u64;
+    b.run_throughput("quantize_groupwise", elems, || {
+        quant::quantize_groupwise(&w, k, n, 128)
+    });
+    b.run_throughput("pack_quick (interleaved stream)", elems, || {
+        quant::pack_quick(&t.codes, k, n)
+    });
+    b.run_throughput("pack_awq", elems, || quant::pack_awq(&t.codes, k, n));
+    b.run_throughput("dequantize", elems, || quant::dequantize(&t));
+}
+
+fn bench_kv(b: &Bench) {
+    println!("-- kv block manager --");
+    b.run("alloc_append_free_churn (256 seqs)", || {
+        let mut m = KvBlockManager::new(8192, 16, 0.01);
+        for s in 0..256u64 {
+            m.allocate(s, 200).unwrap();
+        }
+        for s in 0..256u64 {
+            for _ in 0..32 {
+                m.append_token(s).unwrap();
+            }
+        }
+        for s in 0..256u64 {
+            m.free_seq(s).unwrap();
+        }
+        m.free_blocks()
+    });
+}
+
+fn bench_batcher(b: &Bench) {
+    println!("-- batcher --");
+    let mut batcher = Batcher::new(8, 1024, 64);
+    for i in 0..512u64 {
+        let _ = batcher.submit(GenerationRequest {
+            id: i,
+            prompt: vec![1, 2, 3, 4],
+            max_new_tokens: 8,
+            temperature: None,
+            eos_token: None,
+        });
+    }
+    for lane in 0..8 {
+        if let StepPlan::Prefill { seq_index, .. } = batcher.plan() {
+            batcher.start_prefill(seq_index, lane);
+        }
+    }
+    b.run("plan_under_load (8 lanes, 500 queued)", || batcher.plan());
+}
+
+fn bench_bank(b: &Bench) {
+    println!("-- bank counter --");
+    b.run("writeback_trace_64rows", || {
+        let mut counter = BankCounter::new();
+        trace::awq_writeback(&mut counter, 128, 64);
+        counter.conflicts
+    });
+}
+
+fn bench_pjrt(b: &Bench) {
+    let Ok(mut rt) = Runtime::open("artifacts") else {
+        eprintln!("(artifacts missing; skipping PJRT round-trip bench)");
+        return;
+    };
+    println!("-- PJRT round-trips (engine hot path) --");
+    for name in ["decode_quick_b1", "decode_quick_b8", "gemm_quick_m1"] {
+        if rt.manifest.find(name).is_none() {
+            continue;
+        }
+        let args = rt.golden_args(name).expect("golden");
+        let lits: Vec<xla::Literal> = args.iter().map(|t| t.to_literal().unwrap()).collect();
+        rt.ensure_compiled(name).expect("compile");
+        b.run(name, || rt.execute_literals(name, &lits).expect("exec"));
+    }
+}
+
+fn main() {
+    let b = Bench::fast();
+    bench_quant(&b);
+    bench_kv(&b);
+    bench_batcher(&b);
+    bench_bank(&b);
+    bench_pjrt(&b);
+}

@@ -1,0 +1,29 @@
+//! Table 1 bench: vLLM-style continuous-batching serving throughput on
+//! A6000 for Vicuna-13B and Llama-2-70B (1000 ShareGPT-like requests),
+//! plus timing of the serving simulator itself.
+
+use quick_infer::coordinator::simserve::{simulate_serving, SimPolicy};
+use quick_infer::figures;
+use quick_infer::gpusim::kernel_model::{Calib, KernelKind};
+use quick_infer::gpusim::Gpu;
+use quick_infer::model::Model;
+use quick_infer::util::Bench;
+use quick_infer::workload::ShareGptLike;
+
+fn main() {
+    figures::table1(&mut std::io::stdout()).expect("table1");
+
+    println!("\n-- table1 micro-benchmarks --");
+    let reqs = ShareGptLike::new().offline(200, 7);
+    Bench::fast().run("simulate_vicuna13b_quick_200req", || {
+        simulate_serving(
+            &Gpu::RtxA6000.spec(),
+            &Model::Vicuna13B.spec(),
+            KernelKind::Quick,
+            &reqs,
+            &SimPolicy::default(),
+            &Calib::default(),
+        )
+        .gen_tok_per_s
+    });
+}

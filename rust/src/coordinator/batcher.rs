@@ -1,0 +1,221 @@
+//! Continuous batcher: admission queue + lane assignment + step planning.
+//!
+//! The engine runs fixed-shape AOT decode artifacts (batch ∈ the manifest's
+//! compiled sizes), so "continuous batching" here means: sequences join and
+//! leave *lanes* of the widest useful artifact between steps, vLLM-style,
+//! with the step batch chosen as the smallest compiled size ≥ active lanes.
+//! Prefill runs as its own (batch-1) artifact call, scheduled ahead of
+//! decode when lanes are free — the same prioritize-prefill policy vLLM's
+//! default scheduler uses.
+
+use std::collections::VecDeque;
+
+use super::request::{FinishReason, GenerationRequest, SeqState, Sequence};
+
+/// What the engine should run next.
+#[derive(Debug, PartialEq, Eq)]
+pub enum StepPlan {
+    /// Run prefill for this queued sequence into the given free lane.
+    Prefill { seq_index: usize, lane: usize },
+    /// Run one decode step over these lanes (sorted ascending).
+    Decode { lanes: Vec<usize> },
+    /// Nothing to do.
+    Idle,
+}
+
+/// Queue + lane bookkeeping. Generic over lane count (the widest artifact).
+#[derive(Debug)]
+pub struct Batcher {
+    pub max_lanes: usize,
+    /// Max waiting requests before admission rejects (backpressure).
+    pub max_queue: usize,
+    /// Context capacity per lane (artifact max_seq).
+    pub max_seq: usize,
+    /// lane -> sequence slot (index into `seqs`) or None.
+    lanes: Vec<Option<usize>>,
+    /// All sequences ever admitted this session (stable indices).
+    pub seqs: Vec<Sequence>,
+    /// Indices of waiting sequences, FCFS.
+    waiting: VecDeque<usize>,
+}
+
+impl Batcher {
+    pub fn new(max_lanes: usize, max_queue: usize, max_seq: usize) -> Self {
+        assert!(max_lanes > 0);
+        Batcher {
+            max_lanes,
+            max_queue,
+            max_seq,
+            lanes: vec![None; max_lanes],
+            seqs: Vec::new(),
+            waiting: VecDeque::new(),
+        }
+    }
+
+    /// Admit a request. Returns the sequence slot, or Err(reason).
+    pub fn submit(&mut self, req: GenerationRequest) -> Result<usize, FinishReason> {
+        if self.waiting.len() >= self.max_queue {
+            return Err(FinishReason::Rejected);
+        }
+        if req.prompt.is_empty()
+            || req.prompt.len() + req.max_new_tokens > self.max_seq
+        {
+            return Err(FinishReason::Rejected);
+        }
+        let idx = self.seqs.len();
+        self.seqs.push(Sequence::new(req));
+        self.waiting.push_back(idx);
+        Ok(idx)
+    }
+
+    pub fn free_lane(&self) -> Option<usize> {
+        self.lanes.iter().position(Option::is_none)
+    }
+
+    pub fn active_lanes(&self) -> Vec<usize> {
+        (0..self.lanes.len()).filter(|&l| self.lanes[l].is_some()).collect()
+    }
+
+    pub fn seq_in_lane(&self, lane: usize) -> Option<usize> {
+        self.lanes[lane]
+    }
+
+    pub fn waiting_len(&self) -> usize {
+        self.waiting.len()
+    }
+
+    pub fn has_work(&self) -> bool {
+        !self.waiting.is_empty() || self.lanes.iter().any(Option::is_some)
+    }
+
+    /// Decide the next step (prefill-priority policy).
+    pub fn plan(&self) -> StepPlan {
+        if let (Some(&seq_index), Some(lane)) = (self.waiting.front(), self.free_lane()) {
+            return StepPlan::Prefill { seq_index, lane };
+        }
+        let lanes = self.active_lanes();
+        if lanes.is_empty() {
+            StepPlan::Idle
+        } else {
+            StepPlan::Decode { lanes }
+        }
+    }
+
+    /// Commit a planned prefill: bind the sequence to the lane.
+    pub fn start_prefill(&mut self, seq_index: usize, lane: usize) {
+        debug_assert_eq!(self.waiting.front(), Some(&seq_index));
+        self.waiting.pop_front();
+        debug_assert!(self.lanes[lane].is_none());
+        self.lanes[lane] = Some(seq_index);
+        self.seqs[seq_index].state = SeqState::Running { lane };
+    }
+
+    /// Finish the sequence in `lane` and free the lane.
+    pub fn finish_lane(&mut self, lane: usize, reason: FinishReason) -> usize {
+        let seq_index = self.lanes[lane].take().expect("finish_lane on empty lane");
+        self.seqs[seq_index].finish(reason);
+        seq_index
+    }
+
+    /// Lane-occupancy invariants for tests.
+    pub fn check_invariants(&self) -> anyhow::Result<()> {
+        let mut seen = std::collections::HashSet::new();
+        for (l, slot) in self.lanes.iter().enumerate() {
+            if let Some(s) = slot {
+                anyhow::ensure!(seen.insert(*s), "seq {s} in two lanes");
+                match self.seqs[*s].state {
+                    SeqState::Running { lane } => {
+                        anyhow::ensure!(lane == l, "lane mismatch for seq {s}")
+                    }
+                    other => anyhow::bail!("seq {s} in lane {l} but state {other:?}"),
+                }
+            }
+        }
+        for &w in &self.waiting {
+            anyhow::ensure!(
+                matches!(self.seqs[w].state, SeqState::Waiting),
+                "waiting seq {w} not in Waiting state"
+            );
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, prompt: usize, max_new: usize) -> GenerationRequest {
+        GenerationRequest {
+            id,
+            prompt: (0..prompt as i32).collect(),
+            max_new_tokens: max_new,
+            temperature: None,
+            eos_token: None,
+        }
+    }
+
+    #[test]
+    fn prefill_has_priority_over_decode() {
+        let mut b = Batcher::new(2, 16, 64);
+        let s0 = b.submit(req(0, 4, 4)).unwrap();
+        b.start_prefill(s0, 0);
+        b.submit(req(1, 4, 4)).unwrap();
+        // lane 1 free + waiting request -> prefill first
+        match b.plan() {
+            StepPlan::Prefill { lane, .. } => assert_eq!(lane, 1),
+            other => panic!("expected prefill, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn decode_when_lanes_full() {
+        let mut b = Batcher::new(2, 16, 64);
+        for i in 0..3 {
+            b.submit(req(i, 4, 4)).unwrap();
+        }
+        b.start_prefill(0, 0);
+        b.start_prefill(1, 1);
+        assert_eq!(b.plan(), StepPlan::Decode { lanes: vec![0, 1] });
+        b.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn finished_lane_reused() {
+        let mut b = Batcher::new(1, 16, 64);
+        b.submit(req(0, 2, 2)).unwrap();
+        b.submit(req(1, 2, 2)).unwrap();
+        b.start_prefill(0, 0);
+        b.finish_lane(0, FinishReason::Length);
+        match b.plan() {
+            StepPlan::Prefill { seq_index, lane } => {
+                assert_eq!((seq_index, lane), (1, 0));
+            }
+            other => panic!("{other:?}"),
+        }
+        b.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn backpressure_rejects_over_queue() {
+        let mut b = Batcher::new(1, 2, 64);
+        assert!(b.submit(req(0, 2, 2)).is_ok());
+        assert!(b.submit(req(1, 2, 2)).is_ok());
+        assert_eq!(b.submit(req(2, 2, 2)), Err(FinishReason::Rejected));
+    }
+
+    #[test]
+    fn oversized_prompt_rejected() {
+        let mut b = Batcher::new(1, 4, 16);
+        assert_eq!(b.submit(req(0, 12, 8)), Err(FinishReason::Rejected));
+        assert_eq!(b.submit(req(1, 0, 4)), Err(FinishReason::Rejected));
+        assert!(b.submit(req(2, 8, 8)).is_ok());
+    }
+
+    #[test]
+    fn idle_when_empty() {
+        let b = Batcher::new(2, 4, 64);
+        assert_eq!(b.plan(), StepPlan::Idle);
+        assert!(!b.has_work());
+    }
+}

@@ -1,0 +1,161 @@
+//! Serving metrics: throughput counters and latency histograms.
+
+use std::time::Duration;
+
+/// Fixed-bucket latency histogram (log-spaced, 1 us .. ~1000 s).
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    buckets: Vec<u64>,
+    bounds: Vec<f64>,
+    count: u64,
+    sum_s: f64,
+    max_s: f64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        // 1us * 2^i, 30 buckets -> covers up to ~1073 s.
+        let bounds: Vec<f64> = (0..30).map(|i| 1e-6 * (1u64 << i) as f64).collect();
+        Histogram { buckets: vec![0; 31], bounds, count: 0, sum_s: 0.0, max_s: 0.0 }
+    }
+
+    pub fn record(&mut self, d: Duration) {
+        self.record_s(d.as_secs_f64());
+    }
+
+    pub fn record_s(&mut self, s: f64) {
+        let idx = self.bounds.partition_point(|&b| b < s);
+        self.buckets[idx] += 1;
+        self.count += 1;
+        self.sum_s += s;
+        self.max_s = self.max_s.max(s);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean_s(&self) -> f64 {
+        if self.count == 0 { 0.0 } else { self.sum_s / self.count as f64 }
+    }
+
+    pub fn max_s(&self) -> f64 {
+        self.max_s
+    }
+
+    /// Approximate quantile from bucket upper bounds.
+    pub fn quantile_s(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64;
+        let mut acc = 0;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return if i < self.bounds.len() { self.bounds[i] } else { self.max_s };
+            }
+        }
+        self.max_s
+    }
+}
+
+/// Aggregated engine metrics.
+#[derive(Debug, Default, Clone)]
+pub struct EngineMetrics {
+    pub requests_admitted: u64,
+    pub requests_finished: u64,
+    pub requests_rejected: u64,
+    pub prompt_tokens: u64,
+    pub generated_tokens: u64,
+    pub engine_steps: u64,
+    pub prefill_steps: u64,
+    pub decode_steps: u64,
+    /// Sum over decode steps of active lanes (for mean batch occupancy).
+    pub decode_lane_steps: u64,
+    pub ttft: Histogram,
+    pub itl: Histogram,
+    pub e2e: Histogram,
+}
+
+impl EngineMetrics {
+    pub fn new() -> Self {
+        Self { ttft: Histogram::new(), itl: Histogram::new(), e2e: Histogram::new(), ..Default::default() }
+    }
+
+    pub fn mean_decode_batch(&self) -> f64 {
+        if self.decode_steps == 0 {
+            0.0
+        } else {
+            self.decode_lane_steps as f64 / self.decode_steps as f64
+        }
+    }
+
+    pub fn report(&self, wall_s: f64) -> String {
+        format!(
+            "requests: {} admitted, {} finished, {} rejected\n\
+             tokens:   {} prompt, {} generated\n\
+             steps:    {} total ({} prefill, {} decode; mean decode batch {:.2})\n\
+             wall:     {:.2}s -> {:.1} gen tok/s\n\
+             TTFT:     mean {:.1} ms, p50 {:.1} ms, p99 {:.1} ms\n\
+             ITL:      mean {:.1} ms, p50 {:.1} ms, p99 {:.1} ms",
+            self.requests_admitted,
+            self.requests_finished,
+            self.requests_rejected,
+            self.prompt_tokens,
+            self.generated_tokens,
+            self.engine_steps,
+            self.prefill_steps,
+            self.decode_steps,
+            self.mean_decode_batch(),
+            wall_s,
+            self.generated_tokens as f64 / wall_s.max(1e-9),
+            self.ttft.mean_s() * 1e3,
+            self.ttft.quantile_s(0.5) * 1e3,
+            self.ttft.quantile_s(0.99) * 1e3,
+            self.itl.mean_s() * 1e3,
+            self.itl.quantile_s(0.5) * 1e3,
+            self.itl.quantile_s(0.99) * 1e3,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_quantiles_ordered() {
+        let mut h = Histogram::new();
+        for i in 1..=1000u64 {
+            h.record_s(i as f64 * 1e-4); // 0.1ms .. 100ms
+        }
+        assert_eq!(h.count(), 1000);
+        let p50 = h.quantile_s(0.5);
+        let p99 = h.quantile_s(0.99);
+        assert!(p50 <= p99);
+        assert!(p50 > 1e-3 && p99 <= h.max_s() * 2.0);
+        assert!((h.mean_s() - 0.05).abs() < 0.01);
+    }
+
+    #[test]
+    fn empty_histogram_is_zero() {
+        let h = Histogram::new();
+        assert_eq!(h.quantile_s(0.99), 0.0);
+        assert_eq!(h.mean_s(), 0.0);
+    }
+
+    #[test]
+    fn mean_decode_batch() {
+        let mut m = EngineMetrics::new();
+        m.decode_steps = 4;
+        m.decode_lane_steps = 10;
+        assert_eq!(m.mean_decode_batch(), 2.5);
+    }
+}

@@ -1,0 +1,31 @@
+//! L3 coordinator: the serving engine (vLLM-shaped) and its parts.
+//!
+//! * [`request`] — request/sequence lifecycle types.
+//! * [`batcher`] — FCFS admission queue, lane assignment, prefill-priority
+//!   step planning (continuous batching over fixed-shape AOT artifacts).
+//! * [`kv_cache`] — paged KV block manager (vLLM-style), the memory
+//!   accountant that converts quantization's freed bytes into batch slots.
+//! * [`engine`] — the real engine: drives the PJRT runtime over the
+//!   AOT-compiled tiny model; Python never runs here.
+//! * [`router`] — multi-replica request router (round-robin, least-loaded,
+//!   session-affinity) for scale-out serving.
+//! * [`simserve`] — the same policy run against the `gpusim` cost model at
+//!   paper scale (Table 1, Fig. 8).
+//! * [`metrics`] — throughput counters and TTFT/ITL histograms.
+
+pub mod batcher;
+pub mod engine;
+pub mod kv_cache;
+pub mod metrics;
+pub mod request;
+pub mod router;
+pub mod sampler;
+pub mod simserve;
+
+pub use batcher::{Batcher, StepPlan};
+pub use engine::{Completion, Engine, EngineConfig};
+pub use kv_cache::{blocks_for_device, KvBlockManager};
+pub use metrics::{EngineMetrics, Histogram};
+pub use request::{FinishReason, GenerationRequest, SeqState, Sequence};
+pub use router::{Policy, RouteDecision, Router};
+pub use simserve::{simulate_serving, SimPolicy, SimResult};

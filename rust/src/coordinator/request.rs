@@ -1,0 +1,155 @@
+//! Request and sequence lifecycle types.
+
+use std::time::Instant;
+
+/// Why a sequence stopped.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FinishReason {
+    /// Hit its max_new_tokens budget.
+    Length,
+    /// Produced the EOS token.
+    Eos,
+    /// Evicted under memory pressure (resubmitted by the scheduler).
+    Preempted,
+    /// Rejected at admission (queue full / prompt too long).
+    Rejected,
+}
+
+/// Client-visible request parameters.
+#[derive(Debug, Clone)]
+pub struct GenerationRequest {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+    /// Greedy if None, else sample with this temperature (tiny engine uses
+    /// greedy; the field keeps the API honest).
+    pub temperature: Option<f32>,
+    pub eos_token: Option<i32>,
+}
+
+/// Server-side state of one sequence.
+#[derive(Debug)]
+pub struct Sequence {
+    pub req: GenerationRequest,
+    /// All tokens: prompt followed by generated.
+    pub tokens: Vec<i32>,
+    pub generated: usize,
+    pub state: SeqState,
+    pub enqueued_at: Instant,
+    pub first_token_at: Option<Instant>,
+    pub finished_at: Option<Instant>,
+    pub finish: Option<FinishReason>,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SeqState {
+    Waiting,
+    /// Prefill done, decoding in lane `lane`.
+    Running { lane: usize },
+    Finished,
+}
+
+impl Sequence {
+    pub fn new(req: GenerationRequest) -> Self {
+        let tokens = req.prompt.clone();
+        Sequence {
+            req,
+            tokens,
+            generated: 0,
+            state: SeqState::Waiting,
+            enqueued_at: Instant::now(),
+            first_token_at: None,
+            finished_at: None,
+            finish: None,
+        }
+    }
+
+    /// Current position of the *next* token to be written (also the
+    /// attention context length so far).
+    pub fn pos(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn last_token(&self) -> i32 {
+        *self.tokens.last().expect("sequence has no tokens")
+    }
+
+    pub fn push_generated(&mut self, tok: i32) {
+        if self.first_token_at.is_none() {
+            self.first_token_at = Some(Instant::now());
+        }
+        self.tokens.push(tok);
+        self.generated += 1;
+    }
+
+    pub fn should_stop(&self) -> Option<FinishReason> {
+        if self.generated >= self.req.max_new_tokens {
+            return Some(FinishReason::Length);
+        }
+        if let Some(eos) = self.req.eos_token {
+            if self.generated > 0 && self.last_token() == eos {
+                return Some(FinishReason::Eos);
+            }
+        }
+        None
+    }
+
+    pub fn finish(&mut self, reason: FinishReason) {
+        self.state = SeqState::Finished;
+        self.finish = Some(reason);
+        self.finished_at = Some(Instant::now());
+    }
+
+    pub fn output_tokens(&self) -> &[i32] {
+        &self.tokens[self.req.prompt.len()..]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(prompt: usize, max_new: usize, eos: Option<i32>) -> GenerationRequest {
+        GenerationRequest {
+            id: 1,
+            prompt: (0..prompt as i32).collect(),
+            max_new_tokens: max_new,
+            temperature: None,
+            eos_token: eos,
+        }
+    }
+
+    #[test]
+    fn lifecycle_and_outputs() {
+        let mut s = Sequence::new(req(3, 2, None));
+        assert_eq!(s.pos(), 3);
+        assert!(s.should_stop().is_none());
+        s.push_generated(7);
+        assert!(s.first_token_at.is_some());
+        assert!(s.should_stop().is_none());
+        s.push_generated(9);
+        assert_eq!(s.should_stop(), Some(FinishReason::Length));
+        assert_eq!(s.output_tokens(), &[7, 9]);
+    }
+
+    #[test]
+    fn eos_stops_early() {
+        let mut s = Sequence::new(req(2, 10, Some(0)));
+        s.push_generated(5);
+        assert!(s.should_stop().is_none());
+        s.push_generated(0);
+        assert_eq!(s.should_stop(), Some(FinishReason::Eos));
+    }
+
+    #[test]
+    fn eos_in_prompt_does_not_stop() {
+        let s = Sequence::new(GenerationRequest {
+            id: 1,
+            prompt: vec![0, 0],
+            max_new_tokens: 4,
+            temperature: None,
+            eos_token: Some(0),
+        });
+        assert!(s.should_stop().is_none());
+    }
+}

@@ -1,0 +1,219 @@
+//! Request router: spreads incoming requests across engine replicas
+//! (vLLM-router-shaped front end for multi-GPU or multi-process serving).
+//!
+//! The router is deliberately engine-agnostic: replicas are registered
+//! with a capacity hint and report load through [`RouterHandle::on_admit`]
+//! / [`RouterHandle::on_finish`]; policies act on the tracked load.
+//! The real [`super::engine::Engine`] and the Table-1 simulator both fit
+//! behind this interface (see `examples/serve_e2e.rs` for single-replica
+//! use; `router` tests exercise multi-replica balancing).
+
+use anyhow::{bail, Result};
+
+/// Routing policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    /// Cycle through replicas regardless of load.
+    RoundRobin,
+    /// Pick the replica with the fewest in-flight tokens (prompt +
+    /// expected generation), tie-broken by index.
+    LeastLoaded,
+    /// Prefix-affinity hashing: requests with the same session key land on
+    /// the same replica (KV reuse), falling back to least-loaded when the
+    /// preferred replica is saturated.
+    SessionAffinity,
+}
+
+/// Tracked state of one replica.
+#[derive(Debug, Clone)]
+struct Replica {
+    /// In-flight token load (prompt + max_new of admitted requests).
+    inflight_tokens: u64,
+    /// In-flight request count.
+    inflight_reqs: u64,
+    /// Admission cap: max in-flight requests (0 = unlimited).
+    max_reqs: u64,
+    healthy: bool,
+}
+
+/// The router.
+#[derive(Debug)]
+pub struct Router {
+    policy: Policy,
+    replicas: Vec<Replica>,
+    rr_next: usize,
+    pub routed: u64,
+    pub rejected: u64,
+}
+
+/// Admission ticket: which replica got the request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RouteDecision {
+    pub replica: usize,
+}
+
+impl Router {
+    pub fn new(policy: Policy, replica_caps: &[u64]) -> Result<Self> {
+        if replica_caps.is_empty() {
+            bail!("router needs at least one replica");
+        }
+        Ok(Router {
+            policy,
+            replicas: replica_caps
+                .iter()
+                .map(|&cap| Replica {
+                    inflight_tokens: 0,
+                    inflight_reqs: 0,
+                    max_reqs: cap,
+                    healthy: true,
+                })
+                .collect(),
+            rr_next: 0,
+            routed: 0,
+            rejected: 0,
+        })
+    }
+
+    pub fn n_replicas(&self) -> usize {
+        self.replicas.len()
+    }
+
+    pub fn set_healthy(&mut self, replica: usize, healthy: bool) {
+        self.replicas[replica].healthy = healthy;
+    }
+
+    fn has_room(&self, i: usize) -> bool {
+        let r = &self.replicas[i];
+        r.healthy && (r.max_reqs == 0 || r.inflight_reqs < r.max_reqs)
+    }
+
+    /// Route one request of `tokens` total work (prompt + max_new).
+    /// `session` keys affinity routing (ignored by other policies).
+    pub fn route(&mut self, tokens: u64, session: Option<u64>) -> Option<RouteDecision> {
+        let n = self.replicas.len();
+        let pick = match self.policy {
+            Policy::RoundRobin => {
+                let mut chosen = None;
+                for off in 0..n {
+                    let i = (self.rr_next + off) % n;
+                    if self.has_room(i) {
+                        chosen = Some(i);
+                        self.rr_next = (i + 1) % n;
+                        break;
+                    }
+                }
+                chosen
+            }
+            Policy::LeastLoaded => self.least_loaded(),
+            Policy::SessionAffinity => {
+                let preferred = session.map(|s| (s as usize) % n);
+                match preferred {
+                    Some(p) if self.has_room(p) => Some(p),
+                    _ => self.least_loaded(),
+                }
+            }
+        };
+        match pick {
+            Some(i) => {
+                self.replicas[i].inflight_tokens += tokens;
+                self.replicas[i].inflight_reqs += 1;
+                self.routed += 1;
+                Some(RouteDecision { replica: i })
+            }
+            None => {
+                self.rejected += 1;
+                None
+            }
+        }
+    }
+
+    fn least_loaded(&self) -> Option<usize> {
+        (0..self.replicas.len())
+            .filter(|&i| self.has_room(i))
+            .min_by_key(|&i| (self.replicas[i].inflight_tokens, i))
+    }
+
+    /// Report request completion so load tracking stays truthful.
+    pub fn on_finish(&mut self, d: RouteDecision, tokens: u64) {
+        let r = &mut self.replicas[d.replica];
+        r.inflight_tokens = r.inflight_tokens.saturating_sub(tokens);
+        r.inflight_reqs = r.inflight_reqs.saturating_sub(1);
+    }
+
+    pub fn inflight(&self, replica: usize) -> (u64, u64) {
+        let r = &self.replicas[replica];
+        (r.inflight_reqs, r.inflight_tokens)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_robin_cycles() {
+        let mut r = Router::new(Policy::RoundRobin, &[0, 0, 0]).unwrap();
+        let seq: Vec<usize> =
+            (0..6).map(|_| r.route(10, None).unwrap().replica).collect();
+        assert_eq!(seq, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn least_loaded_balances_uneven_work() {
+        let mut r = Router::new(Policy::LeastLoaded, &[0, 0]).unwrap();
+        let d0 = r.route(1000, None).unwrap(); // heavy -> replica 0
+        assert_eq!(d0.replica, 0);
+        // next several light requests should all avoid the loaded replica
+        for _ in 0..3 {
+            assert_eq!(r.route(10, None).unwrap().replica, 1);
+        }
+        // until replica 1 accumulates more load
+        assert_eq!(r.inflight(1).0, 3);
+        r.on_finish(d0, 1000);
+        assert_eq!(r.route(10, None).unwrap().replica, 0);
+    }
+
+    #[test]
+    fn capacity_caps_admission() {
+        let mut r = Router::new(Policy::RoundRobin, &[1, 1]).unwrap();
+        assert!(r.route(5, None).is_some());
+        assert!(r.route(5, None).is_some());
+        assert!(r.route(5, None).is_none(), "both replicas full");
+        assert_eq!(r.rejected, 1);
+    }
+
+    #[test]
+    fn unhealthy_replica_skipped() {
+        let mut r = Router::new(Policy::RoundRobin, &[0, 0]).unwrap();
+        r.set_healthy(0, false);
+        for _ in 0..4 {
+            assert_eq!(r.route(1, None).unwrap().replica, 1);
+        }
+        r.set_healthy(0, true);
+        assert_eq!(r.route(1, None).unwrap().replica, 0);
+    }
+
+    #[test]
+    fn session_affinity_sticks_then_spills() {
+        let mut r = Router::new(Policy::SessionAffinity, &[2, 2]).unwrap();
+        let s = Some(7u64); // 7 % 2 = replica 1
+        assert_eq!(r.route(1, s).unwrap().replica, 1);
+        assert_eq!(r.route(1, s).unwrap().replica, 1);
+        // replica 1 now at cap -> spill to least-loaded (0)
+        assert_eq!(r.route(1, s).unwrap().replica, 0);
+    }
+
+    #[test]
+    fn finish_releases_load() {
+        let mut r = Router::new(Policy::LeastLoaded, &[0]).unwrap();
+        let d = r.route(500, None).unwrap();
+        assert_eq!(r.inflight(0), (1, 500));
+        r.on_finish(d, 500);
+        assert_eq!(r.inflight(0), (0, 0));
+    }
+
+    #[test]
+    fn zero_replicas_rejected() {
+        assert!(Router::new(Policy::RoundRobin, &[]).is_err());
+    }
+}

@@ -1,0 +1,112 @@
+//! Token sampling: greedy argmax and seeded temperature sampling over the
+//! logits rows the engine gets back from PJRT.
+
+use crate::util::rng::Rng;
+
+/// Greedy argmax (temperature None / 0).
+pub fn argmax(logits: &[f32]) -> i32 {
+    let mut best = 0;
+    let mut bv = f32::NEG_INFINITY;
+    for (i, &x) in logits.iter().enumerate() {
+        if x > bv {
+            bv = x;
+            best = i;
+        }
+    }
+    best as i32
+}
+
+/// Sample from softmax(logits / temperature) using the provided RNG.
+/// Numerically stable (max-subtracted); temperature must be > 0.
+pub fn sample_temperature(logits: &[f32], temperature: f32, rng: &mut Rng) -> i32 {
+    assert!(temperature > 0.0, "temperature must be positive");
+    let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut probs: Vec<f64> = logits
+        .iter()
+        .map(|&x| (((x - max) / temperature) as f64).exp())
+        .collect();
+    let sum: f64 = probs.iter().sum();
+    for p in &mut probs {
+        *p /= sum;
+    }
+    let mut u = rng.f64();
+    for (i, &p) in probs.iter().enumerate() {
+        if u < p {
+            return i as i32;
+        }
+        u -= p;
+    }
+    (probs.len() - 1) as i32
+}
+
+/// Dispatch on the request's temperature setting.
+pub fn sample(logits: &[f32], temperature: Option<f32>, rng: &mut Rng) -> i32 {
+    match temperature {
+        Some(t) if t > 0.0 => sample_temperature(logits, t, rng),
+        _ => argmax(logits),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_basic() {
+        assert_eq!(argmax(&[0.1, 3.0, -1.0]), 1);
+        assert_eq!(argmax(&[f32::NEG_INFINITY, -5.0]), 1);
+        assert_eq!(argmax(&[2.0]), 0);
+    }
+
+    #[test]
+    fn low_temperature_approaches_greedy() {
+        let logits = [0.0f32, 5.0, 1.0, -2.0];
+        let mut rng = Rng::seed_from_u64(1);
+        for _ in 0..50 {
+            assert_eq!(sample_temperature(&logits, 0.01, &mut rng), 1);
+        }
+    }
+
+    #[test]
+    fn high_temperature_spreads_mass() {
+        let logits = [0.0f32, 5.0, 1.0, -2.0];
+        let mut rng = Rng::seed_from_u64(2);
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..500 {
+            seen.insert(sample_temperature(&logits, 50.0, &mut rng));
+        }
+        assert!(seen.len() >= 3, "high T should visit most tokens: {seen:?}");
+    }
+
+    #[test]
+    fn sampling_is_seed_deterministic() {
+        let logits = [1.0f32, 2.0, 3.0, 4.0];
+        let a: Vec<i32> = {
+            let mut rng = Rng::seed_from_u64(9);
+            (0..20).map(|_| sample_temperature(&logits, 1.0, &mut rng)).collect()
+        };
+        let b: Vec<i32> = {
+            let mut rng = Rng::seed_from_u64(9);
+            (0..20).map(|_| sample_temperature(&logits, 1.0, &mut rng)).collect()
+        };
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn frequencies_follow_softmax() {
+        // Two logits 0 and ln(3): probabilities 1/4 and 3/4.
+        let logits = [0.0f32, (3.0f32).ln()];
+        let mut rng = Rng::seed_from_u64(3);
+        let n = 20_000;
+        let ones = (0..n).filter(|_| sample_temperature(&logits, 1.0, &mut rng) == 1).count();
+        let frac = ones as f64 / n as f64;
+        assert!((frac - 0.75).abs() < 0.02, "frac {frac}");
+    }
+
+    #[test]
+    fn dispatch_none_is_greedy() {
+        let mut rng = Rng::seed_from_u64(4);
+        assert_eq!(sample(&[0.0, 9.0], None, &mut rng), 1);
+        assert_eq!(sample(&[0.0, 9.0], Some(0.0), &mut rng), 1);
+    }
+}

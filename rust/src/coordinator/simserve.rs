@@ -1,0 +1,525 @@
+//! Serving *simulator*: the continuous-batching engine run against the
+//! `gpusim` cost model instead of PJRT, over the paper's full-size models
+//! and devices. Regenerates Table 1 and the Fig. 8 batch sweeps.
+//!
+//! The same scheduling policy as the real [`super::engine`] (prefill
+//! priority, FCFS admission) but with (a) simulated time advanced by the
+//! kernel cost model, and (b) KV accounting through the paged
+//! [`super::kv_cache::KvBlockManager`] sized from the device's free memory
+//! — which is how weight-only quantization turns freed weight bytes into
+//! batch capacity (paper §4.2).
+
+use std::collections::VecDeque;
+
+use crate::gpusim::kernel_model::{model_gemm, Calib, KernelKind};
+use crate::gpusim::DeviceSpec;
+use crate::model::LlmSpec;
+use crate::workload::Request;
+
+use super::kv_cache::{blocks_for_device, KvBlockManager};
+
+/// Simulation policy knobs (vLLM defaults where applicable).
+#[derive(Debug, Clone, Copy)]
+pub struct SimPolicy {
+    pub max_num_seqs: usize,
+    pub block_size: u64,
+    pub watermark_frac: f64,
+    /// Memory fraction reserved for activations/runtime.
+    pub headroom_frac: f64,
+    /// Max prompt tokens batched into one prefill step.
+    pub max_prefill_tokens: u64,
+}
+
+impl Default for SimPolicy {
+    fn default() -> Self {
+        SimPolicy {
+            max_num_seqs: 256,
+            block_size: 16,
+            watermark_frac: 0.01,
+            headroom_frac: 0.10,
+            max_prefill_tokens: 4096,
+        }
+    }
+}
+
+/// Outcome of one simulated serving run.
+#[derive(Debug, Clone, Copy)]
+pub struct SimResult {
+    pub finished: usize,
+    pub wall_s: f64,
+    pub prompt_tokens: u64,
+    pub gen_tokens: u64,
+    /// Generated tokens per second — Table 1's metric.
+    pub gen_tok_per_s: f64,
+    /// Prompt+generated per second (vLLM's "total token throughput").
+    pub total_tok_per_s: f64,
+    pub mean_batch: f64,
+    pub oom: bool,
+    pub preemptions: u64,
+}
+
+struct RunningSeq {
+    req: Request,
+    generated: u64,
+}
+
+/// Latency of a (possibly batched) prefill totalling `tokens` prompt tokens.
+fn prefill_latency(
+    dev: &DeviceSpec,
+    spec: &LlmSpec,
+    kind: KernelKind,
+    tokens: u64,
+    calib: &Calib,
+) -> f64 {
+    if tokens == 0 {
+        return 0.0;
+    }
+    let mut t = 0.0;
+    for g in spec.gemms() {
+        t += model_gemm(dev, kind, tokens, g.n, g.k, calib).latency_s * g.count as f64;
+    }
+    // Prefill attention: O(T^2 d) flops on tensor cores, usually minor vs
+    // the 7 weight GEMMs at these prompt lengths.
+    let attn_flops = 2.0 * 2.0 * (tokens * tokens) as f64 * spec.d_model as f64
+        * spec.n_layers as f64;
+    t + attn_flops / (dev.tc_tflops * 1e12 * calib.mma_eff)
+}
+
+fn decode_latency(
+    dev: &DeviceSpec,
+    spec: &LlmSpec,
+    kind: KernelKind,
+    batch: u64,
+    mean_ctx: u64,
+    calib: &Calib,
+) -> f64 {
+    crate::gpusim::decode_step_latency(dev, spec, kind, batch, mean_ctx.max(1), calib)
+        .total_s()
+}
+
+/// Run the continuous-batching simulation over an offline workload (all
+/// requests queued at t=0, like vLLM's throughput benchmark).
+pub fn simulate_serving(
+    dev: &DeviceSpec,
+    spec: &LlmSpec,
+    kind: KernelKind,
+    requests: &[Request],
+    policy: &SimPolicy,
+    calib: &Calib,
+) -> SimResult {
+    let w4 = !matches!(kind, KernelKind::Fp16);
+    let kv_per_token =
+        (2 * spec.n_layers * spec.kv_heads * spec.head_dim()) as f64 * 2.0;
+    let blocks = blocks_for_device(
+        dev.mem_bytes(),
+        spec.weight_bytes(w4),
+        kv_per_token,
+        policy.block_size,
+        policy.headroom_frac,
+    );
+    if blocks == 0 {
+        return SimResult {
+            finished: 0,
+            wall_s: 0.0,
+            prompt_tokens: 0,
+            gen_tokens: 0,
+            gen_tok_per_s: 0.0,
+            total_tok_per_s: 0.0,
+            mean_batch: 0.0,
+            oom: true,
+            preemptions: 0,
+        };
+    }
+
+    let mut kv = KvBlockManager::new(blocks, policy.block_size, policy.watermark_frac);
+    let mut waiting: VecDeque<Request> = requests.iter().copied().collect();
+    let mut running: Vec<RunningSeq> = Vec::new();
+    let mut clock = 0.0f64;
+    let mut prompt_tokens = 0u64;
+    let mut gen_tokens = 0u64;
+    let mut finished = 0usize;
+    let mut decode_steps = 0u64;
+    let mut decode_lane_steps = 0u64;
+    let mut preemptions = 0u64;
+
+    while !waiting.is_empty() || !running.is_empty() {
+        // --- admission: batch prefills while budget allows ---
+        let mut prefill_batch_tokens = 0u64;
+        while let Some(&req) = waiting.front() {
+            if running.len() >= policy.max_num_seqs
+                || prefill_batch_tokens + req.prompt_tokens > policy.max_prefill_tokens
+                || !kv.can_admit(req.prompt_tokens)
+            {
+                break;
+            }
+            waiting.pop_front();
+            kv.allocate(req.id, req.prompt_tokens).expect("admission checked");
+            prompt_tokens += req.prompt_tokens;
+            prefill_batch_tokens += req.prompt_tokens;
+            running.push(RunningSeq { req, generated: 0 });
+        }
+        if prefill_batch_tokens > 0 {
+            clock += prefill_latency(dev, spec, kind, prefill_batch_tokens, calib);
+            // The prefill's last-token logits yield each admitted
+            // sequence's first generated token (vLLM counts it this way).
+            for r in running.iter_mut().filter(|r| r.generated == 0) {
+                r.generated = 1;
+                gen_tokens += 1;
+                let _ = kv.append_token(r.req.id);
+            }
+        }
+
+        if running.is_empty() {
+            if waiting.is_empty() {
+                break;
+            }
+            // Workload item larger than the whole pool: drop it (vLLM
+            // would reject it too).
+            let r = waiting.pop_front().unwrap();
+            let _ = r;
+            continue;
+        }
+
+        // --- one decode step over all running sequences ---
+        let batch = running.len() as u64;
+        let mean_ctx = running
+            .iter()
+            .map(|r| r.req.prompt_tokens + r.generated)
+            .sum::<u64>()
+            / batch;
+        clock += decode_latency(dev, spec, kind, batch, mean_ctx, calib);
+        decode_steps += 1;
+        decode_lane_steps += batch;
+
+        let mut i = 0;
+        while i < running.len() {
+            let r = &mut running[i];
+            r.generated += 1;
+            gen_tokens += 1;
+            if r.generated >= r.req.gen_tokens {
+                kv.free_seq(r.req.id).expect("finished seq has blocks");
+                finished += 1;
+                running.swap_remove(i);
+                continue;
+            }
+            if kv.append_token(r.req.id).is_err() {
+                // Preempt the newest sequence (vLLM recompute policy):
+                // free its blocks and push it back on the queue.
+                let victim = running.swap_remove(i);
+                kv.free_seq(victim.req.id).expect("victim has blocks");
+                preemptions += 1;
+                let mut back = victim.req;
+                back.gen_tokens -= victim.generated.min(back.gen_tokens - 1);
+                waiting.push_back(back);
+                continue;
+            }
+            i += 1;
+        }
+    }
+
+    SimResult {
+        finished,
+        wall_s: clock,
+        prompt_tokens,
+        gen_tokens,
+        gen_tok_per_s: gen_tokens as f64 / clock.max(1e-9),
+        total_tok_per_s: (prompt_tokens + gen_tokens) as f64 / clock.max(1e-9),
+        mean_batch: if decode_steps == 0 {
+            0.0
+        } else {
+            decode_lane_steps as f64 / decode_steps as f64
+        },
+        oom: false,
+        preemptions,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::Gpu;
+    use crate::model::Model;
+    use crate::workload::ShareGptLike;
+
+    fn run(kind: KernelKind, model: Model) -> SimResult {
+        let reqs = ShareGptLike::new().offline(300, 42);
+        simulate_serving(
+            &Gpu::RtxA6000.spec(),
+            &model.spec(),
+            kind,
+            &reqs,
+            &SimPolicy::default(),
+            &Calib::default(),
+        )
+    }
+
+    #[test]
+    fn table1_vicuna_ordering() {
+        // Table 1: QUICK > AWQ > FP16 on Vicuna-13B/A6000.
+        let fp = run(KernelKind::Fp16, Model::Vicuna13B);
+        let awq = run(KernelKind::Awq, Model::Vicuna13B);
+        let quick = run(KernelKind::Quick, Model::Vicuna13B);
+        assert!(!fp.oom && !awq.oom && !quick.oom);
+        assert!(quick.gen_tok_per_s > awq.gen_tok_per_s, "{quick:?} vs {awq:?}");
+        assert!(awq.gen_tok_per_s > fp.gen_tok_per_s * 0.9, "{awq:?} vs {fp:?}");
+    }
+
+    #[test]
+    fn table1_llama70b_fp16_oom() {
+        let fp = run(KernelKind::Fp16, Model::Llama2_70B);
+        assert!(fp.oom);
+        let quick = run(KernelKind::Quick, Model::Llama2_70B);
+        assert!(!quick.oom && quick.gen_tok_per_s > 0.0);
+    }
+
+    #[test]
+    fn all_requests_complete() {
+        let reqs = ShareGptLike::new().offline(100, 7);
+        let r = simulate_serving(
+            &Gpu::A100.spec(),
+            &Model::Mistral7B.spec(),
+            KernelKind::Quick,
+            &reqs,
+            &SimPolicy::default(),
+            &Calib::default(),
+        );
+        assert_eq!(r.finished, 100);
+        let want: u64 = reqs.iter().map(|r| r.gen_tokens).sum();
+        assert!(r.gen_tokens >= want, "{} < {}", r.gen_tokens, want);
+    }
+
+    #[test]
+    fn quantized_sustains_bigger_batches() {
+        let fp = run(KernelKind::Fp16, Model::Vicuna13B);
+        let quick = run(KernelKind::Quick, Model::Vicuna13B);
+        assert!(
+            quick.mean_batch > fp.mean_batch,
+            "quick batch {} !> fp16 batch {}",
+            quick.mean_batch,
+            fp.mean_batch
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Online serving (Poisson arrivals): latency percentiles vs offered load.
+// ---------------------------------------------------------------------------
+
+/// Per-request latency sample from an online simulation.
+#[derive(Debug, Clone, Copy)]
+pub struct OnlineLatency {
+    pub request_id: u64,
+    pub e2e_s: f64,
+}
+
+/// Result of an online (open-loop) serving simulation.
+#[derive(Debug, Clone)]
+pub struct OnlineResult {
+    pub finished: usize,
+    pub wall_s: f64,
+    pub gen_tok_per_s: f64,
+    pub latencies: Vec<OnlineLatency>,
+    pub oom: bool,
+}
+
+impl OnlineResult {
+    pub fn e2e_quantile_s(&self, q: f64) -> f64 {
+        if self.latencies.is_empty() {
+            return 0.0;
+        }
+        let mut xs: Vec<f64> = self.latencies.iter().map(|l| l.e2e_s).collect();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = (q.clamp(0.0, 1.0) * (xs.len() - 1) as f64).round() as usize;
+        xs[idx]
+    }
+
+    pub fn mean_e2e_s(&self) -> f64 {
+        if self.latencies.is_empty() {
+            return 0.0;
+        }
+        self.latencies.iter().map(|l| l.e2e_s).sum::<f64>() / self.latencies.len() as f64
+    }
+}
+
+/// Open-loop simulation: requests arrive at their `arrival_s`; the engine
+/// runs prefill-priority continuous batching under the same KV accounting
+/// as [`simulate_serving`]. Used for latency-vs-load curves (not a paper
+/// figure — an extension the serving community expects; see
+/// `quick-infer loadtest`).
+pub fn simulate_online(
+    dev: &DeviceSpec,
+    spec: &LlmSpec,
+    kind: KernelKind,
+    requests: &[Request],
+    policy: &SimPolicy,
+    calib: &Calib,
+) -> OnlineResult {
+    let w4 = !matches!(kind, KernelKind::Fp16);
+    let kv_per_token =
+        (2 * spec.n_layers * spec.kv_heads * spec.head_dim()) as f64 * 2.0;
+    let blocks = blocks_for_device(
+        dev.mem_bytes(),
+        spec.weight_bytes(w4),
+        kv_per_token,
+        policy.block_size,
+        policy.headroom_frac,
+    );
+    if blocks == 0 {
+        return OnlineResult {
+            finished: 0,
+            wall_s: 0.0,
+            gen_tok_per_s: 0.0,
+            latencies: vec![],
+            oom: true,
+        };
+    }
+    let mut kv = KvBlockManager::new(blocks, policy.block_size, policy.watermark_frac);
+    let mut pending: VecDeque<Request> = requests.iter().copied().collect();
+    let mut waiting: VecDeque<Request> = VecDeque::new();
+    let mut running: Vec<RunningSeq> = Vec::new();
+    let mut clock = 0.0f64;
+    let mut gen_tokens = 0u64;
+    let mut latencies = Vec::with_capacity(requests.len());
+
+    loop {
+        // Move arrived requests into the queue.
+        while pending.front().map_or(false, |r| r.arrival_s() <= clock) {
+            waiting.push_back(pending.pop_front().unwrap());
+        }
+        if waiting.is_empty() && running.is_empty() {
+            match pending.front() {
+                Some(r) => {
+                    clock = r.arrival_s(); // idle until next arrival
+                    continue;
+                }
+                None => break,
+            }
+        }
+
+        // Admission + prefill batch.
+        let mut prefill_tokens = 0u64;
+        while let Some(&req) = waiting.front() {
+            if running.len() >= policy.max_num_seqs
+                || prefill_tokens + req.prompt_tokens > policy.max_prefill_tokens
+                || !kv.can_admit(req.prompt_tokens)
+            {
+                break;
+            }
+            waiting.pop_front();
+            kv.allocate(req.id, req.prompt_tokens).expect("checked");
+            prefill_tokens += req.prompt_tokens;
+            running.push(RunningSeq { req, generated: 0 });
+        }
+        if prefill_tokens > 0 {
+            clock += prefill_latency(dev, spec, kind, prefill_tokens, calib);
+            for r in running.iter_mut().filter(|r| r.generated == 0) {
+                r.generated = 1;
+                gen_tokens += 1;
+                let _ = kv.append_token(r.req.id);
+            }
+        }
+        if running.is_empty() {
+            continue;
+        }
+
+        // One decode step.
+        let batch = running.len() as u64;
+        let mean_ctx = running
+            .iter()
+            .map(|r| r.req.prompt_tokens + r.generated)
+            .sum::<u64>()
+            / batch;
+        clock += decode_latency(dev, spec, kind, batch, mean_ctx, calib);
+
+        let mut i = 0;
+        while i < running.len() {
+            let r = &mut running[i];
+            r.generated += 1;
+            gen_tokens += 1;
+            if r.generated >= r.req.gen_tokens {
+                kv.free_seq(r.req.id).expect("blocks");
+                latencies.push(OnlineLatency {
+                    request_id: r.req.id,
+                    e2e_s: clock - r.req.arrival_s(),
+                });
+                running.swap_remove(i);
+                continue;
+            }
+            if kv.append_token(r.req.id).is_err() {
+                let victim = running.swap_remove(i);
+                kv.free_seq(victim.req.id).expect("blocks");
+                let mut back = victim.req;
+                back.gen_tokens -= victim.generated.min(back.gen_tokens - 1);
+                waiting.push_back(back);
+                continue;
+            }
+            i += 1;
+        }
+    }
+
+    OnlineResult {
+        finished: latencies.len(),
+        wall_s: clock,
+        gen_tok_per_s: gen_tokens as f64 / clock.max(1e-9),
+        latencies,
+        oom: false,
+    }
+}
+
+#[cfg(test)]
+mod online_tests {
+    use super::*;
+    use crate::gpusim::Gpu;
+    use crate::model::Model;
+    use crate::workload::ShareGptLike;
+
+    fn run_online(rate: f64, kind: KernelKind) -> OnlineResult {
+        let reqs = ShareGptLike::new().online(150, rate, 11);
+        simulate_online(
+            &Gpu::RtxA6000.spec(),
+            &Model::Vicuna13B.spec(),
+            kind,
+            &reqs,
+            &SimPolicy::default(),
+            &Calib::default(),
+        )
+    }
+
+    #[test]
+    fn all_online_requests_finish() {
+        let r = run_online(2.0, KernelKind::Quick);
+        assert_eq!(r.finished, 150);
+        assert!(!r.oom);
+    }
+
+    #[test]
+    fn latency_grows_with_offered_load() {
+        let light = run_online(0.5, KernelKind::Quick);
+        let heavy = run_online(20.0, KernelKind::Quick);
+        assert!(
+            heavy.mean_e2e_s() > light.mean_e2e_s(),
+            "heavy {} !> light {}",
+            heavy.mean_e2e_s(),
+            light.mean_e2e_s()
+        );
+    }
+
+    #[test]
+    fn quick_sustains_lower_latency_than_awq_under_load() {
+        let q = run_online(6.0, KernelKind::Quick);
+        let a = run_online(6.0, KernelKind::Awq);
+        assert!(
+            q.e2e_quantile_s(0.9) < a.e2e_quantile_s(0.9),
+            "p90 quick {} !< awq {}",
+            q.e2e_quantile_s(0.9),
+            a.e2e_quantile_s(0.9)
+        );
+    }
+
+    #[test]
+    fn quantiles_monotone() {
+        let r = run_online(4.0, KernelKind::Quick);
+        assert!(r.e2e_quantile_s(0.5) <= r.e2e_quantile_s(0.9));
+        assert!(r.e2e_quantile_s(0.9) <= r.e2e_quantile_s(0.99));
+    }
+}

@@ -1,0 +1,256 @@
+//! Paper-figure harnesses: each function regenerates one table/figure of
+//! the evaluation section and prints the same rows/series the paper
+//! reports (DESIGN.md §6). Shared by the CLI (`quick-infer simulate`), the
+//! `paper_figures` example, and the criterion benches.
+
+use std::io::Write;
+
+use anyhow::Result;
+
+use crate::coordinator::simserve::{simulate_serving, SimPolicy};
+use crate::gpusim::kernel_model::{model_gemm, Calib, KernelKind};
+use crate::gpusim::{max_batch_before_oom, tokens_per_second, Gpu};
+use crate::model::Model;
+use crate::workload::ShareGptLike;
+
+/// Figure 3 — shared-memory bank conflicts, 64x8192x8192 GEMM.
+pub fn fig3(out: &mut impl Write) -> Result<Fig3Data> {
+    let calib = Calib::default();
+    let dev = Gpu::Rtx4090.spec();
+    writeln!(out, "\n== Figure 3: smem bank conflicts (64x8192x8192, {}) ==", dev.name)?;
+    writeln!(out, "{:8} {:>16} {:>14} {:>10}", "kernel", "wb conflicts", "wb multiplier", "TOPS")?;
+    let mut data = Fig3Data::default();
+    for kind in KernelKind::ALL {
+        let p = model_gemm(&dev, kind, 64, 8192, 8192, &calib);
+        writeln!(
+            out,
+            "{:8} {:>16} {:>14.2} {:>10.1}",
+            kind.label(),
+            p.conflicts,
+            p.conflict_multiplier,
+            p.tops
+        )?;
+        match kind {
+            KernelKind::Awq => data.awq_conflicts = p.conflicts,
+            KernelKind::Quick => data.quick_conflicts = p.conflicts,
+            KernelKind::Fp16 => data.fp16_conflicts = p.conflicts,
+        }
+    }
+    writeln!(
+        out,
+        "paper: original kernel shows heavy write-back conflicts; QUICK ~0"
+    )?;
+    Ok(data)
+}
+
+#[derive(Debug, Default, Clone, Copy)]
+pub struct Fig3Data {
+    pub fp16_conflicts: u64,
+    pub awq_conflicts: u64,
+    pub quick_conflicts: u64,
+}
+
+pub const FIG7_BATCHES: [u64; 9] = [1, 2, 4, 8, 16, 32, 64, 128, 256];
+
+/// Figure 7 — kernel TOPS vs batch on all four devices.
+pub fn fig7(out: &mut impl Write) -> Result<Vec<Fig7Row>> {
+    let calib = Calib::default();
+    let mut rows = Vec::new();
+    for gpu in Gpu::ALL {
+        let dev = gpu.spec();
+        writeln!(out, "\n== Figure 7: batch x 8192 x 8192 GEMM TOPS on {} ==", dev.name)?;
+        writeln!(out, "{:>6} {:>10} {:>10} {:>10} {:>12}", "batch", "fp16", "AWQ", "QUICK", "QUICK/AWQ")?;
+        for m in FIG7_BATCHES {
+            let f = model_gemm(&dev, KernelKind::Fp16, m, 8192, 8192, &calib);
+            let a = model_gemm(&dev, KernelKind::Awq, m, 8192, 8192, &calib);
+            let q = model_gemm(&dev, KernelKind::Quick, m, 8192, 8192, &calib);
+            writeln!(
+                out,
+                "{:>6} {:>10.2} {:>10.2} {:>10.2} {:>11.2}x",
+                m,
+                f.tops,
+                a.tops,
+                q.tops,
+                q.tops / a.tops
+            )?;
+            rows.push(Fig7Row { gpu, batch: m, fp16: f.tops, awq: a.tops, quick: q.tops });
+        }
+    }
+    // Paper §4.1 headline: 1.33–1.91x over AWQ at batch 256.
+    let speedups: Vec<f64> = rows
+        .iter()
+        .filter(|r| r.batch == 256)
+        .map(|r| r.quick / r.awq)
+        .collect();
+    let lo = speedups.iter().cloned().fold(f64::INFINITY, f64::min);
+    let hi = speedups.iter().cloned().fold(0.0, f64::max);
+    writeln!(out, "\nQUICK/AWQ speedup @256 across devices: {lo:.2}x – {hi:.2}x (paper: 1.33–1.91x)")?;
+    Ok(rows)
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct Fig7Row {
+    pub gpu: Gpu,
+    pub batch: u64,
+    pub fp16: f64,
+    pub awq: f64,
+    pub quick: f64,
+}
+
+/// The (model, device, decode-context) triples of Figure 8. Contexts are
+/// chosen to match the paper's memory narrative: Mistral-7B/4090 at 512
+/// reproduces "fp16 impossible at batch 256, 4-bit possible" (§4.2); the
+/// MHA 13B/33B models use 256 (0.8-1.6 MB/token KV would otherwise OOM the
+/// quantized runs before the paper's largest plotted batches).
+pub const FIG8_PAIRS: [(Model, Gpu, u64); 4] = [
+    (Model::Mistral7B, Gpu::Rtx4090, 512),
+    (Model::Vicuna13B, Gpu::RtxA6000, 256),
+    (Model::Llama2_13B, Gpu::L40, 256),
+    (Model::Llama33B, Gpu::A100, 256),
+];
+
+pub const FIG8_BATCHES: [u64; 7] = [1, 8, 16, 32, 64, 128, 256];
+
+/// Figure 8 — end-to-end decode throughput vs batch, with OOM cutoffs.
+pub fn fig8(out: &mut impl Write) -> Result<Vec<Fig8Row>> {
+    let calib = Calib::default();
+    let mut rows = Vec::new();
+    for (model, gpu, ctx) in FIG8_PAIRS {
+        let dev = gpu.spec();
+        let spec = model.spec();
+        writeln!(out, "\n== Figure 8: {} on {} (tokens/s, ctx {}) ==", spec.name, dev.name, ctx)?;
+        writeln!(out, "{:>6} {:>10} {:>10} {:>10}", "batch", "fp16", "AWQ", "QUICK")?;
+        let fp16_max = max_batch_before_oom(&dev, &spec, false, ctx);
+        let w4_max = max_batch_before_oom(&dev, &spec, true, ctx);
+        for b in FIG8_BATCHES {
+            let fmt = |kind: KernelKind, maxb: u64| -> (String, f64) {
+                if b > maxb {
+                    ("OOM".into(), 0.0)
+                } else {
+                    let t = tokens_per_second(&dev, &spec, kind, b, ctx, &calib);
+                    (format!("{t:.0}"), t)
+                }
+            };
+            let (fs, fv) = fmt(KernelKind::Fp16, fp16_max);
+            let (as_, av) = fmt(KernelKind::Awq, w4_max);
+            let (qs, qv) = fmt(KernelKind::Quick, w4_max);
+            writeln!(out, "{:>6} {:>10} {:>10} {:>10}", b, fs, as_, qs)?;
+            rows.push(Fig8Row { model, gpu, batch: b, fp16: fv, awq: av, quick: qv });
+        }
+        writeln!(out, "fp16 max batch: {fp16_max}; 4-bit max batch: {w4_max}")?;
+    }
+    Ok(rows)
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct Fig8Row {
+    pub model: Model,
+    pub gpu: Gpu,
+    pub batch: u64,
+    pub fp16: f64,
+    pub awq: f64,
+    pub quick: f64,
+}
+
+/// Table 1 — vLLM-style serving throughput on A6000.
+pub fn table1(out: &mut impl Write) -> Result<Vec<Table1Row>> {
+    let calib = Calib::default();
+    let dev = Gpu::RtxA6000.spec();
+    let policy = SimPolicy::default();
+    let reqs = ShareGptLike::new().offline(1000, 2024);
+    let mut rows = Vec::new();
+    writeln!(out, "\n== Table 1: serving throughput, {} (1000 ShareGPT-like reqs) ==", dev.name)?;
+    writeln!(
+        out,
+        "{:14} {:>10} {:>10} {:>10} {:>12} {:>12}",
+        "model", "FP16", "AWQ", "QUICK", "vs FP16", "vs AWQ"
+    )?;
+    for model in [Model::Vicuna13B, Model::Llama2_70B] {
+        let spec = model.spec();
+        let run = |kind| simulate_serving(&dev, &spec, kind, &reqs, &policy, &calib);
+        let fp = run(KernelKind::Fp16);
+        let awq = run(KernelKind::Awq);
+        let quick = run(KernelKind::Quick);
+        // vLLM's benchmark_throughput reports *total* token throughput
+        // (prompt + generated) — the convention Table 1's absolute numbers
+        // follow; our simulated absolutes land close to the paper's under
+        // the same convention (see EXPERIMENTS.md).
+        let f = |r: &crate::coordinator::simserve::SimResult| {
+            if r.oom { "OOM".to_string() } else { format!("{:.1}", r.total_tok_per_s) }
+        };
+        let vs_fp = if fp.oom {
+            "-".into()
+        } else {
+            format!("{:+.0}%", (quick.total_tok_per_s / fp.total_tok_per_s - 1.0) * 100.0)
+        };
+        let vs_awq = format!("{:+.0}%", (quick.total_tok_per_s / awq.total_tok_per_s - 1.0) * 100.0);
+        writeln!(
+            out,
+            "{:14} {:>10} {:>10} {:>10} {:>12} {:>12}",
+            spec.name,
+            f(&fp),
+            f(&awq),
+            f(&quick),
+            vs_fp,
+            vs_awq
+        )?;
+        rows.push(Table1Row { model, fp16: fp, awq, quick });
+    }
+    writeln!(out, "paper: Vicuna-13B 985.2 / 1030.4 / 1308.6 (+33% / +27%); Llama-2-70B OOM / 224.3 / 290.2 (+29%)")?;
+    Ok(rows)
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct Table1Row {
+    pub model: Model,
+    pub fp16: crate::coordinator::simserve::SimResult,
+    pub awq: crate::coordinator::simserve::SimResult,
+    pub quick: crate::coordinator::simserve::SimResult,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig3_quick_is_conflict_free() {
+        let d = fig3(&mut std::io::sink()).unwrap();
+        assert_eq!(d.quick_conflicts, 0);
+        assert_eq!(d.fp16_conflicts, 0);
+        assert!(d.awq_conflicts > 100_000, "got {}", d.awq_conflicts);
+    }
+
+    #[test]
+    fn fig7_shape_holds_on_all_devices() {
+        let rows = fig7(&mut std::io::sink()).unwrap();
+        for gpu in Gpu::ALL {
+            let dev_rows: Vec<_> = rows.iter().filter(|r| r.gpu == gpu).collect();
+            // Small batch: quantized kernels beat fp16.
+            let b1 = dev_rows.iter().find(|r| r.batch == 1).unwrap();
+            assert!(b1.quick > b1.fp16 && b1.awq > b1.fp16, "{gpu:?} b1");
+            // Large batch: AWQ degrades below fp16; QUICK stays ahead of AWQ.
+            let b256 = dev_rows.iter().find(|r| r.batch == 256).unwrap();
+            assert!(b256.awq < b256.fp16, "{gpu:?} AWQ should lose at 256");
+            let speedup = b256.quick / b256.awq;
+            assert!(
+                (1.25..2.1).contains(&speedup),
+                "{gpu:?} QUICK/AWQ @256 = {speedup:.2}"
+            );
+        }
+    }
+
+    #[test]
+    fn fig8_fp16_oom_cutoffs() {
+        let rows = fig8(&mut std::io::sink()).unwrap();
+        // Mistral-7B on 4090: fp16 dies by 256, W4 survives (paper §4.2).
+        let m = |b: u64| rows.iter().find(|r| r.model == Model::Mistral7B && r.batch == b).unwrap();
+        assert_eq!(m(256).fp16, 0.0);
+        assert!(m(256).quick > 0.0);
+        // QUICK >= AWQ everywhere it runs.
+        for r in &rows {
+            if r.quick > 0.0 && r.awq > 0.0 {
+                assert!(r.quick >= r.awq * 0.99, "{:?} b{}", r.model, r.batch);
+            }
+        }
+    }
+}

@@ -1,0 +1,162 @@
+//! Shared-memory bank-conflict counter (the quantity of paper Fig. 3).
+//!
+//! NVIDIA shared memory on Ampere/Ada: 32 banks, 4 bytes wide, bank index =
+//! `(byte_addr / 4) % 32`. A warp memory instruction is split into *phases*
+//! of up to 32 lanes x 4 bytes (wider per-lane accesses issue multiple
+//! phases: 8 lanes/phase for 16-byte, 16 lanes/phase for 8-byte). Within a
+//! phase, lanes hitting the **same bank but different 32-bit words**
+//! serialize: the phase replays `degree` times where `degree` is the max
+//! number of distinct words mapped to any single bank. Lanes reading the
+//! *same* word broadcast for loads (no conflict); stores to the same word
+//! also complete in one replay (one lane wins — CUDA's multicast store
+//! rule), so the same distinct-words rule applies.
+
+/// Number of banks (Volta..Ada).
+pub const NUM_BANKS: usize = 32;
+/// Bank width, bytes.
+pub const BANK_BYTES: u64 = 4;
+
+/// Accumulates conflict statistics over a stream of warp accesses.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct BankCounter {
+    /// Warp-instruction phases issued.
+    pub phases: u64,
+    /// Extra serialized replays beyond the first transaction of each phase
+    /// (this is what Nsight reports as `shared_ld/st_bank_conflict`).
+    pub conflicts: u64,
+    /// Total transactions (phases + conflicts).
+    pub transactions: u64,
+}
+
+impl BankCounter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Account one warp instruction where each lane accesses
+    /// `bytes_per_lane` bytes starting at its address in `lane_addrs`
+    /// (byte addresses into shared memory). Returns the conflict degree
+    /// summed over the instruction's phases.
+    pub fn access(&mut self, lane_addrs: &[u64], bytes_per_lane: u64) -> u64 {
+        assert!(matches!(bytes_per_lane, 1 | 2 | 4 | 8 | 16));
+        // Lanes per phase so one phase moves <= 128 B.
+        let lanes_per_phase = (128 / bytes_per_lane).min(32) as usize;
+        let mut total_extra = 0;
+        for phase_lanes in lane_addrs.chunks(lanes_per_phase) {
+            // Each lane may touch ceil(bytes/4) words; for <=4 B it is one.
+            let words_per_lane = bytes_per_lane.div_ceil(BANK_BYTES).max(1);
+            let mut per_bank: [Vec<u64>; NUM_BANKS] = Default::default();
+            for &addr in phase_lanes {
+                for wi in 0..words_per_lane {
+                    let word = addr / BANK_BYTES + wi;
+                    let bank = (word % NUM_BANKS as u64) as usize;
+                    if !per_bank[bank].contains(&word) {
+                        per_bank[bank].push(word);
+                    }
+                }
+            }
+            let degree = per_bank.iter().map(Vec::len).max().unwrap_or(0).max(1) as u64;
+            self.phases += 1;
+            self.transactions += degree;
+            total_extra += degree - 1;
+        }
+        self.conflicts += total_extra;
+        total_extra
+    }
+
+    /// Average replay multiplier (1.0 = conflict-free).
+    pub fn multiplier(&self) -> f64 {
+        if self.phases == 0 {
+            1.0
+        } else {
+            self.transactions as f64 / self.phases as f64
+        }
+    }
+
+    pub fn merge(&mut self, other: &BankCounter) {
+        self.phases += other.phases;
+        self.conflicts += other.conflicts;
+        self.transactions += other.transactions;
+    }
+
+    /// Scale counts by `n` repetitions of the same pattern (tiles are
+    /// identical, so one representative tile is simulated and multiplied).
+    pub fn scaled(&self, n: u64) -> BankCounter {
+        BankCounter {
+            phases: self.phases * n,
+            conflicts: self.conflicts * n,
+            transactions: self.transactions * n,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conflict_free_unit_stride() {
+        // 32 lanes, 4 B each, consecutive: one word per bank.
+        let addrs: Vec<u64> = (0..32).map(|l| l * 4).collect();
+        let mut c = BankCounter::new();
+        assert_eq!(c.access(&addrs, 4), 0);
+        assert_eq!(c.multiplier(), 1.0);
+    }
+
+    #[test]
+    fn broadcast_same_word_is_free() {
+        let addrs = vec![128u64; 32];
+        let mut c = BankCounter::new();
+        assert_eq!(c.access(&addrs, 4), 0);
+    }
+
+    #[test]
+    fn stride_two_words_two_way() {
+        // 4-byte accesses at 8-byte stride: lanes 0&16 share bank 0 with
+        // different words -> 2-way conflict.
+        let addrs: Vec<u64> = (0..32).map(|l| l * 8).collect();
+        let mut c = BankCounter::new();
+        assert_eq!(c.access(&addrs, 4), 1);
+        assert_eq!(c.transactions, 2);
+    }
+
+    #[test]
+    fn stride_32_words_fully_serialized() {
+        // All 32 lanes hit bank 0 with distinct words: 32-way.
+        let addrs: Vec<u64> = (0..32).map(|l| l * 128).collect();
+        let mut c = BankCounter::new();
+        assert_eq!(c.access(&addrs, 4), 31);
+    }
+
+    #[test]
+    fn sixteen_byte_access_phases() {
+        // 16-byte per lane -> 8 lanes per phase, 4 phases per warp.
+        let addrs: Vec<u64> = (0..32).map(|l| l * 16).collect();
+        let mut c = BankCounter::new();
+        let extra = c.access(&addrs, 16);
+        assert_eq!(c.phases, 4);
+        // 8 lanes x 4 words each = 32 distinct words covering all banks once.
+        assert_eq!(extra, 0);
+    }
+
+    #[test]
+    fn padded_row_kills_conflicts() {
+        // Classic: 32x32 f32 tile column access. Row stride 32 words ->
+        // all lanes in one bank (31 extra). Padding to 33 words -> none.
+        let bad: Vec<u64> = (0..32).map(|l| l * 32 * 4).collect();
+        let good: Vec<u64> = (0..32).map(|l| l * 33 * 4).collect();
+        let mut c1 = BankCounter::new();
+        let mut c2 = BankCounter::new();
+        assert_eq!(c1.access(&bad, 4), 31);
+        assert_eq!(c2.access(&good, 4), 0);
+    }
+
+    #[test]
+    fn scaled_multiplies() {
+        let mut c = BankCounter::new();
+        c.access(&(0..32).map(|l| l * 8).collect::<Vec<_>>(), 4);
+        let s = c.scaled(10);
+        assert_eq!(s.conflicts, c.conflicts * 10);
+        assert_eq!(s.phases, c.phases * 10);
+    }
+}

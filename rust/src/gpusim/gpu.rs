@@ -1,0 +1,157 @@
+//! Device specification table — public datasheet numbers for the four GPUs
+//! of the paper's evaluation (Figs. 7–8, Table 1).
+
+/// One GPU model.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DeviceSpec {
+    pub name: &'static str,
+    /// Streaming multiprocessors.
+    pub sms: u32,
+    /// SM boost clock, GHz.
+    pub clock_ghz: f64,
+    /// Peak fp16 tensor-core throughput with fp32 accumulate, TFLOP/s.
+    /// (The dense, non-sparsity number — what GEMM kernels actually see.)
+    pub tc_tflops: f64,
+    /// Peak fp32 CUDA-core throughput, TFLOP/s.
+    pub fp32_tflops: f64,
+    /// Peak fp16 CUDA-core (half2 intrinsic) throughput, TFLOP/s — the pipe
+    /// the parallel dequantizer's FMAs actually run on.
+    pub fp16_alu_tflops: f64,
+    /// DRAM bandwidth, GB/s.
+    pub dram_gbps: f64,
+    /// Device memory, GiB.
+    pub mem_gib: f64,
+    /// L2 cache, MiB (governs weight-tile reuse across concurrent blocks).
+    pub l2_mib: f64,
+    /// Shared memory per SM, KiB (max carve-out).
+    pub smem_per_sm_kib: u32,
+    /// 32-bit registers per SM.
+    pub regs_per_sm: u32,
+    /// Max resident warps per SM.
+    pub max_warps_per_sm: u32,
+    /// Shared-memory bandwidth per SM, bytes/cycle (128 B/clk on all of
+    /// Ampere/Ada: 32 banks x 4 B).
+    pub smem_bytes_per_clk: u32,
+}
+
+impl DeviceSpec {
+    /// Aggregate shared-memory bandwidth, bytes/s.
+    pub fn smem_bw(&self) -> f64 {
+        self.sms as f64 * self.smem_bytes_per_clk as f64 * self.clock_ghz * 1e9
+    }
+
+    /// DRAM bandwidth in bytes/s.
+    pub fn dram_bw(&self) -> f64 {
+        self.dram_gbps * 1e9
+    }
+
+    /// Device memory in bytes.
+    pub fn mem_bytes(&self) -> f64 {
+        self.mem_gib * (1u64 << 30) as f64
+    }
+}
+
+/// The paper's four evaluation devices.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Gpu {
+    Rtx4090,
+    RtxA6000,
+    L40,
+    A100,
+}
+
+impl Gpu {
+    pub const ALL: [Gpu; 4] = [Gpu::Rtx4090, Gpu::RtxA6000, Gpu::L40, Gpu::A100];
+
+    pub fn spec(self) -> DeviceSpec {
+        match self {
+            // Ada AD102. 128 SM, 330 fp16 TC TFLOPs (165 with fp32 acc is
+            // the *marketing* split; AD10x does fp32-acc at full rate).
+            Gpu::Rtx4090 => DeviceSpec {
+                name: "RTX 4090",
+                sms: 128,
+                clock_ghz: 2.52,
+                tc_tflops: 165.2,
+                fp32_tflops: 82.6,
+                fp16_alu_tflops: 82.6,
+                dram_gbps: 1008.0,
+                mem_gib: 24.0,
+                l2_mib: 72.0,
+                smem_per_sm_kib: 100,
+                regs_per_sm: 65536,
+                max_warps_per_sm: 48,
+                smem_bytes_per_clk: 128,
+            },
+            // Ampere GA102, workstation.
+            Gpu::RtxA6000 => DeviceSpec {
+                name: "RTX A6000",
+                sms: 84,
+                clock_ghz: 1.80,
+                tc_tflops: 77.4,
+                fp32_tflops: 38.7,
+                fp16_alu_tflops: 77.4,
+                dram_gbps: 768.0,
+                mem_gib: 48.0,
+                l2_mib: 6.0,
+                smem_per_sm_kib: 100,
+                regs_per_sm: 65536,
+                max_warps_per_sm: 48,
+                smem_bytes_per_clk: 128,
+            },
+            // Ada AD102, datacenter.
+            Gpu::L40 => DeviceSpec {
+                name: "L40",
+                sms: 142,
+                clock_ghz: 2.49,
+                tc_tflops: 90.5,
+                fp32_tflops: 90.5,
+                fp16_alu_tflops: 90.5,
+                dram_gbps: 864.0,
+                mem_gib: 48.0,
+                l2_mib: 96.0,
+                smem_per_sm_kib: 100,
+                regs_per_sm: 65536,
+                max_warps_per_sm: 48,
+                smem_bytes_per_clk: 128,
+            },
+            // A100-SXM4-80GB (GA100).
+            Gpu::A100 => DeviceSpec {
+                name: "A100",
+                sms: 108,
+                clock_ghz: 1.41,
+                tc_tflops: 312.0,
+                fp32_tflops: 19.5,
+                fp16_alu_tflops: 78.0,
+                dram_gbps: 2039.0,
+                mem_gib: 80.0,
+                l2_mib: 40.0,
+                smem_per_sm_kib: 164,
+                regs_per_sm: 65536,
+                max_warps_per_sm: 64,
+                smem_bytes_per_clk: 128,
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_sanity() {
+        for g in Gpu::ALL {
+            let s = g.spec();
+            assert!(s.sms > 0 && s.tc_tflops > 10.0 && s.dram_gbps > 500.0);
+            assert!(s.smem_bw() > 1e12, "{}: smem bw too low", s.name);
+        }
+    }
+
+    #[test]
+    fn a100_has_most_dram_bw() {
+        let a100 = Gpu::A100.spec().dram_gbps;
+        for g in [Gpu::Rtx4090, Gpu::RtxA6000, Gpu::L40] {
+            assert!(a100 > g.spec().dram_gbps);
+        }
+    }
+}

@@ -1,0 +1,45 @@
+//! GPU kernel execution model — the simulation substrate that stands in for
+//! the paper's NVIDIA testbed (DESIGN.md §2, substitution table).
+//!
+//! The paper's evaluation is entirely microarchitectural: shared-memory bank
+//! conflicts (Fig. 3), mixed-precision GEMM TOPS across batch sizes and
+//! devices (Fig. 7), end-to-end decode throughput (Fig. 8), and
+//! vLLM-integrated serving throughput (Table 1). None of those quantities
+//! require silicon to reproduce *in shape*: they are deterministic functions
+//! of (a) the warp-level access patterns the kernel issues, (b) the tile
+//! schedule, and (c) device parameters (SMs, bandwidths, peak tensor-core
+//! throughput). This module implements exactly those three ingredients:
+//!
+//! * [`bank`] — the 32-bank shared-memory conflict counter (NVIDIA's
+//!   documented rule: one transaction per distinct 32-bit word per bank per
+//!   phase; conflict degree = serialized replays).
+//! * [`trace`] — warp access-pattern generators for `ldmatrix` loads, the
+//!   baseline kernel's dequant write-back stores, and QUICK's direct
+//!   DRAM→register loads.
+//! * [`gpu`] — device spec table (RTX 4090, RTX A6000, L40, A100-80G) from
+//!   public datasheets.
+//! * [`occupancy`] — active-warps-per-SM calculator (shared-memory and
+//!   register limits), reproducing §3.3's smem→register pressure shift.
+//! * [`kernel_model`] — tile-level latency model for the three kernels
+//!   (fp16 / AWQ baseline / QUICK) combining compute, DRAM, and
+//!   conflict-serialized shared-memory phases into TOPS.
+//! * [`e2e`] — per-decode-step latency and tokens/s for a full LLM
+//!   (Fig. 8), including the KV-cache/weights OOM predictor.
+//!
+//! Calibration constants (pipeline efficiencies) are centralized in
+//! [`kernel_model::Calib`] and documented in DESIGN.md §Perf — everything
+//! else is first-principles.
+
+pub mod ablation;
+pub mod bank;
+pub mod e2e;
+pub mod gpu;
+pub mod kernel_model;
+pub mod occupancy;
+pub mod report;
+pub mod trace;
+
+pub use bank::BankCounter;
+pub use e2e::{decode_step_latency, max_batch_before_oom, tokens_per_second, DecodeBreakdown};
+pub use gpu::{DeviceSpec, Gpu};
+pub use kernel_model::{Calib, KernelKind, KernelPerf, TileConfig};

@@ -1,0 +1,150 @@
+//! Warp-level shared-memory access-pattern generators.
+//!
+//! These produce the byte-address traces that [`super::bank::BankCounter`]
+//! scores. Each generator models one phase of one warp's work on one
+//! GEMM tile, derived from the actual data layouts in `crate::quant`:
+//!
+//! * [`ldmatrix_load`] — `ldmatrix.sync.aligned.m8n8.x4` reads of a fp16
+//!   tile resident in shared memory (both kernels use this for
+//!   *activations*; only the baseline uses it for weights).
+//! * [`awq_writeback`] — the baseline kernel's dequant write-back: each lane
+//!   holds 8 dequantized fp16 values from one packed u32 and stores them to
+//!   the tile's logical positions. Because the AWQ nibble order interleaves
+//!   columns (FT_ORDER) *and* dequantization expands data 4x, lanes scatter
+//!   2-byte values at stride 2 across the row — the bank-conflicted pattern
+//!   of paper Figs. 2–3.
+//! * [`quick_direct_load`] — QUICK's replacement: weights go DRAM→register,
+//!   so the shared-memory trace is *empty by construction*.
+
+use super::bank::BankCounter;
+use crate::quant::FT_ORDER;
+
+/// Bytes per fp16 element.
+const F16: u64 = 2;
+
+/// One `ldmatrix.m8n8.x4` issued by a full warp: four 8x8 fp16 matrices.
+/// Lane `l` supplies the base address of row `l % 8` of matrix `l / 8`
+/// and receives 16 bytes (one matrix row). `row_stride_elems` is the
+/// shared-memory row pitch of the tile in elements.
+///
+/// Returns the per-lane byte addresses (32 lanes, 16 B each).
+pub fn ldmatrix_load(row_stride_elems: u64, base: u64) -> Vec<u64> {
+    (0..32)
+        .map(|l| {
+            let (mat, row) = (l / 8, l % 8);
+            // Matrices tile an 16x16 region: mats 0,1 stack along rows,
+            // 2,3 the adjacent 8-column block (x4 layout).
+            let r = (mat % 2) * 8 + row;
+            let c = (mat / 2) * 8;
+            base + r * row_stride_elems * F16 + c * F16
+        })
+        .collect()
+}
+
+/// The baseline kernel's dequant write-back for one warp iteration.
+///
+/// Each lane dequantizes one packed u32 (8 int4 codes → 8 fp16) and stores
+/// the halves to their *logical* columns inside the smem tile. With the
+/// stock AWQ layout, nibble slot `p` holds logical column `FT_ORDER[p]`, so
+/// the eight 2-byte stores of a lane land at byte offsets
+/// `FT_ORDER[p] * 2` within the lane's 16-byte span: even/odd column pairs
+/// interleave and consecutive lanes' spans abut. The result is eight
+/// strided 2-byte store instructions per warp (one per nibble slot) instead
+/// of one coalesced 16-byte store — multiplied 4x versus the packed data
+/// volume by the dequant expansion (paper §2.3).
+///
+/// `lane_cols` = number of u32 words each lane processes per row chunk;
+/// `row_stride_elems` = smem row pitch. Appends every store phase to `c`
+/// and returns the number of warp store instructions issued.
+pub fn awq_writeback(
+    c: &mut BankCounter,
+    row_stride_elems: u64,
+    rows_per_warp: u64,
+) -> u64 {
+    let mut instrs = 0;
+    // One warp handles `rows_per_warp` tile rows; per row, 32 lanes cover
+    // 32 words = 256 fp16 columns. For each nibble slot p, all 32 lanes
+    // store lane-strided 2-byte values simultaneously.
+    for row in 0..rows_per_warp {
+        for p in 0..8u64 {
+            let col_in_word = FT_ORDER[p as usize] as u64;
+            let addrs: Vec<u64> = (0..32)
+                .map(|lane| {
+                    let word_base = lane * 8; // 8 fp16 per word span
+                    (row * row_stride_elems + word_base + col_in_word) * F16
+                })
+                .collect();
+            c.access(&addrs, 2);
+            instrs += 1;
+        }
+    }
+    instrs
+}
+
+/// QUICK's weight path: direct DRAM→register loads, no shared memory at
+/// all. Kept as an explicit (empty) generator so Fig. 3's "QUICK
+/// write-back = 0" row comes from the same machinery.
+pub fn quick_direct_load(_c: &mut BankCounter) -> u64 {
+    0 // zero shared-memory instructions by construction
+}
+
+/// Activation staging (both kernels): fp16 tile rows copied gmem→smem with
+/// 16-byte vectorized stores, unit stride — conflict-free when the pitch is
+/// a multiple of 32 banks. One instruction per 32 lanes x 16 B = 512 B row
+/// chunk.
+pub fn activation_store(c: &mut BankCounter, row_stride_elems: u64, rows: u64) -> u64 {
+    let mut instrs = 0;
+    let row_bytes = row_stride_elems * F16;
+    for row in 0..rows {
+        let mut off = 0;
+        while off < row_bytes {
+            let addrs: Vec<u64> =
+                (0..32).map(|l| row * row_bytes + off + l * 16).collect();
+            c.access(&addrs, 16);
+            off += 32 * 16;
+            instrs += 1;
+        }
+    }
+    instrs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ldmatrix_pitch_multiple_of_banks_conflicts() {
+        // Naive pitch 64 fp16 = 128 B: rows map to the same banks ->
+        // conflicts; XOR-swizzled/padded pitch 72 avoids them.
+        let mut bad = BankCounter::new();
+        bad.access(&ldmatrix_load(64, 0), 16);
+        let mut good = BankCounter::new();
+        good.access(&ldmatrix_load(72, 0), 16);
+        assert!(bad.conflicts > 0, "expected conflicts at pitch 64");
+        assert_eq!(good.conflicts, 0, "padded pitch must be conflict-free");
+    }
+
+    #[test]
+    fn awq_writeback_has_conflicts() {
+        let mut c = BankCounter::new();
+        let n = awq_writeback(&mut c, 256, 4);
+        assert_eq!(n, 32); // 4 rows x 8 nibble-slot stores
+        assert!(c.conflicts > 0, "dequant write-back must conflict");
+        assert!(c.multiplier() > 1.5, "got {}", c.multiplier());
+    }
+
+    #[test]
+    fn quick_has_zero_smem_traffic() {
+        let mut c = BankCounter::new();
+        assert_eq!(quick_direct_load(&mut c), 0);
+        assert_eq!(c.phases, 0);
+        assert_eq!(c.conflicts, 0);
+    }
+
+    #[test]
+    fn activation_store_conflict_free() {
+        let mut c = BankCounter::new();
+        activation_store(&mut c, 256, 8);
+        assert_eq!(c.conflicts, 0);
+    }
+}

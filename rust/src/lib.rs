@@ -1,0 +1,37 @@
+//! # quick-infer
+//!
+//! Full-system reproduction of **QUICK: Quantization-aware Interleaving and
+//! Conflict-free Kernel for efficient LLM inference** (Kim et al.,
+//! SqueezeBits, 2024) on a Rust + JAX + Pallas three-layer stack.
+//!
+//! Layer map (see `DESIGN.md`):
+//!
+//! * [`quant`] — offline 4-bit packing and the QUICK interleaving
+//!   permutations (paper §3.2, Figs. 4–6); byte-compatible with
+//!   `python/compile/kernels/pack.py`.
+//! * [`gpusim`] — cycle-approximate GPU kernel execution model: shared-memory
+//!   bank-conflict counting, occupancy, DRAM traffic, and tile schedules for
+//!   the fp16 / AWQ / QUICK kernels. Regenerates the paper's Figures 3, 7, 8
+//!   and Table 1 on a machine with no NVIDIA GPU.
+//! * [`model`] — LLM architecture tables (Mistral-7B … Llama-2-70B) and
+//!   per-layer GEMM shape/byte accounting, including the OOM predictor
+//!   behind Figure 8's missing fp16 bars.
+//! * [`workload`] — synthetic serving workloads (ShareGPT-like length
+//!   distributions, Poisson arrivals) for the Table 1 benchmark.
+//! * [`runtime`] — PJRT execution of the AOT artifacts emitted by
+//!   `python/compile/aot.py` (`artifacts/hlo/*.hlo.txt`).
+//! * [`coordinator`] — the serving engine: request router, continuous
+//!   batcher, paged KV-cache manager, prefill/decode scheduler, metrics.
+//!
+//! Python never runs on the request path: `make artifacts` AOT-lowers the
+//! JAX/Pallas model once, and the [`runtime`] executes the HLO from Rust.
+
+pub mod coordinator;
+pub mod gpusim;
+pub mod model;
+pub mod quant;
+pub mod runtime;
+pub mod tokenizer;
+pub mod util;
+pub mod figures;
+pub mod workload;

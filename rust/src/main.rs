@@ -1,0 +1,305 @@
+//! quick-infer CLI — leader entrypoint (std-only arg parsing).
+//!
+//! Subcommands:
+//! * `serve`    — run the PJRT-backed engine over a synthetic workload on
+//!   the AOT-compiled tiny model and print serving metrics.
+//! * `simulate` — regenerate a paper experiment (fig3 | fig7 | fig8 |
+//!   table1 | all) from the gpusim cost model and print paper-style rows.
+//! * `quantize` — offline packing demo: quantize + QUICK-interleave a
+//!   random matrix and report layouts.
+//! * `info`     — list artifacts and device specs.
+
+use anyhow::{bail, Result};
+
+use quick_infer::coordinator::{Engine, EngineConfig, GenerationRequest};
+use quick_infer::figures;
+use quick_infer::gpusim::{Calib, Gpu, KernelKind};
+use quick_infer::runtime::Runtime;
+use quick_infer::util::rng::Rng;
+use quick_infer::workload;
+
+const USAGE: &str = "\
+quick-infer — QUICK (2024) reproduction: conflict-free W4A16 inference stack
+
+USAGE:
+    quick-infer serve    [--artifacts DIR] [--kernel quick|awq|fp16]
+                         [--requests N] [--seed S]
+    quick-infer simulate [fig3|fig7|fig8|table1|all]
+    quick-infer profile  [--gpu 4090|a6000|l40|a100] [--m M] [--n N] [--k K]
+    quick-infer loadtest [--rates 1,2,4,8] [--requests N]
+    quick-infer generate --prompt TEXT [--max-new N] [--kernel K] [--temperature T]
+    quick-infer quantize [--k K] [--n N] [--group-size G]
+    quick-infer info     [--artifacts DIR]
+";
+
+/// Minimal flag parser: `--key value` pairs plus positional args.
+struct Args {
+    positional: Vec<String>,
+    flags: std::collections::HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Args> {
+        let mut positional = Vec::new();
+        let mut flags = std::collections::HashMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                let val = argv
+                    .get(i + 1)
+                    .ok_or_else(|| anyhow::anyhow!("flag --{key} needs a value"))?;
+                flags.insert(key.to_string(), val.clone());
+                i += 2;
+            } else {
+                positional.push(a.clone());
+                i += 1;
+            }
+        }
+        Ok(Args { positional, flags })
+    }
+
+    fn get(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    fn get_num<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad value for --{key}: '{s}'")),
+        }
+    }
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first().map(String::as_str) else {
+        print!("{USAGE}");
+        return Ok(());
+    };
+    let args = Args::parse(&argv[1..])?;
+    match cmd {
+        "serve" => serve(
+            &args.get("artifacts", "artifacts"),
+            &args.get("kernel", "quick"),
+            args.get_num("requests", 32usize)?,
+            args.get_num("seed", 0u64)?,
+        ),
+        "simulate" => simulate(args.positional.first().map(String::as_str).unwrap_or("all")),
+        "quantize" => quantize_demo(
+            args.get_num("k", 256usize)?,
+            args.get_num("n", 256usize)?,
+            args.get_num("group-size", 128usize)?,
+        ),
+        "profile" => profile_cmd(
+            &args.get("gpu", "4090"),
+            args.get_num("m", 64u64)?,
+            args.get_num("n", 8192u64)?,
+            args.get_num("k", 8192u64)?,
+        ),
+        "loadtest" => loadtest(&args.get("rates", "1,2,4,8,16"), args.get_num("requests", 200usize)?),
+        "generate" => generate(
+            &args.get("artifacts", "artifacts"),
+            &args.get("kernel", "quick"),
+            &args.get("prompt", "the quick brown fox"),
+            args.get_num("max-new", 16usize)?,
+            args.flags.get("temperature").map(|t| t.parse().unwrap_or(1.0)),
+        ),
+        "info" => info(&args.get("artifacts", "artifacts")),
+        "-h" | "--help" | "help" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command '{other}'\n{USAGE}"),
+    }
+}
+
+fn serve(artifacts: &str, kernel: &str, n_requests: usize, seed: u64) -> Result<()> {
+    let rt = Runtime::open(artifacts)?;
+    println!("platform: {}", rt.platform());
+    let mut engine = Engine::new(rt, EngineConfig { kernel: kernel.into(), max_queue: 1024, sample_seed: 0 })?;
+    // Prompts sized to the prefill window; generation budget bounded by
+    // the remaining context.
+    let max_prompt = engine.prefill_window() as u64;
+    let max_gen = (engine.max_context() as u64 - max_prompt).min(24);
+    let reqs = workload::tiny_workload(n_requests, max_prompt, max_gen, seed);
+    let mut rng = Rng::seed_from_u64(seed ^ 0xC0FFEE);
+
+    let t0 = std::time::Instant::now();
+    for r in &reqs {
+        let prompt: Vec<i32> =
+            (0..r.prompt_tokens).map(|_| rng.range_u64(0, 511) as i32).collect();
+        engine.submit(GenerationRequest {
+            id: r.id,
+            prompt,
+            max_new_tokens: r.gen_tokens as usize,
+            temperature: None,
+            eos_token: None,
+        })?;
+    }
+    engine.run_to_completion()?;
+    let wall = t0.elapsed().as_secs_f64();
+    println!("{}", engine.metrics.report(wall));
+    println!("completions: {}", engine.drain_completions().len());
+    Ok(())
+}
+
+fn simulate(which: &str) -> Result<()> {
+    let out = &mut std::io::stdout();
+    match which {
+        "fig3" => {
+            figures::fig3(out)?;
+        }
+        "fig7" => {
+            figures::fig7(out)?;
+        }
+        "fig8" => {
+            figures::fig8(out)?;
+        }
+        "table1" => {
+            figures::table1(out)?;
+        }
+        "all" => {
+            figures::fig3(out)?;
+            figures::fig7(out)?;
+            figures::fig8(out)?;
+            figures::table1(out)?;
+        }
+        other => bail!("unknown experiment '{other}' (fig3|fig7|fig8|table1|all)"),
+    }
+    Ok(())
+}
+
+fn quantize_demo(k: usize, n: usize, group_size: usize) -> Result<()> {
+    use quick_infer::quant;
+    let mut rng = Rng::seed_from_u64(7);
+    let w: Vec<f32> = (0..k * n).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect();
+    let t = quant::quantize_groupwise(&w, k, n, group_size);
+    let awq = quant::pack_awq(&t.codes, k, n);
+    let quick = quant::pack_quick(&t.codes, k, n);
+    let deq = quant::dequantize(&t);
+    let max_err = w.iter().zip(&deq).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+    println!("quantized {k}x{n} (group {group_size}):");
+    println!(
+        "  packed words: {} u32 ({} KiB, was {} KiB fp32)",
+        awq.len(),
+        awq.len() * 4 / 1024,
+        k * n * 4 / 1024
+    );
+    println!("  AWQ[0..4]   = {:08x?}", &awq[..4.min(awq.len())]);
+    println!("  QUICK[0..4] = {:08x?}", &quick[..4.min(quick.len())]);
+    println!("  max |w - dq(q(w))| = {max_err:.5}");
+    Ok(())
+}
+
+fn profile_cmd(gpu: &str, m: u64, n: u64, k: u64) -> Result<()> {
+    let dev = match gpu.to_ascii_lowercase().as_str() {
+        "4090" | "rtx4090" => Gpu::Rtx4090,
+        "a6000" => Gpu::RtxA6000,
+        "l40" => Gpu::L40,
+        "a100" => Gpu::A100,
+        other => bail!("unknown gpu '{other}' (4090|a6000|l40|a100)"),
+    }
+    .spec();
+    for kind in KernelKind::ALL {
+        let r = quick_infer::gpusim::report::profile(&dev, kind, m, n, k, &Calib::default());
+        print!("{}", r.render());
+        println!();
+    }
+    Ok(())
+}
+
+fn generate(
+    artifacts: &str,
+    kernel: &str,
+    prompt: &str,
+    max_new: usize,
+    temperature: Option<f32>,
+) -> Result<()> {
+    use quick_infer::tokenizer::default_tokenizer;
+    let tok = default_tokenizer();
+    let rt = Runtime::open(artifacts)?;
+    let mut engine = Engine::new(rt, EngineConfig { kernel: kernel.into(), max_queue: 4, sample_seed: 0 })?;
+    let ids = tok.encode(prompt);
+    anyhow::ensure!(
+        ids.len() + max_new <= engine.max_context(),
+        "prompt ({} tokens) + max_new ({max_new}) exceeds the tiny model's {}-token context",
+        ids.len(),
+        engine.max_context()
+    );
+    println!("prompt: {prompt:?} -> {} tokens", ids.len());
+    engine.submit(GenerationRequest {
+        id: 0,
+        prompt: ids,
+        max_new_tokens: max_new,
+        temperature,
+        eos_token: None,
+    })?;
+    engine.run_to_completion()?;
+    let c = engine.drain_completions().pop().expect("one completion");
+    println!("generated ids: {:?}", c.tokens);
+    println!("decoded:       {:?}", tok.decode(&c.tokens));
+    println!("(random-weight tiny model: output is gibberish by design — this demo\n exercises the text->tokens->PJRT->tokens->text path end to end)");
+    Ok(())
+}
+
+fn loadtest(rates: &str, n: usize) -> Result<()> {
+    use quick_infer::coordinator::simserve::{simulate_online, SimPolicy};
+    use quick_infer::model::Model;
+    use quick_infer::workload::ShareGptLike;
+    let dev = Gpu::RtxA6000.spec();
+    let spec = Model::Vicuna13B.spec();
+    println!("== latency vs offered load: {} on {} ({} reqs/point) ==", spec.name, dev.name, n);
+    println!("{:>8} {:>8} {:>12} {:>12} {:>12} {:>12}", "rate", "kernel", "p50 e2e", "p90 e2e", "p99 e2e", "tok/s");
+    for rate_s in rates.split(',') {
+        let rate: f64 = rate_s.trim().parse().map_err(|_| anyhow::anyhow!("bad rate '{rate_s}'"))?;
+        for kind in [KernelKind::Awq, KernelKind::Quick] {
+            let reqs = ShareGptLike::new().online(n, rate, 77);
+            let r = simulate_online(&dev, &spec, kind, &reqs, &SimPolicy::default(), &Calib::default());
+            println!(
+                "{:>8.1} {:>8} {:>11.2}s {:>11.2}s {:>11.2}s {:>12.1}",
+                rate,
+                kind.label(),
+                r.e2e_quantile_s(0.5),
+                r.e2e_quantile_s(0.9),
+                r.e2e_quantile_s(0.99),
+                r.gen_tok_per_s
+            );
+        }
+    }
+    Ok(())
+}
+
+fn info(artifacts: &str) -> Result<()> {
+    println!("== devices ==");
+    for g in Gpu::ALL {
+        let s = g.spec();
+        println!(
+            "  {:10} {:3} SMs  {:7.1} TC TFLOPs  {:6.0} GB/s  {:3.0} GiB",
+            s.name, s.sms, s.tc_tflops, s.dram_gbps, s.mem_gib
+        );
+    }
+    println!("== kernel model spot check (A100, 256x8192x8192) ==");
+    for kind in KernelKind::ALL {
+        let p = quick_infer::gpusim::kernel_model::model_gemm(
+            &Gpu::A100.spec(),
+            kind,
+            256,
+            8192,
+            8192,
+            &Calib::default(),
+        );
+        println!("  {:6} {:8.1} TOPS  {:.1} us", kind.label(), p.tops, p.latency_s * 1e6);
+    }
+    if let Ok(rt) = Runtime::open(artifacts) {
+        println!("== artifacts ({}) ==", artifacts);
+        for a in &rt.manifest.artifacts {
+            println!("  {:28} kind={:8} kernel={}", a.name, a.kind, a.kernel);
+        }
+    } else {
+        println!("(no artifacts dir at '{artifacts}'; run `make artifacts`)");
+    }
+    Ok(())
+}

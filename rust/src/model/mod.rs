@@ -1,0 +1,130 @@
+//! LLM architecture tables and per-layer GEMM/byte accounting.
+//!
+//! Figure 8 and Table 1 depend on the models only through (a) the GEMM
+//! shapes of one decode/prefill step as a function of batch size and (b)
+//! memory footprints (weights + KV cache) — both derivable from the
+//! published architecture hyperparameters tabulated here.
+
+mod specs;
+
+pub use specs::{LlmSpec, Model};
+
+/// One weight GEMM in a transformer forward pass: `y(M,N) = x(M,K) @ W(K,N)`
+/// where `M` = tokens in flight.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GemmShape {
+    pub name: &'static str,
+    pub k: u64,
+    pub n: u64,
+    /// How many times this GEMM runs per model forward (= n_layers for
+    /// per-layer projections, 1 for the LM head).
+    pub count: u64,
+}
+
+impl LlmSpec {
+    /// The weight GEMMs of one forward pass (token count supplied later as
+    /// M). Llama-family: fused-equivalent QKV (listed separately to keep
+    /// shapes exact), attention output, and the SwiGLU MLP triple.
+    pub fn gemms(&self) -> Vec<GemmShape> {
+        let d = self.d_model;
+        let kv_n = self.kv_heads * self.head_dim();
+        vec![
+            GemmShape { name: "wq", k: d, n: d, count: self.n_layers },
+            GemmShape { name: "wk", k: d, n: kv_n, count: self.n_layers },
+            GemmShape { name: "wv", k: d, n: kv_n, count: self.n_layers },
+            GemmShape { name: "wo", k: d, n: d, count: self.n_layers },
+            GemmShape { name: "w_gate", k: d, n: self.d_ff, count: self.n_layers },
+            GemmShape { name: "w_up", k: d, n: self.d_ff, count: self.n_layers },
+            GemmShape { name: "w_down", k: self.d_ff, n: d, count: self.n_layers },
+            GemmShape { name: "lm_head", k: d, n: self.vocab, count: 1 },
+        ]
+    }
+
+    pub fn head_dim(&self) -> u64 {
+        self.d_model / self.n_heads
+    }
+
+    /// Total parameters in the weight GEMMs (embedding excluded — it is a
+    /// lookup, not a GEMM, and is shared with lm_head in some checkpoints).
+    pub fn gemm_params(&self) -> u64 {
+        self.gemms().iter().map(|g| g.k * g.n * g.count).sum()
+    }
+
+    /// Approximate total parameter count (adds the embedding table).
+    pub fn total_params(&self) -> u64 {
+        self.gemm_params() + self.vocab * self.d_model
+    }
+
+    /// Weight bytes at the given precision (4-bit adds fp16 scales + packed
+    /// zeros per 128-group).
+    pub fn weight_bytes(&self, w4: bool) -> f64 {
+        let p = self.gemm_params() as f64;
+        let embed = (self.vocab * self.d_model) as f64 * 2.0; // always fp16
+        if w4 {
+            p * (0.5 + 2.5 / 128.0) + embed
+        } else {
+            p * 2.0 + embed
+        }
+    }
+
+    /// KV-cache bytes for `batch` sequences of `seq_len` tokens (fp16).
+    pub fn kv_bytes(&self, batch: u64, seq_len: u64) -> f64 {
+        (2 * self.n_layers * batch * seq_len * self.kv_heads * self.head_dim()) as f64
+            * 2.0
+    }
+
+    /// Peak activation bytes for a decode step at `batch` (rough: a few
+    /// d_ff-wide fp16 buffers per token in flight).
+    pub fn activation_bytes(&self, batch: u64) -> f64 {
+        (batch * (2 * self.d_ff + 4 * self.d_model)) as f64 * 2.0 * 2.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_counts_match_published() {
+        // Within 5% of the named sizes (embedding/untied-head conventions
+        // account for the slack).
+        let cases = [
+            (Model::Mistral7B, 7.2e9),
+            (Model::Vicuna13B, 13.0e9),
+            (Model::Llama2_13B, 13.0e9),
+            (Model::Llama33B, 32.5e9),
+            (Model::Llama2_70B, 69.0e9),
+        ];
+        for (m, want) in cases {
+            let got = m.spec().total_params() as f64;
+            let rel = (got - want).abs() / want;
+            assert!(rel < 0.08, "{:?}: {got:.3e} vs {want:.3e} ({rel:.2})", m);
+        }
+    }
+
+    #[test]
+    fn w4_weights_are_4x_smaller() {
+        let s = Model::Llama2_13B.spec();
+        let ratio = s.weight_bytes(false) / s.weight_bytes(true);
+        assert!((3.5..4.1).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn gqa_models_have_smaller_kv() {
+        let mistral = Model::Mistral7B.spec(); // 8 KV heads (GQA)
+        let llama13 = Model::Llama2_13B.spec(); // full MHA
+        let m = mistral.kv_bytes(1, 4096);
+        let l = llama13.kv_bytes(1, 4096);
+        assert!(m < l / 2.0, "GQA cache {m} not much smaller than MHA {l}");
+    }
+
+    #[test]
+    fn gemm_shapes_positive_and_tiled() {
+        for m in Model::ALL {
+            for g in m.spec().gemms() {
+                assert!(g.k >= 128 && g.n >= 128);
+                assert_eq!(g.k % 64, 0, "{:?}/{}", m, g.name);
+            }
+        }
+    }
+}

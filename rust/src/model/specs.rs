@@ -1,0 +1,100 @@
+//! Published hyperparameters for the paper's evaluation models.
+
+/// Architecture hyperparameters of one LLM.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LlmSpec {
+    pub name: &'static str,
+    pub vocab: u64,
+    pub d_model: u64,
+    pub n_layers: u64,
+    pub n_heads: u64,
+    /// KV heads (< n_heads for GQA models).
+    pub kv_heads: u64,
+    pub d_ff: u64,
+    /// Max context the checkpoint supports.
+    pub max_seq: u64,
+}
+
+/// The models of Figures 8 and Table 1, plus the tiny runnable config used
+/// by the end-to-end PJRT path (matching `python/compile/aot.py::CFG`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Model {
+    Mistral7B,
+    Vicuna13B,
+    Llama2_13B,
+    Llama33B,
+    Llama2_70B,
+    /// The AOT-compiled tiny Llama actually served by the Rust engine.
+    Tiny,
+}
+
+impl Model {
+    pub const ALL: [Model; 6] = [
+        Model::Mistral7B,
+        Model::Vicuna13B,
+        Model::Llama2_13B,
+        Model::Llama33B,
+        Model::Llama2_70B,
+        Model::Tiny,
+    ];
+
+    pub fn spec(self) -> LlmSpec {
+        match self {
+            Model::Mistral7B => LlmSpec {
+                name: "Mistral-7B",
+                vocab: 32000,
+                d_model: 4096,
+                n_layers: 32,
+                n_heads: 32,
+                kv_heads: 8,
+                d_ff: 14336,
+                max_seq: 8192,
+            },
+            // Vicuna-13B = fine-tuned LLaMA-13B.
+            Model::Vicuna13B | Model::Llama2_13B => LlmSpec {
+                name: if matches!(self, Model::Vicuna13B) {
+                    "Vicuna-13B"
+                } else {
+                    "LLaMA-2-13B"
+                },
+                vocab: 32000,
+                d_model: 5120,
+                n_layers: 40,
+                n_heads: 40,
+                kv_heads: 40,
+                d_ff: 13824,
+                max_seq: 4096,
+            },
+            Model::Llama33B => LlmSpec {
+                name: "LLaMA-33B",
+                vocab: 32000,
+                d_model: 6656,
+                n_layers: 60,
+                n_heads: 52,
+                kv_heads: 52,
+                d_ff: 17920,
+                max_seq: 2048,
+            },
+            Model::Llama2_70B => LlmSpec {
+                name: "LLaMA-2-70B",
+                vocab: 32000,
+                d_model: 8192,
+                n_layers: 80,
+                n_heads: 64,
+                kv_heads: 8,
+                d_ff: 28672,
+                max_seq: 4096,
+            },
+            Model::Tiny => LlmSpec {
+                name: "tiny-llama",
+                vocab: 512,
+                d_model: 256,
+                n_layers: 4,
+                n_heads: 4,
+                kv_heads: 4,
+                d_ff: 512,
+                max_seq: 64,
+            },
+        }
+    }
+}

@@ -1,0 +1,116 @@
+//! ldmatrix/mma-aware word interleaving (paper Fig. 4).
+//!
+//! Mirrors `pack.ldmatrix_fragment_perm` in Python — the permutation that
+//! reorders the `(K, N/8)` packed-word grid into the order in which the 32
+//! lanes of a warp consume B-operand fragments of consecutive
+//! `mma.m16n8k16` tiles, so each lane's fragment is DRAM-contiguous and the
+//! `ldmatrix` + shared-memory round-trip can be skipped.
+
+/// `mma.m16n8k16` fragment geometry (paper §3.2).
+pub const MMA_M: usize = 16;
+pub const MMA_N: usize = 8;
+pub const MMA_K: usize = 16;
+/// Threads per warp.
+pub const WARP_LANES: usize = 32;
+
+/// Build the fragment interleave permutation for a `(rows, n_words)` word
+/// grid. `perm[i]` = flat source index of the i-th word in the interleaved
+/// DRAM stream. Panics unless `rows % MMA_K == 0`.
+///
+/// Per (k_tile, n_word) tile of 16 rows x 1 word-column, `ldmatrix.m8n8.x2`
+/// semantics assign lane `l` row `l % 8` of sub-matrix `l / 8`; sub-matrices
+/// stack along K (rows 0–7, then 8–15 of the tile).
+pub fn ldmatrix_fragment_perm(rows: usize, n_words: usize) -> Vec<i64> {
+    assert!(rows % MMA_K == 0, "rows={rows} not a multiple of {MMA_K}");
+    let mut perm = Vec::with_capacity(rows * n_words);
+    for kt in 0..rows / MMA_K {
+        for nt in 0..n_words {
+            for lane in 0..MMA_K {
+                let (sub, r) = (lane / 8, lane % 8);
+                let row = kt * MMA_K + sub * 8 + r;
+                perm.push((row * n_words + nt) as i64);
+            }
+        }
+    }
+    perm
+}
+
+/// `out[i] = input[perm[i]]`.
+pub fn apply_word_perm(words: &[u32], perm: &[i64]) -> Vec<u32> {
+    assert_eq!(words.len(), perm.len());
+    perm.iter().map(|&p| words[p as usize]).collect()
+}
+
+/// Inverse scatter: `out[perm[i]] = stream[i]`.
+pub fn unapply_word_perm(stream: &[u32], perm: &[i64]) -> Vec<u32> {
+    assert_eq!(stream.len(), perm.len());
+    let mut out = vec![0u32; stream.len()];
+    for (i, &p) in perm.iter().enumerate() {
+        out[p as usize] = stream[i];
+    }
+    out
+}
+
+/// Invert a permutation.
+pub fn invert_perm(perm: &[i64]) -> Vec<i64> {
+    let mut inv = vec![0i64; perm.len()];
+    for (i, &p) in perm.iter().enumerate() {
+        inv[p as usize] = i as i64;
+    }
+    inv
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perm_is_bijection() {
+        let perm = ldmatrix_fragment_perm(64, 16);
+        let mut seen = vec![false; perm.len()];
+        for &p in &perm {
+            assert!(!seen[p as usize], "duplicate index {p}");
+            seen[p as usize] = true;
+        }
+        assert!(seen.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn tile_locality() {
+        // Every consecutive run of 16 stream words covers one word-column
+        // and 16 contiguous rows (the direct-DRAM-load unit).
+        let (k, w) = (32, 4);
+        let perm = ldmatrix_fragment_perm(k, w);
+        for t in (0..k * w).step_by(16) {
+            let cols: Vec<_> = perm[t..t + 16].iter().map(|p| p % w as i64).collect();
+            assert!(cols.windows(2).all(|c| c[0] == c[1]));
+            let mut rows: Vec<_> = perm[t..t + 16].iter().map(|p| p / w as i64).collect();
+            rows.sort_unstable();
+            let lo = rows[0];
+            assert_eq!(rows, (lo..lo + 16).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn apply_unapply_roundtrip() {
+        let perm = ldmatrix_fragment_perm(16, 2);
+        let words: Vec<u32> = (0..32).collect();
+        let stream = apply_word_perm(&words, &perm);
+        assert_eq!(unapply_word_perm(&stream, &perm), words);
+    }
+
+    #[test]
+    fn invert_is_inverse() {
+        let perm = ldmatrix_fragment_perm(16, 3);
+        let inv = invert_perm(&perm);
+        for i in 0..perm.len() {
+            assert_eq!(inv[perm[i] as usize], i as i64);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "not a multiple")]
+    fn rejects_unaligned_rows() {
+        ldmatrix_fragment_perm(17, 2);
+    }
+}

@@ -1,0 +1,32 @@
+//! Offline weight quantization, packing, and QUICK interleaving.
+//!
+//! This is the Rust twin of `python/compile/kernels/{quantize,pack}.py`:
+//! both sides must produce **byte-identical** buffers (enforced by the
+//! golden-file tests against `artifacts/golden/pack_*.bin`).
+//!
+//! The paper's offline transforms (§3.2):
+//!
+//! 1. *Dequant-aware nibble reorder* (Fig. 5) — pre-permute columns so the
+//!    FasterTransformer parallel i4→f16 dequantizer emits logical column
+//!    order without a shuffle.
+//! 2. *ldmatrix-aware fragment interleave* (Fig. 4) — permute packed words
+//!    into the order the 32 lanes of a warp consume `mma.m16n8k16`
+//!    B-fragments, enabling direct DRAM→register loads.
+//! 3. The composition (Fig. 6) — the two commute: (1) permutes nibbles
+//!    inside words, (2) permutes whole words.
+
+mod awq;
+mod interleave;
+mod pack;
+mod search;
+
+pub use awq::{dequantize, quantize_groupwise, QuantizedTensor, QBITS, QMAX};
+pub use interleave::{
+    apply_word_perm, invert_perm, ldmatrix_fragment_perm, unapply_word_perm,
+    MMA_K, MMA_M, MMA_N, WARP_LANES,
+};
+pub use search::{reconstruction_error, search_awq_scales};
+pub use pack::{
+    pack_awq, pack_linear, pack_qzeros, pack_quick, pack_quick_dequant_order,
+    pack_words, unpack_awq, unpack_quick, unpack_words, FT_ORDER, PACK_FACTOR,
+};

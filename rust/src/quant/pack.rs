@@ -1,0 +1,210 @@
+//! int4 → u32 word packing in the three layouts of `pack.py` (see the
+//! module docs in [`crate::quant`]). Byte-compatible with the Python side.
+
+use super::awq::QMAX;
+
+/// Nibbles per u32 word.
+pub const PACK_FACTOR: usize = 8;
+
+/// FasterTransformer parallel-dequant nibble order (paper Fig. 5):
+/// slot `p` of each word holds logical column `8j + FT_ORDER[p]`.
+pub const FT_ORDER: [usize; PACK_FACTOR] = [0, 2, 4, 6, 1, 3, 5, 7];
+
+fn check(codes: &[i32], k: usize, n: usize) {
+    assert_eq!(codes.len(), k * n, "code buffer size mismatch");
+    assert!(n % PACK_FACTOR == 0, "N={n} not a multiple of {PACK_FACTOR}");
+    debug_assert!(
+        codes.iter().all(|&c| c >= 0 && c <= QMAX),
+        "codes out of [0, 15]"
+    );
+}
+
+/// Pack `(k, n)` codes into `(k, n/8)` u32 words; `order[p]` = logical
+/// offset stored in nibble slot `p` (bits `4p..4p+4`).
+pub fn pack_words(codes: &[i32], k: usize, n: usize, order: &[usize; PACK_FACTOR]) -> Vec<u32> {
+    check(codes, k, n);
+    let w = n / PACK_FACTOR;
+    let mut out = vec![0u32; k * w];
+    for row in 0..k {
+        for wj in 0..w {
+            let mut word = 0u32;
+            for (p, &src) in order.iter().enumerate() {
+                let c = codes[row * n + wj * PACK_FACTOR + src] as u32;
+                word |= (c & 0xF) << (4 * p);
+            }
+            out[row * w + wj] = word;
+        }
+    }
+    out
+}
+
+/// Inverse of [`pack_words`].
+pub fn unpack_words(words: &[u32], k: usize, n: usize, order: &[usize; PACK_FACTOR]) -> Vec<i32> {
+    let w = n / PACK_FACTOR;
+    assert_eq!(words.len(), k * w);
+    let mut out = vec![0i32; k * n];
+    for row in 0..k {
+        for wj in 0..w {
+            let word = words[row * w + wj];
+            for (p, &dst) in order.iter().enumerate() {
+                out[row * n + wj * PACK_FACTOR + dst] = ((word >> (4 * p)) & 0xF) as i32;
+            }
+        }
+    }
+    out
+}
+
+const LINEAR_ORDER: [usize; PACK_FACTOR] = [0, 1, 2, 3, 4, 5, 6, 7];
+
+/// Layout 1: slot `i` holds logical column `8j + i`.
+pub fn pack_linear(codes: &[i32], k: usize, n: usize) -> Vec<u32> {
+    pack_words(codes, k, n, &LINEAR_ORDER)
+}
+
+/// Layout 2: stock AutoAWQ / FasterTransformer order.
+pub fn pack_awq(codes: &[i32], k: usize, n: usize) -> Vec<u32> {
+    pack_words(codes, k, n, &FT_ORDER)
+}
+
+pub fn unpack_awq(words: &[u32], k: usize, n: usize) -> Vec<i32> {
+    unpack_words(words, k, n, &FT_ORDER)
+}
+
+/// Layout 3a (Fig. 5): QUICK dequant-aware reorder — sequential in-kernel
+/// unpack yields logical order (columns pre-permuted offline).
+pub fn pack_quick_dequant_order(codes: &[i32], k: usize, n: usize) -> Vec<u32> {
+    pack_words(codes, k, n, &LINEAR_ORDER)
+}
+
+/// Full QUICK layout (Fig. 6): dequant-aware nibble order + ldmatrix-aware
+/// fragment interleave. Returns the 1-D DRAM-order word stream.
+///
+/// Perf pass §Perf iteration 2: the interleave is fused into the packing
+/// loop (the fragment permutation has the closed form
+/// `stream[(kt*W + wj)*16 + row%16] = words[row*W + wj]` — a (K/16, 16, W)
+/// → (K/16, W, 16) tile transpose at word granularity), avoiding the
+/// intermediate word buffer, the permutation vector, and the gather that
+/// the compositional path (`ldmatrix_fragment_perm` + `apply_word_perm`,
+/// still exported for tests/ablation) pays.
+pub fn pack_quick(codes: &[i32], k: usize, n: usize) -> Vec<u32> {
+    check(codes, k, n);
+    assert!(k % super::interleave::MMA_K == 0, "K must be a multiple of 16");
+    let w = n / PACK_FACTOR;
+    let mut stream = vec![0u32; k * w];
+    for row in 0..k {
+        let (kt, rr) = (row / 16, row % 16);
+        let src = &codes[row * n..(row + 1) * n];
+        for wj in 0..w {
+            let mut word = 0u32;
+            for p in 0..PACK_FACTOR {
+                word |= (src[wj * PACK_FACTOR + p] as u32 & 0xF) << (4 * p);
+            }
+            stream[(kt * w + wj) * 16 + rr] = word;
+        }
+    }
+    stream
+}
+
+/// Inverse of [`pack_quick`].
+pub fn unpack_quick(stream: &[u32], k: usize, n: usize) -> Vec<i32> {
+    let perm = super::interleave::ldmatrix_fragment_perm(k, n / PACK_FACTOR);
+    let words = super::interleave::unapply_word_perm(stream, &perm);
+    unpack_words(&words, k, n, &LINEAR_ORDER)
+}
+
+/// Bit-faithful AWQ `qzeros` packing: `(k/G, n)` integral zero-points →
+/// `(k/G, n/8)` u32 in FT order.
+pub fn pack_qzeros(zeros: &[f32], groups: usize, n: usize) -> Vec<u32> {
+    let as_codes: Vec<i32> = zeros
+        .iter()
+        .map(|&z| {
+            assert!(z >= 0.0 && z <= QMAX as f32 && z == z.trunc(), "bad zero {z}");
+            z as i32
+        })
+        .collect();
+    pack_words(&as_codes, groups, n, &FT_ORDER)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rand_codes(k: usize, n: usize, seed: u64) -> Vec<i32> {
+        let mut s = seed.wrapping_mul(0x2545F4914F6CDD1D) | 1;
+        (0..k * n)
+            .map(|_| {
+                s ^= s << 13;
+                s ^= s >> 7;
+                s ^= s << 17;
+                ((s >> 16) & 0xF) as i32
+            })
+            .collect()
+    }
+
+    #[test]
+    fn roundtrip_all_orders() {
+        let codes = rand_codes(32, 64, 1);
+        for order in [&LINEAR_ORDER, &FT_ORDER] {
+            let w = pack_words(&codes, 32, 64, order);
+            assert_eq!(unpack_words(&w, 32, 64, order), codes);
+        }
+    }
+
+    #[test]
+    fn awq_and_quick_bits_differ() {
+        let codes = rand_codes(16, 32, 2);
+        let a = pack_awq(&codes, 16, 32);
+        let q = pack_quick_dequant_order(&codes, 16, 32);
+        assert_ne!(a, q);
+        assert_eq!(unpack_awq(&a, 16, 32), codes);
+    }
+
+    #[test]
+    fn quick_full_roundtrip() {
+        let codes = rand_codes(48, 64, 5);
+        let stream = pack_quick(&codes, 48, 64);
+        assert_eq!(unpack_quick(&stream, 48, 64), codes);
+    }
+
+    #[test]
+    fn ft_order_even_odd_split() {
+        assert_eq!(&FT_ORDER[..4], &[0, 2, 4, 6]);
+        assert_eq!(&FT_ORDER[4..], &[1, 3, 5, 7]);
+    }
+
+    #[test]
+    fn single_word_bit_exact() {
+        // codes 0..7 packed linearly = 0x76543210
+        let codes: Vec<i32> = (0..8).collect();
+        let w = pack_linear(&codes, 1, 8);
+        assert_eq!(w, vec![0x7654_3210]);
+        // FT order: slot p holds FT_ORDER[p] -> 0x75316420
+        let a = pack_awq(&codes, 1, 8);
+        assert_eq!(a, vec![0x7531_6420]);
+    }
+}
+// (appended by the perf pass)
+#[cfg(test)]
+mod perf_equivalence {
+    use super::*;
+
+    #[test]
+    fn fused_pack_quick_equals_compositional_path() {
+        // The fused fast path must produce the exact stream of
+        // pack_quick_dequant_order + ldmatrix_fragment_perm + gather.
+        let mut s = 0x12345u64;
+        let (k, n) = (96, 64);
+        let codes: Vec<i32> = (0..k * n)
+            .map(|_| {
+                s ^= s << 13;
+                s ^= s >> 7;
+                s ^= s << 17;
+                ((s >> 16) & 0xF) as i32
+            })
+            .collect();
+        let words = pack_quick_dequant_order(&codes, k, n);
+        let perm = crate::quant::ldmatrix_fragment_perm(k, n / PACK_FACTOR);
+        let slow = crate::quant::apply_word_perm(&words, &perm);
+        assert_eq!(pack_quick(&codes, k, n), slow);
+    }
+}

@@ -1,0 +1,130 @@
+//! Activation-aware scale search (AWQ calibration) — Rust twin of
+//! `python/compile/kernels/awq_search.py`; same grid, same objective, so
+//! the two sides select the same exponent on the same data.
+
+use super::awq::{dequantize, quantize_groupwise};
+
+/// ||x@w - (x/s) @ dq(q(w*s))||_F over row-major buffers.
+/// x: (b, k); w: (k, n); s: (k,).
+pub fn reconstruction_error(
+    x: &[f32],
+    w: &[f32],
+    s: &[f32],
+    b: usize,
+    k: usize,
+    n: usize,
+    group_size: usize,
+) -> f64 {
+    assert_eq!(x.len(), b * k);
+    assert_eq!(w.len(), k * n);
+    assert_eq!(s.len(), k);
+    // w' = w * s (input-channel scaling), quant-dequant.
+    let mut ws: Vec<f32> = vec![0.0; k * n];
+    for row in 0..k {
+        for col in 0..n {
+            ws[row * n + col] = w[row * n + col] * s[row];
+        }
+    }
+    let t = quantize_groupwise(&ws, k, n, group_size);
+    let wq = dequantize(&t);
+
+    let mut err = 0.0f64;
+    for bi in 0..b {
+        for col in 0..n {
+            let mut reference = 0.0f64;
+            let mut got = 0.0f64;
+            for row in 0..k {
+                let xv = x[bi * k + row] as f64;
+                reference += xv * w[row * n + col] as f64;
+                got += xv / s[row] as f64 * wq[row * n + col] as f64;
+            }
+            let d = reference - got;
+            err += d * d;
+        }
+    }
+    err.sqrt()
+}
+
+/// Grid-search the AWQ exponent; returns (scales, best_alpha, best_err).
+/// Identical grid and normalization to the Python implementation.
+pub fn search_awq_scales(
+    x: &[f32],
+    w: &[f32],
+    b: usize,
+    k: usize,
+    n: usize,
+    group_size: usize,
+    n_grid: usize,
+) -> (Vec<f32>, f64, f64) {
+    // Mean |activation| per input channel.
+    let mut mag = vec![0f32; k];
+    for bi in 0..b {
+        for j in 0..k {
+            mag[j] += x[bi * k + j].abs();
+        }
+    }
+    for m in &mut mag {
+        *m = (*m / b as f32).max(1e-8);
+    }
+
+    let mut best = (vec![1.0f32; k], 0.0f64, f64::INFINITY);
+    for gi in 0..n_grid {
+        let alpha = gi as f64 / n_grid as f64;
+        let mut s: Vec<f32> = mag.iter().map(|&m| (m as f64).powf(alpha) as f32).collect();
+        let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+        for &v in &s {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        let norm = (hi * lo).sqrt();
+        for v in &mut s {
+            *v /= norm;
+        }
+        let err = reconstruction_error(x, w, &s, b, k, n, group_size);
+        if err < best.2 {
+            best = (s, alpha, err);
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn outlier_case(k: usize, n: usize, b: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::seed_from_u64(seed);
+        let w: Vec<f32> = (0..k * n).map(|_| (rng.normal() * 0.1) as f32).collect();
+        let mut x: Vec<f32> = (0..b * k).map(|_| rng.normal() as f32).collect();
+        for hot in [3usize, 17, 31, 45] {
+            for bi in 0..b {
+                x[bi * k + hot % k] *= 30.0;
+            }
+        }
+        (w, x)
+    }
+
+    #[test]
+    fn awq_beats_plain_with_outliers() {
+        let (k, n, b) = (64, 32, 16);
+        let (w, x) = outlier_case(k, n, b, 1);
+        let ones = vec![1.0f32; k];
+        let plain = reconstruction_error(&x, &w, &ones, b, k, n, 32);
+        let (_, alpha, best) = search_awq_scales(&x, &w, b, k, n, 32, 10);
+        assert!(best < plain * 0.95, "awq {best} vs plain {plain}");
+        assert!(alpha > 0.0);
+    }
+
+    #[test]
+    fn never_worse_than_plain() {
+        let mut rng = Rng::seed_from_u64(2);
+        let (k, n, b) = (32, 16, 8);
+        let w: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+        let x: Vec<f32> = (0..b * k).map(|_| rng.normal() as f32).collect();
+        let ones = vec![1.0f32; k];
+        let plain = reconstruction_error(&x, &w, &ones, b, k, n, 16);
+        let (_, _, best) = search_awq_scales(&x, &w, b, k, n, 16, 10);
+        assert!(best <= plain + 1e-9);
+    }
+}

@@ -1,0 +1,302 @@
+//! Typed view of `artifacts/manifest.json` (written by
+//! `python/compile/aot.py`), parsed with the std-only JSON substrate
+//! (`crate::util::json`).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// Tensor dtype/shape spec as emitted by the Python side.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub dtype: String,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(v: &Json) -> Result<Self> {
+        Ok(TensorSpec {
+            dtype: v.req("dtype")?.as_str()?.to_string(),
+            shape: v
+                .req("shape")?
+                .as_arr()?
+                .iter()
+                .map(|d| d.as_usize())
+                .collect::<Result<_>>()?,
+        })
+    }
+}
+
+/// A golden binary buffer reference.
+#[derive(Debug, Clone)]
+pub struct BinSpec {
+    pub path: String,
+    pub dtype: String,
+    pub shape: Vec<usize>,
+    pub sha256: String,
+}
+
+impl BinSpec {
+    fn from_json(v: &Json) -> Result<Self> {
+        Ok(BinSpec {
+            path: v.req("path")?.as_str()?.to_string(),
+            dtype: v.req("dtype")?.as_str()?.to_string(),
+            shape: v
+                .req("shape")?
+                .as_arr()?
+                .iter()
+                .map(|d| d.as_usize())
+                .collect::<Result<_>>()?,
+            sha256: v.req("sha256")?.as_str()?.to_string(),
+        })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct GoldenVectors {
+    pub args: Vec<BinSpec>,
+    pub outputs: Vec<BinSpec>,
+}
+
+/// One AOT-compiled HLO module.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub path: String,
+    /// "gemm" | "decode" | "prefill".
+    pub kind: String,
+    /// "quick" | "awq" | "fp16".
+    pub kernel: String,
+    pub batch: Option<u64>,
+    pub m: Option<u64>,
+    pub k: Option<u64>,
+    pub n: Option<u64>,
+    pub seq: Option<u64>,
+    pub max_seq: Option<u64>,
+    pub group_size: Option<u64>,
+    pub args: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub golden: Option<GoldenVectors>,
+}
+
+fn opt_u64(v: &Json, key: &str) -> Result<Option<u64>> {
+    match v.get(key) {
+        None | Some(Json::Null) => Ok(None),
+        Some(x) => Ok(Some(x.as_u64()?)),
+    }
+}
+
+impl ArtifactEntry {
+    fn from_json(v: &Json) -> Result<Self> {
+        let specs = |key: &str| -> Result<Vec<TensorSpec>> {
+            v.req(key)?.as_arr()?.iter().map(TensorSpec::from_json).collect()
+        };
+        let golden = match v.get("golden") {
+            None | Some(Json::Null) => None,
+            Some(g) => Some(GoldenVectors {
+                args: g.req("args")?.as_arr()?.iter().map(BinSpec::from_json).collect::<Result<_>>()?,
+                outputs: g
+                    .req("outputs")?
+                    .as_arr()?
+                    .iter()
+                    .map(BinSpec::from_json)
+                    .collect::<Result<_>>()?,
+            }),
+        };
+        Ok(ArtifactEntry {
+            name: v.req("name")?.as_str()?.to_string(),
+            path: v.req("path")?.as_str()?.to_string(),
+            kind: v.req("kind")?.as_str()?.to_string(),
+            kernel: v.req("kernel")?.as_str()?.to_string(),
+            batch: opt_u64(v, "batch")?,
+            m: opt_u64(v, "m")?,
+            k: opt_u64(v, "k")?,
+            n: opt_u64(v, "n")?,
+            seq: opt_u64(v, "seq")?,
+            max_seq: opt_u64(v, "max_seq")?,
+            group_size: opt_u64(v, "group_size")?,
+            args: specs("args")?,
+            outputs: specs("outputs")?,
+            golden,
+        })
+    }
+}
+
+/// The tiny-model config the artifacts were built with.
+#[derive(Debug, Clone)]
+pub struct ModelConfigJson {
+    pub vocab: u64,
+    pub d_model: u64,
+    pub n_layers: u64,
+    pub n_heads: u64,
+    pub d_ff: u64,
+    pub max_seq: u64,
+    pub group_size: u64,
+}
+
+/// Golden packed-weight buffers for the quant cross-check tests.
+#[derive(Debug, Clone, Default)]
+pub struct PackGolden {
+    pub k: usize,
+    pub n: usize,
+    pub group_size: usize,
+    pub w: Option<BinSpec>,
+    pub codes: Option<BinSpec>,
+    pub scales: Option<BinSpec>,
+    pub zeros: Option<BinSpec>,
+    pub awq_words: Option<BinSpec>,
+    pub quick_words: Option<BinSpec>,
+    pub quick_stream: Option<BinSpec>,
+    pub perm: Option<BinSpec>,
+    pub qzeros: Option<BinSpec>,
+    pub dequant: Option<BinSpec>,
+}
+
+impl PackGolden {
+    fn from_json(v: &Json) -> Result<Self> {
+        let bin = |key: &str| -> Result<Option<BinSpec>> {
+            match v.get(key) {
+                None | Some(Json::Null) => Ok(None),
+                Some(b) => Ok(Some(BinSpec::from_json(b)?)),
+            }
+        };
+        Ok(PackGolden {
+            k: v.req("k")?.as_usize()?,
+            n: v.req("n")?.as_usize()?,
+            group_size: v.req("group_size")?.as_usize()?,
+            w: bin("w")?,
+            codes: bin("codes")?,
+            scales: bin("scales")?,
+            zeros: bin("zeros")?,
+            awq_words: bin("awq_words")?,
+            quick_words: bin("quick_words")?,
+            quick_stream: bin("quick_stream")?,
+            perm: bin("perm")?,
+            qzeros: bin("qzeros")?,
+            dequant: bin("dequant")?,
+        })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub version: u64,
+    pub seed: u64,
+    pub model_config: ModelConfigJson,
+    pub artifacts: Vec<ArtifactEntry>,
+    pub pack_golden: PackGolden,
+}
+
+impl Manifest {
+    pub fn load(artifacts_dir: &Path) -> Result<(Self, PathBuf)> {
+        let path = artifacts_dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let v = Json::parse(&text).context("parsing manifest.json")?;
+
+        let mc = v.req("model_config")?;
+        let model_config = ModelConfigJson {
+            vocab: mc.req("vocab")?.as_u64()?,
+            d_model: mc.req("d_model")?.as_u64()?,
+            n_layers: mc.req("n_layers")?.as_u64()?,
+            n_heads: mc.req("n_heads")?.as_u64()?,
+            d_ff: mc.req("d_ff")?.as_u64()?,
+            max_seq: mc.req("max_seq")?.as_u64()?,
+            group_size: mc.req("group_size")?.as_u64()?,
+        };
+        let artifacts = v
+            .req("artifacts")?
+            .as_arr()?
+            .iter()
+            .map(ArtifactEntry::from_json)
+            .collect::<Result<_>>()?;
+        let pack_golden = match v.get("pack_golden") {
+            Some(g) if g.get("k").is_some() => PackGolden::from_json(g)?,
+            _ => PackGolden::default(),
+        };
+        Ok((
+            Manifest {
+                version: v.req("version")?.as_u64()?,
+                seed: v.req("seed")?.as_u64()?,
+                model_config,
+                artifacts,
+                pack_golden,
+            },
+            artifacts_dir.to_path_buf(),
+        ))
+    }
+
+    pub fn find(&self, name: &str) -> Option<&ArtifactEntry> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// Decode artifact for a kernel at the given lane count.
+    pub fn decode_artifact(&self, kernel: &str, batch: u64) -> Option<&ArtifactEntry> {
+        self.artifacts
+            .iter()
+            .find(|a| a.kind == "decode" && a.kernel == kernel && a.batch == Some(batch))
+    }
+
+    /// All decode batch sizes available for `kernel`, ascending.
+    pub fn decode_batches(&self, kernel: &str) -> Vec<u64> {
+        let mut v: Vec<u64> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.kind == "decode" && a.kernel == kernel)
+            .filter_map(|a| a.batch)
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
+    pub fn prefill_artifact(&self, kernel: &str) -> Option<&ArtifactEntry> {
+        self.artifacts
+            .iter()
+            .find(|a| a.kind == "prefill" && a.kernel == kernel)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DOC: &str = r#"{
+      "version": 1, "seed": 9,
+      "model_config": {"vocab": 512, "d_model": 256, "n_layers": 4,
+                        "n_heads": 4, "d_ff": 512, "max_seq": 64,
+                        "group_size": 128},
+      "artifacts": [
+        {"name": "decode_quick_b2", "path": "hlo/decode_quick_b2.hlo.txt",
+         "kind": "decode", "kernel": "quick", "batch": 2, "max_seq": 64,
+         "args": [{"dtype": "int32", "shape": [2]}],
+         "outputs": [{"dtype": "float32", "shape": [2, 512]}]},
+        {"name": "prefill_quick_b1_s16", "path": "hlo/p.hlo.txt",
+         "kind": "prefill", "kernel": "quick", "batch": 1, "seq": 16,
+         "args": [], "outputs": []}
+      ],
+      "pack_golden": {}
+    }"#;
+
+    #[test]
+    fn parses_manifest_doc() {
+        let dir = std::env::temp_dir().join(format!("qi_manifest_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), DOC).unwrap();
+        let (m, _) = Manifest::load(&dir).unwrap();
+        assert_eq!(m.version, 1);
+        assert_eq!(m.model_config.vocab, 512);
+        assert_eq!(m.decode_batches("quick"), vec![2]);
+        assert!(m.decode_artifact("quick", 2).is_some());
+        assert!(m.decode_artifact("quick", 4).is_none());
+        let p = m.prefill_artifact("quick").unwrap();
+        assert_eq!(p.seq, Some(16));
+        assert_eq!(m.find("decode_quick_b2").unwrap().args[0].elements(), 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,176 @@
+//! PJRT runtime: load and execute the AOT artifacts from Rust.
+//!
+//! The flow (from /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. Artifacts were lowered with
+//! `return_tuple=True`, so every execution returns a single tuple literal
+//! that we decompose.
+//!
+//! `PjRtLoadedExecutable` holds raw PJRT pointers and is not `Sync`; the
+//! [`Runtime`] is therefore owned by a single engine thread (the
+//! coordinator talks to it via channels — see `coordinator::engine`).
+
+pub mod manifest;
+pub mod tensor;
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+pub use manifest::{ArtifactEntry, Manifest, TensorSpec};
+pub use tensor::HostTensor;
+
+/// Execution statistics for one artifact.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ExecStats {
+    pub executions: u64,
+    pub total_exec_s: f64,
+    pub compile_s: f64,
+}
+
+/// Compiles and runs AOT artifacts on the PJRT CPU client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    root: PathBuf,
+    pub manifest: Manifest,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    stats: HashMap<String, ExecStats>,
+}
+
+impl Runtime {
+    /// Open the artifacts directory (must contain `manifest.json`).
+    pub fn open(artifacts_dir: impl Into<PathBuf>) -> Result<Self> {
+        let root: PathBuf = artifacts_dir.into();
+        let (manifest, root) = Manifest::load(&root)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Runtime { client, root, manifest, cache: HashMap::new(), stats: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) the named artifact.
+    pub fn ensure_compiled(&mut self, name: &str) -> Result<()> {
+        if self.cache.contains_key(name) {
+            return Ok(());
+        }
+        let entry = self
+            .manifest
+            .find(name)
+            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?;
+        let path = self.root.join(&entry.path);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parsing {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        let dt = t0.elapsed().as_secs_f64();
+        self.cache.insert(name.to_string(), exe);
+        self.stats.entry(name.to_string()).or_default().compile_s += dt;
+        Ok(())
+    }
+
+    /// Execute an artifact with host tensors; returns the decomposed tuple
+    /// outputs as host tensors. Arguments are validated against the
+    /// manifest specs first — the PJRT CPU client does *not* reject
+    /// dtype/shape mismatches reliably (it can reinterpret buffers), so
+    /// the runtime is the enforcement point.
+    pub fn execute(&mut self, name: &str, args: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let entry = self
+            .manifest
+            .find(name)
+            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?;
+        anyhow::ensure!(
+            args.len() == entry.args.len(),
+            "artifact '{name}' wants {} args, got {}",
+            entry.args.len(),
+            args.len()
+        );
+        for (i, (spec, t)) in entry.args.iter().zip(args).enumerate() {
+            anyhow::ensure!(
+                spec.dtype == t.dtype(),
+                "artifact '{name}' arg {i}: expected {} got {}",
+                spec.dtype,
+                t.dtype()
+            );
+            anyhow::ensure!(
+                spec.shape == t.shape(),
+                "artifact '{name}' arg {i}: expected shape {:?} got {:?}",
+                spec.shape,
+                t.shape()
+            );
+        }
+        let lits: Vec<xla::Literal> = args
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()
+            .context("marshalling args")?;
+        let out = self.execute_literals(name, &lits)?;
+        out.iter().map(HostTensor::from_literal).collect()
+    }
+
+    /// Execute with pre-built literals (hot path — avoids re-marshalling
+    /// static args like packed weights).
+    pub fn execute_literals<L: std::borrow::Borrow<xla::Literal>>(
+        &mut self,
+        name: &str,
+        args: &[L],
+    ) -> Result<Vec<xla::Literal>> {
+        self.ensure_compiled(name)?;
+        let entry = self.manifest.find(name).unwrap();
+        anyhow::ensure!(
+            args.len() == entry.args.len(),
+            "artifact '{name}' wants {} args, got {}",
+            entry.args.len(),
+            args.len()
+        );
+        let exe = self.cache.get(name).unwrap();
+        let t0 = Instant::now();
+        let result = exe
+            .execute::<L>(args)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result of {name}: {e:?}"))?;
+        let outs = tuple
+            .to_tuple()
+            .map_err(|e| anyhow!("untupling result of {name}: {e:?}"))?;
+        let dt = t0.elapsed().as_secs_f64();
+        let s = self.stats.entry(name.to_string()).or_default();
+        s.executions += 1;
+        s.total_exec_s += dt;
+        Ok(outs)
+    }
+
+    /// Load the golden inputs of an artifact from disk.
+    pub fn golden_args(&self, name: &str) -> Result<Vec<HostTensor>> {
+        let entry = self.manifest.find(name).ok_or_else(|| anyhow!("unknown '{name}'"))?;
+        let golden = entry
+            .golden
+            .as_ref()
+            .ok_or_else(|| anyhow!("artifact '{name}' has no golden vectors"))?;
+        let dir = self.root.join("golden");
+        golden.args.iter().map(|b| HostTensor::from_bin(&dir, b)).collect()
+    }
+
+    /// Load the golden expected outputs of an artifact.
+    pub fn golden_outputs(&self, name: &str) -> Result<Vec<HostTensor>> {
+        let entry = self.manifest.find(name).ok_or_else(|| anyhow!("unknown '{name}'"))?;
+        let golden = entry
+            .golden
+            .as_ref()
+            .ok_or_else(|| anyhow!("artifact '{name}' has no golden vectors"))?;
+        let dir = self.root.join("golden");
+        golden.outputs.iter().map(|b| HostTensor::from_bin(&dir, b)).collect()
+    }
+
+    pub fn stats(&self) -> &HashMap<String, ExecStats> {
+        &self.stats
+    }
+}

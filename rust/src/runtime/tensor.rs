@@ -1,0 +1,167 @@
+//! Host-side tensors and Literal marshalling.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+use xla::Literal;
+
+use super::manifest::BinSpec;
+
+/// A host tensor in one of the dtypes the artifacts use.
+#[derive(Debug, Clone, PartialEq)]
+pub enum HostTensor {
+    F32(Vec<f32>, Vec<usize>),
+    I32(Vec<i32>, Vec<usize>),
+    U32(Vec<u32>, Vec<usize>),
+}
+
+fn dims_i64(shape: &[usize]) -> Vec<i64> {
+    shape.iter().map(|&d| d as i64).collect()
+}
+
+impl HostTensor {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32(_, s) | HostTensor::I32(_, s) | HostTensor::U32(_, s) => s,
+        }
+    }
+
+    pub fn elements(&self) -> usize {
+        self.shape().iter().product()
+    }
+
+    pub fn dtype(&self) -> &'static str {
+        match self {
+            HostTensor::F32(..) => "float32",
+            HostTensor::I32(..) => "int32",
+            HostTensor::U32(..) => "uint32",
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32(v, _) => Ok(v),
+            other => bail!("expected f32 tensor, got {}", other.dtype()),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            HostTensor::I32(v, _) => Ok(v),
+            other => bail!("expected i32 tensor, got {}", other.dtype()),
+        }
+    }
+
+    /// Convert to an XLA literal with this tensor's shape.
+    pub fn to_literal(&self) -> Result<Literal> {
+        let lit = match self {
+            HostTensor::F32(v, s) => Literal::vec1(v).reshape(&dims_i64(s)),
+            HostTensor::I32(v, s) => Literal::vec1(v).reshape(&dims_i64(s)),
+            HostTensor::U32(v, s) => Literal::vec1(v).reshape(&dims_i64(s)),
+        };
+        lit.map_err(|e| anyhow::anyhow!("literal reshape: {e:?}"))
+    }
+
+    /// Read a literal back to the host (dtype inferred from the literal).
+    pub fn from_literal(lit: &Literal) -> Result<HostTensor> {
+        let shape = lit
+            .array_shape()
+            .map_err(|e| anyhow::anyhow!("literal shape: {e:?}"))?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        use xla::ElementType as ET;
+        let t = match shape.ty() {
+            ET::F32 => HostTensor::F32(
+                lit.to_vec().map_err(|e| anyhow::anyhow!("{e:?}"))?,
+                dims,
+            ),
+            ET::S32 => HostTensor::I32(
+                lit.to_vec().map_err(|e| anyhow::anyhow!("{e:?}"))?,
+                dims,
+            ),
+            ET::U32 => HostTensor::U32(
+                lit.to_vec().map_err(|e| anyhow::anyhow!("{e:?}"))?,
+                dims,
+            ),
+            other => bail!("unsupported literal dtype {other:?}"),
+        };
+        Ok(t)
+    }
+
+    /// Load a golden `.bin` buffer (raw little-endian) per its spec.
+    pub fn from_bin(dir: &Path, spec: &BinSpec) -> Result<HostTensor> {
+        let path = dir.join(&spec.path);
+        let bytes = std::fs::read(&path).with_context(|| format!("reading {path:?}"))?;
+        let n: usize = spec.shape.iter().product::<usize>().max(1);
+        let t = match spec.dtype.as_str() {
+            "float32" => {
+                anyhow::ensure!(bytes.len() == n * 4, "size mismatch for {path:?}");
+                HostTensor::F32(
+                    bytes.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect(),
+                    spec.shape.clone(),
+                )
+            }
+            "int32" => HostTensor::I32(
+                bytes.chunks_exact(4).map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect(),
+                spec.shape.clone(),
+            ),
+            "uint32" => HostTensor::U32(
+                bytes.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect(),
+                spec.shape.clone(),
+            ),
+            "int64" => {
+                // Narrow to i32 (perm indices fit comfortably).
+                HostTensor::I32(
+                    bytes
+                        .chunks_exact(8)
+                        .map(|c| i64::from_le_bytes(c.try_into().unwrap()) as i32)
+                        .collect(),
+                    spec.shape.clone(),
+                )
+            }
+            other => bail!("unsupported golden dtype {other}"),
+        };
+        anyhow::ensure!(t.elements() == n, "element count mismatch for {path:?}");
+        Ok(t)
+    }
+
+    /// Max |a-b| between two f32 tensors.
+    pub fn max_abs_diff(&self, other: &HostTensor) -> Result<f32> {
+        let (a, b) = (self.as_f32()?, other.as_f32()?);
+        anyhow::ensure!(a.len() == b.len(), "length mismatch");
+        Ok(a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip_through_literal() {
+        let t = HostTensor::F32(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], vec![2, 3]);
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn i32_roundtrip_through_literal() {
+        let t = HostTensor::I32(vec![-1, 0, 7, 42], vec![4]);
+        let back = HostTensor::from_literal(&t.to_literal().unwrap()).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn u32_roundtrip_through_literal() {
+        let t = HostTensor::U32(vec![0xDEAD_BEEF, 1, 2, 3], vec![2, 2]);
+        let back = HostTensor::from_literal(&t.to_literal().unwrap()).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn max_abs_diff_works() {
+        let a = HostTensor::F32(vec![1.0, 2.0], vec![2]);
+        let b = HostTensor::F32(vec![1.5, 2.0], vec![2]);
+        assert_eq!(a.max_abs_diff(&b).unwrap(), 0.5);
+    }
+}

@@ -1,0 +1,201 @@
+//! Byte-level BPE tokenizer (substrate): the tiny AOT model has a 512-slot
+//! vocabulary — 256 raw bytes + up to 254 learned merges + 2 specials —
+//! giving the serving stack a real text-in/text-out path
+//! (`quick-infer generate --prompt "..."`).
+//!
+//! Training is standard BPE: repeatedly merge the most frequent adjacent
+//! token pair (ties broken deterministically by pair value) until the
+//! vocabulary is full or no pair repeats.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+pub const BOS: i32 = 510;
+pub const EOS: i32 = 511;
+const FIRST_MERGE: i32 = 256;
+
+/// A trained tokenizer: merge table + decode table.
+#[derive(Debug, Clone)]
+pub struct Tokenizer {
+    /// (left, right) -> merged id, in training order.
+    merges: Vec<((i32, i32), i32)>,
+    /// token id -> byte expansion.
+    decode_table: Vec<Vec<u8>>,
+    vocab_size: usize,
+}
+
+impl Tokenizer {
+    /// Train on a corpus with the given total vocabulary size (<= 512;
+    /// ids 510/511 are reserved for BOS/EOS).
+    pub fn train(corpus: &str, vocab_size: usize) -> Result<Tokenizer> {
+        if !(257..=512).contains(&vocab_size) {
+            bail!("vocab_size must be in 257..=512");
+        }
+        let max_merges = vocab_size.saturating_sub(258); // minus bytes + specials
+        let mut tokens: Vec<i32> = corpus.bytes().map(|b| b as i32).collect();
+        let mut merges = Vec::new();
+        let mut decode_table: Vec<Vec<u8>> = (0..=255u8).map(|b| vec![b]).collect();
+
+        for mi in 0..max_merges {
+            // Count adjacent pairs.
+            let mut counts: HashMap<(i32, i32), u32> = HashMap::new();
+            for w in tokens.windows(2) {
+                *counts.entry((w[0], w[1])).or_default() += 1;
+            }
+            let Some((&pair, &cnt)) = counts
+                .iter()
+                .max_by_key(|(&(a, b), &c)| (c, std::cmp::Reverse((a, b))))
+            else {
+                break;
+            };
+            if cnt < 2 {
+                break; // nothing repeats; further merges are pointless
+            }
+            let id = FIRST_MERGE + mi as i32;
+            merges.push((pair, id));
+            let mut expansion = decode_table[pair.0 as usize].clone();
+            expansion.extend_from_slice(&decode_table[pair.1 as usize]);
+            decode_table.push(expansion);
+
+            // Apply the merge in place.
+            let mut out = Vec::with_capacity(tokens.len());
+            let mut i = 0;
+            while i < tokens.len() {
+                if i + 1 < tokens.len() && (tokens[i], tokens[i + 1]) == pair {
+                    out.push(id);
+                    i += 2;
+                } else {
+                    out.push(tokens[i]);
+                    i += 1;
+                }
+            }
+            tokens = out;
+        }
+        Ok(Tokenizer { merges, decode_table, vocab_size })
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.vocab_size
+    }
+
+    pub fn n_merges(&self) -> usize {
+        self.merges.len()
+    }
+
+    /// Encode text to token ids (no specials added).
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        let mut tokens: Vec<i32> = text.bytes().map(|b| b as i32).collect();
+        for &(pair, id) in &self.merges {
+            if tokens.len() < 2 {
+                break;
+            }
+            let mut out = Vec::with_capacity(tokens.len());
+            let mut i = 0;
+            while i < tokens.len() {
+                if i + 1 < tokens.len() && (tokens[i], tokens[i + 1]) == pair {
+                    out.push(id);
+                    i += 2;
+                } else {
+                    out.push(tokens[i]);
+                    i += 1;
+                }
+            }
+            tokens = out;
+        }
+        tokens
+    }
+
+    /// Decode token ids back to text (specials skipped; invalid bytes are
+    /// replaced, never panic).
+    pub fn decode(&self, tokens: &[i32]) -> String {
+        let mut bytes = Vec::new();
+        for &t in tokens {
+            if t == BOS || t == EOS {
+                continue;
+            }
+            if let Some(exp) = self.decode_table.get(t as usize) {
+                bytes.extend_from_slice(exp);
+            }
+        }
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+}
+
+/// A deterministic default tokenizer trained on an embedded corpus —
+/// enough structure for demos without external data.
+pub fn default_tokenizer() -> Tokenizer {
+    const CORPUS: &str = "the quick brown fox jumps over the lazy dog. \
+        quantization aware interleaving and conflict free kernels for \
+        efficient large language model inference. the quantized weights \
+        are reordered offline to match the matrix multiply accumulate \
+        fragment pattern so that the shared memory write back and its \
+        bank conflicts are eliminated entirely. the quick brown fox.";
+    Tokenizer::train(CORPUS, 512).expect("static corpus trains")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrips_ascii() {
+        let t = default_tokenizer();
+        for text in ["hello world", "the quick brown fox", "a", ""] {
+            assert_eq!(t.decode(&t.encode(text)), text);
+        }
+    }
+
+    #[test]
+    fn roundtrips_utf8() {
+        let t = default_tokenizer();
+        let text = "héllo wörld — ≤16 tökens";
+        assert_eq!(t.decode(&t.encode(text)), text);
+    }
+
+    #[test]
+    fn merges_compress_training_like_text() {
+        let t = default_tokenizer();
+        assert!(t.n_merges() > 50, "only {} merges learned", t.n_merges());
+        let text = "the quick brown fox jumps over the lazy dog";
+        let ids = t.encode(text);
+        assert!(
+            ids.len() < text.len() / 2,
+            "no compression: {} ids for {} bytes",
+            ids.len(),
+            text.len()
+        );
+    }
+
+    #[test]
+    fn ids_stay_in_vocab() {
+        let t = default_tokenizer();
+        for &id in &t.encode("conflict free kernels zap qux 123 !@#") {
+            assert!((0..512).contains(&id), "id {id} out of range");
+            assert_ne!(id, BOS);
+            assert_ne!(id, EOS);
+        }
+    }
+
+    #[test]
+    fn decode_skips_specials_and_garbage() {
+        let t = default_tokenizer();
+        let mut ids = t.encode("ok");
+        ids.insert(0, BOS);
+        ids.push(EOS);
+        assert_eq!(t.decode(&ids), "ok");
+    }
+
+    #[test]
+    fn training_is_deterministic() {
+        let a = Tokenizer::train("abcabcabc abc", 300).unwrap();
+        let b = Tokenizer::train("abcabcabc abc", 300).unwrap();
+        assert_eq!(a.encode("abcabc"), b.encode("abcabc"));
+    }
+
+    #[test]
+    fn rejects_bad_vocab_size() {
+        assert!(Tokenizer::train("x", 100).is_err());
+        assert!(Tokenizer::train("x", 4096).is_err());
+    }
+}

@@ -1,0 +1,125 @@
+//! Tiny benchmark harness (std-only substrate, criterion-shaped output).
+//!
+//! Used by the `cargo bench` targets: warmup, adaptive iteration count,
+//! median + MAD over samples, ns/op and throughput reporting.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark runner.
+pub struct Bench {
+    /// Target time per sample batch.
+    sample_target: Duration,
+    samples: usize,
+    warmup: Duration,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            sample_target: Duration::from_millis(50),
+            samples: 20,
+            warmup: Duration::from_millis(100),
+        }
+    }
+}
+
+/// Result of one benchmark.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchResult {
+    pub median_ns: f64,
+    pub mad_ns: f64,
+    pub iters_total: u64,
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn fast() -> Self {
+        Bench {
+            sample_target: Duration::from_millis(20),
+            samples: 8,
+            warmup: Duration::from_millis(20),
+        }
+    }
+
+    /// Benchmark `f`, printing a criterion-style line.
+    pub fn run<T>(&self, name: &str, mut f: impl FnMut() -> T) -> BenchResult {
+        // Warmup + calibrate iterations per sample.
+        let w0 = Instant::now();
+        let mut warm_iters = 0u64;
+        while w0.elapsed() < self.warmup {
+            std::hint::black_box(f());
+            warm_iters += 1;
+        }
+        let per_iter = self.warmup.as_secs_f64() / warm_iters as f64;
+        let iters = ((self.sample_target.as_secs_f64() / per_iter).ceil() as u64).max(1);
+
+        let mut samples_ns = Vec::with_capacity(self.samples);
+        let mut total = 0u64;
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                std::hint::black_box(f());
+            }
+            let dt = t0.elapsed().as_nanos() as f64 / iters as f64;
+            samples_ns.push(dt);
+            total += iters;
+        }
+        samples_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = samples_ns[samples_ns.len() / 2];
+        let mut devs: Vec<f64> = samples_ns.iter().map(|s| (s - median).abs()).collect();
+        devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mad = devs[devs.len() / 2];
+
+        println!("{:44} {:>14} ± {:<12} ({} iters)", name, fmt_ns(median), fmt_ns(mad), total);
+        BenchResult { median_ns: median, mad_ns: mad, iters_total: total }
+    }
+
+    /// Like [`run`] but also prints element throughput.
+    pub fn run_throughput<T>(
+        &self,
+        name: &str,
+        elements: u64,
+        f: impl FnMut() -> T,
+    ) -> BenchResult {
+        let r = self.run(name, f);
+        let eps = elements as f64 / (r.median_ns / 1e9);
+        println!("{:44} {:>14.2} Melem/s", format!("{name} (throughput)"), eps / 1e6);
+        r
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_sane() {
+        let b = Bench::fast();
+        let r = b.run("noop_vec_sum", || (0..100u64).sum::<u64>());
+        assert!(r.median_ns > 0.0 && r.median_ns < 1e7);
+        assert!(r.iters_total > 0);
+    }
+
+    #[test]
+    fn format_ns_ranges() {
+        assert!(fmt_ns(5.0).ends_with("ns"));
+        assert!(fmt_ns(5e3).ends_with("µs"));
+        assert!(fmt_ns(5e6).ends_with("ms"));
+        assert!(fmt_ns(5e9).ends_with("s"));
+    }
+}

@@ -1,0 +1,12 @@
+//! std-only infrastructure substrates (the offline build has no external
+//! crates beyond `xla` + `anyhow`): JSON parsing, deterministic RNG +
+//! distributions, a bench harness, and a property-testing helper.
+
+pub mod bench;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+
+pub use bench::Bench;
+pub use json::Json;
+pub use rng::Rng;

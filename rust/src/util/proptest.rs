@@ -1,0 +1,49 @@
+//! Property-testing helper (std-only substrate): run a predicate over many
+//! seeded random cases; on failure report the seed so the case replays
+//! deterministically.
+
+use super::rng::Rng;
+
+/// Number of cases per property (overridable via QUICK_PROPTEST_CASES).
+pub fn default_cases() -> u32 {
+    std::env::var("QUICK_PROPTEST_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(64)
+}
+
+/// Run `prop(rng)` for `cases` seeds derived from `base_seed`; panic with
+/// the failing seed on error (prop should panic/assert internally).
+pub fn check(name: &str, base_seed: u64, cases: u32, mut prop: impl FnMut(&mut Rng)) {
+    for i in 0..cases {
+        let seed = base_seed ^ (i as u64).wrapping_mul(0xA076_1D64_78BD_642F);
+        let mut rng = Rng::seed_from_u64(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut rng);
+        }));
+        if let Err(e) = result {
+            eprintln!("property '{name}' failed at case {i} (seed {seed:#x})");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivially_true_property() {
+        check("sorted-after-sort", 1, 16, |rng| {
+            let mut xs: Vec<u64> = (0..50).map(|_| rng.next_u64()).collect();
+            xs.sort_unstable();
+            assert!(xs.windows(2).all(|w| w[0] <= w[1]));
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn fails_false_property() {
+        check("always-false", 2, 4, |_| panic!("nope"));
+    }
+}

@@ -1,0 +1,152 @@
+//! Synthetic serving workloads.
+//!
+//! Table 1 uses vLLM's throughput benchmark over the ShareGPT dataset. We
+//! have no access to ShareGPT, so we synthesize request length pairs from
+//! the published summary statistics of that benchmark setup (prompts
+//! centered near ~220 tokens, generations near ~190, heavy right tail,
+//! both clipped the way vLLM's script filters outliers) — the throughput
+//! comparison depends only on these length distributions, not on the text.
+
+use crate::util::rng::Rng;
+
+/// One serving request: prompt and generation lengths in tokens.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Request {
+    pub id: u64,
+    pub prompt_tokens: u64,
+    pub gen_tokens: u64,
+    /// Arrival time, microseconds from epoch 0 (0 for offline workloads).
+    pub arrival_s_micros: u64,
+}
+
+impl Request {
+    pub fn arrival_s(&self) -> f64 {
+        self.arrival_s_micros as f64 / 1e6
+    }
+}
+
+/// ShareGPT-like length sampler (vLLM `benchmark_throughput` filters:
+/// prompt+gen <= 2048, prompt <= 1024, gen <= 1024, both >= 4).
+#[derive(Debug, Clone)]
+pub struct ShareGptLike {
+    prompt_mu: f64,
+    prompt_sigma: f64,
+    gen_mu: f64,
+    gen_sigma: f64,
+}
+
+impl Default for ShareGptLike {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ShareGptLike {
+    pub fn new() -> Self {
+        // ln-space params chosen so the medians/means land near the
+        // ShareGPT benchmark's reported token statistics.
+        ShareGptLike { prompt_mu: 5.1, prompt_sigma: 0.9, gen_mu: 5.0, gen_sigma: 0.8 }
+    }
+
+    /// Draw `n` offline requests (all arrive at t=0, like the vLLM
+    /// throughput benchmark).
+    pub fn offline(&self, n: usize, seed: u64) -> Vec<Request> {
+        let mut rng = Rng::seed_from_u64(seed);
+        (0..n)
+            .map(|i| {
+                let (p, g) = self.sample_lengths(&mut rng);
+                Request { id: i as u64, prompt_tokens: p, gen_tokens: g, arrival_s_micros: 0 }
+            })
+            .collect()
+    }
+
+    /// Draw `n` online requests with Poisson arrivals at `rate_per_s`.
+    pub fn online(&self, n: usize, rate_per_s: f64, seed: u64) -> Vec<Request> {
+        let mut rng = Rng::seed_from_u64(seed);
+        let mean_gap_us = 1e6 / rate_per_s;
+        let mut t = 0u64;
+        (0..n)
+            .map(|i| {
+                // Exponential inter-arrival gaps = Poisson process.
+                let gap = -mean_gap_us * (1.0 - rng.f64()).ln();
+                t += gap as u64;
+                let (p, g) = self.sample_lengths(&mut rng);
+                Request { id: i as u64, prompt_tokens: p, gen_tokens: g, arrival_s_micros: t }
+            })
+            .collect()
+    }
+
+    fn sample_lengths(&self, rng: &mut Rng) -> (u64, u64) {
+        loop {
+            let p = rng.lognormal(self.prompt_mu, self.prompt_sigma).round() as u64;
+            let g = rng.lognormal(self.gen_mu, self.gen_sigma).round() as u64;
+            let (p, g) = (p.clamp(4, 1024), g.clamp(4, 1024));
+            if p + g <= 2048 {
+                return (p, g);
+            }
+        }
+    }
+}
+
+/// Uniform tiny workload for the real (PJRT-served) tiny model, whose
+/// context window is `max_seq`.
+pub fn tiny_workload(n: usize, max_prompt: u64, max_gen: u64, seed: u64) -> Vec<Request> {
+    let mut rng = Rng::seed_from_u64(seed);
+    (0..n)
+        .map(|i| Request {
+            id: i as u64,
+            prompt_tokens: rng.range_u64(2, max_prompt.max(2)),
+            gen_tokens: rng.range_u64(1, max_gen.max(1)),
+            arrival_s_micros: 0,
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn offline_deterministic_by_seed() {
+        let w = ShareGptLike::new();
+        assert_eq!(w.offline(100, 7), w.offline(100, 7));
+        assert_ne!(w.offline(100, 7), w.offline(100, 8));
+    }
+
+    #[test]
+    fn lengths_within_vllm_filters() {
+        for r in ShareGptLike::new().offline(2000, 1) {
+            assert!(r.prompt_tokens >= 4 && r.prompt_tokens <= 1024);
+            assert!(r.gen_tokens >= 4 && r.gen_tokens <= 1024);
+            assert!(r.prompt_tokens + r.gen_tokens <= 2048);
+        }
+    }
+
+    #[test]
+    fn sharegpt_means_in_expected_band() {
+        let reqs = ShareGptLike::new().offline(5000, 2);
+        let pm: f64 = reqs.iter().map(|r| r.prompt_tokens as f64).sum::<f64>() / 5000.0;
+        let gm: f64 = reqs.iter().map(|r| r.gen_tokens as f64).sum::<f64>() / 5000.0;
+        assert!((120.0..400.0).contains(&pm), "prompt mean {pm}");
+        assert!((100.0..350.0).contains(&gm), "gen mean {gm}");
+    }
+
+    #[test]
+    fn online_arrivals_increase() {
+        let reqs = ShareGptLike::new().online(200, 10.0, 3);
+        for w in reqs.windows(2) {
+            assert!(w[1].arrival_s_micros >= w[0].arrival_s_micros);
+        }
+        // 200 requests at 10/s should span roughly 20s.
+        let total = reqs.last().unwrap().arrival_s();
+        assert!((10.0..40.0).contains(&total), "200 reqs @10/s took {total}");
+    }
+
+    #[test]
+    fn tiny_workload_fits_context() {
+        for r in tiny_workload(50, 12, 16, 9) {
+            assert!(r.prompt_tokens <= 12 && r.gen_tokens <= 16);
+            assert!(r.prompt_tokens >= 2 && r.gen_tokens >= 1);
+        }
+    }
+}

@@ -1,0 +1,118 @@
+//! Failure-injection tests: corrupted manifests, missing/truncated
+//! artifacts and golden files must surface as clean errors, never panics
+//! or silent wrong answers.
+
+use std::fs;
+use std::path::PathBuf;
+
+use quick_infer::runtime::manifest::Manifest;
+use quick_infer::runtime::Runtime;
+
+struct TempDir(PathBuf);
+
+impl TempDir {
+    fn new(tag: &str) -> Self {
+        let p = std::env::temp_dir().join(format!("qi_fail_{}_{tag}", std::process::id()));
+        fs::create_dir_all(&p).unwrap();
+        TempDir(p)
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        let _ = fs::remove_dir_all(&self.0);
+    }
+}
+
+const MINIMAL: &str = r#"{
+  "version": 1, "seed": 0,
+  "model_config": {"vocab": 512, "d_model": 256, "n_layers": 4,
+                   "n_heads": 4, "d_ff": 512, "max_seq": 64, "group_size": 128},
+  "artifacts": [
+    {"name": "gemm_quick_m1", "path": "hlo/gemm_quick_m1.hlo.txt",
+     "kind": "gemm", "kernel": "quick",
+     "args": [{"dtype": "float32", "shape": [1, 1024]}],
+     "outputs": [{"dtype": "float32", "shape": [1, 1024]}]}
+  ],
+  "pack_golden": {}
+}"#;
+
+#[test]
+fn missing_manifest_is_clean_error() {
+    let d = TempDir::new("nomanifest");
+    let err = Runtime::open(&d.0).err().expect("must fail");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("make artifacts"), "unhelpful error: {msg}");
+}
+
+#[test]
+fn truncated_manifest_is_clean_error() {
+    let d = TempDir::new("truncated");
+    fs::write(d.0.join("manifest.json"), &MINIMAL[..MINIMAL.len() / 2]).unwrap();
+    let err = Manifest::load(&d.0).err().expect("must fail");
+    assert!(format!("{err:#}").contains("manifest"), "{err:#}");
+}
+
+#[test]
+fn manifest_missing_required_key_is_clean_error() {
+    let d = TempDir::new("nokey");
+    fs::write(
+        d.0.join("manifest.json"),
+        r#"{"version": 1, "artifacts": []}"#,
+    )
+    .unwrap();
+    let err = Manifest::load(&d.0).err().expect("must fail");
+    assert!(format!("{err:#}").contains("missing key"), "{err:#}");
+}
+
+#[test]
+fn missing_hlo_file_fails_at_compile_not_at_open() {
+    let d = TempDir::new("nohlo");
+    fs::write(d.0.join("manifest.json"), MINIMAL).unwrap();
+    // Open succeeds (lazy compilation)...
+    let mut rt = Runtime::open(&d.0).expect("open is lazy");
+    // ...the missing file surfaces when the artifact is demanded.
+    let err = rt.ensure_compiled("gemm_quick_m1").err().expect("must fail");
+    assert!(format!("{err:#}").contains("gemm_quick_m1"), "{err:#}");
+}
+
+#[test]
+fn garbage_hlo_text_fails_cleanly() {
+    let d = TempDir::new("garbage");
+    fs::write(d.0.join("manifest.json"), MINIMAL).unwrap();
+    fs::create_dir_all(d.0.join("hlo")).unwrap();
+    fs::write(d.0.join("hlo/gemm_quick_m1.hlo.txt"), "this is not HLO").unwrap();
+    let mut rt = Runtime::open(&d.0).expect("open");
+    assert!(rt.ensure_compiled("gemm_quick_m1").is_err());
+}
+
+#[test]
+fn truncated_golden_bin_is_clean_error() {
+    use quick_infer::runtime::manifest::BinSpec;
+    use quick_infer::runtime::HostTensor;
+    let d = TempDir::new("truncbin");
+    fs::write(d.0.join("x.bin"), [0u8; 10]).unwrap(); // needs 16 bytes
+    let spec = BinSpec {
+        path: "x.bin".into(),
+        dtype: "float32".into(),
+        shape: vec![2, 2],
+        sha256: "0".repeat(16),
+    };
+    let err = HostTensor::from_bin(&d.0, &spec).err().expect("must fail");
+    assert!(format!("{err:#}").contains("mismatch"), "{err:#}");
+}
+
+#[test]
+fn wrong_arg_dtype_rejected_by_runtime_validation() {
+    // The PJRT CPU client does not reliably reject dtype mismatches (it
+    // can reinterpret the buffer), so Runtime::execute validates against
+    // the manifest. Uses the real artifacts when present.
+    let Ok(mut rt) = Runtime::open("artifacts") else { return };
+    let bad = quick_infer::runtime::HostTensor::I32(vec![0; 1024], vec![1, 1024]);
+    let err = rt.execute("gemm_quick_m1", &[bad]).err().expect("must fail");
+    assert!(format!("{err:#}").contains("expected float32"), "{err:#}");
+
+    // Wrong shape, right dtype:
+    let bad_shape = quick_infer::runtime::HostTensor::F32(vec![0.0; 512], vec![1, 512]);
+    assert!(rt.execute("gemm_quick_m1", &[bad_shape]).is_err());
+}

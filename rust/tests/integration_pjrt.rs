@@ -1,0 +1,132 @@
+//! Integration tests over the PJRT runtime + AOT artifacts: every artifact
+//! must execute and match the golden outputs the Python side recorded.
+//!
+//! Requires `make artifacts` (skipped gracefully when missing so `cargo
+//! test` stays runnable on a fresh checkout).
+
+use quick_infer::runtime::{HostTensor, Runtime};
+
+fn runtime() -> Option<Runtime> {
+    match Runtime::open("artifacts") {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("skipping PJRT integration tests: {e:#}");
+            None
+        }
+    }
+}
+
+fn check_artifact(rt: &mut Runtime, name: &str, tol: f32) {
+    let args = rt.golden_args(name).expect("golden args");
+    let outs = rt.execute(name, &args).expect("execute");
+    let want = rt.golden_outputs(name).expect("golden outputs");
+    assert_eq!(outs.len(), want.len(), "{name}: output arity");
+    for (i, (o, w)) in outs.iter().zip(&want).enumerate() {
+        assert_eq!(o.shape(), w.shape(), "{name}: out{i} shape");
+        if let (Ok(_), Ok(_)) = (o.as_f32(), w.as_f32()) {
+            let err = o.max_abs_diff(w).unwrap();
+            assert!(err <= tol, "{name}: out{i} max err {err} > {tol}");
+        }
+    }
+}
+
+#[test]
+fn all_gemm_artifacts_match_golden() {
+    let Some(mut rt) = runtime() else { return };
+    let names: Vec<String> = rt
+        .manifest
+        .artifacts
+        .iter()
+        .filter(|a| a.kind == "gemm")
+        .map(|a| a.name.clone())
+        .collect();
+    assert!(names.len() >= 9, "expected a full GEMM grid");
+    for name in names {
+        check_artifact(&mut rt, &name, 2e-3);
+    }
+}
+
+#[test]
+fn decode_artifacts_match_golden() {
+    let Some(mut rt) = runtime() else { return };
+    for kern in ["quick", "awq", "fp16"] {
+        for b in [1u64, 8] {
+            let name = format!("decode_{kern}_b{b}");
+            if rt.manifest.find(&name).is_some() {
+                check_artifact(&mut rt, &name, 5e-3);
+            }
+        }
+    }
+}
+
+#[test]
+fn prefill_artifacts_match_golden() {
+    let Some(mut rt) = runtime() else { return };
+    let names: Vec<String> = rt
+        .manifest
+        .artifacts
+        .iter()
+        .filter(|a| a.kind == "prefill")
+        .map(|a| a.name.clone())
+        .collect();
+    assert!(!names.is_empty());
+    for name in names {
+        check_artifact(&mut rt, &name, 5e-3);
+    }
+}
+
+#[test]
+fn quick_and_awq_decode_agree() {
+    // The two quantized layouts encode identical math: feeding the same
+    // inputs must produce identical logits (cross-layout consistency at
+    // the whole-model level).
+    let Some(mut rt) = runtime() else { return };
+    let args = rt.golden_args("decode_quick_b1").expect("args");
+    let a = rt.execute("decode_quick_b1", &args).expect("quick");
+    let b = rt.execute("decode_awq_b1", &args).expect("awq");
+    let err = a[0].max_abs_diff(&b[0]).expect("diff");
+    assert!(err < 1e-4, "layouts disagree: {err}");
+}
+
+#[test]
+fn decode_respects_manifest_shapes() {
+    let Some(mut rt) = runtime() else { return };
+    let entry = rt.manifest.find("decode_quick_b2").expect("artifact").clone();
+    // Wrong arg count must fail cleanly, not crash.
+    let args = rt.golden_args("decode_quick_b2").expect("args");
+    let bad = &args[..2];
+    assert!(rt.execute("decode_quick_b2", bad).is_err());
+    // Exact shapes per manifest.
+    for (spec, t) in entry.args.iter().zip(&args) {
+        assert_eq!(spec.shape, t.shape());
+    }
+}
+
+#[test]
+fn runtime_reports_stats() {
+    let Some(mut rt) = runtime() else { return };
+    let args = rt.golden_args("gemm_quick_m1").expect("args");
+    rt.execute("gemm_quick_m1", &args).expect("exec");
+    rt.execute("gemm_quick_m1", &args).expect("exec");
+    let s = rt.stats().get("gemm_quick_m1").copied().unwrap_or_default();
+    assert_eq!(s.executions, 2);
+    assert!(s.total_exec_s > 0.0);
+    assert!(s.compile_s > 0.0);
+}
+
+#[test]
+fn unknown_artifact_is_clean_error() {
+    let Some(mut rt) = runtime() else { return };
+    let err = rt.execute("no_such_artifact", &[]).unwrap_err();
+    assert!(format!("{err:#}").contains("unknown artifact"));
+}
+
+#[test]
+fn golden_bins_honor_dtype() {
+    let Some(rt) = runtime() else { return };
+    let args = rt.golden_args("decode_quick_b1").expect("args");
+    // tokens i32, pos i32, caches f32
+    assert!(matches!(args[0], HostTensor::I32(..)));
+    assert!(matches!(args[1], HostTensor::I32(..)));
+    assert!(matches!(args[2], HostTensor::F32(..)));
+}

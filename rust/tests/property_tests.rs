@@ -1,0 +1,198 @@
+//! Randomized property tests over the substrate invariants (DESIGN.md §7),
+//! using the std-only `util::proptest` harness (failing seeds replay).
+
+use quick_infer::coordinator::kv_cache::KvBlockManager;
+use quick_infer::coordinator::{Batcher, FinishReason, GenerationRequest, StepPlan};
+use quick_infer::gpusim::BankCounter;
+use quick_infer::quant;
+use quick_infer::util::proptest::{check, default_cases};
+use quick_infer::util::rng::Rng;
+
+fn rand_codes(rng: &mut Rng, k: usize, n: usize) -> Vec<i32> {
+    (0..k * n).map(|_| rng.range_u64(0, 15) as i32).collect()
+}
+
+#[test]
+fn prop_pack_roundtrips_all_layouts() {
+    check("pack-roundtrip", 0xA11CE, default_cases(), |rng| {
+        let k = rng.range_usize(1, 8) * 16;
+        let n = rng.range_usize(1, 16) * 8;
+        let codes = rand_codes(rng, k, n);
+        assert_eq!(
+            quant::unpack_awq(&quant::pack_awq(&codes, k, n), k, n),
+            codes
+        );
+        assert_eq!(quant::unpack_quick(&quant::pack_quick(&codes, k, n), k, n), codes);
+    });
+}
+
+#[test]
+fn prop_fragment_perm_is_bijection() {
+    check("fragment-perm-bijection", 0xBEEF, default_cases(), |rng| {
+        let rows = rng.range_usize(1, 16) * 16;
+        let words = rng.range_usize(1, 64);
+        let perm = quant::ldmatrix_fragment_perm(rows, words);
+        let mut seen = vec![false; perm.len()];
+        for &p in &perm {
+            assert!(!seen[p as usize]);
+            seen[p as usize] = true;
+        }
+        assert!(seen.iter().all(|&b| b));
+    });
+}
+
+#[test]
+fn prop_quantize_bounded_error() {
+    check("quantize-half-lsb", 0xCAFE, default_cases(), |rng| {
+        let g = [16usize, 32, 64][rng.range_usize(0, 2)];
+        let k = g * rng.range_usize(1, 4);
+        let n = rng.range_usize(1, 24) * 8;
+        let w: Vec<f32> = (0..k * n).map(|_| (rng.f64() * 4.0 - 2.0) as f32).collect();
+        let t = quant::quantize_groupwise(&w, k, n, g);
+        let back = quant::dequantize(&t);
+        for row in 0..k {
+            let gi = row / g;
+            for col in 0..n {
+                let err = (w[row * n + col] - back[row * n + col]).abs();
+                assert!(err <= t.scales[gi * n + col] * 0.5 + 1e-5);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_kv_manager_never_leaks_or_double_allocates() {
+    check("kv-ledger", 0xD00D, default_cases(), |rng| {
+        let blocks = rng.range_u64(8, 256);
+        let bs = [4u64, 8, 16][rng.range_usize(0, 2)];
+        let mut m = KvBlockManager::new(blocks, bs, 0.0);
+        let mut live: Vec<u64> = Vec::new();
+        let mut next_id = 0u64;
+        for _ in 0..200 {
+            match rng.range_u64(0, 2) {
+                0 => {
+                    let toks = rng.range_u64(1, bs * 6);
+                    if m.allocate(next_id, toks).is_ok() {
+                        live.push(next_id);
+                    }
+                    next_id += 1;
+                }
+                1 => {
+                    if !live.is_empty() {
+                        let i = rng.range_usize(0, live.len() - 1);
+                        let _ = m.append_token(live[i]);
+                    }
+                }
+                _ => {
+                    if !live.is_empty() {
+                        let i = rng.range_usize(0, live.len() - 1);
+                        m.free_seq(live.swap_remove(i)).unwrap();
+                    }
+                }
+            }
+            m.check_invariants().expect("ledger invariant");
+        }
+        for s in live {
+            m.free_seq(s).unwrap();
+        }
+        assert_eq!(m.free_blocks(), blocks);
+    });
+}
+
+#[test]
+fn prop_batcher_lane_exclusivity_and_progress() {
+    check("batcher-lanes", 0xFEED, default_cases(), |rng| {
+        let lanes = rng.range_usize(1, 8);
+        let mut b = Batcher::new(lanes, 64, 64);
+        let mut submitted = 0usize;
+        let mut finished = 0usize;
+        for step in 0..300 {
+            if rng.f64() < 0.3 && submitted < 40 {
+                let prompt_len = rng.range_usize(1, 8);
+                let _ = b.submit(GenerationRequest {
+                    id: submitted as u64,
+                    prompt: vec![1; prompt_len],
+                    max_new_tokens: rng.range_usize(1, 8),
+                    temperature: None,
+                    eos_token: None,
+                });
+                submitted += 1;
+            }
+            match b.plan() {
+                StepPlan::Prefill { seq_index, lane } => {
+                    b.start_prefill(seq_index, lane);
+                    b.seqs[seq_index].push_generated(7);
+                }
+                StepPlan::Decode { lanes } => {
+                    for lane in lanes {
+                        let si = b.seq_in_lane(lane).unwrap();
+                        b.seqs[si].push_generated(7);
+                        if b.seqs[si].should_stop().is_some() {
+                            b.finish_lane(lane, FinishReason::Length);
+                            finished += 1;
+                        }
+                    }
+                }
+                StepPlan::Idle => {}
+            }
+            b.check_invariants().unwrap_or_else(|e| panic!("step {step}: {e}"));
+        }
+        // Drain remaining work.
+        let mut guard = 0;
+        while b.has_work() {
+            match b.plan() {
+                StepPlan::Prefill { seq_index, lane } => {
+                    b.start_prefill(seq_index, lane);
+                    b.seqs[seq_index].push_generated(7);
+                }
+                StepPlan::Decode { lanes } => {
+                    for lane in lanes {
+                        let si = b.seq_in_lane(lane).unwrap();
+                        b.seqs[si].push_generated(7);
+                        if b.seqs[si].should_stop().is_some() {
+                            b.finish_lane(lane, FinishReason::Length);
+                            finished += 1;
+                        }
+                    }
+                }
+                StepPlan::Idle => break,
+            }
+            guard += 1;
+            assert!(guard < 10_000, "no forward progress");
+        }
+        assert_eq!(finished, submitted, "every admitted request finishes");
+    });
+}
+
+#[test]
+fn prop_bank_counter_degree_bounds() {
+    check("bank-degree", 0x5EED, default_cases(), |rng| {
+        // Degree never exceeds lanes-per-phase; conflict-free patterns
+        // (same word or perfect spread) report zero.
+        let addrs: Vec<u64> = (0..32).map(|_| rng.range_u64(0, 1 << 12) & !3).collect();
+        let mut c = BankCounter::new();
+        let extra = c.access(&addrs, 4);
+        assert!(extra <= 31);
+        assert_eq!(c.transactions, c.phases + c.conflicts);
+
+        let uniform = vec![256u64; 32];
+        let mut c2 = BankCounter::new();
+        assert_eq!(c2.access(&uniform, 4), 0);
+    });
+}
+
+#[test]
+fn prop_interleave_commutes_with_nibble_reorder() {
+    // Paper §3.2: the two QUICK reorders are independent (nibble-level vs
+    // word-level) — composition order must not matter.
+    check("reorder-commute", 0x1DEA, default_cases(), |rng| {
+        let k = rng.range_usize(1, 6) * 16;
+        let n = rng.range_usize(1, 8) * 8;
+        let codes = rand_codes(rng, k, n);
+        let words = quant::pack_quick_dequant_order(&codes, k, n);
+        let perm = quant::ldmatrix_fragment_perm(k, n / quant::PACK_FACTOR);
+        let a = quant::apply_word_perm(&words, &perm);
+        let b = quant::pack_quick(&codes, k, n);
+        assert_eq!(a, b);
+    });
+}
