@@ -12,7 +12,10 @@ use quick_infer::workload;
 
 fn run_kernel(artifacts: &str, kernel: &str, n_requests: usize) -> Result<(f64, u64)> {
     let rt = Runtime::open(artifacts)?;
-    let mut engine = Engine::new(rt, EngineConfig { kernel: kernel.into(), max_queue: 4096, sample_seed: 0 })?;
+    let mut engine = Engine::new(
+        rt,
+        EngineConfig { kernel: kernel.into(), max_queue: 4096, ..Default::default() },
+    )?;
     let max_prompt = engine.prefill_window() as u64;
     let reqs = workload::tiny_workload(n_requests, max_prompt, 24, 42);
 

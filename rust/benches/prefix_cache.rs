@@ -1,0 +1,49 @@
+//! Prefix-cache bench: automatic prefix caching on the Table-1 serving
+//! simulator (A6000, Vicuna-13B, QUICK) — cache on vs off at equal KV
+//! budget over a shared-prefix chat workload and a disjoint ShareGPT-like
+//! control — plus micro-benchmarks of the radix-trie index and the cached
+//! serving loop itself.
+
+use quick_infer::coordinator::prefix::PrefixIndex;
+use quick_infer::coordinator::simserve::{simulate_serving, SimPolicy};
+use quick_infer::figures;
+use quick_infer::gpusim::kernel_model::{Calib, KernelKind};
+use quick_infer::gpusim::Gpu;
+use quick_infer::model::Model;
+use quick_infer::util::Bench;
+use quick_infer::workload::SharedPrefixWorkload;
+
+fn main() {
+    let report = figures::prefix_cache(&mut std::io::stdout()).expect("prefix report");
+    assert!(
+        report.throughput_speedup() >= 1.2,
+        "prefix cache speedup {:.2}x below the 1.2x bar",
+        report.throughput_speedup()
+    );
+
+    println!("\n-- prefix-cache micro-benchmarks --");
+    // Radix-trie chain walk over a deep cached prefix.
+    let mut idx = PrefixIndex::new(16);
+    let tokens: Vec<i32> = (0..4097).map(|i| (i % 509) as i32).collect();
+    let blocks: Vec<u32> = (0..256).collect();
+    assert_eq!(idx.insert(&tokens, &blocks).len(), 256);
+    Bench::fast().run_throughput("match_prefix_256_blocks", 4096, || {
+        idx.match_prefix(&tokens).len()
+    });
+
+    // Cached serving loop end to end.
+    let reqs = SharedPrefixWorkload::default().offline(100, 7);
+    let dev = Gpu::RtxA6000.spec();
+    let spec = Model::Vicuna13B.spec();
+    Bench::fast().run("simulate_shared_prefix_100req_cache_on", || {
+        simulate_serving(
+            &dev,
+            &spec,
+            KernelKind::Quick,
+            &reqs,
+            &SimPolicy::default(),
+            &Calib::default(),
+        )
+        .total_tok_per_s
+    });
+}

@@ -101,6 +101,14 @@ impl Batcher {
         }
     }
 
+    /// Record that the engine served `tokens` of this sequence's prompt
+    /// from the automatic prefix cache (admission-time hint: those tokens
+    /// skip prefill compute; metrics and schedulers read it back).
+    pub fn note_cached_prefix(&mut self, seq_index: usize, tokens: usize) {
+        debug_assert!(tokens < self.seqs[seq_index].req.prompt.len().max(1));
+        self.seqs[seq_index].cached_prefix_tokens = tokens;
+    }
+
     /// Commit a planned prefill: bind the sequence to the lane.
     pub fn start_prefill(&mut self, seq_index: usize, lane: usize) {
         debug_assert_eq!(self.waiting.front(), Some(&seq_index));
@@ -135,6 +143,12 @@ impl Batcher {
             anyhow::ensure!(
                 matches!(self.seqs[w].state, SeqState::Waiting),
                 "waiting seq {w} not in Waiting state"
+            );
+        }
+        for (i, s) in self.seqs.iter().enumerate() {
+            anyhow::ensure!(
+                s.cached_prefix_tokens <= s.req.prompt.len(),
+                "seq {i} cached prefix exceeds its prompt"
             );
         }
         Ok(())
@@ -217,5 +231,16 @@ mod tests {
         let b = Batcher::new(2, 4, 64);
         assert_eq!(b.plan(), StepPlan::Idle);
         assert!(!b.has_work());
+    }
+
+    #[test]
+    fn cached_prefix_note_reduces_uncached_work() {
+        let mut b = Batcher::new(1, 4, 64);
+        let s = b.submit(req(0, 12, 4)).unwrap();
+        assert_eq!(b.seqs[s].uncached_prompt_tokens(), 12);
+        b.note_cached_prefix(s, 8);
+        assert_eq!(b.seqs[s].cached_prefix_tokens, 8);
+        assert_eq!(b.seqs[s].uncached_prompt_tokens(), 4);
+        b.check_invariants().unwrap();
     }
 }

@@ -22,6 +22,7 @@ use anyhow::{anyhow, bail, Result};
 use super::batcher::{Batcher, StepPlan};
 use super::sampler;
 use super::metrics::EngineMetrics;
+use super::prefix::PrefixIndex;
 use super::request::{FinishReason, GenerationRequest, SeqState};
 use crate::runtime::{HostTensor, Runtime};
 
@@ -33,17 +34,49 @@ pub struct EngineConfig {
     pub max_queue: usize,
     /// Seed for temperature sampling (greedy requests ignore it).
     pub sample_seed: u64,
+    /// Automatic prefix caching: reuse host KV blocks across requests that
+    /// share a prompt prefix, skipping their prefill compute.
+    pub enable_prefix_cache: bool,
 }
 
 impl Default for EngineConfig {
     fn default() -> Self {
-        EngineConfig { kernel: "quick".into(), max_queue: 256, sample_seed: 0 }
+        EngineConfig {
+            kernel: "quick".into(),
+            max_queue: 256,
+            sample_seed: 0,
+            enable_prefix_cache: true,
+        }
     }
 }
 
 struct LaneCache {
     k: Vec<f32>,
     v: Vec<f32>,
+}
+
+/// Token granularity of the engine's prefix-cache blocks (small because
+/// the tiny AOT model's context is small).
+const PREFIX_BLOCK_TOKENS: usize = 8;
+/// LRU budget: max cached blocks resident in host memory.
+const PREFIX_CACHE_MAX_BLOCKS: usize = 512;
+
+/// One cached full block of host KV: per layer, `PREFIX_BLOCK_TOKENS`
+/// slots of `(heads, head_dim)` — the exact values the model computed for
+/// these token ids at these positions, so reuse is bit-identical.
+struct HostKvBlock {
+    k: Vec<f32>,
+    v: Vec<f32>,
+}
+
+/// Engine-side automatic prefix cache: the shared radix-trie index maps
+/// token prefixes to handles into a host block store. Unlike the paged
+/// simulator path there is no refcounting — leasing copies block data
+/// into the lane cache, so eviction can never invalidate a running lane.
+struct EnginePrefixCache {
+    index: PrefixIndex,
+    store: std::collections::HashMap<u32, HostKvBlock>,
+    next_handle: u32,
 }
 
 /// Result of one finished request.
@@ -68,6 +101,7 @@ pub struct Engine {
     head_dim: usize,
     vocab: usize,
     lanes: Vec<Option<LaneCache>>,
+    prefix: EnginePrefixCache,
     completions: Vec<Completion>,
     last_token_at: Vec<Option<Instant>>,
     rng: crate::util::rng::Rng,
@@ -110,6 +144,11 @@ impl Engine {
             head_dim: (mc.d_model / mc.n_heads) as usize,
             vocab: mc.vocab as usize,
             lanes: (0..max_lanes).map(|_| None).collect(),
+            prefix: EnginePrefixCache {
+                index: PrefixIndex::new(PREFIX_BLOCK_TOKENS),
+                store: std::collections::HashMap::new(),
+                next_handle: 0,
+            },
             last_token_at: vec![None; max_lanes],
             completions: Vec::new(),
             steady: None,
@@ -226,33 +265,82 @@ impl Engine {
             let seq = &self.batcher.seqs[seq_index];
             (seq.req.prompt.len(), seq.req.prompt.clone())
         };
-        // Head chunk through the prefill artifact.
-        let head = prompt_len.min(s);
-        let mut tokens_padded = prompt[..head].to_vec();
-        tokens_padded.resize(s, 0);
-        let name = format!("prefill_{}_b1_s{}", self.cfg.kernel, s);
-        let zeros = vec![
-            0f32;
-            self.n_layers * self.lane_elems()
-        ];
         let cache_shape = vec![self.n_layers, 1, self.max_seq, self.heads, self.head_dim];
-        let args = [
-            HostTensor::I32(tokens_padded, vec![1, s]),
-            HostTensor::I32(vec![head as i32], vec![1]),
-            HostTensor::F32(zeros.clone(), cache_shape.clone()),
-            HostTensor::F32(zeros, cache_shape.clone()),
-        ];
-        let outs = self.rt.execute(&name, &args)?;
-        let mut logits = outs[0].as_f32()?.to_vec();
-        let k = outs[1].as_f32()?.to_vec();
-        let v = outs[2].as_f32()?.to_vec();
-        self.lanes[lane] = Some(LaneCache { k, v });
+
+        // Longest cached prefix (full blocks only; the index always leaves
+        // at least one prompt token to compute logits from).
+        let matched = if self.cfg.enable_prefix_cache {
+            self.prefix.index.match_prefix(&prompt)
+        } else {
+            Vec::new()
+        };
+        let mut cached_tokens = matched.len() * PREFIX_BLOCK_TOKENS;
+        // A hit pays off only when it covers at least the prefill
+        // artifact's window: the cached path replaces the one artifact
+        // call with teacher-forced batch-1 decodes, so a shallower match
+        // would *add* runtime executions instead of removing them.
+        if cached_tokens < prompt_len.min(s) {
+            cached_tokens = 0;
+        }
+
+        let mut logits: Vec<f32>;
+        let start;
+        if cached_tokens > 0 {
+            // Prefix hit: seed the lane's KV from the cached blocks — the
+            // exact values a from-scratch prefill would recompute — and
+            // teacher-force only the uncached suffix below.
+            let le = self.lane_elems();
+            let span = PREFIX_BLOCK_TOKENS * self.heads * self.head_dim;
+            let mut k = vec![0f32; self.n_layers * le];
+            let mut v = vec![0f32; self.n_layers * le];
+            for (bi, m) in matched[..cached_tokens / PREFIX_BLOCK_TOKENS].iter().enumerate() {
+                let blk =
+                    self.prefix.store.get(&m.block).expect("indexed block has host data");
+                for l in 0..self.n_layers {
+                    let dst = l * le + bi * span;
+                    let src = l * span;
+                    k[dst..dst + span].copy_from_slice(&blk.k[src..src + span]);
+                    v[dst..dst + span].copy_from_slice(&blk.v[src..src + span]);
+                }
+            }
+            self.lanes[lane] = Some(LaneCache { k, v });
+            self.metrics.prefix_hits += 1;
+            self.metrics.prefix_tokens_skipped += cached_tokens as u64;
+            self.batcher.note_cached_prefix(seq_index, cached_tokens);
+            logits = Vec::new(); // assigned by the forced-decode loop below
+            start = cached_tokens;
+        } else {
+            if self.cfg.enable_prefix_cache {
+                self.metrics.prefix_misses += 1;
+            }
+            // Head chunk through the prefill artifact.
+            let head = prompt_len.min(s);
+            let mut tokens_padded = prompt[..head].to_vec();
+            tokens_padded.resize(s, 0);
+            let name = format!("prefill_{}_b1_s{}", self.cfg.kernel, s);
+            let zeros = vec![
+                0f32;
+                self.n_layers * self.lane_elems()
+            ];
+            let args = [
+                HostTensor::I32(tokens_padded, vec![1, s]),
+                HostTensor::I32(vec![head as i32], vec![1]),
+                HostTensor::F32(zeros.clone(), cache_shape.clone()),
+                HostTensor::F32(zeros, cache_shape.clone()),
+            ];
+            let outs = self.rt.execute(&name, &args)?;
+            logits = outs[0].as_f32()?.to_vec();
+            let k = outs[1].as_f32()?.to_vec();
+            let v = outs[2].as_f32()?.to_vec();
+            self.lanes[lane] = Some(LaneCache { k, v });
+            start = head;
+        }
 
         // Chunked tail: teacher-force the remaining prompt tokens through
         // batch-1 decode steps (their logits are discarded except the
         // last, which predicts the first generated token).
         let dname = format!("decode_{}_b1", self.cfg.kernel);
-        for i in head..prompt_len {
+        for i in start..prompt_len {
             let cache = self.lanes[lane].as_ref().unwrap();
             let args = [
                 HostTensor::I32(vec![prompt[i]], vec![1]),
@@ -265,6 +353,14 @@ impl Engine {
             let cache = self.lanes[lane].as_mut().unwrap();
             cache.k = outs[1].as_f32()?.to_vec();
             cache.v = outs[2].as_f32()?.to_vec();
+        }
+        debug_assert!(!logits.is_empty(), "prompt produced no logits");
+
+        // Publish the prompt's full blocks while the lane's host buffer is
+        // authoritative (decode keeps KV literal-resident, so this is the
+        // one point where cached data is guaranteed current).
+        if self.cfg.enable_prefix_cache {
+            self.register_prompt_blocks(lane, &prompt);
         }
 
         let temp = self.batcher.seqs[seq_index].req.temperature;
@@ -280,6 +376,55 @@ impl Engine {
         self.last_token_at[lane] = Some(Instant::now());
         self.maybe_finish_lane(lane)?;
         Ok(())
+    }
+
+    /// Insert the prompt's full blocks into the prefix index, copying
+    /// their KV out of the lane cache; chain links already cached keep the
+    /// first writer's data (content-identical by construction). Evicts LRU
+    /// leaves past the store budget.
+    fn register_prompt_blocks(&mut self, lane: usize, prompt: &[i32]) {
+        let bs = PREFIX_BLOCK_TOKENS;
+        let n_full = prompt.len() / bs;
+        if n_full == 0 {
+            return;
+        }
+        // Candidate handles: skip any still backing a live cached block so
+        // a wrapped counter can never overwrite data an index node maps to.
+        let mut handles = Vec::with_capacity(n_full);
+        let mut h = self.prefix.next_handle;
+        for _ in 0..n_full {
+            while self.prefix.store.contains_key(&h) {
+                h = h.wrapping_add(1);
+            }
+            handles.push(h);
+            h = h.wrapping_add(1);
+        }
+        self.prefix.next_handle = h;
+        let newly = self.prefix.index.insert(&prompt[..n_full * bs], &handles);
+        if !newly.is_empty() {
+            let cache = self.lanes[lane].as_ref().expect("lane cache present");
+            let le = self.lane_elems();
+            let span = bs * self.heads * self.head_dim;
+            for (ci, handle) in newly {
+                let mut k = Vec::with_capacity(self.n_layers * span);
+                let mut v = Vec::with_capacity(self.n_layers * span);
+                for l in 0..self.n_layers {
+                    let src = l * le + ci * span;
+                    k.extend_from_slice(&cache.k[src..src + span]);
+                    v.extend_from_slice(&cache.v[src..src + span]);
+                }
+                self.prefix.store.insert(handle, HostKvBlock { k, v });
+            }
+        }
+        while self.prefix.store.len() > PREFIX_CACHE_MAX_BLOCKS {
+            match self.prefix.index.evict_lru(|_| true) {
+                Some(b) => {
+                    self.prefix.store.remove(&b);
+                    self.metrics.prefix_evictions += 1;
+                }
+                None => break,
+            }
+        }
     }
 
     fn run_decode(&mut self, lanes: &[usize]) -> Result<()> {

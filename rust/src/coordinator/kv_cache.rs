@@ -1,4 +1,5 @@
-//! Paged KV-cache block manager (vLLM-style).
+//! Paged KV-cache block manager (vLLM-style) with refcounted
+//! copy-on-write sharing.
 //!
 //! The serving engine accounts KV memory in fixed-size blocks of
 //! `block_size` token slots per sequence. Weight-only quantization frees
@@ -6,14 +7,25 @@
 //! behind the paper's "larger batch inference becomes possible" (§4.2) and
 //! the OOM column of Table 1; the block manager makes it concrete.
 //!
+//! Blocks are refcounted so sequences can share them: the automatic
+//! prefix cache (`coordinator::prefix`) leases full blocks of a matched
+//! prompt prefix to new sequences, and [`KvBlockManager::fork`] clones a
+//! whole sequence. Writes into a shared partial tail block trigger
+//! copy-on-write ([`KvBlockManager::append_token`]). A block released by
+//! its last sequence either returns to the free list or — when the prefix
+//! index holds it (`cached`) — stays resident as *evictable idle*
+//! capacity until [`KvBlockManager::evict`] reclaims it.
+//!
 //! Invariants (enforced by unit + property tests):
-//! * a physical block is owned by at most one sequence at a time;
-//! * `free_blocks + allocated == total` at all times;
-//! * freeing a sequence returns exactly the blocks it held.
+//! * per-block refcount equals the number of block tables referencing it;
+//! * a block appears at most once in any one sequence's table;
+//! * every block is on the free list, referenced, or cached — no leaks,
+//!   and free-listed blocks are never referenced or cached;
+//! * freeing a sequence conserves the ledger exactly.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 
-use anyhow::{bail, Result};
+use anyhow::{bail, ensure, Result};
 
 /// Sequence identifier.
 pub type SeqId = u64;
@@ -24,10 +36,18 @@ pub struct KvBlockManager {
     block_size: u64,
     total_blocks: u64,
     free: Vec<u32>,
+    /// Per-block count of sequences referencing it.
+    refs: Vec<u32>,
+    /// Per-block: held by the prefix index (content-addressed, reusable).
+    cached: Vec<bool>,
+    /// Blocks with `refs == 0 && cached` (evictable idle capacity).
+    cached_idle: u64,
     tables: HashMap<SeqId, BlockTable>,
     /// Blocks kept free as headroom for in-flight decodes (vLLM's
     /// watermark prevents admission from starving running sequences).
     watermark_blocks: u64,
+    /// Copy-on-write forks taken on shared tail blocks.
+    cow_forks: u64,
 }
 
 #[derive(Debug, Clone, Default)]
@@ -45,8 +65,12 @@ impl KvBlockManager {
             block_size,
             total_blocks,
             free: (0..total_blocks as u32).rev().collect(),
+            refs: vec![0; total_blocks as usize],
+            cached: vec![false; total_blocks as usize],
+            cached_idle: 0,
             tables: HashMap::new(),
             watermark_blocks: (total_blocks as f64 * watermark_frac).ceil() as u64,
+            cow_forks: 0,
         }
     }
 
@@ -59,37 +83,137 @@ impl KvBlockManager {
         self.free.len() as u64
     }
 
+    /// Blocks actively referenced by at least one sequence.
     pub fn allocated_blocks(&self) -> u64 {
-        self.total_blocks - self.free_blocks()
+        self.total_blocks - self.free_blocks() - self.cached_idle
+    }
+
+    /// Idle blocks held only by the prefix cache (reclaimable via
+    /// [`Self::evict`]).
+    pub fn cached_idle_blocks(&self) -> u64 {
+        self.cached_idle
+    }
+
+    pub fn watermark_blocks(&self) -> u64 {
+        self.watermark_blocks
+    }
+
+    pub fn cow_forks(&self) -> u64 {
+        self.cow_forks
     }
 
     pub fn blocks_needed(&self, tokens: u64) -> u64 {
         tokens.div_ceil(self.block_size)
     }
 
+    pub fn ref_count(&self, block: u32) -> u32 {
+        self.refs[block as usize]
+    }
+
+    pub fn is_cached(&self, block: u32) -> bool {
+        self.cached[block as usize]
+    }
+
+    /// A cached block no sequence references: reclaimable.
+    pub fn is_evictable(&self, block: u32) -> bool {
+        self.cached[block as usize] && self.refs[block as usize] == 0
+    }
+
     /// Admission check: can a new sequence of `prompt_tokens` be allocated
-    /// without dipping into the decode watermark?
+    /// without dipping into the decode watermark? Idle cached blocks count
+    /// as capacity — eviction reclaims them on demand.
     pub fn can_admit(&self, prompt_tokens: u64) -> bool {
         self.blocks_needed(prompt_tokens.max(1)) + self.watermark_blocks
-            <= self.free_blocks()
+            <= self.free_blocks() + self.cached_idle
     }
 
     /// Allocate the block table for a new sequence's prompt.
     pub fn allocate(&mut self, seq: SeqId, prompt_tokens: u64) -> Result<()> {
+        self.allocate_shared(seq, prompt_tokens, &[])
+    }
+
+    /// Allocate a new sequence whose first `shared.len()` blocks are
+    /// leased from live blocks (cached prefix or another sequence); only
+    /// the remainder comes from the free list. Shared blocks gain a
+    /// reference; writes into a shared tail later copy-on-write.
+    pub fn allocate_shared(
+        &mut self,
+        seq: SeqId,
+        prompt_tokens: u64,
+        shared: &[u32],
+    ) -> Result<()> {
         if self.tables.contains_key(&seq) {
             bail!("sequence {seq} already has a block table");
         }
         let need = self.blocks_needed(prompt_tokens.max(1));
-        if need > self.free_blocks() {
-            bail!("out of KV blocks: need {need}, free {}", self.free_blocks());
+        ensure!(
+            shared.len() as u64 <= need,
+            "shared prefix ({} blocks) longer than the sequence needs ({need})",
+            shared.len()
+        );
+        let mut uniq = HashSet::new();
+        for &b in shared {
+            ensure!((b as u64) < self.total_blocks, "shared block {b} out of range");
+            ensure!(uniq.insert(b), "shared block {b} listed twice");
+            ensure!(
+                self.refs[b as usize] > 0 || self.cached[b as usize],
+                "shared block {b} is not live (free-listed?)"
+            );
         }
-        let blocks = (0..need).map(|_| self.free.pop().unwrap()).collect();
+        let fresh = need - shared.len() as u64;
+        if fresh > self.free_blocks() {
+            bail!("out of KV blocks: need {fresh} fresh, free {}", self.free_blocks());
+        }
+        for &b in shared {
+            let i = b as usize;
+            if self.refs[i] == 0 && self.cached[i] {
+                self.cached_idle -= 1;
+            }
+            self.refs[i] += 1;
+        }
+        let mut blocks: Vec<u32> = shared.to_vec();
+        for _ in 0..fresh {
+            let b = self.free.pop().unwrap();
+            self.refs[b as usize] += 1;
+            blocks.push(b);
+        }
         self.tables.insert(seq, BlockTable { blocks, tokens: prompt_tokens });
         Ok(())
     }
 
-    /// Append one decoded token; may claim one more block. Returns true if
-    /// a block was claimed.
+    /// Clone `parent`'s block table for `child` with every block shared
+    /// (refcount++), including a partial tail — the tail copy-on-writes
+    /// on the next append. Costs zero free blocks.
+    pub fn fork(&mut self, parent: SeqId, child: SeqId) -> Result<()> {
+        if self.tables.contains_key(&child) {
+            bail!("sequence {child} already has a block table");
+        }
+        let table = match self.tables.get(&parent) {
+            Some(t) => t.clone(),
+            None => bail!("fork: unknown parent sequence {parent}"),
+        };
+        for &b in &table.blocks {
+            self.refs[b as usize] += 1;
+        }
+        self.tables.insert(child, table);
+        Ok(())
+    }
+
+    /// The sequence's *sealed* full blocks: immutable (appends only ever
+    /// touch the tail slot past them) and therefore safe to publish into
+    /// the prefix index. The partial tail stays private.
+    pub fn seal(&self, seq: SeqId) -> Result<Vec<u32>> {
+        let table = match self.tables.get(&seq) {
+            Some(t) => t,
+            None => bail!("seal: unknown sequence {seq}"),
+        };
+        let full = (table.tokens / self.block_size) as usize;
+        Ok(table.blocks[..full.min(table.blocks.len())].to_vec())
+    }
+
+    /// Append one decoded token; may claim one more block, either at a
+    /// block boundary or to copy-on-write a shared partial tail. Returns
+    /// true if a block was claimed from the free list.
     pub fn append_token(&mut self, seq: SeqId) -> Result<bool> {
         let bs = self.block_size;
         let table = match self.tables.get_mut(&seq) {
@@ -99,8 +223,10 @@ impl KvBlockManager {
         table.tokens += 1;
         let need = table.tokens.div_ceil(bs);
         if need > table.blocks.len() as u64 {
+            // Crossed a block boundary: claim a fresh block.
             match self.free.pop() {
                 Some(b) => {
+                    self.refs[b as usize] += 1;
                     self.tables.get_mut(&seq).unwrap().blocks.push(b);
                     Ok(true)
                 }
@@ -111,19 +237,84 @@ impl KvBlockManager {
                 }
             }
         } else {
-            Ok(false)
+            // Writing into the existing partial tail slot.
+            let tail = *table.blocks.last().expect("non-empty table");
+            if self.refs[tail as usize] > 1 {
+                // Shared tail: copy-on-write into a private block.
+                match self.free.pop() {
+                    Some(b) => {
+                        self.refs[b as usize] += 1;
+                        self.refs[tail as usize] -= 1;
+                        let t = self.tables.get_mut(&seq).unwrap();
+                        *t.blocks.last_mut().unwrap() = b;
+                        self.cow_forks += 1;
+                        Ok(true)
+                    }
+                    None => {
+                        self.tables.get_mut(&seq).unwrap().tokens -= 1;
+                        bail!("out of KV blocks for copy-on-write on sequence {seq}")
+                    }
+                }
+            } else {
+                // Exclusively owned; cached blocks are always full, so an
+                // in-place tail write can never corrupt the prefix cache.
+                debug_assert!(
+                    !self.cached[tail as usize],
+                    "in-place write into cached block {tail}"
+                );
+                Ok(false)
+            }
         }
     }
 
-    /// Release a finished (or preempted) sequence's blocks.
+    /// Release a finished (or preempted) sequence's blocks. Blocks whose
+    /// last reference drops here return to the free list unless the
+    /// prefix index holds them (those stay resident as evictable idle).
+    /// Returns the number of blocks returned to the free list.
     pub fn free_seq(&mut self, seq: SeqId) -> Result<u64> {
         let table = match self.tables.remove(&seq) {
             Some(t) => t,
             None => bail!("free_seq: unknown sequence {seq}"),
         };
-        let n = table.blocks.len() as u64;
-        self.free.extend(table.blocks);
-        Ok(n)
+        let mut freed = 0;
+        for b in table.blocks {
+            let i = b as usize;
+            debug_assert!(self.refs[i] > 0, "freeing unreferenced block {b}");
+            self.refs[i] -= 1;
+            if self.refs[i] == 0 {
+                if self.cached[i] {
+                    self.cached_idle += 1;
+                } else {
+                    self.free.push(b);
+                    freed += 1;
+                }
+            }
+        }
+        Ok(freed)
+    }
+
+    /// Mark a (live, referenced) block as held by the prefix index.
+    /// Idempotent; the block survives its last sequence reference as
+    /// evictable idle capacity.
+    pub fn mark_cached(&mut self, block: u32) -> Result<()> {
+        let i = block as usize;
+        ensure!((block as u64) < self.total_blocks, "block {block} out of range");
+        if self.cached[i] {
+            return Ok(());
+        }
+        ensure!(self.refs[i] > 0, "only referenced blocks can enter the cache");
+        self.cached[i] = true;
+        Ok(())
+    }
+
+    /// Reclaim an evictable idle block to the free list (the prefix index
+    /// must have dropped its entry first — see `prefix::PrefixCache`).
+    pub fn evict(&mut self, block: u32) -> Result<()> {
+        ensure!(self.is_evictable(block), "block {block} is not evictable");
+        self.cached[block as usize] = false;
+        self.cached_idle -= 1;
+        self.free.push(block);
+        Ok(())
     }
 
     pub fn table(&self, seq: SeqId) -> Option<&BlockTable> {
@@ -134,20 +325,55 @@ impl KvBlockManager {
         self.tables.len()
     }
 
-    /// Sanity: no block owned twice, ledger balances.
+    /// Sanity: refcounts equal table references, no per-sequence
+    /// duplicates, free blocks unreferenced and uncached, nothing leaks,
+    /// idle counter matches.
     pub fn check_invariants(&self) -> Result<()> {
-        let mut seen = vec![false; self.total_blocks as usize];
-        for &b in &self.free {
-            anyhow::ensure!(!seen[b as usize], "block {b} double-listed in free");
-            seen[b as usize] = true;
-        }
+        let n = self.total_blocks as usize;
+        let mut counted = vec![0u32; n];
         for (seq, t) in &self.tables {
+            let mut seen = HashSet::new();
             for &b in &t.blocks {
-                anyhow::ensure!(!seen[b as usize], "block {b} double-owned (seq {seq})");
-                seen[b as usize] = true;
+                ensure!((b as u64) < self.total_blocks, "block {b} out of range");
+                ensure!(seen.insert(b), "block {b} twice in seq {seq}");
+                counted[b as usize] += 1;
+            }
+            ensure!(
+                t.blocks.len() as u64 >= t.tokens.div_ceil(self.block_size),
+                "seq {seq} has fewer blocks than tokens need"
+            );
+        }
+        for b in 0..n {
+            ensure!(
+                counted[b] == self.refs[b],
+                "refcount drift on block {b}: counted {}, stored {}",
+                counted[b],
+                self.refs[b]
+            );
+        }
+        let mut on_free = vec![false; n];
+        for &b in &self.free {
+            let i = b as usize;
+            ensure!(!on_free[i], "block {b} double-listed in free");
+            on_free[i] = true;
+            ensure!(self.refs[i] == 0, "free block {b} still referenced");
+            ensure!(!self.cached[i], "free block {b} still cached");
+        }
+        let mut idle = 0u64;
+        for b in 0..n {
+            ensure!(
+                on_free[b] || self.refs[b] > 0 || self.cached[b],
+                "leaked block {b}"
+            );
+            if self.refs[b] == 0 && self.cached[b] {
+                idle += 1;
             }
         }
-        anyhow::ensure!(seen.iter().all(|&s| s), "leaked blocks");
+        ensure!(
+            idle == self.cached_idle,
+            "cached_idle drift: counted {idle}, stored {}",
+            self.cached_idle
+        );
         Ok(())
     }
 }
@@ -224,6 +450,110 @@ mod tests {
         let mut m = mgr();
         m.allocate(1, 4).unwrap();
         assert!(m.allocate(1, 4).is_err());
+    }
+
+    #[test]
+    fn fork_shares_all_blocks_then_cow_on_append() {
+        let mut m = KvBlockManager::new(8, 4, 0.0);
+        m.allocate(1, 6).unwrap(); // 2 blocks, partial tail (2/4 used)
+        m.fork(1, 2).unwrap();
+        assert_eq!(m.free_blocks(), 6, "fork costs no blocks");
+        let tail = *m.table(1).unwrap().blocks.last().unwrap();
+        assert_eq!(m.ref_count(tail), 2);
+        m.check_invariants().unwrap();
+
+        // Child append lands in the shared partial tail -> copy-on-write.
+        assert!(m.append_token(2).unwrap());
+        assert_eq!(m.cow_forks(), 1);
+        assert_eq!(m.ref_count(tail), 1);
+        assert_ne!(
+            m.table(1).unwrap().blocks.last(),
+            m.table(2).unwrap().blocks.last()
+        );
+        m.check_invariants().unwrap();
+
+        // Parent's tail is private again: in-place append, no claim.
+        assert!(!m.append_token(1).unwrap());
+        assert_eq!(m.cow_forks(), 1);
+
+        m.free_seq(1).unwrap();
+        m.free_seq(2).unwrap();
+        assert_eq!(m.free_blocks(), 8);
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn seal_returns_only_full_blocks() {
+        let mut m = KvBlockManager::new(8, 4, 0.0);
+        m.allocate(1, 10).unwrap(); // 3 blocks, 2 full
+        let sealed = m.seal(1).unwrap();
+        assert_eq!(sealed.len(), 2);
+        assert_eq!(&m.table(1).unwrap().blocks[..2], &sealed[..]);
+    }
+
+    #[test]
+    fn cached_block_lifecycle_survives_free_then_evicts() {
+        let mut m = KvBlockManager::new(8, 4, 0.0);
+        m.allocate(1, 9).unwrap(); // 3 blocks, 2 full
+        for b in m.seal(1).unwrap() {
+            m.mark_cached(b).unwrap();
+        }
+        m.check_invariants().unwrap();
+        // Only the uncached partial tail returns to the free list.
+        assert_eq!(m.free_seq(1).unwrap(), 1);
+        assert_eq!(m.cached_idle_blocks(), 2);
+        assert_eq!(m.allocated_blocks(), 0);
+        assert!(m.can_admit(32), "idle blocks still count as capacity");
+        m.check_invariants().unwrap();
+
+        // Lease one idle block into a new sequence, evict the other.
+        let shared = {
+            let mut idle: Vec<u32> =
+                (0..8).filter(|&b| m.is_evictable(b)).collect();
+            idle.sort_unstable();
+            idle
+        };
+        m.allocate_shared(2, 5, &shared[..1]).unwrap();
+        assert_eq!(m.cached_idle_blocks(), 1);
+        m.evict(shared[1]).unwrap();
+        assert_eq!(m.cached_idle_blocks(), 0);
+        assert!(!m.is_cached(shared[1]));
+        m.check_invariants().unwrap();
+
+        m.free_seq(2).unwrap();
+        // shared[0] is still cached -> idle again, not freed.
+        assert_eq!(m.cached_idle_blocks(), 1);
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn allocate_shared_rejects_dead_or_duplicate_blocks() {
+        let mut m = KvBlockManager::new(8, 4, 0.0);
+        m.allocate(1, 4).unwrap();
+        let b = m.table(1).unwrap().blocks[0];
+        // Free-listed block cannot be shared.
+        let dead = (0..8).find(|&x| m.ref_count(x) == 0).unwrap();
+        assert!(m.allocate_shared(2, 8, &[dead]).is_err());
+        // Duplicate shared list rejected.
+        assert!(m.allocate_shared(2, 12, &[b, b]).is_err());
+        // Live block shared fine.
+        m.allocate_shared(2, 8, &[b]).unwrap();
+        assert_eq!(m.ref_count(b), 2);
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn evict_rejects_live_or_uncached_blocks() {
+        let mut m = KvBlockManager::new(4, 4, 0.0);
+        m.allocate(1, 8).unwrap();
+        let b = m.table(1).unwrap().blocks[0];
+        assert!(m.evict(b).is_err(), "referenced block not evictable");
+        m.mark_cached(b).unwrap();
+        assert!(m.evict(b).is_err(), "cached but referenced: not evictable");
+        m.free_seq(1).unwrap();
+        m.evict(b).unwrap();
+        assert!(m.evict(b).is_err(), "already evicted");
+        m.check_invariants().unwrap();
     }
 
     #[test]

@@ -79,6 +79,13 @@ pub struct EngineMetrics {
     pub decode_steps: u64,
     /// Sum over decode steps of active lanes (for mean batch occupancy).
     pub decode_lane_steps: u64,
+    /// Prefix-cache counters: requests admitted with/without a cached
+    /// prompt prefix, prompt tokens whose prefill was skipped, and cached
+    /// blocks evicted under the cache's budget.
+    pub prefix_hits: u64,
+    pub prefix_misses: u64,
+    pub prefix_tokens_skipped: u64,
+    pub prefix_evictions: u64,
     pub ttft: Histogram,
     pub itl: Histogram,
     pub e2e: Histogram,
@@ -97,11 +104,18 @@ impl EngineMetrics {
         }
     }
 
+    /// Fraction of admissions that found a cached prompt prefix.
+    pub fn prefix_hit_rate(&self) -> f64 {
+        let n = self.prefix_hits + self.prefix_misses;
+        if n == 0 { 0.0 } else { self.prefix_hits as f64 / n as f64 }
+    }
+
     pub fn report(&self, wall_s: f64) -> String {
         format!(
             "requests: {} admitted, {} finished, {} rejected\n\
              tokens:   {} prompt, {} generated\n\
              steps:    {} total ({} prefill, {} decode; mean decode batch {:.2})\n\
+             prefix:   {} hits / {} misses ({:.0}% hit rate), {} tokens skipped, {} evictions\n\
              wall:     {:.2}s -> {:.1} gen tok/s\n\
              TTFT:     mean {:.1} ms, p50 {:.1} ms, p99 {:.1} ms\n\
              ITL:      mean {:.1} ms, p50 {:.1} ms, p99 {:.1} ms",
@@ -114,6 +128,11 @@ impl EngineMetrics {
             self.prefill_steps,
             self.decode_steps,
             self.mean_decode_batch(),
+            self.prefix_hits,
+            self.prefix_misses,
+            self.prefix_hit_rate() * 100.0,
+            self.prefix_tokens_skipped,
+            self.prefix_evictions,
             wall_s,
             self.generated_tokens as f64 / wall_s.max(1e-9),
             self.ttft.mean_s() * 1e3,
@@ -157,5 +176,18 @@ mod tests {
         m.decode_steps = 4;
         m.decode_lane_steps = 10;
         assert_eq!(m.mean_decode_batch(), 2.5);
+    }
+
+    #[test]
+    fn prefix_hit_rate_and_report_line() {
+        let mut m = EngineMetrics::new();
+        assert_eq!(m.prefix_hit_rate(), 0.0);
+        m.prefix_hits = 3;
+        m.prefix_misses = 1;
+        m.prefix_tokens_skipped = 48;
+        assert_eq!(m.prefix_hit_rate(), 0.75);
+        let report = m.report(1.0);
+        assert!(report.contains("75% hit rate"), "{report}");
+        assert!(report.contains("48 tokens skipped"), "{report}");
     }
 }

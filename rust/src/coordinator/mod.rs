@@ -3,12 +3,18 @@
 //! * [`request`] — request/sequence lifecycle types.
 //! * [`batcher`] — FCFS admission queue, lane assignment, prefill-priority
 //!   step planning (continuous batching over fixed-shape AOT artifacts).
-//! * [`kv_cache`] — paged KV block manager (vLLM-style), the memory
-//!   accountant that converts quantization's freed bytes into batch slots.
+//! * [`kv_cache`] — paged KV block manager (vLLM-style) with refcounted
+//!   copy-on-write block sharing, the memory accountant that converts
+//!   quantization's freed bytes into batch slots.
+//! * [`prefix`] — automatic prefix cache: content-addressed full KV
+//!   blocks (hash chained over token ids), a radix-trie index mapping
+//!   token prefixes to cached block chains, and LRU eviction of
+//!   unreferenced blocks. Shared prompt prefixes (system prompts,
+//!   multi-turn chat) skip their prefill compute.
 //! * [`engine`] — the real engine: drives the PJRT runtime over the
 //!   AOT-compiled tiny model; Python never runs here.
 //! * [`router`] — multi-replica request router (round-robin, least-loaded,
-//!   session-affinity) for scale-out serving.
+//!   session-affinity, prefix-aware) for scale-out serving.
 //! * [`simserve`] — the same policy run against the `gpusim` cost model at
 //!   paper scale (Table 1, Fig. 8).
 //! * [`metrics`] — throughput counters and TTFT/ITL histograms.
@@ -17,6 +23,7 @@ pub mod batcher;
 pub mod engine;
 pub mod kv_cache;
 pub mod metrics;
+pub mod prefix;
 pub mod request;
 pub mod router;
 pub mod sampler;
@@ -26,6 +33,7 @@ pub use batcher::{Batcher, StepPlan};
 pub use engine::{Completion, Engine, EngineConfig};
 pub use kv_cache::{blocks_for_device, KvBlockManager};
 pub use metrics::{EngineMetrics, Histogram};
+pub use prefix::{chain_hash, BlockHash, PrefixCache, PrefixIndex, PrefixStats, ROOT_HASH};
 pub use request::{FinishReason, GenerationRequest, SeqState, Sequence};
-pub use router::{Policy, RouteDecision, Router};
+pub use router::{prefix_key, Policy, RouteDecision, Router};
 pub use simserve::{simulate_serving, SimPolicy, SimResult};

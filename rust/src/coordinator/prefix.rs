@@ -1,0 +1,591 @@
+//! Automatic prefix caching: content-addressed KV blocks + radix-trie index.
+//!
+//! vLLM-style automatic prefix cache over the paged [`KvBlockManager`]:
+//!
+//! * every **full** KV block is content-addressed by a hash chained over
+//!   its token ids and all preceding block hashes ([`chain_hash`]) — two
+//!   sequences that share a token prefix share the same block-hash chain;
+//! * a block-granular radix trie ([`PrefixIndex`]) maps token prefixes to
+//!   cached block chains (one trie node per full block, children keyed by
+//!   the chained hash, longest-prefix matching at block granularity);
+//! * unreferenced cached blocks stay resident as *evictable idle* capacity
+//!   and are reclaimed leaf-first in LRU order when admission or decode
+//!   needs free blocks.
+//!
+//! [`PrefixCache`] couples the index to the block manager's refcounted
+//! copy-on-write ownership: admission leases matched blocks (refcount++),
+//! skipping prefill compute for those tokens; registration publishes a
+//! sequence's sealed full blocks; release keeps them warm for the next
+//! request with the same prefix (system prompts, multi-turn chat,
+//! few-shot templates — the dominant pattern in the "millions of users"
+//! serving regime the ROADMAP targets).
+
+use std::collections::{HashMap, HashSet};
+
+use anyhow::{bail, Result};
+
+use super::kv_cache::{KvBlockManager, SeqId};
+
+/// Chained content hash of a full KV block.
+pub type BlockHash = u64;
+
+/// Hash-chain seed for the empty prefix.
+pub const ROOT_HASH: BlockHash = 0x9E37_79B9_7F4A_7C15;
+
+/// Extend the hash chain `parent` with one block's token ids.
+///
+/// FNV-style fold plus a SplitMix64 finalizer so chained states stay
+/// decorrelated; collisions are additionally guarded by comparing the
+/// stored token ids on every trie hit.
+pub fn chain_hash(parent: BlockHash, tokens: &[i32]) -> BlockHash {
+    let mut h = parent ^ 0xA076_1D64_78BD_642F;
+    for &t in tokens {
+        h = (h ^ (t as u32 as u64)).wrapping_mul(0x1_0000_01B3);
+        h ^= h >> 29;
+    }
+    h = (h ^ (h >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    h = (h ^ (h >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    h ^ (h >> 31)
+}
+
+/// One matched block of a cached prefix chain.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PrefixMatch {
+    pub hash: BlockHash,
+    /// Physical block id (or an engine-side handle) holding the KV data.
+    pub block: u32,
+}
+
+/// One trie node = one full cached block.
+#[derive(Debug)]
+struct Node {
+    hash: BlockHash,
+    parent: Option<u32>,
+    /// The block's token ids (exactly `block_size`) — collision guard and
+    /// the trie edge label.
+    tokens: Vec<i32>,
+    block: u32,
+    /// Number of child nodes; only leaves (0) are evictable.
+    children: u32,
+    /// Logical LRU tick of the last match/insert touching this node.
+    last_used: u64,
+}
+
+/// Block-granular radix trie over token prefixes.
+///
+/// Nodes live in a slab (`slots`) with a free list; `by_hash` gives O(1)
+/// chain walking, the parent/children links give leaf-first eviction.
+#[derive(Debug)]
+pub struct PrefixIndex {
+    block_size: usize,
+    slots: Vec<Option<Node>>,
+    free_slots: Vec<u32>,
+    by_hash: HashMap<BlockHash, u32>,
+    tick: u64,
+}
+
+impl PrefixIndex {
+    pub fn new(block_size: usize) -> Self {
+        assert!(block_size > 0);
+        PrefixIndex {
+            block_size,
+            slots: Vec::new(),
+            free_slots: Vec::new(),
+            by_hash: HashMap::new(),
+            tick: 0,
+        }
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.block_size
+    }
+
+    /// Number of cached blocks in the index.
+    pub fn len(&self) -> usize {
+        self.slots.len() - self.free_slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Walk the cached chain for `tokens` with no LRU side effects.
+    fn walk_prefix(&self, tokens: &[i32]) -> Vec<(u32, PrefixMatch)> {
+        let bs = self.block_size;
+        let max_blocks = tokens.len().saturating_sub(1) / bs;
+        let mut out = Vec::new();
+        let mut h = ROOT_HASH;
+        for i in 0..max_blocks {
+            let chunk = &tokens[i * bs..(i + 1) * bs];
+            let next = chain_hash(h, chunk);
+            let Some(&slot) = self.by_hash.get(&next) else { break };
+            let node = self.slots[slot as usize].as_ref().expect("hash maps to live node");
+            if node.tokens != chunk {
+                break; // 64-bit collision: treat as a miss
+            }
+            out.push((slot, PrefixMatch { hash: next, block: node.block }));
+            h = next;
+        }
+        out
+    }
+
+    fn touch(&mut self, slot: u32) {
+        self.tick += 1;
+        self.slots[slot as usize].as_mut().unwrap().last_used = self.tick;
+    }
+
+    /// Longest cached prefix of `tokens`, as a chain of full blocks.
+    ///
+    /// Always leaves at least one token uncovered so the caller still has
+    /// a token to run and produce logits from (vLLM's `- 1` rule).
+    /// Touches every matched node's LRU tick.
+    pub fn match_prefix(&mut self, tokens: &[i32]) -> Vec<PrefixMatch> {
+        let walked = self.walk_prefix(tokens);
+        let mut out = Vec::with_capacity(walked.len());
+        for (slot, m) in walked {
+            self.touch(slot);
+            out.push(m);
+        }
+        out
+    }
+
+    /// Longest cached prefix length in tokens, LRU-neutral (estimation
+    /// only — a request that is merely *considered* must not keep its
+    /// chain artificially warm).
+    pub fn match_len_tokens(&self, tokens: &[i32]) -> u64 {
+        self.walk_prefix(tokens).len() as u64 * self.block_size as u64
+    }
+
+    /// Insert the full-block prefix of `tokens`, adopting the caller's
+    /// physical `blocks` for chain links not already cached. Existing
+    /// links are kept (first writer wins — the caller's duplicate block
+    /// stays private) and LRU-touched. Returns `(chunk_index, block)` for
+    /// every newly adopted block so the caller can publish its data.
+    pub fn insert(&mut self, tokens: &[i32], blocks: &[u32]) -> Vec<(usize, u32)> {
+        let bs = self.block_size;
+        let n = (tokens.len() / bs).min(blocks.len());
+        let mut out = Vec::new();
+        let mut h = ROOT_HASH;
+        let mut parent: Option<u32> = None;
+        for i in 0..n {
+            let chunk = &tokens[i * bs..(i + 1) * bs];
+            let next = chain_hash(h, chunk);
+            if let Some(&slot) = self.by_hash.get(&next) {
+                if self.slots[slot as usize].as_ref().expect("live").tokens != chunk {
+                    break; // collision: refuse to extend a divergent chain
+                }
+                self.tick += 1;
+                self.slots[slot as usize].as_mut().unwrap().last_used = self.tick;
+                parent = Some(slot);
+                h = next;
+                continue;
+            }
+            self.tick += 1;
+            let node = Node {
+                hash: next,
+                parent,
+                tokens: chunk.to_vec(),
+                block: blocks[i],
+                children: 0,
+                last_used: self.tick,
+            };
+            let slot = match self.free_slots.pop() {
+                Some(s) => {
+                    self.slots[s as usize] = Some(node);
+                    s
+                }
+                None => {
+                    self.slots.push(Some(node));
+                    (self.slots.len() - 1) as u32
+                }
+            };
+            if let Some(p) = parent {
+                self.slots[p as usize].as_mut().unwrap().children += 1;
+            }
+            self.by_hash.insert(next, slot);
+            out.push((i, blocks[i]));
+            parent = Some(slot);
+            h = next;
+        }
+        out
+    }
+
+    /// Evict the least-recently-used *leaf* whose block passes `can_evict`;
+    /// returns the freed block. Interior nodes become evictable once their
+    /// children are gone (leaf-first, vLLM-style).
+    pub fn evict_lru(&mut self, can_evict: impl Fn(u32) -> bool) -> Option<u32> {
+        self.evict_lru_many(1, can_evict).pop()
+    }
+
+    /// Evict up to `k` current leaves passing `can_evict`, oldest first,
+    /// in one slab scan. Amortizes the scan when the caller needs many
+    /// blocks (or expects to need more soon); interior nodes exposed by
+    /// these removals are picked up by the next call.
+    pub fn evict_lru_many(&mut self, k: usize, can_evict: impl Fn(u32) -> bool) -> Vec<u32> {
+        if k == 0 {
+            return Vec::new();
+        }
+        let mut cands: Vec<(u64, u32)> = self
+            .slots
+            .iter()
+            .enumerate()
+            .filter_map(|(i, s)| {
+                s.as_ref()
+                    .filter(|n| n.children == 0 && can_evict(n.block))
+                    .map(|n| (n.last_used, i as u32))
+            })
+            .collect();
+        cands.sort_unstable();
+        cands.truncate(k);
+        cands.into_iter().map(|(_, slot)| self.remove_slot(slot)).collect()
+    }
+
+    fn remove_slot(&mut self, slot: u32) -> u32 {
+        let node = self.slots[slot as usize].take().expect("live");
+        self.by_hash.remove(&node.hash);
+        if let Some(p) = node.parent {
+            if let Some(pn) = self.slots[p as usize].as_mut() {
+                pn.children -= 1;
+            }
+        }
+        self.free_slots.push(slot);
+        node.block
+    }
+
+    /// Exact count of blocks reclaimable by leaf-first eviction: nodes
+    /// passing `pred` with no failing descendant (a leased or protected
+    /// descendant pins every ancestor until it is released).
+    pub fn reclaimable_count(&self, mut pred: impl FnMut(u32) -> bool) -> u64 {
+        let n = self.slots.len();
+        let mut pass = vec![false; n];
+        for (i, s) in self.slots.iter().enumerate() {
+            if let Some(node) = s {
+                pass[i] = pred(node.block);
+            }
+        }
+        let mut pinned = vec![false; n];
+        for (i, s) in self.slots.iter().enumerate() {
+            if let Some(node) = s {
+                if !pass[i] {
+                    let mut p = node.parent;
+                    while let Some(pi) = p {
+                        if pinned[pi as usize] {
+                            break;
+                        }
+                        pinned[pi as usize] = true;
+                        p = self.slots[pi as usize].as_ref().and_then(|x| x.parent);
+                    }
+                }
+            }
+        }
+        (0..n)
+            .filter(|&i| self.slots[i].is_some() && pass[i] && !pinned[i])
+            .count() as u64
+    }
+}
+
+/// Cache hit/eviction counters (mirrored into `EngineMetrics` /
+/// `SimResult` by the serving layers).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct PrefixStats {
+    /// Requests admitted with a non-empty cached prefix.
+    pub hits: u64,
+    /// Requests admitted with no cached prefix.
+    pub misses: u64,
+    /// Prompt tokens whose prefill compute was skipped.
+    pub tokens_skipped: u64,
+    /// Cached blocks reclaimed to the free list.
+    pub evictions: u64,
+    /// Full blocks published into the index.
+    pub registered_blocks: u64,
+}
+
+impl PrefixStats {
+    pub fn hit_rate(&self) -> f64 {
+        let n = self.hits + self.misses;
+        if n == 0 { 0.0 } else { self.hits as f64 / n as f64 }
+    }
+}
+
+/// The prefix cache: radix-trie index + eviction policy, coupled to the
+/// refcounted [`KvBlockManager`]. All block-state transitions go through
+/// the manager so its ledger invariants keep holding.
+#[derive(Debug)]
+pub struct PrefixCache {
+    index: PrefixIndex,
+    enabled: bool,
+    pub stats: PrefixStats,
+}
+
+impl PrefixCache {
+    pub fn new(block_size: usize, enabled: bool) -> Self {
+        PrefixCache { index: PrefixIndex::new(block_size), enabled, stats: PrefixStats::default() }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    pub fn index(&self) -> &PrefixIndex {
+        &self.index
+    }
+
+    /// Prompt tokens the cache currently covers for this token stream,
+    /// without leasing anything or touching LRU state (admission-budget
+    /// estimation).
+    pub fn peek_match_tokens(&self, tokens: &[i32]) -> u64 {
+        if !self.enabled {
+            return 0;
+        }
+        self.index.match_len_tokens(tokens)
+    }
+
+    /// Admit a sequence: lease the longest cached prefix (skipping its
+    /// prefill), evict idle cached blocks as needed for the rest, and
+    /// allocate. Returns the number of prompt tokens served from cache.
+    /// Errors when the pool (free + evictable) cannot cover the request
+    /// without dipping below the decode watermark.
+    pub fn admit(&mut self, kv: &mut KvBlockManager, seq: SeqId, tokens: &[i32]) -> Result<u64> {
+        let need_total = kv.blocks_needed(tokens.len().max(1) as u64);
+        if self.enabled {
+            // Walk LRU-neutrally: a request that is merely *considered*
+            // (and may fail admission every round under pressure) must not
+            // keep its chain warm; ticks are touched only on lease commit.
+            let walked = self.index.walk_prefix(tokens);
+            let protect: HashSet<u32> = walked.iter().map(|(_, m)| m.block).collect();
+            let need_fresh = need_total - walked.len() as u64;
+            let headroom = kv.free_blocks()
+                + self.index.reclaimable_count(|b| kv.is_evictable(b) && !protect.contains(&b));
+            if headroom >= need_fresh + kv.watermark_blocks()
+                && self.reclaim_protected(kv, need_fresh, &protect)
+            {
+                let blocks: Vec<u32> = walked.iter().map(|(_, m)| m.block).collect();
+                kv.allocate_shared(seq, tokens.len().max(1) as u64, &blocks)?;
+                for (slot, _) in walked {
+                    self.index.touch(slot);
+                }
+                let skipped = blocks.len() as u64 * self.index.block_size() as u64;
+                if skipped > 0 {
+                    self.stats.hits += 1;
+                    self.stats.tokens_skipped += skipped;
+                } else {
+                    self.stats.misses += 1;
+                }
+                return Ok(skipped);
+            }
+            // Fall through: the matched chain could not be honored (e.g.
+            // every evictable block is part of it) — admit exclusively so
+            // caching never admits less than the cache-off policy would.
+        }
+        let reclaimable = self.index.reclaimable_count(|b| kv.is_evictable(b));
+        if kv.free_blocks() + reclaimable < need_total + kv.watermark_blocks() {
+            bail!(
+                "admission would dip below the decode watermark: need {need_total}, \
+                 free {} (+{reclaimable} reclaimable), watermark {}",
+                kv.free_blocks(),
+                kv.watermark_blocks()
+            );
+        }
+        self.reclaim_protected(kv, need_total, &HashSet::new());
+        kv.allocate(seq, tokens.len().max(1) as u64)?;
+        if self.enabled {
+            self.stats.misses += 1;
+        }
+        Ok(0)
+    }
+
+    /// Publish a sequence's sealed full blocks into the index (content
+    /// already deduplicated: chain links cached by an earlier sequence are
+    /// kept and this sequence's copies stay private).
+    pub fn register(&mut self, kv: &mut KvBlockManager, seq: SeqId, tokens: &[i32]) -> Result<()> {
+        if !self.enabled {
+            return Ok(());
+        }
+        let bs = self.index.block_size();
+        let full = kv.seal(seq)?;
+        let n = full.len().min(tokens.len() / bs);
+        if n == 0 {
+            return Ok(());
+        }
+        for (_, b) in self.index.insert(&tokens[..n * bs], &full[..n]) {
+            kv.mark_cached(b)?;
+            self.stats.registered_blocks += 1;
+        }
+        Ok(())
+    }
+
+    /// Reclaim idle cached blocks until `need_free` blocks are free.
+    /// Returns false if eviction ran dry first (decode then preempts, as
+    /// without a cache).
+    pub fn reclaim(&mut self, kv: &mut KvBlockManager, need_free: u64) -> bool {
+        self.reclaim_protected(kv, need_free, &HashSet::new())
+    }
+
+    fn reclaim_protected(
+        &mut self,
+        kv: &mut KvBlockManager,
+        need_free: u64,
+        protect: &HashSet<u32>,
+    ) -> bool {
+        while kv.free_blocks() < need_free {
+            // Evict a batch per scan: over-shooting the immediate need by
+            // a few LRU blocks keeps the steady-state decode path (which
+            // reclaims one block per token) off the O(index) scan.
+            let want = ((need_free - kv.free_blocks()) as usize).max(32);
+            let freed = self
+                .index
+                .evict_lru_many(want, |b| kv.is_evictable(b) && !protect.contains(&b));
+            if freed.is_empty() {
+                return false;
+            }
+            for b in freed {
+                kv.evict(b).expect("evict_lru returned a non-evictable block");
+                self.stats.evictions += 1;
+            }
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(lo: i32, n: usize) -> Vec<i32> {
+        (lo..lo + n as i32).collect()
+    }
+
+    #[test]
+    fn chain_hash_diverges_on_token_and_parent() {
+        let a = chain_hash(ROOT_HASH, &[1, 2, 3, 4]);
+        assert_eq!(a, chain_hash(ROOT_HASH, &[1, 2, 3, 4]));
+        assert_ne!(a, chain_hash(ROOT_HASH, &[1, 2, 3, 5]));
+        assert_ne!(a, chain_hash(a, &[1, 2, 3, 4]));
+    }
+
+    #[test]
+    fn index_matches_inserted_prefix_and_caps_last_token() {
+        let mut idx = PrefixIndex::new(4);
+        let t = toks(0, 12);
+        assert_eq!(idx.insert(&t, &[10, 11, 12]).len(), 3);
+        // 12 tokens = 3 full blocks, but the cap leaves the last token.
+        let m = idx.match_prefix(&t);
+        assert_eq!(m.len(), 2);
+        assert_eq!(m[0].block, 10);
+        assert_eq!(m[1].block, 11);
+        // 13 tokens -> all 3 blocks match.
+        let mut t13 = t.clone();
+        t13.push(99);
+        assert_eq!(idx.match_prefix(&t13).len(), 3);
+        // Divergent tail matches only the shared head.
+        let mut div = toks(0, 8);
+        div.extend(toks(100, 5));
+        assert_eq!(idx.match_prefix(&div).len(), 2);
+    }
+
+    #[test]
+    fn insert_dedups_against_existing_chain() {
+        let mut idx = PrefixIndex::new(4);
+        let t = toks(0, 8);
+        assert_eq!(idx.insert(&t, &[1, 2]).len(), 2);
+        // Same content, different physical blocks: nothing new inserted.
+        assert!(idx.insert(&t, &[7, 8]).is_empty());
+        // A longer chain extends past the shared head only.
+        let mut t12 = t.clone();
+        t12.extend(toks(50, 4));
+        let newly = idx.insert(&t12, &[7, 8, 9]);
+        assert_eq!(newly, vec![(2, 9)]);
+        assert_eq!(idx.len(), 3);
+    }
+
+    #[test]
+    fn lru_evicts_leaves_first_least_recent_first() {
+        let mut idx = PrefixIndex::new(4);
+        let a = toks(0, 8); // chain a0 -> a1
+        let b = toks(100, 4); // chain b0
+        idx.insert(&a, &[1, 2]);
+        idx.insert(&b, &[3]);
+        // Touch chain b so chain a's leaf is the LRU leaf.
+        let mut b5 = b.clone();
+        b5.push(0);
+        idx.match_prefix(&b5);
+        // a0 has a child, so the first eviction must take leaf a1.
+        assert_eq!(idx.evict_lru(|_| true), Some(2));
+        assert_eq!(idx.evict_lru(|_| true), Some(1)); // now a0 is a leaf
+        assert_eq!(idx.evict_lru(|_| true), Some(3));
+        assert_eq!(idx.evict_lru(|_| true), None);
+        assert!(idx.is_empty());
+    }
+
+    #[test]
+    fn cache_admit_leases_then_register_publishes() {
+        let mut kv = KvBlockManager::new(16, 4, 0.0);
+        let mut c = PrefixCache::new(4, true);
+        let prompt = toks(0, 9); // 3 blocks, 2 full
+        assert_eq!(c.admit(&mut kv, 1, &prompt).unwrap(), 0);
+        c.register(&mut kv, 1, &prompt).unwrap();
+        assert_eq!(c.index().len(), 2);
+        kv.free_seq(1).unwrap();
+        assert_eq!(kv.cached_idle_blocks(), 2);
+        // Second identical prompt leases both full blocks.
+        assert_eq!(c.admit(&mut kv, 2, &prompt).unwrap(), 8);
+        assert_eq!(c.stats.hits, 1);
+        assert_eq!(c.stats.tokens_skipped, 8);
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn shared_prefix_admits_more_concurrent_sequences() {
+        // Acceptance: a fully-shared prefix admits more concurrent
+        // sequences than exclusive ownership allows at equal KV budget.
+        let (total, bs) = (24u64, 16u64);
+        let prefix = toks(0, 128); // 8 full blocks
+        let mk = |salt: i32| {
+            let mut p = prefix.clone();
+            p.push(1000 + salt);
+            p // 129 tokens -> 9 blocks
+        };
+
+        let mut kv = KvBlockManager::new(total, bs, 0.0);
+        let mut off = PrefixCache::new(bs as usize, false);
+        let mut exclusive = 0u64;
+        while off.admit(&mut kv, exclusive, &mk(exclusive as i32)).is_ok() {
+            exclusive += 1;
+        }
+        assert_eq!(exclusive, 2); // 9 blocks each, 24 total
+
+        let mut kv = KvBlockManager::new(total, bs, 0.0);
+        let mut on = PrefixCache::new(bs as usize, true);
+        let mut shared = 0u64;
+        loop {
+            let p = mk(shared as i32);
+            match on.admit(&mut kv, shared, &p) {
+                Ok(_) => {
+                    on.register(&mut kv, shared, &p).unwrap();
+                    shared += 1;
+                }
+                Err(_) => break,
+            }
+        }
+        kv.check_invariants().unwrap();
+        assert!(shared > exclusive, "shared {shared} <= exclusive {exclusive}");
+        assert_eq!(shared, 16); // 8 shared + 1 private tail each
+    }
+
+    #[test]
+    fn eviction_reclaims_idle_blocks_for_new_admissions() {
+        let mut kv = KvBlockManager::new(8, 4, 0.0);
+        let mut c = PrefixCache::new(4, true);
+        let a = toks(0, 17); // 5 blocks, 4 full
+        c.admit(&mut kv, 1, &a).unwrap();
+        c.register(&mut kv, 1, &a).unwrap();
+        kv.free_seq(1).unwrap();
+        assert_eq!(kv.free_blocks(), 4);
+        assert_eq!(kv.cached_idle_blocks(), 4);
+        // A disjoint prompt needing 6 blocks forces eviction of idle ones.
+        let b = toks(500, 23);
+        assert_eq!(c.admit(&mut kv, 2, &b).unwrap(), 0);
+        assert!(c.stats.evictions >= 2, "evictions {}", c.stats.evictions);
+        kv.check_invariants().unwrap();
+    }
+}

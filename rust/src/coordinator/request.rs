@@ -34,6 +34,9 @@ pub struct Sequence {
     /// All tokens: prompt followed by generated.
     pub tokens: Vec<i32>,
     pub generated: usize,
+    /// Prompt tokens served from the automatic prefix cache at prefill
+    /// (their KV was reused, so their prefill compute was skipped).
+    pub cached_prefix_tokens: usize,
     pub state: SeqState,
     pub enqueued_at: Instant,
     pub first_token_at: Option<Instant>,
@@ -56,6 +59,7 @@ impl Sequence {
             req,
             tokens,
             generated: 0,
+            cached_prefix_tokens: 0,
             state: SeqState::Waiting,
             enqueued_at: Instant::now(),
             first_token_at: None,
@@ -68,6 +72,12 @@ impl Sequence {
     /// attention context length so far).
     pub fn pos(&self) -> usize {
         self.tokens.len()
+    }
+
+    /// Prompt tokens that still need prefill compute (total minus the
+    /// cached prefix).
+    pub fn uncached_prompt_tokens(&self) -> usize {
+        self.req.prompt.len() - self.cached_prefix_tokens.min(self.req.prompt.len())
     }
 
     pub fn last_token(&self) -> i32 {

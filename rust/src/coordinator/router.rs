@@ -22,6 +22,20 @@ pub enum Policy {
     /// the same replica (KV reuse), falling back to least-loaded when the
     /// preferred replica is saturated.
     SessionAffinity,
+    /// Content-aware affinity: route on the chained hash of the first
+    /// prompt block (see [`prefix_key`]) so requests sharing a prompt
+    /// prefix land on the replica whose automatic prefix cache
+    /// (`coordinator::prefix`) already holds its KV blocks. Same spill
+    /// behavior as [`Policy::SessionAffinity`].
+    PrefixAware,
+}
+
+/// Routing key for [`Policy::PrefixAware`]: the content hash of the first
+/// prompt block, chained from the root exactly like the prefix index does,
+/// so router placement and cache lookup agree on what "same prefix" means.
+pub fn prefix_key(prompt: &[i32], block_size: usize) -> u64 {
+    let take = prompt.len().min(block_size.max(1));
+    super::prefix::chain_hash(super::prefix::ROOT_HASH, &prompt[..take])
 }
 
 /// Tracked state of one replica.
@@ -105,7 +119,9 @@ impl Router {
                 chosen
             }
             Policy::LeastLoaded => self.least_loaded(),
-            Policy::SessionAffinity => {
+            // PrefixAware is SessionAffinity with a content-derived key:
+            // callers pass `prefix_key(prompt, block_size)` as `session`.
+            Policy::SessionAffinity | Policy::PrefixAware => {
                 let preferred = session.map(|s| (s as usize) % n);
                 match preferred {
                     Some(p) if self.has_room(p) => Some(p),
@@ -215,5 +231,42 @@ mod tests {
     #[test]
     fn zero_replicas_rejected() {
         assert!(Router::new(Policy::RoundRobin, &[]).is_err());
+    }
+
+    #[test]
+    fn prefix_aware_groups_shared_first_block() {
+        let mut r = Router::new(Policy::PrefixAware, &[0, 0, 0, 0]).unwrap();
+        let bs = 16usize;
+        // Same system prompt, divergent tails: identical first block.
+        let shared: Vec<i32> = (0..24).collect();
+        let mut a = shared.clone();
+        a.extend([900, 901]);
+        let mut b = shared.clone();
+        b.extend([700, 701, 702]);
+        let key = prefix_key(&shared, bs);
+        assert_eq!(prefix_key(&a, bs), key, "tail must not change the key");
+        assert_eq!(prefix_key(&b, bs), key);
+        let want = (key as usize) % 4;
+        assert_eq!(r.route(10, Some(prefix_key(&a, bs))).unwrap().replica, want);
+        assert_eq!(r.route(10, Some(prefix_key(&b, bs))).unwrap().replica, want);
+        // A different opening block routes by its own hash.
+        let other: Vec<i32> = (500..540).collect();
+        let other_want = (prefix_key(&other, bs) as usize) % 4;
+        assert_eq!(
+            r.route(10, Some(prefix_key(&other, bs))).unwrap().replica,
+            other_want
+        );
+        assert_ne!(prefix_key(&other, bs), key);
+    }
+
+    #[test]
+    fn prefix_aware_spills_when_preferred_replica_full() {
+        let mut r = Router::new(Policy::PrefixAware, &[1, 1]).unwrap();
+        let key = prefix_key(&[1, 2, 3, 4], 4);
+        let first = r.route(5, Some(key)).unwrap().replica;
+        assert_eq!(first, (key as usize) % 2);
+        // Preferred replica is at cap: spill to the other one.
+        let second = r.route(5, Some(key)).unwrap().replica;
+        assert_eq!(second, 1 - first);
     }
 }

@@ -8,6 +8,15 @@
 //! [`super::kv_cache::KvBlockManager`] sized from the device's free memory
 //! — which is how weight-only quantization turns freed weight bytes into
 //! batch capacity (paper §4.2).
+//!
+//! With `SimPolicy::enable_prefix_cache` (default on, matching vLLM), the
+//! automatic prefix cache (`super::prefix`) runs against the *real* token
+//! streams synthesized by `workload::Request::token_at`: admission leases
+//! the longest cached block chain, the prefill cost model is charged only
+//! for the uncached suffix, and finished sequences leave their full
+//! blocks resident as evictable idle capacity. Shared-prefix traffic
+//! (system prompts, multi-turn chat) therefore shows the throughput/TTFT
+//! gain as a function of hit rate; disjoint traffic is unaffected.
 
 use std::collections::VecDeque;
 
@@ -17,6 +26,7 @@ use crate::model::LlmSpec;
 use crate::workload::Request;
 
 use super::kv_cache::{blocks_for_device, KvBlockManager};
+use super::prefix::PrefixCache;
 
 /// Simulation policy knobs (vLLM defaults where applicable).
 #[derive(Debug, Clone, Copy)]
@@ -28,6 +38,8 @@ pub struct SimPolicy {
     pub headroom_frac: f64,
     /// Max prompt tokens batched into one prefill step.
     pub max_prefill_tokens: u64,
+    /// Automatic prefix caching (copy-on-write block sharing).
+    pub enable_prefix_cache: bool,
 }
 
 impl Default for SimPolicy {
@@ -38,12 +50,13 @@ impl Default for SimPolicy {
             watermark_frac: 0.01,
             headroom_frac: 0.10,
             max_prefill_tokens: 4096,
+            enable_prefix_cache: true,
         }
     }
 }
 
 /// Outcome of one simulated serving run.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, Default)]
 pub struct SimResult {
     pub finished: usize,
     pub wall_s: f64,
@@ -56,11 +69,46 @@ pub struct SimResult {
     pub mean_batch: f64,
     pub oom: bool,
     pub preemptions: u64,
+    /// Mean time-to-first-token across (re)admissions.
+    pub mean_ttft_s: f64,
+    /// Prefix-cache counters (zero when the cache is off or never hits).
+    pub prefix_hits: u64,
+    pub prefix_misses: u64,
+    pub prefix_tokens_skipped: u64,
+    pub prefix_evictions: u64,
+}
+
+impl SimResult {
+    pub fn prefix_hit_rate(&self) -> f64 {
+        let n = self.prefix_hits + self.prefix_misses;
+        if n == 0 { 0.0 } else { self.prefix_hits as f64 / n as f64 }
+    }
 }
 
 struct RunningSeq {
     req: Request,
     generated: u64,
+}
+
+/// Materialize the first `n` synthetic token ids of a request's stream.
+fn context_ids(req: &Request, n: u64) -> Vec<i32> {
+    (0..n).map(|p| req.token_at(p)).collect()
+}
+
+/// Append one token's KV slot, reclaiming an idle cached block on demand
+/// (eviction stands in for the free list the cache withholds).
+fn append_with_reclaim(kv: &mut KvBlockManager, cache: &mut PrefixCache, id: u64) -> bool {
+    if kv.append_token(id).is_ok() {
+        return true;
+    }
+    cache.reclaim(kv, 1) && kv.append_token(id).is_ok()
+}
+
+/// Publish a sequence's full blocks into the prefix cache, then release it.
+fn register_and_free(kv: &mut KvBlockManager, cache: &mut PrefixCache, req: &Request) {
+    let stored = kv.table(req.id).map(|t| t.tokens).unwrap_or(0);
+    let _ = cache.register(kv, req.id, &context_ids(req, stored));
+    kv.free_seq(req.id).expect("live sequence has blocks");
 }
 
 /// Latency of a (possibly batched) prefill totalling `tokens` prompt tokens.
@@ -97,6 +145,24 @@ fn decode_latency(
         .total_s()
 }
 
+fn kv_pool_blocks(
+    dev: &DeviceSpec,
+    spec: &LlmSpec,
+    kind: KernelKind,
+    policy: &SimPolicy,
+) -> u64 {
+    let w4 = !matches!(kind, KernelKind::Fp16);
+    let kv_per_token =
+        (2 * spec.n_layers * spec.kv_heads * spec.head_dim()) as f64 * 2.0;
+    blocks_for_device(
+        dev.mem_bytes(),
+        spec.weight_bytes(w4),
+        kv_per_token,
+        policy.block_size,
+        policy.headroom_frac,
+    )
+}
+
 /// Run the continuous-batching simulation over an offline workload (all
 /// requests queued at t=0, like vLLM's throughput benchmark).
 pub fn simulate_serving(
@@ -107,31 +173,13 @@ pub fn simulate_serving(
     policy: &SimPolicy,
     calib: &Calib,
 ) -> SimResult {
-    let w4 = !matches!(kind, KernelKind::Fp16);
-    let kv_per_token =
-        (2 * spec.n_layers * spec.kv_heads * spec.head_dim()) as f64 * 2.0;
-    let blocks = blocks_for_device(
-        dev.mem_bytes(),
-        spec.weight_bytes(w4),
-        kv_per_token,
-        policy.block_size,
-        policy.headroom_frac,
-    );
+    let blocks = kv_pool_blocks(dev, spec, kind, policy);
     if blocks == 0 {
-        return SimResult {
-            finished: 0,
-            wall_s: 0.0,
-            prompt_tokens: 0,
-            gen_tokens: 0,
-            gen_tok_per_s: 0.0,
-            total_tok_per_s: 0.0,
-            mean_batch: 0.0,
-            oom: true,
-            preemptions: 0,
-        };
+        return SimResult { oom: true, ..Default::default() };
     }
 
     let mut kv = KvBlockManager::new(blocks, policy.block_size, policy.watermark_frac);
+    let mut cache = PrefixCache::new(policy.block_size as usize, policy.enable_prefix_cache);
     let mut waiting: VecDeque<Request> = requests.iter().copied().collect();
     let mut running: Vec<RunningSeq> = Vec::new();
     let mut clock = 0.0f64;
@@ -141,22 +189,39 @@ pub fn simulate_serving(
     let mut decode_steps = 0u64;
     let mut decode_lane_steps = 0u64;
     let mut preemptions = 0u64;
+    let mut ttft_sum = 0.0f64;
+    let mut ttft_n = 0u64;
 
     while !waiting.is_empty() || !running.is_empty() {
-        // --- admission: batch prefills while budget allows ---
+        // --- admission: batch prefills while budget allows; a matched
+        // prefix is leased from the cache and skips prefill compute ---
         let mut prefill_batch_tokens = 0u64;
         while let Some(&req) = waiting.front() {
-            if running.len() >= policy.max_num_seqs
-                || prefill_batch_tokens + req.prompt_tokens > policy.max_prefill_tokens
-                || !kv.can_admit(req.prompt_tokens)
-            {
+            if running.len() >= policy.max_num_seqs {
                 break;
             }
+            let ids = context_ids(&req, req.prompt_tokens);
+            // Budget the batch by the tokens that actually need compute
+            // (prompt minus the currently cached prefix).
+            let est_new = req.prompt_tokens - cache.peek_match_tokens(&ids);
+            if prefill_batch_tokens + est_new > policy.max_prefill_tokens {
+                break;
+            }
+            let Ok(matched) = cache.admit(&mut kv, req.id, &ids) else { break };
             waiting.pop_front();
-            kv.allocate(req.id, req.prompt_tokens).expect("admission checked");
             prompt_tokens += req.prompt_tokens;
-            prefill_batch_tokens += req.prompt_tokens;
+            prefill_batch_tokens += req.prompt_tokens - matched;
+            // Publish the prompt's full blocks right away so concurrent
+            // same-prefix requests can share them (vLLM registers
+            // computed blocks eagerly).
+            let _ = cache.register(&mut kv, req.id, &ids);
             running.push(RunningSeq { req, generated: 0 });
+            if prefill_batch_tokens > policy.max_prefill_tokens {
+                // admit()'s exclusive fall-back can deliver less cached
+                // prefix than estimated; bound the budget overshoot to
+                // this one request.
+                break;
+            }
         }
         if prefill_batch_tokens > 0 {
             clock += prefill_latency(dev, spec, kind, prefill_batch_tokens, calib);
@@ -165,7 +230,9 @@ pub fn simulate_serving(
             for r in running.iter_mut().filter(|r| r.generated == 0) {
                 r.generated = 1;
                 gen_tokens += 1;
-                let _ = kv.append_token(r.req.id);
+                ttft_sum += clock - r.req.arrival_s();
+                ttft_n += 1;
+                let _ = append_with_reclaim(&mut kv, &mut cache, r.req.id);
             }
         }
 
@@ -193,20 +260,24 @@ pub fn simulate_serving(
 
         let mut i = 0;
         while i < running.len() {
-            let r = &mut running[i];
-            r.generated += 1;
+            running[i].generated += 1;
             gen_tokens += 1;
-            if r.generated >= r.req.gen_tokens {
-                kv.free_seq(r.req.id).expect("finished seq has blocks");
+            let req = running[i].req;
+            let generated = running[i].generated;
+            if generated >= req.gen_tokens {
+                // Finished: leave the context's full blocks warm for the
+                // conversation's next turn.
+                register_and_free(&mut kv, &mut cache, &req);
                 finished += 1;
                 running.swap_remove(i);
                 continue;
             }
-            if kv.append_token(r.req.id).is_err() {
-                // Preempt the newest sequence (vLLM recompute policy):
-                // free its blocks and push it back on the queue.
+            if !append_with_reclaim(&mut kv, &mut cache, req.id) {
+                // Preempt (vLLM recompute policy): release the blocks —
+                // computed full blocks stay cached, so the re-prefill is
+                // discounted on re-admission — and requeue.
                 let victim = running.swap_remove(i);
-                kv.free_seq(victim.req.id).expect("victim has blocks");
+                register_and_free(&mut kv, &mut cache, &victim.req);
                 preemptions += 1;
                 let mut back = victim.req;
                 back.gen_tokens -= victim.generated.min(back.gen_tokens - 1);
@@ -231,6 +302,11 @@ pub fn simulate_serving(
         },
         oom: false,
         preemptions,
+        mean_ttft_s: ttft_sum / ttft_n.max(1) as f64,
+        prefix_hits: cache.stats.hits,
+        prefix_misses: cache.stats.misses,
+        prefix_tokens_skipped: cache.stats.tokens_skipped,
+        prefix_evictions: cache.stats.evictions,
     }
 }
 
@@ -239,7 +315,7 @@ mod tests {
     use super::*;
     use crate::gpusim::Gpu;
     use crate::model::Model;
-    use crate::workload::ShareGptLike;
+    use crate::workload::{ShareGptLike, SharedPrefixWorkload};
 
     fn run(kind: KernelKind, model: Model) -> SimResult {
         let reqs = ShareGptLike::new().offline(300, 42);
@@ -299,6 +375,78 @@ mod tests {
             fp.mean_batch
         );
     }
+
+    #[test]
+    fn shared_prefix_cache_speeds_up_serving() {
+        // Acceptance: >=1.2x throughput and lower mean TTFT on the
+        // shared-prefix workload at equal KV budget.
+        let reqs = SharedPrefixWorkload::default().offline(200, 9);
+        let dev = Gpu::RtxA6000.spec();
+        let spec = Model::Vicuna13B.spec();
+        let on = simulate_serving(
+            &dev,
+            &spec,
+            KernelKind::Quick,
+            &reqs,
+            &SimPolicy::default(),
+            &Calib::default(),
+        );
+        let off = simulate_serving(
+            &dev,
+            &spec,
+            KernelKind::Quick,
+            &reqs,
+            &SimPolicy { enable_prefix_cache: false, ..SimPolicy::default() },
+            &Calib::default(),
+        );
+        assert!(!on.oom && !off.oom);
+        assert_eq!(on.finished, reqs.len());
+        assert_eq!(off.finished, reqs.len());
+        assert!(on.prefix_hits > 0 && on.prefix_tokens_skipped > 0);
+        assert!(
+            on.total_tok_per_s >= off.total_tok_per_s * 1.2,
+            "cache-on {:.1} tok/s !>= 1.2x cache-off {:.1} tok/s",
+            on.total_tok_per_s,
+            off.total_tok_per_s
+        );
+        assert!(
+            on.mean_ttft_s < off.mean_ttft_s,
+            "cache-on TTFT {:.3}s !< cache-off {:.3}s",
+            on.mean_ttft_s,
+            off.mean_ttft_s
+        );
+    }
+
+    #[test]
+    fn disjoint_workload_unaffected_by_cache() {
+        // On a disjoint-prompt workload with ample KV (no preemptions) the
+        // cache must be a bit-exact no-op.
+        let reqs = ShareGptLike::new().offline(100, 7);
+        let dev = Gpu::A100.spec();
+        let spec = Model::Mistral7B.spec();
+        let on = simulate_serving(
+            &dev,
+            &spec,
+            KernelKind::Quick,
+            &reqs,
+            &SimPolicy::default(),
+            &Calib::default(),
+        );
+        let off = simulate_serving(
+            &dev,
+            &spec,
+            KernelKind::Quick,
+            &reqs,
+            &SimPolicy { enable_prefix_cache: false, ..SimPolicy::default() },
+            &Calib::default(),
+        );
+        assert_eq!(on.preemptions, 0);
+        assert_eq!(off.preemptions, 0);
+        assert_eq!(on.prefix_tokens_skipped, 0, "disjoint prompts must not hit");
+        assert_eq!(on.wall_s, off.wall_s, "cache changed disjoint-workload timing");
+        assert_eq!(on.gen_tokens, off.gen_tokens);
+        assert_eq!(on.finished, off.finished);
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -313,13 +461,19 @@ pub struct OnlineLatency {
 }
 
 /// Result of an online (open-loop) serving simulation.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub struct OnlineResult {
     pub finished: usize,
     pub wall_s: f64,
     pub gen_tok_per_s: f64,
     pub latencies: Vec<OnlineLatency>,
     pub oom: bool,
+    /// Mean time-to-first-token across (re)admissions.
+    pub mean_ttft_s: f64,
+    /// Prefix-cache counters (zero when the cache is off or never hits).
+    pub prefix_hits: u64,
+    pub prefix_tokens_skipped: u64,
+    pub prefix_evictions: u64,
 }
 
 impl OnlineResult {
@@ -343,9 +497,9 @@ impl OnlineResult {
 
 /// Open-loop simulation: requests arrive at their `arrival_s`; the engine
 /// runs prefill-priority continuous batching under the same KV accounting
-/// as [`simulate_serving`]. Used for latency-vs-load curves (not a paper
-/// figure — an extension the serving community expects; see
-/// `quick-infer loadtest`).
+/// as [`simulate_serving`] (including the automatic prefix cache). Used
+/// for latency-vs-load curves (not a paper figure — an extension the
+/// serving community expects; see `quick-infer loadtest`).
 pub fn simulate_online(
     dev: &DeviceSpec,
     spec: &LlmSpec,
@@ -354,36 +508,24 @@ pub fn simulate_online(
     policy: &SimPolicy,
     calib: &Calib,
 ) -> OnlineResult {
-    let w4 = !matches!(kind, KernelKind::Fp16);
-    let kv_per_token =
-        (2 * spec.n_layers * spec.kv_heads * spec.head_dim()) as f64 * 2.0;
-    let blocks = blocks_for_device(
-        dev.mem_bytes(),
-        spec.weight_bytes(w4),
-        kv_per_token,
-        policy.block_size,
-        policy.headroom_frac,
-    );
+    let blocks = kv_pool_blocks(dev, spec, kind, policy);
     if blocks == 0 {
-        return OnlineResult {
-            finished: 0,
-            wall_s: 0.0,
-            gen_tok_per_s: 0.0,
-            latencies: vec![],
-            oom: true,
-        };
+        return OnlineResult { oom: true, ..Default::default() };
     }
     let mut kv = KvBlockManager::new(blocks, policy.block_size, policy.watermark_frac);
+    let mut cache = PrefixCache::new(policy.block_size as usize, policy.enable_prefix_cache);
     let mut pending: VecDeque<Request> = requests.iter().copied().collect();
     let mut waiting: VecDeque<Request> = VecDeque::new();
     let mut running: Vec<RunningSeq> = Vec::new();
     let mut clock = 0.0f64;
     let mut gen_tokens = 0u64;
     let mut latencies = Vec::with_capacity(requests.len());
+    let mut ttft_sum = 0.0f64;
+    let mut ttft_n = 0u64;
 
     loop {
         // Move arrived requests into the queue.
-        while pending.front().map_or(false, |r| r.arrival_s() <= clock) {
+        while pending.front().is_some_and(|r| r.arrival_s() <= clock) {
             waiting.push_back(pending.pop_front().unwrap());
         }
         if waiting.is_empty() && running.is_empty() {
@@ -396,26 +538,34 @@ pub fn simulate_online(
             }
         }
 
-        // Admission + prefill batch.
+        // Admission + prefill batch (prefix-matched tokens are free).
         let mut prefill_tokens = 0u64;
         while let Some(&req) = waiting.front() {
-            if running.len() >= policy.max_num_seqs
-                || prefill_tokens + req.prompt_tokens > policy.max_prefill_tokens
-                || !kv.can_admit(req.prompt_tokens)
-            {
+            if running.len() >= policy.max_num_seqs {
                 break;
             }
+            let ids = context_ids(&req, req.prompt_tokens);
+            let est_new = req.prompt_tokens - cache.peek_match_tokens(&ids);
+            if prefill_tokens + est_new > policy.max_prefill_tokens {
+                break;
+            }
+            let Ok(matched) = cache.admit(&mut kv, req.id, &ids) else { break };
             waiting.pop_front();
-            kv.allocate(req.id, req.prompt_tokens).expect("checked");
-            prefill_tokens += req.prompt_tokens;
+            prefill_tokens += req.prompt_tokens - matched;
+            let _ = cache.register(&mut kv, req.id, &ids);
             running.push(RunningSeq { req, generated: 0 });
+            if prefill_tokens > policy.max_prefill_tokens {
+                break; // bound overshoot from admit()'s exclusive fall-back
+            }
         }
         if prefill_tokens > 0 {
             clock += prefill_latency(dev, spec, kind, prefill_tokens, calib);
             for r in running.iter_mut().filter(|r| r.generated == 0) {
                 r.generated = 1;
                 gen_tokens += 1;
-                let _ = kv.append_token(r.req.id);
+                ttft_sum += clock - r.req.arrival_s();
+                ttft_n += 1;
+                let _ = append_with_reclaim(&mut kv, &mut cache, r.req.id);
             }
         }
         if running.is_empty() {
@@ -433,21 +583,22 @@ pub fn simulate_online(
 
         let mut i = 0;
         while i < running.len() {
-            let r = &mut running[i];
-            r.generated += 1;
+            running[i].generated += 1;
             gen_tokens += 1;
-            if r.generated >= r.req.gen_tokens {
-                kv.free_seq(r.req.id).expect("blocks");
+            let req = running[i].req;
+            let generated = running[i].generated;
+            if generated >= req.gen_tokens {
+                register_and_free(&mut kv, &mut cache, &req);
                 latencies.push(OnlineLatency {
-                    request_id: r.req.id,
-                    e2e_s: clock - r.req.arrival_s(),
+                    request_id: req.id,
+                    e2e_s: clock - req.arrival_s(),
                 });
                 running.swap_remove(i);
                 continue;
             }
-            if kv.append_token(r.req.id).is_err() {
+            if !append_with_reclaim(&mut kv, &mut cache, req.id) {
                 let victim = running.swap_remove(i);
-                kv.free_seq(victim.req.id).expect("blocks");
+                register_and_free(&mut kv, &mut cache, &victim.req);
                 let mut back = victim.req;
                 back.gen_tokens -= victim.generated.min(back.gen_tokens - 1);
                 waiting.push_back(back);
@@ -463,6 +614,10 @@ pub fn simulate_online(
         gen_tok_per_s: gen_tokens as f64 / clock.max(1e-9),
         latencies,
         oom: false,
+        mean_ttft_s: ttft_sum / ttft_n.max(1) as f64,
+        prefix_hits: cache.stats.hits,
+        prefix_tokens_skipped: cache.stats.tokens_skipped,
+        prefix_evictions: cache.stats.evictions,
     }
 }
 
@@ -471,7 +626,7 @@ mod online_tests {
     use super::*;
     use crate::gpusim::Gpu;
     use crate::model::Model;
-    use crate::workload::ShareGptLike;
+    use crate::workload::{ShareGptLike, SharedPrefixWorkload};
 
     fn run_online(rate: f64, kind: KernelKind) -> OnlineResult {
         let reqs = ShareGptLike::new().online(150, rate, 11);
@@ -521,5 +676,36 @@ mod online_tests {
         let r = run_online(4.0, KernelKind::Quick);
         assert!(r.e2e_quantile_s(0.5) <= r.e2e_quantile_s(0.9));
         assert!(r.e2e_quantile_s(0.9) <= r.e2e_quantile_s(0.99));
+    }
+
+    #[test]
+    fn online_shared_prefix_lowers_ttft() {
+        let reqs = SharedPrefixWorkload::default().online(150, 4.0, 21);
+        let dev = Gpu::RtxA6000.spec();
+        let spec = Model::Vicuna13B.spec();
+        let on = simulate_online(
+            &dev,
+            &spec,
+            KernelKind::Quick,
+            &reqs,
+            &SimPolicy::default(),
+            &Calib::default(),
+        );
+        let off = simulate_online(
+            &dev,
+            &spec,
+            KernelKind::Quick,
+            &reqs,
+            &SimPolicy { enable_prefix_cache: false, ..SimPolicy::default() },
+            &Calib::default(),
+        );
+        assert!(!on.oom && !off.oom);
+        assert!(on.prefix_hits > 0);
+        assert!(
+            on.mean_ttft_s < off.mean_ttft_s,
+            "online cache-on TTFT {:.3}s !< cache-off {:.3}s",
+            on.mean_ttft_s,
+            off.mean_ttft_s
+        );
     }
 }

@@ -7,11 +7,11 @@ use std::io::Write;
 
 use anyhow::Result;
 
-use crate::coordinator::simserve::{simulate_serving, SimPolicy};
+use crate::coordinator::simserve::{simulate_serving, SimPolicy, SimResult};
 use crate::gpusim::kernel_model::{model_gemm, Calib, KernelKind};
 use crate::gpusim::{max_batch_before_oom, tokens_per_second, Gpu};
 use crate::model::Model;
-use crate::workload::ShareGptLike;
+use crate::workload::{ShareGptLike, SharedPrefixWorkload};
 
 /// Figure 3 — shared-memory bank conflicts, 64x8192x8192 GEMM.
 pub fn fig3(out: &mut impl Write) -> Result<Fig3Data> {
@@ -156,7 +156,12 @@ pub struct Fig8Row {
 pub fn table1(out: &mut impl Write) -> Result<Vec<Table1Row>> {
     let calib = Calib::default();
     let dev = Gpu::RtxA6000.spec();
-    let policy = SimPolicy::default();
+    // The paper benchmarked vLLM without automatic prefix caching; keep
+    // the cache off so the reproduced absolutes stay a controlled
+    // baseline (preempted requests would otherwise re-hit their own
+    // prompts and drift the memory-tight rows). figures::prefix_cache
+    // reports the cache's effect separately.
+    let policy = SimPolicy { enable_prefix_cache: false, ..SimPolicy::default() };
     let reqs = ShareGptLike::new().offline(1000, 2024);
     let mut rows = Vec::new();
     writeln!(out, "\n== Table 1: serving throughput, {} (1000 ShareGPT-like reqs) ==", dev.name)?;
@@ -208,6 +213,84 @@ pub struct Table1Row {
     pub quick: crate::coordinator::simserve::SimResult,
 }
 
+/// Automatic-prefix-cache evaluation (not a paper figure — the serving
+/// extension Table 1 monetizes): QUICK on A6000/Vicuna-13B, cache on vs
+/// off at equal KV budget, over a shared-prefix chat workload and a
+/// disjoint ShareGPT-like control.
+pub fn prefix_cache(out: &mut impl Write) -> Result<PrefixCacheReport> {
+    let calib = Calib::default();
+    let dev = Gpu::RtxA6000.spec();
+    let spec = Model::Vicuna13B.spec();
+    let on_policy = SimPolicy::default();
+    let off_policy = SimPolicy { enable_prefix_cache: false, ..SimPolicy::default() };
+    let shared = SharedPrefixWorkload::default().offline(300, 2025);
+    let disjoint = ShareGptLike::new().offline(300, 2025);
+
+    let run = |reqs: &[crate::workload::Request], policy: &SimPolicy| {
+        simulate_serving(&dev, &spec, KernelKind::Quick, reqs, policy, &calib)
+    };
+    let report = PrefixCacheReport {
+        shared_on: run(&shared, &on_policy),
+        shared_off: run(&shared, &off_policy),
+        disjoint_on: run(&disjoint, &on_policy),
+        disjoint_off: run(&disjoint, &off_policy),
+    };
+
+    writeln!(
+        out,
+        "\n== Prefix cache: {} on {}, QUICK, 300 reqs/workload ==",
+        spec.name, dev.name
+    )?;
+    writeln!(
+        out,
+        "{:22} {:>6} {:>12} {:>12} {:>10} {:>10}",
+        "workload", "cache", "tok/s", "mean TTFT", "hit rate", "evictions"
+    )?;
+    let mut row = |name: &str, cache: &str, r: &SimResult| {
+        writeln!(
+            out,
+            "{:22} {:>6} {:>12.1} {:>11.3}s {:>9.0}% {:>10}",
+            name,
+            cache,
+            r.total_tok_per_s,
+            r.mean_ttft_s,
+            r.prefix_hit_rate() * 100.0,
+            r.prefix_evictions
+        )
+    };
+    row("shared-prefix chat", "on", &report.shared_on)?;
+    row("shared-prefix chat", "off", &report.shared_off)?;
+    row("disjoint ShareGPT", "on", &report.disjoint_on)?;
+    row("disjoint ShareGPT", "off", &report.disjoint_off)?;
+    writeln!(
+        out,
+        "prefix cache hit rate: {:.0}% ({} hits / {} misses), {} prompt tokens skipped \
+         -> {:.2}x throughput, {:.2}x TTFT on shared prefixes",
+        report.shared_on.prefix_hit_rate() * 100.0,
+        report.shared_on.prefix_hits,
+        report.shared_on.prefix_misses,
+        report.shared_on.prefix_tokens_skipped,
+        report.throughput_speedup(),
+        report.shared_on.mean_ttft_s / report.shared_off.mean_ttft_s.max(1e-9),
+    )?;
+    Ok(report)
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct PrefixCacheReport {
+    pub shared_on: SimResult,
+    pub shared_off: SimResult,
+    pub disjoint_on: SimResult,
+    pub disjoint_off: SimResult,
+}
+
+impl PrefixCacheReport {
+    /// Cache-on over cache-off total token throughput on shared prefixes.
+    pub fn throughput_speedup(&self) -> f64 {
+        self.shared_on.total_tok_per_s / self.shared_off.total_tok_per_s.max(1e-9)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -236,6 +319,38 @@ mod tests {
                 (1.25..2.1).contains(&speedup),
                 "{gpu:?} QUICK/AWQ @256 = {speedup:.2}"
             );
+        }
+    }
+
+    #[test]
+    fn prefix_cache_speedup_and_disjoint_parity() {
+        // Acceptance: >=1.2x throughput and lower TTFT on shared prefixes
+        // at equal KV budget; zero gain on disjoint prompts.
+        let r = prefix_cache(&mut std::io::sink()).unwrap();
+        assert!(!r.shared_on.oom && !r.shared_off.oom);
+        assert!(
+            r.throughput_speedup() >= 1.2,
+            "speedup {:.2}x < 1.2x ({:?} vs {:?})",
+            r.throughput_speedup(),
+            r.shared_on.total_tok_per_s,
+            r.shared_off.total_tok_per_s
+        );
+        assert!(
+            r.shared_on.mean_ttft_s < r.shared_off.mean_ttft_s,
+            "TTFT {:.3}s !< {:.3}s",
+            r.shared_on.mean_ttft_s,
+            r.shared_off.mean_ttft_s
+        );
+        assert!(r.shared_on.prefix_hit_rate() > 0.5);
+        // Disjoint control: no cross-request hits, no regression. (Under
+        // memory pressure a preempted request may re-hit its *own* cached
+        // prompt on re-admission — a gain, never a loss; the bit-exact
+        // no-preemption parity check lives in simserve's tests.)
+        let ratio = r.disjoint_on.total_tok_per_s / r.disjoint_off.total_tok_per_s;
+        assert!(ratio >= 0.99, "cache regressed the disjoint workload: {ratio:.4}x");
+        if r.disjoint_off.preemptions == 0 {
+            assert_eq!(r.disjoint_on.prefix_hits, 0, "disjoint prompts must not hit");
+            assert!(ratio <= 1.01, "disjoint workload shifted by cache: {ratio:.4}x");
         }
     }
 

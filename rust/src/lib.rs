@@ -17,11 +17,14 @@
 //!   per-layer GEMM shape/byte accounting, including the OOM predictor
 //!   behind Figure 8's missing fp16 bars.
 //! * [`workload`] — synthetic serving workloads (ShareGPT-like length
-//!   distributions, Poisson arrivals) for the Table 1 benchmark.
+//!   distributions, Poisson arrivals, shared-prefix multi-turn chat) for
+//!   the Table 1 benchmark and the prefix-cache evaluation.
 //! * [`runtime`] — PJRT execution of the AOT artifacts emitted by
 //!   `python/compile/aot.py` (`artifacts/hlo/*.hlo.txt`).
 //! * [`coordinator`] — the serving engine: request router, continuous
-//!   batcher, paged KV-cache manager, prefill/decode scheduler, metrics.
+//!   batcher, paged KV-cache manager with copy-on-write block sharing,
+//!   automatic prefix cache (`coordinator::prefix`), prefill/decode
+//!   scheduler, metrics.
 //!
 //! Python never runs on the request path: `make artifacts` AOT-lowers the
 //! JAX/Pallas model once, and the [`runtime`] executes the HLO from Rust.

@@ -24,7 +24,7 @@ quick-infer — QUICK (2024) reproduction: conflict-free W4A16 inference stack
 USAGE:
     quick-infer serve    [--artifacts DIR] [--kernel quick|awq|fp16]
                          [--requests N] [--seed S]
-    quick-infer simulate [fig3|fig7|fig8|table1|all]
+    quick-infer simulate [fig3|fig7|fig8|table1|prefix|all]
     quick-infer profile  [--gpu 4090|a6000|l40|a100] [--m M] [--n N] [--k K]
     quick-infer loadtest [--rates 1,2,4,8] [--requests N]
     quick-infer generate --prompt TEXT [--max-new N] [--kernel K] [--temperature T]
@@ -119,7 +119,10 @@ fn main() -> Result<()> {
 fn serve(artifacts: &str, kernel: &str, n_requests: usize, seed: u64) -> Result<()> {
     let rt = Runtime::open(artifacts)?;
     println!("platform: {}", rt.platform());
-    let mut engine = Engine::new(rt, EngineConfig { kernel: kernel.into(), max_queue: 1024, sample_seed: 0 })?;
+    let mut engine = Engine::new(
+        rt,
+        EngineConfig { kernel: kernel.into(), max_queue: 1024, ..Default::default() },
+    )?;
     // Prompts sized to the prefill window; generation budget bounded by
     // the remaining context.
     let max_prompt = engine.prefill_window() as u64;
@@ -161,13 +164,17 @@ fn simulate(which: &str) -> Result<()> {
         "table1" => {
             figures::table1(out)?;
         }
+        "prefix" => {
+            figures::prefix_cache(out)?;
+        }
         "all" => {
             figures::fig3(out)?;
             figures::fig7(out)?;
             figures::fig8(out)?;
             figures::table1(out)?;
+            figures::prefix_cache(out)?;
         }
-        other => bail!("unknown experiment '{other}' (fig3|fig7|fig8|table1|all)"),
+        other => bail!("unknown experiment '{other}' (fig3|fig7|fig8|table1|prefix|all)"),
     }
     Ok(())
 }
@@ -221,7 +228,10 @@ fn generate(
     use quick_infer::tokenizer::default_tokenizer;
     let tok = default_tokenizer();
     let rt = Runtime::open(artifacts)?;
-    let mut engine = Engine::new(rt, EngineConfig { kernel: kernel.into(), max_queue: 4, sample_seed: 0 })?;
+    let mut engine = Engine::new(
+        rt,
+        EngineConfig { kernel: kernel.into(), max_queue: 4, ..Default::default() },
+    )?;
     let ids = tok.encode(prompt);
     anyhow::ensure!(
         ids.len() + max_new <= engine.max_context(),

@@ -6,6 +6,17 @@
 //! centered near ~220 tokens, generations near ~190, heavy right tail,
 //! both clipped the way vLLM's script filters outliers) — the throughput
 //! comparison depends only on these length distributions, not on the text.
+//!
+//! For the automatic prefix cache (`coordinator::prefix`) requests also
+//! carry a *token-stream identity*: [`Request::token_at`] derives a
+//! deterministic synthetic token id for every context position from
+//! `(sys_id, stream_id)`, so two requests that share a system prompt (same
+//! `sys_id`) or continue the same conversation (same `stream_id`) really
+//! do share token content — the serving simulator feeds these streams to
+//! the real radix-trie/hash machinery instead of faking hit rates.
+//! [`SharedPrefixWorkload`] generates the matching traffic shape: K system
+//! prompts under Zipf popularity, multi-turn conversations whose turn
+//! `t+1` prompt extends turn `t`'s full context.
 
 use crate::util::rng::Rng;
 
@@ -17,16 +28,41 @@ pub struct Request {
     pub gen_tokens: u64,
     /// Arrival time, microseconds from epoch 0 (0 for offline workloads).
     pub arrival_s_micros: u64,
+    /// Token-stream key for positions `< sys_tokens` (shared system
+    /// prompt); 0 with `sys_tokens == 0` means no shared system prompt.
+    pub sys_id: u64,
+    /// Length of the shared system-prompt region.
+    pub sys_tokens: u64,
+    /// Token-stream key for positions `>= sys_tokens` (the conversation:
+    /// shared across turns of the same conversation, unique otherwise).
+    pub stream_id: u64,
 }
 
 impl Request {
     pub fn arrival_s(&self) -> f64 {
         self.arrival_s_micros as f64 / 1e6
     }
+
+    /// Deterministic synthetic token id at context position `pos`
+    /// (prompt *and* generated positions draw from the same streams, so a
+    /// follow-up turn's prompt reproduces the previous turn's output).
+    pub fn token_at(&self, pos: u64) -> i32 {
+        let key = if pos < self.sys_tokens { self.sys_id } else { self.stream_id };
+        (stream_mix(key, pos) & 0x7FFF) as i32
+    }
+}
+
+/// SplitMix64-style mixer used to key synthetic token streams.
+pub fn stream_mix(a: u64, b: u64) -> u64 {
+    let mut z = a ^ b.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
 }
 
 /// ShareGPT-like length sampler (vLLM `benchmark_throughput` filters:
-/// prompt+gen <= 2048, prompt <= 1024, gen <= 1024, both >= 4).
+/// prompt+gen <= 2048, prompt <= 1024, gen <= 1024, both >= 4). Prompts
+/// are disjoint across requests (unique `stream_id`, no system prompt).
 #[derive(Debug, Clone)]
 pub struct ShareGptLike {
     prompt_mu: f64,
@@ -55,7 +91,15 @@ impl ShareGptLike {
         (0..n)
             .map(|i| {
                 let (p, g) = self.sample_lengths(&mut rng);
-                Request { id: i as u64, prompt_tokens: p, gen_tokens: g, arrival_s_micros: 0 }
+                Request {
+                    id: i as u64,
+                    prompt_tokens: p,
+                    gen_tokens: g,
+                    arrival_s_micros: 0,
+                    sys_id: 0,
+                    sys_tokens: 0,
+                    stream_id: stream_mix(seed, i as u64),
+                }
             })
             .collect()
     }
@@ -71,7 +115,15 @@ impl ShareGptLike {
                 let gap = -mean_gap_us * (1.0 - rng.f64()).ln();
                 t += gap as u64;
                 let (p, g) = self.sample_lengths(&mut rng);
-                Request { id: i as u64, prompt_tokens: p, gen_tokens: g, arrival_s_micros: t }
+                Request {
+                    id: i as u64,
+                    prompt_tokens: p,
+                    gen_tokens: g,
+                    arrival_s_micros: t,
+                    sys_id: 0,
+                    sys_tokens: 0,
+                    stream_id: stream_mix(seed, i as u64),
+                }
             })
             .collect()
     }
@@ -88,6 +140,130 @@ impl ShareGptLike {
     }
 }
 
+/// Shared-prefix chat workload: K system prompts under Zipf popularity,
+/// multi-turn conversations. Turn `t+1`'s prompt is turn `t`'s full
+/// context (prompt + generation) plus a fresh user message, so an
+/// automatic prefix cache can skip most prefill compute; without one the
+/// whole growing context re-prefills every turn.
+#[derive(Debug, Clone)]
+pub struct SharedPrefixWorkload {
+    /// Number of distinct system prompts (K).
+    pub n_system_prompts: usize,
+    /// Zipf exponent for system-prompt popularity.
+    pub zipf_s: f64,
+    /// System-prompt length range (inclusive).
+    pub sys_tokens: (u64, u64),
+    /// Per-turn user-message length range (inclusive).
+    pub user_tokens: (u64, u64),
+    /// Per-turn generation length range (inclusive).
+    pub gen_tokens: (u64, u64),
+    /// Turns per conversation (inclusive range).
+    pub turns: (usize, usize),
+}
+
+impl Default for SharedPrefixWorkload {
+    fn default() -> Self {
+        SharedPrefixWorkload {
+            n_system_prompts: 8,
+            zipf_s: 1.1,
+            sys_tokens: (512, 1024),
+            user_tokens: (16, 64),
+            gen_tokens: (16, 64),
+            turns: (2, 4),
+        }
+    }
+}
+
+impl SharedPrefixWorkload {
+    /// Draw `n` offline requests (all queued at t=0). Requests are emitted
+    /// turn-round-major (every conversation's turn 0, then every turn 1,
+    /// ...) so FCFS admission usually sees a turn after its predecessor
+    /// finished — the realistic multi-turn arrival order.
+    pub fn offline(&self, n: usize, seed: u64) -> Vec<Request> {
+        let mut reqs = self.generate(n, seed);
+        for (i, r) in reqs.iter_mut().enumerate() {
+            r.id = i as u64;
+            r.arrival_s_micros = 0;
+        }
+        reqs
+    }
+
+    /// Draw `n` online requests with Poisson arrivals at `rate_per_s`, in
+    /// the same turn-round-major order.
+    pub fn online(&self, n: usize, rate_per_s: f64, seed: u64) -> Vec<Request> {
+        let mut reqs = self.generate(n, seed);
+        let mut rng = Rng::seed_from_u64(seed ^ 0xA221_7A15);
+        let mean_gap_us = 1e6 / rate_per_s;
+        let mut t = 0u64;
+        for (i, r) in reqs.iter_mut().enumerate() {
+            let gap = -mean_gap_us * (1.0 - rng.f64()).ln();
+            t += gap as u64;
+            r.id = i as u64;
+            r.arrival_s_micros = t;
+        }
+        reqs
+    }
+
+    fn generate(&self, n: usize, seed: u64) -> Vec<Request> {
+        assert!(self.n_system_prompts > 0);
+        let mut rng = Rng::seed_from_u64(seed);
+        // Fixed per-system-prompt lengths: identical content requires
+        // identical length everywhere the prompt appears.
+        let sys_lens: Vec<u64> = (0..self.n_system_prompts)
+            .map(|_| rng.range_u64(self.sys_tokens.0, self.sys_tokens.1.max(self.sys_tokens.0)))
+            .collect();
+        // Zipf popularity CDF over the K system prompts.
+        let weights: Vec<f64> = (1..=self.n_system_prompts)
+            .map(|r| 1.0 / (r as f64).powf(self.zipf_s))
+            .collect();
+        let total: f64 = weights.iter().sum();
+        let mut cum = Vec::with_capacity(weights.len());
+        let mut acc = 0.0;
+        for w in &weights {
+            acc += w / total;
+            cum.push(acc);
+        }
+
+        // Generate conversations until n requests exist, bucketed by turn.
+        let mut rounds: Vec<Vec<Request>> = Vec::new();
+        let mut emitted = 0usize;
+        let mut convo = 0u64;
+        while emitted < n {
+            let u = rng.f64();
+            let k = cum.partition_point(|&c| c < u).min(self.n_system_prompts - 1);
+            let stream = stream_mix(seed ^ 0x5EED_C0DE, convo);
+            let sys_id = stream_mix(seed ^ 0x0051_7E1D, k as u64);
+            let n_turns = rng.range_usize(self.turns.0, self.turns.1.max(self.turns.0));
+            let mut ctx = sys_lens[k];
+            for t in 0..n_turns {
+                let user =
+                    rng.range_u64(self.user_tokens.0, self.user_tokens.1.max(self.user_tokens.0));
+                let gen =
+                    rng.range_u64(self.gen_tokens.0, self.gen_tokens.1.max(self.gen_tokens.0));
+                let prompt = ctx + user;
+                if rounds.len() <= t {
+                    rounds.push(Vec::new());
+                }
+                rounds[t].push(Request {
+                    id: 0, // assigned by offline()/online()
+                    prompt_tokens: prompt,
+                    gen_tokens: gen,
+                    arrival_s_micros: 0,
+                    sys_id,
+                    sys_tokens: sys_lens[k],
+                    stream_id: stream,
+                });
+                ctx = prompt + gen;
+                emitted += 1;
+            }
+            convo += 1;
+        }
+        let mut out: Vec<Request> = rounds.into_iter().flatten().collect();
+        out.truncate(n);
+        out
+    }
+}
+
 /// Uniform tiny workload for the real (PJRT-served) tiny model, whose
 /// context window is `max_seq`.
 pub fn tiny_workload(n: usize, max_prompt: u64, max_gen: u64, seed: u64) -> Vec<Request> {
@@ -98,6 +274,9 @@ pub fn tiny_workload(n: usize, max_prompt: u64, max_gen: u64, seed: u64) -> Vec<
             prompt_tokens: rng.range_u64(2, max_prompt.max(2)),
             gen_tokens: rng.range_u64(1, max_gen.max(1)),
             arrival_s_micros: 0,
+            sys_id: 0,
+            sys_tokens: 0,
+            stream_id: stream_mix(seed, i as u64),
         })
         .collect()
 }
@@ -105,6 +284,7 @@ pub fn tiny_workload(n: usize, max_prompt: u64, max_gen: u64, seed: u64) -> Vec<
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::collections::HashMap;
 
     #[test]
     fn offline_deterministic_by_seed() {
@@ -148,5 +328,88 @@ mod tests {
             assert!(r.prompt_tokens <= 12 && r.gen_tokens <= 16);
             assert!(r.prompt_tokens >= 2 && r.gen_tokens >= 1);
         }
+    }
+
+    #[test]
+    fn disjoint_streams_rarely_share_tokens() {
+        let reqs = ShareGptLike::new().offline(50, 4);
+        // First-position tokens across requests should be near-unique.
+        let mut firsts: Vec<i32> = reqs.iter().map(|r| r.token_at(0)).collect();
+        firsts.sort_unstable();
+        firsts.dedup();
+        assert!(firsts.len() >= 45, "only {} distinct first tokens", firsts.len());
+    }
+
+    #[test]
+    fn shared_prefix_deterministic_and_sized() {
+        let w = SharedPrefixWorkload::default();
+        let a = w.offline(200, 11);
+        assert_eq!(a, w.offline(200, 11));
+        assert_eq!(a.len(), 200);
+        assert_ne!(a, w.offline(200, 12));
+    }
+
+    #[test]
+    fn turns_extend_the_same_stream() {
+        let w = SharedPrefixWorkload::default();
+        let reqs = w.offline(300, 5);
+        let mut by_stream: HashMap<u64, Vec<&Request>> = HashMap::new();
+        for r in &reqs {
+            by_stream.entry(r.stream_id).or_default().push(r);
+        }
+        let mut multi_turn = 0;
+        for turns in by_stream.values() {
+            // Emission is turn-round-major, so within a stream the Vec is
+            // already turn-ordered; each turn's prompt must cover the
+            // previous turn's full context.
+            for w2 in turns.windows(2) {
+                assert!(
+                    w2[1].prompt_tokens > w2[0].prompt_tokens + w2[0].gen_tokens - 1,
+                    "turn does not extend its conversation"
+                );
+                assert_eq!(w2[0].sys_id, w2[1].sys_id);
+                assert_eq!(w2[0].sys_tokens, w2[1].sys_tokens);
+                multi_turn += 1;
+            }
+        }
+        assert!(multi_turn > 0, "workload produced no multi-turn conversations");
+    }
+
+    #[test]
+    fn same_system_prompt_shares_token_content() {
+        let w = SharedPrefixWorkload::default();
+        let reqs = w.offline(300, 6);
+        let mut by_sys: HashMap<u64, Vec<&Request>> = HashMap::new();
+        for r in &reqs {
+            by_sys.entry(r.sys_id).or_default().push(r);
+        }
+        let shared = by_sys.values().find(|v| {
+            v.len() >= 2 && v[0].stream_id != v[1].stream_id
+        });
+        let v = shared.expect("popular system prompt shared by 2+ conversations");
+        let (a, b) = (v[0], v[1]);
+        assert_eq!(a.sys_tokens, b.sys_tokens);
+        for pos in [0, 1, a.sys_tokens / 2, a.sys_tokens - 1] {
+            assert_eq!(a.token_at(pos), b.token_at(pos), "sys region diverges at {pos}");
+        }
+        // Past the system prompt the conversations diverge.
+        let p = a.sys_tokens;
+        assert!(
+            (0..4).any(|d| a.token_at(p + d) != b.token_at(p + d)),
+            "private regions identical"
+        );
+    }
+
+    #[test]
+    fn zipf_popularity_is_skewed() {
+        let w = SharedPrefixWorkload { n_system_prompts: 8, ..Default::default() };
+        let reqs = w.offline(1000, 13);
+        let mut counts: HashMap<u64, usize> = HashMap::new();
+        for r in &reqs {
+            *counts.entry(r.sys_id).or_default() += 1;
+        }
+        let max = *counts.values().max().unwrap();
+        let min = *counts.values().min().unwrap();
+        assert!(max >= min * 2, "zipf skew missing: max {max}, min {min}");
     }
 }

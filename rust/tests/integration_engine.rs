@@ -12,7 +12,13 @@ fn engine(kernel: &str) -> Option<Engine> {
             return None;
         }
     };
-    Some(Engine::new(rt, EngineConfig { kernel: kernel.into(), max_queue: 64, sample_seed: 0 }).expect("engine"))
+    Some(
+        Engine::new(
+            rt,
+            EngineConfig { kernel: kernel.into(), max_queue: 64, ..Default::default() },
+        )
+        .expect("engine"),
+    )
 }
 
 fn req(id: u64, prompt: Vec<i32>, max_new: usize) -> GenerationRequest {
@@ -132,7 +138,12 @@ fn temperature_sampling_is_seeded_and_diverse() {
         let rt = Runtime::open("artifacts").ok()?;
         let mut e = Engine::new(
             rt,
-            EngineConfig { kernel: "quick".into(), max_queue: 8, sample_seed: seed },
+            EngineConfig {
+                kernel: "quick".into(),
+                max_queue: 8,
+                sample_seed: seed,
+                ..Default::default()
+            },
         )
         .expect("engine");
         e.submit(GenerationRequest {
@@ -176,4 +187,40 @@ fn chunked_prefill_matches_decode_continuation() {
     e2.run_to_completion().unwrap();
     let cont = e2.drain_completions().pop().unwrap().tokens;
     assert_eq!(cont, vec![toks[2]], "chunked prefill diverged");
+}
+
+#[test]
+fn prefix_cache_reuses_prompt_blocks_bit_exactly() {
+    // Two requests with the same prompt (longer than the prefill window so
+    // a hit actually saves runtime executions): the second must hit the
+    // prefix cache — its cached tokens' KV reused, the prefill artifact
+    // skipped — and still produce the identical greedy continuation.
+    let Some(mut e) = engine("quick") else { return };
+    let w = e.prefill_window();
+    if w % 8 != 0 || e.max_context() < w + 6 {
+        return; // window not block-aligned / context too small for the setup
+    }
+    let plen = w + 4;
+    let prompt: Vec<i32> = (0..plen as i32).map(|i| (i * 7 + 3) % 512).collect();
+    e.submit(req(0, prompt.clone(), 2)).unwrap();
+    e.run_to_completion().unwrap();
+    let first = e.drain_completions().pop().unwrap().tokens;
+    assert_eq!(e.metrics.prefix_hits, 0);
+
+    e.submit(req(1, prompt.clone(), 2)).unwrap();
+    e.run_to_completion().unwrap();
+    let second = e.drain_completions().pop().unwrap().tokens;
+    assert_eq!(first, second, "cached-prefix path diverged from full prefill");
+    assert_eq!(e.metrics.prefix_hits, 1);
+    assert_eq!(e.metrics.prefix_tokens_skipped, w as u64);
+
+    // A prompt sharing only the first 8-token block matches less than the
+    // prefill window, where reuse would cost more artifact calls than it
+    // saves — the engine must fall back to the normal prefill path.
+    let mut shallow = prompt[..8].to_vec();
+    shallow.extend((0..(plen - 8) as i32).map(|i| (400 + i) % 512));
+    e.submit(req(2, shallow, 1)).unwrap();
+    e.run_to_completion().unwrap();
+    assert_eq!(e.metrics.prefix_hits, 1, "shallow match must not take the cached path");
+    assert_eq!(e.metrics.prefix_misses, 2);
 }

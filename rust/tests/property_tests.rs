@@ -100,6 +100,108 @@ fn prop_kv_manager_never_leaks_or_double_allocates() {
 }
 
 #[test]
+fn prop_kv_cow_fork_seal_conserves_refcounts() {
+    // Randomized alloc/append/fork/free (+ seal/mark_cached/evict) op
+    // sequences: the ledger invariants — refcounts equal table
+    // references, no leaks, idle-counter consistency — must hold after
+    // every op, and draining everything must return the full pool.
+    check("kv-cow-ledger", 0xC0DE, default_cases(), |rng| {
+        let blocks = rng.range_u64(8, 128);
+        let bs = [4u64, 8, 16][rng.range_usize(0, 2)];
+        let mut m = KvBlockManager::new(blocks, bs, 0.0);
+        let mut live: Vec<u64> = Vec::new();
+        let mut marked: Vec<u32> = Vec::new();
+        let mut next_id = 0u64;
+        for _ in 0..300 {
+            match rng.range_u64(0, 4) {
+                0 => {
+                    let toks = rng.range_u64(1, bs * 6);
+                    if m.allocate(next_id, toks).is_ok() {
+                        live.push(next_id);
+                    }
+                    next_id += 1;
+                }
+                1 => {
+                    if !live.is_empty() {
+                        let i = rng.range_usize(0, live.len() - 1);
+                        let _ = m.append_token(live[i]);
+                    }
+                }
+                2 => {
+                    if !live.is_empty() {
+                        let i = rng.range_usize(0, live.len() - 1);
+                        if m.fork(live[i], next_id).is_ok() {
+                            live.push(next_id);
+                        }
+                        next_id += 1;
+                    }
+                }
+                3 => {
+                    if !live.is_empty() {
+                        let i = rng.range_usize(0, live.len() - 1);
+                        for b in m.seal(live[i]).unwrap() {
+                            m.mark_cached(b).unwrap();
+                            marked.push(b);
+                        }
+                    }
+                }
+                _ => {
+                    if !live.is_empty() {
+                        let i = rng.range_usize(0, live.len() - 1);
+                        m.free_seq(live.swap_remove(i)).unwrap();
+                    }
+                }
+            }
+            m.check_invariants().expect("ledger invariant");
+        }
+        // Drain: free every sequence, evict every idle cached block; the
+        // pool must balance exactly.
+        for s in live {
+            m.free_seq(s).unwrap();
+        }
+        m.check_invariants().expect("post-drain invariant");
+        for b in marked {
+            if m.is_evictable(b) {
+                m.evict(b).unwrap();
+            }
+        }
+        assert_eq!(m.cached_idle_blocks(), 0);
+        assert_eq!(m.free_blocks(), blocks, "pool does not balance");
+        m.check_invariants().expect("final invariant");
+    });
+}
+
+#[test]
+fn prop_prefix_index_insert_match_roundtrip() {
+    use quick_infer::coordinator::prefix::PrefixIndex;
+    check("prefix-trie-roundtrip", 0x7121E, default_cases(), |rng| {
+        let bs = [4usize, 8, 16][rng.range_usize(0, 2)];
+        let mut idx = PrefixIndex::new(bs);
+        let n_blocks = rng.range_usize(1, 12);
+        let tokens: Vec<i32> =
+            (0..n_blocks * bs + 1).map(|_| rng.range_u64(0, 500) as i32).collect();
+        let blocks: Vec<u32> = (0..n_blocks as u32).collect();
+        assert_eq!(idx.insert(&tokens, &blocks).len(), n_blocks);
+        // Full roundtrip (the +1 token lets the cap cover every block).
+        let m = idx.match_prefix(&tokens);
+        assert_eq!(m.len(), n_blocks);
+        assert!(m.iter().zip(&blocks).all(|(a, &b)| a.block == b));
+        // A divergent suffix matches only the shared head.
+        let cut = rng.range_usize(0, n_blocks - 1);
+        let mut div = tokens[..cut * bs].to_vec();
+        div.extend((0..bs * 2).map(|_| 501 + rng.range_u64(0, 500) as i32));
+        assert!(idx.match_prefix(&div).len() <= cut);
+        // Evicting everything leaf-first empties the trie.
+        let mut evicted = 0;
+        while idx.evict_lru(|_| true).is_some() {
+            evicted += 1;
+        }
+        assert_eq!(evicted, n_blocks);
+        assert!(idx.is_empty());
+    });
+}
+
+#[test]
 fn prop_batcher_lane_exclusivity_and_progress() {
     check("batcher-lanes", 0xFEED, default_cases(), |rng| {
         let lanes = rng.range_usize(1, 8);
