@@ -1,0 +1,54 @@
+//! Continuous-batching bench: the token-budget scheduler with chunked
+//! prefill vs the static prefill-then-decode wave baseline on the bursty
+//! bimodal workload (A6000, Vicuna-13B), QUICK vs AWQ — plus
+//! micro-benchmarks of the scheduler's step planning and the mixed-step
+//! cost query.
+
+use quick_infer::coordinator::batcher::{ChunkPolicy, ContinuousScheduler};
+use quick_infer::coordinator::simserve::{simulate_continuous, ContinuousPolicy};
+use quick_infer::figures;
+use quick_infer::gpusim::kernel_model::{Calib, KernelKind};
+use quick_infer::gpusim::{mixed_step_latency, Gpu};
+use quick_infer::model::Model;
+use quick_infer::util::Bench;
+use quick_infer::workload::BurstyWorkload;
+
+fn main() {
+    let report = figures::continuous_batching(&mut std::io::stdout()).expect("report");
+    assert!(
+        report.quick_speedup() >= 1.3,
+        "continuous/wave speedup {:.2}x below the 1.3x bar",
+        report.quick_speedup()
+    );
+
+    println!("\n-- continuous-batching micro-benchmarks --");
+    // Step planning over a saturated scheduler (256 resident sequences).
+    let mut sched = ContinuousScheduler::new(ChunkPolicy::default());
+    for i in 0..256 {
+        sched.submit(i, 512, 128);
+        sched.admit_next(0, |_| true).expect("admit");
+    }
+    Bench::fast().run_throughput("plan_step_256_seqs", 256, || sched.plan_step().step_tokens());
+
+    // The batched cost query at a saturated mixed step.
+    let dev = Gpu::RtxA6000.spec();
+    let spec = Model::Vicuna13B.spec();
+    let calib = Calib::default();
+    Bench::fast().run("mixed_step_latency_quick_b64_c448", || {
+        mixed_step_latency(&dev, &spec, KernelKind::Quick, 64, 900, 448, 896, &calib).total_s()
+    });
+
+    // End-to-end simulated serving loop.
+    let reqs = BurstyWorkload::default().offline(100, 7);
+    Bench::fast().run("simulate_continuous_100req_quick", || {
+        simulate_continuous(
+            &dev,
+            &spec,
+            KernelKind::Quick,
+            &reqs,
+            &ContinuousPolicy::default(),
+            &calib,
+        )
+        .total_tok_per_s
+    });
+}

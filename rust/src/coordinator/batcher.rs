@@ -1,16 +1,347 @@
-//! Continuous batcher: admission queue + lane assignment + step planning.
+//! Continuous batching with chunked prefill: token-budget step planning.
 //!
-//! The engine runs fixed-shape AOT decode artifacts (batch ∈ the manifest's
-//! compiled sizes), so "continuous batching" here means: sequences join and
-//! leave *lanes* of the widest useful artifact between steps, vLLM-style,
-//! with the step batch chosen as the smallest compiled size ≥ active lanes.
-//! Prefill runs as its own (batch-1) artifact call, scheduled ahead of
-//! decode when lanes are free — the same prioritize-prefill policy vLLM's
-//! default scheduler uses.
+//! Two schedulers live here:
+//!
+//! * [`ContinuousScheduler`] — the token-budget continuous-batching core
+//!   (vLLM/Orca-style with Sarathi chunked prefill). Every step fills a
+//!   fixed token budget with **decode tokens first** (one per running
+//!   sequence whose prompt is fully computed), then slices admitted
+//!   prompts into **prefill chunks** that ride the same step. The step's
+//!   cost comes from one batched query into `gpusim::mixed_step_latency`
+//!   at the *actual* mixed batch size, which is how kernel choice (QUICK
+//!   vs AWQ) changes end-to-end throughput: decode lanes never stall for
+//!   whole-prompt prefills, the sustained batch stays in the regime where
+//!   the paper's larger-BM tiles win (§3.3 tile-size/batch trade-off:
+//!   QUICK's register-resident weights allow BM up to 192, so throughput
+//!   keeps scaling past the baseline's BM ≤ 64 saturation point), and
+//!   prefill tokens amortize the per-step weight streaming that
+//!   decode-only steps pay in full. Preemption under KV pressure follows
+//!   vLLM's recompute policy: the victim re-queues and re-prefills (its
+//!   cached prefix, if any, shrinks the recompute chunks).
+//!
+//! * [`Batcher`] — the lane scheduler of the real PJRT engine. The engine
+//!   runs fixed-shape AOT artifacts (batch ∈ the manifest's compiled
+//!   sizes), so its chunked prefill is lane-granular: a new sequence's
+//!   head window goes through the prefill artifact, and the rest of its
+//!   prompt is teacher-forced one token per *mixed* decode step alongside
+//!   decoding lanes — the same decode-first/chunk-riding policy at the
+//!   granularity the fixed shapes allow.
 
 use std::collections::VecDeque;
 
 use super::request::{FinishReason, GenerationRequest, SeqState, Sequence};
+
+// ---------------------------------------------------------------------------
+// Token-budget continuous scheduler (simulator + any token-granular engine).
+// ---------------------------------------------------------------------------
+
+/// Policy knobs for the token-budget scheduler.
+#[derive(Debug, Clone, Copy)]
+pub struct ChunkPolicy {
+    /// Max tokens (decode + prefill chunks) per step — vLLM's
+    /// `max_num_batched_tokens` with chunked prefill enabled.
+    pub token_budget: u64,
+    /// Max sequences resident (admitted, running or mid-prefill).
+    pub max_num_seqs: usize,
+}
+
+impl Default for ChunkPolicy {
+    fn default() -> Self {
+        ChunkPolicy { token_budget: 512, max_num_seqs: 256 }
+    }
+}
+
+/// Scheduler-side state of one sequence (lengths only — token content and
+/// KV ownership live with the driver).
+#[derive(Debug, Clone, Copy)]
+pub struct SchedSeq {
+    /// Driver-side request id (KV-cache sequence id).
+    pub request_id: u64,
+    pub prompt_tokens: u64,
+    /// Generation budget (max new tokens).
+    pub gen_budget: u64,
+    /// Prompt tokens whose KV came from the prefix cache (they skip
+    /// prefill compute; `prefilled` starts here).
+    pub cached_prefix: u64,
+    /// Prompt tokens computed so far (including the cached prefix).
+    pub prefilled: u64,
+    pub generated: u64,
+    pub state: SchedState,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedState {
+    Waiting,
+    Running,
+    Finished,
+}
+
+impl SchedSeq {
+    /// Prompt fully computed — the sequence decodes from here on.
+    pub fn in_decode(&self) -> bool {
+        self.prefilled >= self.prompt_tokens
+    }
+
+    /// Prompt tokens still needing prefill compute.
+    pub fn prefill_remaining(&self) -> u64 {
+        self.prompt_tokens - self.prefilled.min(self.prompt_tokens)
+    }
+}
+
+/// One prefill chunk scheduled into a step: `len` prompt tokens starting
+/// at position `start` of sequence `seq`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PrefillChunk {
+    pub seq: SchedSeqId,
+    pub start: u64,
+    pub len: u64,
+}
+
+/// Index into the scheduler's sequence slab.
+pub type SchedSeqId = usize;
+
+/// The work of one engine step: decode lanes + prefill chunks sharing one
+/// mixed batch.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct StepBatch {
+    /// Sequences decoding one token this step.
+    pub decode: Vec<SchedSeqId>,
+    /// Prefill chunks riding the same step, FCFS order.
+    pub chunks: Vec<PrefillChunk>,
+}
+
+impl StepBatch {
+    pub fn is_empty(&self) -> bool {
+        self.decode.is_empty() && self.chunks.is_empty()
+    }
+
+    pub fn prefill_tokens(&self) -> u64 {
+        self.chunks.iter().map(|c| c.len).sum()
+    }
+
+    /// Total tokens of the mixed batch (the GEMM M dimension).
+    pub fn step_tokens(&self) -> u64 {
+        self.decode.len() as u64 + self.prefill_tokens()
+    }
+
+    /// Σ over chunk tokens of the context they attend to, approximated per
+    /// chunk by its end context — the cost-model term for chunked-prefill
+    /// attention (each chunk attends over everything computed before it
+    /// plus itself).
+    pub fn prefill_attn_ctx_tokens(&self) -> u64 {
+        self.chunks.iter().map(|c| c.start + c.len).sum()
+    }
+}
+
+/// Token-budget continuous-batching scheduler with chunked prefill.
+///
+/// Pure scheduling state machine: the driver owns admission gating (KV
+/// capacity), per-step cost, and token content. Lifecycle per sequence:
+/// `submit` → (driver admits) `admit_next` → steps of
+/// `plan_step`/`commit_step` → `finish` (or `preempt` back to waiting).
+#[derive(Debug)]
+pub struct ContinuousScheduler {
+    pub policy: ChunkPolicy,
+    seqs: Vec<SchedSeq>,
+    waiting: VecDeque<SchedSeqId>,
+    /// Admission order (FCFS for chunk scheduling).
+    running: Vec<SchedSeqId>,
+}
+
+impl ContinuousScheduler {
+    pub fn new(policy: ChunkPolicy) -> Self {
+        assert!(policy.token_budget > 0 && policy.max_num_seqs > 0);
+        ContinuousScheduler {
+            policy,
+            seqs: Vec::new(),
+            waiting: VecDeque::new(),
+            running: Vec::new(),
+        }
+    }
+
+    /// Queue a request. Returns its scheduler slot.
+    pub fn submit(&mut self, request_id: u64, prompt_tokens: u64, gen_budget: u64) -> SchedSeqId {
+        assert!(prompt_tokens > 0 && gen_budget > 0);
+        let id = self.seqs.len();
+        self.seqs.push(SchedSeq {
+            request_id,
+            prompt_tokens,
+            gen_budget,
+            cached_prefix: 0,
+            prefilled: 0,
+            generated: 0,
+            state: SchedState::Waiting,
+        });
+        self.waiting.push_back(id);
+        id
+    }
+
+    pub fn seq(&self, id: SchedSeqId) -> &SchedSeq {
+        &self.seqs[id]
+    }
+
+    pub fn waiting_len(&self) -> usize {
+        self.waiting.len()
+    }
+
+    pub fn running_len(&self) -> usize {
+        self.running.len()
+    }
+
+    pub fn has_work(&self) -> bool {
+        !self.waiting.is_empty() || !self.running.is_empty()
+    }
+
+    /// Next sequence admission would take (FCFS), if any.
+    pub fn peek_waiting(&self) -> Option<SchedSeqId> {
+        self.waiting.front().copied()
+    }
+
+    /// Admit the head of the queue if the resident-sequence cap allows and
+    /// `can_admit` (the driver's KV-capacity check) accepts it. A cached
+    /// prefix of `cached_prefix` tokens skips that much prefill compute —
+    /// "a prefix hit shrinks the remaining chunks".
+    pub fn admit_next(
+        &mut self,
+        cached_prefix: u64,
+        can_admit: impl FnOnce(&SchedSeq) -> bool,
+    ) -> Option<SchedSeqId> {
+        if self.running.len() >= self.policy.max_num_seqs {
+            return None;
+        }
+        let &id = self.waiting.front()?;
+        if !can_admit(&self.seqs[id]) {
+            return None;
+        }
+        self.waiting.pop_front();
+        let s = &mut self.seqs[id];
+        // The cache always leaves at least the prompt's last token to
+        // compute (its logits seed generation).
+        s.cached_prefix = cached_prefix.min(s.prompt_tokens - 1);
+        s.prefilled = s.cached_prefix;
+        s.state = SchedState::Running;
+        self.running.push(id);
+        Some(id)
+    }
+
+    /// Drop the head of the queue (request larger than the whole pool).
+    pub fn reject_waiting_head(&mut self) -> Option<SchedSeqId> {
+        let id = self.waiting.pop_front()?;
+        self.seqs[id].state = SchedState::Finished;
+        Some(id)
+    }
+
+    /// Plan one step: fill the token budget with decode tokens first, then
+    /// chunk the admitted prompts (FCFS) into the remainder.
+    pub fn plan_step(&self) -> StepBatch {
+        let mut budget = self.policy.token_budget;
+        let mut batch = StepBatch::default();
+        for &id in &self.running {
+            if budget == 0 {
+                break;
+            }
+            if self.seqs[id].in_decode() {
+                batch.decode.push(id);
+                budget -= 1;
+            }
+        }
+        for &id in &self.running {
+            if budget == 0 {
+                break;
+            }
+            let s = &self.seqs[id];
+            let rem = s.prefill_remaining();
+            if rem == 0 {
+                continue;
+            }
+            let len = rem.min(budget);
+            batch.chunks.push(PrefillChunk { seq: id, start: s.prefilled, len });
+            budget -= len;
+        }
+        batch
+    }
+
+    /// Apply one planned chunk; returns true when this chunk completed the
+    /// prompt (the step's logits for its last token yield the sequence's
+    /// first generated token — the driver records TTFT and counts the
+    /// token via [`Self::commit_first_token`]).
+    pub fn commit_chunk(&mut self, chunk: &PrefillChunk) -> bool {
+        let s = &mut self.seqs[chunk.seq];
+        debug_assert_eq!(s.state, SchedState::Running);
+        debug_assert_eq!(s.prefilled, chunk.start);
+        debug_assert!(chunk.len > 0 && chunk.start + chunk.len <= s.prompt_tokens);
+        s.prefilled += chunk.len;
+        s.in_decode()
+    }
+
+    /// The prompt-completing chunk's last logits produced the first token.
+    pub fn commit_first_token(&mut self, id: SchedSeqId) {
+        let s = &mut self.seqs[id];
+        debug_assert!(s.in_decode() && s.generated == 0);
+        s.generated = 1;
+    }
+
+    /// One decode token landed for `id`. Returns true when the generation
+    /// budget is now exhausted (driver should `finish`).
+    pub fn commit_decode(&mut self, id: SchedSeqId) -> bool {
+        let s = &mut self.seqs[id];
+        debug_assert!(s.in_decode() && s.state == SchedState::Running);
+        s.generated += 1;
+        s.generated >= s.gen_budget
+    }
+
+    /// Retire a running sequence.
+    pub fn finish(&mut self, id: SchedSeqId) {
+        debug_assert_eq!(self.seqs[id].state, SchedState::Running);
+        self.seqs[id].state = SchedState::Finished;
+        self.running.retain(|&r| r != id);
+    }
+
+    /// Preempt under KV pressure (vLLM recompute policy): back to the
+    /// waiting queue with the remaining generation budget; prefill state
+    /// resets so the prompt recomputes on re-admission (a prefix cache can
+    /// discount the recompute via `admit_next`'s `cached_prefix`).
+    pub fn preempt(&mut self, id: SchedSeqId) {
+        let s = &mut self.seqs[id];
+        debug_assert_eq!(s.state, SchedState::Running);
+        s.gen_budget -= s.generated.min(s.gen_budget.saturating_sub(1));
+        s.generated = 0;
+        s.cached_prefix = 0;
+        s.prefilled = 0;
+        s.state = SchedState::Waiting;
+        self.running.retain(|&r| r != id);
+        self.waiting.push_back(id);
+    }
+
+    /// Scheduling invariants for tests.
+    pub fn check_invariants(&self) -> anyhow::Result<()> {
+        let mut seen = std::collections::HashSet::new();
+        for &id in self.waiting.iter().chain(self.running.iter()) {
+            anyhow::ensure!(seen.insert(id), "seq {id} queued twice");
+        }
+        for &id in &self.waiting {
+            anyhow::ensure!(
+                self.seqs[id].state == SchedState::Waiting,
+                "waiting seq {id} not Waiting"
+            );
+        }
+        for &id in &self.running {
+            let s = &self.seqs[id];
+            anyhow::ensure!(s.state == SchedState::Running, "running seq {id} not Running");
+            anyhow::ensure!(s.prefilled <= s.prompt_tokens, "seq {id} over-prefilled");
+            anyhow::ensure!(
+                s.in_decode() || s.generated == 0,
+                "seq {id} generated before its prompt finished"
+            );
+        }
+        let planned = self.plan_step();
+        anyhow::ensure!(
+            planned.step_tokens() <= self.policy.token_budget,
+            "plan exceeds token budget"
+        );
+        Ok(())
+    }
+}
 
 /// What the engine should run next.
 #[derive(Debug, PartialEq, Eq)]
@@ -150,6 +481,14 @@ impl Batcher {
                 s.cached_prefix_tokens <= s.req.prompt.len(),
                 "seq {i} cached prefix exceeds its prompt"
             );
+            anyhow::ensure!(
+                s.prefilled <= s.req.prompt.len(),
+                "seq {i} prefilled past its prompt"
+            );
+            anyhow::ensure!(
+                !s.in_prefill() || s.generated == 0,
+                "seq {i} generated mid-prefill"
+            );
         }
         Ok(())
     }
@@ -242,5 +581,175 @@ mod tests {
         assert_eq!(b.seqs[s].cached_prefix_tokens, 8);
         assert_eq!(b.seqs[s].uncached_prompt_tokens(), 4);
         b.check_invariants().unwrap();
+    }
+}
+
+#[cfg(test)]
+mod continuous_tests {
+    use super::*;
+
+    fn sched(budget: u64, max_seqs: usize) -> ContinuousScheduler {
+        ContinuousScheduler::new(ChunkPolicy { token_budget: budget, max_num_seqs: max_seqs })
+    }
+
+    /// Drive every planned chunk/decode of one step to completion.
+    fn run_step(s: &mut ContinuousScheduler) -> StepBatch {
+        let batch = s.plan_step();
+        for c in &batch.chunks {
+            if s.commit_chunk(c) {
+                s.commit_first_token(c.seq);
+            }
+        }
+        for &id in &batch.decode {
+            if s.commit_decode(id) {
+                s.finish(id);
+            }
+        }
+        batch
+    }
+
+    #[test]
+    fn decode_fills_budget_first() {
+        let mut s = sched(8, 16);
+        // Two decoding sequences + one long prompt waiting to chunk.
+        for i in 0..2 {
+            s.submit(i, 4, 10);
+            let id = s.admit_next(0, |_| true).unwrap();
+            // complete the prompt in one chunk
+            let b = s.plan_step();
+            let c = b.chunks.iter().find(|c| c.seq == id).unwrap();
+            assert!(s.commit_chunk(c));
+            s.commit_first_token(id);
+        }
+        s.submit(2, 100, 4);
+        s.admit_next(0, |_| true).unwrap();
+        let batch = s.plan_step();
+        assert_eq!(batch.decode.len(), 2);
+        // Remaining 6 budget tokens go to the prompt's first chunk.
+        assert_eq!(batch.chunks.len(), 1);
+        assert_eq!(batch.chunks[0], PrefillChunk { seq: 2, start: 0, len: 6 });
+        assert_eq!(batch.step_tokens(), 8);
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn long_prompt_chunks_across_steps() {
+        let mut s = sched(16, 4);
+        s.submit(0, 40, 2);
+        s.admit_next(0, |_| true).unwrap();
+        let mut chunk_lens = Vec::new();
+        while s.has_work() {
+            let b = run_step(&mut s);
+            assert!(!b.is_empty());
+            chunk_lens.extend(b.chunks.iter().map(|c| c.len));
+        }
+        // 40 prompt tokens at budget 16: chunks 16, 16, 8.
+        assert_eq!(chunk_lens, vec![16, 16, 8]);
+    }
+
+    #[test]
+    fn cached_prefix_shrinks_chunks() {
+        let mut s = sched(16, 4);
+        s.submit(0, 40, 2);
+        s.admit_next(32, |_| true).unwrap();
+        let b = s.plan_step();
+        // 32 tokens leased from the prefix cache: only 8 left to compute.
+        assert_eq!(b.chunks, vec![PrefillChunk { seq: 0, start: 32, len: 8 }]);
+        assert_eq!(s.seq(0).cached_prefix, 32);
+    }
+
+    #[test]
+    fn cached_prefix_capped_below_full_prompt() {
+        let mut s = sched(16, 4);
+        s.submit(0, 10, 2);
+        // Even a full-prompt "hit" leaves the last token to compute.
+        s.admit_next(10, |_| true).unwrap();
+        assert_eq!(s.seq(0).cached_prefix, 9);
+        assert_eq!(s.seq(0).prefill_remaining(), 1);
+    }
+
+    #[test]
+    fn chunk_completion_yields_first_token() {
+        let mut s = sched(32, 4);
+        s.submit(0, 8, 3);
+        s.admit_next(0, |_| true).unwrap();
+        let b = s.plan_step();
+        assert_eq!(b.chunks[0].len, 8);
+        assert!(s.commit_chunk(&b.chunks[0]));
+        s.commit_first_token(0);
+        assert_eq!(s.seq(0).generated, 1);
+        // Two more decode steps exhaust the budget of 3.
+        run_step(&mut s);
+        assert!(s.has_work());
+        run_step(&mut s);
+        assert!(!s.has_work());
+        assert_eq!(s.seq(0).state, SchedState::Finished);
+    }
+
+    #[test]
+    fn preempt_requeues_with_recompute() {
+        let mut s = sched(32, 4);
+        s.submit(0, 8, 10);
+        s.admit_next(0, |_| true).unwrap();
+        run_step(&mut s); // prefill + first token
+        run_step(&mut s); // one decode
+        assert_eq!(s.seq(0).generated, 2);
+        s.preempt(0);
+        assert_eq!(s.running_len(), 0);
+        assert_eq!(s.waiting_len(), 1);
+        let seq = s.seq(0);
+        assert_eq!(seq.state, SchedState::Waiting);
+        assert_eq!(seq.prefilled, 0, "recompute policy resets prefill");
+        assert_eq!(seq.gen_budget, 8, "generated tokens deducted from budget");
+        // Re-admission restarts chunking from scratch.
+        s.admit_next(0, |_| true).unwrap();
+        let b = s.plan_step();
+        assert_eq!(b.chunks, vec![PrefillChunk { seq: 0, start: 0, len: 8 }]);
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn admission_respects_cap_and_driver_veto() {
+        let mut s = sched(32, 1);
+        s.submit(0, 4, 2);
+        s.submit(1, 4, 2);
+        assert!(s.admit_next(0, |_| true).is_some());
+        // Resident cap of 1.
+        assert!(s.admit_next(0, |_| true).is_none());
+        // Finish the resident sequence, then the driver vetoes (no KV).
+        run_step(&mut s);
+        run_step(&mut s);
+        assert_eq!(s.running_len(), 0);
+        assert!(s.admit_next(0, |_| false).is_none());
+        assert_eq!(s.waiting_len(), 1);
+        assert!(s.admit_next(0, |_| true).is_some());
+    }
+
+    #[test]
+    fn budget_saturation_across_many_seqs() {
+        let mut s = sched(64, 256);
+        for i in 0..100 {
+            s.submit(i, 32, 8);
+            s.admit_next(0, |_| true).unwrap();
+        }
+        let b = s.plan_step();
+        assert_eq!(b.step_tokens(), 64, "budget must be exactly filled");
+        // FCFS: the first two prompts chunk (32 + 32), later ones wait.
+        assert_eq!(b.chunks.len(), 2);
+        s.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn attn_ctx_accounts_chunk_end_context() {
+        let mut s = sched(16, 4);
+        s.submit(0, 40, 2);
+        s.admit_next(0, |_| true).unwrap();
+        let b1 = s.plan_step();
+        assert_eq!(b1.prefill_attn_ctx_tokens(), 16); // 0 + 16
+        for c in &b1.chunks {
+            s.commit_chunk(c);
+        }
+        let b2 = s.plan_step();
+        assert_eq!(b2.prefill_attn_ctx_tokens(), 32); // 16 + 16
     }
 }

@@ -1,5 +1,6 @@
-//! The serving engine: continuous batching over the AOT-compiled tiny
-//! model, executed through PJRT. Python is never on this path.
+//! The serving engine: continuous batching with chunked prefill over the
+//! AOT-compiled tiny model, executed through PJRT. Python is never on this
+//! path.
 //!
 //! State layout: the engine keeps each lane's KV cache as host buffers of
 //! shape `(L, 1, S, H, hd)` and assembles the batched `(L, B, S, H, hd)`
@@ -8,12 +9,23 @@
 //! their outputs are discarded; because assembly happens per step from the
 //! per-lane source of truth, dummy-lane KV writes never leak.
 //!
+//! Chunked prefill: a new sequence's head window goes through the prefill
+//! artifact; any remaining prompt tokens are teacher-forced **one per
+//! mixed decode step** alongside the decoding lanes (the lane-granular
+//! version of the token-budget scheduler in `coordinator::batcher` — the
+//! fixed-shape decode artifact is the step, mid-prefill lanes are the
+//! chunks). Long prompts therefore no longer stall the decode batch with
+//! serial batch-1 teacher-forcing; their tail tokens ride steps the
+//! decoding lanes were paying for anyway.
+//!
 //! Correctness note on padded prefill: the prefill artifact processes a
 //! fixed-length prompt window; pad slots beyond the true length hold
 //! garbage K/V, but decode writes token `t` at slot `pos = len + t` *before*
 //! attending (mask `slot <= pos`), so every garbage slot is overwritten
 //! before it first becomes visible. Locked by `test_padded_prefill` on the
-//! Python side and the engine integration test.
+//! Python side and the engine integration test. Teacher-forced prompt
+//! tokens follow the same rule: slot `prefilled` is written before any
+//! later slot becomes visible.
 
 use std::time::Instant;
 
@@ -276,19 +288,21 @@ impl Engine {
         };
         let mut cached_tokens = matched.len() * PREFIX_BLOCK_TOKENS;
         // A hit pays off only when it covers at least the prefill
-        // artifact's window: the cached path replaces the one artifact
-        // call with teacher-forced batch-1 decodes, so a shallower match
-        // would *add* runtime executions instead of removing them.
+        // artifact's window: the cached path skips that one artifact call
+        // and lets the suffix ride mixed decode steps, so a shallower
+        // match would trade one prefill call for >= window chunk-riding
+        // steps instead of removing work.
         if cached_tokens < prompt_len.min(s) {
             cached_tokens = 0;
         }
 
-        let mut logits: Vec<f32>;
-        let start;
+        self.metrics.prompt_tokens += prompt_len as u64;
         if cached_tokens > 0 {
             // Prefix hit: seed the lane's KV from the cached blocks — the
-            // exact values a from-scratch prefill would recompute — and
-            // teacher-force only the uncached suffix below.
+            // exact values a from-scratch prefill would recompute. The
+            // uncached suffix rides subsequent mixed decode steps (the
+            // cache always leaves at least the prompt's last token, whose
+            // step logits seed generation).
             let le = self.lane_elems();
             let span = PREFIX_BLOCK_TOKENS * self.heads * self.head_dim;
             let mut k = vec![0f32; self.n_layers * le];
@@ -307,74 +321,51 @@ impl Engine {
             self.metrics.prefix_hits += 1;
             self.metrics.prefix_tokens_skipped += cached_tokens as u64;
             self.batcher.note_cached_prefix(seq_index, cached_tokens);
-            logits = Vec::new(); // assigned by the forced-decode loop below
-            start = cached_tokens;
-        } else {
-            if self.cfg.enable_prefix_cache {
-                self.metrics.prefix_misses += 1;
-            }
-            // Head chunk through the prefill artifact.
-            let head = prompt_len.min(s);
-            let mut tokens_padded = prompt[..head].to_vec();
-            tokens_padded.resize(s, 0);
-            let name = format!("prefill_{}_b1_s{}", self.cfg.kernel, s);
-            let zeros = vec![
-                0f32;
-                self.n_layers * self.lane_elems()
-            ];
-            let args = [
-                HostTensor::I32(tokens_padded, vec![1, s]),
-                HostTensor::I32(vec![head as i32], vec![1]),
-                HostTensor::F32(zeros.clone(), cache_shape.clone()),
-                HostTensor::F32(zeros, cache_shape.clone()),
-            ];
-            let outs = self.rt.execute(&name, &args)?;
-            logits = outs[0].as_f32()?.to_vec();
-            let k = outs[1].as_f32()?.to_vec();
-            let v = outs[2].as_f32()?.to_vec();
-            self.lanes[lane] = Some(LaneCache { k, v });
-            start = head;
+            self.batcher.seqs[seq_index].prefilled = cached_tokens;
+            debug_assert!(self.batcher.seqs[seq_index].in_prefill());
+            return Ok(());
         }
 
-        // Chunked tail: teacher-force the remaining prompt tokens through
-        // batch-1 decode steps (their logits are discarded except the
-        // last, which predicts the first generated token).
-        let dname = format!("decode_{}_b1", self.cfg.kernel);
-        for i in start..prompt_len {
-            let cache = self.lanes[lane].as_ref().unwrap();
-            let args = [
-                HostTensor::I32(vec![prompt[i]], vec![1]),
-                HostTensor::I32(vec![i as i32], vec![1]),
-                HostTensor::F32(cache.k.clone(), cache_shape.clone()),
-                HostTensor::F32(cache.v.clone(), cache_shape.clone()),
-            ];
-            let outs = self.rt.execute(&dname, &args)?;
-            logits = outs[0].as_f32()?.to_vec();
-            let cache = self.lanes[lane].as_mut().unwrap();
-            cache.k = outs[1].as_f32()?.to_vec();
-            cache.v = outs[2].as_f32()?.to_vec();
-        }
-        debug_assert!(!logits.is_empty(), "prompt produced no logits");
-
-        // Publish the prompt's full blocks while the lane's host buffer is
-        // authoritative (decode keeps KV literal-resident, so this is the
-        // one point where cached data is guaranteed current).
         if self.cfg.enable_prefix_cache {
-            self.register_prompt_blocks(lane, &prompt);
+            self.metrics.prefix_misses += 1;
         }
+        // Head chunk through the prefill artifact; any remaining prompt
+        // tokens are chunk-prefilled by the mixed decode steps.
+        let head = prompt_len.min(s);
+        let mut tokens_padded = prompt[..head].to_vec();
+        tokens_padded.resize(s, 0);
+        let name = format!("prefill_{}_b1_s{}", self.cfg.kernel, s);
+        let zeros = vec![0f32; self.n_layers * self.lane_elems()];
+        let args = [
+            HostTensor::I32(tokens_padded, vec![1, s]),
+            HostTensor::I32(vec![head as i32], vec![1]),
+            HostTensor::F32(zeros.clone(), cache_shape.clone()),
+            HostTensor::F32(zeros, cache_shape.clone()),
+        ];
+        let outs = self.rt.execute(&name, &args)?;
+        let k = outs[1].as_f32()?.to_vec();
+        let v = outs[2].as_f32()?.to_vec();
+        self.lanes[lane] = Some(LaneCache { k, v });
+        self.batcher.seqs[seq_index].prefilled = head;
 
-        let temp = self.batcher.seqs[seq_index].req.temperature;
-        let tok = sampler::sample(&logits[..self.vocab], temp, &mut self.rng);
-
-        let seq = &mut self.batcher.seqs[seq_index];
-        self.metrics.prompt_tokens += prompt_len as u64;
-        seq.push_generated(tok);
-        self.metrics.generated_tokens += 1;
-        self.metrics
-            .ttft
-            .record(seq.first_token_at.unwrap().duration_since(seq.enqueued_at));
-        self.last_token_at[lane] = Some(Instant::now());
-        self.maybe_finish_lane(lane)?;
+        if head == prompt_len {
+            // Whole prompt fit the window: its last-token logits yield the
+            // first generated token now.
+            let logits = outs[0].as_f32()?;
+            if self.cfg.enable_prefix_cache {
+                self.register_prompt_blocks(lane, &prompt);
+            }
+            let temp = self.batcher.seqs[seq_index].req.temperature;
+            let tok = sampler::sample(&logits[..self.vocab], temp, &mut self.rng);
+            let seq = &mut self.batcher.seqs[seq_index];
+            seq.push_generated(tok);
+            self.metrics.generated_tokens += 1;
+            self.metrics
+                .ttft
+                .record(seq.first_token_at.unwrap().duration_since(seq.enqueued_at));
+            self.last_token_at[lane] = Some(Instant::now());
+            self.maybe_finish_lane(lane)?;
+        }
         Ok(())
     }
 
@@ -443,8 +434,15 @@ impl Engine {
         for (slot, &lane) in lanes.iter().enumerate() {
             let seq_index = self.batcher.seq_in_lane(lane).expect("active lane empty");
             let seq = &self.batcher.seqs[seq_index];
-            tokens[slot] = seq.last_token();
-            pos[slot] = (seq.pos() - 1) as i32;
+            if seq.in_prefill() {
+                // Chunked prefill riding the decode batch: teacher-force
+                // the next prompt token at its context position.
+                tokens[slot] = seq.next_prefill_token();
+                pos[slot] = seq.prefilled as i32;
+            } else {
+                tokens[slot] = seq.last_token();
+                pos[slot] = (seq.pos() - 1) as i32;
+            }
         }
         let tokens_lit = HostTensor::I32(tokens, vec![nb]).to_literal()?;
         let pos_lit = HostTensor::I32(pos, vec![nb]).to_literal()?;
@@ -491,8 +489,22 @@ impl Engine {
 
         let now = Instant::now();
         let mut membership_changed = false;
+        // Lanes whose prompt completed this step: their slot logits yield
+        // the first generated token, and their full prompt KV becomes
+        // publishable once flushed to the host.
+        let mut completed_prompts: Vec<(usize, usize)> = Vec::new();
         for (slot, &lane) in lanes.iter().enumerate() {
             let seq_index = self.batcher.seq_in_lane(lane).unwrap();
+            if self.batcher.seqs[seq_index].in_prefill() {
+                let seq = &mut self.batcher.seqs[seq_index];
+                seq.prefilled += 1;
+                self.metrics.chunked_prefill_tokens += 1;
+                if seq.in_prefill() {
+                    continue; // mid-prompt: this slot's logits are discarded
+                }
+                completed_prompts.push((slot, lane));
+                continue;
+            }
             let temp = self.batcher.seqs[seq_index].req.temperature;
             let tok = sampler::sample(
                 &logits[slot * self.vocab..(slot + 1) * self.vocab],
@@ -509,6 +521,39 @@ impl Engine {
             self.maybe_finish_lane(lane)?;
             if was && self.batcher.seq_in_lane(lane).is_none() {
                 membership_changed = true;
+            }
+        }
+        if !completed_prompts.is_empty() {
+            // The completing tokens' KV lives only in the step's literals:
+            // flush before publishing prompt blocks (costs one steady-state
+            // rebuild, paid once per longer-than-window prompt).
+            if self.cfg.enable_prefix_cache {
+                self.sync_steady_to_host()?;
+            }
+            for &(slot, lane) in &completed_prompts {
+                let seq_index = self.batcher.seq_in_lane(lane).unwrap();
+                if self.cfg.enable_prefix_cache {
+                    let prompt = self.batcher.seqs[seq_index].req.prompt.clone();
+                    self.register_prompt_blocks(lane, &prompt);
+                }
+                let temp = self.batcher.seqs[seq_index].req.temperature;
+                let tok = sampler::sample(
+                    &logits[slot * self.vocab..(slot + 1) * self.vocab],
+                    temp,
+                    &mut self.rng,
+                );
+                let seq = &mut self.batcher.seqs[seq_index];
+                seq.push_generated(tok);
+                self.metrics.generated_tokens += 1;
+                self.metrics
+                    .ttft
+                    .record(seq.first_token_at.unwrap().duration_since(seq.enqueued_at));
+                self.last_token_at[lane] = Some(now);
+                let was = self.batcher.seq_in_lane(lane).is_some();
+                self.maybe_finish_lane(lane)?;
+                if was && self.batcher.seq_in_lane(lane).is_none() {
+                    membership_changed = true;
+                }
             }
         }
         if membership_changed {

@@ -79,6 +79,9 @@ pub struct EngineMetrics {
     pub decode_steps: u64,
     /// Sum over decode steps of active lanes (for mean batch occupancy).
     pub decode_lane_steps: u64,
+    /// Prompt tokens teacher-forced through *mixed* decode steps (chunked
+    /// prefill riding the decode batch instead of stalling it).
+    pub chunked_prefill_tokens: u64,
     /// Prefix-cache counters: requests admitted with/without a cached
     /// prompt prefix, prompt tokens whose prefill was skipped, and cached
     /// blocks evicted under the cache's budget.
@@ -114,7 +117,7 @@ impl EngineMetrics {
         format!(
             "requests: {} admitted, {} finished, {} rejected\n\
              tokens:   {} prompt, {} generated\n\
-             steps:    {} total ({} prefill, {} decode; mean decode batch {:.2})\n\
+             steps:    {} total ({} prefill, {} decode; mean decode batch {:.2}; {} chunk-riding prompt tokens)\n\
              prefix:   {} hits / {} misses ({:.0}% hit rate), {} tokens skipped, {} evictions\n\
              wall:     {:.2}s -> {:.1} gen tok/s\n\
              TTFT:     mean {:.1} ms, p50 {:.1} ms, p99 {:.1} ms\n\
@@ -128,6 +131,7 @@ impl EngineMetrics {
             self.prefill_steps,
             self.decode_steps,
             self.mean_decode_batch(),
+            self.chunked_prefill_tokens,
             self.prefix_hits,
             self.prefix_misses,
             self.prefix_hit_rate() * 100.0,

@@ -1,8 +1,11 @@
 //! L3 coordinator: the serving engine (vLLM-shaped) and its parts.
 //!
 //! * [`request`] — request/sequence lifecycle types.
-//! * [`batcher`] — FCFS admission queue, lane assignment, prefill-priority
-//!   step planning (continuous batching over fixed-shape AOT artifacts).
+//! * [`batcher`] — the scheduling core: the token-budget
+//!   [`ContinuousScheduler`] (continuous batching with chunked prefill —
+//!   decode tokens fill each step's budget first, admitted prompts chunk
+//!   into the remainder), plus the lane-granular [`Batcher`] the
+//!   fixed-shape PJRT engine drives with the same decode-first policy.
 //! * [`kv_cache`] — paged KV block manager (vLLM-style) with refcounted
 //!   copy-on-write block sharing, the memory accountant that converts
 //!   quantization's freed bytes into batch slots.
@@ -15,8 +18,12 @@
 //!   AOT-compiled tiny model; Python never runs here.
 //! * [`router`] — multi-replica request router (round-robin, least-loaded,
 //!   session-affinity, prefix-aware) for scale-out serving.
-//! * [`simserve`] — the same policy run against the `gpusim` cost model at
-//!   paper scale (Table 1, Fig. 8).
+//! * [`simserve`] — the serving policies run against the `gpusim` cost
+//!   model at paper scale: continuous batching with chunked prefill
+//!   (per-step cost from `gpusim::mixed_step_latency` at the actual mixed
+//!   batch size), the static prefill-then-decode wave baseline it
+//!   replaces, and the legacy step-admission reference behind Table 1 /
+//!   Fig. 8.
 //! * [`metrics`] — throughput counters and TTFT/ITL histograms.
 
 pub mod batcher;
@@ -29,11 +36,17 @@ pub mod router;
 pub mod sampler;
 pub mod simserve;
 
-pub use batcher::{Batcher, StepPlan};
+pub use batcher::{
+    Batcher, ChunkPolicy, ContinuousScheduler, PrefillChunk, SchedSeq, SchedSeqId, SchedState,
+    StepBatch, StepPlan,
+};
 pub use engine::{Completion, Engine, EngineConfig};
 pub use kv_cache::{blocks_for_device, KvBlockManager};
 pub use metrics::{EngineMetrics, Histogram};
 pub use prefix::{chain_hash, BlockHash, PrefixCache, PrefixIndex, PrefixStats, ROOT_HASH};
 pub use request::{FinishReason, GenerationRequest, SeqState, Sequence};
 pub use router::{prefix_key, Policy, RouteDecision, Router};
-pub use simserve::{simulate_serving, SimPolicy, SimResult};
+pub use simserve::{
+    simulate_continuous, simulate_serving, simulate_static_wave, ContinuousPolicy,
+    ContinuousResult, SimPolicy, SimResult,
+};

@@ -34,6 +34,11 @@ pub struct Sequence {
     /// All tokens: prompt followed by generated.
     pub tokens: Vec<i32>,
     pub generated: usize,
+    /// Prompt tokens whose KV has been computed (or leased from the
+    /// prefix cache). A sequence with `prefilled < prompt.len()` is
+    /// mid-chunked-prefill: its remaining prompt tokens ride mixed decode
+    /// steps one per step until the prompt completes.
+    pub prefilled: usize,
     /// Prompt tokens served from the automatic prefix cache at prefill
     /// (their KV was reused, so their prefill compute was skipped).
     pub cached_prefix_tokens: usize,
@@ -59,6 +64,7 @@ impl Sequence {
             req,
             tokens,
             generated: 0,
+            prefilled: 0,
             cached_prefix_tokens: 0,
             state: SeqState::Waiting,
             enqueued_at: Instant::now(),
@@ -78,6 +84,18 @@ impl Sequence {
     /// cached prefix).
     pub fn uncached_prompt_tokens(&self) -> usize {
         self.req.prompt.len() - self.cached_prefix_tokens.min(self.req.prompt.len())
+    }
+
+    /// Still computing its prompt: the next mixed decode step should feed
+    /// `prompt[prefilled]` instead of the last generated token.
+    pub fn in_prefill(&self) -> bool {
+        self.prefilled < self.req.prompt.len()
+    }
+
+    /// The prompt token a mixed step should teacher-force next.
+    pub fn next_prefill_token(&self) -> i32 {
+        debug_assert!(self.in_prefill());
+        self.req.prompt[self.prefilled]
     }
 
     pub fn last_token(&self) -> i32 {
@@ -140,6 +158,19 @@ mod tests {
         s.push_generated(9);
         assert_eq!(s.should_stop(), Some(FinishReason::Length));
         assert_eq!(s.output_tokens(), &[7, 9]);
+    }
+
+    #[test]
+    fn chunked_prefill_progress() {
+        let mut s = Sequence::new(req(5, 2, None));
+        assert!(s.in_prefill());
+        for i in 0..5 {
+            assert_eq!(s.next_prefill_token(), i as i32);
+            s.prefilled += 1;
+        }
+        assert!(!s.in_prefill());
+        s.push_generated(9);
+        assert_eq!(s.generated, 1);
     }
 
     #[test]

@@ -149,7 +149,8 @@ fn kv_pool_blocks(
     dev: &DeviceSpec,
     spec: &LlmSpec,
     kind: KernelKind,
-    policy: &SimPolicy,
+    block_size: u64,
+    headroom_frac: f64,
 ) -> u64 {
     let w4 = !matches!(kind, KernelKind::Fp16);
     let kv_per_token =
@@ -158,8 +159,8 @@ fn kv_pool_blocks(
         dev.mem_bytes(),
         spec.weight_bytes(w4),
         kv_per_token,
-        policy.block_size,
-        policy.headroom_frac,
+        block_size,
+        headroom_frac,
     )
 }
 
@@ -173,7 +174,7 @@ pub fn simulate_serving(
     policy: &SimPolicy,
     calib: &Calib,
 ) -> SimResult {
-    let blocks = kv_pool_blocks(dev, spec, kind, policy);
+    let blocks = kv_pool_blocks(dev, spec, kind, policy.block_size, policy.headroom_frac);
     if blocks == 0 {
         return SimResult { oom: true, ..Default::default() };
     }
@@ -508,7 +509,7 @@ pub fn simulate_online(
     policy: &SimPolicy,
     calib: &Calib,
 ) -> OnlineResult {
-    let blocks = kv_pool_blocks(dev, spec, kind, policy);
+    let blocks = kv_pool_blocks(dev, spec, kind, policy.block_size, policy.headroom_frac);
     if blocks == 0 {
         return OnlineResult { oom: true, ..Default::default() };
     }
@@ -707,5 +708,648 @@ mod online_tests {
             on.mean_ttft_s,
             off.mean_ttft_s
         );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Continuous batching with chunked prefill (the token-budget scheduler) and
+// the static prefill-then-decode wave baseline it replaces.
+// ---------------------------------------------------------------------------
+
+use super::batcher::{ChunkPolicy, ContinuousScheduler};
+use crate::gpusim::mixed_step_latency;
+
+/// Policy for [`simulate_continuous`] / [`simulate_static_wave`].
+#[derive(Debug, Clone, Copy)]
+pub struct ContinuousPolicy {
+    pub max_num_seqs: usize,
+    pub block_size: u64,
+    pub watermark_frac: f64,
+    /// Memory fraction reserved for activations/runtime.
+    pub headroom_frac: f64,
+    /// Per-step token budget (decode tokens + prefill-chunk tokens) —
+    /// vLLM's `max_num_batched_tokens` with chunked prefill on.
+    pub token_budget: u64,
+    /// Automatic prefix caching (continuous scheduler only; a hit shrinks
+    /// a prompt's remaining chunks).
+    pub enable_prefix_cache: bool,
+    /// Prefill-call token cap for the wave baseline's whole-wave prefill.
+    pub wave_prefill_tokens: u64,
+}
+
+impl Default for ContinuousPolicy {
+    fn default() -> Self {
+        ContinuousPolicy {
+            max_num_seqs: 256,
+            block_size: 16,
+            watermark_frac: 0.01,
+            headroom_frac: 0.10,
+            token_budget: 512,
+            enable_prefix_cache: true,
+            wave_prefill_tokens: 4096,
+        }
+    }
+}
+
+/// Outcome of a continuous-batching (or wave-baseline) simulation.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ContinuousResult {
+    pub finished: usize,
+    pub wall_s: f64,
+    /// Distinct prompt tokens admitted (first admissions only — preemption
+    /// recomputes are scheduler overhead, not offered work).
+    pub prompt_tokens: u64,
+    pub gen_tokens: u64,
+    pub gen_tok_per_s: f64,
+    /// (prompt + generated) / wall — vLLM's total token throughput.
+    pub total_tok_per_s: f64,
+    pub steps: u64,
+    /// Mean tokens per step (decode + chunk): the sustained GEMM M.
+    pub mean_step_tokens: f64,
+    /// Mean decode lanes over steps that decoded at all.
+    pub mean_decode_batch: f64,
+    /// Prefill chunks scheduled (≥ one per admitted prompt).
+    pub prefill_chunks: u64,
+    pub oom: bool,
+    pub preemptions: u64,
+    /// Mean time-to-first-token across (re)admissions.
+    pub mean_ttft_s: f64,
+    pub prefix_hits: u64,
+    pub prefix_misses: u64,
+    pub prefix_tokens_skipped: u64,
+    pub prefix_evictions: u64,
+}
+
+impl ContinuousResult {
+    pub fn prefix_hit_rate(&self) -> f64 {
+        let n = self.prefix_hits + self.prefix_misses;
+        if n == 0 { 0.0 } else { self.prefix_hits as f64 / n as f64 }
+    }
+}
+
+/// Continuous batching with chunked prefill over arrivals (offline
+/// workloads simply have every `arrival_s == 0`).
+///
+/// Each iteration: arrivals are queued; admission leases prefix-cache
+/// matches and allocates full-prompt KV (the chunk schedule changes
+/// *compute* timing, not memory footprint); the token-budget scheduler
+/// plans one mixed step (decode first, then FCFS prefill chunks); its
+/// latency comes from one [`mixed_step_latency`] query at the actual mixed
+/// batch size. Decode appends that run out of KV blocks preempt the
+/// sequence (vLLM recompute policy) back to the queue.
+pub fn simulate_continuous(
+    dev: &DeviceSpec,
+    spec: &LlmSpec,
+    kind: KernelKind,
+    requests: &[Request],
+    policy: &ContinuousPolicy,
+    calib: &Calib,
+) -> ContinuousResult {
+    let blocks = kv_pool_blocks(dev, spec, kind, policy.block_size, policy.headroom_frac);
+    if blocks == 0 {
+        return ContinuousResult { oom: true, ..Default::default() };
+    }
+    let mut kv = KvBlockManager::new(blocks, policy.block_size, policy.watermark_frac);
+    let mut cache = PrefixCache::new(policy.block_size as usize, policy.enable_prefix_cache);
+    let mut sched = ContinuousScheduler::new(ChunkPolicy {
+        token_budget: policy.token_budget,
+        max_num_seqs: policy.max_num_seqs,
+    });
+    let mut pending: VecDeque<Request> = requests.iter().copied().collect();
+    // Scheduler slot -> workload request (token streams, arrival).
+    let mut slot_req: Vec<Request> = Vec::new();
+    // Slot -> materialized prompt token ids (built once; admission under
+    // pool pressure may retry for thousands of steps).
+    let mut slot_ids: Vec<Vec<i32>> = Vec::new();
+    // Count each request's prompt once across preemption re-admissions.
+    let mut counted: Vec<bool> = Vec::new();
+    // Head request + pool state of the last failed admission: retrying is
+    // pointless (and re-walks the prefix trie) until either changes.
+    let mut admit_blocked: Option<(usize, u64, u64)> = None;
+
+    let mut clock = 0.0f64;
+    let mut prompt_tokens = 0u64;
+    let mut gen_tokens = 0u64;
+    let mut finished = 0usize;
+    let mut steps = 0u64;
+    let mut step_tokens_sum = 0u64;
+    let mut decode_steps = 0u64;
+    let mut decode_lane_steps = 0u64;
+    let mut prefill_chunks = 0u64;
+    let mut preemptions = 0u64;
+    let mut ttft_sum = 0.0f64;
+    let mut ttft_n = 0u64;
+
+    loop {
+        while pending.front().is_some_and(|r| r.arrival_s() <= clock) {
+            let r = pending.pop_front().unwrap();
+            let sid = sched.submit(r.id, r.prompt_tokens, r.gen_tokens);
+            debug_assert_eq!(sid, slot_req.len());
+            slot_ids.push(context_ids(&r, r.prompt_tokens));
+            slot_req.push(r);
+            counted.push(false);
+        }
+        if !sched.has_work() {
+            match pending.front() {
+                Some(r) => {
+                    clock = r.arrival_s(); // idle until the next arrival
+                    continue;
+                }
+                None => break,
+            }
+        }
+
+        // --- admission: FCFS while the resident cap and KV pool allow ---
+        while sched.running_len() < policy.max_num_seqs {
+            let Some(sid) = sched.peek_waiting() else { break };
+            let pool = (kv.free_blocks(), kv.cached_idle_blocks());
+            if admit_blocked == Some((sid, pool.0, pool.1)) {
+                break; // same head, same pool: admit() would fail again
+            }
+            let req = slot_req[sid];
+            match cache.admit(&mut kv, req.id, &slot_ids[sid]) {
+                Ok(matched) => {
+                    admit_blocked = None;
+                    let admitted = sched.admit_next(matched, |_| true);
+                    debug_assert_eq!(admitted, Some(sid));
+                    if !counted[sid] {
+                        counted[sid] = true;
+                        prompt_tokens += req.prompt_tokens;
+                    }
+                    // Publish the prompt's full blocks eagerly so
+                    // concurrent same-prefix requests share them.
+                    let _ = cache.register(&mut kv, req.id, &slot_ids[sid]);
+                }
+                Err(_) => {
+                    if sched.running_len() == 0 {
+                        // Request larger than the whole pool: reject it
+                        // (nothing running will ever free enough blocks).
+                        sched.reject_waiting_head();
+                        continue;
+                    }
+                    admit_blocked = Some((sid, pool.0, pool.1));
+                    break; // pool pressure: retry once the pool changes
+                }
+            }
+        }
+
+        // --- one mixed step: decode lanes + FCFS prefill chunks ---
+        let batch = sched.plan_step();
+        if batch.is_empty() {
+            debug_assert_eq!(sched.running_len(), 0);
+            match pending.front() {
+                Some(r) => {
+                    clock = clock.max(r.arrival_s());
+                    continue;
+                }
+                None => {
+                    if sched.peek_waiting().is_some() {
+                        // Unadmittable leftovers with nothing running.
+                        sched.reject_waiting_head();
+                        continue;
+                    }
+                    break;
+                }
+            }
+        }
+        let decode_batch = batch.decode.len() as u64;
+        let mean_ctx = if decode_batch > 0 {
+            batch
+                .decode
+                .iter()
+                .map(|&sid| {
+                    let s = sched.seq(sid);
+                    s.prompt_tokens + s.generated
+                })
+                .sum::<u64>()
+                / decode_batch
+        } else {
+            0
+        };
+        let perf = mixed_step_latency(
+            dev,
+            spec,
+            kind,
+            decode_batch,
+            mean_ctx,
+            batch.prefill_tokens(),
+            batch.prefill_attn_ctx_tokens(),
+            calib,
+        );
+        clock += perf.total_s();
+        steps += 1;
+        step_tokens_sum += batch.step_tokens();
+        prefill_chunks += batch.chunks.len() as u64;
+        if decode_batch > 0 {
+            decode_steps += 1;
+            decode_lane_steps += decode_batch;
+        }
+
+        // Commit prefill chunks; a prompt-completing chunk's last logits
+        // yield the sequence's first generated token.
+        for c in &batch.chunks {
+            if sched.commit_chunk(c) {
+                sched.commit_first_token(c.seq);
+                gen_tokens += 1;
+                let req = slot_req[c.seq];
+                ttft_sum += clock - req.arrival_s();
+                ttft_n += 1;
+                let s = sched.seq(c.seq);
+                if s.generated >= s.gen_budget {
+                    register_and_free(&mut kv, &mut cache, &req);
+                    sched.finish(c.seq);
+                    finished += 1;
+                    continue;
+                }
+                // The first token's KV slot is subject to the same pool
+                // pressure as decode appends: preempt on exhaustion.
+                if !append_with_reclaim(&mut kv, &mut cache, req.id) {
+                    register_and_free(&mut kv, &mut cache, &req);
+                    sched.preempt(c.seq);
+                    preemptions += 1;
+                }
+            }
+        }
+        // Commit decode lanes; finished sequences leave their blocks warm
+        // in the cache, KV exhaustion preempts (recompute policy).
+        for &sid in &batch.decode {
+            gen_tokens += 1;
+            let done = sched.commit_decode(sid);
+            let req = slot_req[sid];
+            if done {
+                register_and_free(&mut kv, &mut cache, &req);
+                sched.finish(sid);
+                finished += 1;
+                continue;
+            }
+            if !append_with_reclaim(&mut kv, &mut cache, req.id) {
+                register_and_free(&mut kv, &mut cache, &req);
+                sched.preempt(sid);
+                preemptions += 1;
+            }
+        }
+    }
+
+    ContinuousResult {
+        finished,
+        wall_s: clock,
+        prompt_tokens,
+        gen_tokens,
+        gen_tok_per_s: gen_tokens as f64 / clock.max(1e-9),
+        total_tok_per_s: (prompt_tokens + gen_tokens) as f64 / clock.max(1e-9),
+        steps,
+        mean_step_tokens: step_tokens_sum as f64 / steps.max(1) as f64,
+        mean_decode_batch: decode_lane_steps as f64 / decode_steps.max(1) as f64,
+        prefill_chunks,
+        oom: false,
+        preemptions,
+        mean_ttft_s: ttft_sum / ttft_n.max(1) as f64,
+        prefix_hits: cache.stats.hits,
+        prefix_misses: cache.stats.misses,
+        prefix_tokens_skipped: cache.stats.tokens_skipped,
+        prefix_evictions: cache.stats.evictions,
+    }
+}
+
+/// The scheduler the continuous batcher replaces: static
+/// prefill-then-decode *waves* (Orca's/vLLM's motivating baseline, and the
+/// paper-era FasterTransformer serving mode). A wave admits as many queued
+/// requests as KV allows — reserving each sequence's full prompt+gen
+/// context, since without preemption admission must be safe — prefills
+/// every admitted prompt, then decodes until the *entire wave* finishes
+/// before admitting again. The drain phase runs at ever-smaller decode
+/// batches, precisely the regime where the paper's Fig. 7 shows all
+/// kernels starved; heavy-tailed generation lengths make it expensive.
+pub fn simulate_static_wave(
+    dev: &DeviceSpec,
+    spec: &LlmSpec,
+    kind: KernelKind,
+    requests: &[Request],
+    policy: &ContinuousPolicy,
+    calib: &Calib,
+) -> ContinuousResult {
+    let blocks = kv_pool_blocks(dev, spec, kind, policy.block_size, policy.headroom_frac);
+    if blocks == 0 {
+        return ContinuousResult { oom: true, ..Default::default() };
+    }
+    let mut kv = KvBlockManager::new(blocks, policy.block_size, policy.watermark_frac);
+    let mut pending: VecDeque<Request> = requests.iter().copied().collect();
+    let mut waiting: VecDeque<Request> = VecDeque::new();
+
+    let mut clock = 0.0f64;
+    let mut prompt_tokens = 0u64;
+    let mut gen_tokens = 0u64;
+    let mut finished = 0usize;
+    let mut steps = 0u64;
+    let mut step_tokens_sum = 0u64;
+    let mut decode_steps = 0u64;
+    let mut decode_lane_steps = 0u64;
+    let mut ttft_sum = 0.0f64;
+    let mut ttft_n = 0u64;
+
+    loop {
+        while pending.front().is_some_and(|r| r.arrival_s() <= clock) {
+            waiting.push_back(pending.pop_front().unwrap());
+        }
+        if waiting.is_empty() {
+            match pending.front() {
+                Some(r) => {
+                    clock = r.arrival_s();
+                    continue;
+                }
+                None => break,
+            }
+        }
+
+        // --- form one wave (reserve prompt + full generation budget) ---
+        let mut wave: Vec<RunningSeq> = Vec::new();
+        while let Some(&req) = waiting.front() {
+            if wave.len() >= policy.max_num_seqs {
+                break;
+            }
+            if kv.allocate(req.id, req.prompt_tokens + req.gen_tokens).is_err() {
+                break;
+            }
+            waiting.pop_front();
+            prompt_tokens += req.prompt_tokens;
+            wave.push(RunningSeq { req, generated: 0 });
+        }
+        if wave.is_empty() {
+            // Head request larger than the whole pool: reject it.
+            waiting.pop_front();
+            continue;
+        }
+
+        // --- prefill the whole wave, max_prefill-token calls ---
+        let mut rem: u64 = wave.iter().map(|s| s.req.prompt_tokens).sum();
+        while rem > 0 {
+            let call = rem.min(policy.wave_prefill_tokens.max(1));
+            clock += prefill_latency(dev, spec, kind, call, calib);
+            steps += 1;
+            step_tokens_sum += call;
+            rem -= call;
+        }
+        for s in wave.iter_mut() {
+            s.generated = 1;
+            gen_tokens += 1;
+            ttft_sum += clock - s.req.arrival_s();
+            ttft_n += 1;
+        }
+
+        // --- decode until the whole wave drains ---
+        loop {
+            let active: Vec<usize> = (0..wave.len())
+                .filter(|&i| wave[i].generated < wave[i].req.gen_tokens)
+                .collect();
+            if active.is_empty() {
+                break;
+            }
+            let batch = active.len() as u64;
+            let mean_ctx = active
+                .iter()
+                .map(|&i| wave[i].req.prompt_tokens + wave[i].generated)
+                .sum::<u64>()
+                / batch;
+            clock += decode_latency(dev, spec, kind, batch, mean_ctx, calib);
+            steps += 1;
+            step_tokens_sum += batch;
+            decode_steps += 1;
+            decode_lane_steps += batch;
+            for &i in &active {
+                wave[i].generated += 1;
+                gen_tokens += 1;
+            }
+        }
+        for s in &wave {
+            kv.free_seq(s.req.id).expect("wave sequence has blocks");
+            finished += 1;
+        }
+    }
+
+    ContinuousResult {
+        finished,
+        wall_s: clock,
+        prompt_tokens,
+        gen_tokens,
+        gen_tok_per_s: gen_tokens as f64 / clock.max(1e-9),
+        total_tok_per_s: (prompt_tokens + gen_tokens) as f64 / clock.max(1e-9),
+        steps,
+        mean_step_tokens: step_tokens_sum as f64 / steps.max(1) as f64,
+        mean_decode_batch: decode_lane_steps as f64 / decode_steps.max(1) as f64,
+        prefill_chunks: 0,
+        oom: false,
+        preemptions: 0,
+        mean_ttft_s: ttft_sum / ttft_n.max(1) as f64,
+        prefix_hits: 0,
+        prefix_misses: 0,
+        prefix_tokens_skipped: 0,
+        prefix_evictions: 0,
+    }
+}
+
+#[cfg(test)]
+mod continuous_tests {
+    use super::*;
+    use crate::gpusim::Gpu;
+    use crate::model::Model;
+    use crate::workload::{BurstyWorkload, ShareGptLike, SharedPrefixWorkload};
+
+    fn a6000_vicuna() -> (DeviceSpec, LlmSpec) {
+        (Gpu::RtxA6000.spec(), Model::Vicuna13B.spec())
+    }
+
+    #[test]
+    fn all_continuous_requests_complete() {
+        let (dev, spec) = a6000_vicuna();
+        let reqs = BurstyWorkload::default().offline(100, 7);
+        let r = simulate_continuous(
+            &dev,
+            &spec,
+            KernelKind::Quick,
+            &reqs,
+            &ContinuousPolicy::default(),
+            &Calib::default(),
+        );
+        assert_eq!(r.finished, 100);
+        assert!(!r.oom);
+        let want_gen: u64 = reqs.iter().map(|r| r.gen_tokens).sum();
+        assert!(r.gen_tokens >= want_gen, "{} < {want_gen}", r.gen_tokens);
+        let want_prompt: u64 = reqs.iter().map(|r| r.prompt_tokens).sum();
+        assert_eq!(r.prompt_tokens, want_prompt);
+        assert!(r.prefill_chunks >= 100);
+    }
+
+    #[test]
+    fn all_wave_requests_complete() {
+        let (dev, spec) = a6000_vicuna();
+        let reqs = BurstyWorkload::default().offline(100, 7);
+        let r = simulate_static_wave(
+            &dev,
+            &spec,
+            KernelKind::Quick,
+            &reqs,
+            &ContinuousPolicy::default(),
+            &Calib::default(),
+        );
+        assert_eq!(r.finished, 100);
+        assert!(!r.oom);
+    }
+
+    #[test]
+    fn steps_respect_token_budget() {
+        let (dev, spec) = a6000_vicuna();
+        let policy = ContinuousPolicy { token_budget: 256, ..Default::default() };
+        let reqs = BurstyWorkload::default().offline(60, 3);
+        let r = simulate_continuous(
+            &dev,
+            &spec,
+            KernelKind::Quick,
+            &reqs,
+            &policy,
+            &Calib::default(),
+        );
+        assert!(r.mean_step_tokens <= 256.0 + 1e-9);
+        assert!(r.mean_step_tokens > 32.0, "budget badly underfilled: {}", r.mean_step_tokens);
+    }
+
+    #[test]
+    fn continuous_beats_wave_on_bursty_traffic() {
+        // Tentpole acceptance: >= 1.3x total token throughput for the
+        // QUICK kernel on the bursty workload at equal KV budget.
+        let (dev, spec) = a6000_vicuna();
+        let reqs = BurstyWorkload::default().online(250, 1.0, 42);
+        let policy = ContinuousPolicy::default();
+        let calib = Calib::default();
+        let wave = simulate_static_wave(&dev, &spec, KernelKind::Quick, &reqs, &policy, &calib);
+        let cont = simulate_continuous(&dev, &spec, KernelKind::Quick, &reqs, &policy, &calib);
+        assert!(!wave.oom && !cont.oom);
+        assert_eq!(wave.finished, 250);
+        assert_eq!(cont.finished, 250);
+        let speedup = cont.total_tok_per_s / wave.total_tok_per_s;
+        assert!(
+            speedup >= 1.3,
+            "continuous {:.1} tok/s only {speedup:.2}x wave {:.1} tok/s",
+            cont.total_tok_per_s,
+            wave.total_tok_per_s
+        );
+    }
+
+    #[test]
+    fn chunked_prefill_sustains_bigger_mixed_batches() {
+        let (dev, spec) = a6000_vicuna();
+        let reqs = BurstyWorkload::default().offline(150, 11);
+        let policy = ContinuousPolicy::default();
+        let calib = Calib::default();
+        let wave = simulate_static_wave(&dev, &spec, KernelKind::Quick, &reqs, &policy, &calib);
+        let cont = simulate_continuous(&dev, &spec, KernelKind::Quick, &reqs, &policy, &calib);
+        // The mixed steps keep the GEMM M well above the wave's decode-only
+        // steps (that's where the throughput comes from).
+        assert!(
+            cont.mean_step_tokens > wave.mean_decode_batch * 1.5,
+            "mixed steps {:.1} tokens vs wave decode batch {:.1}",
+            cont.mean_step_tokens,
+            wave.mean_decode_batch
+        );
+    }
+
+    #[test]
+    fn prefix_cache_shrinks_chunks_on_shared_prefixes() {
+        // Interop with the automatic prefix cache: shared-prefix traffic
+        // skips prefill chunks and speeds up the continuous scheduler.
+        let (dev, spec) = a6000_vicuna();
+        let reqs = SharedPrefixWorkload::default().offline(200, 9);
+        let calib = Calib::default();
+        let on = simulate_continuous(
+            &dev,
+            &spec,
+            KernelKind::Quick,
+            &reqs,
+            &ContinuousPolicy::default(),
+            &calib,
+        );
+        let off = simulate_continuous(
+            &dev,
+            &spec,
+            KernelKind::Quick,
+            &reqs,
+            &ContinuousPolicy { enable_prefix_cache: false, ..Default::default() },
+            &calib,
+        );
+        assert!(!on.oom && !off.oom);
+        assert_eq!(on.finished, reqs.len());
+        assert_eq!(off.finished, reqs.len());
+        assert!(on.prefix_hits > 0 && on.prefix_tokens_skipped > 0);
+        assert!(
+            on.total_tok_per_s >= off.total_tok_per_s * 1.15,
+            "cache-on {:.1} tok/s !>= 1.15x cache-off {:.1}",
+            on.total_tok_per_s,
+            off.total_tok_per_s
+        );
+        assert!(on.mean_ttft_s < off.mean_ttft_s);
+    }
+
+    #[test]
+    fn disjoint_traffic_unaffected_by_cache() {
+        let dev = Gpu::A100.spec();
+        let spec = Model::Mistral7B.spec();
+        let reqs = ShareGptLike::new().offline(100, 7);
+        let calib = Calib::default();
+        let on = simulate_continuous(
+            &dev,
+            &spec,
+            KernelKind::Quick,
+            &reqs,
+            &ContinuousPolicy::default(),
+            &calib,
+        );
+        let off = simulate_continuous(
+            &dev,
+            &spec,
+            KernelKind::Quick,
+            &reqs,
+            &ContinuousPolicy { enable_prefix_cache: false, ..Default::default() },
+            &calib,
+        );
+        assert_eq!(on.preemptions, 0);
+        assert_eq!(on.prefix_tokens_skipped, 0, "disjoint prompts must not hit");
+        assert_eq!(on.wall_s, off.wall_s, "cache changed disjoint-workload timing");
+        assert_eq!(on.gen_tokens, off.gen_tokens);
+    }
+
+    #[test]
+    fn preemption_recovers_under_memory_pressure() {
+        // A tiny KV pool (high headroom) forces preemptions; every request
+        // must still finish exactly once.
+        let (dev, spec) = a6000_vicuna();
+        let policy = ContinuousPolicy { headroom_frac: 0.78, ..Default::default() };
+        let reqs = BurstyWorkload::default().offline(80, 21);
+        let r = simulate_continuous(
+            &dev,
+            &spec,
+            KernelKind::Quick,
+            &reqs,
+            &policy,
+            &Calib::default(),
+        );
+        assert!(!r.oom);
+        assert_eq!(r.finished, 80);
+        assert!(r.preemptions > 0, "pressure run should preempt");
+    }
+
+    #[test]
+    fn online_continuous_tracks_arrivals() {
+        let (dev, spec) = a6000_vicuna();
+        let reqs = BurstyWorkload::default().online(120, 0.5, 13);
+        let r = simulate_continuous(
+            &dev,
+            &spec,
+            KernelKind::Quick,
+            &reqs,
+            &ContinuousPolicy::default(),
+            &Calib::default(),
+        );
+        assert_eq!(r.finished, 120);
+        // The run can't end before the last arrival.
+        assert!(r.wall_s >= reqs.last().unwrap().arrival_s());
     }
 }

@@ -50,6 +50,98 @@ pub fn decode_step_latency(
     DecodeBreakdown { batch, gemm_s, attn_s, other_s }
 }
 
+/// Breakdown of one *mixed* engine step: `decode_batch` sequences each
+/// contributing one decode token plus `prefill_tokens` chunked-prefill
+/// prompt tokens riding the same weight GEMMs (Sarathi/vLLM-style chunked
+/// prefill). This is the batched-cost query the continuous-batching
+/// scheduler drives: the weight GEMMs run once at
+/// `M = decode_batch + prefill_tokens`, so prefill tokens amortize the
+/// per-step weight streaming that decode-only steps pay in full — exactly
+/// the batch-scaling regime (paper §3.3, Figs. 7–8) where QUICK's deleted
+/// write-back wins the most.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MixedStepBreakdown {
+    pub decode_batch: u64,
+    pub prefill_tokens: u64,
+    /// Time in the weight GEMMs at the mixed batch size.
+    pub gemm_s: f64,
+    /// Decode attention: KV-bandwidth bound reads for the decode lanes.
+    pub decode_attn_s: f64,
+    /// Prefill attention: tensor-core flops over each chunk's attended
+    /// context.
+    pub prefill_attn_s: f64,
+    /// Non-GEMM glue (norms, rope, sampling, kernel launches).
+    pub other_s: f64,
+}
+
+impl MixedStepBreakdown {
+    pub fn total_s(&self) -> f64 {
+        self.gemm_s + self.decode_attn_s + self.prefill_attn_s + self.other_s
+    }
+
+    /// Tokens processed by the step (decode + chunked prefill).
+    pub fn step_tokens(&self) -> u64 {
+        self.decode_batch + self.prefill_tokens
+    }
+}
+
+/// Latency of one mixed decode + chunked-prefill step.
+///
+/// * `decode_batch` sequences decode one token each against a mean context
+///   of `decode_mean_ctx` tokens;
+/// * `prefill_tokens` prompt tokens (across any number of per-sequence
+///   chunks) share the step's weight GEMMs;
+/// * `prefill_attn_ctx_tokens` is the sum over scheduled chunk tokens of
+///   the context length they attend to (callers sum `chunk_end_ctx` per
+///   chunk) — the O(T·ctx) flops term of chunked-prefill attention.
+///
+/// With `prefill_tokens == 0` this reduces exactly to
+/// [`decode_step_latency`]; the whole point of the mixed step is that
+/// `mixed < decode-only + prefill-only` because the weight traffic and
+/// per-kernel launch overheads are paid once.
+// One scalar per physical term; a param struct would obscure call sites.
+#[allow(clippy::too_many_arguments)]
+pub fn mixed_step_latency(
+    dev: &DeviceSpec,
+    spec: &LlmSpec,
+    kind: KernelKind,
+    decode_batch: u64,
+    decode_mean_ctx: u64,
+    prefill_tokens: u64,
+    prefill_attn_ctx_tokens: u64,
+    calib: &Calib,
+) -> MixedStepBreakdown {
+    let m = decode_batch + prefill_tokens;
+    assert!(m > 0, "mixed step with no tokens");
+    let mut gemm_s = 0.0;
+    for g in spec.gemms() {
+        gemm_s += model_gemm(dev, kind, m, g.n, g.k, calib).latency_s * g.count as f64;
+    }
+    let decode_attn_s = if decode_batch > 0 {
+        spec.kv_bytes(decode_batch, decode_mean_ctx.max(1)) / (dev.dram_bw() * calib.dram_eff)
+            + spec.n_layers as f64 * 2.0 * calib.overhead_s
+    } else {
+        0.0
+    };
+    let prefill_attn_s = if prefill_tokens > 0 {
+        let attn_flops = 2.0 * 2.0 * prefill_attn_ctx_tokens as f64
+            * spec.d_model as f64
+            * spec.n_layers as f64;
+        attn_flops / (dev.tc_tflops * 1e12 * calib.mma_eff)
+    } else {
+        0.0
+    };
+    let other_s = spec.n_layers as f64 * 4.0 * calib.overhead_s;
+    MixedStepBreakdown {
+        decode_batch,
+        prefill_tokens,
+        gemm_s,
+        decode_attn_s,
+        prefill_attn_s,
+        other_s,
+    }
+}
+
 /// Decode throughput (tokens/s) at a static batch, Fig. 8's y-axis.
 pub fn tokens_per_second(
     dev: &DeviceSpec,
@@ -148,6 +240,92 @@ mod tests {
             assert!(t > prev, "tokens/s not increasing at batch {b}");
             prev = t;
         }
+    }
+
+    #[test]
+    fn mixed_step_reduces_to_decode_step() {
+        // prefill_tokens == 0 must reproduce decode_step_latency exactly.
+        let dev = Gpu::RtxA6000.spec();
+        let spec = Model::Vicuna13B.spec();
+        let calib = Calib::default();
+        for (b, ctx) in [(1u64, 128u64), (32, 512), (128, 1024)] {
+            let d = decode_step_latency(&dev, &spec, KernelKind::Quick, b, ctx, &calib);
+            let m = mixed_step_latency(&dev, &spec, KernelKind::Quick, b, ctx, 0, 0, &calib);
+            assert!(
+                (d.total_s() - m.total_s()).abs() < 1e-12,
+                "b={b} ctx={ctx}: {} vs {}",
+                d.total_s(),
+                m.total_s()
+            );
+            assert_eq!(m.prefill_attn_s, 0.0);
+        }
+    }
+
+    #[test]
+    fn chunked_prefill_piggybacks_on_decode() {
+        // In the memory-bound decode regime (small batch, weight streaming
+        // dominates) a fused mixed step is much cheaper than a decode step
+        // plus a separate prefill call for the same tokens: the weight
+        // traffic and launch overheads are paid once. This is the saving
+        // the continuous scheduler's chunk-riding monetizes.
+        let dev = Gpu::RtxA6000.spec();
+        let spec = Model::Vicuna13B.spec();
+        let calib = Calib::default();
+        for kind in [KernelKind::Awq, KernelKind::Quick] {
+            let (b, ctx, chunk) = (8u64, 400u64, 56u64);
+            let fused =
+                mixed_step_latency(&dev, &spec, kind, b, ctx, chunk, chunk * 2, &calib);
+            let decode = decode_step_latency(&dev, &spec, kind, b, ctx, &calib);
+            let prefill_only =
+                mixed_step_latency(&dev, &spec, kind, 0, 0, chunk, chunk * 2, &calib);
+            assert!(
+                fused.total_s() < 0.85 * (decode.total_s() + prefill_only.total_s()),
+                "{kind:?}: fused {} !< 0.85x separate {}",
+                fused.total_s(),
+                decode.total_s() + prefill_only.total_s()
+            );
+        }
+    }
+
+    #[test]
+    fn mixed_step_monotone_in_prefill_tokens() {
+        let dev = Gpu::A100.spec();
+        let spec = Model::Mistral7B.spec();
+        let calib = Calib::default();
+        let mut prev = 0.0;
+        for chunk in [0u64, 64, 256, 512, 1024] {
+            let m = mixed_step_latency(
+                &dev,
+                &spec,
+                KernelKind::Quick,
+                16,
+                512,
+                chunk,
+                chunk * 2,
+                &calib,
+            );
+            assert!(m.total_s() >= prev * 0.999, "not monotone at chunk {chunk}");
+            assert_eq!(m.step_tokens(), 16 + chunk);
+            prev = m.total_s();
+        }
+    }
+
+    #[test]
+    fn pure_chunk_step_has_no_decode_attention() {
+        let dev = Gpu::A100.spec();
+        let spec = Model::Mistral7B.spec();
+        let m = mixed_step_latency(
+            &dev,
+            &spec,
+            KernelKind::Quick,
+            0,
+            0,
+            512,
+            1024,
+            &Calib::default(),
+        );
+        assert_eq!(m.decode_attn_s, 0.0);
+        assert!(m.prefill_attn_s > 0.0 && m.gemm_s > 0.0);
     }
 
     #[test]

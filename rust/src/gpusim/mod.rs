@@ -40,6 +40,9 @@ pub mod report;
 pub mod trace;
 
 pub use bank::BankCounter;
-pub use e2e::{decode_step_latency, max_batch_before_oom, tokens_per_second, DecodeBreakdown};
+pub use e2e::{
+    decode_step_latency, max_batch_before_oom, mixed_step_latency, tokens_per_second,
+    DecodeBreakdown, MixedStepBreakdown,
+};
 pub use gpu::{DeviceSpec, Gpu};
 pub use kernel_model::{Calib, KernelKind, KernelPerf, TileConfig};

@@ -21,10 +21,12 @@
 //!   the Table 1 benchmark and the prefix-cache evaluation.
 //! * [`runtime`] — PJRT execution of the AOT artifacts emitted by
 //!   `python/compile/aot.py` (`artifacts/hlo/*.hlo.txt`).
-//! * [`coordinator`] — the serving engine: request router, continuous
-//!   batcher, paged KV-cache manager with copy-on-write block sharing,
-//!   automatic prefix cache (`coordinator::prefix`), prefill/decode
-//!   scheduler, metrics.
+//! * [`coordinator`] — the serving engine: request router, token-budget
+//!   continuous batcher with chunked prefill (decode tokens fill each
+//!   step's budget first; admitted prompts chunk into the remainder and
+//!   ride the same mixed step), paged KV-cache manager with copy-on-write
+//!   block sharing, automatic prefix cache (`coordinator::prefix`),
+//!   preemption/requeue under KV pressure, metrics.
 //!
 //! Python never runs on the request path: `make artifacts` AOT-lowers the
 //! JAX/Pallas model once, and the [`runtime`] executes the HLO from Rust.

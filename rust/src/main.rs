@@ -4,7 +4,8 @@
 //! * `serve`    — run the PJRT-backed engine over a synthetic workload on
 //!   the AOT-compiled tiny model and print serving metrics.
 //! * `simulate` — regenerate a paper experiment (fig3 | fig7 | fig8 |
-//!   table1 | all) from the gpusim cost model and print paper-style rows.
+//!   table1 | prefix | continuous | all) from the gpusim cost model and
+//!   print paper-style rows.
 //! * `quantize` — offline packing demo: quantize + QUICK-interleave a
 //!   random matrix and report layouts.
 //! * `info`     — list artifacts and device specs.
@@ -24,7 +25,7 @@ quick-infer — QUICK (2024) reproduction: conflict-free W4A16 inference stack
 USAGE:
     quick-infer serve    [--artifacts DIR] [--kernel quick|awq|fp16]
                          [--requests N] [--seed S]
-    quick-infer simulate [fig3|fig7|fig8|table1|prefix|all]
+    quick-infer simulate [fig3|fig7|fig8|table1|prefix|continuous|all]
     quick-infer profile  [--gpu 4090|a6000|l40|a100] [--m M] [--n N] [--k K]
     quick-infer loadtest [--rates 1,2,4,8] [--requests N]
     quick-infer generate --prompt TEXT [--max-new N] [--kernel K] [--temperature T]
@@ -167,14 +168,20 @@ fn simulate(which: &str) -> Result<()> {
         "prefix" => {
             figures::prefix_cache(out)?;
         }
+        "continuous" => {
+            figures::continuous_batching(out)?;
+        }
         "all" => {
             figures::fig3(out)?;
             figures::fig7(out)?;
             figures::fig8(out)?;
             figures::table1(out)?;
             figures::prefix_cache(out)?;
+            figures::continuous_batching(out)?;
         }
-        other => bail!("unknown experiment '{other}' (fig3|fig7|fig8|table1|prefix|all)"),
+        other => {
+            bail!("unknown experiment '{other}' (fig3|fig7|fig8|table1|prefix|continuous|all)")
+        }
     }
     Ok(())
 }

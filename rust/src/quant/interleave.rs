@@ -13,15 +13,16 @@ pub const MMA_K: usize = 16;
 /// Threads per warp.
 pub const WARP_LANES: usize = 32;
 
-/// Build the fragment interleave permutation for a `(rows, n_words)` word
-/// grid. `perm[i]` = flat source index of the i-th word in the interleaved
-/// DRAM stream. Panics unless `rows % MMA_K == 0`.
-///
-/// Per (k_tile, n_word) tile of 16 rows x 1 word-column, `ldmatrix.m8n8.x2`
-/// semantics assign lane `l` row `l % 8` of sub-matrix `l / 8`; sub-matrices
-/// stack along K (rows 0–7, then 8–15 of the tile).
-pub fn ldmatrix_fragment_perm(rows: usize, n_words: usize) -> Vec<i64> {
-    assert!(rows % MMA_K == 0, "rows={rows} not a multiple of {MMA_K}");
+/// Fallible variant of [`ldmatrix_fragment_perm`]: validates the word-grid
+/// shape and returns a descriptive error instead of panicking. Use this on
+/// untrusted shapes (checkpoint loaders, CLI paths); the panicking wrapper
+/// is for shapes the caller already established.
+pub fn try_ldmatrix_fragment_perm(rows: usize, n_words: usize) -> anyhow::Result<Vec<i64>> {
+    anyhow::ensure!(
+        rows > 0 && rows % MMA_K == 0,
+        "rows={rows} must be a positive multiple of {MMA_K} (mma.m16n8k16 K-tile)"
+    );
+    anyhow::ensure!(n_words > 0, "n_words must be > 0 (got {n_words})");
     let mut perm = Vec::with_capacity(rows * n_words);
     for kt in 0..rows / MMA_K {
         for nt in 0..n_words {
@@ -32,7 +33,25 @@ pub fn ldmatrix_fragment_perm(rows: usize, n_words: usize) -> Vec<i64> {
             }
         }
     }
-    perm
+    Ok(perm)
+}
+
+/// Build the fragment interleave permutation for a `(rows, n_words)` word
+/// grid. `perm[i]` = flat source index of the i-th word in the interleaved
+/// DRAM stream.
+///
+/// # Panics
+///
+/// Panics unless `rows` is a positive multiple of [`MMA_K`] and
+/// `n_words > 0` — the panic contract shared by every `quant::pack` entry
+/// point; use [`try_ldmatrix_fragment_perm`] for a `Result` instead.
+///
+/// Per (k_tile, n_word) tile of 16 rows x 1 word-column, `ldmatrix.m8n8.x2`
+/// semantics assign lane `l` row `l % 8` of sub-matrix `l / 8`; sub-matrices
+/// stack along K (rows 0–7, then 8–15 of the tile).
+pub fn ldmatrix_fragment_perm(rows: usize, n_words: usize) -> Vec<i64> {
+    try_ldmatrix_fragment_perm(rows, n_words)
+        .unwrap_or_else(|e| panic!("ldmatrix_fragment_perm: {e}"))
 }
 
 /// `out[i] = input[perm[i]]`.
@@ -109,8 +128,27 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "not a multiple")]
+    #[should_panic(expected = "multiple of 16")]
     fn rejects_unaligned_rows() {
         ldmatrix_fragment_perm(17, 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "n_words must be > 0")]
+    fn rejects_zero_words() {
+        ldmatrix_fragment_perm(16, 0);
+    }
+
+    #[test]
+    fn try_variant_reports_shape_errors() {
+        assert!(try_ldmatrix_fragment_perm(16, 2).is_ok());
+        let e = try_ldmatrix_fragment_perm(0, 2).unwrap_err();
+        assert!(e.to_string().contains("positive multiple"), "{e}");
+        let e = try_ldmatrix_fragment_perm(24, 2).unwrap_err();
+        assert!(e.to_string().contains("multiple of 16"), "{e}");
+        let e = try_ldmatrix_fragment_perm(16, 0).unwrap_err();
+        assert!(e.to_string().contains("n_words"), "{e}");
+        // Ok path agrees with the panicking wrapper.
+        assert_eq!(try_ldmatrix_fragment_perm(32, 3).unwrap(), ldmatrix_fragment_perm(32, 3));
     }
 }

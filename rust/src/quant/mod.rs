@@ -22,11 +22,12 @@ mod search;
 
 pub use awq::{dequantize, quantize_groupwise, QuantizedTensor, QBITS, QMAX};
 pub use interleave::{
-    apply_word_perm, invert_perm, ldmatrix_fragment_perm, unapply_word_perm,
-    MMA_K, MMA_M, MMA_N, WARP_LANES,
+    apply_word_perm, invert_perm, ldmatrix_fragment_perm, try_ldmatrix_fragment_perm,
+    unapply_word_perm, MMA_K, MMA_M, MMA_N, WARP_LANES,
 };
 pub use search::{reconstruction_error, search_awq_scales};
 pub use pack::{
-    pack_awq, pack_linear, pack_qzeros, pack_quick, pack_quick_dequant_order,
-    pack_words, unpack_awq, unpack_quick, unpack_words, FT_ORDER, PACK_FACTOR,
+    pack_awq, pack_linear, pack_qzeros, pack_quick, pack_quick_dequant_order, pack_words,
+    try_pack_quick, try_pack_words, unpack_awq, unpack_quick, unpack_words, FT_ORDER,
+    PACK_FACTOR,
 };

@@ -1,5 +1,17 @@
 //! int4 → u32 word packing in the three layouts of `pack.py` (see the
 //! module docs in [`crate::quant`]). Byte-compatible with the Python side.
+//!
+//! # Shape / panic contract
+//!
+//! Every packing entry point requires `k > 0`, `n` a positive multiple of
+//! [`PACK_FACTOR`], and a `k * n` code buffer; [`pack_quick`] additionally
+//! requires `k` to be a multiple of 16 (the `mma.m16n8k16` K-tile — see
+//! [`super::interleave`]). The plain functions **panic** on violations
+//! (shapes are normally established once at model load); the `try_*`
+//! variants return a descriptive error instead and should be used on
+//! untrusted input.
+
+use anyhow::Result;
 
 use super::awq::QMAX;
 
@@ -10,13 +22,28 @@ pub const PACK_FACTOR: usize = 8;
 /// slot `p` of each word holds logical column `8j + FT_ORDER[p]`.
 pub const FT_ORDER: [usize; PACK_FACTOR] = [0, 2, 4, 6, 1, 3, 5, 7];
 
-fn check(codes: &[i32], k: usize, n: usize) {
-    assert_eq!(codes.len(), k * n, "code buffer size mismatch");
-    assert!(n % PACK_FACTOR == 0, "N={n} not a multiple of {PACK_FACTOR}");
+/// Shared shape validation for every pack entry point.
+fn try_check(codes: &[i32], k: usize, n: usize) -> Result<()> {
+    anyhow::ensure!(k > 0, "K must be > 0 (got {k})");
+    anyhow::ensure!(
+        n > 0 && n % PACK_FACTOR == 0,
+        "N={n} must be a positive multiple of {PACK_FACTOR} (nibbles per u32 word)"
+    );
+    anyhow::ensure!(
+        codes.len() == k * n,
+        "code buffer holds {} values, shape ({k}, {n}) needs {}",
+        codes.len(),
+        k * n
+    );
     debug_assert!(
         codes.iter().all(|&c| c >= 0 && c <= QMAX),
         "codes out of [0, 15]"
     );
+    Ok(())
+}
+
+fn check(codes: &[i32], k: usize, n: usize) {
+    try_check(codes, k, n).unwrap_or_else(|e| panic!("quant::pack: {e}"));
 }
 
 /// Pack `(k, n)` codes into `(k, n/8)` u32 words; `order[p]` = logical
@@ -76,19 +103,15 @@ pub fn pack_quick_dequant_order(codes: &[i32], k: usize, n: usize) -> Vec<u32> {
     pack_words(codes, k, n, &LINEAR_ORDER)
 }
 
-/// Full QUICK layout (Fig. 6): dequant-aware nibble order + ldmatrix-aware
-/// fragment interleave. Returns the 1-D DRAM-order word stream.
-///
-/// Perf pass §Perf iteration 2: the interleave is fused into the packing
-/// loop (the fragment permutation has the closed form
-/// `stream[(kt*W + wj)*16 + row%16] = words[row*W + wj]` — a (K/16, 16, W)
-/// → (K/16, W, 16) tile transpose at word granularity), avoiding the
-/// intermediate word buffer, the permutation vector, and the gather that
-/// the compositional path (`ldmatrix_fragment_perm` + `apply_word_perm`,
-/// still exported for tests/ablation) pays.
-pub fn pack_quick(codes: &[i32], k: usize, n: usize) -> Vec<u32> {
-    check(codes, k, n);
-    assert!(k % super::interleave::MMA_K == 0, "K must be a multiple of 16");
+/// Fallible [`pack_quick`]: validates both the word-grid shape and the
+/// 16-row K-tile requirement, returning a descriptive error.
+pub fn try_pack_quick(codes: &[i32], k: usize, n: usize) -> Result<Vec<u32>> {
+    try_check(codes, k, n)?;
+    anyhow::ensure!(
+        k % super::interleave::MMA_K == 0,
+        "K={k} must be a multiple of {} (mma.m16n8k16 K-tile)",
+        super::interleave::MMA_K
+    );
     let w = n / PACK_FACTOR;
     let mut stream = vec![0u32; k * w];
     for row in 0..k {
@@ -102,7 +125,32 @@ pub fn pack_quick(codes: &[i32], k: usize, n: usize) -> Vec<u32> {
             stream[(kt * w + wj) * 16 + rr] = word;
         }
     }
-    stream
+    Ok(stream)
+}
+
+/// Fallible [`pack_words`] (any nibble order).
+pub fn try_pack_words(
+    codes: &[i32],
+    k: usize,
+    n: usize,
+    order: &[usize; PACK_FACTOR],
+) -> Result<Vec<u32>> {
+    try_check(codes, k, n)?;
+    Ok(pack_words(codes, k, n, order))
+}
+
+/// Full QUICK layout (Fig. 6): dequant-aware nibble order + ldmatrix-aware
+/// fragment interleave. Returns the 1-D DRAM-order word stream.
+///
+/// Perf pass §Perf iteration 2: the interleave is fused into the packing
+/// loop (the fragment permutation has the closed form
+/// `stream[(kt*W + wj)*16 + row%16] = words[row*W + wj]` — a (K/16, 16, W)
+/// → (K/16, W, 16) tile transpose at word granularity), avoiding the
+/// intermediate word buffer, the permutation vector, and the gather that
+/// the compositional path (`ldmatrix_fragment_perm` + `apply_word_perm`,
+/// still exported for tests/ablation) pays.
+pub fn pack_quick(codes: &[i32], k: usize, n: usize) -> Vec<u32> {
+    try_pack_quick(codes, k, n).unwrap_or_else(|e| panic!("quant::pack_quick: {e}"))
 }
 
 /// Inverse of [`pack_quick`].
@@ -170,6 +218,33 @@ mod tests {
     fn ft_order_even_odd_split() {
         assert_eq!(&FT_ORDER[..4], &[0, 2, 4, 6]);
         assert_eq!(&FT_ORDER[4..], &[1, 3, 5, 7]);
+    }
+
+    #[test]
+    fn error_paths_are_descriptive() {
+        // Satellite: shape violations report what went wrong instead of a
+        // bare assert, consistently across pack entry points.
+        let e = try_pack_words(&[0; 8], 1, 12, &LINEAR_ORDER).unwrap_err();
+        assert!(e.to_string().contains("multiple of 8"), "{e}");
+        let e = try_pack_words(&[0; 8], 0, 8, &LINEAR_ORDER).unwrap_err();
+        assert!(e.to_string().contains("K must be > 0"), "{e}");
+        let e = try_pack_words(&[0; 7], 1, 8, &LINEAR_ORDER).unwrap_err();
+        assert!(e.to_string().contains("needs 8"), "{e}");
+        let e = try_pack_quick(&[0; 8 * 8], 8, 8).unwrap_err();
+        assert!(e.to_string().contains("multiple of 16"), "{e}");
+        // Ok paths agree with the panicking wrappers.
+        let codes = rand_codes(16, 16, 9);
+        assert_eq!(try_pack_quick(&codes, 16, 16).unwrap(), pack_quick(&codes, 16, 16));
+        assert_eq!(
+            try_pack_words(&codes, 16, 16, &FT_ORDER).unwrap(),
+            pack_awq(&codes, 16, 16)
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "multiple of 8")]
+    fn pack_panics_on_bad_n() {
+        pack_linear(&[0; 12], 1, 12);
     }
 
     #[test]

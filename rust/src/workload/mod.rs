@@ -264,6 +264,125 @@ impl SharedPrefixWorkload {
     }
 }
 
+/// Bursty saturation workload for the continuous-batching evaluation:
+/// requests arrive in Poisson bursts (a Poisson process of burst *events*,
+/// each dropping a clump of near-simultaneous requests), with a bimodal
+/// prompt mix — long prompts (retrieval/few-shot contexts) with short
+/// generations, and short prompts with longer, heavy-tailed generations.
+///
+/// This is the traffic shape that separates schedulers: bursts pile up
+/// admission work, long prompts stall unchunked prefill, and the
+/// heavy-tailed generations force a wave (run-to-completion) scheduler to
+/// drain each wave at ever-smaller decode batches while a continuous
+/// scheduler backfills the freed slots. It also pushes sustained decode
+/// batches into the region where the QUICK-vs-AWQ kernel gap is widest
+/// (paper Figs. 7–8).
+#[derive(Debug, Clone)]
+pub struct BurstyWorkload {
+    /// Requests per burst (inclusive range).
+    pub burst_size: (u64, u64),
+    /// Fraction of long-prompt requests.
+    pub long_frac: f64,
+    /// Fraction of short-prompt requests with heavy-tail generations.
+    pub tail_frac: f64,
+    /// Short-prompt length range (inclusive).
+    pub short_prompt: (u64, u64),
+    /// Short-prompt generation range (inclusive, body of the mix).
+    pub short_gen: (u64, u64),
+    /// Heavy-tail generation range (inclusive).
+    pub tail_gen: (u64, u64),
+    /// Long-prompt length range (inclusive).
+    pub long_prompt: (u64, u64),
+    /// Long-prompt generation range (inclusive).
+    pub long_gen: (u64, u64),
+}
+
+impl Default for BurstyWorkload {
+    fn default() -> Self {
+        BurstyWorkload {
+            burst_size: (4, 12),
+            long_frac: 0.3,
+            tail_frac: 0.2,
+            short_prompt: (32, 128),
+            short_gen: (64, 320),
+            tail_gen: (512, 1024),
+            long_prompt: (1024, 2048),
+            long_gen: (16, 64),
+        }
+    }
+}
+
+impl BurstyWorkload {
+    /// Draw `n` offline requests (all queued at t=0; burst structure only
+    /// affects the length mix).
+    pub fn offline(&self, n: usize, seed: u64) -> Vec<Request> {
+        let mut reqs = self.generate(n, 1.0, seed);
+        for r in reqs.iter_mut() {
+            r.arrival_s_micros = 0;
+        }
+        reqs
+    }
+
+    /// Draw `n` online requests: bursts arrive as a Poisson process at
+    /// `bursts_per_s`; requests within a burst land within 2 ms.
+    pub fn online(&self, n: usize, bursts_per_s: f64, seed: u64) -> Vec<Request> {
+        self.generate(n, bursts_per_s, seed)
+    }
+
+    fn generate(&self, n: usize, bursts_per_s: f64, seed: u64) -> Vec<Request> {
+        assert!(bursts_per_s > 0.0);
+        assert!((0.0..=1.0).contains(&self.long_frac));
+        assert!((0.0..=1.0).contains(&self.tail_frac));
+        let mut rng = Rng::seed_from_u64(seed);
+        let mean_gap_us = 1e6 / bursts_per_s;
+        let mut t = 0u64;
+        let mut out = Vec::with_capacity(n);
+        while out.len() < n {
+            // Exponential inter-burst gaps = Poisson burst events.
+            let gap = -mean_gap_us * (1.0 - rng.f64()).ln();
+            t += gap as u64;
+            let size = rng.range_u64(self.burst_size.0, self.burst_size.1.max(self.burst_size.0));
+            for _ in 0..size {
+                if out.len() >= n {
+                    break;
+                }
+                let jitter = rng.range_u64(0, 2000);
+                let (p, g) = if rng.f64() < self.long_frac {
+                    let hi = self.long_prompt.1.max(self.long_prompt.0);
+                    (
+                        rng.range_u64(self.long_prompt.0, hi),
+                        rng.range_u64(self.long_gen.0, self.long_gen.1.max(self.long_gen.0)),
+                    )
+                } else {
+                    let hi = self.short_prompt.1.max(self.short_prompt.0);
+                    let p = rng.range_u64(self.short_prompt.0, hi);
+                    let g = if rng.f64() < self.tail_frac {
+                        rng.range_u64(self.tail_gen.0, self.tail_gen.1.max(self.tail_gen.0))
+                    } else {
+                        rng.range_u64(self.short_gen.0, self.short_gen.1.max(self.short_gen.0))
+                    };
+                    (p, g)
+                };
+                out.push((t + jitter, p, g));
+            }
+        }
+        // Bursts can overlap at high rates; present arrivals in time order.
+        out.sort_by_key(|&(at, _, _)| at);
+        out.iter()
+            .enumerate()
+            .map(|(i, &(at, p, g))| Request {
+                id: i as u64,
+                prompt_tokens: p,
+                gen_tokens: g,
+                arrival_s_micros: at,
+                sys_id: 0,
+                sys_tokens: 0,
+                stream_id: stream_mix(seed ^ 0xB52_57EE, i as u64),
+            })
+            .collect()
+    }
+}
+
 /// Uniform tiny workload for the real (PJRT-served) tiny model, whose
 /// context window is `max_seq`.
 pub fn tiny_workload(n: usize, max_prompt: u64, max_gen: u64, seed: u64) -> Vec<Request> {
@@ -398,6 +517,69 @@ mod tests {
             (0..4).any(|d| a.token_at(p + d) != b.token_at(p + d)),
             "private regions identical"
         );
+    }
+
+    #[test]
+    fn bursty_deterministic_and_sized() {
+        let w = BurstyWorkload::default();
+        let a = w.online(200, 1.0, 42);
+        assert_eq!(a, w.online(200, 1.0, 42));
+        assert_eq!(a.len(), 200);
+        assert_ne!(a, w.online(200, 1.0, 43));
+        for r in w.offline(100, 5) {
+            assert_eq!(r.arrival_s_micros, 0);
+        }
+    }
+
+    #[test]
+    fn bursty_lengths_bimodal_and_in_range() {
+        let w = BurstyWorkload::default();
+        let reqs = w.online(2000, 1.0, 9);
+        let mut long = 0usize;
+        let mut tail = 0usize;
+        for r in &reqs {
+            let is_long = r.prompt_tokens >= w.long_prompt.0;
+            let is_short = r.prompt_tokens <= w.short_prompt.1;
+            assert!(is_long || is_short, "prompt {} in neither mode", r.prompt_tokens);
+            if is_long {
+                long += 1;
+                assert!(r.gen_tokens <= w.long_gen.1);
+            } else if r.gen_tokens >= w.tail_gen.0 {
+                tail += 1;
+            }
+            // Fits the Table-1 models' context.
+            assert!(r.prompt_tokens + r.gen_tokens <= 4096);
+        }
+        let long_frac = long as f64 / reqs.len() as f64;
+        assert!((0.2..0.4).contains(&long_frac), "long fraction {long_frac}");
+        assert!(tail > 50, "heavy tail missing ({tail} tail requests)");
+    }
+
+    #[test]
+    fn bursty_arrivals_sorted_and_clumped() {
+        let reqs = BurstyWorkload::default().online(400, 0.5, 11);
+        for w2 in reqs.windows(2) {
+            assert!(w2[1].arrival_s_micros >= w2[0].arrival_s_micros);
+        }
+        // Burst structure: most consecutive gaps are the ~2ms intra-burst
+        // jitter, a minority are the long inter-burst exponentials.
+        let gaps: Vec<u64> = reqs
+            .windows(2)
+            .map(|w2| w2[1].arrival_s_micros - w2[0].arrival_s_micros)
+            .collect();
+        let clumped = gaps.iter().filter(|&&g| g <= 2000).count();
+        let spread = gaps.iter().filter(|&&g| g > 100_000).count();
+        assert!(clumped > gaps.len() / 2, "only {clumped}/{} clumped gaps", gaps.len());
+        assert!(spread > 10, "no inter-burst gaps ({spread})");
+    }
+
+    #[test]
+    fn bursty_streams_disjoint() {
+        let reqs = BurstyWorkload::default().offline(100, 3);
+        let mut firsts: Vec<i32> = reqs.iter().map(|r| r.token_at(0)).collect();
+        firsts.sort_unstable();
+        firsts.dedup();
+        assert!(firsts.len() >= 95, "only {} distinct first tokens", firsts.len());
     }
 
     #[test]

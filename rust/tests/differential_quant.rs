@@ -1,0 +1,154 @@
+//! Differential tests: the Rust quant pipeline vs golden vectors generated
+//! from the Python reference (`python/compile/kernels/pack.py` via
+//! `python/tests/gen_golden_fixtures.py`).
+//!
+//! The fixtures carry the *inputs* (codes, zeros) alongside every packed
+//! layout and the fragment permutation, so the comparison is bit-exact with
+//! no RNG coupling between the two languages. Any drift in either
+//! implementation fails here.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use quick_infer::quant::{
+    apply_word_perm, ldmatrix_fragment_perm, pack_awq, pack_linear, pack_quick,
+    pack_quick_dequant_order, pack_qzeros, unpack_awq, unpack_quick, PACK_FACTOR,
+};
+
+struct Fixture {
+    k: usize,
+    n: usize,
+    group_size: usize,
+    codes: Vec<i32>,
+    zeros: Vec<i32>,
+    linear: Vec<u32>,
+    awq: Vec<u32>,
+    quick: Vec<u32>,
+    qzeros: Vec<u32>,
+    perm: Vec<i64>,
+}
+
+fn fixtures_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests").join("fixtures")
+}
+
+fn parse_nibbles(s: &str) -> Vec<i32> {
+    s.chars()
+        .map(|c| c.to_digit(16).expect("nibble hex digit") as i32)
+        .collect()
+}
+
+fn parse_words(s: &str) -> Vec<u32> {
+    s.split_whitespace()
+        .map(|w| u32::from_str_radix(w, 16).expect("8-hex-digit word"))
+        .collect()
+}
+
+fn load_fixture(name: &str) -> Fixture {
+    let path = fixtures_dir().join(name);
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("fixture {} unreadable: {e}", path.display()));
+    let mut fields: HashMap<&str, &str> = HashMap::new();
+    for line in text.lines() {
+        if line.starts_with('#') || line.trim().is_empty() {
+            continue;
+        }
+        let (key, value) = line.split_once(' ').expect("`key value` line");
+        fields.insert(key, value);
+    }
+    let get = |key: &str| *fields.get(key).unwrap_or_else(|| panic!("missing field {key}"));
+    Fixture {
+        k: get("k").parse().unwrap(),
+        n: get("n").parse().unwrap(),
+        group_size: get("group_size").parse().unwrap(),
+        codes: parse_nibbles(get("codes")),
+        zeros: parse_nibbles(get("zeros")),
+        linear: parse_words(get("linear")),
+        awq: parse_words(get("awq")),
+        quick: parse_words(get("quick")),
+        qzeros: parse_words(get("qzeros")),
+        perm: get("perm").split_whitespace().map(|p| p.parse().unwrap()).collect(),
+    }
+}
+
+const FIXTURES: [&str; 4] = [
+    "pack_k16_n64.txt",
+    "pack_k48_n32.txt",
+    "pack_k64_n128.txt",
+    "pack_k128_n64.txt",
+];
+
+#[test]
+fn fixtures_are_well_formed() {
+    for name in FIXTURES {
+        let f = load_fixture(name);
+        assert_eq!(f.codes.len(), f.k * f.n, "{name}: codes size");
+        assert_eq!(f.zeros.len(), (f.k / f.group_size) * f.n, "{name}: zeros size");
+        let words = f.k * f.n / PACK_FACTOR;
+        assert_eq!(f.linear.len(), words, "{name}: linear size");
+        assert_eq!(f.awq.len(), words, "{name}: awq size");
+        assert_eq!(f.quick.len(), words, "{name}: quick size");
+        assert_eq!(f.perm.len(), words, "{name}: perm size");
+        assert!(f.codes.iter().all(|&c| (0..=15).contains(&c)), "{name}: code range");
+    }
+}
+
+#[test]
+fn pack_linear_matches_python() {
+    for name in FIXTURES {
+        let f = load_fixture(name);
+        assert_eq!(pack_linear(&f.codes, f.k, f.n), f.linear, "{name}");
+    }
+}
+
+#[test]
+fn pack_awq_matches_python() {
+    for name in FIXTURES {
+        let f = load_fixture(name);
+        assert_eq!(pack_awq(&f.codes, f.k, f.n), f.awq, "{name}");
+        assert_eq!(unpack_awq(&f.awq, f.k, f.n), f.codes, "{name}: unpack");
+    }
+}
+
+#[test]
+fn pack_quick_matches_python() {
+    for name in FIXTURES {
+        let f = load_fixture(name);
+        assert_eq!(pack_quick(&f.codes, f.k, f.n), f.quick, "{name}");
+        assert_eq!(unpack_quick(&f.quick, f.k, f.n), f.codes, "{name}: unpack");
+    }
+}
+
+#[test]
+fn ldmatrix_fragment_perm_matches_python() {
+    for name in FIXTURES {
+        let f = load_fixture(name);
+        assert_eq!(ldmatrix_fragment_perm(f.k, f.n / PACK_FACTOR), f.perm, "{name}");
+    }
+}
+
+#[test]
+fn compositional_quick_path_matches_python() {
+    // The compositional path (dequant-order pack + gather through the
+    // fragment perm) must agree with both the fused Rust fast path and the
+    // Python-generated stream.
+    for name in FIXTURES {
+        let f = load_fixture(name);
+        let words = pack_quick_dequant_order(&f.codes, f.k, f.n);
+        let stream = apply_word_perm(&words, &f.perm);
+        assert_eq!(stream, f.quick, "{name}");
+    }
+}
+
+#[test]
+fn pack_qzeros_matches_python() {
+    for name in FIXTURES {
+        let f = load_fixture(name);
+        let zeros_f32: Vec<f32> = f.zeros.iter().map(|&z| z as f32).collect();
+        assert_eq!(
+            pack_qzeros(&zeros_f32, f.k / f.group_size, f.n),
+            f.qzeros,
+            "{name}"
+        );
+    }
+}

@@ -223,6 +223,7 @@ fn prop_batcher_lane_exclusivity_and_progress() {
             match b.plan() {
                 StepPlan::Prefill { seq_index, lane } => {
                     b.start_prefill(seq_index, lane);
+                    b.seqs[seq_index].prefilled = b.seqs[seq_index].req.prompt.len();
                     b.seqs[seq_index].push_generated(7);
                 }
                 StepPlan::Decode { lanes } => {
@@ -245,6 +246,7 @@ fn prop_batcher_lane_exclusivity_and_progress() {
             match b.plan() {
                 StepPlan::Prefill { seq_index, lane } => {
                     b.start_prefill(seq_index, lane);
+                    b.seqs[seq_index].prefilled = b.seqs[seq_index].req.prompt.len();
                     b.seqs[seq_index].push_generated(7);
                 }
                 StepPlan::Decode { lanes } => {
@@ -296,5 +298,104 @@ fn prop_interleave_commutes_with_nibble_reorder() {
         let a = quant::apply_word_perm(&words, &perm);
         let b = quant::pack_quick(&codes, k, n);
         assert_eq!(a, b);
+    });
+}
+
+#[test]
+fn prop_perm_inverse_restores_input() {
+    // Satellite: applying a permutation and then its inverse (or the
+    // inverse scatter) is the identity for any fragment-perm shape.
+    check("perm-inverse-identity", 0x1F4A7, default_cases(), |rng| {
+        let rows = rng.range_usize(1, 12) * 16;
+        let words = rng.range_usize(1, 24);
+        let perm = quant::ldmatrix_fragment_perm(rows, words);
+        let inv = quant::invert_perm(&perm);
+        let data: Vec<u32> = (0..rows * words).map(|_| rng.next_u64() as u32).collect();
+        let stream = quant::apply_word_perm(&data, &perm);
+        assert_eq!(quant::apply_word_perm(&stream, &inv), data);
+        assert_eq!(quant::unapply_word_perm(&stream, &perm), data);
+        // invert is an involution.
+        assert_eq!(quant::invert_perm(&inv), perm);
+    });
+}
+
+#[test]
+fn prop_full_quant_pipeline_roundtrip_random_groups() {
+    // Satellite: quantize -> pack (all layouts) -> interleave -> unpack is
+    // the identity on the codes for randomized shapes (rows a multiple of
+    // 16) and random group sizes, and the packed qzeros round-trip too.
+    check("quant-pipeline-roundtrip", 0x9A5C4DE, default_cases(), |rng| {
+        let gs = [8usize, 16, 32, 64, 128][rng.range_usize(0, 4)];
+        let k = gs.max(16) * rng.range_usize(1, 3);
+        let n = rng.range_usize(1, 12) * 8;
+        let w: Vec<f32> = (0..k * n).map(|_| (rng.f64() * 2.0 - 1.0) as f32).collect();
+        let t = quant::quantize_groupwise(&w, k, n, gs);
+        // Pipeline identity at the bit level, every layout.
+        assert_eq!(
+            quant::unpack_awq(&quant::pack_awq(&t.codes, k, n), k, n),
+            t.codes
+        );
+        assert_eq!(
+            quant::unpack_quick(&quant::pack_quick(&t.codes, k, n), k, n),
+            t.codes
+        );
+        // qzeros: pack in FT order and unpack back to the integral zeros.
+        let packed = quant::pack_qzeros(&t.zeros, t.groups(), n);
+        let unpacked = quant::unpack_words(&packed, t.groups(), n, &quant::FT_ORDER);
+        let want: Vec<i32> = t.zeros.iter().map(|&z| z as i32).collect();
+        assert_eq!(unpacked, want);
+    });
+}
+
+#[test]
+fn prop_continuous_scheduler_invariants_and_progress() {
+    use quick_infer::coordinator::{ChunkPolicy, ContinuousScheduler};
+    // Random submit/admit/step/preempt traffic: the token budget is never
+    // exceeded, invariants hold after every op, and all work drains.
+    check("continuous-scheduler", 0x5CED01, default_cases(), |rng| {
+        let policy = ChunkPolicy {
+            token_budget: rng.range_u64(4, 64),
+            max_num_seqs: rng.range_usize(1, 16),
+        };
+        let mut s = ContinuousScheduler::new(policy);
+        let mut submitted = 0u64;
+        let mut finished = 0usize;
+        let mut guard = 0;
+        while submitted < 30 || s.has_work() {
+            guard += 1;
+            assert!(guard < 20_000, "no forward progress");
+            if submitted < 30 && rng.f64() < 0.4 {
+                s.submit(submitted, rng.range_u64(1, 40), rng.range_u64(1, 12));
+                submitted += 1;
+            }
+            while s.admit_next(0, |_| true).is_some() {}
+            if rng.f64() < 0.05 && s.running_len() > 0 {
+                // Preempt a random running sequence.
+                let batch = s.plan_step();
+                if let Some(&victim) = batch.decode.first() {
+                    s.preempt(victim);
+                }
+            }
+            let batch = s.plan_step();
+            assert!(batch.step_tokens() <= policy.token_budget);
+            for c in &batch.chunks {
+                if s.commit_chunk(c) {
+                    s.commit_first_token(c.seq);
+                    let seq = s.seq(c.seq);
+                    if seq.generated >= seq.gen_budget {
+                        s.finish(c.seq);
+                        finished += 1;
+                    }
+                }
+            }
+            for &id in &batch.decode {
+                if s.commit_decode(id) {
+                    s.finish(id);
+                    finished += 1;
+                }
+            }
+            s.check_invariants().expect("scheduler invariant");
+        }
+        assert_eq!(finished, 30, "every submitted sequence finishes exactly once");
     });
 }
