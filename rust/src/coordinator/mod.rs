@@ -17,13 +17,16 @@
 //! * [`engine`] — the real engine: drives the PJRT runtime over the
 //!   AOT-compiled tiny model; Python never runs here.
 //! * [`router`] — multi-replica request router (round-robin, least-loaded,
-//!   session-affinity, prefix-aware) for scale-out serving.
+//!   session-affinity, prefix-aware, tensor-parallel group placement) for
+//!   scale-out serving.
 //! * [`simserve`] — the serving policies run against the `gpusim` cost
 //!   model at paper scale: continuous batching with chunked prefill
 //!   (per-step cost from `gpusim::mixed_step_latency` at the actual mixed
-//!   batch size), the static prefill-then-decode wave baseline it
-//!   replaces, and the legacy step-admission reference behind Table 1 /
-//!   Fig. 8.
+//!   batch size), its tensor-parallel variant ([`simserve::simulate_tp`]:
+//!   per-rank GEMMs at `1/tp` weight volume + per-layer all-reduces, KV
+//!   pool grown by the weight bytes TP frees), the static
+//!   prefill-then-decode wave baseline, and the legacy step-admission
+//!   reference behind Table 1 / Fig. 8.
 //! * [`metrics`] — throughput counters and TTFT/ITL histograms.
 
 pub mod batcher;
@@ -47,6 +50,6 @@ pub use prefix::{chain_hash, BlockHash, PrefixCache, PrefixIndex, PrefixStats, R
 pub use request::{FinishReason, GenerationRequest, SeqState, Sequence};
 pub use router::{prefix_key, Policy, RouteDecision, Router};
 pub use simserve::{
-    simulate_continuous, simulate_serving, simulate_static_wave, ContinuousPolicy,
-    ContinuousResult, SimPolicy, SimResult,
+    simulate_continuous, simulate_serving, simulate_static_wave, simulate_tp,
+    ContinuousPolicy, ContinuousResult, SimPolicy, SimResult,
 };

@@ -28,6 +28,13 @@ pub enum Policy {
     /// (`coordinator::prefix`) already holds its KV blocks. Same spill
     /// behavior as [`Policy::SessionAffinity`].
     PrefixAware,
+    /// Tensor-parallel placement: replicas are the *ranks* of contiguous
+    /// TP groups of [`Router::tp_degree`] members (group `g` = replicas
+    /// `g*tp .. (g+1)*tp`). A request is routed to the least-loaded group
+    /// with room on **every** rank and occupies all of them — a TP step
+    /// runs on all ranks in lockstep, so load, capacity, and health are
+    /// tracked group-wide. Construct the router with [`Router::new_tp`].
+    TpGroup,
 }
 
 /// Routing key for [`Policy::PrefixAware`]: the content hash of the first
@@ -55,8 +62,12 @@ struct Replica {
 pub struct Router {
     policy: Policy,
     replicas: Vec<Replica>,
+    /// Ranks per TP group ([`Policy::TpGroup`] only; 1 otherwise).
+    tp_degree: usize,
     rr_next: usize,
+    /// Requests successfully placed.
     pub routed: u64,
+    /// Requests turned away (no replica/group with room).
     pub rejected: u64,
 }
 
@@ -67,9 +78,29 @@ pub struct RouteDecision {
 }
 
 impl Router {
+    /// Build a router over `replica_caps.len()` independent replicas
+    /// (`cap = 0` means unlimited in-flight requests).
     pub fn new(policy: Policy, replica_caps: &[u64]) -> Result<Self> {
+        Self::new_tp(policy, replica_caps, 1)
+    }
+
+    /// Build a router whose replicas are the ranks of `tp_degree`-way
+    /// tensor-parallel groups (required for [`Policy::TpGroup`]; other
+    /// policies ignore the grouping). The replica count must be a
+    /// positive multiple of `tp_degree`.
+    pub fn new_tp(policy: Policy, replica_caps: &[u64], tp_degree: usize) -> Result<Self> {
         if replica_caps.is_empty() {
             bail!("router needs at least one replica");
+        }
+        if tp_degree == 0 {
+            bail!("tp_degree must be >= 1");
+        }
+        if replica_caps.len() % tp_degree != 0 {
+            bail!(
+                "{} replicas do not form whole {}-way TP groups",
+                replica_caps.len(),
+                tp_degree
+            );
         }
         Ok(Router {
             policy,
@@ -82,18 +113,33 @@ impl Router {
                     healthy: true,
                 })
                 .collect(),
+            tp_degree,
             rr_next: 0,
             routed: 0,
             rejected: 0,
         })
     }
 
+    /// Replica (rank) count.
     pub fn n_replicas(&self) -> usize {
         self.replicas.len()
     }
 
+    /// Ranks per TP group (1 unless built with [`Router::new_tp`]).
+    pub fn tp_degree(&self) -> usize {
+        self.tp_degree
+    }
+
+    /// Mark a replica (and therefore its whole TP group under
+    /// [`Policy::TpGroup`]) routable or not.
     pub fn set_healthy(&mut self, replica: usize, healthy: bool) {
         self.replicas[replica].healthy = healthy;
+    }
+
+    /// The ranks of the TP group containing `replica`.
+    fn group_of(&self, replica: usize) -> std::ops::Range<usize> {
+        let g = replica / self.tp_degree;
+        g * self.tp_degree..(g + 1) * self.tp_degree
     }
 
     fn has_room(&self, i: usize) -> bool {
@@ -128,11 +174,24 @@ impl Router {
                     _ => self.least_loaded(),
                 }
             }
+            // Least-loaded over whole groups; the decision names the
+            // group's lead rank.
+            Policy::TpGroup => self.least_loaded_group(),
         };
         match pick {
             Some(i) => {
-                self.replicas[i].inflight_tokens += tokens;
-                self.replicas[i].inflight_reqs += 1;
+                // Under TpGroup the request runs on every rank of the
+                // group (activations are replicated, weights sharded), so
+                // each rank carries the full token load.
+                let targets = if self.policy == Policy::TpGroup {
+                    self.group_of(i)
+                } else {
+                    i..i + 1
+                };
+                for r in targets {
+                    self.replicas[r].inflight_tokens += tokens;
+                    self.replicas[r].inflight_reqs += 1;
+                }
                 self.routed += 1;
                 Some(RouteDecision { replica: i })
             }
@@ -143,17 +202,38 @@ impl Router {
         }
     }
 
+    /// Lead rank of the least-loaded TP group with room on every rank.
+    fn least_loaded_group(&self) -> Option<usize> {
+        let g = self.tp_degree;
+        (0..self.replicas.len() / g)
+            .filter(|&gi| (gi * g..(gi + 1) * g).all(|i| self.has_room(i)))
+            .min_by_key(|&gi| {
+                let load: u64 =
+                    (gi * g..(gi + 1) * g).map(|i| self.replicas[i].inflight_tokens).sum();
+                (load, gi)
+            })
+            .map(|gi| gi * g)
+    }
+
     fn least_loaded(&self) -> Option<usize> {
         (0..self.replicas.len())
             .filter(|&i| self.has_room(i))
             .min_by_key(|&i| (self.replicas[i].inflight_tokens, i))
     }
 
-    /// Report request completion so load tracking stays truthful.
+    /// Report request completion so load tracking stays truthful (under
+    /// [`Policy::TpGroup`] the whole group is released).
     pub fn on_finish(&mut self, d: RouteDecision, tokens: u64) {
-        let r = &mut self.replicas[d.replica];
-        r.inflight_tokens = r.inflight_tokens.saturating_sub(tokens);
-        r.inflight_reqs = r.inflight_reqs.saturating_sub(1);
+        let targets = if self.policy == Policy::TpGroup {
+            self.group_of(d.replica)
+        } else {
+            d.replica..d.replica + 1
+        };
+        for i in targets {
+            let r = &mut self.replicas[i];
+            r.inflight_tokens = r.inflight_tokens.saturating_sub(tokens);
+            r.inflight_reqs = r.inflight_reqs.saturating_sub(1);
+        }
     }
 
     pub fn inflight(&self, replica: usize) -> (u64, u64) {
@@ -257,6 +337,62 @@ mod tests {
             other_want
         );
         assert_ne!(prefix_key(&other, bs), key);
+    }
+
+    #[test]
+    fn tp_group_occupies_every_rank() {
+        // 4 ranks = two 2-way TP groups; a request lands on a whole group.
+        let mut r = Router::new_tp(Policy::TpGroup, &[0, 0, 0, 0], 2).unwrap();
+        let d0 = r.route(100, None).unwrap();
+        assert_eq!(d0.replica, 0, "empty router picks group 0's lead rank");
+        assert_eq!(r.inflight(0), (1, 100));
+        assert_eq!(r.inflight(1), (1, 100), "both ranks of the group are loaded");
+        assert_eq!(r.inflight(2), (0, 0));
+        // Next request goes to the now-lighter group 1.
+        let d1 = r.route(10, None).unwrap();
+        assert_eq!(d1.replica, 2);
+        assert_eq!(r.inflight(3), (1, 10));
+        // Finish releases the whole group.
+        r.on_finish(d0, 100);
+        assert_eq!(r.inflight(0), (0, 0));
+        assert_eq!(r.inflight(1), (0, 0));
+    }
+
+    #[test]
+    fn tp_group_balances_by_group_load() {
+        let mut r = Router::new_tp(Policy::TpGroup, &[0; 8], 4).unwrap();
+        let heavy = r.route(1000, None).unwrap();
+        assert_eq!(heavy.replica, 0);
+        for _ in 0..3 {
+            assert_eq!(r.route(10, None).unwrap().replica, 4, "light work avoids group 0");
+        }
+        r.on_finish(heavy, 1000);
+        assert_eq!(r.route(10, None).unwrap().replica, 0);
+    }
+
+    #[test]
+    fn tp_group_skips_groups_with_a_sick_rank() {
+        let mut r = Router::new_tp(Policy::TpGroup, &[0, 0, 0, 0], 2).unwrap();
+        r.set_healthy(1, false); // one rank down takes the whole group out
+        for _ in 0..3 {
+            assert_eq!(r.route(1, None).unwrap().replica, 2);
+        }
+        r.set_healthy(1, true);
+        assert_eq!(r.route(1, None).unwrap().replica, 0);
+    }
+
+    #[test]
+    fn tp_group_capacity_is_per_rank() {
+        let mut r = Router::new_tp(Policy::TpGroup, &[1, 1], 2).unwrap();
+        assert!(r.route(5, None).is_some());
+        assert!(r.route(5, None).is_none(), "every rank at cap: group full");
+        assert_eq!(r.rejected, 1);
+    }
+
+    #[test]
+    fn ragged_tp_grouping_rejected() {
+        assert!(Router::new_tp(Policy::TpGroup, &[0, 0, 0], 2).is_err());
+        assert!(Router::new_tp(Policy::TpGroup, &[0, 0], 0).is_err());
     }
 
     #[test]

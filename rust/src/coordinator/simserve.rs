@@ -31,8 +31,11 @@ use super::prefix::PrefixCache;
 /// Simulation policy knobs (vLLM defaults where applicable).
 #[derive(Debug, Clone, Copy)]
 pub struct SimPolicy {
+    /// Max concurrently running sequences.
     pub max_num_seqs: usize,
+    /// KV block size in tokens.
     pub block_size: u64,
+    /// Fraction of the pool kept free as an admission watermark.
     pub watermark_frac: f64,
     /// Memory fraction reserved for activations/runtime.
     pub headroom_frac: f64,
@@ -58,23 +61,33 @@ impl Default for SimPolicy {
 /// Outcome of one simulated serving run.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct SimResult {
+    /// Requests completed.
     pub finished: usize,
+    /// Simulated wall-clock time.
     pub wall_s: f64,
+    /// Prompt tokens admitted.
     pub prompt_tokens: u64,
+    /// Tokens generated.
     pub gen_tokens: u64,
     /// Generated tokens per second — Table 1's metric.
     pub gen_tok_per_s: f64,
     /// Prompt+generated per second (vLLM's "total token throughput").
     pub total_tok_per_s: f64,
+    /// Mean decode batch over decode steps.
     pub mean_batch: f64,
+    /// True when weights + minimal KV do not fit the device.
     pub oom: bool,
+    /// Sequences preempted (vLLM recompute policy).
     pub preemptions: u64,
     /// Mean time-to-first-token across (re)admissions.
     pub mean_ttft_s: f64,
     /// Prefix-cache counters (zero when the cache is off or never hits).
     pub prefix_hits: u64,
+    /// Prefix-cache admission misses.
     pub prefix_misses: u64,
+    /// Prompt tokens whose prefill the cache skipped.
     pub prefix_tokens_skipped: u64,
+    /// Cached blocks evicted under pool pressure.
     pub prefix_evictions: u64,
 }
 
@@ -152,12 +165,30 @@ fn kv_pool_blocks(
     block_size: u64,
     headroom_frac: f64,
 ) -> u64 {
+    tp_kv_pool_blocks(dev, spec, kind, block_size, headroom_frac, 1)
+}
+
+/// Per-rank KV pool of a `tp`-way tensor-parallel group, in *logical*
+/// blocks: each rank stores `1/tp` of the weights (freeing memory for KV)
+/// and `1/tp` of every token's KV (its shard of the heads), so the pool a
+/// TP group offers the scheduler is the per-rank block count — every rank
+/// admits and evicts the same logical blocks in lockstep. `tp = 1`
+/// reproduces the single-GPU pool bit-exactly.
+fn tp_kv_pool_blocks(
+    dev: &DeviceSpec,
+    spec: &LlmSpec,
+    kind: KernelKind,
+    block_size: u64,
+    headroom_frac: f64,
+    tp_degree: u64,
+) -> u64 {
     let w4 = !matches!(kind, KernelKind::Fp16);
+    let tp = tp_degree as f64;
     let kv_per_token =
-        (2 * spec.n_layers * spec.kv_heads * spec.head_dim()) as f64 * 2.0;
+        (2 * spec.n_layers * spec.kv_heads * spec.head_dim()) as f64 * 2.0 / tp;
     blocks_for_device(
         dev.mem_bytes(),
-        spec.weight_bytes(w4),
+        spec.weight_bytes(w4) / tp,
         kv_per_token,
         block_size,
         headroom_frac,
@@ -457,23 +488,32 @@ mod tests {
 /// Per-request latency sample from an online simulation.
 #[derive(Debug, Clone, Copy)]
 pub struct OnlineLatency {
+    /// Workload request id.
     pub request_id: u64,
+    /// Arrival-to-completion latency, seconds.
     pub e2e_s: f64,
 }
 
 /// Result of an online (open-loop) serving simulation.
 #[derive(Debug, Clone, Default)]
 pub struct OnlineResult {
+    /// Requests completed.
     pub finished: usize,
+    /// Simulated wall-clock time.
     pub wall_s: f64,
+    /// Generated tokens per second.
     pub gen_tok_per_s: f64,
+    /// Per-request end-to-end latency samples.
     pub latencies: Vec<OnlineLatency>,
+    /// True when weights + minimal KV do not fit the device.
     pub oom: bool,
     /// Mean time-to-first-token across (re)admissions.
     pub mean_ttft_s: f64,
-    /// Prefix-cache counters (zero when the cache is off or never hits).
+    /// Prefix-cache admission hits (zero when the cache is off).
     pub prefix_hits: u64,
+    /// Prompt tokens whose prefill the cache skipped.
     pub prefix_tokens_skipped: u64,
+    /// Cached blocks evicted under pool pressure.
     pub prefix_evictions: u64,
 }
 
@@ -717,13 +757,16 @@ mod online_tests {
 // ---------------------------------------------------------------------------
 
 use super::batcher::{ChunkPolicy, ContinuousScheduler};
-use crate::gpusim::mixed_step_latency;
+use crate::gpusim::tp_step_latency;
 
 /// Policy for [`simulate_continuous`] / [`simulate_static_wave`].
 #[derive(Debug, Clone, Copy)]
 pub struct ContinuousPolicy {
+    /// Max concurrently resident sequences.
     pub max_num_seqs: usize,
+    /// KV block size in tokens.
     pub block_size: u64,
+    /// Fraction of the pool kept free as an admission watermark.
     pub watermark_frac: f64,
     /// Memory fraction reserved for activations/runtime.
     pub headroom_frac: f64,
@@ -754,15 +797,20 @@ impl Default for ContinuousPolicy {
 /// Outcome of a continuous-batching (or wave-baseline) simulation.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct ContinuousResult {
+    /// Requests completed.
     pub finished: usize,
+    /// Simulated wall-clock time.
     pub wall_s: f64,
     /// Distinct prompt tokens admitted (first admissions only — preemption
     /// recomputes are scheduler overhead, not offered work).
     pub prompt_tokens: u64,
+    /// Tokens generated.
     pub gen_tokens: u64,
+    /// Generated tokens per second.
     pub gen_tok_per_s: f64,
     /// (prompt + generated) / wall — vLLM's total token throughput.
     pub total_tok_per_s: f64,
+    /// Mixed steps executed.
     pub steps: u64,
     /// Mean tokens per step (decode + chunk): the sustained GEMM M.
     pub mean_step_tokens: f64,
@@ -770,13 +818,19 @@ pub struct ContinuousResult {
     pub mean_decode_batch: f64,
     /// Prefill chunks scheduled (≥ one per admitted prompt).
     pub prefill_chunks: u64,
+    /// True when weights + minimal KV do not fit the device.
     pub oom: bool,
+    /// Sequences preempted (vLLM recompute policy).
     pub preemptions: u64,
     /// Mean time-to-first-token across (re)admissions.
     pub mean_ttft_s: f64,
+    /// Prefix-cache admission hits.
     pub prefix_hits: u64,
+    /// Prefix-cache admission misses.
     pub prefix_misses: u64,
+    /// Prompt tokens whose prefill the cache skipped.
     pub prefix_tokens_skipped: u64,
+    /// Cached blocks evicted under pool pressure.
     pub prefix_evictions: u64,
 }
 
@@ -794,9 +848,9 @@ impl ContinuousResult {
 /// matches and allocates full-prompt KV (the chunk schedule changes
 /// *compute* timing, not memory footprint); the token-budget scheduler
 /// plans one mixed step (decode first, then FCFS prefill chunks); its
-/// latency comes from one [`mixed_step_latency`] query at the actual mixed
-/// batch size. Decode appends that run out of KV blocks preempt the
-/// sequence (vLLM recompute policy) back to the queue.
+/// latency comes from one [`crate::gpusim::mixed_step_latency`]-equivalent
+/// query at the actual mixed batch size. Decode appends that run out of KV
+/// blocks preempt the sequence (vLLM recompute policy) back to the queue.
 pub fn simulate_continuous(
     dev: &DeviceSpec,
     spec: &LlmSpec,
@@ -805,7 +859,71 @@ pub fn simulate_continuous(
     policy: &ContinuousPolicy,
     calib: &Calib,
 ) -> ContinuousResult {
-    let blocks = kv_pool_blocks(dev, spec, kind, policy.block_size, policy.headroom_frac);
+    run_continuous(dev, spec, kind, requests, policy, calib, 1)
+}
+
+/// Token budget for a `tp`-way group: scale the configured per-step budget
+/// by the group's step-latency speedup at the nominal operating point, so
+/// a group that steps faster packs proportionally more tokens per step and
+/// keeps the same wall-clock step-time target (vLLM deployments tune
+/// `max_num_batched_tokens` per hardware config the same way). Never
+/// scales below the configured budget.
+fn tp_scaled_token_budget(
+    dev: &DeviceSpec,
+    spec: &LlmSpec,
+    kind: KernelKind,
+    policy: &ContinuousPolicy,
+    tp_degree: u64,
+    calib: &Calib,
+) -> u64 {
+    if tp_degree <= 1 {
+        return policy.token_budget;
+    }
+    let probe = |tp: u64| {
+        let decode = (policy.token_budget / 2).max(1);
+        let chunk = policy.token_budget.saturating_sub(decode);
+        tp_step_latency(dev, spec, kind, tp, decode, 512, chunk, chunk * 2, calib).total_s()
+    };
+    let speedup = (probe(1) / probe(tp_degree).max(1e-12)).max(1.0);
+    ((policy.token_budget as f64 * speedup).round() as u64).max(policy.token_budget)
+}
+
+/// [`simulate_continuous`] on a `tp_degree`-way tensor-parallel group:
+/// per-step cost from [`tp_step_latency`] (per-rank GEMMs at `1/tp`
+/// weight volume + two ring all-reduces per layer), the per-rank KV pool
+/// from the weight bytes TP frees on each rank, and the scheduler's token
+/// budget scaled to the group's effective step latency
+/// (`tp_scaled_token_budget`). `tp_degree = 1` is bit-identical to
+/// [`simulate_continuous`] — the controlled baseline of the scaling sweep
+/// (`figures::tensor_parallel`, `quick-infer simulate tp`).
+pub fn simulate_tp(
+    dev: &DeviceSpec,
+    spec: &LlmSpec,
+    kind: KernelKind,
+    requests: &[Request],
+    policy: &ContinuousPolicy,
+    tp_degree: u64,
+    calib: &Calib,
+) -> ContinuousResult {
+    let tp = tp_degree.max(1);
+    let scaled = ContinuousPolicy {
+        token_budget: tp_scaled_token_budget(dev, spec, kind, policy, tp, calib),
+        ..*policy
+    };
+    run_continuous(dev, spec, kind, requests, &scaled, calib, tp)
+}
+
+fn run_continuous(
+    dev: &DeviceSpec,
+    spec: &LlmSpec,
+    kind: KernelKind,
+    requests: &[Request],
+    policy: &ContinuousPolicy,
+    calib: &Calib,
+    tp_degree: u64,
+) -> ContinuousResult {
+    let blocks =
+        tp_kv_pool_blocks(dev, spec, kind, policy.block_size, policy.headroom_frac, tp_degree);
     if blocks == 0 {
         return ContinuousResult { oom: true, ..Default::default() };
     }
@@ -926,10 +1044,13 @@ pub fn simulate_continuous(
         } else {
             0
         };
-        let perf = mixed_step_latency(
+        // At tp_degree = 1 this is bit-identical to `mixed_step_latency`
+        // (collective::tp1_reduces_exactly_to_mixed_step).
+        let perf = tp_step_latency(
             dev,
             spec,
             kind,
+            tp_degree,
             decode_batch,
             mean_ctx,
             batch.prefill_tokens(),
@@ -1334,6 +1455,44 @@ mod continuous_tests {
         assert!(!r.oom);
         assert_eq!(r.finished, 80);
         assert!(r.preemptions > 0, "pressure run should preempt");
+    }
+
+    #[test]
+    fn tp_degree_one_is_bit_identical_to_continuous() {
+        // simulate_tp at tp=1 must be a controlled baseline: same budget,
+        // same pool, bit-identical step latencies -> identical result.
+        let (dev, spec) = a6000_vicuna();
+        let reqs = BurstyWorkload::default().offline(80, 17);
+        let policy = ContinuousPolicy::default();
+        let calib = Calib::default();
+        let base = simulate_continuous(&dev, &spec, KernelKind::Quick, &reqs, &policy, &calib);
+        let tp1 = simulate_tp(&dev, &spec, KernelKind::Quick, &reqs, &policy, 1, &calib);
+        assert_eq!(base.wall_s, tp1.wall_s);
+        assert_eq!(base.gen_tokens, tp1.gen_tokens);
+        assert_eq!(base.steps, tp1.steps);
+        assert_eq!(base.finished, tp1.finished);
+    }
+
+    #[test]
+    fn tp_group_completes_and_speeds_up_the_large_model() {
+        // 4-way TP on A100/70B: all requests finish and the group clearly
+        // outruns the single GPU on the same workload.
+        let dev = Gpu::A100.spec();
+        let spec = Model::Llama2_70B.spec();
+        let reqs = BurstyWorkload::default().offline(40, 23);
+        let policy = ContinuousPolicy::default();
+        let calib = Calib::default();
+        let tp1 = simulate_tp(&dev, &spec, KernelKind::Quick, &reqs, &policy, 1, &calib);
+        let tp4 = simulate_tp(&dev, &spec, KernelKind::Quick, &reqs, &policy, 4, &calib);
+        assert!(!tp1.oom && !tp4.oom);
+        assert_eq!(tp1.finished, 40);
+        assert_eq!(tp4.finished, 40);
+        assert!(
+            tp4.total_tok_per_s > tp1.total_tok_per_s * 1.5,
+            "tp4 {:.1} tok/s not well above tp1 {:.1}",
+            tp4.total_tok_per_s,
+            tp1.total_tok_per_s
+        );
     }
 
     #[test]

@@ -8,11 +8,11 @@ use std::io::Write;
 use anyhow::Result;
 
 use crate::coordinator::simserve::{
-    simulate_continuous, simulate_serving, simulate_static_wave, ContinuousPolicy,
-    ContinuousResult, SimPolicy, SimResult,
+    simulate_continuous, simulate_serving, simulate_static_wave, simulate_tp,
+    ContinuousPolicy, ContinuousResult, SimPolicy, SimResult,
 };
 use crate::gpusim::kernel_model::{model_gemm, Calib, KernelKind};
-use crate::gpusim::{max_batch_before_oom, tokens_per_second, Gpu};
+use crate::gpusim::{max_batch_before_oom, tokens_per_second, tp_step_latency, Gpu};
 use crate::model::Model;
 use crate::workload::{BurstyWorkload, ShareGptLike, SharedPrefixWorkload};
 
@@ -48,11 +48,15 @@ pub fn fig3(out: &mut impl Write) -> Result<Fig3Data> {
 
 #[derive(Debug, Default, Clone, Copy)]
 pub struct Fig3Data {
+    /// Write-back conflicts, fp16 kernel (none: no dequant).
     pub fp16_conflicts: u64,
+    /// Write-back conflicts, AWQ baseline (the Fig. 3 spike).
     pub awq_conflicts: u64,
+    /// Write-back conflicts, QUICK (zero by construction).
     pub quick_conflicts: u64,
 }
 
+/// Batch sizes (GEMM M) swept by Figure 7.
 pub const FIG7_BATCHES: [u64; 9] = [1, 2, 4, 8, 16, 32, 64, 128, 256];
 
 /// Figure 7 — kernel TOPS vs batch on all four devices.
@@ -93,10 +97,15 @@ pub fn fig7(out: &mut impl Write) -> Result<Vec<Fig7Row>> {
 
 #[derive(Debug, Clone, Copy)]
 pub struct Fig7Row {
+    /// Device of this row.
     pub gpu: Gpu,
+    /// GEMM M (batch size).
     pub batch: u64,
+    /// fp16 kernel TOPS.
     pub fp16: f64,
+    /// AWQ baseline TOPS.
     pub awq: f64,
+    /// QUICK kernel TOPS.
     pub quick: f64,
 }
 
@@ -112,6 +121,7 @@ pub const FIG8_PAIRS: [(Model, Gpu, u64); 4] = [
     (Model::Llama33B, Gpu::A100, 256),
 ];
 
+/// Batch sizes swept by Figure 8.
 pub const FIG8_BATCHES: [u64; 7] = [1, 8, 16, 32, 64, 128, 256];
 
 /// Figure 8 — end-to-end decode throughput vs batch, with OOM cutoffs.
@@ -147,11 +157,17 @@ pub fn fig8(out: &mut impl Write) -> Result<Vec<Fig8Row>> {
 
 #[derive(Debug, Clone, Copy)]
 pub struct Fig8Row {
+    /// Model of this row.
     pub model: Model,
+    /// Device of this row.
     pub gpu: Gpu,
+    /// Decode batch size.
     pub batch: u64,
+    /// fp16 tokens/s (0.0 = OOM).
     pub fp16: f64,
+    /// AWQ tokens/s (0.0 = OOM).
     pub awq: f64,
+    /// QUICK tokens/s (0.0 = OOM).
     pub quick: f64,
 }
 
@@ -210,9 +226,13 @@ pub fn table1(out: &mut impl Write) -> Result<Vec<Table1Row>> {
 
 #[derive(Debug, Clone, Copy)]
 pub struct Table1Row {
+    /// Model of this row.
     pub model: Model,
+    /// fp16 serving result.
     pub fp16: crate::coordinator::simserve::SimResult,
+    /// AWQ serving result.
     pub awq: crate::coordinator::simserve::SimResult,
+    /// QUICK serving result.
     pub quick: crate::coordinator::simserve::SimResult,
 }
 
@@ -365,15 +385,142 @@ pub fn continuous_batching(out: &mut impl Write) -> Result<ContinuousBatchingRep
     Ok(report)
 }
 
+/// The tp degrees swept by [`tensor_parallel`].
+pub const TP_DEGREES: [u64; 4] = [1, 2, 4, 8];
+
+/// Tensor-parallel scaling evaluation (not a paper figure — the
+/// multi-GPU extension the ROADMAP's production target requires):
+/// Llama-2-70B served by a TP group of A100s over the bursty bimodal
+/// workload, tp_degree ∈ {1, 2, 4, 8}. Each rank runs the continuous
+/// scheduler at `1/tp` weight volume (QUICK shards are packed
+/// independently per rank — `quant::shard`), pays two ring all-reduces
+/// per layer (`gpusim::collective`), and scales its token budget to the
+/// group's effective step latency. Reports per-degree throughput,
+/// scaling efficiency, the step-time breakdown (GEMM vs collective), and
+/// the QUICK-vs-AWQ gap as TP shrinks each rank's per-GPU N.
+pub fn tensor_parallel(out: &mut impl Write) -> Result<TensorParallelReport> {
+    let calib = Calib::default();
+    let dev = Gpu::A100.spec();
+    let spec = Model::Llama2_70B.spec();
+    let policy = ContinuousPolicy::default();
+    let reqs = BurstyWorkload::default().offline(160, 2027);
+
+    writeln!(
+        out,
+        "\n== Tensor parallelism: {} on {} x tp, bursty workload ({} reqs) ==",
+        spec.name,
+        dev.name,
+        reqs.len()
+    )?;
+    writeln!(
+        out,
+        "{:>4} {:>13} {:>13} {:>9} {:>11} {:>13} {:>10}",
+        "tp", "QUICK tok/s", "speedup", "scaling", "step toks", "AWQ tok/s", "QUICK/AWQ"
+    )?;
+    let mut rows = Vec::new();
+    let mut baseline = 0.0f64;
+    for tp in TP_DEGREES {
+        let quick = simulate_tp(&dev, &spec, KernelKind::Quick, &reqs, &policy, tp, &calib);
+        let awq = simulate_tp(&dev, &spec, KernelKind::Awq, &reqs, &policy, tp, &calib);
+        if tp == 1 {
+            baseline = quick.total_tok_per_s;
+        }
+        let speedup = quick.total_tok_per_s / baseline.max(1e-9);
+        writeln!(
+            out,
+            "{:>4} {:>13.1} {:>12.2}x {:>8.0}% {:>11.1} {:>13.1} {:>9.2}x",
+            tp,
+            quick.total_tok_per_s,
+            speedup,
+            speedup / tp as f64 * 100.0,
+            quick.mean_step_tokens,
+            awq.total_tok_per_s,
+            quick.total_tok_per_s / awq.total_tok_per_s.max(1e-9),
+        )?;
+        rows.push(TpRow { tp_degree: tp, awq, quick });
+    }
+    let report = TensorParallelReport { rows };
+
+    writeln!(out, "\n-- QUICK per-step breakdown at a 512-token mixed step --")?;
+    writeln!(
+        out,
+        "{:>4} {:>10} {:>10} {:>10} {:>8}",
+        "tp", "step ms", "gemm ms", "comm ms", "comm %"
+    )?;
+    for tp in TP_DEGREES {
+        let b = tp_step_latency(&dev, &spec, KernelKind::Quick, tp, 128, 1024, 384, 768, &calib);
+        writeln!(
+            out,
+            "{:>4} {:>10.2} {:>10.2} {:>10.2} {:>7.1}%",
+            tp,
+            b.total_s() * 1e3,
+            b.gemm_s * 1e3,
+            b.comm_s * 1e3,
+            b.comm_s / b.total_s() * 100.0
+        )?;
+    }
+    writeln!(
+        out,
+        "sharding is drawn in logical (k, n) space before the QUICK interleave \
+         (quant::shard); per-rank N shrinks 1/tp, so the kernel-level QUICK/AWQ \
+         gap narrows with degree while the all-reduce cost grows"
+    )?;
+    Ok(report)
+}
+
+/// One tp-degree point of the [`tensor_parallel`] sweep.
+#[derive(Debug, Clone, Copy)]
+pub struct TpRow {
+    /// TP group size of this point.
+    pub tp_degree: u64,
+    /// AWQ-kernel serving result at this degree.
+    pub awq: ContinuousResult,
+    /// QUICK-kernel serving result at this degree.
+    pub quick: ContinuousResult,
+}
+
+/// Result set of the [`tensor_parallel`] sweep.
+#[derive(Debug, Clone)]
+pub struct TensorParallelReport {
+    /// One row per swept tp degree, ascending.
+    pub rows: Vec<TpRow>,
+}
+
+impl TensorParallelReport {
+    /// The row for `tp_degree` (panics if the degree was not swept).
+    pub fn row(&self, tp_degree: u64) -> &TpRow {
+        self.rows
+            .iter()
+            .find(|r| r.tp_degree == tp_degree)
+            .unwrap_or_else(|| panic!("tp_degree {tp_degree} not swept"))
+    }
+
+    /// QUICK total-token throughput at `tp_degree` over the tp=1 baseline.
+    pub fn quick_speedup(&self, tp_degree: u64) -> f64 {
+        self.row(tp_degree).quick.total_tok_per_s
+            / self.row(1).quick.total_tok_per_s.max(1e-9)
+    }
+
+    /// Fraction of ideal linear scaling realized at `tp_degree`
+    /// (`speedup / tp` — the per-degree efficiency the sweep prints).
+    pub fn scaling_efficiency(&self, tp_degree: u64) -> f64 {
+        self.quick_speedup(tp_degree) / tp_degree as f64
+    }
+}
+
 /// One offered-load point of the QUICK-vs-AWQ gap sweep.
 #[derive(Debug, Clone, Copy)]
 pub struct GapRow {
+    /// Offered load, bursts per second.
     pub rate: f64,
+    /// AWQ continuous-batching result.
     pub awq: ContinuousResult,
+    /// QUICK continuous-batching result.
     pub quick: ContinuousResult,
 }
 
 impl GapRow {
+    /// QUICK over AWQ generated-token throughput at this load.
     pub fn gap(&self) -> f64 {
         self.quick.gen_tok_per_s / self.awq.gen_tok_per_s.max(1e-9)
     }
@@ -381,10 +528,15 @@ impl GapRow {
 
 #[derive(Debug, Clone)]
 pub struct ContinuousBatchingReport {
+    /// AWQ under the static-wave baseline.
     pub wave_awq: ContinuousResult,
+    /// AWQ under continuous batching.
     pub cont_awq: ContinuousResult,
+    /// QUICK under the static-wave baseline.
     pub wave_quick: ContinuousResult,
+    /// QUICK under continuous batching.
     pub cont_quick: ContinuousResult,
+    /// QUICK-vs-AWQ gap sweep over offered load.
     pub gap_rows: Vec<GapRow>,
 }
 
@@ -397,9 +549,13 @@ impl ContinuousBatchingReport {
 
 #[derive(Debug, Clone, Copy)]
 pub struct PrefixCacheReport {
+    /// Shared-prefix workload, cache on.
     pub shared_on: SimResult,
+    /// Shared-prefix workload, cache off.
     pub shared_off: SimResult,
+    /// Disjoint control workload, cache on.
     pub disjoint_on: SimResult,
+    /// Disjoint control workload, cache off.
     pub disjoint_off: SimResult,
 }
 
@@ -489,6 +645,46 @@ mod tests {
         let first = r.gap_rows.first().unwrap().gap();
         let last = r.gap_rows.last().unwrap().gap();
         assert!(last > first, "gap did not widen: {first:.3} -> {last:.3}");
+    }
+
+    #[test]
+    fn tensor_parallel_scales_monotonically() {
+        // Acceptance: monotone throughput gain from tp 1 -> 4 for QUICK
+        // under BurstyWorkload, with per-degree scaling efficiency
+        // printed (sanity-checked here as < 100% of linear).
+        let r = tensor_parallel(&mut std::io::sink()).unwrap();
+        assert_eq!(r.rows.len(), TP_DEGREES.len());
+        for row in &r.rows {
+            assert!(!row.quick.oom && !row.awq.oom, "tp={}", row.tp_degree);
+            assert_eq!(row.quick.finished, 160, "tp={}", row.tp_degree);
+            assert_eq!(row.awq.finished, 160, "tp={}", row.tp_degree);
+        }
+        let q = |tp: u64| r.row(tp).quick.total_tok_per_s;
+        assert!(q(2) > q(1), "tp2 {:.1} !> tp1 {:.1}", q(2), q(1));
+        assert!(q(4) > q(2), "tp4 {:.1} !> tp2 {:.1}", q(4), q(2));
+        assert!(q(8) > q(4), "tp8 {:.1} !> tp4 {:.1}", q(8), q(4));
+        // Collectives + unsharded overheads keep scaling sublinear…
+        assert!(
+            r.scaling_efficiency(8) < 1.0,
+            "tp8 efficiency {:.2} >= linear",
+            r.scaling_efficiency(8)
+        );
+        // …but TP must remain worthwhile, not pathological.
+        assert!(
+            r.scaling_efficiency(4) > 0.5,
+            "tp4 efficiency {:.2} below 50%",
+            r.scaling_efficiency(4)
+        );
+        // QUICK keeps beating AWQ at every degree.
+        for row in &r.rows {
+            assert!(
+                row.quick.total_tok_per_s > row.awq.total_tok_per_s,
+                "tp={}: QUICK {:.1} !> AWQ {:.1}",
+                row.tp_degree,
+                row.quick.total_tok_per_s,
+                row.awq.total_tok_per_s
+            );
+        }
     }
 
     #[test]

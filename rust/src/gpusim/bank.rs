@@ -29,6 +29,7 @@ pub struct BankCounter {
 }
 
 impl BankCounter {
+    /// Fresh counter (no transactions recorded).
     pub fn new() -> Self {
         Self::default()
     }
@@ -73,6 +74,7 @@ impl BankCounter {
         }
     }
 
+    /// Accumulate another counter's totals into this one.
     pub fn merge(&mut self, other: &BankCounter) {
         self.phases += other.phases;
         self.conflicts += other.conflicts;

@@ -1,0 +1,255 @@
+//! Collective-communication cost model for tensor-parallel serving.
+//!
+//! Megatron-style TP runs every weight GEMM at `1/tp` volume per rank
+//! (see [`crate::model::LlmSpec::tp_gemms`]) and stitches the layer back
+//! together with **two all-reduces per transformer layer** — one after
+//! the attention-output projection, one after the MLP-down projection,
+//! each over the fp16 activations `(M, d_model)` of the step — plus one
+//! **logits all-gather** per step for the column-sharded lm_head (each
+//! rank holds `vocab / tp` of every sampled position's logits). This
+//! module prices those collectives from the per-GPU link numbers in the
+//! [`super::gpu`] table (NVLink3 for A100, PCIe 4.0 x16 for the Ada/
+//! Ampere cards) using the standard ring-algorithm cost:
+//!
+//! * ring all-reduce of `B` bytes over `p` ranks: `2(p-1)` hops moving
+//!   `B/p` each → `2 B (p-1)/p / link_bw + 2 (p-1) · link_latency`;
+//! * ring all-gather (each rank contributes `B/p`, ends with `B`):
+//!   `(p-1)` hops → `B (p-1)/p / link_bw + (p-1) · link_latency`.
+//!
+//! [`tp_step_latency`] composes the sharded GEMMs, head-sharded
+//! attention, and the per-layer all-reduces into the TP image of
+//! [`super::e2e::mixed_step_latency`]; at `tp = 1` it reduces to the
+//! single-GPU query **exactly** (bit-identical float math — the
+//! continuous-batching simulator relies on this to make `tp_degree = 1`
+//! a controlled baseline).
+
+use super::gpu::DeviceSpec;
+use super::kernel_model::{model_gemm, Calib, KernelKind};
+use crate::model::LlmSpec;
+
+/// Latency of a ring all-reduce of `bytes` across `tp` ranks over `dev`'s
+/// TP links. Zero at `tp <= 1` or `bytes <= 0` (no communication).
+pub fn ring_all_reduce_s(dev: &DeviceSpec, bytes: f64, tp: u64) -> f64 {
+    if tp <= 1 || bytes <= 0.0 {
+        return 0.0;
+    }
+    let hops = 2.0 * (tp as f64 - 1.0);
+    let volume = 2.0 * bytes * (tp as f64 - 1.0) / tp as f64;
+    volume / dev.link_bw() + hops * dev.link_latency_s
+}
+
+/// Latency of a ring all-gather producing `bytes` total on every rank
+/// (each rank contributes `bytes / tp`). Zero at `tp <= 1`.
+pub fn ring_all_gather_s(dev: &DeviceSpec, bytes: f64, tp: u64) -> f64 {
+    if tp <= 1 || bytes <= 0.0 {
+        return 0.0;
+    }
+    let hops = (tp - 1) as f64;
+    let volume = bytes * (tp as f64 - 1.0) / tp as f64;
+    volume / dev.link_bw() + hops * dev.link_latency_s
+}
+
+/// Breakdown of one tensor-parallel mixed step (the TP image of
+/// [`super::e2e::MixedStepBreakdown`]): per-rank compute terms plus the collective
+/// time the group spends synchronizing.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TpStepBreakdown {
+    /// TP group size the step was evaluated at.
+    pub tp_degree: u64,
+    /// Decode lanes in the step.
+    pub decode_batch: u64,
+    /// Chunked-prefill prompt tokens riding the step.
+    pub prefill_tokens: u64,
+    /// Weight-GEMM time at `1/tp` volume per rank.
+    pub gemm_s: f64,
+    /// Decode attention over this rank's `kv_heads / tp` head shard.
+    pub decode_attn_s: f64,
+    /// Chunked-prefill attention over this rank's head shard.
+    pub prefill_attn_s: f64,
+    /// Two ring all-reduces per layer over the step's `(M, d_model)`
+    /// fp16 activations, plus the `(M, vocab)` logits all-gather for the
+    /// column-sharded lm_head (upper bound: real engines gather only the
+    /// sampled positions, which is at most the step's M tokens).
+    pub comm_s: f64,
+    /// Non-GEMM glue (norms, rope, sampling, kernel launches).
+    pub other_s: f64,
+}
+
+impl TpStepBreakdown {
+    /// Total step latency (the TP group steps in lockstep, so this is the
+    /// group-wide wall time, not a per-rank average).
+    pub fn total_s(&self) -> f64 {
+        self.gemm_s + self.decode_attn_s + self.prefill_attn_s + self.comm_s + self.other_s
+    }
+
+    /// Tokens processed by the step (decode + chunked prefill).
+    pub fn step_tokens(&self) -> u64 {
+        self.decode_batch + self.prefill_tokens
+    }
+}
+
+/// Latency of one mixed decode + chunked-prefill step on a `tp`-way
+/// tensor-parallel group of `dev` GPUs.
+///
+/// Identical contract to [`super::e2e::mixed_step_latency`] (same
+/// `decode_*` / `prefill_*` arguments), evaluated at:
+///
+/// * weight GEMMs from [`LlmSpec::tp_gemms`] — `1/tp` volume per rank,
+///   run at the full mixed batch `M` (activations are replicated);
+/// * attention terms divided by `tp` (KV heads are sharded with the QKV
+///   columns, so each rank reads/computes only its heads' KV);
+/// * plus `2 · n_layers` ring all-reduces of the `(M, d_model)` fp16
+///   activations ([`ring_all_reduce_s`]) and one `(M, vocab)` logits
+///   all-gather for the column-sharded lm_head ([`ring_all_gather_s`]);
+/// * per-kernel launch overheads unchanged (each rank launches the same
+///   kernel sequence concurrently).
+///
+/// At `tp = 1` every term equals the single-GPU query bit-exactly and
+/// `comm_s == 0`.
+// One scalar per physical term, mirroring mixed_step_latency's signature.
+#[allow(clippy::too_many_arguments)]
+pub fn tp_step_latency(
+    dev: &DeviceSpec,
+    spec: &LlmSpec,
+    kind: KernelKind,
+    tp_degree: u64,
+    decode_batch: u64,
+    decode_mean_ctx: u64,
+    prefill_tokens: u64,
+    prefill_attn_ctx_tokens: u64,
+    calib: &Calib,
+) -> TpStepBreakdown {
+    assert!(tp_degree >= 1, "tp_degree must be >= 1");
+    let m = decode_batch + prefill_tokens;
+    assert!(m > 0, "tp step with no tokens");
+    let tp = tp_degree as f64;
+    let mut gemm_s = 0.0;
+    for g in spec.tp_gemms(tp_degree) {
+        gemm_s += model_gemm(dev, kind, m, g.n, g.k, calib).latency_s * g.count as f64;
+    }
+    let decode_attn_s = if decode_batch > 0 {
+        spec.kv_bytes(decode_batch, decode_mean_ctx.max(1)) / tp
+            / (dev.dram_bw() * calib.dram_eff)
+            + spec.n_layers as f64 * 2.0 * calib.overhead_s
+    } else {
+        0.0
+    };
+    let prefill_attn_s = if prefill_tokens > 0 {
+        let attn_flops = 2.0 * 2.0 * prefill_attn_ctx_tokens as f64
+            * spec.d_model as f64
+            * spec.n_layers as f64
+            / tp;
+        attn_flops / (dev.tc_tflops * 1e12 * calib.mma_eff)
+    } else {
+        0.0
+    };
+    let activation_bytes = (m * spec.d_model) as f64 * 2.0;
+    let logits_bytes = (m * spec.vocab) as f64 * 2.0;
+    let comm_s = spec.n_layers as f64 * 2.0 * ring_all_reduce_s(dev, activation_bytes, tp_degree)
+        + ring_all_gather_s(dev, logits_bytes, tp_degree);
+    let other_s = spec.n_layers as f64 * 4.0 * calib.overhead_s;
+    TpStepBreakdown {
+        tp_degree,
+        decode_batch,
+        prefill_tokens,
+        gemm_s,
+        decode_attn_s,
+        prefill_attn_s,
+        comm_s,
+        other_s,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::e2e::mixed_step_latency;
+    use crate::gpusim::gpu::Gpu;
+    use crate::model::Model;
+
+    #[test]
+    fn ring_costs_zero_without_peers() {
+        let dev = Gpu::A100.spec();
+        assert_eq!(ring_all_reduce_s(&dev, 1e6, 1), 0.0);
+        assert_eq!(ring_all_gather_s(&dev, 1e6, 1), 0.0);
+        assert_eq!(ring_all_reduce_s(&dev, 0.0, 8), 0.0);
+    }
+
+    #[test]
+    fn ring_all_reduce_monotone_in_bytes_and_degree() {
+        let dev = Gpu::A100.spec();
+        assert!(ring_all_reduce_s(&dev, 2e6, 4) > ring_all_reduce_s(&dev, 1e6, 4));
+        // More ranks move a larger fraction of the buffer and pay more hops.
+        assert!(ring_all_reduce_s(&dev, 1e6, 8) > ring_all_reduce_s(&dev, 1e6, 2));
+        // All-gather moves half the all-reduce volume in half the hops.
+        assert!(ring_all_gather_s(&dev, 1e6, 4) < ring_all_reduce_s(&dev, 1e6, 4));
+    }
+
+    #[test]
+    fn nvlink_beats_pcie_on_the_same_collective() {
+        let bytes = 8.0 * 1024.0 * 1024.0;
+        let a100 = ring_all_reduce_s(&Gpu::A100.spec(), bytes, 4);
+        let a6000 = ring_all_reduce_s(&Gpu::RtxA6000.spec(), bytes, 4);
+        assert!(a100 < a6000 / 4.0, "NVLink {a100} not well under PCIe {a6000}");
+    }
+
+    #[test]
+    fn tp1_reduces_exactly_to_mixed_step() {
+        // The simulator treats tp_degree = 1 as a controlled baseline:
+        // every term must be bit-identical to the non-TP query.
+        let dev = Gpu::RtxA6000.spec();
+        let spec = Model::Vicuna13B.spec();
+        let calib = Calib::default();
+        for (b, ctx, chunk) in [(1u64, 128u64, 0u64), (32, 512, 64), (0, 0, 256)] {
+            let m =
+                mixed_step_latency(&dev, &spec, KernelKind::Quick, b, ctx, chunk, chunk * 2, &calib);
+            let t = tp_step_latency(
+                &dev,
+                &spec,
+                KernelKind::Quick,
+                1,
+                b,
+                ctx,
+                chunk,
+                chunk * 2,
+                &calib,
+            );
+            assert_eq!(t.comm_s, 0.0);
+            assert_eq!(t.gemm_s, m.gemm_s, "b={b} chunk={chunk}");
+            assert_eq!(t.decode_attn_s, m.decode_attn_s);
+            assert_eq!(t.prefill_attn_s, m.prefill_attn_s);
+            assert_eq!(t.total_s(), m.total_s());
+        }
+    }
+
+    #[test]
+    fn tp_shrinks_steps_at_scale_despite_comm() {
+        // 70B on NVLink A100s at a big mixed batch: the per-rank GEMM
+        // saving dwarfs the two all-reduces per layer.
+        let dev = Gpu::A100.spec();
+        let spec = Model::Llama2_70B.spec();
+        let calib = Calib::default();
+        let step = |tp| {
+            tp_step_latency(&dev, &spec, KernelKind::Quick, tp, 128, 1024, 384, 768, &calib)
+        };
+        let (t1, t2, t4, t8) = (step(1), step(2), step(4), step(8));
+        assert!(t2.comm_s > 0.0);
+        assert!(t2.total_s() < t1.total_s());
+        assert!(t4.total_s() < t2.total_s());
+        assert!(t8.total_s() < t4.total_s());
+        // Scaling is sublinear: comm + per-kernel overheads don't shard.
+        assert!(t4.total_s() > t1.total_s() / 4.0);
+    }
+
+    #[test]
+    fn comm_grows_with_degree_and_tokens() {
+        let dev = Gpu::A100.spec();
+        let spec = Model::Llama2_70B.spec();
+        let calib = Calib::default();
+        let step = |tp, chunk| {
+            tp_step_latency(&dev, &spec, KernelKind::Quick, tp, 64, 512, chunk, chunk, &calib)
+        };
+        assert!(step(8, 256).comm_s > step(2, 256).comm_s);
+        assert!(step(4, 512).comm_s > step(4, 64).comm_s);
+    }
+}

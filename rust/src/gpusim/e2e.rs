@@ -8,6 +8,7 @@ use crate::model::LlmSpec;
 /// Breakdown of one decode step at a given batch size.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct DecodeBreakdown {
+    /// Decode batch size the step was evaluated at.
     pub batch: u64,
     /// Time in the weight GEMMs (what the kernel choice changes).
     pub gemm_s: f64,
@@ -19,6 +20,7 @@ pub struct DecodeBreakdown {
 }
 
 impl DecodeBreakdown {
+    /// Total decode-step latency.
     pub fn total_s(&self) -> f64 {
         self.gemm_s + self.attn_s + self.other_s
     }
@@ -61,7 +63,9 @@ pub fn decode_step_latency(
 /// write-back wins the most.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct MixedStepBreakdown {
+    /// Decode lanes in the step.
     pub decode_batch: u64,
+    /// Chunked-prefill prompt tokens riding the step.
     pub prefill_tokens: u64,
     /// Time in the weight GEMMs at the mixed batch size.
     pub gemm_s: f64,
@@ -75,6 +79,7 @@ pub struct MixedStepBreakdown {
 }
 
 impl MixedStepBreakdown {
+    /// Total mixed-step latency.
     pub fn total_s(&self) -> f64 {
         self.gemm_s + self.decode_attn_s + self.prefill_attn_s + self.other_s
     }

@@ -4,6 +4,7 @@
 /// One GPU model.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct DeviceSpec {
+    /// Marketing name, as the paper's figures label it.
     pub name: &'static str,
     /// Streaming multiprocessors.
     pub sms: u32,
@@ -32,6 +33,12 @@ pub struct DeviceSpec {
     /// Shared-memory bandwidth per SM, bytes/cycle (128 B/clk on all of
     /// Ampere/Ada: 32 banks x 4 B).
     pub smem_bytes_per_clk: u32,
+    /// Per-GPU interconnect bandwidth to tensor-parallel peers, GB/s per
+    /// direction (NVLink3 for A100-SXM; PCIe 4.0 x16 for the Ada/Ampere
+    /// cards, which have no inter-GPU NVLink fabric at rack scale).
+    pub link_gbps: f64,
+    /// Per-hop link latency, seconds (send/recv launch + wire + switch).
+    pub link_latency_s: f64,
 }
 
 impl DeviceSpec {
@@ -49,20 +56,31 @@ impl DeviceSpec {
     pub fn mem_bytes(&self) -> f64 {
         self.mem_gib * (1u64 << 30) as f64
     }
+
+    /// Tensor-parallel link bandwidth in bytes/s per direction.
+    pub fn link_bw(&self) -> f64 {
+        self.link_gbps * 1e9
+    }
 }
 
 /// The paper's four evaluation devices.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Gpu {
+    /// Ada AD102 consumer flagship (paper Figs. 3, 7, 8).
     Rtx4090,
+    /// Ampere GA102 workstation card (paper Table 1).
     RtxA6000,
+    /// Ada AD102 datacenter card.
     L40,
+    /// A100-SXM4-80GB (GA100), the NVLink-connected datacenter part.
     A100,
 }
 
 impl Gpu {
+    /// Every evaluated device, in the paper's order.
     pub const ALL: [Gpu; 4] = [Gpu::Rtx4090, Gpu::RtxA6000, Gpu::L40, Gpu::A100];
 
+    /// Datasheet numbers for this device.
     pub fn spec(self) -> DeviceSpec {
         match self {
             // Ada AD102. 128 SM, 330 fp16 TC TFLOPs (165 with fp32 acc is
@@ -81,6 +99,8 @@ impl Gpu {
                 regs_per_sm: 65536,
                 max_warps_per_sm: 48,
                 smem_bytes_per_clk: 128,
+                link_gbps: 32.0,
+                link_latency_s: 5e-6,
             },
             // Ampere GA102, workstation.
             Gpu::RtxA6000 => DeviceSpec {
@@ -97,6 +117,8 @@ impl Gpu {
                 regs_per_sm: 65536,
                 max_warps_per_sm: 48,
                 smem_bytes_per_clk: 128,
+                link_gbps: 32.0,
+                link_latency_s: 5e-6,
             },
             // Ada AD102, datacenter.
             Gpu::L40 => DeviceSpec {
@@ -113,6 +135,8 @@ impl Gpu {
                 regs_per_sm: 65536,
                 max_warps_per_sm: 48,
                 smem_bytes_per_clk: 128,
+                link_gbps: 32.0,
+                link_latency_s: 5e-6,
             },
             // A100-SXM4-80GB (GA100).
             Gpu::A100 => DeviceSpec {
@@ -129,6 +153,8 @@ impl Gpu {
                 regs_per_sm: 65536,
                 max_warps_per_sm: 64,
                 smem_bytes_per_clk: 128,
+                link_gbps: 300.0,
+                link_latency_s: 3e-6,
             },
         }
     }
@@ -145,6 +171,18 @@ mod tests {
             assert!(s.sms > 0 && s.tc_tflops > 10.0 && s.dram_gbps > 500.0);
             assert!(s.smem_bw() > 1e12, "{}: smem bw too low", s.name);
         }
+    }
+
+    #[test]
+    fn link_specs_sane() {
+        for g in Gpu::ALL {
+            let s = g.spec();
+            assert!(s.link_gbps > 0.0 && s.link_latency_s > 0.0, "{}", s.name);
+            // Inter-GPU links are always slower than local DRAM.
+            assert!(s.link_bw() < s.dram_bw(), "{}: link faster than DRAM", s.name);
+        }
+        // NVLink A100 vs the PCIe cards.
+        assert!(Gpu::A100.spec().link_gbps > 4.0 * Gpu::L40.spec().link_gbps);
     }
 
     #[test]

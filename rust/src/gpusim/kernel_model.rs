@@ -42,8 +42,10 @@ pub enum KernelKind {
 }
 
 impl KernelKind {
+    /// All modeled kernels, baseline first.
     pub const ALL: [KernelKind; 3] = [KernelKind::Fp16, KernelKind::Awq, KernelKind::Quick];
 
+    /// Short display label (figure/CLI rows).
     pub fn label(self) -> &'static str {
         match self {
             KernelKind::Fp16 => "fp16",
@@ -56,10 +58,15 @@ impl KernelKind {
 /// One thread-block tile shape.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct TileConfig {
+    /// Tile rows (M per thread block).
     pub bm: u64,
+    /// Tile columns (N per thread block).
     pub bn: u64,
+    /// Reduction depth per main-loop iteration.
     pub bk: u64,
+    /// Warps per thread block.
     pub warps: u32,
+    /// Registers per thread the tile needs resident.
     pub regs_per_thread: u32,
 }
 

@@ -25,6 +25,10 @@
 //!   conflict-serialized shared-memory phases into TOPS.
 //! * [`e2e`] — per-decode-step latency and tokens/s for a full LLM
 //!   (Fig. 8), including the KV-cache/weights OOM predictor.
+//! * [`collective`] — ring all-reduce / all-gather cost model over the
+//!   per-GPU link table, and [`collective::tp_step_latency`]: the
+//!   tensor-parallel image of the mixed batched step (per-rank GEMMs at
+//!   `1/tp` volume + two all-reduces per layer).
 //!
 //! Calibration constants (pipeline efficiencies) are centralized in
 //! [`kernel_model::Calib`] and documented in DESIGN.md §Perf — everything
@@ -32,6 +36,7 @@
 
 pub mod ablation;
 pub mod bank;
+pub mod collective;
 pub mod e2e;
 pub mod gpu;
 pub mod kernel_model;
@@ -40,6 +45,7 @@ pub mod report;
 pub mod trace;
 
 pub use bank::BankCounter;
+pub use collective::{ring_all_gather_s, ring_all_reduce_s, tp_step_latency, TpStepBreakdown};
 pub use e2e::{
     decode_step_latency, max_batch_before_oom, mixed_step_latency, tokens_per_second,
     DecodeBreakdown, MixedStepBreakdown,

@@ -8,11 +8,14 @@
 //!
 //! * [`quant`] — offline 4-bit packing and the QUICK interleaving
 //!   permutations (paper §3.2, Figs. 4–6); byte-compatible with
-//!   `python/compile/kernels/pack.py`.
+//!   `python/compile/kernels/pack.py`. [`quant::shard`] draws
+//!   tensor-parallel shard boundaries in logical `(k, n)` space and packs
+//!   each shard independently (the interleaved stream cannot be sliced).
 //! * [`gpusim`] — cycle-approximate GPU kernel execution model: shared-memory
 //!   bank-conflict counting, occupancy, DRAM traffic, and tile schedules for
-//!   the fp16 / AWQ / QUICK kernels. Regenerates the paper's Figures 3, 7, 8
-//!   and Table 1 on a machine with no NVIDIA GPU.
+//!   the fp16 / AWQ / QUICK kernels, plus the ring-collective cost model
+//!   behind tensor-parallel steps ([`gpusim::collective`]). Regenerates the
+//!   paper's Figures 3, 7, 8 and Table 1 on a machine with no NVIDIA GPU.
 //! * [`model`] — LLM architecture tables (Mistral-7B … Llama-2-70B) and
 //!   per-layer GEMM shape/byte accounting, including the OOM predictor
 //!   behind Figure 8's missing fp16 bars.
@@ -30,6 +33,14 @@
 //!
 //! Python never runs on the request path: `make artifacts` AOT-lowers the
 //! JAX/Pallas model once, and the [`runtime`] executes the HLO from Rust.
+//!
+//! See the top-level `README.md` for the quickstart and the map from every
+//! paper figure/table to its `quick-infer simulate <which>` invocation.
+
+// Every public item carries rustdoc; new undocumented API warns (the CI
+// clippy gate allows the lint so a missed item degrades to a warning
+// rather than blocking unrelated changes).
+#![warn(missing_docs)]
 
 pub mod coordinator;
 pub mod gpusim;

@@ -3,9 +3,12 @@
 //! Subcommands:
 //! * `serve`    — run the PJRT-backed engine over a synthetic workload on
 //!   the AOT-compiled tiny model and print serving metrics.
-//! * `simulate` — regenerate a paper experiment (fig3 | fig7 | fig8 |
-//!   table1 | prefix | continuous | all) from the gpusim cost model and
-//!   print paper-style rows.
+//! * `simulate` — regenerate a paper experiment or serving extension
+//!   (fig3 | fig7 | fig8 | table1 | prefix | continuous | tp | all) from
+//!   the gpusim cost model and print paper-style rows.
+//! * `profile`  — one-GEMM kernel-model breakdown on a chosen device.
+//! * `loadtest` — online latency percentiles vs offered load.
+//! * `generate` — end-to-end text generation on the tiny model.
 //! * `quantize` — offline packing demo: quantize + QUICK-interleave a
 //!   random matrix and report layouts.
 //! * `info`     — list artifacts and device specs.
@@ -19,18 +22,49 @@ use quick_infer::runtime::Runtime;
 use quick_infer::util::rng::Rng;
 use quick_infer::workload;
 
+/// Valid `simulate` targets, listed by the unknown-target error (keep in
+/// sync with the USAGE block and the dispatch match below).
+const SIMULATE_TARGETS: &str = "fig3|fig7|fig8|table1|prefix|continuous|tp|all";
+
 const USAGE: &str = "\
 quick-infer — QUICK (2024) reproduction: conflict-free W4A16 inference stack
 
 USAGE:
     quick-infer serve    [--artifacts DIR] [--kernel quick|awq|fp16]
                          [--requests N] [--seed S]
-    quick-infer simulate [fig3|fig7|fig8|table1|prefix|continuous|all]
+        Serve a synthetic workload on the AOT-compiled tiny model via PJRT.
+        Defaults: --artifacts artifacts, --kernel quick, --requests 32, --seed 0.
+
+    quick-infer simulate [fig3|fig7|fig8|table1|prefix|continuous|tp|all]
+        Regenerate one experiment from the gpusim cost model (default: all).
+          fig3        smem bank conflicts per kernel
+          fig7        GEMM TOPS vs batch on all four devices
+          fig8        end-to-end decode tokens/s vs batch (with OOM cutoffs)
+          table1      vLLM-style serving throughput (A6000)
+          prefix      automatic prefix cache on/off (extension)
+          continuous  continuous batching vs static waves (extension)
+          tp          tensor-parallel scaling sweep, tp 1|2|4|8 (extension)
+
     quick-infer profile  [--gpu 4090|a6000|l40|a100] [--m M] [--n N] [--k K]
-    quick-infer loadtest [--rates 1,2,4,8] [--requests N]
+        Per-kernel latency/TOPS breakdown of one GEMM.
+        Defaults: --gpu 4090, --m 64, --n 8192, --k 8192.
+
+    quick-infer loadtest [--rates 1,2,4,8,16] [--requests N]
+        Online latency percentiles vs offered load (A6000, Vicuna-13B).
+        Defaults: --rates 1,2,4,8,16, --requests 200.
+
     quick-infer generate --prompt TEXT [--max-new N] [--kernel K] [--temperature T]
+        End-to-end generation on the tiny model.
+        Defaults: --prompt 'the quick brown fox', --max-new 16, --kernel quick,
+        greedy sampling unless --temperature is given.
+
     quick-infer quantize [--k K] [--n N] [--group-size G]
+        Offline packing demo: quantize + QUICK-interleave a random matrix.
+        Defaults: --k 256, --n 256, --group-size 128.
+
     quick-infer info     [--artifacts DIR]
+        List device specs, a kernel-model spot check, and AOT artifacts.
+        Defaults: --artifacts artifacts.
 ";
 
 /// Minimal flag parser: `--key value` pairs plus positional args.
@@ -171,6 +205,9 @@ fn simulate(which: &str) -> Result<()> {
         "continuous" => {
             figures::continuous_batching(out)?;
         }
+        "tp" => {
+            figures::tensor_parallel(out)?;
+        }
         "all" => {
             figures::fig3(out)?;
             figures::fig7(out)?;
@@ -178,9 +215,10 @@ fn simulate(which: &str) -> Result<()> {
             figures::table1(out)?;
             figures::prefix_cache(out)?;
             figures::continuous_batching(out)?;
+            figures::tensor_parallel(out)?;
         }
         other => {
-            bail!("unknown experiment '{other}' (fig3|fig7|fig8|table1|prefix|continuous|all)")
+            bail!("unknown experiment '{other}' — valid targets: {SIMULATE_TARGETS}")
         }
     }
     Ok(())

@@ -13,8 +13,11 @@ pub use specs::{LlmSpec, Model};
 /// where `M` = tokens in flight.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct GemmShape {
+    /// Projection name ("wq", "w_down", "lm_head", ...).
     pub name: &'static str,
+    /// Reduction (input-feature) dimension.
     pub k: u64,
+    /// Output-feature dimension.
     pub n: u64,
     /// How many times this GEMM runs per model forward (= n_layers for
     /// per-layer projections, 1 for the LM head).
@@ -40,6 +43,61 @@ impl LlmSpec {
         ]
     }
 
+    /// The weight GEMMs of one forward pass as **one rank of a
+    /// `tp`-way tensor-parallel group** sees them (Megatron partitioning):
+    /// QKV / gate / up / lm_head are column-parallel (each rank owns
+    /// `N / tp` output features), attention-output and MLP-down are
+    /// row-parallel (each rank owns `K / tp` of the reduction, producing a
+    /// partial sum the per-layer all-reduce combines — costed by
+    /// `gpusim::collective`). `tp = 1` returns [`LlmSpec::gemms`] exactly.
+    ///
+    /// # Panics
+    ///
+    /// Panics if `tp` does not divide every partitioned dimension —
+    /// including the query and KV head counts, since attention shards at
+    /// head granularity (a fractional head per rank is physically
+    /// meaningless even when `kv_heads * head_dim` happens to divide) —
+    /// the same alignment discipline `quant::shard::try_shard_plan`
+    /// enforces on the packed weights themselves. The Table-1/Fig-8
+    /// models divide cleanly for tp ∈ {1, 2, 4, 8} except LLaMA-33B
+    /// (52 heads), which supports tp ∈ {1, 2, 4}.
+    pub fn tp_gemms(&self, tp: u64) -> Vec<GemmShape> {
+        assert!(tp >= 1, "tp_degree must be >= 1 (got {tp})");
+        assert_eq!(
+            self.n_heads % tp,
+            0,
+            "{}: {} query heads not divisible by tp={tp}",
+            self.name,
+            self.n_heads
+        );
+        assert_eq!(
+            self.kv_heads % tp,
+            0,
+            "{}: {} KV heads not divisible by tp={tp} (attention shards whole heads)",
+            self.name,
+            self.kv_heads
+        );
+        self.gemms()
+            .into_iter()
+            .map(|mut g| {
+                match g.name {
+                    // Row-parallel: reduction dimension is sharded.
+                    "wo" | "w_down" => {
+                        assert_eq!(g.k % tp, 0, "{}: K={} not divisible by tp={tp}", g.name, g.k);
+                        g.k /= tp;
+                    }
+                    // Column-parallel: output features are sharded.
+                    _ => {
+                        assert_eq!(g.n % tp, 0, "{}: N={} not divisible by tp={tp}", g.name, g.n);
+                        g.n /= tp;
+                    }
+                }
+                g
+            })
+            .collect()
+    }
+
+    /// Attention head dimension (`d_model / n_heads`).
     pub fn head_dim(&self) -> u64 {
         self.d_model / self.n_heads
     }
@@ -116,6 +174,48 @@ mod tests {
         let m = mistral.kv_bytes(1, 4096);
         let l = llama13.kv_bytes(1, 4096);
         assert!(m < l / 2.0, "GQA cache {m} not much smaller than MHA {l}");
+    }
+
+    #[test]
+    fn tp_gemms_shard_the_full_volume() {
+        for m in [Model::Mistral7B, Model::Vicuna13B, Model::Llama2_70B] {
+            let spec = m.spec();
+            let full: u64 = spec.gemms().iter().map(|g| g.k * g.n * g.count).sum();
+            for tp in [1u64, 2, 4, 8] {
+                let sharded: u64 =
+                    spec.tp_gemms(tp).iter().map(|g| g.k * g.n * g.count).sum();
+                assert_eq!(sharded, full / tp, "{m:?} tp={tp}");
+            }
+            assert_eq!(spec.tp_gemms(1), spec.gemms(), "{m:?}: tp=1 must be identity");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "KV heads not divisible")]
+    fn tp_gemms_rejects_fractional_kv_heads() {
+        // Mistral-7B has 8 KV heads: tp=16 would shard half a head even
+        // though kv_n = 1024 divides 16 — head granularity must gate.
+        Model::Mistral7B.spec().tp_gemms(16);
+    }
+
+    #[test]
+    fn tp_gemms_split_the_declared_axes() {
+        let spec = Model::Llama2_70B.spec();
+        let by_name = |gs: &[GemmShape], name: &str| {
+            gs.iter().find(|g| g.name == name).copied().unwrap()
+        };
+        let full = spec.gemms();
+        let tp4 = spec.tp_gemms(4);
+        // Row-parallel shards K, keeps N.
+        for name in ["wo", "w_down"] {
+            assert_eq!(by_name(&tp4, name).k, by_name(&full, name).k / 4);
+            assert_eq!(by_name(&tp4, name).n, by_name(&full, name).n);
+        }
+        // Column-parallel shards N, keeps K.
+        for name in ["wq", "wk", "wv", "w_gate", "w_up", "lm_head"] {
+            assert_eq!(by_name(&tp4, name).n, by_name(&full, name).n / 4);
+            assert_eq!(by_name(&tp4, name).k, by_name(&full, name).k);
+        }
     }
 
     #[test]

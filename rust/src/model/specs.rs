@@ -3,13 +3,19 @@
 /// Architecture hyperparameters of one LLM.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct LlmSpec {
+    /// Checkpoint name as the paper prints it.
     pub name: &'static str,
+    /// Vocabulary size.
     pub vocab: u64,
+    /// Hidden width.
     pub d_model: u64,
+    /// Transformer layer count.
     pub n_layers: u64,
+    /// Attention (query) head count.
     pub n_heads: u64,
     /// KV heads (< n_heads for GQA models).
     pub kv_heads: u64,
+    /// MLP inner width (SwiGLU).
     pub d_ff: u64,
     /// Max context the checkpoint supports.
     pub max_seq: u64,
@@ -19,16 +25,22 @@ pub struct LlmSpec {
 /// by the end-to-end PJRT path (matching `python/compile/aot.py::CFG`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Model {
+    /// Mistral-7B-v0.1 (GQA).
     Mistral7B,
+    /// Vicuna-13B (LLaMA-13B fine-tune, full MHA).
     Vicuna13B,
+    /// LLaMA-2-13B (full MHA).
     Llama2_13B,
+    /// LLaMA-33B (the original LLaMA release).
     Llama33B,
+    /// LLaMA-2-70B (GQA).
     Llama2_70B,
     /// The AOT-compiled tiny Llama actually served by the Rust engine.
     Tiny,
 }
 
 impl Model {
+    /// Every tabulated model, evaluation models first.
     pub const ALL: [Model; 6] = [
         Model::Mistral7B,
         Model::Vicuna13B,
@@ -38,6 +50,7 @@ impl Model {
         Model::Tiny,
     ];
 
+    /// Published hyperparameters for this model.
     pub fn spec(self) -> LlmSpec {
         match self {
             Model::Mistral7B => LlmSpec {

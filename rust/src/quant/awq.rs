@@ -3,7 +3,9 @@
 //! Matrices are row-major `(K, N)` — `K` in-features (reduction axis, groups
 //! run along it), `N` out-features — multiplied as `y = x @ w`.
 
+/// Quantization bit width.
 pub const QBITS: u32 = 4;
+/// Largest representable code (`2^QBITS - 1`).
 pub const QMAX: i32 = (1 << QBITS) - 1; // 15
 
 /// A group-quantized weight matrix in logical (unpacked) form.
@@ -21,6 +23,7 @@ pub struct QuantizedTensor {
 }
 
 impl QuantizedTensor {
+    /// Number of quantization groups along K.
     pub fn groups(&self) -> usize {
         self.k / self.group_size
     }

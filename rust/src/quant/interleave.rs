@@ -5,10 +5,44 @@
 //! lanes of a warp consume B-operand fragments of consecutive
 //! `mma.m16n8k16` tiles, so each lane's fragment is DRAM-contiguous and the
 //! `ldmatrix` + shared-memory round-trip can be skipped.
+//!
+//! # The QUICK pack + interleave word layout
+//!
+//! Packing (`quant::pack`) first collapses 8 int4 codes into one u32 word
+//! per row, giving a `(K, W = N/8)` word grid; the interleave then
+//! transposes each 16-row K-tile so the 16 words of one word-column are
+//! stream-contiguous (the unit one lane loads straight from DRAM):
+//!
+//! ```text
+//!    logical codes (K, N)          packed words (K, W)        DRAM stream
+//!    n=0..............N-1          w=0....W-1
+//!  k=0 c c c c c c c c ...        k=0  A0 B0 ..     kt=0   [A0 A1 .. A15]  w=0, rows 0-15
+//!    1 c c c c c c c c ...          1  A1 B1 ..            [B0 B1 .. B15]  w=1, rows 0-15
+//!    .      8 codes  ────► 1 word   .  .. .. ..            [     ...    ]  ...
+//!   15 c c c c c c c c ...         15  A15 B15..     kt=1  [A16 .. A31 ]   w=0, rows 16-31
+//!   16 c c c c c c c c ...         16  A16 B16..            ...
+//!    .                              .  (K/16 tiles
+//!    .                              .   of 16 rows)
+//! ```
+//!
+//! i.e. `stream[(kt*W + w)*16 + (k % 16)] = words[k*W + w]` — a
+//! `(K/16, 16, W) → (K/16, W, 16)` tile transpose at word granularity.
+//! Within each 16-word run, `ldmatrix.m8n8.x2` semantics put rows 0–7
+//! (sub-matrix 0) before rows 8–15 (sub-matrix 1), which coincides with
+//! row order — see [`ldmatrix_fragment_perm`] for the lane mapping.
+//!
+//! Because word `i` of the stream is *not* word `i` of the logical grid,
+//! the stream cannot be sliced to shard a layer across GPUs; tensor
+//! parallelism must split in logical `(k, n)` space first and interleave
+//! each shard independently (`quant::shard`).
 
-/// `mma.m16n8k16` fragment geometry (paper §3.2).
+// `mma.m16n8k16` fragment geometry (paper §3.2).
+/// `mma.m16n8k16` M (rows of the A fragment).
 pub const MMA_M: usize = 16;
+/// `mma.m16n8k16` N (columns of the B fragment).
 pub const MMA_N: usize = 8;
+/// `mma.m16n8k16` K — the 16-row tile the interleave (and every QUICK
+/// pack shard boundary) is aligned to.
 pub const MMA_K: usize = 16;
 /// Threads per warp.
 pub const WARP_LANES: usize = 32;
@@ -49,6 +83,22 @@ pub fn try_ldmatrix_fragment_perm(rows: usize, n_words: usize) -> anyhow::Result
 /// Per (k_tile, n_word) tile of 16 rows x 1 word-column, `ldmatrix.m8n8.x2`
 /// semantics assign lane `l` row `l % 8` of sub-matrix `l / 8`; sub-matrices
 /// stack along K (rows 0–7, then 8–15 of the tile).
+///
+/// # Examples
+///
+/// Applying the permutation and its inverse scatter round-trips a word
+/// grid exactly:
+///
+/// ```
+/// use quick_infer::quant::{apply_word_perm, ldmatrix_fragment_perm, unapply_word_perm};
+///
+/// let (rows, n_words) = (32, 4);
+/// let perm = ldmatrix_fragment_perm(rows, n_words);
+/// let words: Vec<u32> = (0..(rows * n_words) as u32).collect();
+/// let stream = apply_word_perm(&words, &perm);
+/// assert_ne!(stream, words, "the interleave really moves words");
+/// assert_eq!(unapply_word_perm(&stream, &perm), words);
+/// ```
 pub fn ldmatrix_fragment_perm(rows: usize, n_words: usize) -> Vec<i64> {
     try_ldmatrix_fragment_perm(rows, n_words)
         .unwrap_or_else(|e| panic!("ldmatrix_fragment_perm: {e}"))

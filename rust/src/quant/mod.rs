@@ -14,11 +14,17 @@
 //!    B-fragments, enabling direct DRAM→register loads.
 //! 3. The composition (Fig. 6) — the two commute: (1) permutes nibbles
 //!    inside words, (2) permutes whole words.
+//!
+//! For multi-GPU serving, [`shard`] adds the tensor-parallel layer on
+//! top: shard boundaries are drawn in logical `(k, n)` space on pack- and
+//! group-aligned lines *before* interleaving, and each shard is packed
+//! independently — the interleaved stream itself cannot be sliced.
 
 mod awq;
 mod interleave;
 mod pack;
 mod search;
+pub mod shard;
 
 pub use awq::{dequantize, quantize_groupwise, QuantizedTensor, QBITS, QMAX};
 pub use interleave::{
@@ -26,6 +32,10 @@ pub use interleave::{
     unapply_word_perm, MMA_K, MMA_M, MMA_N, WARP_LANES,
 };
 pub use search::{reconstruction_error, search_awq_scales};
+pub use shard::{
+    shard_codes, shard_then_pack_quick, try_shard_plan, unpack_shards, unshard_codes,
+    PackedShard, ShardPlan, TpPartition,
+};
 pub use pack::{
     pack_awq, pack_linear, pack_qzeros, pack_quick, pack_quick_dequant_order, pack_words,
     try_pack_quick, try_pack_words, unpack_awq, unpack_quick, unpack_words, FT_ORDER,

@@ -93,6 +93,7 @@ pub fn pack_awq(codes: &[i32], k: usize, n: usize) -> Vec<u32> {
     pack_words(codes, k, n, &FT_ORDER)
 }
 
+/// Inverse of [`pack_awq`].
 pub fn unpack_awq(words: &[u32], k: usize, n: usize) -> Vec<i32> {
     unpack_words(words, k, n, &FT_ORDER)
 }
@@ -105,6 +106,20 @@ pub fn pack_quick_dequant_order(codes: &[i32], k: usize, n: usize) -> Vec<u32> {
 
 /// Fallible [`pack_quick`]: validates both the word-grid shape and the
 /// 16-row K-tile requirement, returning a descriptive error.
+///
+/// # Shape contract
+///
+/// `Ok` requires all of (violations yield `Err`, never a panic):
+///
+/// * `k > 0` and `k % 16 == 0` — each shard of the stream is a 16-row
+///   `mma.m16n8k16` K-tile ([`super::interleave::MMA_K`]);
+/// * `n` a positive multiple of [`PACK_FACTOR`] (8 nibbles per u32 word);
+/// * `codes.len() == k * n`, every code in `[0, 15]` (checked in debug
+///   builds).
+///
+/// This is the contract the panicking [`pack_quick`] enforces with
+/// `panic!`; use this variant on untrusted shapes (checkpoint loaders,
+/// CLI paths) and the panicking wrapper once shapes are established.
 pub fn try_pack_quick(codes: &[i32], k: usize, n: usize) -> Result<Vec<u32>> {
     try_check(codes, k, n)?;
     anyhow::ensure!(
@@ -129,6 +144,14 @@ pub fn try_pack_quick(codes: &[i32], k: usize, n: usize) -> Result<Vec<u32>> {
 }
 
 /// Fallible [`pack_words`] (any nibble order).
+///
+/// # Shape contract
+///
+/// `Ok` requires `k > 0`, `n` a positive multiple of [`PACK_FACTOR`], and
+/// a `k * n` code buffer (codes in `[0, 15]`, checked in debug builds);
+/// violations return a descriptive `Err`. The plain [`pack_words`] /
+/// [`pack_linear`] / [`pack_awq`] wrappers **panic** on the same
+/// violations — shapes are normally established once at model load.
 pub fn try_pack_words(
     codes: &[i32],
     k: usize,
@@ -149,11 +172,40 @@ pub fn try_pack_words(
 /// intermediate word buffer, the permutation vector, and the gather that
 /// the compositional path (`ldmatrix_fragment_perm` + `apply_word_perm`,
 /// still exported for tests/ablation) pays.
+///
+/// # Panics
+///
+/// Panics on any violation of the shape contract documented on
+/// [`try_pack_quick`]; use that variant for a `Result` instead.
+///
+/// # Examples
+///
+/// The full QUICK layout round-trips bit-exactly through
+/// [`unpack_quick`]:
+///
+/// ```
+/// use quick_infer::quant::{pack_quick, unpack_quick};
+///
+/// let (k, n) = (32, 16); // K a multiple of 16, N a multiple of 8
+/// let codes: Vec<i32> = (0..k * n).map(|i| (i % 16) as i32).collect();
+/// let stream = pack_quick(&codes, k, n);
+/// assert_eq!(stream.len(), k * n / 8, "8 nibbles per u32 word");
+/// assert_eq!(unpack_quick(&stream, k, n), codes);
+/// ```
 pub fn pack_quick(codes: &[i32], k: usize, n: usize) -> Vec<u32> {
     try_pack_quick(codes, k, n).unwrap_or_else(|e| panic!("quant::pack_quick: {e}"))
 }
 
 /// Inverse of [`pack_quick`].
+///
+/// # Examples
+///
+/// ```
+/// use quick_infer::quant::{pack_quick, unpack_quick};
+///
+/// let codes = vec![7i32; 16 * 8];
+/// assert_eq!(unpack_quick(&pack_quick(&codes, 16, 8), 16, 8), codes);
+/// ```
 pub fn unpack_quick(stream: &[u32], k: usize, n: usize) -> Vec<i32> {
     let perm = super::interleave::ldmatrix_fragment_perm(k, n / PACK_FACTOR);
     let words = super::interleave::unapply_word_perm(stream, &perm);

@@ -1,0 +1,398 @@
+//! Interleave-aware tensor-parallel sharding of QUICK-packed layers.
+//!
+//! QUICK's offline fragment interleave (see [`super::interleave`]) makes
+//! the packed `qweight` stream *layout-dependent*: word `i` of the DRAM
+//! stream is not word `i` of the logical `(K, N/8)` grid but the word some
+//! warp lane consumes at mma-issue time. Slicing the stream itself to
+//! shard a layer across GPUs would therefore hand every rank an
+//! unusable mixture of fragments — the same constraint QUIK (Ashkboos et
+//! al., 2023) hits when mapping quantized layouts onto tensor cores. The
+//! correct order of operations is:
+//!
+//! 1. draw the shard boundary in **logical `(k, n)` space**, aligned to
+//!    the pack factor (8 nibbles/word along N), the `mma.m16n8k16` K-tile
+//!    (16 rows along K), and the quantization group size (scales/qzeros
+//!    must split on group boundaries);
+//! 2. slice codes, scales, and zero-points along that boundary;
+//! 3. pack + interleave **each shard independently** — every rank then
+//!    owns a self-contained QUICK stream for its `(shard_k, shard_n)`
+//!    sub-matrix, loadable with the unmodified kernel.
+//!
+//! [`try_shard_plan`] validates the boundary (returning a descriptive
+//! error on misaligned splits), [`shard_then_pack_quick`] executes steps
+//! 2–3, and [`unpack_shards`] proves the construction: unpacking every
+//! shard and stitching the pieces back together reproduces the unsharded
+//! code matrix bit-exactly (see the round-trip tests here and the
+//! property test in `tests/property_tests.rs`).
+//!
+//! Column-parallel (`N` split) shards feed Megatron-style QKV/gate/up
+//! projections; row-parallel (`K` split) shards feed the attention-output
+//! and MLP-down projections whose partial sums an all-reduce combines
+//! (cost model: `gpusim::collective`).
+
+use anyhow::Result;
+
+use super::awq::QuantizedTensor;
+use super::interleave::MMA_K;
+use super::pack::{pack_qzeros, try_pack_quick, unpack_quick, PACK_FACTOR};
+
+/// Which logical axis of the `(k, n)` weight a TP plan splits.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TpPartition {
+    /// Split the output dimension `N` (Megatron column parallelism:
+    /// QKV / gate / up projections; activations are gathered or kept
+    /// sharded downstream).
+    Column,
+    /// Split the reduction dimension `K` (row parallelism: attention
+    /// output / MLP down projections; partial sums are all-reduced).
+    Row,
+}
+
+impl TpPartition {
+    /// Human-readable axis name for reports and error messages.
+    pub fn label(self) -> &'static str {
+        match self {
+            TpPartition::Column => "column",
+            TpPartition::Row => "row",
+        }
+    }
+}
+
+/// A validated plan for splitting one logical `(k, n)` 4-bit layer across
+/// `tp_degree` ranks. Construct via [`try_shard_plan`]; every shard is
+/// guaranteed pack-ready (K-tile-, pack-factor-, and group-aligned).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardPlan {
+    /// Axis being split.
+    pub partition: TpPartition,
+    /// Number of ranks (1 = no sharding; plans degrade gracefully).
+    pub tp_degree: usize,
+    /// Full logical reduction dimension.
+    pub k: usize,
+    /// Full logical output dimension.
+    pub n: usize,
+    /// Quantization group size along K.
+    pub group_size: usize,
+}
+
+impl ShardPlan {
+    /// Per-shard reduction dimension.
+    pub fn shard_k(&self) -> usize {
+        match self.partition {
+            TpPartition::Column => self.k,
+            TpPartition::Row => self.k / self.tp_degree,
+        }
+    }
+
+    /// Per-shard output dimension.
+    pub fn shard_n(&self) -> usize {
+        match self.partition {
+            TpPartition::Column => self.n / self.tp_degree,
+            TpPartition::Row => self.n,
+        }
+    }
+
+    /// Per-shard quantization-group count (scales/qzeros rows).
+    pub fn shard_groups(&self) -> usize {
+        self.shard_k() / self.group_size
+    }
+
+    /// `(row_start, rows, col_start, cols)` of `rank`'s code region in the
+    /// logical `(k, n)` matrix.
+    fn code_region(&self, rank: usize) -> (usize, usize, usize, usize) {
+        match self.partition {
+            TpPartition::Column => (0, self.k, rank * self.shard_n(), self.shard_n()),
+            TpPartition::Row => (rank * self.shard_k(), self.shard_k(), 0, self.n),
+        }
+    }
+
+    /// `(row_start, rows, col_start, cols)` of `rank`'s region in the
+    /// `(k / group_size, n)` scale/zero grids.
+    fn group_region(&self, rank: usize) -> (usize, usize, usize, usize) {
+        let groups = self.k / self.group_size;
+        match self.partition {
+            TpPartition::Column => (0, groups, rank * self.shard_n(), self.shard_n()),
+            TpPartition::Row => (rank * self.shard_groups(), self.shard_groups(), 0, self.n),
+        }
+    }
+}
+
+/// Validate a TP shard boundary for a `(k, n)` layer quantized with
+/// `group_size` groups along K.
+///
+/// Alignment rules (all checked, all reported with the offending numbers):
+///
+/// * `tp_degree >= 1` and the split axis divisible by it;
+/// * per-shard K a positive multiple of [`MMA_K`] (16) — each shard must
+///   be independently QUICK-packable — **and** of `group_size`, so the
+///   per-group scales/qzeros split on a group boundary;
+/// * per-shard N a positive multiple of [`PACK_FACTOR`] (8), the nibble
+///   count of one packed u32 word.
+pub fn try_shard_plan(
+    partition: TpPartition,
+    k: usize,
+    n: usize,
+    group_size: usize,
+    tp_degree: usize,
+) -> Result<ShardPlan> {
+    anyhow::ensure!(tp_degree >= 1, "tp_degree must be >= 1 (got {tp_degree})");
+    anyhow::ensure!(k > 0 && n > 0, "shape ({k}, {n}) must be positive");
+    anyhow::ensure!(
+        group_size > 0 && k % group_size == 0,
+        "K={k} not divisible by group_size={group_size}"
+    );
+    match partition {
+        TpPartition::Column => anyhow::ensure!(
+            n % tp_degree == 0,
+            "column-parallel: N={n} not divisible by tp_degree={tp_degree}"
+        ),
+        TpPartition::Row => anyhow::ensure!(
+            k % tp_degree == 0,
+            "row-parallel: K={k} not divisible by tp_degree={tp_degree}"
+        ),
+    }
+    let plan = ShardPlan { partition, tp_degree, k, n, group_size };
+    let (sk, sn) = (plan.shard_k(), plan.shard_n());
+    anyhow::ensure!(
+        sk % MMA_K == 0,
+        "per-shard K={sk} must be a multiple of {MMA_K} (mma.m16n8k16 K-tile); \
+         draw the {} split elsewhere",
+        partition.label()
+    );
+    anyhow::ensure!(
+        sk % group_size == 0,
+        "per-shard K={sk} must be a multiple of group_size={group_size} \
+         (scales/qzeros must split on a group boundary)"
+    );
+    anyhow::ensure!(
+        sn % PACK_FACTOR == 0,
+        "per-shard N={sn} must be a multiple of {PACK_FACTOR} (nibbles per packed u32 word)"
+    );
+    Ok(plan)
+}
+
+/// One rank's share of a QUICK-packed layer: an independently interleaved
+/// `qweight` stream plus its group metadata, directly loadable by the
+/// unmodified kernel at shape `(k, n)`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PackedShard {
+    /// Rank index in `0..tp_degree`.
+    pub rank: usize,
+    /// Shard reduction dimension.
+    pub k: usize,
+    /// Shard output dimension.
+    pub n: usize,
+    /// Quantization group size along K (same as the unsharded layer).
+    pub group_size: usize,
+    /// QUICK-interleaved word stream for the shard (`k * n / 8` words).
+    pub qweight: Vec<u32>,
+    /// Per-group fp scales, row-major `(k / group_size, n)`.
+    pub scales: Vec<f32>,
+    /// AWQ-convention packed zero-points, `(k / group_size, n / 8)` words.
+    pub qzeros: Vec<u32>,
+}
+
+/// Copy a `(rows, cols)` region out of a row-major matrix.
+fn slice_region<T: Copy>(
+    m: &[T],
+    cols_total: usize,
+    (r0, rows, c0, cols): (usize, usize, usize, usize),
+) -> Vec<T> {
+    let mut out = Vec::with_capacity(rows * cols);
+    for r in r0..r0 + rows {
+        out.extend_from_slice(&m[r * cols_total + c0..r * cols_total + c0 + cols]);
+    }
+    out
+}
+
+/// Slice `rank`'s logical codes out of the unsharded `(k, n)` code matrix.
+pub fn shard_codes(codes: &[i32], plan: &ShardPlan, rank: usize) -> Vec<i32> {
+    assert_eq!(codes.len(), plan.k * plan.n, "code buffer does not match the plan");
+    assert!(rank < plan.tp_degree, "rank {rank} out of range (tp={})", plan.tp_degree);
+    slice_region(codes, plan.n, plan.code_region(rank))
+}
+
+/// Shard a group-quantized layer per `plan`, then pack + QUICK-interleave
+/// **each shard independently** — the order of operations TP deployment
+/// requires (interleaving first would scatter every shard's words across
+/// the stream). With `tp_degree == 1` the single shard is byte-identical
+/// to [`super::pack::pack_quick`] + [`pack_qzeros`] of the whole layer
+/// (differential-tested against the Python golden fixtures).
+pub fn shard_then_pack_quick(t: &QuantizedTensor, plan: &ShardPlan) -> Result<Vec<PackedShard>> {
+    anyhow::ensure!(
+        t.k == plan.k && t.n == plan.n && t.group_size == plan.group_size,
+        "tensor ({}, {}) group {} does not match plan ({}, {}) group {}",
+        t.k,
+        t.n,
+        t.group_size,
+        plan.k,
+        plan.n,
+        plan.group_size
+    );
+    let (sk, sn) = (plan.shard_k(), plan.shard_n());
+    let mut shards = Vec::with_capacity(plan.tp_degree);
+    for rank in 0..plan.tp_degree {
+        let codes = slice_region(&t.codes, t.n, plan.code_region(rank));
+        let qweight = try_pack_quick(&codes, sk, sn)?;
+        let scales = slice_region(&t.scales, t.n, plan.group_region(rank));
+        let zeros = slice_region(&t.zeros, t.n, plan.group_region(rank));
+        let qzeros = pack_qzeros(&zeros, plan.shard_groups(), sn);
+        shards.push(PackedShard {
+            rank,
+            k: sk,
+            n: sn,
+            group_size: plan.group_size,
+            qweight,
+            scales,
+            qzeros,
+        });
+    }
+    Ok(shards)
+}
+
+/// Stitch per-shard logical code matrices back into the unsharded `(k, n)`
+/// grid — the inverse of [`shard_codes`] over all ranks.
+pub fn unshard_codes(shard_codes: &[Vec<i32>], plan: &ShardPlan) -> Vec<i32> {
+    assert_eq!(shard_codes.len(), plan.tp_degree, "one code matrix per rank");
+    let (sk, sn) = (plan.shard_k(), plan.shard_n());
+    let mut out = vec![0i32; plan.k * plan.n];
+    for (rank, codes) in shard_codes.iter().enumerate() {
+        assert_eq!(codes.len(), sk * sn, "rank {rank}: shard shape mismatch");
+        let (r0, rows, c0, cols) = plan.code_region(rank);
+        for r in 0..rows {
+            out[(r0 + r) * plan.n + c0..(r0 + r) * plan.n + c0 + cols]
+                .copy_from_slice(&codes[r * cols..(r + 1) * cols]);
+        }
+    }
+    out
+}
+
+/// Unpack every shard's QUICK stream and reassemble the logical `(k, n)`
+/// code matrix — the proof obligation that sharding commutes with
+/// pack+interleave. Bit-exactness against the unsharded codes is asserted
+/// by the round-trip tests below and the property test over random
+/// `(k, n, group_size, tp_degree)` in `tests/property_tests.rs`.
+pub fn unpack_shards(shards: &[PackedShard], plan: &ShardPlan) -> Vec<i32> {
+    let (sk, sn) = (plan.shard_k(), plan.shard_n());
+    let per_rank: Vec<Vec<i32>> =
+        shards.iter().map(|s| unpack_quick(&s.qweight, sk, sn)).collect();
+    unshard_codes(&per_rank, plan)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{pack_quick, pack_qzeros, quantize_groupwise};
+    use crate::util::rng::Rng;
+
+    fn rand_tensor(k: usize, n: usize, g: usize, seed: u64) -> QuantizedTensor {
+        let mut rng = Rng::seed_from_u64(seed);
+        let w: Vec<f32> = (0..k * n).map(|_| (rng.f64() * 2.0 - 1.0) as f32).collect();
+        quantize_groupwise(&w, k, n, g)
+    }
+
+    #[test]
+    fn degree_one_is_byte_identical_to_unsharded_pack() {
+        let t = rand_tensor(64, 48, 32, 1);
+        for partition in [TpPartition::Column, TpPartition::Row] {
+            let plan = try_shard_plan(partition, 64, 48, 32, 1).unwrap();
+            let shards = shard_then_pack_quick(&t, &plan).unwrap();
+            assert_eq!(shards.len(), 1);
+            assert_eq!(shards[0].qweight, pack_quick(&t.codes, 64, 48));
+            assert_eq!(shards[0].qzeros, pack_qzeros(&t.zeros, 2, 48));
+            assert_eq!(shards[0].scales, t.scales);
+        }
+    }
+
+    #[test]
+    fn column_shards_roundtrip_bit_exact() {
+        let t = rand_tensor(32, 64, 16, 2);
+        let plan = try_shard_plan(TpPartition::Column, 32, 64, 16, 4).unwrap();
+        assert_eq!((plan.shard_k(), plan.shard_n()), (32, 16));
+        let shards = shard_then_pack_quick(&t, &plan).unwrap();
+        assert_eq!(shards.len(), 4);
+        assert_eq!(unpack_shards(&shards, &plan), t.codes);
+        // Scales split column-wise: rank r's column 0 is logical column 16r.
+        for (r, s) in shards.iter().enumerate() {
+            assert_eq!(s.scales.len(), plan.shard_groups() * plan.shard_n());
+            assert_eq!(s.scales[0], t.scales[r * 16]);
+        }
+    }
+
+    #[test]
+    fn row_shards_roundtrip_bit_exact() {
+        let t = rand_tensor(96, 24, 16, 3);
+        let plan = try_shard_plan(TpPartition::Row, 96, 24, 16, 3).unwrap();
+        assert_eq!((plan.shard_k(), plan.shard_n()), (32, 24));
+        let shards = shard_then_pack_quick(&t, &plan).unwrap();
+        assert_eq!(unpack_shards(&shards, &plan), t.codes);
+        // Scales split group-row-wise: rank r starts at group 32r/16 = 2r.
+        for (r, s) in shards.iter().enumerate() {
+            assert_eq!(s.scales.len(), 2 * 24);
+            assert_eq!(s.scales[0], t.scales[2 * r * 24]);
+        }
+    }
+
+    #[test]
+    fn shard_codes_matches_manual_slice() {
+        let t = rand_tensor(32, 32, 32, 4);
+        let plan = try_shard_plan(TpPartition::Column, 32, 32, 32, 2).unwrap();
+        let rank1 = shard_codes(&t.codes, &plan, 1);
+        for row in 0..32 {
+            assert_eq!(&rank1[row * 16..(row + 1) * 16], &t.codes[row * 32 + 16..(row + 1) * 32]);
+        }
+        let stitched = unshard_codes(&[shard_codes(&t.codes, &plan, 0), rank1], &plan);
+        assert_eq!(stitched, t.codes);
+    }
+
+    #[test]
+    fn misaligned_splits_are_rejected_with_reasons() {
+        // Per-shard N falls below the pack factor.
+        let e = try_shard_plan(TpPartition::Column, 32, 16, 32, 4).unwrap_err();
+        assert!(e.to_string().contains("multiple of 8"), "{e}");
+        // Axis not divisible by the degree at all.
+        let e = try_shard_plan(TpPartition::Column, 32, 24, 32, 5).unwrap_err();
+        assert!(e.to_string().contains("not divisible by tp_degree"), "{e}");
+        // Per-shard K breaks the quantization group.
+        let e = try_shard_plan(TpPartition::Row, 64, 16, 64, 2).unwrap_err();
+        assert!(e.to_string().contains("group"), "{e}");
+        // Per-shard K breaks the mma K-tile (group 8 keeps groups aligned).
+        let e = try_shard_plan(TpPartition::Row, 16, 16, 8, 2).unwrap_err();
+        assert!(e.to_string().contains("multiple of 16"), "{e}");
+        // K not divisible by the degree.
+        let e = try_shard_plan(TpPartition::Row, 48, 16, 16, 5).unwrap_err();
+        assert!(e.to_string().contains("not divisible by tp_degree"), "{e}");
+        // Degenerate degree.
+        let e = try_shard_plan(TpPartition::Row, 48, 16, 16, 0).unwrap_err();
+        assert!(e.to_string().contains("tp_degree must be >= 1"), "{e}");
+    }
+
+    #[test]
+    fn plan_mismatch_is_rejected() {
+        let t = rand_tensor(32, 32, 16, 5);
+        let plan = try_shard_plan(TpPartition::Column, 64, 32, 16, 2).unwrap();
+        assert!(shard_then_pack_quick(&t, &plan).is_err());
+    }
+
+    #[test]
+    fn naive_stream_slicing_is_wrong_for_column_splits() {
+        // The motivating counterexample: a column split cannot be taken on
+        // the interleaved stream. The stream orders words k-tile-major
+        // ((K/16, W, 16) after the tile transpose), so the first half of
+        // the stream holds the *top K-tiles of every column*, not the left
+        // columns of every row — slicing it is not rank 0's layout.
+        let t = rand_tensor(64, 32, 16, 6);
+        let plan = try_shard_plan(TpPartition::Column, 64, 32, 16, 2).unwrap();
+        let shards = shard_then_pack_quick(&t, &plan).unwrap();
+        let whole = pack_quick(&t.codes, 64, 32);
+        let naive: Vec<u32> = whole[..whole.len() / 2].to_vec();
+        assert_eq!(naive.len(), shards[0].qweight.len());
+        assert_ne!(naive, shards[0].qweight, "stream slicing must not masquerade as a shard");
+        // The ground truth: rank 0's independently packed stream is the
+        // loadable layout for columns 0..16 of every row.
+        let rank0 = unpack_quick(&shards[0].qweight, 64, 16);
+        for row in 0..64 {
+            assert_eq!(&rank0[row * 16..(row + 1) * 16], &t.codes[row * 32..row * 32 + 16]);
+        }
+    }
+}

@@ -23,8 +23,11 @@ use crate::util::rng::Rng;
 /// One serving request: prompt and generation lengths in tokens.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Request {
+    /// Request id, unique within a generated workload.
     pub id: u64,
+    /// Prompt length in tokens.
     pub prompt_tokens: u64,
+    /// Generation budget in tokens.
     pub gen_tokens: u64,
     /// Arrival time, microseconds from epoch 0 (0 for offline workloads).
     pub arrival_s_micros: u64,
@@ -39,6 +42,7 @@ pub struct Request {
 }
 
 impl Request {
+    /// Arrival time in seconds.
     pub fn arrival_s(&self) -> f64 {
         self.arrival_s_micros as f64 / 1e6
     }
@@ -78,6 +82,7 @@ impl Default for ShareGptLike {
 }
 
 impl ShareGptLike {
+    /// Sampler tuned to the published ShareGPT benchmark statistics.
     pub fn new() -> Self {
         // ln-space params chosen so the medians/means land near the
         // ShareGPT benchmark's reported token statistics.

@@ -152,3 +152,33 @@ fn pack_qzeros_matches_python() {
         );
     }
 }
+
+#[test]
+fn tp_degree_one_shard_matches_python_stream() {
+    // The tensor-parallel pack path at tp_degree = 1 must be byte-identical
+    // to the unsharded Python-generated QUICK stream and qzeros — the
+    // differential anchor that sharding introduces no layout drift.
+    use quick_infer::quant::{
+        shard_then_pack_quick, try_shard_plan, QuantizedTensor, TpPartition,
+    };
+    for name in FIXTURES {
+        let f = load_fixture(name);
+        let groups = f.k / f.group_size;
+        let t = QuantizedTensor {
+            codes: f.codes.clone(),
+            scales: vec![1.0; groups * f.n],
+            zeros: f.zeros.iter().map(|&z| z as f32).collect(),
+            k: f.k,
+            n: f.n,
+            group_size: f.group_size,
+        };
+        for partition in [TpPartition::Column, TpPartition::Row] {
+            let plan = try_shard_plan(partition, f.k, f.n, f.group_size, 1)
+                .unwrap_or_else(|e| panic!("{name}: {e}"));
+            let shards = shard_then_pack_quick(&t, &plan).unwrap();
+            assert_eq!(shards.len(), 1, "{name}");
+            assert_eq!(shards[0].qweight, f.quick, "{name}: qweight drift");
+            assert_eq!(shards[0].qzeros, f.qzeros, "{name}: qzeros drift");
+        }
+    }
+}

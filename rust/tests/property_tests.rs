@@ -61,6 +61,49 @@ fn prop_quantize_bounded_error() {
 }
 
 #[test]
+fn prop_shard_then_pack_quick_roundtrips() {
+    // Tensor-parallel sharding commutes with pack+interleave: for random
+    // (k, n, group_size, tp_degree) on both split axes, unpacking every
+    // independently packed shard and stitching the pieces back together
+    // reproduces the unsharded code matrix (and its scales) bit-exactly.
+    check("shard-pack-roundtrip", 0x7EA4, default_cases(), |rng| {
+        let tp = [1usize, 2, 3, 4][rng.range_usize(0, 3)];
+        let g = [16usize, 32][rng.range_usize(0, 1)];
+        let partition = if rng.f64() < 0.5 {
+            quant::TpPartition::Column
+        } else {
+            quant::TpPartition::Row
+        };
+        // Shapes aligned so every shard stays pack- and group-legal:
+        // per-shard K a multiple of the group (and 16), per-shard N of 8.
+        let (k, n) = match partition {
+            quant::TpPartition::Column => {
+                (g * rng.range_usize(1, 3), tp * 8 * rng.range_usize(1, 4))
+            }
+            quant::TpPartition::Row => {
+                (tp * g * rng.range_usize(1, 3), 8 * rng.range_usize(1, 4))
+            }
+        };
+        let w: Vec<f32> = (0..k * n).map(|_| (rng.f64() * 2.0 - 1.0) as f32).collect();
+        let t = quant::quantize_groupwise(&w, k, n, g);
+        let plan = quant::try_shard_plan(partition, k, n, g, tp)
+            .expect("aligned shapes must plan");
+        let shards = quant::shard_then_pack_quick(&t, &plan).expect("plan matches tensor");
+        assert_eq!(shards.len(), tp);
+        assert_eq!(quant::unpack_shards(&shards, &plan), t.codes);
+        // Per-shard metadata volume adds up to the unsharded layer.
+        let scale_total: usize = shards.iter().map(|s| s.scales.len()).sum();
+        assert_eq!(scale_total, t.scales.len());
+        let word_total: usize = shards.iter().map(|s| s.qweight.len()).sum();
+        assert_eq!(word_total, k * n / 8);
+        // Degree 1 is byte-identical to the unsharded pack.
+        if tp == 1 {
+            assert_eq!(shards[0].qweight, quant::pack_quick(&t.codes, k, n));
+        }
+    });
+}
+
+#[test]
 fn prop_kv_manager_never_leaks_or_double_allocates() {
     check("kv-ledger", 0xD00D, default_cases(), |rng| {
         let blocks = rng.range_u64(8, 256);

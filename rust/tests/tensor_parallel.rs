@@ -1,0 +1,118 @@
+//! Integration tests for the tensor-parallel subsystem: shard planning →
+//! per-rank packing (`quant::shard`), collective-aware step costs
+//! (`gpusim::collective`), and the serving-level scaling sweep
+//! (`coordinator::simserve::simulate_tp`) — the ISSUE-3 acceptance
+//! criteria exercised through the public API only.
+
+use quick_infer::coordinator::simserve::{simulate_continuous, simulate_tp, ContinuousPolicy};
+use quick_infer::coordinator::{Policy, Router};
+use quick_infer::gpusim::{
+    mixed_step_latency, ring_all_gather_s, ring_all_reduce_s, tp_step_latency, Calib, Gpu,
+    KernelKind,
+};
+use quick_infer::model::Model;
+use quick_infer::quant::{
+    quantize_groupwise, shard_then_pack_quick, try_shard_plan, unpack_shards, TpPartition,
+};
+use quick_infer::workload::BurstyWorkload;
+
+#[test]
+fn quick_throughput_monotone_in_tp_degree() {
+    // Acceptance: monotone throughput gain from tp_degree 1 -> 4 for the
+    // QUICK kernel under BurstyWorkload.
+    let dev = Gpu::A100.spec();
+    let spec = Model::Llama2_70B.spec();
+    let policy = ContinuousPolicy::default();
+    let calib = Calib::default();
+    let reqs = BurstyWorkload::default().offline(80, 31);
+    let run = |tp| simulate_tp(&dev, &spec, KernelKind::Quick, &reqs, &policy, tp, &calib);
+    let (t1, t2, t4) = (run(1), run(2), run(4));
+    for (tp, r) in [(1u64, &t1), (2, &t2), (4, &t4)] {
+        assert!(!r.oom, "tp={tp} oom");
+        assert_eq!(r.finished, 80, "tp={tp}");
+    }
+    assert!(
+        t2.total_tok_per_s > t1.total_tok_per_s,
+        "tp2 {:.1} !> tp1 {:.1}",
+        t2.total_tok_per_s,
+        t1.total_tok_per_s
+    );
+    assert!(
+        t4.total_tok_per_s > t2.total_tok_per_s,
+        "tp4 {:.1} !> tp2 {:.1}",
+        t4.total_tok_per_s,
+        t2.total_tok_per_s
+    );
+    // Scaling stays sublinear: the collectives and per-kernel overheads
+    // are not sharded.
+    assert!(t4.total_tok_per_s < t1.total_tok_per_s * 4.0);
+}
+
+#[test]
+fn tp_sim_baseline_equals_continuous_sim() {
+    let dev = Gpu::RtxA6000.spec();
+    let spec = Model::Vicuna13B.spec();
+    let policy = ContinuousPolicy::default();
+    let calib = Calib::default();
+    let reqs = BurstyWorkload::default().online(60, 1.0, 5);
+    let base = simulate_continuous(&dev, &spec, KernelKind::Quick, &reqs, &policy, &calib);
+    let tp1 = simulate_tp(&dev, &spec, KernelKind::Quick, &reqs, &policy, 1, &calib);
+    assert_eq!(base.wall_s, tp1.wall_s, "tp=1 must be a bit-exact baseline");
+    assert_eq!(base.steps, tp1.steps);
+    assert_eq!(base.gen_tokens, tp1.gen_tokens);
+}
+
+#[test]
+fn step_cost_splits_weights_and_pays_collectives() {
+    let dev = Gpu::A100.spec();
+    let spec = Model::Llama2_70B.spec();
+    let calib = Calib::default();
+    let single = mixed_step_latency(&dev, &spec, KernelKind::Quick, 64, 800, 192, 384, &calib);
+    let tp4 = tp_step_latency(&dev, &spec, KernelKind::Quick, 4, 64, 800, 192, 384, &calib);
+    assert!(tp4.gemm_s < single.gemm_s, "per-rank GEMMs must shrink");
+    assert!(tp4.comm_s > 0.0, "TP must pay all-reduces");
+    assert!(tp4.total_s() < single.total_s(), "70B on NVLink: TP wins the step");
+    // The collective bill is exactly 2 all-reduces per layer of the
+    // step's (M, d_model) fp16 activations plus the lm_head logits
+    // all-gather.
+    let act_bytes = ((64 + 192) * spec.d_model) as f64 * 2.0;
+    let logits_bytes = ((64 + 192) * spec.vocab) as f64 * 2.0;
+    let want = spec.n_layers as f64 * 2.0 * ring_all_reduce_s(&dev, act_bytes, 4)
+        + ring_all_gather_s(&dev, logits_bytes, 4);
+    assert!((tp4.comm_s - want).abs() < 1e-12);
+}
+
+#[test]
+fn end_to_end_shard_pipeline_roundtrips_a_projection() {
+    // Quantize a Llama-like projection slice, shard it column-parallel
+    // 4 ways and row-parallel 2 ways, and prove each rank's independently
+    // interleaved stream reassembles the unsharded codes bit-exactly.
+    let (k, n, g) = (256, 128, 128);
+    let w: Vec<f32> = (0..k * n)
+        .map(|i| ((i * 2654435761usize % 1000) as f32 / 500.0) - 1.0)
+        .collect();
+    let t = quantize_groupwise(&w, k, n, g);
+    for (partition, tp) in [(TpPartition::Column, 4), (TpPartition::Row, 2)] {
+        let plan = try_shard_plan(partition, k, n, g, tp).unwrap();
+        let shards = shard_then_pack_quick(&t, &plan).unwrap();
+        assert_eq!(shards.len(), tp);
+        assert_eq!(unpack_shards(&shards, &plan), t.codes, "{partition:?}");
+    }
+    // Misaligned boundary: 4-way row split would tear the 128-group.
+    let err = try_shard_plan(TpPartition::Row, 256, 128, 128, 4).unwrap_err();
+    assert!(err.to_string().contains("group"), "{err}");
+}
+
+#[test]
+fn router_places_whole_tp_groups() {
+    let mut r = Router::new_tp(Policy::TpGroup, &[0; 4], 4).unwrap();
+    let d = r.route(64, None).unwrap();
+    assert_eq!(d.replica, 0);
+    for rank in 0..4 {
+        assert_eq!(r.inflight(rank), (1, 64), "rank {rank} must carry the request");
+    }
+    r.on_finish(d, 64);
+    for rank in 0..4 {
+        assert_eq!(r.inflight(rank), (0, 0));
+    }
+}
