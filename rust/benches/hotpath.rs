@@ -1,7 +1,9 @@
 //! L3 hot-path microbenchmarks (perf pass, DESIGN.md §8): offline packing
-//! throughput, KV block manager ops, batcher step planning, bank-counter
-//! inner loop, and — with artifacts present — the PJRT decode round-trip
-//! the engine pays per token.
+//! throughput (incl. the `dequantize_into` reused-buffer and memoized
+//! fragment-perm variants), the native fused/write-back kernel pair, KV
+//! block manager ops, batcher step planning, bank-counter inner loop, and
+//! — with artifacts present — the PJRT decode round-trip the engine pays
+//! per token.
 
 use quick_infer::coordinator::kv_cache::KvBlockManager;
 use quick_infer::coordinator::{Batcher, GenerationRequest, StepPlan};
@@ -25,7 +27,47 @@ fn bench_quant(b: &Bench) {
         quant::pack_quick(&t.codes, k, n)
     });
     b.run_throughput("pack_awq", elems, || quant::pack_awq(&t.codes, k, n));
-    b.run_throughput("dequantize", elems, || quant::dequantize(&t));
+    b.run_throughput("dequantize (alloc per call)", elems, || quant::dequantize(&t));
+    let mut deq = vec![0f32; k * n];
+    b.run_throughput("dequantize_into (reused buffer)", elems, || {
+        quant::dequantize_into(&t, &mut deq);
+        deq[0]
+    });
+    // unpack_quick goes through the memoized fragment perm; the first
+    // call built the (k, n/8) permutation, every sample here reuses it.
+    let stream = quant::pack_quick(&t.codes, k, n);
+    b.run_throughput("unpack_quick (memoized perm)", elems, || {
+        quant::unpack_quick(&stream, k, n)
+    });
+    b.run("ldmatrix_fragment_perm (fresh)", || quant::ldmatrix_fragment_perm(k, n / 8));
+    b.run("ldmatrix_fragment_perm_memo (cached)", || {
+        quant::ldmatrix_fragment_perm_memo(k, n / 8)
+    });
+}
+
+fn bench_kernel(b: &Bench) {
+    use quick_infer::kernel::{AwqWritebackBackend, Blocking, KernelBackend, QuickFusedBackend};
+    println!("-- native kernel backends (1024x1024 g128, m=32) --");
+    let (k, n, m) = (1024usize, 1024usize, 32usize);
+    let w: Vec<f32> = (0..k * n)
+        .map(|i| ((i as u32).wrapping_mul(2654435761) as f32 / u32::MAX as f32) - 0.5)
+        .collect();
+    let t = quant::quantize_groupwise(&w, k, n, 128);
+    let fused = QuickFusedBackend::new(&t, Blocking::default());
+    let writeback = AwqWritebackBackend::new(&t, Blocking::default());
+    let x: Vec<f32> = (0..m * k)
+        .map(|i| ((i as u32).wrapping_mul(2246822519) as f32 / u32::MAX as f32) - 0.5)
+        .collect();
+    let mut y = vec![0f32; m * n];
+    let flops = (2 * m * n * k) as u64;
+    b.run_throughput("gemm_quick_fused", flops, || {
+        fused.gemm(&x, m, &mut y);
+        y[0]
+    });
+    b.run_throughput("gemm_awq_writeback", flops, || {
+        writeback.gemm(&x, m, &mut y);
+        y[0]
+    });
 }
 
 fn bench_kv(b: &Bench) {
@@ -96,6 +138,7 @@ fn bench_pjrt(b: &Bench) {
 fn main() {
     let b = Bench::fast();
     bench_quant(&b);
+    bench_kernel(&b);
     bench_kv(&b);
     bench_batcher(&b);
     bench_bank(&b);

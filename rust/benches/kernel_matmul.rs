@@ -1,0 +1,18 @@
+//! Measured native-kernel M-sweep bench: `gemm_quick_fused` vs
+//! `gemm_awq_writeback` on this host (the executable analogue of the
+//! Fig. 7 batch axis). Same harness the `quick-infer bench kernels` CLI
+//! target and `simulate kernel-matmul` use; this entry point exists so
+//! `cargo bench --bench kernel_matmul` slots into the existing bench
+//! workflow next to `fig7_matmul`.
+
+use quick_infer::figures;
+
+fn main() {
+    let report = figures::kernel_matmul(&mut std::io::stdout()).expect("kernel_matmul");
+    assert!(
+        report.within_tolerance(),
+        "kernel divergence vs naive reference: fused {:.2e}, write-back {:.2e}",
+        report.fused_rel_err,
+        report.writeback_rel_err
+    );
+}

@@ -85,6 +85,11 @@ pub struct Calib {
     /// Threadblock-swizzle span: adjacent M-blocks sharing weight tiles
     /// through L2.
     pub swizzle_span: u64,
+    /// Multiplier on the baseline kernel's modeled write-back time.
+    /// `1.0` = pure first-principles model; [`calibrate_writeback`] sets
+    /// it so the modeled AWQ/QUICK gap matches the gap *measured* by the
+    /// native kernel backend (`crate::kernel`, `bench kernels`).
+    pub writeback_scale: f64,
 }
 
 impl Default for Calib {
@@ -95,6 +100,7 @@ impl Default for Calib {
             dequant_ops: 4.0,
             overhead_s: 8e-6,
             swizzle_span: 8,
+            writeback_scale: 1.0,
         }
     }
 }
@@ -259,7 +265,7 @@ fn model_with_tile(
             // (conflict-free) and overlaps the next dequant batch; the
             // write-back itself cannot be hidden (ldmatrix needs the full
             // tile visible -> __syncthreads barrier).
-            let time = bytes * mult / dev.smem_bw();
+            let time = bytes * mult * calib.writeback_scale / dev.smem_bw();
             (confl, mult, bytes, time)
         }
         _ => (0, 1.0, 0.0, 0.0),
@@ -286,6 +292,65 @@ fn model_with_tile(
         occupancy_fraction: occ.fraction,
         tile: *t,
     }
+}
+
+/// Calibrate the modeled write-back penalty from *measured* native-kernel
+/// tile costs (the engine hook behind `bench kernels`): returns a `Calib`
+/// whose [`Calib::writeback_scale`] makes the modeled AWQ/QUICK latency
+/// ratio at `(m, n, k)` on `dev` match the measured
+/// write-back/fused wall-time ratio from [`crate::kernel`]'s
+/// `gemm_awq_writeback` / `gemm_quick_fused` pair.
+///
+/// The scale is found by bisection (the modeled ratio is monotone
+/// non-decreasing in the scale) and clamped to `[0, 1024]`; if the model
+/// cannot reach the measured ratio even at the clamp — e.g. the measured
+/// gap exceeds what any write-back serialization could explain, or is
+/// below the model's write-back-free floor — the nearest achievable scale
+/// is returned. Every `simserve` / `figures` query that takes a `Calib`
+/// can then run on measured rather than modeled tile costs.
+///
+/// # Panics
+///
+/// Panics unless both measured latencies are positive.
+pub fn calibrate_writeback(
+    dev: &DeviceSpec,
+    m: u64,
+    n: u64,
+    k: u64,
+    measured_fused_s: f64,
+    measured_writeback_s: f64,
+    base: &Calib,
+) -> Calib {
+    assert!(
+        measured_fused_s > 0.0 && measured_writeback_s > 0.0,
+        "measured latencies must be positive"
+    );
+    let target = (measured_writeback_s / measured_fused_s).max(1.0);
+    let ratio = |scale: f64| {
+        let c = Calib { writeback_scale: scale, ..*base };
+        model_gemm(dev, KernelKind::Awq, m, n, k, &c).latency_s
+            / model_gemm(dev, KernelKind::Quick, m, n, k, &c).latency_s
+    };
+    let (mut lo, mut hi) = (0.0f64, 1.0f64);
+    while ratio(hi) < target && hi < 1024.0 {
+        hi *= 2.0;
+    }
+    if ratio(lo) >= target {
+        // Measured gap at or below the write-back-free floor.
+        return Calib { writeback_scale: lo, ..*base };
+    }
+    if ratio(hi) < target {
+        return Calib { writeback_scale: hi, ..*base };
+    }
+    for _ in 0..64 {
+        let mid = 0.5 * (lo + hi);
+        if ratio(mid) < target {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    Calib { writeback_scale: 0.5 * (lo + hi), ..*base }
 }
 
 #[cfg(test)]
@@ -367,6 +432,42 @@ mod tests {
         let large = perf(KernelKind::Quick, 256);
         assert!(large.tile.bm >= small.tile.bm);
         assert!(large.tile.bm >= 128, "tile-size optimization not engaged");
+    }
+
+    #[test]
+    fn calibrate_writeback_matches_measured_ratio() {
+        let dev = Gpu::A100.spec();
+        let base = Calib::default();
+        // A reachable target inside the model's dynamic range.
+        let calib = calibrate_writeback(&dev, 256, 8192, 8192, 1.0e-3, 1.5e-3, &base);
+        let a = model_gemm(&dev, KernelKind::Awq, 256, 8192, 8192, &calib);
+        let q = model_gemm(&dev, KernelKind::Quick, 256, 8192, 8192, &calib);
+        let ratio = a.latency_s / q.latency_s;
+        assert!((ratio - 1.5).abs() < 0.03, "calibrated ratio {ratio:.3} != 1.5");
+        // A larger measured gap calibrates to a larger scale.
+        let bigger = calibrate_writeback(&dev, 256, 8192, 8192, 1.0e-3, 1.8e-3, &base);
+        assert!(bigger.writeback_scale > calib.writeback_scale);
+        // A measured gap of 1.0x sits at (or below) the write-back-free
+        // floor: the calibrated scale collapses to (near) zero.
+        let floor = calibrate_writeback(&dev, 256, 8192, 8192, 1.0e-3, 1.0e-3, &base);
+        assert!(floor.writeback_scale < 0.05, "floor scale {}", floor.writeback_scale);
+        // Non-writeback fields pass through untouched.
+        assert_eq!(calib.mma_eff, base.mma_eff);
+        assert_eq!(calib.swizzle_span, base.swizzle_span);
+    }
+
+    #[test]
+    fn writeback_scale_moves_only_the_awq_kernel() {
+        let dev = Gpu::A100.spec();
+        let scaled = Calib { writeback_scale: 2.0, ..Calib::default() };
+        for kind in [KernelKind::Fp16, KernelKind::Quick] {
+            let a = model_gemm(&dev, kind, 64, 8192, 8192, &Calib::default());
+            let b = model_gemm(&dev, kind, 64, 8192, 8192, &scaled);
+            assert_eq!(a.latency_s, b.latency_s, "{kind:?} must be unaffected");
+        }
+        let base = model_gemm(&dev, KernelKind::Awq, 64, 8192, 8192, &Calib::default());
+        let doubled = model_gemm(&dev, KernelKind::Awq, 64, 8192, 8192, &scaled);
+        assert!(doubled.latency_s > base.latency_s, "write-back term must scale");
     }
 
     #[test]

@@ -51,4 +51,4 @@ pub use e2e::{
     DecodeBreakdown, MixedStepBreakdown,
 };
 pub use gpu::{DeviceSpec, Gpu};
-pub use kernel_model::{Calib, KernelKind, KernelPerf, TileConfig};
+pub use kernel_model::{calibrate_writeback, Calib, KernelKind, KernelPerf, TileConfig};

@@ -1,0 +1,128 @@
+//! Cache-blocking parameters shared by the fused and write-back GEMM
+//! paths.
+//!
+//! Both backends run the *same* loop nest — M-blocks of `mc` rows,
+//! K-blocks of `kc` rows (16-aligned so every block is whole
+//! `mma.m16n8k16` K-tiles), word-column panels — and the same `4 x 8`
+//! register microkernel, so the measured fused-vs-write-back gap isolates
+//! the scratch round-trip rather than a tuning difference.
+
+use anyhow::Result;
+
+use crate::quant::{MMA_K, PACK_FACTOR};
+
+/// Cache-blocking configuration for the native kernel backends.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Blocking {
+    /// Activation rows per M-block. Weight decode is amortized across the
+    /// whole block (the paper's per-threadblock dequant multiplicity:
+    /// every M-block pass re-decodes its K x N strip).
+    pub mc: usize,
+    /// Reduction rows per K-block; must be a positive multiple of 16
+    /// (whole interleave K-tiles).
+    pub kc: usize,
+    /// Word-columns (8 logical columns each) per N-panel. Sizes the
+    /// write-back path's scratch tile: `kc * nc_words * 8` f32 — the CPU
+    /// stand-in for the baseline kernel's shared-memory staging buffer.
+    pub nc_words: usize,
+    /// Worker threads; `0` = auto (one per core for large problems,
+    /// single-threaded when the GEMM is too small to amortize spawning).
+    pub threads: usize,
+}
+
+impl Default for Blocking {
+    fn default() -> Self {
+        // mc 64 x kc 256 keeps the x strip (~64 KiB) L2-resident; nc 16
+        // words = 128 columns gives the write-back path a 128 KiB scratch
+        // tile, the same order as the smem staging the AWQ kernel pays.
+        Blocking { mc: 64, kc: 256, nc_words: 16, threads: 0 }
+    }
+}
+
+impl Blocking {
+    /// Validate this blocking against a weight shape `(k, n)`.
+    pub fn validate(&self, k: usize, n: usize) -> Result<()> {
+        anyhow::ensure!(self.mc > 0, "mc must be > 0");
+        anyhow::ensure!(
+            self.kc > 0 && self.kc % MMA_K == 0,
+            "kc={} must be a positive multiple of {MMA_K} (interleave K-tile)",
+            self.kc
+        );
+        anyhow::ensure!(self.nc_words > 0, "nc_words must be > 0");
+        anyhow::ensure!(
+            k > 0 && k % MMA_K == 0,
+            "K={k} must be a positive multiple of {MMA_K} (QUICK stream K-tile)"
+        );
+        anyhow::ensure!(
+            n > 0 && n % PACK_FACTOR == 0,
+            "N={n} must be a positive multiple of {PACK_FACTOR} (nibbles per word)"
+        );
+        Ok(())
+    }
+
+    /// Resolve the worker count for an `m x k x n` GEMM: the configured
+    /// count, or (auto) one thread per core once the problem is large
+    /// enough to amortize spawn + scatter, never more than one per
+    /// word-column.
+    pub fn effective_threads(&self, m: usize, k: usize, n: usize) -> usize {
+        let w_total = n / PACK_FACTOR;
+        let cap = w_total.max(1);
+        if self.threads != 0 {
+            return self.threads.min(cap);
+        }
+        let flops = 2 * m * k * n;
+        if flops < (1 << 22) {
+            return 1;
+        }
+        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1).min(cap)
+    }
+
+    /// f32 capacity of the write-back scratch tile this blocking implies.
+    pub fn scratch_len(&self) -> usize {
+        self.kc * self.nc_words * PACK_FACTOR
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_blocking_is_valid() {
+        Blocking::default().validate(4096, 4096).unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_bad_shapes_and_params() {
+        let b = Blocking::default();
+        assert!(b.validate(24, 64).is_err(), "K not 16-aligned");
+        assert!(b.validate(64, 12).is_err(), "N not 8-aligned");
+        assert!(b.validate(0, 64).is_err());
+        let bad_kc = Blocking { kc: 24, ..Blocking::default() };
+        assert!(bad_kc.validate(64, 64).is_err());
+        let bad_mc = Blocking { mc: 0, ..Blocking::default() };
+        assert!(bad_mc.validate(64, 64).is_err());
+    }
+
+    #[test]
+    fn thread_resolution() {
+        let auto = Blocking::default();
+        // Tiny problem: stay single-threaded regardless of cores.
+        assert_eq!(auto.effective_threads(1, 64, 64), 1);
+        // Explicit count is honored but capped at one per word-column.
+        let two = Blocking { threads: 2, ..Blocking::default() };
+        assert_eq!(two.effective_threads(1, 64, 64), 2);
+        let many = Blocking { threads: 64, ..Blocking::default() };
+        assert_eq!(many.effective_threads(1, 64, 16), 2);
+        // Large problem in auto mode: at least one thread, never more
+        // than one per word-column.
+        let t = auto.effective_threads(256, 4096, 4096);
+        assert!(t >= 1 && t <= 4096 / 8);
+    }
+
+    #[test]
+    fn scratch_sizing() {
+        let b = Blocking { kc: 32, nc_words: 2, ..Blocking::default() };
+        assert_eq!(b.scratch_len(), 32 * 16);
+    }
+}

@@ -1,0 +1,199 @@
+//! `gemm_quick_fused` — the fused dequant-GEMM path that consumes the
+//! QUICK interleaved stream directly.
+//!
+//! Per (M-block, K-block, word-column): load the contiguous 16-word runs
+//! the offline interleave laid down for that column's fragments, decode
+//! them in-register into a `kc x 8` fragment panel **already in
+//! microkernel tile order** (no runtime permutation — `FT_ORDER` was
+//! applied offline by the dequant-aware reorder, the tile transpose by
+//! the fragment interleave), then run the shared `4 x 8` microkernel
+//! across the M-block with the panel as the weight operand. The panel is
+//! the CPU stand-in for the paper's register-file fragments: 8 KiB,
+//! L1-resident, written linearly, consumed immediately — against the
+//! write-back path's 16x-larger scratch tile with its runtime FT-order
+//! scatter (the shared-memory staging QUICK deletes, §3.1). Decode
+//! multiplicity (once per M-block pass), blocking, threading, and the
+//! microkernel are identical across the two paths, so the measured gap
+//! isolates the staging round-trip.
+
+use anyhow::Result;
+
+use crate::quant::decode::{decode_quick_run_into, quick_run_offset, TILE_COLS, TILE_ROWS};
+use crate::quant::{pack_quick, QuantizedTensor, PACK_FACTOR};
+
+use super::blocking::Blocking;
+use super::microkernel::fma_tile8;
+use super::partition;
+
+/// A weight matrix packed into the full QUICK layout (interleaved stream
+/// + group metadata), ready for [`gemm_quick_fused`].
+#[derive(Debug, Clone)]
+pub struct QuickWeights {
+    /// The `pack_quick` interleaved word stream (1-D DRAM order).
+    pub stream: Vec<u32>,
+    /// Per-group scales, row-major `(k / group_size, n)`.
+    pub scales: Vec<f32>,
+    /// Per-group zero-points, same shape as scales.
+    pub zeros: Vec<f32>,
+    /// In-features (reduction axis).
+    pub k: usize,
+    /// Out-features.
+    pub n: usize,
+    /// Quantization group length along K.
+    pub group_size: usize,
+}
+
+impl QuickWeights {
+    /// Pack a logical quantized tensor into the QUICK layout.
+    ///
+    /// # Panics
+    ///
+    /// Panics on the `pack_quick` shape contract (`k % 16`, `n % 8`).
+    pub fn from_quantized(t: &QuantizedTensor) -> Self {
+        QuickWeights {
+            stream: pack_quick(&t.codes, t.k, t.n),
+            scales: t.scales.clone(),
+            zeros: t.zeros.clone(),
+            k: t.k,
+            n: t.n,
+            group_size: t.group_size,
+        }
+    }
+}
+
+/// `y(m, n) = x(m, k) @ w(k, n)` with `w` consumed directly from the
+/// interleaved QUICK stream; `y` is overwritten.
+///
+/// Errors on shape violations (`x`/`y` length, blocking contract).
+pub fn gemm_quick_fused(
+    x: &[f32],
+    m: usize,
+    w: &QuickWeights,
+    b: &Blocking,
+    y: &mut [f32],
+) -> Result<()> {
+    b.validate(w.k, w.n)?;
+    anyhow::ensure!(m > 0, "M must be > 0");
+    anyhow::ensure!(x.len() == m * w.k, "x holds {} values, needs {}", x.len(), m * w.k);
+    anyhow::ensure!(y.len() == m * w.n, "y holds {} values, needs {}", y.len(), m * w.n);
+    y.fill(0.0);
+    let threads = b.effective_threads(m, w.k, w.n);
+    partition::gemm_over_columns(m, w.n, threads, y, &|wr, out: &mut [f32], ldy, out_c0| {
+        let w_total = w.n / PACK_FACTOR;
+        // The K-strip fragment panel: kc x 8 f32 (8 KiB at the default
+        // blocking), reused for every (M-block, K-block, word-column).
+        // This is the register-file analogue — written linearly by the
+        // sequential decode, still L1-hot when the microkernel reads it.
+        let mut panel = vec![0f32; b.kc * TILE_COLS];
+        let mut m0 = 0;
+        while m0 < m {
+            let m1 = (m0 + b.mc).min(m);
+            let mut kb0 = 0;
+            while kb0 < w.k {
+                let kc_len = b.kc.min(w.k - kb0);
+                for wj in wr.clone() {
+                    for kt_rel in 0..kc_len / TILE_ROWS {
+                        let row0 = kb0 + kt_rel * TILE_ROWS;
+                        let off = quick_run_offset(row0 / TILE_ROWS, wj, w_total);
+                        decode_quick_run_into(
+                            &w.stream[off..off + TILE_ROWS],
+                            row0,
+                            wj * PACK_FACTOR,
+                            &w.scales,
+                            &w.zeros,
+                            w.n,
+                            w.group_size,
+                            &mut panel[kt_rel * TILE_ROWS * TILE_COLS..],
+                        );
+                    }
+                    fma_tile8(
+                        x,
+                        w.k,
+                        m0,
+                        m1,
+                        kb0,
+                        kc_len,
+                        &panel,
+                        TILE_COLS,
+                        out,
+                        ldy,
+                        wj * PACK_FACTOR - out_c0,
+                    );
+                }
+                kb0 += kc_len;
+            }
+            m0 = m1;
+        }
+    });
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::{max_rel_err, KernelBackend, NaiveBackend};
+    use crate::quant::quantize_groupwise;
+    use crate::util::Rng;
+
+    fn rand_case(k: usize, n: usize, g: usize, m: usize, seed: u64) -> (Vec<f32>, QuantizedTensor) {
+        let mut rng = Rng::seed_from_u64(seed);
+        let w: Vec<f32> = (0..k * n).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect();
+        let t = quantize_groupwise(&w, k, n, g);
+        let x: Vec<f32> = (0..m * k).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect();
+        (x, t)
+    }
+
+    #[test]
+    fn matches_naive_on_nonsquare_shapes() {
+        for (k, n, g, m) in [(64, 24, 32, 1), (128, 40, 64, 9), (96, 64, 32, 5)] {
+            let (x, t) = rand_case(k, n, g, m, 42 + m as u64);
+            let naive = NaiveBackend::from_quantized(&t);
+            let mut want = vec![0f32; m * n];
+            naive.gemm(&x, m, &mut want);
+            let w = QuickWeights::from_quantized(&t);
+            let mut got = vec![f32::NAN; m * n];
+            gemm_quick_fused(&x, m, &w, &Blocking::default(), &mut got).unwrap();
+            let err = max_rel_err(&got, &want);
+            assert!(err <= 1e-4, "k={k} n={n} g={g} m={m}: rel err {err}");
+        }
+    }
+
+    #[test]
+    fn partial_blocks_and_tiny_blocking_agree() {
+        // kc/mc/nc smaller than the shape forces every partial-block edge.
+        let (k, n, g, m) = (80, 48, 16, 11);
+        let (x, t) = rand_case(k, n, g, m, 7);
+        let naive = NaiveBackend::from_quantized(&t);
+        let mut want = vec![0f32; m * n];
+        naive.gemm(&x, m, &mut want);
+        let w = QuickWeights::from_quantized(&t);
+        let tiny = Blocking { mc: 3, kc: 32, nc_words: 1, threads: 1 };
+        let mut got = vec![0f32; m * n];
+        gemm_quick_fused(&x, m, &w, &tiny, &mut got).unwrap();
+        assert!(max_rel_err(&got, &want) <= 1e-4);
+    }
+
+    #[test]
+    fn multithreaded_equals_single() {
+        let (k, n, g, m) = (64, 80, 32, 6);
+        let (x, t) = rand_case(k, n, g, m, 99);
+        let w = QuickWeights::from_quantized(&t);
+        let mut single = vec![0f32; m * n];
+        gemm_quick_fused(&x, m, &w, &Blocking { threads: 1, ..Blocking::default() }, &mut single)
+            .unwrap();
+        let mut multi = vec![0f32; m * n];
+        gemm_quick_fused(&x, m, &w, &Blocking { threads: 3, ..Blocking::default() }, &mut multi)
+            .unwrap();
+        assert_eq!(single, multi, "column partition must not change results");
+    }
+
+    #[test]
+    fn rejects_bad_buffers() {
+        let (_, t) = rand_case(32, 16, 32, 1, 1);
+        let w = QuickWeights::from_quantized(&t);
+        let b = Blocking::default();
+        assert!(gemm_quick_fused(&[0.0; 31], 1, &w, &b, &mut [0.0; 16]).is_err());
+        assert!(gemm_quick_fused(&[0.0; 32], 1, &w, &b, &mut [0.0; 15]).is_err());
+        assert!(gemm_quick_fused(&[], 0, &w, &b, &mut []).is_err());
+    }
+}

@@ -1,0 +1,139 @@
+//! The register-tiled `4 x 8` FMA microkernel both native GEMM paths
+//! share.
+//!
+//! One invocation accumulates `y[r, col0..col0+8] += x[r, kk0..kk0+len] @
+//! tile` for `r` in an M-strip, reading dequantized weights from `tile`
+//! (a `len x 8` panel with arbitrary row stride). The fused path hands it
+//! a 16x8 fragment decoded moments earlier and still L1-hot — the CPU
+//! analogue of MMA fragments fed straight from registers; the write-back
+//! path hands it a slice of its large scratch tile, paying the
+//! memory round-trip the paper's baseline kernel pays through shared
+//! memory. Identical inner loop either way, so the measured gap is the
+//! operand's journey, not the arithmetic.
+
+/// Rows per register strip (`MR`): 4 rows x 8 columns of f32 accumulators
+/// stay in registers across the whole reduction.
+pub const MR: usize = 4;
+
+/// Columns per microkernel tile (`NR`): the 8 logical columns of one
+/// packed word.
+pub const NR: usize = 8;
+
+/// Accumulate `y[m0..m1, col0..col0+8] += x[m0..m1, kk0..kk0+len] @ tile`.
+///
+/// * `x` — activations, row-major `(m, k)` with row stride `k`.
+/// * `tile` — dequantized weight panel: `len` rows x 8 columns, row
+///   stride `tile_stride` (8 for the fused fragment, panel width for the
+///   write-back scratch).
+/// * `y` — output, row stride `ldy`, columns starting at `col0`.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn fma_tile8(
+    x: &[f32],
+    k: usize,
+    m0: usize,
+    m1: usize,
+    kk0: usize,
+    len: usize,
+    tile: &[f32],
+    tile_stride: usize,
+    y: &mut [f32],
+    ldy: usize,
+    col0: usize,
+) {
+    debug_assert!(tile_stride >= NR && tile.len() >= (len - 1) * tile_stride + NR);
+    let mut r = m0;
+    while r + MR <= m1 {
+        let mut acc = [[0f32; NR]; MR];
+        for kk in 0..len {
+            let trow = &tile[kk * tile_stride..kk * tile_stride + NR];
+            for (i, a) in acc.iter_mut().enumerate() {
+                let xv = x[(r + i) * k + kk0 + kk];
+                for (ap, &tv) in a.iter_mut().zip(trow) {
+                    *ap += xv * tv;
+                }
+            }
+        }
+        for (i, a) in acc.iter().enumerate() {
+            let yrow = &mut y[(r + i) * ldy + col0..(r + i) * ldy + col0 + NR];
+            for (yp, &av) in yrow.iter_mut().zip(a) {
+                *yp += av;
+            }
+        }
+        r += MR;
+    }
+    // Remainder strip (m1 - r < MR rows).
+    while r < m1 {
+        let mut acc = [0f32; NR];
+        for kk in 0..len {
+            let xv = x[r * k + kk0 + kk];
+            let trow = &tile[kk * tile_stride..kk * tile_stride + NR];
+            for (ap, &tv) in acc.iter_mut().zip(trow) {
+                *ap += xv * tv;
+            }
+        }
+        let yrow = &mut y[r * ldy + col0..r * ldy + col0 + NR];
+        for (yp, &av) in yrow.iter_mut().zip(&acc) {
+            *yp += av;
+        }
+        r += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn reference(
+        x: &[f32],
+        k: usize,
+        m: usize,
+        tile: &[f32],
+        stride: usize,
+        len: usize,
+    ) -> Vec<f32> {
+        let mut y = vec![0f32; m * NR];
+        for r in 0..m {
+            for kk in 0..len {
+                for p in 0..NR {
+                    y[r * NR + p] += x[r * k + kk] * tile[kk * stride + p];
+                }
+            }
+        }
+        y
+    }
+
+    #[test]
+    fn matches_reference_including_remainder_rows() {
+        // m = 7 exercises one full MR strip plus a 3-row remainder.
+        let (m, k, len) = (7usize, 24usize, 24usize);
+        let x: Vec<f32> = (0..m * k).map(|i| (i % 13) as f32 * 0.25 - 1.0).collect();
+        let tile: Vec<f32> = (0..len * NR).map(|i| (i % 7) as f32 * 0.5 - 1.5).collect();
+        let mut y = vec![0f32; m * NR];
+        fma_tile8(&x, k, 0, m, 0, len, &tile, NR, &mut y, NR, 0);
+        assert_eq!(y, reference(&x, k, m, &tile, NR, len));
+    }
+
+    #[test]
+    fn strided_tile_and_offset_output() {
+        // Tile embedded in a wider panel (stride 24), output written into
+        // a wider y at col0 = 8, rows 2..5 only, reduction offset kk0 = 8.
+        let (k, len, stride, ldy) = (32usize, 16usize, 24usize, 32usize);
+        let x: Vec<f32> = (0..6 * k).map(|i| ((i * 5) % 11) as f32 - 5.0).collect();
+        let panel: Vec<f32> = (0..len * stride).map(|i| ((i * 3) % 17) as f32 * 0.125).collect();
+        let mut y = vec![1.0f32; 6 * ldy]; // pre-filled: microkernel accumulates
+        fma_tile8(&x, k, 2, 5, 8, len, &panel, stride, &mut y, ldy, 8);
+        for r in 0..6 {
+            for c in 0..ldy {
+                let mut want = 1.0f32;
+                if (2..5).contains(&r) && (8..16).contains(&c) {
+                    for kk in 0..len {
+                        want += x[r * k + 8 + kk] * panel[kk * stride + (c - 8)];
+                    }
+                }
+                let got = y[r * ldy + c];
+                let tol = 1e-4 * want.abs().max(1.0);
+                assert!((got - want).abs() <= tol, "r={r} c={c}: {got} vs {want}");
+            }
+        }
+    }
+}

@@ -1,0 +1,122 @@
+//! Thread-pool partitioner for the native GEMM backends.
+//!
+//! Work is split along the *word-column* axis (8 logical N columns per
+//! word), mirroring how the interleaved stream is naturally strided: each
+//! worker owns a contiguous range of word-columns, so it reads disjoint
+//! stream/word regions and produces disjoint output columns. Workers
+//! accumulate into private column-panel buffers which the caller's thread
+//! scatters back into the row-major output after the join — an `O(m*n)`
+//! copy that is negligible against the `O(m*n*k)` GEMM and keeps the whole
+//! path safe Rust (no shared mutable output).
+
+use std::ops::Range;
+
+use crate::quant::PACK_FACTOR;
+
+/// Split `total` items into at most `parts` contiguous ranges of
+/// near-equal size (larger ranges first; no empty ranges).
+pub(crate) fn split_ranges(total: usize, parts: usize) -> Vec<Range<usize>> {
+    let parts = parts.clamp(1, total.max(1));
+    let (base, extra) = (total / parts, total % parts);
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0;
+    for i in 0..parts {
+        let len = base + usize::from(i < extra);
+        if len == 0 {
+            break;
+        }
+        out.push(start..start + len);
+        start += len;
+    }
+    out
+}
+
+/// Run `work` over the `n / 8` word-columns of an `m x n` GEMM output,
+/// split across `threads` workers.
+///
+/// `work(wr, out, ldy, out_col0)` must accumulate the output columns
+/// `wr.start*8 .. wr.end*8` into `out`, where element `(row, col)` lives
+/// at `out[row * ldy + (col - out_col0)]`. Single-threaded calls receive
+/// `y` itself (`ldy = n`, `out_col0 = 0`); workers receive a private
+/// zeroed panel that is scattered into `y` after the join.
+pub(crate) fn gemm_over_columns(
+    m: usize,
+    n: usize,
+    threads: usize,
+    y: &mut [f32],
+    work: &(impl Fn(Range<usize>, &mut [f32], usize, usize) + Sync),
+) {
+    let w_total = n / PACK_FACTOR;
+    let parts = split_ranges(w_total, threads);
+    if parts.len() <= 1 {
+        work(0..w_total, y, n, 0);
+        return;
+    }
+    let panels: Vec<(Range<usize>, Vec<f32>)> = std::thread::scope(|s| {
+        let handles: Vec<_> = parts
+            .into_iter()
+            .map(|wr| {
+                s.spawn(move || {
+                    let cols = (wr.end - wr.start) * PACK_FACTOR;
+                    let mut panel = vec![0f32; m * cols];
+                    work(wr.clone(), &mut panel, cols, wr.start * PACK_FACTOR);
+                    (wr, panel)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("kernel worker panicked")).collect()
+    });
+    for (wr, panel) in panels {
+        let (c0, cols) = (wr.start * PACK_FACTOR, (wr.end - wr.start) * PACK_FACTOR);
+        for row in 0..m {
+            y[row * n + c0..row * n + c0 + cols]
+                .copy_from_slice(&panel[row * cols..(row + 1) * cols]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_covers_disjointly() {
+        for (total, parts) in [(7usize, 3usize), (8, 2), (3, 8), (1, 1), (16, 5)] {
+            let ranges = split_ranges(total, parts);
+            assert!(ranges.len() <= parts && !ranges.iter().any(|r| r.is_empty()));
+            let mut covered = 0;
+            for r in &ranges {
+                assert_eq!(r.start, covered, "contiguous");
+                covered = r.end;
+            }
+            assert_eq!(covered, total);
+        }
+    }
+
+    fn fill_by_column(wr: Range<usize>, out: &mut [f32], ldy: usize, c0: usize, m: usize) {
+        for row in 0..m {
+            for wj in wr.clone() {
+                for p in 0..PACK_FACTOR {
+                    let col = wj * PACK_FACTOR + p;
+                    out[row * ldy + (col - c0)] += (row * 1000 + col) as f32;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn partitioned_run_equals_single_thread() {
+        let (m, n) = (5usize, 48usize);
+        let mut single = vec![0f32; m * n];
+        gemm_over_columns(m, n, 1, &mut single, &|wr, out: &mut [f32], ldy, c0| {
+            fill_by_column(wr, out, ldy, c0, m)
+        });
+        for threads in [2usize, 3, 16] {
+            let mut multi = vec![0f32; m * n];
+            gemm_over_columns(m, n, threads, &mut multi, &|wr, out: &mut [f32], ldy, c0| {
+                fill_by_column(wr, out, ldy, c0, m)
+            });
+            assert_eq!(multi, single, "threads={threads}");
+        }
+    }
+}

@@ -1,0 +1,193 @@
+//! `gemm_awq_writeback` — the baseline path that dequantizes each K-tile
+//! into an f32 scratch buffer before a dense GEMM pass.
+//!
+//! This is the AutoAWQ structure the paper's Figure 2 describes, mapped
+//! to CPU: per (M-block, N-panel, K-block) the kernel first *writes back*
+//! the whole dequantized `kc x nc` weight tile to a scratch buffer (the
+//! stand-in for the shared-memory staging tile), unscrambling the FT
+//! nibble order at runtime as stock AWQ must, and only then runs the same
+//! `4 x 8` microkernel the fused path uses — now reading operands through
+//! the scratch round-trip instead of from a just-decoded L1-hot fragment.
+//! Blocking, threading, and the inner loop are shared with
+//! [`super::gemm_quick_fused`], so the measured gap between the two paths
+//! isolates exactly the write-back the interleaved layout deletes.
+
+use anyhow::Result;
+
+use crate::quant::decode::decode_awq_word_into;
+use crate::quant::{pack_awq, QuantizedTensor, PACK_FACTOR};
+
+use super::blocking::Blocking;
+use super::microkernel::fma_tile8;
+use super::partition;
+
+/// A weight matrix in the stock AutoAWQ layout (row-major `(k, n/8)` words
+/// in FT nibble order + group metadata), ready for [`gemm_awq_writeback`].
+#[derive(Debug, Clone)]
+pub struct AwqWeights {
+    /// Packed words, row-major `(k, n/8)`, FT nibble order.
+    pub qweight: Vec<u32>,
+    /// Per-group scales, row-major `(k / group_size, n)`.
+    pub scales: Vec<f32>,
+    /// Per-group zero-points, same shape as scales.
+    pub zeros: Vec<f32>,
+    /// In-features (reduction axis).
+    pub k: usize,
+    /// Out-features.
+    pub n: usize,
+    /// Quantization group length along K.
+    pub group_size: usize,
+}
+
+impl AwqWeights {
+    /// Pack a logical quantized tensor into the stock AWQ layout.
+    ///
+    /// # Panics
+    ///
+    /// Panics on the `pack_awq` shape contract (`n % 8`).
+    pub fn from_quantized(t: &QuantizedTensor) -> Self {
+        AwqWeights {
+            qweight: pack_awq(&t.codes, t.k, t.n),
+            scales: t.scales.clone(),
+            zeros: t.zeros.clone(),
+            k: t.k,
+            n: t.n,
+            group_size: t.group_size,
+        }
+    }
+}
+
+/// `y(m, n) = x(m, k) @ w(k, n)` with `w` dequantized tile-by-tile into a
+/// scratch buffer before the dense GEMM pass; `y` is overwritten.
+///
+/// Errors on shape violations (`x`/`y` length, blocking contract).
+pub fn gemm_awq_writeback(
+    x: &[f32],
+    m: usize,
+    w: &AwqWeights,
+    b: &Blocking,
+    y: &mut [f32],
+) -> Result<()> {
+    b.validate(w.k, w.n)?;
+    anyhow::ensure!(m > 0, "M must be > 0");
+    anyhow::ensure!(x.len() == m * w.k, "x holds {} values, needs {}", x.len(), m * w.k);
+    anyhow::ensure!(y.len() == m * w.n, "y holds {} values, needs {}", y.len(), m * w.n);
+    y.fill(0.0);
+    let threads = b.effective_threads(m, w.k, w.n);
+    partition::gemm_over_columns(m, w.n, threads, y, &|wr, out: &mut [f32], ldy, out_c0| {
+        let w_total = w.n / PACK_FACTOR;
+        // One scratch tile per worker, allocated once and refilled in
+        // place for every (M-block, N-panel, K-block) — the write-back
+        // the fused path never performs.
+        let mut scratch = vec![0f32; b.scratch_len()];
+        let mut m0 = 0;
+        while m0 < m {
+            let m1 = (m0 + b.mc).min(m);
+            let mut nb0 = wr.start;
+            while nb0 < wr.end {
+                let nb1 = (nb0 + b.nc_words).min(wr.end);
+                let ncols = (nb1 - nb0) * PACK_FACTOR;
+                let mut kb0 = 0;
+                while kb0 < w.k {
+                    let kc_len = b.kc.min(w.k - kb0);
+                    // Write-back pass: dequantize the whole kc x nc tile
+                    // to scratch, unscrambling FT order word by word.
+                    for kk in 0..kc_len {
+                        let row = kb0 + kk;
+                        let gbase = (row / w.group_size) * w.n;
+                        for wj in nb0..nb1 {
+                            let c0 = wj * PACK_FACTOR;
+                            decode_awq_word_into(
+                                w.qweight[row * w_total + wj],
+                                &w.scales[gbase + c0..gbase + c0 + PACK_FACTOR],
+                                &w.zeros[gbase + c0..gbase + c0 + PACK_FACTOR],
+                                &mut scratch[kk * ncols + (wj - nb0) * PACK_FACTOR..],
+                            );
+                        }
+                    }
+                    // Dense GEMM pass over the staged tile.
+                    for wj in nb0..nb1 {
+                        fma_tile8(
+                            x,
+                            w.k,
+                            m0,
+                            m1,
+                            kb0,
+                            kc_len,
+                            &scratch[(wj - nb0) * PACK_FACTOR..],
+                            ncols,
+                            out,
+                            ldy,
+                            wj * PACK_FACTOR - out_c0,
+                        );
+                    }
+                    kb0 += kc_len;
+                }
+                nb0 = nb1;
+            }
+            m0 = m1;
+        }
+    });
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::{max_rel_err, KernelBackend, NaiveBackend};
+    use crate::quant::quantize_groupwise;
+    use crate::util::Rng;
+
+    fn rand_case(k: usize, n: usize, g: usize, m: usize, seed: u64) -> (Vec<f32>, QuantizedTensor) {
+        let mut rng = Rng::seed_from_u64(seed);
+        let w: Vec<f32> = (0..k * n).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect();
+        let t = quantize_groupwise(&w, k, n, g);
+        let x: Vec<f32> = (0..m * k).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect();
+        (x, t)
+    }
+
+    #[test]
+    fn matches_naive_on_nonsquare_shapes() {
+        for (k, n, g, m) in [(64, 24, 32, 1), (128, 40, 64, 9), (96, 64, 32, 5)] {
+            let (x, t) = rand_case(k, n, g, m, 1000 + m as u64);
+            let naive = NaiveBackend::from_quantized(&t);
+            let mut want = vec![0f32; m * n];
+            naive.gemm(&x, m, &mut want);
+            let w = AwqWeights::from_quantized(&t);
+            let mut got = vec![f32::NAN; m * n];
+            gemm_awq_writeback(&x, m, &w, &Blocking::default(), &mut got).unwrap();
+            let err = max_rel_err(&got, &want);
+            assert!(err <= 1e-4, "k={k} n={n} g={g} m={m}: rel err {err}");
+        }
+    }
+
+    #[test]
+    fn partial_panels_and_tiny_blocking_agree() {
+        // nc_words = 2 with 6 word-columns leaves a partial N-panel; kc
+        // smaller than K leaves partial K-blocks; mc = 3 strips M oddly.
+        let (k, n, g, m) = (80, 48, 16, 11);
+        let (x, t) = rand_case(k, n, g, m, 8);
+        let naive = NaiveBackend::from_quantized(&t);
+        let mut want = vec![0f32; m * n];
+        naive.gemm(&x, m, &mut want);
+        let w = AwqWeights::from_quantized(&t);
+        let tiny = Blocking { mc: 3, kc: 32, nc_words: 2, threads: 1 };
+        let mut got = vec![0f32; m * n];
+        gemm_awq_writeback(&x, m, &w, &tiny, &mut got).unwrap();
+        assert!(max_rel_err(&got, &want) <= 1e-4);
+    }
+
+    #[test]
+    fn multithreaded_equals_single() {
+        let (k, n, g, m) = (64, 80, 32, 6);
+        let (x, t) = rand_case(k, n, g, m, 12);
+        let w = AwqWeights::from_quantized(&t);
+        let mut single = vec![0f32; m * n];
+        gemm_awq_writeback(&x, m, &w, &Blocking { threads: 1, ..Blocking::default() }, &mut single)
+            .unwrap();
+        let mut multi = vec![0f32; m * n];
+        gemm_awq_writeback(&x, m, &w, &Blocking { threads: 3, ..Blocking::default() }, &mut multi)
+            .unwrap();
+        assert_eq!(single, multi);
+    }
+}

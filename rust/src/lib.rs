@@ -11,6 +11,11 @@
 //!   `python/compile/kernels/pack.py`. [`quant::shard`] draws
 //!   tensor-parallel shard boundaries in logical `(k, n)` space and packs
 //!   each shard independently (the interleaved stream cannot be sliced).
+//! * [`kernel`] — the *native* W4A16 dequant-GEMM backend pair: a fused
+//!   cache-blocked, register-tiled, multithreaded microkernel that decodes
+//!   nibbles in-register straight out of the interleaved stream, vs the
+//!   AWQ-style dequant-to-scratch-then-GEMM baseline — the paper's
+//!   mechanism executing in measurable silicon (`bench kernels`).
 //! * [`gpusim`] — cycle-approximate GPU kernel execution model: shared-memory
 //!   bank-conflict counting, occupancy, DRAM traffic, and tile schedules for
 //!   the fp16 / AWQ / QUICK kernels, plus the ring-collective cost model
@@ -44,6 +49,7 @@
 
 pub mod coordinator;
 pub mod gpusim;
+pub mod kernel;
 pub mod model;
 pub mod quant;
 pub mod runtime;

@@ -4,8 +4,11 @@
 //! * `serve`    — run the PJRT-backed engine over a synthetic workload on
 //!   the AOT-compiled tiny model and print serving metrics.
 //! * `simulate` — regenerate a paper experiment or serving extension
-//!   (fig3 | fig7 | fig8 | table1 | prefix | continuous | tp | all) from
-//!   the gpusim cost model and print paper-style rows.
+//!   (fig3 | fig7 | fig8 | table1 | prefix | continuous | tp |
+//!   kernel-matmul | all) from the gpusim cost model (kernel-matmul:
+//!   measured on this CPU) and print paper-style rows.
+//! * `bench`    — measured native-kernel benchmarks with structured JSON
+//!   trajectory output (`bench kernels` → `BENCH_kernels.json`).
 //! * `profile`  — one-GEMM kernel-model breakdown on a chosen device.
 //! * `loadtest` — online latency percentiles vs offered load.
 //! * `generate` — end-to-end text generation on the tiny model.
@@ -24,7 +27,11 @@ use quick_infer::workload;
 
 /// Valid `simulate` targets, listed by the unknown-target error (keep in
 /// sync with the USAGE block and the dispatch match below).
-const SIMULATE_TARGETS: &str = "fig3|fig7|fig8|table1|prefix|continuous|tp|all";
+const SIMULATE_TARGETS: &str = "fig3|fig7|fig8|table1|prefix|continuous|tp|kernel-matmul|all";
+
+/// Valid `bench` targets, listed by the unknown-target error (keep in
+/// sync with the USAGE block and the dispatch match below).
+const BENCH_TARGETS: &str = "kernels";
 
 const USAGE: &str = "\
 quick-infer — QUICK (2024) reproduction: conflict-free W4A16 inference stack
@@ -35,7 +42,7 @@ USAGE:
         Serve a synthetic workload on the AOT-compiled tiny model via PJRT.
         Defaults: --artifacts artifacts, --kernel quick, --requests 32, --seed 0.
 
-    quick-infer simulate [fig3|fig7|fig8|table1|prefix|continuous|tp|all]
+    quick-infer simulate [fig3|fig7|fig8|table1|prefix|continuous|tp|kernel-matmul|all]
         Regenerate one experiment from the gpusim cost model (default: all).
           fig3        smem bank conflicts per kernel
           fig7        GEMM TOPS vs batch on all four devices
@@ -44,6 +51,21 @@ USAGE:
           prefix      automatic prefix cache on/off (extension)
           continuous  continuous batching vs static waves (extension)
           tp          tensor-parallel scaling sweep, tp 1|2|4|8 (extension)
+          kernel-matmul  *measured* native fused vs write-back W4A16 GEMM
+                      M-sweep on this CPU, 1024x1024 g128 (not part of
+                      'all': host-dependent wall time, not a model query)
+
+    quick-infer bench    [kernels] [--k K] [--n N] [--group-size G]
+                         [--json PATH] [--quick]
+        Run a measured native-kernel benchmark and append a structured
+        JSON point to the perf trajectory (default target: kernels).
+          kernels     fused-from-interleaved vs dequant-to-scratch GEMM,
+                      M in {1, 8, 32, 128, 256}; exits non-zero if either
+                      path diverges from the naive reference (>1e-4 rel).
+        Defaults: --k 4096, --n 4096, --group-size 128, --json writes
+        BENCH_kernels.json at the repo root (nearest ancestor with
+        ROADMAP.md/.git, else the cwd). --quick shrinks the layer to
+        512x512 and the sample count for CI smoke runs.
 
     quick-infer profile  [--gpu 4090|a6000|l40|a100] [--m M] [--n N] [--k K]
         Per-kernel latency/TOPS breakdown of one GEMM.
@@ -73,6 +95,9 @@ struct Args {
     flags: std::collections::HashMap<String, String>,
 }
 
+/// Flags that take no value (presence means `true`).
+const BOOL_FLAGS: [&str; 1] = ["quick"];
+
 impl Args {
     fn parse(argv: &[String]) -> Result<Args> {
         let mut positional = Vec::new();
@@ -81,6 +106,11 @@ impl Args {
         while i < argv.len() {
             let a = &argv[i];
             if let Some(key) = a.strip_prefix("--") {
+                if BOOL_FLAGS.contains(&key) {
+                    flags.insert(key.to_string(), "true".to_string());
+                    i += 1;
+                    continue;
+                }
                 let val = argv
                     .get(i + 1)
                     .ok_or_else(|| anyhow::anyhow!("flag --{key} needs a value"))?;
@@ -123,6 +153,10 @@ fn main() -> Result<()> {
             args.get_num("seed", 0u64)?,
         ),
         "simulate" => simulate(args.positional.first().map(String::as_str).unwrap_or("all")),
+        "bench" => bench_cmd(
+            args.positional.first().map(String::as_str).unwrap_or("kernels"),
+            &args,
+        ),
         "quantize" => quantize_demo(
             args.get_num("k", 256usize)?,
             args.get_num("n", 256usize)?,
@@ -208,6 +242,9 @@ fn simulate(which: &str) -> Result<()> {
         "tp" => {
             figures::tensor_parallel(out)?;
         }
+        "kernel-matmul" => {
+            figures::kernel_matmul(out)?;
+        }
         "all" => {
             figures::fig3(out)?;
             figures::fig7(out)?;
@@ -221,6 +258,112 @@ fn simulate(which: &str) -> Result<()> {
             bail!("unknown experiment '{other}' — valid targets: {SIMULATE_TARGETS}")
         }
     }
+    Ok(())
+}
+
+/// Dispatch `quick-infer bench <target>`; unknown targets list the valid
+/// ones (the same discoverability contract `simulate <unknown>` has).
+fn bench_cmd(target: &str, args: &Args) -> Result<()> {
+    match target {
+        "kernels" => bench_kernels(
+            args.get_num("k", 4096usize)?,
+            args.get_num("n", 4096usize)?,
+            args.get_num("group-size", 128usize)?,
+            args.flags.get("json").map(String::as_str),
+            args.flags.contains_key("quick"),
+        ),
+        other => bail!("unknown bench target '{other}' — valid targets: {BENCH_TARGETS}"),
+    }
+}
+
+/// Default output path for a bench trajectory file: the nearest ancestor
+/// directory holding ROADMAP.md or .git (the repo root), else the cwd.
+fn bench_trajectory_path(name: &str) -> std::path::PathBuf {
+    let mut dir = match std::env::current_dir() {
+        Ok(d) => d,
+        Err(_) => return std::path::PathBuf::from(name),
+    };
+    loop {
+        if dir.join("ROADMAP.md").exists() || dir.join(".git").exists() {
+            return dir.join(name);
+        }
+        if !dir.pop() {
+            return std::path::PathBuf::from(name);
+        }
+    }
+}
+
+/// `bench kernels`: measured fused vs write-back M-sweep + differential
+/// gate + gpusim calibration, emitted as one structured JSON point.
+fn bench_kernels(
+    k: usize,
+    n: usize,
+    group_size: usize,
+    json: Option<&str>,
+    quick: bool,
+) -> Result<()> {
+    use quick_infer::util::{Bench, Json};
+    let (k, n, bench) = if quick {
+        (512.min(k), 512.min(n), Bench::smoke())
+    } else {
+        (k, n, Bench::fast())
+    };
+    let report = figures::kernel_matmul_with(
+        &mut std::io::stdout(),
+        k,
+        n,
+        group_size,
+        &figures::KERNEL_MATMUL_BATCHES,
+        &bench,
+    )?;
+
+    let path = match json {
+        Some(p) => std::path::PathBuf::from(p),
+        None => bench_trajectory_path("BENCH_kernels.json"),
+    };
+    let mut shape = std::collections::BTreeMap::new();
+    shape.insert("k".to_string(), Json::Num(report.k as f64));
+    shape.insert("n".to_string(), Json::Num(report.n as f64));
+    shape.insert("group_size".to_string(), Json::Num(report.group_size as f64));
+    let rows = Json::Arr(
+        report
+            .rows
+            .iter()
+            .map(|r| {
+                let mut o = std::collections::BTreeMap::new();
+                o.insert("m".to_string(), Json::Num(r.m as f64));
+                o.insert("fused_gflops".to_string(), Json::Num(r.fused_gflops));
+                o.insert("writeback_gflops".to_string(), Json::Num(r.writeback_gflops));
+                o.insert("fused_over_writeback".to_string(), Json::Num(r.speedup()));
+                Json::Obj(o)
+            })
+            .collect(),
+    );
+    let mut gate = std::collections::BTreeMap::new();
+    gate.insert("fused_rel_err".to_string(), Json::Num(report.fused_rel_err));
+    gate.insert("writeback_rel_err".to_string(), Json::Num(report.writeback_rel_err));
+    gate.insert("tolerance".to_string(), Json::Num(1e-4));
+    bench.write_json(
+        &path,
+        &[
+            ("bench", Json::Str("kernels".to_string())),
+            ("quick", Json::Bool(quick)),
+            ("shape", Json::Obj(shape)),
+            ("rows", rows),
+            ("differential_gate", Json::Obj(gate)),
+            ("calibrated_writeback_scale", Json::Num(report.calibrated.writeback_scale)),
+        ],
+    )?;
+    println!("\nwrote {}", path.display());
+
+    // CI gate: structured output above, hard failure below — a diverging
+    // kernel must fail the job even though the artifact was written.
+    anyhow::ensure!(
+        report.within_tolerance(),
+        "kernel divergence: fused {:.2e} / write-back {:.2e} vs naive exceeds 1e-4",
+        report.fused_rel_err,
+        report.writeback_rel_err
+    );
     Ok(())
 }
 

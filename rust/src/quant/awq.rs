@@ -89,17 +89,42 @@ pub fn quantize_groupwise(w: &[f32], k: usize, n: usize, group_size: usize) -> Q
 
 /// Dequantize back to f32: `(q - z) * s` per group. Inverse of
 /// [`quantize_groupwise`] up to quantization error.
+///
+/// Allocates a fresh buffer per call; hot loops (the write-back kernel's
+/// scratch pass, the hotpath bench) should reuse one via
+/// [`dequantize_into`].
 pub fn dequantize(t: &QuantizedTensor) -> Vec<f32> {
     let mut out = vec![0f32; t.k * t.n];
+    dequantize_into(t, &mut out);
+    out
+}
+
+/// [`dequantize`] into a caller-provided `k * n` buffer, so per-call
+/// allocation stays out of hot loops.
+///
+/// # Panics
+///
+/// Panics unless `out.len() == t.k * t.n`.
+pub fn dequantize_into(t: &QuantizedTensor, out: &mut [f32]) {
+    assert_eq!(
+        out.len(),
+        t.k * t.n,
+        "dequantize_into: buffer holds {} values, shape ({}, {}) needs {}",
+        out.len(),
+        t.k,
+        t.n,
+        t.k * t.n
+    );
     for row in 0..t.k {
         let gi = row / t.group_size;
+        let srow = &t.scales[gi * t.n..(gi + 1) * t.n];
+        let zrow = &t.zeros[gi * t.n..(gi + 1) * t.n];
+        let crow = &t.codes[row * t.n..(row + 1) * t.n];
+        let orow = &mut out[row * t.n..(row + 1) * t.n];
         for col in 0..t.n {
-            let q = t.codes[row * t.n + col] as f32;
-            out[row * t.n + col] =
-                (q - t.zeros[gi * t.n + col]) * t.scales[gi * t.n + col];
+            orow[col] = (crow[col] as f32 - zrow[col]) * srow[col];
         }
     }
-    out
 }
 
 #[cfg(test)]
@@ -158,5 +183,25 @@ mod tests {
     #[should_panic(expected = "not divisible")]
     fn rejects_bad_group() {
         quantize_groupwise(&[0.0; 96], 12, 8, 8);
+    }
+
+    #[test]
+    fn dequantize_into_matches_allocating_variant() {
+        let (k, n, g) = (96, 24, 32);
+        let t = quantize_groupwise(&rand_w(k, n, 11), k, n, g);
+        let fresh = dequantize(&t);
+        let mut reused = vec![f32::NAN; k * n];
+        dequantize_into(&t, &mut reused);
+        assert_eq!(fresh, reused);
+        // The buffer really is reused: a second pass overwrites in place.
+        dequantize_into(&t, &mut reused);
+        assert_eq!(fresh, reused);
+    }
+
+    #[test]
+    #[should_panic(expected = "buffer holds")]
+    fn dequantize_into_rejects_wrong_size() {
+        let t = quantize_groupwise(&rand_w(32, 8, 1), 32, 8, 32);
+        dequantize_into(&t, &mut [0f32; 7]);
     }
 }

@@ -1,0 +1,184 @@
+//! Tile-order decode helpers for the native kernel backend
+//! ([`crate::kernel`]): in-register dequantization straight out of the
+//! packed word layouts.
+//!
+//! Two decoders, one per executable GEMM path:
+//!
+//! * [`decode_quick_run_into`] — consumes one 16-word run of the
+//!   [`super::pack_quick`] interleaved stream and emits a 16x8 f32
+//!   fragment **already in microkernel tile order** (k-major rows, the 8
+//!   logical columns of one word in slot order). Because the offline
+//!   interleave put the words in fragment-consumption order and the
+//!   dequant-aware nibble reorder put the nibbles in logical order, the
+//!   decode is a straight sequential scan: no gather, no runtime
+//!   permutation — the CPU analogue of the paper's direct DRAM→register
+//!   `ldmatrix`-free load (§3.2).
+//! * [`decode_awq_word_into`] — consumes one stock-AWQ word
+//!   ([`super::pack_awq`], FT nibble order) and *scatters* the 8 values
+//!   through [`FT_ORDER`] to recover logical column order — the runtime
+//!   unscramble the baseline kernel pays on every word, which the QUICK
+//!   layout moved offline.
+//!
+//! Both apply the per-group `(q - zero) * scale` affine inline, so the
+//! caller never materializes raw codes.
+
+use super::interleave::MMA_K;
+use super::pack::{FT_ORDER, PACK_FACTOR};
+
+/// Rows of one interleaved fragment run (the `mma.m16n8k16` K-tile).
+pub const TILE_ROWS: usize = MMA_K;
+/// Columns of one fragment run (logical columns per packed word).
+pub const TILE_COLS: usize = PACK_FACTOR;
+
+/// Word offset of the 16-word run for k-tile `kt`, word-column `wj` in a
+/// [`super::pack_quick`] stream with `w_total = n / 8` word-columns.
+///
+/// This is the closed form of the fragment interleave: run `(kt, wj)`
+/// occupies stream words `[(kt*w_total + wj)*16, ...+16)`.
+#[inline]
+pub fn quick_run_offset(kt: usize, wj: usize, w_total: usize) -> usize {
+    (kt * w_total + wj) * TILE_ROWS
+}
+
+/// Decode one interleaved 16-word run into a 16x8 row-major f32 fragment,
+/// applying per-group scales/zeros inline.
+///
+/// * `run` — the 16 stream words at [`quick_run_offset`]`(kt, wj, w_total)`.
+/// * `row0` — absolute K row of the tile's first row (`kt * 16`, offset by
+///   any K-blocking the caller applies).
+/// * `col0` — absolute N column of the fragment's first column (`wj * 8`).
+/// * `scales` / `zeros` — row-major `(k / group_size, n)` group metadata.
+///
+/// `frag[r * 8 + p]` receives the dequantized weight for logical element
+/// `(row0 + r, col0 + p)` — exactly the order the register-tiled
+/// microkernel consumes, so no permutation happens at runtime. `frag`
+/// must hold at least `16 * 8` values (callers stack several runs into
+/// one K-strip panel).
+#[inline]
+#[allow(clippy::too_many_arguments)]
+pub fn decode_quick_run_into(
+    run: &[u32],
+    row0: usize,
+    col0: usize,
+    scales: &[f32],
+    zeros: &[f32],
+    n: usize,
+    group_size: usize,
+    frag: &mut [f32],
+) {
+    debug_assert_eq!(run.len(), TILE_ROWS);
+    debug_assert!(frag.len() >= TILE_ROWS * TILE_COLS);
+    for (r, &word) in run.iter().enumerate() {
+        let gbase = ((row0 + r) / group_size) * n + col0;
+        let s = &scales[gbase..gbase + TILE_COLS];
+        let z = &zeros[gbase..gbase + TILE_COLS];
+        let out = &mut frag[r * TILE_COLS..(r + 1) * TILE_COLS];
+        for p in 0..TILE_COLS {
+            let q = ((word >> (4 * p)) & 0xF) as f32;
+            out[p] = (q - z[p]) * s[p];
+        }
+    }
+}
+
+/// Decode one stock-AWQ word (FT nibble order) into 8 dequantized f32s in
+/// *logical* column order, scattering through [`FT_ORDER`] — the runtime
+/// permutation the baseline write-back kernel pays per word.
+///
+/// `s8` / `z8` hold the group's scales/zeros for the word's 8 logical
+/// columns; `out` receives logical columns `8*wj .. 8*wj + 8`.
+#[inline]
+pub fn decode_awq_word_into(word: u32, s8: &[f32], z8: &[f32], out: &mut [f32]) {
+    debug_assert!(s8.len() >= TILE_COLS && z8.len() >= TILE_COLS && out.len() >= TILE_COLS);
+    for (p, &dst) in FT_ORDER.iter().enumerate() {
+        let q = ((word >> (4 * p)) & 0xF) as f32;
+        out[dst] = (q - z8[dst]) * s8[dst];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{dequantize, pack_awq, pack_quick, quantize_groupwise};
+
+    fn rand_w(k: usize, n: usize, seed: u64) -> Vec<f32> {
+        let mut s = seed.wrapping_mul(0x9E3779B97F4A7C15) | 1;
+        (0..k * n)
+            .map(|_| {
+                s ^= s << 13;
+                s ^= s >> 7;
+                s ^= s << 17;
+                ((s >> 11) as f64 / (1u64 << 53) as f64) as f32 * 2.0 - 1.0
+            })
+            .collect()
+    }
+
+    #[test]
+    fn quick_run_decodes_to_dequantized_tile() {
+        let (k, n, g) = (64, 32, 32);
+        let t = quantize_groupwise(&rand_w(k, n, 3), k, n, g);
+        let stream = pack_quick(&t.codes, k, n);
+        let reference = dequantize(&t);
+        let w_total = n / TILE_COLS;
+        let mut frag = [0f32; TILE_ROWS * TILE_COLS];
+        for kt in 0..k / TILE_ROWS {
+            for wj in 0..w_total {
+                let off = quick_run_offset(kt, wj, w_total);
+                decode_quick_run_into(
+                    &stream[off..off + TILE_ROWS],
+                    kt * TILE_ROWS,
+                    wj * TILE_COLS,
+                    &t.scales,
+                    &t.zeros,
+                    n,
+                    g,
+                    &mut frag,
+                );
+                for r in 0..TILE_ROWS {
+                    for p in 0..TILE_COLS {
+                        let want = reference[(kt * TILE_ROWS + r) * n + wj * TILE_COLS + p];
+                        assert_eq!(frag[r * TILE_COLS + p], want, "kt={kt} wj={wj} r={r} p={p}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn awq_word_decodes_to_logical_order() {
+        let (k, n, g) = (32, 16, 16);
+        let t = quantize_groupwise(&rand_w(k, n, 9), k, n, g);
+        let words = pack_awq(&t.codes, k, n);
+        let reference = dequantize(&t);
+        let w_total = n / TILE_COLS;
+        let mut row = vec![0f32; TILE_COLS];
+        for r in 0..k {
+            let gbase = (r / g) * n;
+            for wj in 0..w_total {
+                let c0 = wj * TILE_COLS;
+                decode_awq_word_into(
+                    words[r * w_total + wj],
+                    &t.scales[gbase + c0..gbase + c0 + TILE_COLS],
+                    &t.zeros[gbase + c0..gbase + c0 + TILE_COLS],
+                    &mut row,
+                );
+                assert_eq!(row, reference[r * n + c0..r * n + c0 + TILE_COLS], "r={r} wj={wj}");
+            }
+        }
+    }
+
+    #[test]
+    fn run_offsets_tile_the_stream_exactly() {
+        let (k, w_total) = (48, 4);
+        let mut seen = vec![false; k * w_total];
+        for kt in 0..k / TILE_ROWS {
+            for wj in 0..w_total {
+                let off = quick_run_offset(kt, wj, w_total);
+                for covered in seen.iter_mut().skip(off).take(TILE_ROWS) {
+                    assert!(!*covered);
+                    *covered = true;
+                }
+            }
+        }
+        assert!(seen.iter().all(|&b| b));
+    }
+}

@@ -104,6 +104,34 @@ pub fn ldmatrix_fragment_perm(rows: usize, n_words: usize) -> Vec<i64> {
         .unwrap_or_else(|e| panic!("ldmatrix_fragment_perm: {e}"))
 }
 
+/// Process-wide memo over [`ldmatrix_fragment_perm`] keyed by the word-grid
+/// shape `(rows, n_words)`.
+///
+/// The permutation is a pure function of the shape, and serving stacks see
+/// the same handful of layer shapes over and over — unpack round-trips
+/// (`unpack_quick`), per-rank shard checks, and the ablation paths were
+/// rebuilding the full `rows * n_words` vector on every call, which shows
+/// up in the `hotpath` bench for large layers. The memo builds each shape
+/// once and hands out shared references thereafter.
+///
+/// # Panics
+///
+/// Same shape contract as [`ldmatrix_fragment_perm`] (a failed build is
+/// not cached).
+pub fn ldmatrix_fragment_perm_memo(rows: usize, n_words: usize) -> std::sync::Arc<Vec<i64>> {
+    use std::collections::HashMap;
+    use std::sync::{Arc, Mutex, OnceLock};
+    static CACHE: OnceLock<Mutex<HashMap<(usize, usize), Arc<Vec<i64>>>>> = OnceLock::new();
+    let cache = CACHE.get_or_init(Default::default);
+    if let Some(p) = cache.lock().unwrap().get(&(rows, n_words)) {
+        return p.clone();
+    }
+    // Build outside the lock (large shapes take a while); a racing second
+    // builder is benign — first insert wins and both callers share it.
+    let built = Arc::new(ldmatrix_fragment_perm(rows, n_words));
+    cache.lock().unwrap().entry((rows, n_words)).or_insert(built).clone()
+}
+
 /// `out[i] = input[perm[i]]`.
 pub fn apply_word_perm(words: &[u32], perm: &[i64]) -> Vec<u32> {
     assert_eq!(words.len(), perm.len());
@@ -187,6 +215,20 @@ mod tests {
     #[should_panic(expected = "n_words must be > 0")]
     fn rejects_zero_words() {
         ldmatrix_fragment_perm(16, 0);
+    }
+
+    #[test]
+    fn memoized_perm_is_shared_and_identical() {
+        let fresh = ldmatrix_fragment_perm(64, 8);
+        let a = ldmatrix_fragment_perm_memo(64, 8);
+        let b = ldmatrix_fragment_perm_memo(64, 8);
+        assert_eq!(*a, fresh);
+        // Same allocation handed out on the second hit, not a rebuild.
+        assert!(std::sync::Arc::ptr_eq(&a, &b));
+        // Distinct shapes get distinct entries.
+        let c = ldmatrix_fragment_perm_memo(32, 8);
+        assert_eq!(*c, ldmatrix_fragment_perm(32, 8));
+        assert!(!std::sync::Arc::ptr_eq(&a, &c));
     }
 
     #[test]

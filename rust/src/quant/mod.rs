@@ -21,15 +21,17 @@
 //! independently — the interleaved stream itself cannot be sliced.
 
 mod awq;
+pub mod decode;
 mod interleave;
 mod pack;
 mod search;
 pub mod shard;
 
-pub use awq::{dequantize, quantize_groupwise, QuantizedTensor, QBITS, QMAX};
+pub use awq::{dequantize, dequantize_into, quantize_groupwise, QuantizedTensor, QBITS, QMAX};
+pub use decode::{decode_awq_word_into, decode_quick_run_into, quick_run_offset};
 pub use interleave::{
-    apply_word_perm, invert_perm, ldmatrix_fragment_perm, try_ldmatrix_fragment_perm,
-    unapply_word_perm, MMA_K, MMA_M, MMA_N, WARP_LANES,
+    apply_word_perm, invert_perm, ldmatrix_fragment_perm, ldmatrix_fragment_perm_memo,
+    try_ldmatrix_fragment_perm, unapply_word_perm, MMA_K, MMA_M, MMA_N, WARP_LANES,
 };
 pub use search::{reconstruction_error, search_awq_scales};
 pub use shard::{

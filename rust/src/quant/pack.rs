@@ -207,7 +207,9 @@ pub fn pack_quick(codes: &[i32], k: usize, n: usize) -> Vec<u32> {
 /// assert_eq!(unpack_quick(&pack_quick(&codes, 16, 8), 16, 8), codes);
 /// ```
 pub fn unpack_quick(stream: &[u32], k: usize, n: usize) -> Vec<i32> {
-    let perm = super::interleave::ldmatrix_fragment_perm(k, n / PACK_FACTOR);
+    // Memoized: the perm depends only on the word-grid shape and unpack is
+    // called per shard / per round-trip on the same layer shapes.
+    let perm = super::interleave::ldmatrix_fragment_perm_memo(k, n / PACK_FACTOR);
     let words = super::interleave::unapply_word_perm(stream, &perm);
     unpack_words(&words, k, n, &LINEAR_ORDER)
 }

@@ -1,9 +1,17 @@
 //! Tiny benchmark harness (std-only substrate, criterion-shaped output).
 //!
 //! Used by the `cargo bench` targets: warmup, adaptive iteration count,
-//! median + MAD over samples, ns/op and throughput reporting.
+//! median + MAD over samples, ns/op and throughput reporting. Every run
+//! is also recorded, and [`Bench::write_json`] emits the whole session as
+//! a structured JSON document — the `--json <path>` trajectory output the
+//! `bench kernels` CLI target uses for `BENCH_kernels.json`.
 
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::path::Path;
 use std::time::{Duration, Instant};
+
+use super::json::Json;
 
 /// One benchmark runner.
 pub struct Bench {
@@ -11,6 +19,13 @@ pub struct Bench {
     sample_target: Duration,
     samples: usize,
     warmup: Duration,
+    /// Print per-run lines to stdout (callers that capture results
+    /// through [`Bench::recorded_json`] or a report writer can silence
+    /// the side-channel output with [`Bench::silent`]).
+    verbose: bool,
+    /// Every `(name, result)` this runner has measured, in run order —
+    /// the source of [`Bench::write_json`]'s structured output.
+    recorded: RefCell<Vec<(String, BenchResult)>>,
 }
 
 impl Default for Bench {
@@ -19,6 +34,8 @@ impl Default for Bench {
             sample_target: Duration::from_millis(50),
             samples: 20,
             warmup: Duration::from_millis(100),
+            verbose: true,
+            recorded: RefCell::new(Vec::new()),
         }
     }
 }
@@ -41,7 +58,26 @@ impl Bench {
             sample_target: Duration::from_millis(20),
             samples: 8,
             warmup: Duration::from_millis(20),
+            ..Bench::default()
         }
+    }
+
+    /// Minimal-cost configuration for CI smoke runs (`bench kernels
+    /// --quick`) and tests: numbers are indicative only.
+    pub fn smoke() -> Self {
+        Bench {
+            sample_target: Duration::from_millis(5),
+            samples: 3,
+            warmup: Duration::from_millis(5),
+            ..Bench::default()
+        }
+    }
+
+    /// Suppress the per-run stdout lines; results are still recorded and
+    /// available via [`Bench::recorded_json`] / the run return values.
+    pub fn silent(mut self) -> Self {
+        self.verbose = false;
+        self
     }
 
     /// Benchmark `f`, printing a criterion-style line.
@@ -73,8 +109,12 @@ impl Bench {
         devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let mad = devs[devs.len() / 2];
 
-        println!("{:44} {:>14} ± {:<12} ({} iters)", name, fmt_ns(median), fmt_ns(mad), total);
-        BenchResult { median_ns: median, mad_ns: mad, iters_total: total }
+        if self.verbose {
+            println!("{:44} {:>14} ± {:<12} ({} iters)", name, fmt_ns(median), fmt_ns(mad), total);
+        }
+        let result = BenchResult { median_ns: median, mad_ns: mad, iters_total: total };
+        self.recorded.borrow_mut().push((name.to_string(), result));
+        result
     }
 
     /// Like [`run`] but also prints element throughput.
@@ -85,9 +125,47 @@ impl Bench {
         f: impl FnMut() -> T,
     ) -> BenchResult {
         let r = self.run(name, f);
-        let eps = elements as f64 / (r.median_ns / 1e9);
-        println!("{:44} {:>14.2} Melem/s", format!("{name} (throughput)"), eps / 1e6);
+        if self.verbose {
+            let eps = elements as f64 / (r.median_ns / 1e9);
+            println!("{:44} {:>14.2} Melem/s", format!("{name} (throughput)"), eps / 1e6);
+        }
         r
+    }
+}
+
+impl Bench {
+    /// Everything this runner has measured so far, as a JSON array of
+    /// `{name, median_ns, mad_ns, iters}` objects.
+    pub fn recorded_json(&self) -> Json {
+        Json::Arr(
+            self.recorded
+                .borrow()
+                .iter()
+                .map(|(name, r)| {
+                    let mut o = BTreeMap::new();
+                    o.insert("name".to_string(), Json::Str(name.clone()));
+                    o.insert("median_ns".to_string(), Json::Num(r.median_ns));
+                    o.insert("mad_ns".to_string(), Json::Num(r.mad_ns));
+                    o.insert("iters".to_string(), Json::Num(r.iters_total as f64));
+                    Json::Obj(o)
+                })
+                .collect(),
+        )
+    }
+
+    /// Write the recorded runs plus caller-provided top-level fields as a
+    /// JSON document at `path` (the `--json <path>` structured output).
+    /// The `"runs"` key holds [`Bench::recorded_json`]; `extra` entries
+    /// are merged beside it and win on key collision.
+    pub fn write_json(&self, path: &Path, extra: &[(&str, Json)]) -> anyhow::Result<()> {
+        let mut obj = BTreeMap::new();
+        obj.insert("runs".to_string(), self.recorded_json());
+        for (key, value) in extra {
+            obj.insert(key.to_string(), value.clone());
+        }
+        std::fs::write(path, format!("{}\n", Json::Obj(obj)))
+            .map_err(|e| anyhow::anyhow!("writing bench JSON to {}: {e}", path.display()))?;
+        Ok(())
     }
 }
 
@@ -113,6 +191,26 @@ mod tests {
         let r = b.run("noop_vec_sum", || (0..100u64).sum::<u64>());
         assert!(r.median_ns > 0.0 && r.median_ns < 1e7);
         assert!(r.iters_total > 0);
+    }
+
+    #[test]
+    fn records_runs_and_writes_parseable_json() {
+        let b = Bench::smoke();
+        b.run("alpha", || 1 + 1);
+        b.run("beta", || 2 + 2);
+        let runs = b.recorded_json();
+        let arr = runs.as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[0].req("name").unwrap().as_str().unwrap(), "alpha");
+        assert!(arr[1].req("median_ns").unwrap().as_f64().unwrap() > 0.0);
+
+        let path = std::env::temp_dir().join("quick_infer_bench_test.json");
+        b.write_json(&path, &[("bench", Json::Str("smoke".into()))]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let doc = Json::parse(text.trim()).unwrap();
+        assert_eq!(doc.req("bench").unwrap().as_str().unwrap(), "smoke");
+        assert_eq!(doc.req("runs").unwrap().as_arr().unwrap().len(), 2);
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

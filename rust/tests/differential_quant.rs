@@ -182,3 +182,55 @@ fn tp_degree_one_shard_matches_python_stream() {
         }
     }
 }
+
+#[test]
+fn kernel_backends_match_python_fixture_weights() {
+    // Fixed-seed golden check of the native kernel subsystem against the
+    // Python fixtures' dequantized weights: the fused backend must pack
+    // to the fixture's exact interleaved stream, the write-back backend
+    // to the fixture's exact AWQ words, and both must reproduce the GEMM
+    // of the fixture-derived dequantized matrix within 1e-4.
+    use quick_infer::kernel::{
+        max_rel_err, AwqWritebackBackend, Blocking, KernelBackend, QuickFusedBackend,
+    };
+    use quick_infer::quant::{dequantize, QuantizedTensor};
+    use quick_infer::util::Rng;
+    for name in FIXTURES {
+        let f = load_fixture(name);
+        let groups = f.k / f.group_size;
+        let t = QuantizedTensor {
+            codes: f.codes.clone(),
+            scales: vec![1.0; groups * f.n],
+            zeros: f.zeros.iter().map(|&z| z as f32).collect(),
+            k: f.k,
+            n: f.n,
+            group_size: f.group_size,
+        };
+        let fused = QuickFusedBackend::new(&t, Blocking::default());
+        assert_eq!(fused.weights.stream, f.quick, "{name}: fused stream drift");
+        let writeback = AwqWritebackBackend::new(&t, Blocking::default());
+        assert_eq!(writeback.weights.qweight, f.awq, "{name}: awq words drift");
+
+        // Reference GEMM straight off the fixture's dequantized weights.
+        let dq = dequantize(&t);
+        let m = 4usize;
+        let mut rng = Rng::seed_from_u64(0x601D);
+        let x: Vec<f32> = (0..m * f.k).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect();
+        let mut want = vec![0f32; m * f.n];
+        for r in 0..m {
+            for kk in 0..f.k {
+                let xv = x[r * f.k + kk];
+                for c in 0..f.n {
+                    want[r * f.n + c] += xv * dq[kk * f.n + c];
+                }
+            }
+        }
+        let mut got = vec![0f32; m * f.n];
+        fused.gemm(&x, m, &mut got);
+        let e = max_rel_err(&got, &want);
+        assert!(e <= 1e-4, "{name}: fused rel err {e:.2e}");
+        writeback.gemm(&x, m, &mut got);
+        let e = max_rel_err(&got, &want);
+        assert!(e <= 1e-4, "{name}: write-back rel err {e:.2e}");
+    }
+}

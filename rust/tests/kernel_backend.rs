@@ -1,0 +1,118 @@
+//! Integration tests for the native W4A16 kernel subsystem: the fused /
+//! write-back / naive backend trio end to end (packing → GEMM →
+//! differential agreement), the threading partitioner at realistic
+//! shapes, and the measured-cost calibration hook into `gpusim`.
+
+use quick_infer::gpusim::{calibrate_writeback, Calib, Gpu, KernelKind};
+use quick_infer::kernel::{
+    gemm_awq_writeback, gemm_quick_fused, max_rel_err, AwqWeights, AwqWritebackBackend, Blocking,
+    KernelBackend, NaiveBackend, QuickFusedBackend, QuickWeights,
+};
+use quick_infer::quant::quantize_groupwise;
+use quick_infer::util::Rng;
+
+fn rand_layer(k: usize, n: usize, g: usize, seed: u64) -> quick_infer::quant::QuantizedTensor {
+    let mut rng = Rng::seed_from_u64(seed);
+    let w: Vec<f32> = (0..k * n).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect();
+    quantize_groupwise(&w, k, n, g)
+}
+
+#[test]
+fn backends_agree_at_serving_scale_shapes() {
+    // A shape big enough to cross every default block boundary (multiple
+    // M/K/N blocks) and engage the auto thread partitioner.
+    let (k, n, g) = (512usize, 384usize, 128usize);
+    let t = rand_layer(k, n, g, 2028);
+    let naive = NaiveBackend::from_quantized(&t);
+    let fused = QuickFusedBackend::new(&t, Blocking::default());
+    let writeback = AwqWritebackBackend::new(&t, Blocking::default());
+    let mut rng = Rng::seed_from_u64(99);
+    for m in [1usize, 8, 33, 256] {
+        let x: Vec<f32> = (0..m * k).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect();
+        let mut y_ref = vec![0f32; m * n];
+        let mut y = vec![0f32; m * n];
+        naive.gemm(&x, m, &mut y_ref);
+        fused.gemm(&x, m, &mut y);
+        assert!(max_rel_err(&y, &y_ref) <= 1e-4, "fused m={m}");
+        writeback.gemm(&x, m, &mut y);
+        assert!(max_rel_err(&y, &y_ref) <= 1e-4, "write-back m={m}");
+    }
+}
+
+#[test]
+fn explicit_thread_counts_are_deterministic() {
+    let (k, n, g) = (128usize, 256usize, 64usize);
+    let t = rand_layer(k, n, g, 5);
+    let m = 16usize;
+    let mut rng = Rng::seed_from_u64(6);
+    let x: Vec<f32> = (0..m * k).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect();
+    let qw = QuickWeights::from_quantized(&t);
+    let aw = AwqWeights::from_quantized(&t);
+    let mut base_q = vec![0f32; m * n];
+    let mut base_a = vec![0f32; m * n];
+    let one = Blocking { threads: 1, ..Blocking::default() };
+    gemm_quick_fused(&x, m, &qw, &one, &mut base_q).unwrap();
+    gemm_awq_writeback(&x, m, &aw, &one, &mut base_a).unwrap();
+    for threads in [2usize, 3, 7] {
+        let b = Blocking { threads, ..Blocking::default() };
+        let mut y = vec![0f32; m * n];
+        gemm_quick_fused(&x, m, &qw, &b, &mut y).unwrap();
+        assert_eq!(y, base_q, "fused threads={threads} must be bit-identical");
+        gemm_awq_writeback(&x, m, &aw, &b, &mut y).unwrap();
+        assert_eq!(y, base_a, "write-back threads={threads} must be bit-identical");
+    }
+}
+
+#[test]
+fn shape_contract_errors_are_descriptive() {
+    let t = rand_layer(64, 32, 32, 1);
+    let qw = QuickWeights::from_quantized(&t);
+    let b = Blocking::default();
+    let e = gemm_quick_fused(&[0.0; 10], 1, &qw, &b, &mut [0.0; 32]).unwrap_err();
+    assert!(e.to_string().contains("x holds"), "{e}");
+    let e = gemm_quick_fused(&[0.0; 64], 1, &qw, &b, &mut [0.0; 3]).unwrap_err();
+    assert!(e.to_string().contains("y holds"), "{e}");
+    let bad = Blocking { kc: 20, ..Blocking::default() };
+    let e = gemm_quick_fused(&[0.0; 64], 1, &qw, &bad, &mut [0.0; 32]).unwrap_err();
+    assert!(e.to_string().contains("kc="), "{e}");
+}
+
+#[test]
+fn measured_tile_costs_calibrate_the_gpu_model() {
+    // The engine hook end to end: wall-clock the two native paths on a
+    // small layer, feed the measured gap into calibrate_writeback, and
+    // check every downstream consumer of Calib sees a modeled AWQ/QUICK
+    // gap matching the measurement (clamped to the model's range).
+    let (k, n, g) = (256usize, 256usize, 128usize);
+    let t = rand_layer(k, n, g, 7);
+    let fused = QuickFusedBackend::new(&t, Blocking { threads: 1, ..Blocking::default() });
+    let writeback = AwqWritebackBackend::new(&t, Blocking { threads: 1, ..Blocking::default() });
+    let m = 32usize;
+    let mut rng = Rng::seed_from_u64(8);
+    let x: Vec<f32> = (0..m * k).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect();
+    let mut y = vec![0f32; m * n];
+    let time_it = |b: &dyn KernelBackend, y: &mut Vec<f32>| {
+        let t0 = std::time::Instant::now();
+        for _ in 0..3 {
+            b.gemm(&x, m, y);
+        }
+        (t0.elapsed().as_secs_f64() / 3.0).max(1e-9)
+    };
+    let fused_s = time_it(&fused, &mut y);
+    let wb_s = time_it(&writeback, &mut y);
+
+    let dev = Gpu::Rtx4090.spec();
+    let calib =
+        calibrate_writeback(&dev, m as u64, n as u64, k as u64, fused_s, wb_s, &Calib::default());
+    assert!(calib.writeback_scale >= 0.0 && calib.writeback_scale <= 1024.0);
+    // The calibrated Calib plugs into any model query.
+    let p = quick_infer::gpusim::kernel_model::model_gemm(
+        &dev,
+        KernelKind::Awq,
+        m as u64,
+        n as u64,
+        k as u64,
+        &calib,
+    );
+    assert!(p.latency_s > 0.0 && p.tops > 0.0);
+}

@@ -442,3 +442,48 @@ fn prop_continuous_scheduler_invariants_and_progress() {
         assert_eq!(finished, 30, "every submitted sequence finishes exactly once");
     });
 }
+
+#[test]
+fn prop_kernel_backends_agree_with_reference() {
+    // The differential gate of the native kernel subsystem, in both CI
+    // profiles: gemm_quick_fused ≡ gemm_awq_writeback ≡ naive
+    // (dequantize + triple-loop) within 1e-4 relative error over
+    // randomized shapes — non-square K≠N, group sizes {32, 64, 128},
+    // random blocking and thread counts.
+    use quick_infer::kernel::{
+        max_rel_err, AwqWritebackBackend, Blocking, KernelBackend, NaiveBackend,
+        QuickFusedBackend,
+    };
+    check("kernel-backend-equivalence", 0x4E44A, default_cases(), |rng| {
+        let g = [32usize, 64, 128][rng.range_usize(0, 2)];
+        let k = g * rng.range_usize(1, 3); // multiple of 16 via g
+        let n = rng.range_usize(1, 12) * 8; // generally != k
+        let m = rng.range_usize(1, 17);
+        let w: Vec<f32> = (0..k * n).map(|_| (rng.f64() * 2.0 - 1.0) as f32).collect();
+        let t = quant::quantize_groupwise(&w, k, n, g);
+        let x: Vec<f32> = (0..m * k).map(|_| (rng.f64() * 2.0 - 1.0) as f32).collect();
+        let blocking = Blocking {
+            mc: [3usize, 16, 64][rng.range_usize(0, 2)],
+            kc: [16usize, 64, 256][rng.range_usize(0, 2)],
+            nc_words: [1usize, 2, 16][rng.range_usize(0, 2)],
+            threads: rng.range_usize(1, 3),
+        };
+        let naive = NaiveBackend::from_quantized(&t);
+        let fused = QuickFusedBackend::new(&t, blocking);
+        let writeback = AwqWritebackBackend::new(&t, blocking);
+        let mut y_ref = vec![0f32; m * n];
+        let mut y_fused = vec![0f32; m * n];
+        let mut y_wb = vec![0f32; m * n];
+        naive.gemm(&x, m, &mut y_ref);
+        fused.gemm(&x, m, &mut y_fused);
+        writeback.gemm(&x, m, &mut y_wb);
+        let ef = max_rel_err(&y_fused, &y_ref);
+        let ew = max_rel_err(&y_wb, &y_ref);
+        let efw = max_rel_err(&y_fused, &y_wb);
+        assert!(
+            ef <= 1e-4 && ew <= 1e-4 && efw <= 1e-4,
+            "k={k} n={n} g={g} m={m} blocking={blocking:?}: \
+             fused {ef:.2e} wb {ew:.2e} fused-vs-wb {efw:.2e}"
+        );
+    });
+}
