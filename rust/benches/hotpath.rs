@@ -1,16 +1,23 @@
 //! L3 hot-path microbenchmarks (perf pass, DESIGN.md §8): offline packing
 //! throughput (incl. the `dequantize_into` reused-buffer and memoized
-//! fragment-perm variants), the native fused/write-back kernel pair, KV
-//! block manager ops, batcher step planning, bank-counter inner loop, and
-//! — with artifacts present — the PJRT decode round-trip the engine pays
-//! per token.
+//! fragment-perm variants), the native fused/write-back kernel pair —
+//! now with a counting-allocator gate proving the plan-cached runtime
+//! allocates *zero* bytes per call in steady state — KV block manager
+//! ops, batcher step planning, bank-counter inner loop, and — with
+//! artifacts present — the PJRT decode round-trip the engine pays per
+//! token.
 
 use quick_infer::coordinator::kv_cache::KvBlockManager;
 use quick_infer::coordinator::{Batcher, GenerationRequest, StepPlan};
 use quick_infer::gpusim::{trace, BankCounter};
 use quick_infer::quant;
 use quick_infer::runtime::Runtime;
-use quick_infer::util::Bench;
+use quick_infer::util::{Bench, CountingAlloc};
+
+/// Every allocation in this bench binary is counted, so the kernel
+/// steady-state checks below can assert an exact zero delta.
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc::new();
 
 fn bench_quant(b: &Bench) {
     println!("-- quant (4096x4096, group 128) --");
@@ -67,6 +74,30 @@ fn bench_kernel(b: &Bench) {
     b.run_throughput("gemm_awq_writeback", flops, || {
         writeback.gemm(&x, m, &mut y);
         y[0]
+    });
+
+    // Steady-state allocation gate: after the warm calls above built the
+    // plans, repeated same-shape GEMMs (and dequantize_into with a
+    // reused buffer) must allocate *nothing* — the PlanCache contract.
+    fn steady(name: &str, mut f: impl FnMut()) {
+        f(); // warm: plan/scratch resident beyond any doubt
+        let before = ALLOC.allocations();
+        for _ in 0..10 {
+            f();
+        }
+        let delta = ALLOC.allocations() - before;
+        println!("{name:44} {delta:>4} allocs / 10 calls (steady state)");
+        assert_eq!(delta, 0, "{name}: hot path allocated in steady state");
+    }
+    steady("gemm_quick_fused (plan-cached)", || {
+        fused.gemm(&x, m, &mut y);
+    });
+    steady("gemm_awq_writeback (plan-cached)", || {
+        writeback.gemm(&x, m, &mut y);
+    });
+    let mut deq = vec![0f32; k * n];
+    steady("dequantize_into (reused buffer)", || {
+        quant::dequantize_into(&t, &mut deq);
     });
 }
 

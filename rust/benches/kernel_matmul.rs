@@ -1,7 +1,9 @@
-//! Measured native-kernel M-sweep bench: `gemm_quick_fused` vs
-//! `gemm_awq_writeback` on this host (the executable analogue of the
-//! Fig. 7 batch axis). Same harness the `quick-infer bench kernels` CLI
-//! target and `simulate kernel-matmul` use; this entry point exists so
+//! Measured native-kernel benches: the `gemm_quick_fused` vs
+//! `gemm_awq_writeback` M-sweep (the executable analogue of the Fig. 7
+//! batch axis) plus the decode-shape runtime sweep (persistent pool vs
+//! spawn-per-call, SIMD vs scalar, dispatch overhead). Same harnesses
+//! the `quick-infer bench kernels` CLI target and `simulate
+//! kernel-matmul` / `simulate step` use; this entry point exists so
 //! `cargo bench --bench kernel_matmul` slots into the existing bench
 //! workflow next to `fig7_matmul`.
 
@@ -14,5 +16,23 @@ fn main() {
         "kernel divergence vs naive reference: fused {:.2e}, write-back {:.2e}",
         report.fused_rel_err,
         report.writeback_rel_err
+    );
+    // Decode-shape runtime sweep on the same default layer size the CLI
+    // uses (4096x4096 would dwarf the bench wall time here; 1024 shows
+    // the same dispatch-vs-arithmetic structure).
+    let decode = figures::decode_sweep_with(
+        &mut std::io::stdout(),
+        1024,
+        1024,
+        128,
+        &figures::DECODE_SWEEP_BATCHES,
+        &quick_infer::util::Bench::fast(),
+    )
+    .expect("decode_sweep");
+    assert!(
+        decode.within_tolerance(),
+        "decode-sweep divergence vs naive reference: fused {:.2e}, write-back {:.2e}",
+        decode.fused_rel_err,
+        decode.writeback_rel_err
     );
 }

@@ -11,10 +11,14 @@ use crate::coordinator::simserve::{
     simulate_continuous, simulate_serving, simulate_static_wave, simulate_tp,
     ContinuousPolicy, ContinuousResult, SimPolicy, SimResult,
 };
-use crate::gpusim::kernel_model::{calibrate_writeback, model_gemm, Calib, KernelKind};
+use crate::gpusim::kernel_model::{
+    calibrate_step_writeback, calibrate_writeback, model_gemm, Calib, KernelKind,
+};
 use crate::gpusim::{max_batch_before_oom, tokens_per_second, tp_step_latency, Gpu};
 use crate::kernel::{
-    max_rel_err, AwqWritebackBackend, Blocking, KernelBackend, NaiveBackend, QuickFusedBackend,
+    gemm_awq_writeback, gemm_quick_fused, max_rel_err, simd_level, AwqWeights,
+    AwqWritebackBackend, Blocking, KernelBackend, NaiveBackend, PlanCache, QuickFusedBackend,
+    QuickWeights, StepBackend, StepExecutor, WorkerPool,
 };
 use crate::model::Model;
 use crate::quant::quantize_groupwise;
@@ -575,6 +579,368 @@ pub fn kernel_matmul_with(
     })
 }
 
+/// Decode batch sizes (GEMM M) swept by [`decode_sweep`] and
+/// [`step_throughput`] — the shapes where dispatch overhead and decode
+/// cost, not arithmetic, decide the outcome.
+pub const DECODE_SWEEP_BATCHES: [usize; 4] = [1, 2, 4, 8];
+
+/// One decode-shape point of the runtime-tier sweep: the fused path
+/// under each (dispatch, microkernel) tier, the write-back path under
+/// the full runtime, and the measured per-call dispatch overhead.
+#[derive(Debug, Clone, Copy)]
+pub struct DecodeSweepRow {
+    /// GEMM M (decode batch).
+    pub m: usize,
+    /// Fused path, persistent pool + SIMD (the full runtime).
+    pub fused_pool_simd_gflops: f64,
+    /// Fused path, persistent pool + scalar microkernel/decoders.
+    pub fused_pool_scalar_gflops: f64,
+    /// Fused path, spawn-per-call threads + SIMD.
+    pub fused_spawn_simd_gflops: f64,
+    /// Fused path, spawn-per-call + scalar — the PR 4 baseline.
+    pub fused_spawn_scalar_gflops: f64,
+    /// Write-back path under the full runtime (pool + SIMD).
+    pub writeback_pool_simd_gflops: f64,
+    /// Median ns to dispatch a no-op job through the pool at this
+    /// shape's task/thread counts (pure dispatch overhead, no GEMM).
+    pub pool_dispatch_ns: f64,
+    /// Median ns for the same no-op job via spawn-per-call threads.
+    pub spawn_dispatch_ns: f64,
+}
+
+impl DecodeSweepRow {
+    /// Full runtime (pool + SIMD) over the PR 4 spawn-per-call scalar
+    /// baseline — the tentpole's acceptance ratio.
+    pub fn runtime_speedup(&self) -> f64 {
+        self.fused_pool_simd_gflops / self.fused_spawn_scalar_gflops.max(1e-12)
+    }
+
+    /// Fused over write-back under the full runtime (must stay >= 1x:
+    /// the paper's gap must survive the shared speedups).
+    pub fn fused_over_writeback(&self) -> f64 {
+        self.fused_pool_simd_gflops / self.writeback_pool_simd_gflops.max(1e-12)
+    }
+}
+
+/// Result set of [`decode_sweep`].
+#[derive(Debug, Clone)]
+pub struct DecodeSweepReport {
+    /// Weight in-features (reduction axis).
+    pub k: usize,
+    /// Weight out-features.
+    pub n: usize,
+    /// Quantization group length along K.
+    pub group_size: usize,
+    /// SIMD tier the `simd: true` rows ran at (`avx2`/`neon`/`scalar`).
+    pub simd_level: &'static str,
+    /// One row per swept batch, ascending.
+    pub rows: Vec<DecodeSweepRow>,
+    /// Max relative error of the full-runtime fused path vs naive.
+    pub fused_rel_err: f64,
+    /// Max relative error of the full-runtime write-back path vs naive.
+    pub writeback_rel_err: f64,
+}
+
+impl DecodeSweepReport {
+    /// The differential gate: both runtime paths within 1e-4 of naive.
+    pub fn within_tolerance(&self) -> bool {
+        self.fused_rel_err <= 1e-4 && self.writeback_rel_err <= 1e-4
+    }
+
+    /// The row for batch `m` (panics if the batch was not swept).
+    pub fn row(&self, m: usize) -> &DecodeSweepRow {
+        self.rows.iter().find(|r| r.m == m).unwrap_or_else(|| panic!("batch {m} not swept"))
+    }
+}
+
+/// Decode-shape runtime sweep (the tentpole's measurement): the fused
+/// path at M ∈ {1, 2, 4, 8} under every (dispatch, microkernel) tier —
+/// persistent pool vs PR 4 spawn-per-call, SIMD vs scalar — plus the
+/// write-back path under the full runtime and the no-op dispatch
+/// overhead measured separately from GFLOP/s. Default 4096x4096 g128
+/// layer via `bench kernels`.
+pub fn decode_sweep(out: &mut impl Write) -> Result<DecodeSweepReport> {
+    decode_sweep_with(out, 4096, 4096, 128, &DECODE_SWEEP_BATCHES, &Bench::fast())
+}
+
+/// [`decode_sweep`] with explicit layer shape, batch list, and bench
+/// configuration (CLI and CI smoke pass smaller ones).
+pub fn decode_sweep_with(
+    out: &mut impl Write,
+    k: usize,
+    n: usize,
+    group_size: usize,
+    batches: &[usize],
+    bench: &Bench,
+) -> Result<DecodeSweepReport> {
+    anyhow::ensure!(!batches.is_empty(), "batch list must be non-empty");
+    writeln!(
+        out,
+        "\n== Decode-shape runtime sweep: {k}x{n} g{group_size}, simd tier '{}' (this CPU) ==",
+        simd_level()
+    )?;
+    let mut rng = Rng::seed_from_u64(0xDEC0);
+    let w: Vec<f32> = (0..k * n).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect();
+    let t = quantize_groupwise(&w, k, n, group_size);
+    drop(w);
+    let qw = QuickWeights::from_quantized(&t);
+    let aw = AwqWeights::from_quantized(&t);
+
+    let pool_simd = Blocking::default();
+    let pool_scalar = Blocking { simd: false, ..Blocking::default() };
+    let spawn_simd = Blocking { pool: false, ..Blocking::default() };
+    let spawn_scalar = Blocking { simd: false, pool: false, ..Blocking::default() };
+
+    // Differential gate: the full runtime vs the naive reference, once,
+    // at the largest swept batch — M >= 4 exercises the SIMD
+    // microkernel's 4-row main accumulator loop (small M only hits the
+    // remainder loop) and the pooled dispatch path.
+    let naive = NaiveBackend::from_quantized(&t);
+    let gate_m = batches.iter().copied().max().unwrap_or(1);
+    let x_gate: Vec<f32> = (0..gate_m * k).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect();
+    let mut y_ref = vec![0f32; gate_m * n];
+    let mut y_opt = vec![0f32; gate_m * n];
+    naive.gemm(&x_gate, gate_m, &mut y_ref);
+    gemm_quick_fused(&x_gate, gate_m, &qw, &pool_simd, &mut y_opt)?;
+    let fused_rel_err = max_rel_err(&y_opt, &y_ref);
+    gemm_awq_writeback(&x_gate, gate_m, &aw, &pool_simd, &mut y_opt)?;
+    let writeback_rel_err = max_rel_err(&y_opt, &y_ref);
+    writeln!(
+        out,
+        "differential gate vs naive (m={gate_m}): fused {fused_rel_err:.2e}, \
+         write-back {writeback_rel_err:.2e} (bar 1e-4)"
+    )?;
+
+    writeln!(
+        out,
+        "{:>4} {:>11} {:>11} {:>11} {:>11} {:>11} {:>9} {:>10} {:>10}",
+        "m",
+        "pool+simd",
+        "pool+scal",
+        "spawn+simd",
+        "spawn+scal",
+        "wb pool",
+        "runtime x",
+        "disp pool",
+        "disp spawn"
+    )?;
+    let mut rows = Vec::new();
+    for &m in batches {
+        let x: Vec<f32> = (0..m * k).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect();
+        let mut y = vec![0f32; m * n];
+        let flops = 2.0 * m as f64 * n as f64 * k as f64;
+        let mut gf = |name: &str, b: &Blocking, fused: bool| -> Result<f64> {
+            let r = if fused {
+                bench.run(&format!("fused {name} {k}x{n} m{m}"), || {
+                    gemm_quick_fused(&x, m, &qw, b, &mut y).expect("fused gemm");
+                    y[0]
+                })
+            } else {
+                bench.run(&format!("writeback {name} {k}x{n} m{m}"), || {
+                    gemm_awq_writeback(&x, m, &aw, b, &mut y).expect("writeback gemm");
+                    y[0]
+                })
+            };
+            Ok(flops / r.median_ns)
+        };
+        let fused_pool_simd_gflops = gf("pool+simd", &pool_simd, true)?;
+        let fused_pool_scalar_gflops = gf("pool+scalar", &pool_scalar, true)?;
+        let fused_spawn_simd_gflops = gf("spawn+simd", &spawn_simd, true)?;
+        let fused_spawn_scalar_gflops = gf("spawn+scalar", &spawn_scalar, true)?;
+        let writeback_pool_simd_gflops = gf("pool+simd", &pool_simd, false)?;
+        // Dispatch overhead: the same tile/thread geometry, zero work —
+        // what each dispatch tier charges per call before any math runs.
+        let plan = PlanCache::global().plan(m, k, n, &pool_simd)?;
+        let (tasks, threads) = (plan.tasks.len(), plan.threads);
+        let pool_dispatch_ns = bench
+            .run(&format!("dispatch pool m{m} ({tasks}t/{threads}w)"), || {
+                WorkerPool::global().run(tasks, threads, &|_t, _s| {});
+            })
+            .median_ns;
+        let spawn_dispatch_ns = bench
+            .run(&format!("dispatch spawn m{m} ({tasks}t/{threads}w)"), || {
+                crate::kernel::partition::spawn_run(tasks, threads, &|_t, _s| {});
+            })
+            .median_ns;
+        let row = DecodeSweepRow {
+            m,
+            fused_pool_simd_gflops,
+            fused_pool_scalar_gflops,
+            fused_spawn_simd_gflops,
+            fused_spawn_scalar_gflops,
+            writeback_pool_simd_gflops,
+            pool_dispatch_ns,
+            spawn_dispatch_ns,
+        };
+        writeln!(
+            out,
+            "{:>4} {:>11.2} {:>11.2} {:>11.2} {:>11.2} {:>11.2} {:>8.2}x {:>10} {:>10}",
+            m,
+            row.fused_pool_simd_gflops,
+            row.fused_pool_scalar_gflops,
+            row.fused_spawn_simd_gflops,
+            row.fused_spawn_scalar_gflops,
+            row.writeback_pool_simd_gflops,
+            row.runtime_speedup(),
+            crate::util::bench::fmt_ns(row.pool_dispatch_ns),
+            crate::util::bench::fmt_ns(row.spawn_dispatch_ns),
+        )?;
+        rows.push(row);
+    }
+    let worst_gap = rows
+        .iter()
+        .map(DecodeSweepRow::fused_over_writeback)
+        .fold(f64::INFINITY, f64::min);
+    writeln!(
+        out,
+        "runtime speedup (pool+simd over PR4 spawn+scalar) at m={}: {:.2}x (bar 1.5x); \
+         fused/write-back min over sweep: {:.2}x (bar 1.0x)",
+        rows.last().map(|r| r.m).unwrap_or(0),
+        rows.last().map(DecodeSweepRow::runtime_speedup).unwrap_or(0.0),
+        worst_gap
+    )?;
+    Ok(DecodeSweepReport {
+        k,
+        n,
+        group_size,
+        simd_level: simd_level(),
+        rows,
+        fused_rel_err,
+        writeback_rel_err,
+    })
+}
+
+/// One batch point of the measured end-to-end step sweep.
+#[derive(Debug, Clone, Copy)]
+pub struct StepThroughputRow {
+    /// Decode batch (tokens per step).
+    pub m: usize,
+    /// Median wall seconds per fused step.
+    pub fused_s: f64,
+    /// Median wall seconds per write-back step.
+    pub writeback_s: f64,
+    /// Fused tokens/sec (`m / fused_s`).
+    pub fused_tok_s: f64,
+    /// Write-back tokens/sec.
+    pub writeback_tok_s: f64,
+}
+
+impl StepThroughputRow {
+    /// Fused over write-back step throughput.
+    pub fn speedup(&self) -> f64 {
+        self.fused_tok_s / self.writeback_tok_s.max(1e-12)
+    }
+}
+
+/// Result set of [`step_throughput`]: measured decode tokens/sec for one
+/// full model step plus the step-fitted GPU-model calibration.
+#[derive(Debug, Clone)]
+pub struct StepThroughputReport {
+    /// Model whose GEMM stream ran.
+    pub model: Model,
+    /// Quantization group size used.
+    pub group_size: usize,
+    /// One row per swept batch, ascending.
+    pub rows: Vec<StepThroughputRow>,
+    /// `gpusim` calibration whose write-back penalty is fit to the
+    /// measured fused/write-back *step* gap at the largest swept batch
+    /// ([`calibrate_step_writeback`]).
+    pub calibrated: Calib,
+}
+
+impl StepThroughputReport {
+    /// The row for batch `m` (panics if the batch was not swept).
+    pub fn row(&self, m: usize) -> &StepThroughputRow {
+        self.rows.iter().find(|r| r.m == m).unwrap_or_else(|| panic!("batch {m} not swept"))
+    }
+}
+
+/// Measured end-to-end decode-step throughput (`simulate step`): run the
+/// whole [`crate::model::LlmSpec::gemms`] stream of `model` through the
+/// fused and write-back backends via [`StepExecutor`] at decode batches
+/// M ∈ {1, 2, 4, 8}, report tokens/sec, and fit the GPU model's
+/// write-back penalty to the measured *step* gap — the first measured
+/// end-to-end number `gpusim`/`simserve` can calibrate against.
+pub fn step_throughput(out: &mut impl Write, model: Model) -> Result<StepThroughputReport> {
+    step_throughput_with(out, model, 128, &DECODE_SWEEP_BATCHES, &Bench::fast())
+}
+
+/// [`step_throughput`] with explicit group size, batch list, and bench
+/// configuration.
+pub fn step_throughput_with(
+    out: &mut impl Write,
+    model: Model,
+    group_size: usize,
+    batches: &[usize],
+    bench: &Bench,
+) -> Result<StepThroughputReport> {
+    anyhow::ensure!(!batches.is_empty(), "batch list must be non-empty");
+    let spec = model.spec();
+    let m_max = batches.iter().copied().max().unwrap_or(1);
+    writeln!(
+        out,
+        "\n== Measured decode step: {} ({} weight GEMMs/step, g{group_size}, this CPU) ==",
+        spec.name,
+        spec.gemms().iter().map(|g| g.count).sum::<u64>()
+    )?;
+    let b = Blocking::default();
+    let mut fused = StepExecutor::new(&spec, StepBackend::Fused, b, group_size, m_max, 0x57E9)?;
+    let mut wb = StepExecutor::new(&spec, StepBackend::Writeback, b, group_size, m_max, 0x57E9)?;
+    writeln!(
+        out,
+        "{:>4} {:>12} {:>12} {:>12} {:>12} {:>10}",
+        "m", "fused tok/s", "wb tok/s", "fused step", "wb step", "fused/wb"
+    )?;
+    let mut rows = Vec::new();
+    for &m in batches {
+        let rf = bench.run(&format!("step fused {} m{m}", spec.name), || {
+            fused.step(m).expect("fused step").wall_s
+        });
+        let rw = bench.run(&format!("step writeback {} m{m}", spec.name), || {
+            wb.step(m).expect("writeback step").wall_s
+        });
+        let row = StepThroughputRow {
+            m,
+            fused_s: rf.median_ns / 1e9,
+            writeback_s: rw.median_ns / 1e9,
+            fused_tok_s: m as f64 / (rf.median_ns / 1e9),
+            writeback_tok_s: m as f64 / (rw.median_ns / 1e9),
+        };
+        writeln!(
+            out,
+            "{:>4} {:>12.1} {:>12.1} {:>12} {:>12} {:>9.2}x",
+            m,
+            row.fused_tok_s,
+            row.writeback_tok_s,
+            crate::util::bench::fmt_ns(rf.median_ns),
+            crate::util::bench::fmt_ns(rw.median_ns),
+            row.speedup()
+        )?;
+        rows.push(row);
+    }
+    // Engine hook: fit the GPU model's write-back penalty to the
+    // *measured step* gap, so simserve/kernel_model queries can run on
+    // an end-to-end-calibrated cost model.
+    let last = rows[rows.len() - 1];
+    let calibrated = calibrate_step_writeback(
+        &Gpu::Rtx4090.spec(),
+        &spec,
+        last.m as u64,
+        last.fused_s,
+        last.writeback_s,
+        &Calib::default(),
+    );
+    writeln!(
+        out,
+        "measured step wb/fused gap at m={}: {:.2}x -> step-calibrated gpusim \
+         writeback_scale {:.3} (default 1.0)",
+        last.m,
+        last.writeback_s / last.fused_s.max(1e-12),
+        calibrated.writeback_scale
+    )?;
+    Ok(StepThroughputReport { model, group_size, rows, calibrated })
+}
+
 /// The tp degrees swept by [`tensor_parallel`].
 pub const TP_DEGREES: [u64; 4] = [1, 2, 4, 8];
 
@@ -893,6 +1259,43 @@ mod tests {
         assert!(r.row(1).fused_gflops > 0.0 && r.row(4).writeback_gflops > 0.0);
         assert!(r.calibrated.writeback_scale >= 0.0);
         assert!(kernel_matmul_with(&mut std::io::sink(), 64, 48, 32, &[], &b).is_err());
+    }
+
+    #[test]
+    fn decode_sweep_smoke_is_consistent() {
+        // Tiny shape + smoke bench: exercises every runtime tier (pool /
+        // spawn x simd / scalar), the dispatch-overhead rows, and the
+        // differential gate without meaningful wall time.
+        let b = Bench::smoke().silent();
+        let r = decode_sweep_with(&mut std::io::sink(), 64, 48, 32, &[1, 2], &b).unwrap();
+        assert_eq!(r.rows.len(), 2);
+        assert!(
+            r.within_tolerance(),
+            "fused {:.2e} / wb {:.2e} off the naive reference",
+            r.fused_rel_err,
+            r.writeback_rel_err
+        );
+        for row in &r.rows {
+            assert!(row.fused_pool_simd_gflops > 0.0 && row.fused_spawn_scalar_gflops > 0.0);
+            assert!(row.pool_dispatch_ns >= 0.0 && row.spawn_dispatch_ns >= 0.0);
+            assert!(row.runtime_speedup() > 0.0 && row.fused_over_writeback() > 0.0);
+        }
+        assert!(["avx2", "neon", "scalar"].contains(&r.simd_level));
+        assert!(decode_sweep_with(&mut std::io::sink(), 64, 48, 32, &[], &b).is_err());
+    }
+
+    #[test]
+    fn step_throughput_smoke_on_tiny() {
+        let b = Bench::smoke().silent();
+        let r = step_throughput_with(&mut std::io::sink(), Model::Tiny, 128, &[1, 2], &b).unwrap();
+        assert_eq!(r.rows.len(), 2);
+        for row in &r.rows {
+            assert!(row.fused_tok_s > 0.0 && row.writeback_tok_s > 0.0, "m={}", row.m);
+            assert!(row.fused_s > 0.0 && row.writeback_s > 0.0);
+        }
+        // The step-fitted calibration must be a consumable Calib.
+        assert!(r.calibrated.writeback_scale >= 0.0 && r.calibrated.writeback_scale <= 1024.0);
+        assert_eq!(r.row(2).m, 2);
     }
 
     #[test]

@@ -326,11 +326,66 @@ pub fn calibrate_writeback(
         "measured latencies must be positive"
     );
     let target = (measured_writeback_s / measured_fused_s).max(1.0);
-    let ratio = |scale: f64| {
+    fit_writeback_scale(target, base, |scale| {
         let c = Calib { writeback_scale: scale, ..*base };
         model_gemm(dev, KernelKind::Awq, m, n, k, &c).latency_s
             / model_gemm(dev, KernelKind::Quick, m, n, k, &c).latency_s
-    };
+    })
+}
+
+/// Modeled latency of all weight GEMMs of one forward step of `spec` at
+/// batch `m` — the model-side twin of `kernel::StepExecutor::step`
+/// (which *measures* the same stream natively). Attention and
+/// collectives are intentionally excluded on both sides so measured and
+/// modeled step latencies are like-for-like.
+pub fn model_step_gemms(
+    dev: &DeviceSpec,
+    spec: &crate::model::LlmSpec,
+    kind: KernelKind,
+    m: u64,
+    calib: &Calib,
+) -> f64 {
+    spec.gemms()
+        .iter()
+        .map(|g| model_gemm(dev, kind, m, g.n, g.k, calib).latency_s * g.count as f64)
+        .sum()
+}
+
+/// Like [`calibrate_writeback`], but fit against a *measured full decode
+/// step* rather than a single GEMM: finds the [`Calib::writeback_scale`]
+/// at which the modeled AWQ/QUICK **step** latency ratio
+/// ([`model_step_gemms`]) matches the measured write-back/fused step
+/// ratio from `kernel::StepExecutor` (`simulate step`). Same bisection,
+/// same clamping semantics.
+///
+/// # Panics
+///
+/// Panics unless both measured step latencies are positive.
+pub fn calibrate_step_writeback(
+    dev: &DeviceSpec,
+    spec: &crate::model::LlmSpec,
+    m: u64,
+    measured_fused_s: f64,
+    measured_writeback_s: f64,
+    base: &Calib,
+) -> Calib {
+    assert!(
+        measured_fused_s > 0.0 && measured_writeback_s > 0.0,
+        "measured step latencies must be positive"
+    );
+    let target = (measured_writeback_s / measured_fused_s).max(1.0);
+    fit_writeback_scale(target, base, |scale| {
+        let c = Calib { writeback_scale: scale, ..*base };
+        model_step_gemms(dev, spec, KernelKind::Awq, m, &c)
+            / model_step_gemms(dev, spec, KernelKind::Quick, m, &c)
+    })
+}
+
+/// Shared bisection core of the two calibration hooks: find the
+/// `writeback_scale` at which `ratio(scale)` (monotone non-decreasing)
+/// reaches `target`, clamped to `[0, 1024]` with nearest-achievable
+/// fallback at either end.
+fn fit_writeback_scale(target: f64, base: &Calib, ratio: impl Fn(f64) -> f64) -> Calib {
     let (mut lo, mut hi) = (0.0f64, 1.0f64);
     while ratio(hi) < target && hi < 1024.0 {
         hi *= 2.0;
@@ -468,6 +523,46 @@ mod tests {
         let base = model_gemm(&dev, KernelKind::Awq, 64, 8192, 8192, &Calib::default());
         let doubled = model_gemm(&dev, KernelKind::Awq, 64, 8192, 8192, &scaled);
         assert!(doubled.latency_s > base.latency_s, "write-back term must scale");
+    }
+
+    #[test]
+    fn step_model_sums_the_gemm_stream() {
+        use crate::model::Model;
+        let dev = Gpu::A100.spec();
+        let spec = Model::Mistral7B.spec();
+        let calib = Calib::default();
+        let step = model_step_gemms(&dev, &spec, KernelKind::Quick, 8, &calib);
+        // Hand-sum must match, and the step must cost more than its
+        // single largest GEMM.
+        let by_hand: f64 = spec
+            .gemms()
+            .iter()
+            .map(|g| {
+                model_gemm(&dev, KernelKind::Quick, 8, g.n, g.k, &calib).latency_s
+                    * g.count as f64
+            })
+            .sum();
+        assert!((step - by_hand).abs() < 1e-12);
+        let one = model_gemm(&dev, KernelKind::Quick, 8, spec.d_ff, spec.d_model, &calib);
+        assert!(step > one.latency_s);
+    }
+
+    #[test]
+    fn calibrate_step_matches_measured_step_ratio() {
+        use crate::model::Model;
+        let dev = Gpu::A100.spec();
+        let spec = Model::Vicuna13B.spec();
+        let base = Calib::default();
+        let calib = calibrate_step_writeback(&dev, &spec, 8, 1.0e-2, 1.4e-2, &base);
+        let a = model_step_gemms(&dev, &spec, KernelKind::Awq, 8, &calib);
+        let q = model_step_gemms(&dev, &spec, KernelKind::Quick, 8, &calib);
+        let ratio = a / q;
+        assert!((ratio - 1.4).abs() < 0.03, "calibrated step ratio {ratio:.3} != 1.4");
+        // Floor semantics match the single-GEMM hook.
+        let floor = calibrate_step_writeback(&dev, &spec, 8, 1.0e-2, 1.0e-2, &base);
+        assert!(floor.writeback_scale < 0.05);
+        // Non-writeback fields pass through untouched.
+        assert_eq!(calib.dram_eff, base.dram_eff);
     }
 
     #[test]

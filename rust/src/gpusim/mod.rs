@@ -51,4 +51,7 @@ pub use e2e::{
     DecodeBreakdown, MixedStepBreakdown,
 };
 pub use gpu::{DeviceSpec, Gpu};
-pub use kernel_model::{calibrate_writeback, Calib, KernelKind, KernelPerf, TileConfig};
+pub use kernel_model::{
+    calibrate_step_writeback, calibrate_writeback, model_step_gemms, Calib, KernelKind,
+    KernelPerf, TileConfig,
+};

@@ -6,13 +6,18 @@
 //! `mma.m16n8k16` K-tiles), word-column panels — and the same `4 x 8`
 //! register microkernel, so the measured fused-vs-write-back gap isolates
 //! the scratch round-trip rather than a tuning difference.
+//!
+//! The [`Blocking::simd`] and [`Blocking::pool`] knobs select the runtime
+//! tier (vectorized microkernel/decoders; persistent worker pool) — both
+//! default on; the benches pin them off to measure each tier's
+//! contribution against PR 4's scalar spawn-per-call baseline.
 
 use anyhow::Result;
 
 use crate::quant::{MMA_K, PACK_FACTOR};
 
 /// Cache-blocking configuration for the native kernel backends.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct Blocking {
     /// Activation rows per M-block. Weight decode is amortized across the
     /// whole block (the paper's per-threadblock dequant multiplicity:
@@ -21,13 +26,24 @@ pub struct Blocking {
     /// Reduction rows per K-block; must be a positive multiple of 16
     /// (whole interleave K-tiles).
     pub kc: usize,
-    /// Word-columns (8 logical columns each) per N-panel. Sizes the
+    /// Word-columns (8 logical columns each) per N-panel — also the
+    /// work-stealing tile the thread partitioner hands out. Sizes the
     /// write-back path's scratch tile: `kc * nc_words * 8` f32 — the CPU
     /// stand-in for the baseline kernel's shared-memory staging buffer.
     pub nc_words: usize,
     /// Worker threads; `0` = auto (one per core for large problems,
-    /// single-threaded when the GEMM is too small to amortize spawning).
+    /// single-threaded when the GEMM is too small to amortize dispatch).
+    /// Explicit and auto counts alike are clamped by
+    /// [`Blocking::resolve_threads`].
     pub threads: usize,
+    /// Use the SIMD microkernel and nibble decoders when the host
+    /// supports them (`false` pins the portable scalar paths — the bench
+    /// comparison rows).
+    pub simd: bool,
+    /// Dispatch column-panel tiles through the persistent
+    /// [`super::WorkerPool`] (`false` reverts to PR 4's spawn-per-call
+    /// scoped threads — the bench comparison rows).
+    pub pool: bool,
 }
 
 impl Default for Blocking {
@@ -35,7 +51,7 @@ impl Default for Blocking {
         // mc 64 x kc 256 keeps the x strip (~64 KiB) L2-resident; nc 16
         // words = 128 columns gives the write-back path a 128 KiB scratch
         // tile, the same order as the smem staging the AWQ kernel pays.
-        Blocking { mc: 64, kc: 256, nc_words: 16, threads: 0 }
+        Blocking { mc: 64, kc: 256, nc_words: 16, threads: 0, simd: true, pool: true }
     }
 }
 
@@ -60,24 +76,38 @@ impl Blocking {
         Ok(())
     }
 
-    /// Resolve the worker count for an `m x k x n` GEMM: the configured
-    /// count, or (auto) one thread per core once the problem is large
-    /// enough to amortize spawn + scatter, never more than one per
-    /// word-column.
-    pub fn effective_threads(&self, m: usize, k: usize, n: usize) -> usize {
-        let w_total = n / PACK_FACTOR;
-        let cap = w_total.max(1);
+    /// Number of column-panel work-stealing tiles an `n`-column output
+    /// splits into (the parallelism ceiling of the partitioner).
+    pub fn n_tiles(&self, n: usize) -> usize {
+        (n / PACK_FACTOR).div_ceil(self.nc_words).max(1)
+    }
+
+    /// Resolve the worker count for an `m x k x n` GEMM.
+    ///
+    /// * Explicit requests (`threads > 0`) are clamped to the number of
+    ///   column-panel tiles — asking for 64 threads on a 4-tile problem
+    ///   used to oversubscribe; now it resolves to 4. (M-blocks do not
+    ///   multiply parallelism: the partitioner splits the N axis only, so
+    ///   the N-tile count is the true ceiling.)
+    /// * Auto (`threads == 0`) resolves to one thread per core — capped
+    ///   at [`std::thread::available_parallelism`] *and* the tile count —
+    ///   and stays single-threaded when the GEMM is too small to
+    ///   amortize even pooled dispatch.
+    pub fn resolve_threads(&self, m: usize, k: usize, n: usize) -> usize {
+        let cap = self.n_tiles(n);
         if self.threads != 0 {
-            return self.threads.min(cap);
+            return self.threads.min(cap).max(1);
         }
         let flops = 2 * m * k * n;
         if flops < (1 << 22) {
             return 1;
         }
-        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1).min(cap)
+        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1).min(cap).max(1)
     }
 
-    /// f32 capacity of the write-back scratch tile this blocking implies.
+    /// f32 capacity of the write-back scratch tile this blocking implies
+    /// (also the per-slot scratch the plan cache keeps resident; the
+    /// fused path's `kc x 8` fragment panel is a prefix of it).
     pub fn scratch_len(&self) -> usize {
         self.kc * self.nc_words * PACK_FACTOR
     }
@@ -105,19 +135,29 @@ mod tests {
     }
 
     #[test]
-    fn thread_resolution() {
+    fn resolve_threads_clamps_and_caps() {
         let auto = Blocking::default();
         // Tiny problem: stay single-threaded regardless of cores.
-        assert_eq!(auto.effective_threads(1, 64, 64), 1);
-        // Explicit count is honored but capped at one per word-column.
-        let two = Blocking { threads: 2, ..Blocking::default() };
-        assert_eq!(two.effective_threads(1, 64, 64), 2);
+        assert_eq!(auto.resolve_threads(1, 64, 64), 1);
+        // Auto on a large problem: at least one thread, never more than
+        // the host's cores or the column-panel tile count.
+        let cores = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+        let t = auto.resolve_threads(256, 4096, 4096);
+        assert!(t >= 1 && t <= cores && t <= auto.n_tiles(4096));
+        // Explicit requests above the tile count are clamped, not
+        // oversubscribed: 4096 columns = 512 word-columns = 32 default
+        // tiles, so 64 requested threads resolve to 32.
         let many = Blocking { threads: 64, ..Blocking::default() };
-        assert_eq!(many.effective_threads(1, 64, 16), 2);
-        // Large problem in auto mode: at least one thread, never more
-        // than one per word-column.
-        let t = auto.effective_threads(256, 4096, 4096);
-        assert!(t >= 1 && t <= 4096 / 8);
+        assert_eq!(many.n_tiles(4096), 32);
+        assert_eq!(many.resolve_threads(1, 64, 4096), 32);
+        // A 64-column output is a single tile: everything resolves to 1.
+        assert_eq!(many.resolve_threads(1, 64, 64), 1);
+        // Explicit requests at or below the tile count are honored.
+        let two = Blocking { threads: 2, ..Blocking::default() };
+        assert_eq!(two.resolve_threads(1, 64, 4096), 2);
+        // Finer tiles raise the ceiling.
+        let fine = Blocking { nc_words: 1, threads: 64, ..Blocking::default() };
+        assert_eq!(fine.resolve_threads(1, 64, 128), 16);
     }
 
     #[test]

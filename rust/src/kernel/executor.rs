@@ -1,0 +1,304 @@
+//! `StepExecutor` — run every weight GEMM of one LLM decode step through
+//! a chosen native backend, end to end.
+//!
+//! PR 4 proved the fused-vs-write-back gap on isolated GEMMs; serving
+//! cares about the *step*: all of [`LlmSpec::gemms`] (`wq`/`wk`/`wv`/
+//! `wo`, the SwiGLU triple, `lm_head`), each run `count` times, at the
+//! decode batch M. The executor prepares one packed weight matrix per
+//! GEMM shape (synthetic, seeded — layers share weights, which changes
+//! nothing about the memory/compute path being measured), pre-generates
+//! activations, and times a full pass — the first *measured* end-to-end
+//! tokens/sec this repo produces, which
+//! [`crate::gpusim::calibrate_step_writeback`] fits the GPU model
+//! against (`simulate step`).
+//!
+//! [`StepExecutor::new_tp`] builds the per-rank view instead
+//! ([`LlmSpec::tp_gemms`], Megatron partitioning), so one process can
+//! measure what a tensor-parallel rank's GEMM stream costs natively.
+//!
+//! Correctness is property-tested: a fused (or write-back) executor's
+//! outputs must match a naive executor's per-GEMM reference outputs on
+//! identical seeds (`tests/property_tests.rs`).
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::model::{GemmShape, LlmSpec};
+use crate::quant::quantize_groupwise;
+use crate::util::Rng;
+
+use super::blocking::Blocking;
+use super::{AwqWritebackBackend, KernelBackend, NaiveBackend, QuickFusedBackend};
+
+/// Which executable backend a [`StepExecutor`] drives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StepBackend {
+    /// f64-accumulating dense reference ([`NaiveBackend`]).
+    Naive,
+    /// Fused-from-interleaved QUICK path ([`QuickFusedBackend`]).
+    Fused,
+    /// Dequant-to-scratch AWQ baseline ([`AwqWritebackBackend`]).
+    Writeback,
+}
+
+impl StepBackend {
+    /// Short display label (report rows, JSON).
+    pub fn label(self) -> &'static str {
+        match self {
+            StepBackend::Naive => "naive",
+            StepBackend::Fused => "fused",
+            StepBackend::Writeback => "writeback",
+        }
+    }
+}
+
+/// One weight GEMM of the step, prepared for repeated execution.
+pub struct StepGemm {
+    /// Projection name ("wq", "w_down", "lm_head", ...).
+    pub name: &'static str,
+    /// Reduction dimension.
+    pub k: usize,
+    /// Output features.
+    pub n: usize,
+    /// Executions per forward pass (= n_layers for per-layer GEMMs).
+    pub count: usize,
+    backend: Box<dyn KernelBackend>,
+}
+
+impl StepGemm {
+    /// The prepared backend for this GEMM.
+    pub fn backend(&self) -> &dyn KernelBackend {
+        self.backend.as_ref()
+    }
+}
+
+/// Timing result of one executed step.
+#[derive(Debug, Clone, Copy)]
+pub struct StepResult {
+    /// Decode batch (tokens in flight; one token per sequence).
+    pub m: usize,
+    /// Wall-clock seconds for the whole step.
+    pub wall_s: f64,
+    /// GEMM invocations performed (sum of counts).
+    pub gemm_calls: usize,
+    /// True multiply-add flops of the step (2·m·Σ k·n·count).
+    pub flops: f64,
+    /// End-to-end decode throughput: `m / wall_s`.
+    pub tokens_per_s: f64,
+}
+
+impl StepResult {
+    /// Aggregate GEMM throughput of the step in GFLOP/s.
+    pub fn gflops(&self) -> f64 {
+        self.flops / self.wall_s.max(1e-12) / 1e9
+    }
+}
+
+/// Runs one model's full decode-step GEMM stream through a chosen
+/// [`KernelBackend`] (see the module docs).
+pub struct StepExecutor {
+    name: &'static str,
+    backend: StepBackend,
+    m_max: usize,
+    gemms: Vec<StepGemm>,
+    /// One activation buffer per distinct reduction dimension
+    /// (`m_max * k` values, sliced to the step's M).
+    xs: BTreeMap<usize, Vec<f32>>,
+    /// One output buffer per GEMM (`m_max * n`, sliced to the step's M);
+    /// retained so reference checks can inspect the last step's outputs.
+    ys: Vec<Vec<f32>>,
+}
+
+impl StepExecutor {
+    /// Prepare the full (un-sharded) decode step of `spec`: one seeded
+    /// random quantized weight matrix per [`LlmSpec::gemms`] entry,
+    /// packed for `backend`, plus activation/output buffers for batches
+    /// up to `m_max`.
+    pub fn new(
+        spec: &LlmSpec,
+        backend: StepBackend,
+        blocking: Blocking,
+        group_size: usize,
+        m_max: usize,
+        seed: u64,
+    ) -> Result<StepExecutor> {
+        Self::from_gemms(spec.name, &spec.gemms(), backend, blocking, group_size, m_max, seed)
+    }
+
+    /// Prepare one rank's share of a `tp`-way tensor-parallel step
+    /// ([`LlmSpec::tp_gemms`]; panics on non-divisible head counts, like
+    /// `tp_gemms` itself).
+    pub fn new_tp(
+        spec: &LlmSpec,
+        tp: u64,
+        backend: StepBackend,
+        blocking: Blocking,
+        group_size: usize,
+        m_max: usize,
+        seed: u64,
+    ) -> Result<StepExecutor> {
+        Self::from_gemms(spec.name, &spec.tp_gemms(tp), backend, blocking, group_size, m_max, seed)
+    }
+
+    /// Prepare an arbitrary GEMM list (the entry point the spec wrappers
+    /// funnel into; property tests drive it with random shape sets).
+    pub fn from_gemms(
+        name: &'static str,
+        shapes: &[GemmShape],
+        backend: StepBackend,
+        blocking: Blocking,
+        group_size: usize,
+        m_max: usize,
+        seed: u64,
+    ) -> Result<StepExecutor> {
+        anyhow::ensure!(!shapes.is_empty(), "step needs at least one GEMM");
+        anyhow::ensure!(m_max > 0, "m_max must be > 0");
+        let mut rng = Rng::seed_from_u64(seed);
+        let mut gemms = Vec::with_capacity(shapes.len());
+        for g in shapes {
+            let (k, n) = (g.k as usize, g.n as usize);
+            blocking.validate(k, n)?;
+            anyhow::ensure!(
+                group_size > 0 && k % group_size == 0,
+                "{}: K={k} not divisible by group_size={group_size}",
+                g.name
+            );
+            let w: Vec<f32> = (0..k * n).map(|_| rng.range_f64(-0.5, 0.5) as f32).collect();
+            let t = quantize_groupwise(&w, k, n, group_size);
+            let be: Box<dyn KernelBackend> = match backend {
+                StepBackend::Naive => Box::new(NaiveBackend::from_quantized(&t)),
+                StepBackend::Fused => Box::new(QuickFusedBackend::new(&t, blocking)),
+                StepBackend::Writeback => Box::new(AwqWritebackBackend::new(&t, blocking)),
+            };
+            gemms.push(StepGemm { name: g.name, k, n, count: g.count as usize, backend: be });
+        }
+        let mut xs: BTreeMap<usize, Vec<f32>> = BTreeMap::new();
+        for g in &gemms {
+            xs.entry(g.k).or_insert_with(|| {
+                (0..m_max * g.k).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect()
+            });
+        }
+        let ys = gemms.iter().map(|g| vec![0f32; m_max * g.n]).collect();
+        Ok(StepExecutor { name, backend, m_max, gemms, xs, ys })
+    }
+
+    /// Model/config name this executor was built from.
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+
+    /// The backend every GEMM runs through.
+    pub fn backend_kind(&self) -> StepBackend {
+        self.backend
+    }
+
+    /// Largest batch [`StepExecutor::step`] accepts.
+    pub fn m_max(&self) -> usize {
+        self.m_max
+    }
+
+    /// The prepared GEMM list, in execution order.
+    pub fn gemms(&self) -> &[StepGemm] {
+        &self.gemms
+    }
+
+    /// True multiply-add flops of one step at batch `m`.
+    pub fn step_flops(&self, m: usize) -> f64 {
+        2.0 * m as f64 * self.gemms.iter().map(|g| (g.k * g.n * g.count) as f64).sum::<f64>()
+    }
+
+    /// Run one full decode step at batch `m` (`1 ..= m_max`), timing the
+    /// whole GEMM stream. After the first call per M, every plan is
+    /// cached and the stream allocates nothing.
+    pub fn step(&mut self, m: usize) -> Result<StepResult> {
+        anyhow::ensure!(
+            m >= 1 && m <= self.m_max,
+            "step batch {m} outside 1..={} (m_max)",
+            self.m_max
+        );
+        let t0 = Instant::now();
+        let mut gemm_calls = 0;
+        for (gi, g) in self.gemms.iter().enumerate() {
+            let x = &self.xs[&g.k][..m * g.k];
+            let y = &mut self.ys[gi][..m * g.n];
+            for _ in 0..g.count {
+                g.backend.gemm(x, m, y);
+                gemm_calls += 1;
+            }
+        }
+        let wall_s = t0.elapsed().as_secs_f64().max(1e-12);
+        Ok(StepResult {
+            m,
+            wall_s,
+            gemm_calls,
+            flops: self.step_flops(m),
+            tokens_per_s: m as f64 / wall_s,
+        })
+    }
+
+    /// The activation buffer for reduction dimension `k`, sliced to
+    /// batch `m` (reference checks).
+    pub fn activation(&self, k: usize, m: usize) -> &[f32] {
+        &self.xs[&k][..m * k]
+    }
+
+    /// GEMM `gi`'s output from the most recent step that ran at batch
+    /// >= `m`, sliced to `m` rows (reference checks).
+    pub fn output(&self, gi: usize, m: usize) -> &[f32] {
+        &self.ys[gi][..m * self.gemms[gi].n]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::max_rel_err;
+    use crate::model::Model;
+
+    #[test]
+    fn fused_step_matches_naive_step_on_tiny() {
+        let spec = Model::Tiny.spec();
+        let b = Blocking::default();
+        let mut naive = StepExecutor::new(&spec, StepBackend::Naive, b, 128, 4, 7).unwrap();
+        let mut fused = StepExecutor::new(&spec, StepBackend::Fused, b, 128, 4, 7).unwrap();
+        let rn = naive.step(3).unwrap();
+        let rf = fused.step(3).unwrap();
+        assert_eq!(rn.gemm_calls, rf.gemm_calls);
+        assert_eq!(rn.gemm_calls, 7 * 4 + 1, "7 per-layer GEMMs x 4 layers + lm_head");
+        assert!(rf.tokens_per_s > 0.0 && rf.gflops() > 0.0);
+        for gi in 0..naive.gemms().len() {
+            let err = max_rel_err(fused.output(gi, 3), naive.output(gi, 3));
+            assert!(err <= 1e-4, "gemm {gi} ({}): {err}", naive.gemms()[gi].name);
+        }
+    }
+
+    #[test]
+    fn tp_rank_shrinks_the_stream() {
+        let spec = Model::Tiny.spec();
+        let b = Blocking::default();
+        let full = StepExecutor::new(&spec, StepBackend::Fused, b, 64, 2, 1).unwrap();
+        let rank = StepExecutor::new_tp(&spec, 2, StepBackend::Fused, b, 64, 2, 1).unwrap();
+        assert!(rank.step_flops(1) < full.step_flops(1));
+        // Megatron partitioning shards every GEMM's volume by tp.
+        assert!((rank.step_flops(1) - full.step_flops(1) / 2.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn step_rejects_out_of_range_batches() {
+        let spec = Model::Tiny.spec();
+        let mut e =
+            StepExecutor::new(&spec, StepBackend::Fused, Blocking::default(), 128, 2, 3).unwrap();
+        assert!(e.step(0).is_err());
+        assert!(e.step(3).is_err());
+        assert!(e.step(2).is_ok());
+    }
+
+    #[test]
+    fn rejects_misaligned_group_size() {
+        let spec = Model::Tiny.spec();
+        let e = StepExecutor::new(&spec, StepBackend::Fused, Blocking::default(), 96, 2, 3);
+        assert!(e.is_err(), "96 does not divide d_model=256");
+    }
+}

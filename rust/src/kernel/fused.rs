@@ -15,15 +15,20 @@
 //! multiplicity (once per M-block pass), blocking, threading, and the
 //! microkernel are identical across the two paths, so the measured gap
 //! isolates the staging round-trip.
+//!
+//! Execution runs through the kernel runtime: the per-shape
+//! [`GemmPlan`] supplies precomputed run offsets, work-stealing tiles,
+//! and resident scratch (nothing allocates on a repeated-shape call);
+//! [`Blocking::simd`] selects the vectorized microkernel + decoder pair.
 
 use anyhow::Result;
 
-use crate::quant::decode::{decode_quick_run_into, quick_run_offset, TILE_COLS, TILE_ROWS};
+use crate::quant::decode::{select_quick_decoder, TILE_COLS, TILE_ROWS};
 use crate::quant::{pack_quick, QuantizedTensor, PACK_FACTOR};
 
 use super::blocking::Blocking;
-use super::microkernel::fma_tile8;
-use super::partition;
+use super::microkernel;
+use super::plan::{GemmPlan, PlanCache};
 
 /// A weight matrix packed into the full QUICK layout (interleaved stream
 /// + group metadata), ready for [`gemm_quick_fused`].
@@ -64,7 +69,9 @@ impl QuickWeights {
 /// `y(m, n) = x(m, k) @ w(k, n)` with `w` consumed directly from the
 /// interleaved QUICK stream; `y` is overwritten.
 ///
-/// Errors on shape violations (`x`/`y` length, blocking contract).
+/// Resolves the execution plan through the process-wide [`PlanCache`]
+/// (a map hit on every repeated shape — every decode step); errors on
+/// shape violations (`x`/`y` length, blocking contract).
 pub fn gemm_quick_fused(
     x: &[f32],
     m: usize,
@@ -72,30 +79,51 @@ pub fn gemm_quick_fused(
     b: &Blocking,
     y: &mut [f32],
 ) -> Result<()> {
-    b.validate(w.k, w.n)?;
-    anyhow::ensure!(m > 0, "M must be > 0");
+    let plan = PlanCache::global().plan(m, w.k, w.n, b)?;
+    gemm_quick_fused_planned(x, w, &plan, y)
+}
+
+/// [`gemm_quick_fused`] with a caller-held [`GemmPlan`] — the
+/// `StepExecutor` hot path, which resolves each layer's plan once and
+/// skips even the cache lookup per call.
+pub fn gemm_quick_fused_planned(
+    x: &[f32],
+    w: &QuickWeights,
+    plan: &GemmPlan,
+    y: &mut [f32],
+) -> Result<()> {
+    anyhow::ensure!(
+        plan.k == w.k && plan.n == w.n,
+        "plan shape ({}, {}) does not match weights ({}, {})",
+        plan.k,
+        plan.n,
+        w.k,
+        w.n
+    );
+    let m = plan.m;
     anyhow::ensure!(x.len() == m * w.k, "x holds {} values, needs {}", x.len(), m * w.k);
     anyhow::ensure!(y.len() == m * w.n, "y holds {} values, needs {}", y.len(), m * w.n);
-    y.fill(0.0);
-    let threads = b.effective_threads(m, w.k, w.n);
-    partition::gemm_over_columns(m, w.n, threads, y, &|wr, out: &mut [f32], ldy, out_c0| {
-        let w_total = w.n / PACK_FACTOR;
+    let b = plan.blocking;
+    let kern = microkernel::select(b.simd);
+    let decode = select_quick_decoder(b.simd);
+    plan.execute(y, &|panel, out, ldy, out_c0, scratch| {
         // The K-strip fragment panel: kc x 8 f32 (8 KiB at the default
-        // blocking), reused for every (M-block, K-block, word-column).
-        // This is the register-file analogue — written linearly by the
-        // sequential decode, still L1-hot when the microkernel reads it.
-        let mut panel = vec![0f32; b.kc * TILE_COLS];
+        // blocking), resident in the plan's per-slot scratch and refilled
+        // for every (M-block, K-block, word-column). This is the
+        // register-file analogue — written linearly by the sequential
+        // decode, still L1-hot when the microkernel reads it.
+        let frag = &mut scratch[..b.kc * TILE_COLS];
         let mut m0 = 0;
         while m0 < m {
             let m1 = (m0 + b.mc).min(m);
             let mut kb0 = 0;
             while kb0 < w.k {
                 let kc_len = b.kc.min(w.k - kb0);
-                for wj in wr.clone() {
+                for wj in panel.wj0..panel.wj1 {
                     for kt_rel in 0..kc_len / TILE_ROWS {
                         let row0 = kb0 + kt_rel * TILE_ROWS;
-                        let off = quick_run_offset(row0 / TILE_ROWS, wj, w_total);
-                        decode_quick_run_into(
+                        let off = plan.run_offset(row0 / TILE_ROWS, wj);
+                        decode(
                             &w.stream[off..off + TILE_ROWS],
                             row0,
                             wj * PACK_FACTOR,
@@ -103,17 +131,17 @@ pub fn gemm_quick_fused(
                             &w.zeros,
                             w.n,
                             w.group_size,
-                            &mut panel[kt_rel * TILE_ROWS * TILE_COLS..],
+                            &mut frag[kt_rel * TILE_ROWS * TILE_COLS..],
                         );
                     }
-                    fma_tile8(
+                    kern(
                         x,
                         w.k,
                         m0,
                         m1,
                         kb0,
                         kc_len,
-                        &panel,
+                        frag,
                         TILE_COLS,
                         out,
                         ldy,
@@ -167,24 +195,54 @@ mod tests {
         let mut want = vec![0f32; m * n];
         naive.gemm(&x, m, &mut want);
         let w = QuickWeights::from_quantized(&t);
-        let tiny = Blocking { mc: 3, kc: 32, nc_words: 1, threads: 1 };
+        let tiny = Blocking { mc: 3, kc: 32, nc_words: 1, threads: 1, ..Blocking::default() };
         let mut got = vec![0f32; m * n];
         gemm_quick_fused(&x, m, &w, &tiny, &mut got).unwrap();
         assert!(max_rel_err(&got, &want) <= 1e-4);
     }
 
     #[test]
-    fn multithreaded_equals_single() {
+    fn multithreaded_pool_and_spawn_equal_single() {
         let (k, n, g, m) = (64, 80, 32, 6);
         let (x, t) = rand_case(k, n, g, m, 99);
         let w = QuickWeights::from_quantized(&t);
         let mut single = vec![0f32; m * n];
         gemm_quick_fused(&x, m, &w, &Blocking { threads: 1, ..Blocking::default() }, &mut single)
             .unwrap();
-        let mut multi = vec![0f32; m * n];
-        gemm_quick_fused(&x, m, &w, &Blocking { threads: 3, ..Blocking::default() }, &mut multi)
+        for pool in [true, false] {
+            let b = Blocking { threads: 3, nc_words: 2, pool, ..Blocking::default() };
+            let mut multi = vec![0f32; m * n];
+            gemm_quick_fused(&x, m, &w, &b, &mut multi).unwrap();
+            assert_eq!(single, multi, "pool={pool}: partition must not change results");
+        }
+    }
+
+    #[test]
+    fn simd_and_scalar_agree_closely() {
+        // FMA rounds once per multiply-add where the scalar path rounds
+        // twice; the difference grows with K, so the full-GEMM bar is
+        // 1e-5 (the strict 1e-6 microkernel property lives in
+        // microkernel.rs over short reductions).
+        let (k, n, g, m) = (256, 64, 64, 9);
+        let (x, t) = rand_case(k, n, g, m, 31);
+        let w = QuickWeights::from_quantized(&t);
+        let mut simd = vec![0f32; m * n];
+        let mut scalar = vec![0f32; m * n];
+        gemm_quick_fused(&x, m, &w, &Blocking { threads: 1, ..Blocking::default() }, &mut simd)
             .unwrap();
-        assert_eq!(single, multi, "column partition must not change results");
+        let sb = Blocking { threads: 1, simd: false, ..Blocking::default() };
+        gemm_quick_fused(&x, m, &w, &sb, &mut scalar).unwrap();
+        assert!(max_rel_err(&simd, &scalar) <= 1e-5);
+    }
+
+    #[test]
+    fn planned_entry_rejects_mismatched_plan() {
+        let (x, t) = rand_case(32, 16, 32, 2, 1);
+        let w = QuickWeights::from_quantized(&t);
+        let plan = PlanCache::global().plan(2, 64, 16, &Blocking::default()).unwrap();
+        let mut y = vec![0f32; 2 * 16];
+        let e = gemm_quick_fused_planned(&x, &w, &plan, &mut y).unwrap_err();
+        assert!(e.to_string().contains("plan shape"), "{e}");
     }
 
     #[test]

@@ -1,5 +1,5 @@
 //! The register-tiled `4 x 8` FMA microkernel both native GEMM paths
-//! share.
+//! share — now with explicitly vectorized variants.
 //!
 //! One invocation accumulates `y[r, col0..col0+8] += x[r, kk0..kk0+len] @
 //! tile` for `r` in an M-strip, reading dequantized weights from `tile`
@@ -10,6 +10,22 @@
 //! memory round-trip the paper's baseline kernel pays through shared
 //! memory. Identical inner loop either way, so the measured gap is the
 //! operand's journey, not the arithmetic.
+//!
+//! Three implementations sit behind one function-pointer dispatch
+//! ([`select`]):
+//!
+//! * **AVX2 + FMA** (x86_64) — the 8 columns of one packed word are
+//!   exactly one 256-bit lane; the 4x8 accumulator block lives in four
+//!   `ymm` registers across the whole reduction, with one broadcast + one
+//!   `vfmadd` per (row, k) step. Gated on a one-time runtime CPUID check.
+//! * **NEON** (aarch64) — the same block as eight `float32x4_t`
+//!   accumulators (two per row), `vfmaq_n_f32` per half-row.
+//! * **scalar** — the portable fallback (PR 4's original loop), also the
+//!   reference the SIMD paths are property-tested against (within 1e-6:
+//!   fused-multiply-add rounds once where mul+add rounds twice).
+//!
+//! Selection is per-GEMM-call via [`Blocking::simd`]
+//! (`crate::kernel::Blocking`), so benches can pin either path.
 
 /// Rows per register strip (`MR`): 4 rows x 8 columns of f32 accumulators
 /// stay in registers across the whole reduction.
@@ -19,15 +35,89 @@ pub const MR: usize = 4;
 /// packed word.
 pub const NR: usize = 8;
 
-/// Accumulate `y[m0..m1, col0..col0+8] += x[m0..m1, kk0..kk0+len] @ tile`.
+/// The shared microkernel signature: accumulate
+/// `y[m0..m1, col0..col0+NR] += x[m0..m1, kk0..kk0+len] @ tile`.
 ///
 /// * `x` — activations, row-major `(m, k)` with row stride `k`.
 /// * `tile` — dequantized weight panel: `len` rows x 8 columns, row
 ///   stride `tile_stride` (8 for the fused fragment, panel width for the
 ///   write-back scratch).
 /// * `y` — output, row stride `ldy`, columns starting at `col0`.
+pub(crate) type MicrokernelFn = fn(
+    x: &[f32],
+    k: usize,
+    m0: usize,
+    m1: usize,
+    kk0: usize,
+    len: usize,
+    tile: &[f32],
+    tile_stride: usize,
+    y: &mut [f32],
+    ldy: usize,
+    col0: usize,
+);
+
+/// Pick the microkernel for this host: the SIMD variant when `simd` is
+/// set and the CPU supports it, the portable scalar loop otherwise.
+pub(crate) fn select(simd: bool) -> MicrokernelFn {
+    if simd {
+        #[cfg(target_arch = "x86_64")]
+        if avx2_available() {
+            return fma_tile8_avx2;
+        }
+        #[cfg(target_arch = "aarch64")]
+        return fma_tile8_neon;
+    }
+    fma_tile8_scalar
+}
+
+/// The SIMD level [`select`]`(true)` resolves to on this host
+/// (`"avx2"`, `"neon"`, or `"scalar"`) — bench/JSON row labeling.
+pub fn simd_level() -> &'static str {
+    if cfg!(target_arch = "aarch64") {
+        return "neon";
+    }
+    #[cfg(target_arch = "x86_64")]
+    if avx2_available() {
+        return "avx2";
+    }
+    "scalar"
+}
+
+// The shared AVX2+FMA CPUID probe: one definition gates the microkernel
+// and the nibble decoders identically, so the "avx2" tier is coherent.
+#[cfg(target_arch = "x86_64")]
+use crate::quant::decode::avx2_available;
+
+/// Bounds shared by every variant; hoisted so the unsafe paths can rely
+/// on them (debug builds assert, release builds trust the callers inside
+/// this crate — both GEMM drivers produce in-range strips by
+/// construction).
+#[inline]
 #[allow(clippy::too_many_arguments)]
-pub(crate) fn fma_tile8(
+fn check_bounds(
+    x: &[f32],
+    k: usize,
+    m1: usize,
+    kk0: usize,
+    len: usize,
+    tile: &[f32],
+    tile_stride: usize,
+    y: &[f32],
+    ldy: usize,
+    col0: usize,
+) {
+    assert!(tile_stride >= NR, "tile stride below the 8-column tile");
+    assert!(len > 0 && tile.len() >= (len - 1) * tile_stride + NR, "tile panel too short");
+    if m1 > 0 {
+        assert!(x.len() >= (m1 - 1) * k + kk0 + len, "x strip out of range");
+        assert!(y.len() >= (m1 - 1) * ldy + col0 + NR, "y strip out of range");
+    }
+}
+
+/// Portable scalar microkernel (see [`MicrokernelFn`] for the contract).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn fma_tile8_scalar(
     x: &[f32],
     k: usize,
     m0: usize,
@@ -40,7 +130,7 @@ pub(crate) fn fma_tile8(
     ldy: usize,
     col0: usize,
 ) {
-    debug_assert!(tile_stride >= NR && tile.len() >= (len - 1) * tile_stride + NR);
+    check_bounds(x, k, m1, kk0, len, tile, tile_stride, y, ldy, col0);
     let mut r = m0;
     while r + MR <= m1 {
         let mut acc = [[0f32; NR]; MR];
@@ -79,9 +169,140 @@ pub(crate) fn fma_tile8(
     }
 }
 
+/// AVX2 entry point: safe wrapper that asserts the strip bounds, then
+/// calls the `target_feature` body. Only reachable through [`select`],
+/// which verified CPUID support.
+#[cfg(target_arch = "x86_64")]
+#[allow(clippy::too_many_arguments)]
+fn fma_tile8_avx2(
+    x: &[f32],
+    k: usize,
+    m0: usize,
+    m1: usize,
+    kk0: usize,
+    len: usize,
+    tile: &[f32],
+    tile_stride: usize,
+    y: &mut [f32],
+    ldy: usize,
+    col0: usize,
+) {
+    check_bounds(x, k, m1, kk0, len, tile, tile_stride, y, ldy, col0);
+    // SAFETY: `select` gated this path on the AVX2+FMA CPUID probe, and
+    // `check_bounds` proved every pointer offset below in range.
+    unsafe { fma_tile8_avx2_body(x, k, m0, m1, kk0, len, tile, tile_stride, y, ldy, col0) }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2", enable = "fma")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn fma_tile8_avx2_body(
+    x: &[f32],
+    k: usize,
+    m0: usize,
+    m1: usize,
+    kk0: usize,
+    len: usize,
+    tile: &[f32],
+    tile_stride: usize,
+    y: &mut [f32],
+    ldy: usize,
+    col0: usize,
+) {
+    use std::arch::x86_64::*;
+    let xp = x.as_ptr();
+    let yp = y.as_mut_ptr();
+    let mut r = m0;
+    while r + MR <= m1 {
+        let mut acc0 = _mm256_setzero_ps();
+        let mut acc1 = _mm256_setzero_ps();
+        let mut acc2 = _mm256_setzero_ps();
+        let mut acc3 = _mm256_setzero_ps();
+        let mut tp = tile.as_ptr();
+        let xbase = xp.add(r * k + kk0);
+        for kk in 0..len {
+            let trow = _mm256_loadu_ps(tp);
+            tp = tp.add(tile_stride);
+            acc0 = _mm256_fmadd_ps(_mm256_set1_ps(*xbase.add(kk)), trow, acc0);
+            acc1 = _mm256_fmadd_ps(_mm256_set1_ps(*xbase.add(k + kk)), trow, acc1);
+            acc2 = _mm256_fmadd_ps(_mm256_set1_ps(*xbase.add(2 * k + kk)), trow, acc2);
+            acc3 = _mm256_fmadd_ps(_mm256_set1_ps(*xbase.add(3 * k + kk)), trow, acc3);
+        }
+        for (i, acc) in [acc0, acc1, acc2, acc3].into_iter().enumerate() {
+            let yrow = yp.add((r + i) * ldy + col0);
+            _mm256_storeu_ps(yrow, _mm256_add_ps(_mm256_loadu_ps(yrow), acc));
+        }
+        r += MR;
+    }
+    while r < m1 {
+        let mut acc = _mm256_setzero_ps();
+        let mut tp = tile.as_ptr();
+        let xbase = xp.add(r * k + kk0);
+        for kk in 0..len {
+            let trow = _mm256_loadu_ps(tp);
+            tp = tp.add(tile_stride);
+            acc = _mm256_fmadd_ps(_mm256_set1_ps(*xbase.add(kk)), trow, acc);
+        }
+        let yrow = yp.add(r * ldy + col0);
+        _mm256_storeu_ps(yrow, _mm256_add_ps(_mm256_loadu_ps(yrow), acc));
+        r += 1;
+    }
+}
+
+/// NEON entry point (aarch64 mandates NEON, so no runtime probe).
+#[cfg(target_arch = "aarch64")]
+#[allow(clippy::too_many_arguments)]
+fn fma_tile8_neon(
+    x: &[f32],
+    k: usize,
+    m0: usize,
+    m1: usize,
+    kk0: usize,
+    len: usize,
+    tile: &[f32],
+    tile_stride: usize,
+    y: &mut [f32],
+    ldy: usize,
+    col0: usize,
+) {
+    check_bounds(x, k, m1, kk0, len, tile, tile_stride, y, ldy, col0);
+    // SAFETY: NEON is a baseline aarch64 feature and `check_bounds`
+    // proved every pointer offset below in range.
+    unsafe {
+        use std::arch::aarch64::*;
+        let xp = x.as_ptr();
+        let yp = y.as_mut_ptr();
+        let mut r = m0;
+        while r < m1 {
+            let rows = (m1 - r).min(MR);
+            let mut lo = [vdupq_n_f32(0.0); MR];
+            let mut hi = [vdupq_n_f32(0.0); MR];
+            let mut tp = tile.as_ptr();
+            let xbase = xp.add(r * k + kk0);
+            for kk in 0..len {
+                let tlo = vld1q_f32(tp);
+                let thi = vld1q_f32(tp.add(4));
+                tp = tp.add(tile_stride);
+                for i in 0..rows {
+                    let xv = *xbase.add(i * k + kk);
+                    lo[i] = vfmaq_n_f32(lo[i], tlo, xv);
+                    hi[i] = vfmaq_n_f32(hi[i], thi, xv);
+                }
+            }
+            for i in 0..rows {
+                let yrow = yp.add((r + i) * ldy + col0);
+                vst1q_f32(yrow, vaddq_f32(vld1q_f32(yrow), lo[i]));
+                vst1q_f32(yrow.add(4), vaddq_f32(vld1q_f32(yrow.add(4)), hi[i]));
+            }
+            r += rows;
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::proptest::{check, default_cases};
 
     fn reference(
         x: &[f32],
@@ -109,7 +330,7 @@ mod tests {
         let x: Vec<f32> = (0..m * k).map(|i| (i % 13) as f32 * 0.25 - 1.0).collect();
         let tile: Vec<f32> = (0..len * NR).map(|i| (i % 7) as f32 * 0.5 - 1.5).collect();
         let mut y = vec![0f32; m * NR];
-        fma_tile8(&x, k, 0, m, 0, len, &tile, NR, &mut y, NR, 0);
+        fma_tile8_scalar(&x, k, 0, m, 0, len, &tile, NR, &mut y, NR, 0);
         assert_eq!(y, reference(&x, k, m, &tile, NR, len));
     }
 
@@ -121,7 +342,7 @@ mod tests {
         let x: Vec<f32> = (0..6 * k).map(|i| ((i * 5) % 11) as f32 - 5.0).collect();
         let panel: Vec<f32> = (0..len * stride).map(|i| ((i * 3) % 17) as f32 * 0.125).collect();
         let mut y = vec![1.0f32; 6 * ldy]; // pre-filled: microkernel accumulates
-        fma_tile8(&x, k, 2, 5, 8, len, &panel, stride, &mut y, ldy, 8);
+        fma_tile8_scalar(&x, k, 2, 5, 8, len, &panel, stride, &mut y, ldy, 8);
         for r in 0..6 {
             for c in 0..ldy {
                 let mut want = 1.0f32;
@@ -135,5 +356,53 @@ mod tests {
                 assert!((got - want).abs() <= tol, "r={r} c={c}: {got} vs {want}");
             }
         }
+    }
+
+    #[test]
+    fn simd_level_reports_a_known_tier() {
+        assert!(["avx2", "neon", "scalar"].contains(&simd_level()));
+        // Both selections must be callable whatever the host supports.
+        let (m, k, len) = (3usize, 16usize, 16usize);
+        let x = vec![1.0f32; m * k];
+        let tile = vec![0.5f32; len * NR];
+        for simd in [false, true] {
+            let mut y = vec![0f32; m * NR];
+            select(simd)(&x, k, 0, m, 0, len, &tile, NR, &mut y, NR, 0);
+            for &v in &y {
+                assert!((v - 8.0).abs() < 1e-4, "simd={simd}: {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn prop_simd_matches_scalar_over_random_shapes_and_strides() {
+        // The SIMD-vs-scalar equivalence property at the microkernel
+        // level: random (m, k-strip, stride, offsets), both variants on
+        // identical inputs, 1e-6 relative (FMA rounds once per
+        // multiply-add where the scalar path rounds twice).
+        let simd = select(true);
+        check("fma-tile8-simd-vs-scalar", 0x51D0, default_cases(), |rng| {
+            let m = rng.range_usize(1, 9);
+            let k = rng.range_usize(8, 96);
+            let len = rng.range_usize(1, k.min(64));
+            let kk0 = rng.range_usize(0, k - len);
+            let stride = NR + rng.range_usize(0, 24);
+            let ldy = NR + rng.range_usize(0, 16);
+            let col0 = rng.range_usize(0, ldy - NR);
+            let x: Vec<f32> = (0..m * k).map(|_| (rng.f64() * 2.0 - 1.0) as f32).collect();
+            let tile: Vec<f32> =
+                (0..len * stride).map(|_| (rng.f64() * 2.0 - 1.0) as f32).collect();
+            let mut y_scalar = vec![0.5f32; m * ldy];
+            let mut y_simd = y_scalar.clone();
+            fma_tile8_scalar(&x, k, 0, m, kk0, len, &tile, stride, &mut y_scalar, ldy, col0);
+            simd(&x, k, 0, m, kk0, len, &tile, stride, &mut y_simd, ldy, col0);
+            for (i, (&a, &b)) in y_scalar.iter().zip(&y_simd).enumerate() {
+                let tol = 1e-6 * a.abs().max(b.abs()).max(1.0);
+                assert!(
+                    (a - b).abs() as f64 <= tol as f64,
+                    "m={m} k={k} len={len} stride={stride} idx={i}: scalar {a} vs simd {b}"
+                );
+            }
+        });
     }
 }

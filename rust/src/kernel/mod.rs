@@ -32,17 +32,40 @@
 //! [`crate::gpusim::kernel_model::calibrate_writeback`] hook so the
 //! simulation layer can be calibrated from measured rather than modeled
 //! tile costs.
+//!
+//! Since PR 5 the module is a *runtime*, not just a kernel pair:
+//!
+//! * the microkernel and nibble decoders are explicitly SIMD (AVX2 on
+//!   x86_64, NEON on aarch64, scalar fallback — [`Blocking::simd`]),
+//! * worker tiles dispatch through a persistent condvar-parked
+//!   [`WorkerPool`] with work stealing over column panels, replacing the
+//!   spawn-per-call scoped threads that dominated decode-shape latency
+//!   ([`Blocking::pool`] reverts, for the bench comparison),
+//! * a per-(shape, blocking) [`PlanCache`] keeps panel ranges, fragment
+//!   run-offset tables, and decode/staging scratch resident, so a
+//!   repeated-shape call — every decode step — allocates nothing,
+//! * [`StepExecutor`] runs a whole [`crate::model::LlmSpec`] decode step
+//!   (or one tensor-parallel rank's share) through any backend and
+//!   reports measured end-to-end tokens/sec (`simulate step`), the
+//!   number [`crate::gpusim::calibrate_step_writeback`] fits the GPU
+//!   model against.
 
 mod blocking;
+mod executor;
 mod fused;
 mod microkernel;
-mod partition;
+pub(crate) mod partition;
+mod plan;
+mod pool;
 mod writeback;
 
 pub use blocking::Blocking;
-pub use fused::{gemm_quick_fused, QuickWeights};
-pub use microkernel::{MR, NR};
-pub use writeback::{gemm_awq_writeback, AwqWeights};
+pub use executor::{StepBackend, StepExecutor, StepGemm, StepResult};
+pub use fused::{gemm_quick_fused, gemm_quick_fused_planned, QuickWeights};
+pub use microkernel::{simd_level, MR, NR};
+pub use plan::{ColPanel, GemmPlan, PlanCache};
+pub use pool::WorkerPool;
+pub use writeback::{gemm_awq_writeback, gemm_awq_writeback_planned, AwqWeights};
 
 use crate::quant::{dequantize_into, QuantizedTensor};
 

@@ -1,17 +1,16 @@
-//! Thread-pool partitioner for the native GEMM backends.
+//! Spawn-per-call task dispatcher — PR 4's threading model, kept as the
+//! measured baseline the persistent [`super::WorkerPool`] is benchmarked
+//! against (`bench kernels --decode-sweep`, pool-vs-spawn rows).
 //!
-//! Work is split along the *word-column* axis (8 logical N columns per
-//! word), mirroring how the interleaved stream is naturally strided: each
-//! worker owns a contiguous range of word-columns, so it reads disjoint
-//! stream/word regions and produces disjoint output columns. Workers
-//! accumulate into private column-panel buffers which the caller's thread
-//! scatters back into the row-major output after the join — an `O(m*n)`
-//! copy that is negligible against the `O(m*n*k)` GEMM and keeps the whole
-//! path safe Rust (no shared mutable output).
+//! Work units are the same column-panel tiles the pool steals; the only
+//! difference is the dispatch cost: this path pays a fresh
+//! `std::thread::scope` spawn/join round-trip on every GEMM call, which
+//! at decode shapes (M = 1–8) is material against the arithmetic. Each
+//! spawned worker owns a contiguous *static* slice of the tile list (no
+//! stealing — a straggler idles its peers), mirroring the PR 4 behavior
+//! the decode-sweep rows quantify.
 
 use std::ops::Range;
-
-use crate::quant::PACK_FACTOR;
 
 /// Split `total` items into at most `parts` contiguous ranges of
 /// near-equal size (larger ranges first; no empty ranges).
@@ -31,53 +30,36 @@ pub(crate) fn split_ranges(total: usize, parts: usize) -> Vec<Range<usize>> {
     out
 }
 
-/// Run `work` over the `n / 8` word-columns of an `m x n` GEMM output,
-/// split across `threads` workers.
-///
-/// `work(wr, out, ldy, out_col0)` must accumulate the output columns
-/// `wr.start*8 .. wr.end*8` into `out`, where element `(row, col)` lives
-/// at `out[row * ldy + (col - out_col0)]`. Single-threaded calls receive
-/// `y` itself (`ldy = n`, `out_col0 = 0`); workers receive a private
-/// zeroed panel that is scattered into `y` after the join.
-pub(crate) fn gemm_over_columns(
-    m: usize,
-    n: usize,
-    threads: usize,
-    y: &mut [f32],
-    work: &(impl Fn(Range<usize>, &mut [f32], usize, usize) + Sync),
-) {
-    let w_total = n / PACK_FACTOR;
-    let parts = split_ranges(w_total, threads);
-    if parts.len() <= 1 {
-        work(0..w_total, y, n, 0);
+/// Run `body(task, slot)` for every `task in 0..tasks` across freshly
+/// spawned scoped threads (at most `threads`), blocking until all
+/// finish. Same contract as [`super::WorkerPool::run`]; the slot is the
+/// spawned worker's index, so per-slot scratch keeps working.
+pub(crate) fn spawn_run(tasks: usize, threads: usize, body: &(dyn Fn(usize, usize) + Sync)) {
+    if tasks == 0 {
         return;
     }
-    let panels: Vec<(Range<usize>, Vec<f32>)> = std::thread::scope(|s| {
-        let handles: Vec<_> = parts
-            .into_iter()
-            .map(|wr| {
-                s.spawn(move || {
-                    let cols = (wr.end - wr.start) * PACK_FACTOR;
-                    let mut panel = vec![0f32; m * cols];
-                    work(wr.clone(), &mut panel, cols, wr.start * PACK_FACTOR);
-                    (wr, panel)
-                })
-            })
-            .collect();
-        handles.into_iter().map(|h| h.join().expect("kernel worker panicked")).collect()
-    });
-    for (wr, panel) in panels {
-        let (c0, cols) = (wr.start * PACK_FACTOR, (wr.end - wr.start) * PACK_FACTOR);
-        for row in 0..m {
-            y[row * n + c0..row * n + c0 + cols]
-                .copy_from_slice(&panel[row * cols..(row + 1) * cols]);
+    let parts = split_ranges(tasks, threads);
+    if parts.len() <= 1 {
+        for t in 0..tasks {
+            body(t, 0);
         }
+        return;
     }
+    std::thread::scope(|s| {
+        for (slot, range) in parts.into_iter().enumerate() {
+            s.spawn(move || {
+                for t in range {
+                    body(t, slot);
+                }
+            });
+        }
+    });
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
 
     #[test]
     fn split_covers_disjointly() {
@@ -93,30 +75,19 @@ mod tests {
         }
     }
 
-    fn fill_by_column(wr: Range<usize>, out: &mut [f32], ldy: usize, c0: usize, m: usize) {
-        for row in 0..m {
-            for wj in wr.clone() {
-                for p in 0..PACK_FACTOR {
-                    let col = wj * PACK_FACTOR + p;
-                    out[row * ldy + (col - c0)] += (row * 1000 + col) as f32;
-                }
-            }
-        }
-    }
-
     #[test]
-    fn partitioned_run_equals_single_thread() {
-        let (m, n) = (5usize, 48usize);
-        let mut single = vec![0f32; m * n];
-        gemm_over_columns(m, n, 1, &mut single, &|wr, out: &mut [f32], ldy, c0| {
-            fill_by_column(wr, out, ldy, c0, m)
-        });
-        for threads in [2usize, 3, 16] {
-            let mut multi = vec![0f32; m * n];
-            gemm_over_columns(m, n, threads, &mut multi, &|wr, out: &mut [f32], ldy, c0| {
-                fill_by_column(wr, out, ldy, c0, m)
+    fn spawn_run_covers_every_task_once() {
+        for (tasks, threads) in [(1usize, 4usize), (7, 3), (16, 2), (5, 8)] {
+            let hits: Vec<AtomicUsize> = (0..tasks).map(|_| AtomicUsize::new(0)).collect();
+            let max_slot = AtomicUsize::new(0);
+            spawn_run(tasks, threads, &|t, slot| {
+                hits[t].fetch_add(1, Ordering::Relaxed);
+                max_slot.fetch_max(slot, Ordering::Relaxed);
             });
-            assert_eq!(multi, single, "threads={threads}");
+            for (t, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::Relaxed), 1, "task {t} ({tasks}/{threads})");
+            }
+            assert!(max_slot.load(Ordering::Relaxed) < threads);
         }
     }
 }

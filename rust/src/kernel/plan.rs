@@ -1,0 +1,419 @@
+//! Per-(shape, blocking) execution plans for the native GEMM paths.
+//!
+//! A decode step runs the *same* handful of GEMM shapes every token; PR 4
+//! recomputed panel ranges and allocated fragment/scratch/output buffers
+//! on every call. A [`GemmPlan`] hoists everything shape-dependent out of
+//! the hot path:
+//!
+//! * the **column-panel tiles** the work-stealing partitioner hands out
+//!   (one per `nc_words` word-columns),
+//! * the **`quick_run_offset` table** — the stream offset of every
+//!   (K-tile, word-column) fragment run, so the fused decode loop does a
+//!   table read instead of re-deriving the interleave arithmetic,
+//! * **per-slot scratch** (the fused fragment panel / write-back staging
+//!   tile, one per participant) and **per-tile output panels** (the
+//!   private accumulation buffers the scatter drains), both kept
+//!   resident so repeated same-shape calls allocate *nothing* — verified
+//!   by the hot-path bench's counting allocator.
+//!
+//! [`PlanCache`] memoizes plans process-wide (keyed by `(m, k, n,
+//! Blocking)`), mirroring `quant::ldmatrix_fragment_perm_memo`: the first
+//! call per shape builds, every later call — every subsequent decode
+//! step — is a map hit.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
+use anyhow::Result;
+
+use crate::quant::decode::TILE_ROWS;
+use crate::quant::{quick_run_offset, PACK_FACTOR};
+
+use super::blocking::Blocking;
+use super::partition;
+use super::pool::WorkerPool;
+
+/// One work-stealing tile: a contiguous panel of word-columns
+/// `[wj0, wj1)` (8 logical output columns per word-column).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ColPanel {
+    /// First word-column of the panel.
+    pub wj0: usize,
+    /// One past the last word-column.
+    pub wj1: usize,
+}
+
+impl ColPanel {
+    /// Word-columns in the panel.
+    pub fn words(&self) -> usize {
+        self.wj1 - self.wj0
+    }
+
+    /// Logical output columns in the panel.
+    pub fn cols(&self) -> usize {
+        self.words() * PACK_FACTOR
+    }
+
+    /// First logical output column.
+    pub fn col0(&self) -> usize {
+        self.wj0 * PACK_FACTOR
+    }
+}
+
+/// Task body the GEMM drivers hand to [`GemmPlan::execute`]:
+/// `(panel, out, ldy, out_col0, scratch)` — accumulate the panel's output
+/// columns into `out`, where element `(row, col)` lives at
+/// `out[row * ldy + (col - out_col0)]`, using `scratch` (at least
+/// [`Blocking::scratch_len`] f32) as decode/staging space.
+pub(crate) type TaskBody<'a> = dyn Fn(&ColPanel, &mut [f32], usize, usize, &mut [f32]) + Sync + 'a;
+
+/// A reusable execution plan for one `(m, k, n, blocking)` GEMM shape.
+pub struct GemmPlan {
+    /// Activation rows (batch) this plan was built for.
+    pub m: usize,
+    /// Reduction dimension.
+    pub k: usize,
+    /// Output columns.
+    pub n: usize,
+    /// The blocking the plan was built from.
+    pub blocking: Blocking,
+    /// Resolved participant count ([`Blocking::resolve_threads`]).
+    pub threads: usize,
+    /// The column-panel tiles work is stolen over.
+    pub tasks: Vec<ColPanel>,
+    /// `run_offsets[kt * w_total + wj]` = stream word offset of fragment
+    /// run `(kt, wj)` — the precomputed [`quick_run_offset`] table. The
+    /// table depends only on `(k, n)`, so [`PlanCache`] shares one copy
+    /// across every (m, blocking) plan of the same weight shape.
+    run_offsets: Arc<Vec<usize>>,
+    w_total: usize,
+    /// Per-slot decode/staging scratch ([`Blocking::scratch_len`] each).
+    scratch: Vec<Mutex<Vec<f32>>>,
+    /// Per-tile private output panels (`m * cols` each); empty when the
+    /// plan executes single-threaded straight into `y`.
+    panels: Vec<Mutex<Vec<f32>>>,
+    /// Serializes parallel executions of this plan: the shared panels
+    /// are a per-call invariant (zero → accumulate → scatter), so two
+    /// concurrent same-shape GEMMs must take turns. Held through the
+    /// scatter — the pool's own submit lock releases before that copy.
+    exec: Mutex<()>,
+}
+
+impl GemmPlan {
+    /// The `(k, n)`-only [`quick_run_offset`] table (one entry per
+    /// fragment run), shared across plans by [`PlanCache`].
+    fn offset_table(k: usize, n: usize) -> Vec<usize> {
+        let w_total = n / PACK_FACTOR;
+        let kt_total = k / TILE_ROWS;
+        let mut run_offsets = Vec::with_capacity(kt_total * w_total);
+        for kt in 0..kt_total {
+            for wj in 0..w_total {
+                run_offsets.push(quick_run_offset(kt, wj, w_total));
+            }
+        }
+        run_offsets
+    }
+
+    fn build(m: usize, k: usize, n: usize, blocking: Blocking) -> GemmPlan {
+        Self::build_with_offsets(m, k, n, blocking, Arc::new(Self::offset_table(k, n)))
+    }
+
+    fn build_with_offsets(
+        m: usize,
+        k: usize,
+        n: usize,
+        blocking: Blocking,
+        run_offsets: Arc<Vec<usize>>,
+    ) -> GemmPlan {
+        let w_total = n / PACK_FACTOR;
+        debug_assert_eq!(run_offsets.len(), (k / TILE_ROWS) * w_total);
+        let threads = blocking.resolve_threads(m, k, n);
+        let mut tasks = Vec::with_capacity(blocking.n_tiles(n));
+        let mut wj0 = 0;
+        while wj0 < w_total {
+            let wj1 = (wj0 + blocking.nc_words).min(w_total);
+            tasks.push(ColPanel { wj0, wj1 });
+            wj0 = wj1;
+        }
+        let multi = threads > 1 && tasks.len() > 1;
+        let slots = if multi { threads } else { 1 };
+        let scratch = (0..slots).map(|_| Mutex::new(vec![0f32; blocking.scratch_len()])).collect();
+        let panels = if multi {
+            tasks.iter().map(|t| Mutex::new(vec![0f32; m * t.cols()])).collect()
+        } else {
+            Vec::new()
+        };
+        GemmPlan {
+            m,
+            k,
+            n,
+            blocking,
+            threads,
+            tasks,
+            run_offsets,
+            w_total,
+            scratch,
+            panels,
+            exec: Mutex::new(()),
+        }
+    }
+
+    /// Stream word offset of fragment run `(kt, wj)` (table lookup; the
+    /// closed form lives in [`quick_run_offset`]).
+    #[inline]
+    pub fn run_offset(&self, kt: usize, wj: usize) -> usize {
+        self.run_offsets[kt * self.w_total + wj]
+    }
+
+    /// True when this plan dispatches tiles across threads (vs running
+    /// the whole GEMM inline on the caller).
+    pub fn is_parallel(&self) -> bool {
+        !self.panels.is_empty()
+    }
+
+    /// Run `work` over every column-panel tile, overwriting `y` with the
+    /// accumulated result.
+    ///
+    /// Single-threaded plans run every tile inline, straight into `y`.
+    /// Parallel plans dispatch tiles through the persistent
+    /// [`WorkerPool`] (or PR 4-style spawned scoped threads when
+    /// [`Blocking::pool`] is off), each tile accumulating into its
+    /// resident private panel; the caller's thread then scatters the
+    /// panels back into row-major `y` — an `O(m*n)` copy, negligible
+    /// against the `O(m*n*k)` GEMM.
+    pub(crate) fn execute(&self, y: &mut [f32], work: &TaskBody<'_>) {
+        debug_assert_eq!(y.len(), self.m * self.n);
+        if !self.is_parallel() {
+            y.fill(0.0);
+            let mut scratch = lock_ignore_poison(&self.scratch[0]);
+            for task in &self.tasks {
+                work(task, y, self.n, 0, &mut scratch);
+            }
+            return;
+        }
+        // Two concurrent same-shape calls resolve to this same cached
+        // plan; the panels implement a per-call zero→accumulate→scatter
+        // protocol, so executions must not interleave. (Tradeoff: truly
+        // concurrent same-shape GEMMs serialize here — acceptable while
+        // the engine issues its GEMM stream sequentially; revisit with
+        // pooled per-call panels if that changes.)
+        let _exclusive = lock_ignore_poison(&self.exec);
+        let body = |ti: usize, slot: usize| {
+            let task = &self.tasks[ti];
+            let mut panel = lock_ignore_poison(&self.panels[ti]);
+            panel.fill(0.0);
+            let mut scratch = lock_ignore_poison(&self.scratch[slot]);
+            work(task, &mut panel, task.cols(), task.col0(), &mut scratch);
+        };
+        if self.blocking.pool {
+            WorkerPool::global().run(self.tasks.len(), self.threads, &body);
+        } else {
+            partition::spawn_run(self.tasks.len(), self.threads, &body);
+        }
+        for (ti, task) in self.tasks.iter().enumerate() {
+            let panel = lock_ignore_poison(&self.panels[ti]);
+            let (c0, cols) = (task.col0(), task.cols());
+            for row in 0..self.m {
+                y[row * self.n + c0..row * self.n + c0 + cols]
+                    .copy_from_slice(&panel[row * cols..(row + 1) * cols]);
+            }
+        }
+    }
+}
+
+/// Lock that shrugs off poisoning: every buffer behind these mutexes is
+/// re-zeroed or fully overwritten before use, so a panicked predecessor
+/// leaves nothing worth invalidating a long-lived cached plan over (a
+/// poisoned panel would otherwise brick its shape forever — the caller
+/// already saw the original panic via the pool's scope-join re-raise).
+fn lock_ignore_poison<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+struct PlanKey {
+    m: usize,
+    k: usize,
+    n: usize,
+    b: Blocking,
+}
+
+/// Process-wide memo of [`GemmPlan`]s, keyed by `(m, k, n, blocking)`.
+///
+/// There is no eviction: every distinct key keeps its panels/scratch
+/// resident (order `m * n` f32 per parallel plan), which is exactly what
+/// a decode loop over a fixed shape set wants. Callers sweeping many
+/// transient shapes (bench harnesses, engines with unbounded mixed batch
+/// sizes) should bucket M to a small set of plan sizes or call
+/// [`PlanCache::clear`] between phases.
+#[derive(Default)]
+pub struct PlanCache {
+    plans: Mutex<HashMap<PlanKey, Arc<GemmPlan>>>,
+    /// Shared `(k, n)` -> run-offset tables (shape-only, so one copy
+    /// serves every m/blocking variant of a weight matrix).
+    offsets: Mutex<HashMap<(usize, usize), Arc<Vec<usize>>>>,
+}
+
+impl PlanCache {
+    /// An empty cache (tests; production code shares [`PlanCache::global`]).
+    pub fn new() -> PlanCache {
+        PlanCache::default()
+    }
+
+    /// The process-wide cache every `gemm_quick_fused` /
+    /// `gemm_awq_writeback` call resolves plans through.
+    pub fn global() -> &'static PlanCache {
+        static CACHE: OnceLock<PlanCache> = OnceLock::new();
+        CACHE.get_or_init(PlanCache::new)
+    }
+
+    /// Fetch (or build and memoize) the plan for an `m x k x n` GEMM
+    /// under `b`. Errors on the [`Blocking::validate`] shape contract.
+    pub fn plan(&self, m: usize, k: usize, n: usize, b: &Blocking) -> Result<Arc<GemmPlan>> {
+        b.validate(k, n)?;
+        anyhow::ensure!(m > 0, "M must be > 0");
+        let key = PlanKey { m, k, n, b: *b };
+        if let Some(plan) = self.plans.lock().unwrap().get(&key) {
+            return Ok(Arc::clone(plan));
+        }
+        let offsets = {
+            let mut map = self.offsets.lock().unwrap();
+            let entry =
+                map.entry((k, n)).or_insert_with(|| Arc::new(GemmPlan::offset_table(k, n)));
+            Arc::clone(entry)
+        };
+        // Build outside the plans lock (plans can be MBs); a racing
+        // builder just loses its copy to the first insert.
+        let built = Arc::new(GemmPlan::build_with_offsets(m, k, n, *b, offsets));
+        let mut map = self.plans.lock().unwrap();
+        Ok(Arc::clone(map.entry(key).or_insert(built)))
+    }
+
+    /// Cached plan count.
+    pub fn len(&self) -> usize {
+        self.plans.lock().unwrap().len()
+    }
+
+    /// True when no plan has been cached yet.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drop every cached plan and shared offset table (tests / memory
+    /// pressure).
+    pub fn clear(&self) {
+        self.plans.lock().unwrap().clear();
+        self.offsets.lock().unwrap().clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiles_cover_all_word_columns_disjointly() {
+        for (n, nc) in [(128usize, 16usize), (4096, 16), (48, 1), (64, 5)] {
+            let b = Blocking { nc_words: nc, ..Blocking::default() };
+            let plan = GemmPlan::build(4, 64, n, b);
+            let mut next = 0;
+            for t in &plan.tasks {
+                assert_eq!(t.wj0, next, "contiguous");
+                assert!(t.words() >= 1 && t.words() <= nc);
+                next = t.wj1;
+            }
+            assert_eq!(next, n / PACK_FACTOR);
+            assert_eq!(plan.tasks.len(), b.n_tiles(n));
+        }
+    }
+
+    #[test]
+    fn run_offset_table_matches_closed_form() {
+        let plan = GemmPlan::build(2, 96, 64, Blocking::default());
+        let w_total = 64 / PACK_FACTOR;
+        for kt in 0..96 / TILE_ROWS {
+            for wj in 0..w_total {
+                assert_eq!(plan.run_offset(kt, wj), quick_run_offset(kt, wj, w_total));
+            }
+        }
+    }
+
+    #[test]
+    fn cache_returns_the_same_plan_for_the_same_key() {
+        let cache = PlanCache::new();
+        assert!(cache.is_empty());
+        let b = Blocking::default();
+        let p1 = cache.plan(8, 64, 64, &b).unwrap();
+        let p2 = cache.plan(8, 64, 64, &b).unwrap();
+        assert!(Arc::ptr_eq(&p1, &p2), "same key must hit the memo");
+        assert_eq!(cache.len(), 1);
+        let p3 = cache.plan(9, 64, 64, &b).unwrap();
+        assert!(!Arc::ptr_eq(&p1, &p3), "m is part of the key");
+        assert!(
+            Arc::ptr_eq(&p1.run_offsets, &p3.run_offsets),
+            "same (k, n) must share one run-offset table"
+        );
+        let scalar = Blocking { simd: false, ..b };
+        let p4 = cache.plan(8, 64, 64, &scalar).unwrap();
+        assert!(!Arc::ptr_eq(&p1, &p4), "blocking is part of the key");
+        assert_eq!(cache.len(), 3);
+        cache.clear();
+        assert!(cache.is_empty());
+        // Shape violations surface as errors, not cache entries.
+        assert!(cache.plan(0, 64, 64, &b).is_err());
+        assert!(cache.plan(1, 20, 64, &b).is_err());
+        assert!(cache.is_empty());
+    }
+
+    #[test]
+    fn execute_single_thread_accumulates_into_y() {
+        let b = Blocking { threads: 1, nc_words: 2, ..Blocking::default() };
+        let (m, k, n) = (3usize, 32usize, 48usize);
+        let plan = GemmPlan::build(m, k, n, b);
+        assert!(!plan.is_parallel());
+        let mut y = vec![f32::NAN; m * n];
+        plan.execute(&mut y, &|task, out, ldy, c0, _scratch| {
+            for row in 0..m {
+                for col in task.col0()..task.col0() + task.cols() {
+                    out[row * ldy + (col - c0)] += (row * 1000 + col) as f32;
+                }
+            }
+        });
+        for row in 0..m {
+            for col in 0..n {
+                assert_eq!(y[row * n + col], (row * 1000 + col) as f32);
+            }
+        }
+    }
+
+    #[test]
+    fn execute_parallel_matches_single_thread() {
+        let (m, k, n) = (5usize, 32usize, 64usize);
+        let fill = |task: &ColPanel, out: &mut [f32], ldy: usize, c0: usize, _s: &mut [f32]| {
+            for row in 0..m {
+                for col in task.col0()..task.col0() + task.cols() {
+                    out[row * ldy + (col - c0)] += (row * 100 + col) as f32;
+                }
+            }
+        };
+        let single = {
+            let plan = GemmPlan::build(m, k, n, Blocking { threads: 1, ..Blocking::default() });
+            let mut y = vec![0f32; m * n];
+            plan.execute(&mut y, &fill);
+            y
+        };
+        for pool in [true, false] {
+            let b = Blocking { threads: 3, nc_words: 1, pool, ..Blocking::default() };
+            let plan = GemmPlan::build(m, k, n, b);
+            assert!(plan.is_parallel());
+            let mut y = vec![f32::NAN; m * n];
+            plan.execute(&mut y, &fill);
+            assert_eq!(y, single, "pool={pool}");
+            // Resident buffers mean a second pass produces the same
+            // result (panels re-zeroed per call, not accumulated).
+            let mut y2 = vec![0f32; m * n];
+            plan.execute(&mut y2, &fill);
+            assert_eq!(y2, single, "pool={pool} second pass");
+        }
+    }
+}

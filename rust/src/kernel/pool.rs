@@ -1,0 +1,339 @@
+//! Persistent worker pool for the native GEMM backends.
+//!
+//! PR 4 spawned a fresh `std::thread::scope` per GEMM call — at decode
+//! shapes (M = 1–8) the spawn/join round-trip is the dominant per-call
+//! cost, paid once per layer per token. This pool spawns its workers
+//! **once**, parks them on a condvar, and hands each submitted job out as
+//! a list of *tasks* (column-panel tiles) that participants claim from a
+//! shared cursor — work stealing at tile granularity, so an uneven panel
+//! (or a worker descheduled by the OS) never idles the rest.
+//!
+//! Design constraints that shaped the implementation:
+//!
+//! * **Zero steady-state allocation.** Job state lives inline in the
+//!   pool (no per-job `Arc`), so a decode step's dozens of GEMM
+//!   dispatches allocate nothing — verified by the hot-path bench's
+//!   counting allocator.
+//! * **Borrowed closures.** The task body borrows the caller's stack
+//!   (activations, weights, plan scratch). Its lifetime is erased to
+//!   `'static` on submit; soundness holds because every task claim
+//!   happens under the pool lock *before* the shared cursor passes
+//!   `tasks`, and [`WorkerPool::run`] returns only after the completion
+//!   count reaches `tasks` — no worker can reach the closure after `run`
+//!   returns.
+//! * **Bounded participation.** A job caps its parallelism at `threads`
+//!   (the plan's resolved count); surplus workers note the epoch and go
+//!   back to sleep instead of contending.
+//!
+//! One job runs at a time (submissions serialize on a mutex); the
+//! caller's thread always participates as slot 0, so a pool with `w`
+//! workers yields up to `w + 1`-way parallelism.
+
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
+
+/// A task body: `(task_index, slot)` where `slot < threads` identifies
+/// the participant (stable per participant within one job — used to
+/// index per-slot scratch).
+pub type Task<'a> = dyn Fn(usize, usize) + Sync + 'a;
+
+struct State {
+    /// Monotone job counter; workers use it to tell a fresh job from one
+    /// they already served (or skipped).
+    epoch: u64,
+    /// The current job's task body; `None` between jobs.
+    body: Option<&'static Task<'static>>,
+    /// Tasks in the current job.
+    tasks: usize,
+    /// Participation cap (slots) of the current job.
+    slots: usize,
+    /// Next unclaimed task index.
+    next: usize,
+    /// Completed task count; `run` returns when this reaches `tasks`.
+    done: usize,
+    /// Participants so far (caller = 1); assigns slot ids.
+    joined: usize,
+    /// First panic payload a task body raised during the current job;
+    /// the submitting caller resumes it after the job drains
+    /// (scope-join semantics, original message preserved).
+    panic_payload: Option<Box<dyn std::any::Any + Send>>,
+    /// Set once on drop; workers exit.
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    /// Workers park here between jobs.
+    work_cv: Condvar,
+    /// The caller parks here while its job drains.
+    done_cv: Condvar,
+}
+
+/// The persistent, condvar-parked, work-stealing worker pool.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    /// Serializes job submission (one job at a time).
+    submit: Mutex<()>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn a pool with `workers` parked threads. The caller's thread
+    /// participates in every job, so `workers = cores - 1` saturates the
+    /// machine.
+    pub fn new(workers: usize) -> WorkerPool {
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State {
+                epoch: 0,
+                body: None,
+                tasks: 0,
+                slots: 0,
+                next: 0,
+                done: 0,
+                joined: 0,
+                panic_payload: None,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        });
+        let handles = (0..workers)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("quick-kernel-{i}"))
+                    .spawn(move || worker_loop(&shared))
+                    .expect("spawn kernel pool worker")
+            })
+            .collect();
+        WorkerPool { shared, submit: Mutex::new(()), handles }
+    }
+
+    /// The process-wide pool the GEMM plans dispatch through: spawned on
+    /// first use with `available_parallelism - 1` workers, parked when
+    /// idle, alive for the process lifetime.
+    pub fn global() -> &'static WorkerPool {
+        static POOL: OnceLock<WorkerPool> = OnceLock::new();
+        POOL.get_or_init(|| {
+            let cores = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+            WorkerPool::new(cores.saturating_sub(1))
+        })
+    }
+
+    /// Worker threads parked in this pool (parallelism is `workers + 1`:
+    /// the submitting thread always participates).
+    pub fn workers(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Run `body(task, slot)` for every `task in 0..tasks`, with at most
+    /// `threads` concurrent participants (the calling thread is always
+    /// one of them, as slot 0). Blocks until every task completed.
+    ///
+    /// Tasks must be independent; `slot` is stable per participant and
+    /// `< threads`, so callers may index per-slot scratch with it.
+    /// Must not be called from inside a pool task (the nested submission
+    /// would deadlock behind its own job).
+    pub fn run(&self, tasks: usize, threads: usize, body: &Task<'_>) {
+        if tasks == 0 {
+            return;
+        }
+        let slots = threads.min(tasks);
+        if slots <= 1 || self.handles.is_empty() {
+            for t in 0..tasks {
+                body(t, 0);
+            }
+            return;
+        }
+        let _submission = self.submit.lock().unwrap();
+        // SAFETY: lifetime erasure only — the pointee outlives this call,
+        // and the claim/completion protocol below guarantees no worker
+        // dereferences the body after this function returns (claims
+        // happen under the state lock while `next < tasks`; we return
+        // only once `done == tasks`, i.e. after every claimed task
+        // finished).
+        let body_static: &'static Task<'static> =
+            unsafe { std::mem::transmute::<&Task<'_>, &'static Task<'static>>(body) };
+        let epoch = {
+            let mut st = self.shared.state.lock().unwrap();
+            st.epoch += 1;
+            st.body = Some(body_static);
+            st.tasks = tasks;
+            st.slots = slots;
+            st.next = 0;
+            st.done = 0;
+            st.joined = 1; // the caller holds slot 0
+            st.panic_payload = None;
+            st.epoch
+        };
+        self.shared.work_cv.notify_all();
+        participate(&self.shared, epoch, body, 0);
+        let mut st = self.shared.state.lock().unwrap();
+        while st.done < st.tasks {
+            st = self.shared.done_cv.wait(st).unwrap();
+        }
+        st.body = None;
+        let payload = st.panic_payload.take();
+        drop(st);
+        if let Some(payload) = payload {
+            // Scope-join semantics: a panic anywhere in the job resumes
+            // on the submitting thread, original payload intact, once
+            // every task has drained.
+            std::panic::resume_unwind(payload);
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.shared.work_cv.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Claim-and-run loop shared by the caller (slot 0) and joined workers:
+/// steal the next unclaimed task under the lock, run it outside the
+/// lock, bump the completion count, wake the caller on the last one. A
+/// panicking body is caught and recorded so the job still drains (and a
+/// worker thread survives); the caller re-raises it after the join.
+fn participate(shared: &Shared, epoch: u64, body: &Task<'_>, slot: usize) {
+    loop {
+        let t = {
+            let mut st = shared.state.lock().unwrap();
+            if st.epoch != epoch || st.next >= st.tasks {
+                break;
+            }
+            let t = st.next;
+            st.next += 1;
+            t
+        };
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| body(t, slot)));
+        let mut st = shared.state.lock().unwrap();
+        if st.epoch == epoch {
+            if let Err(payload) = outcome {
+                st.panic_payload.get_or_insert(payload);
+            }
+            st.done += 1;
+            if st.done >= st.tasks {
+                shared.done_cv.notify_all();
+            }
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    let mut last_epoch = 0u64;
+    loop {
+        let (epoch, body, slot) = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if let Some(body) = st.body {
+                    if st.epoch != last_epoch {
+                        if st.joined < st.slots && st.next < st.tasks {
+                            let slot = st.joined;
+                            st.joined += 1;
+                            break (st.epoch, body, slot);
+                        }
+                        // Job saturated (or already drained): note the
+                        // epoch so the next wake-up does not re-examine
+                        // it, then park again.
+                        last_epoch = st.epoch;
+                    }
+                }
+                st = shared.work_cv.wait(st).unwrap();
+            }
+        };
+        last_epoch = epoch;
+        participate(shared, epoch, body, slot);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn runs_every_task_exactly_once() {
+        let pool = WorkerPool::new(3);
+        for tasks in [1usize, 2, 7, 64] {
+            let hits: Vec<AtomicUsize> = (0..tasks).map(|_| AtomicUsize::new(0)).collect();
+            pool.run(tasks, 4, &|t, _slot| {
+                hits[t].fetch_add(1, Ordering::Relaxed);
+            });
+            for (t, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::Relaxed), 1, "task {t} of {tasks}");
+            }
+        }
+    }
+
+    #[test]
+    fn slots_stay_below_thread_cap() {
+        let pool = WorkerPool::new(4);
+        let max_slot = AtomicUsize::new(0);
+        pool.run(32, 2, &|_t, slot| {
+            max_slot.fetch_max(slot, Ordering::Relaxed);
+            // A little work so both participants engage.
+            std::hint::black_box((0..500u64).sum::<u64>());
+        });
+        assert!(max_slot.load(Ordering::Relaxed) < 2);
+    }
+
+    #[test]
+    fn sequential_jobs_reuse_the_pool() {
+        let pool = WorkerPool::new(2);
+        let total = AtomicUsize::new(0);
+        for _ in 0..50 {
+            pool.run(8, 3, &|t, _| {
+                total.fetch_add(t + 1, Ordering::Relaxed);
+            });
+        }
+        assert_eq!(total.load(Ordering::Relaxed), 50 * (1 + 2 + 3 + 4 + 5 + 6 + 7 + 8));
+    }
+
+    #[test]
+    fn zero_workers_runs_inline() {
+        let pool = WorkerPool::new(0);
+        let sum = AtomicUsize::new(0);
+        pool.run(5, 8, &|t, slot| {
+            assert_eq!(slot, 0);
+            sum.fetch_add(t, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 10);
+    }
+
+    #[test]
+    fn task_panics_propagate_to_the_caller_and_spare_the_pool() {
+        let pool = WorkerPool::new(2);
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(8, 3, &|t, _| {
+                if t == 5 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(caught.is_err(), "task panic must surface on the caller");
+        // The pool survives and serves the next job.
+        let sum = AtomicUsize::new(0);
+        pool.run(4, 3, &|t, _| {
+            sum.fetch_add(t, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 6);
+    }
+
+    #[test]
+    fn global_pool_is_a_singleton() {
+        let a = WorkerPool::global() as *const WorkerPool;
+        let b = WorkerPool::global() as *const WorkerPool;
+        assert_eq!(a, b);
+    }
+}

@@ -27,11 +27,11 @@ use quick_infer::workload;
 
 /// Valid `simulate` targets, listed by the unknown-target error (keep in
 /// sync with the USAGE block and the dispatch match below).
-const SIMULATE_TARGETS: &str = "fig3|fig7|fig8|table1|prefix|continuous|tp|kernel-matmul|all";
+const SIMULATE_TARGETS: &str = "fig3|fig7|fig8|table1|prefix|continuous|tp|kernel-matmul|step|all";
 
 /// Valid `bench` targets, listed by the unknown-target error (keep in
 /// sync with the USAGE block and the dispatch match below).
-const BENCH_TARGETS: &str = "kernels";
+const BENCH_TARGETS: &str = "kernels|check";
 
 const USAGE: &str = "\
 quick-infer — QUICK (2024) reproduction: conflict-free W4A16 inference stack
@@ -42,7 +42,8 @@ USAGE:
         Serve a synthetic workload on the AOT-compiled tiny model via PJRT.
         Defaults: --artifacts artifacts, --kernel quick, --requests 32, --seed 0.
 
-    quick-infer simulate [fig3|fig7|fig8|table1|prefix|continuous|tp|kernel-matmul|all]
+    quick-infer simulate [fig3|fig7|fig8|table1|prefix|continuous|tp|kernel-matmul|step|all]
+                         [--model M]
         Regenerate one experiment from the gpusim cost model (default: all).
           fig3        smem bank conflicts per kernel
           fig7        GEMM TOPS vs batch on all four devices
@@ -54,14 +55,25 @@ USAGE:
           kernel-matmul  *measured* native fused vs write-back W4A16 GEMM
                       M-sweep on this CPU, 1024x1024 g128 (not part of
                       'all': host-dependent wall time, not a model query)
+          step        *measured* end-to-end decode step tokens/s: every
+                      weight GEMM of --model (default tiny) through the
+                      native runtime at M in {1, 2, 4, 8}, plus the
+                      step-fitted gpusim calibration (not part of 'all')
 
-    quick-infer bench    [kernels] [--k K] [--n N] [--group-size G]
-                         [--json PATH] [--quick]
+    quick-infer bench    [kernels|check] [--k K] [--n N] [--group-size G]
+                         [--json PATH] [--quick] [--decode-sweep]
         Run a measured native-kernel benchmark and append a structured
         JSON point to the perf trajectory (default target: kernels).
           kernels     fused-from-interleaved vs dequant-to-scratch GEMM,
-                      M in {1, 8, 32, 128, 256}; exits non-zero if either
-                      path diverges from the naive reference (>1e-4 rel).
+                      M in {1, 8, 32, 128, 256}, plus the decode-shape
+                      runtime sweep (M in {1, 2, 4, 8}: pool-vs-spawn,
+                      SIMD-vs-scalar, dispatch overhead); exits non-zero
+                      if either path diverges from the naive reference
+                      (>1e-4 rel). --decode-sweep runs only the decode
+                      sweep.
+          check       parse a previously written BENCH_kernels.json and
+                      exit non-zero unless it is well-formed and its
+                      differential gate passed (CI post-step).
         Defaults: --k 4096, --n 4096, --group-size 128, --json writes
         BENCH_kernels.json at the repo root (nearest ancestor with
         ROADMAP.md/.git, else the cwd). --quick shrinks the layer to
@@ -96,7 +108,7 @@ struct Args {
 }
 
 /// Flags that take no value (presence means `true`).
-const BOOL_FLAGS: [&str; 1] = ["quick"];
+const BOOL_FLAGS: [&str; 2] = ["quick", "decode-sweep"];
 
 impl Args {
     fn parse(argv: &[String]) -> Result<Args> {
@@ -152,7 +164,9 @@ fn main() -> Result<()> {
             args.get_num("requests", 32usize)?,
             args.get_num("seed", 0u64)?,
         ),
-        "simulate" => simulate(args.positional.first().map(String::as_str).unwrap_or("all")),
+        "simulate" => {
+            simulate(args.positional.first().map(String::as_str).unwrap_or("all"), &args)
+        }
         "bench" => bench_cmd(
             args.positional.first().map(String::as_str).unwrap_or("kernels"),
             &args,
@@ -218,7 +232,7 @@ fn serve(artifacts: &str, kernel: &str, n_requests: usize, seed: u64) -> Result<
     Ok(())
 }
 
-fn simulate(which: &str) -> Result<()> {
+fn simulate(which: &str, args: &Args) -> Result<()> {
     let out = &mut std::io::stdout();
     match which {
         "fig3" => {
@@ -244,6 +258,12 @@ fn simulate(which: &str) -> Result<()> {
         }
         "kernel-matmul" => {
             figures::kernel_matmul(out)?;
+        }
+        "step" => {
+            let name = args.get("model", "tiny");
+            let model = quick_infer::model::Model::parse(&name)
+                .ok_or_else(|| anyhow::anyhow!("unknown model '{name}' (try 'tiny')"))?;
+            figures::step_throughput(out, model)?;
         }
         "all" => {
             figures::fig3(out)?;
@@ -271,7 +291,9 @@ fn bench_cmd(target: &str, args: &Args) -> Result<()> {
             args.get_num("group-size", 128usize)?,
             args.flags.get("json").map(String::as_str),
             args.flags.contains_key("quick"),
+            args.flags.contains_key("decode-sweep"),
         ),
+        "check" => bench_check(args.positional.get(1).map(String::as_str)),
         other => bail!("unknown bench target '{other}' — valid targets: {BENCH_TARGETS}"),
     }
 }
@@ -293,14 +315,18 @@ fn bench_trajectory_path(name: &str) -> std::path::PathBuf {
     }
 }
 
-/// `bench kernels`: measured fused vs write-back M-sweep + differential
-/// gate + gpusim calibration, emitted as one structured JSON point.
+/// `bench kernels`: measured fused vs write-back M-sweep, the
+/// decode-shape runtime sweep (pool-vs-spawn, SIMD-vs-scalar, dispatch
+/// overhead), the differential gate, and the gpusim calibration — all
+/// emitted as one structured JSON point (always written, even when the
+/// gate then fails the process).
 fn bench_kernels(
     k: usize,
     n: usize,
     group_size: usize,
     json: Option<&str>,
     quick: bool,
+    decode_only: bool,
 ) -> Result<()> {
     use quick_infer::util::{Bench, Json};
     let (k, n, bench) = if quick {
@@ -308,12 +334,25 @@ fn bench_kernels(
     } else {
         (k, n, Bench::fast())
     };
-    let report = figures::kernel_matmul_with(
-        &mut std::io::stdout(),
+    let out = &mut std::io::stdout();
+    let report = if decode_only {
+        None
+    } else {
+        Some(figures::kernel_matmul_with(
+            out,
+            k,
+            n,
+            group_size,
+            &figures::KERNEL_MATMUL_BATCHES,
+            &bench,
+        )?)
+    };
+    let decode = figures::decode_sweep_with(
+        out,
         k,
         n,
         group_size,
-        &figures::KERNEL_MATMUL_BATCHES,
+        &figures::DECODE_SWEEP_BATCHES,
         &bench,
     )?;
 
@@ -322,13 +361,13 @@ fn bench_kernels(
         None => bench_trajectory_path("BENCH_kernels.json"),
     };
     let mut shape = std::collections::BTreeMap::new();
-    shape.insert("k".to_string(), Json::Num(report.k as f64));
-    shape.insert("n".to_string(), Json::Num(report.n as f64));
-    shape.insert("group_size".to_string(), Json::Num(report.group_size as f64));
+    shape.insert("k".to_string(), Json::Num(k as f64));
+    shape.insert("n".to_string(), Json::Num(n as f64));
+    shape.insert("group_size".to_string(), Json::Num(group_size as f64));
     let rows = Json::Arr(
         report
-            .rows
             .iter()
+            .flat_map(|rep| rep.rows.iter())
             .map(|r| {
                 let mut o = std::collections::BTreeMap::new();
                 o.insert("m".to_string(), Json::Num(r.m as f64));
@@ -339,31 +378,125 @@ fn bench_kernels(
             })
             .collect(),
     );
+    let decode_rows = Json::Arr(
+        decode
+            .rows
+            .iter()
+            .map(|r| {
+                let mut o = std::collections::BTreeMap::new();
+                o.insert("m".to_string(), Json::Num(r.m as f64));
+                o.insert("fused_pool_simd_gflops".to_string(), Json::Num(r.fused_pool_simd_gflops));
+                o.insert(
+                    "fused_pool_scalar_gflops".to_string(),
+                    Json::Num(r.fused_pool_scalar_gflops),
+                );
+                o.insert(
+                    "fused_spawn_simd_gflops".to_string(),
+                    Json::Num(r.fused_spawn_simd_gflops),
+                );
+                o.insert(
+                    "fused_spawn_scalar_gflops".to_string(),
+                    Json::Num(r.fused_spawn_scalar_gflops),
+                );
+                o.insert(
+                    "writeback_pool_simd_gflops".to_string(),
+                    Json::Num(r.writeback_pool_simd_gflops),
+                );
+                o.insert("pool_dispatch_ns".to_string(), Json::Num(r.pool_dispatch_ns));
+                o.insert("spawn_dispatch_ns".to_string(), Json::Num(r.spawn_dispatch_ns));
+                o.insert("runtime_speedup".to_string(), Json::Num(r.runtime_speedup()));
+                o.insert("fused_over_writeback".to_string(), Json::Num(r.fused_over_writeback()));
+                Json::Obj(o)
+            })
+            .collect(),
+    );
+    // The gate is the worst divergence either sweep observed.
+    let (mut fused_err, mut wb_err) = (decode.fused_rel_err, decode.writeback_rel_err);
+    if let Some(rep) = &report {
+        fused_err = fused_err.max(rep.fused_rel_err);
+        wb_err = wb_err.max(rep.writeback_rel_err);
+    }
     let mut gate = std::collections::BTreeMap::new();
-    gate.insert("fused_rel_err".to_string(), Json::Num(report.fused_rel_err));
-    gate.insert("writeback_rel_err".to_string(), Json::Num(report.writeback_rel_err));
+    gate.insert("fused_rel_err".to_string(), Json::Num(fused_err));
+    gate.insert("writeback_rel_err".to_string(), Json::Num(wb_err));
     gate.insert("tolerance".to_string(), Json::Num(1e-4));
-    bench.write_json(
-        &path,
-        &[
-            ("bench", Json::Str("kernels".to_string())),
-            ("quick", Json::Bool(quick)),
-            ("shape", Json::Obj(shape)),
-            ("rows", rows),
-            ("differential_gate", Json::Obj(gate)),
-            ("calibrated_writeback_scale", Json::Num(report.calibrated.writeback_scale)),
-        ],
-    )?;
+    let last = decode.rows.last().expect("non-empty decode sweep");
+    let min_gap = decode
+        .rows
+        .iter()
+        .map(figures::DecodeSweepRow::fused_over_writeback)
+        .fold(f64::INFINITY, f64::min);
+    let mut acceptance = std::collections::BTreeMap::new();
+    acceptance.insert("runtime_speedup_at_max_m".to_string(), Json::Num(last.runtime_speedup()));
+    acceptance.insert("runtime_speedup_bar".to_string(), Json::Num(1.5));
+    acceptance.insert("min_fused_over_writeback".to_string(), Json::Num(min_gap));
+    acceptance.insert("fused_over_writeback_bar".to_string(), Json::Num(1.0));
+    let mut extra = vec![
+        ("bench", Json::Str("kernels".to_string())),
+        ("quick", Json::Bool(quick)),
+        ("simd_level", Json::Str(decode.simd_level.to_string())),
+        ("shape", Json::Obj(shape)),
+        ("rows", rows),
+        ("decode_sweep", decode_rows),
+        ("differential_gate", Json::Obj(gate)),
+        ("acceptance", Json::Obj(acceptance)),
+    ];
+    if let Some(rep) = &report {
+        extra.push(("calibrated_writeback_scale", Json::Num(rep.calibrated.writeback_scale)));
+    }
+    bench.write_json(&path, &extra)?;
     println!("\nwrote {}", path.display());
 
     // CI gate: structured output above, hard failure below — a diverging
     // kernel must fail the job even though the artifact was written.
     anyhow::ensure!(
-        report.within_tolerance(),
+        fused_err <= 1e-4 && wb_err <= 1e-4,
         "kernel divergence: fused {:.2e} / write-back {:.2e} vs naive exceeds 1e-4",
-        report.fused_rel_err,
-        report.writeback_rel_err
+        fused_err,
+        wb_err
     );
+    Ok(())
+}
+
+/// `bench check`: re-open a previously written `BENCH_kernels.json`
+/// (default: the repo-root trajectory path) and fail unless it parses
+/// and its differential gate passed — the CI step that proves the
+/// artifact the job uploads is a valid trajectory point.
+fn bench_check(path: Option<&str>) -> Result<()> {
+    use quick_infer::util::Json;
+    let path = match path {
+        Some(p) => std::path::PathBuf::from(p),
+        None => bench_trajectory_path("BENCH_kernels.json"),
+    };
+    let text = std::fs::read_to_string(&path)
+        .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+    let doc = Json::parse(text.trim())?;
+    let runs = doc.req("runs")?.as_arr()?;
+    anyhow::ensure!(!runs.is_empty(), "bench JSON records no runs");
+    let gate = doc.req("differential_gate")?;
+    let tol = gate.req("tolerance")?.as_f64()?;
+    let fused = gate.req("fused_rel_err")?.as_f64()?;
+    let wb = gate.req("writeback_rel_err")?.as_f64()?;
+    anyhow::ensure!(
+        fused <= tol && wb <= tol,
+        "differential gate failed: fused {fused:.2e} / write-back {wb:.2e} vs tolerance {tol:.0e}"
+    );
+    let decode_rows = doc.req("decode_sweep")?.as_arr()?;
+    anyhow::ensure!(!decode_rows.is_empty(), "decode sweep is empty");
+    println!(
+        "bench JSON ok: {} runs, {} decode-sweep rows, gate fused {fused:.2e} / wb {wb:.2e} \
+         (tol {tol:.0e})",
+        runs.len(),
+        decode_rows.len()
+    );
+    if let Some(acc) = doc.get("acceptance") {
+        let speedup = acc.req("runtime_speedup_at_max_m")?.as_f64()?;
+        let gap = acc.req("min_fused_over_writeback")?.as_f64()?;
+        println!(
+            "acceptance (informational): runtime speedup {speedup:.2}x (bar 1.5x), \
+             min fused/wb {gap:.2}x (bar 1.0x)"
+        );
+    }
     Ok(())
 }
 

@@ -50,6 +50,22 @@ impl Model {
         Model::Tiny,
     ];
 
+    /// Parse a CLI model name: the `spec().name` spelling
+    /// (case-insensitive) or the common short aliases
+    /// (`tiny`, `mistral`, `vicuna`, `llama2-13b`, `llama-33b`,
+    /// `llama2-70b`).
+    pub fn parse(s: &str) -> Option<Model> {
+        match s.to_ascii_lowercase().as_str() {
+            "tiny" | "tiny-llama" => Some(Model::Tiny),
+            "mistral" | "mistral7b" | "mistral-7b" => Some(Model::Mistral7B),
+            "vicuna" | "vicuna13b" | "vicuna-13b" => Some(Model::Vicuna13B),
+            "llama2-13b" | "llama-2-13b" => Some(Model::Llama2_13B),
+            "llama33b" | "llama-33b" => Some(Model::Llama33B),
+            "llama2-70b" | "llama-2-70b" => Some(Model::Llama2_70B),
+            _ => None,
+        }
+    }
+
     /// Published hyperparameters for this model.
     pub fn spec(self) -> LlmSpec {
         match self {
@@ -109,5 +125,22 @@ impl Model {
                 max_seq: 64,
             },
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_round_trips_every_spec_name() {
+        for m in Model::ALL {
+            let name = m.spec().name;
+            assert_eq!(Model::parse(name), Some(m), "{name}");
+            assert_eq!(Model::parse(&name.to_ascii_uppercase()), Some(m), "{name} uppercased");
+        }
+        assert_eq!(Model::parse("tiny"), Some(Model::Tiny));
+        assert_eq!(Model::parse("mistral"), Some(Model::Mistral7B));
+        assert_eq!(Model::parse("gpt-5"), None);
     }
 }

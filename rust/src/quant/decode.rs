@@ -21,6 +21,16 @@
 //!
 //! Both apply the per-group `(q - zero) * scale` affine inline, so the
 //! caller never materializes raw codes.
+//!
+//! Each decoder exists in two bit-identical implementations: a portable
+//! scalar loop (`*_scalar`) and, on x86_64 with AVX2, a vectorized one
+//! that expands all 8 nibbles of a word in one `vpsrlvd` + mask +
+//! `cvtdq2ps` sequence (the FLUTE-style in-register LUT-free expansion).
+//! The SIMD AWQ variant still pays the FT-order unscramble — as a
+//! `vpermps` — mirroring how the GPU baseline pays it as a shuffle. The
+//! un-suffixed entry points dispatch on a one-time CPUID probe; the
+//! kernel layer pins either path via `Blocking::simd`
+//! ([`select_quick_decoder`] / [`select_awq_decoder`]).
 
 use super::interleave::MMA_K;
 use super::pack::{FT_ORDER, PACK_FACTOR};
@@ -29,6 +39,50 @@ use super::pack::{FT_ORDER, PACK_FACTOR};
 pub const TILE_ROWS: usize = MMA_K;
 /// Columns of one fragment run (logical columns per packed word).
 pub const TILE_COLS: usize = PACK_FACTOR;
+
+/// Signature shared by the quick-run decoders (scalar and SIMD): see
+/// [`decode_quick_run_into`] for the argument contract.
+pub type DecodeQuickFn = fn(&[u32], usize, usize, &[f32], &[f32], usize, usize, &mut [f32]);
+
+/// Signature shared by the AWQ word decoders (scalar and SIMD): see
+/// [`decode_awq_word_into`] for the argument contract.
+pub type DecodeAwqFn = fn(u32, &[f32], &[f32], &mut [f32]);
+
+/// Pick the quick-run decoder: SIMD when requested and supported, the
+/// scalar loop otherwise. The two are bit-identical (same `(q - z) * s`
+/// f32 arithmetic, no FMA), so this is a pure speed knob.
+pub fn select_quick_decoder(simd: bool) -> DecodeQuickFn {
+    #[cfg(target_arch = "x86_64")]
+    if simd && avx2_available() {
+        return decode_quick_run_into_avx2;
+    }
+    let _ = simd;
+    decode_quick_run_into_scalar
+}
+
+/// Pick the AWQ word decoder (same contract as [`select_quick_decoder`]).
+pub fn select_awq_decoder(simd: bool) -> DecodeAwqFn {
+    #[cfg(target_arch = "x86_64")]
+    if simd && avx2_available() {
+        return decode_awq_word_into_avx2;
+    }
+    let _ = simd;
+    decode_awq_word_into_scalar
+}
+
+/// One-time cached CPUID probe for the "avx2" runtime tier — AVX2 *and*
+/// FMA, even though the decoders themselves use no FMA, so this single
+/// gate serves both the decoders and the microkernel
+/// (`kernel::simd_level`): one coherent tier, and bench rows labeled
+/// `scalar` really run scalar everywhere.
+#[cfg(target_arch = "x86_64")]
+pub(crate) fn avx2_available() -> bool {
+    use std::sync::OnceLock;
+    static AVAIL: OnceLock<bool> = OnceLock::new();
+    *AVAIL.get_or_init(|| {
+        std::is_x86_feature_detected!("avx2") && std::is_x86_feature_detected!("fma")
+    })
+}
 
 /// Word offset of the 16-word run for k-tile `kt`, word-column `wj` in a
 /// [`super::pack_quick`] stream with `w_total = n / 8` word-columns.
@@ -54,9 +108,29 @@ pub fn quick_run_offset(kt: usize, wj: usize, w_total: usize) -> usize {
 /// microkernel consumes, so no permutation happens at runtime. `frag`
 /// must hold at least `16 * 8` values (callers stack several runs into
 /// one K-strip panel).
+///
+/// Dispatches to the SIMD implementation when the host supports it; use
+/// [`decode_quick_run_into_scalar`] to pin the portable loop.
 #[inline]
 #[allow(clippy::too_many_arguments)]
 pub fn decode_quick_run_into(
+    run: &[u32],
+    row0: usize,
+    col0: usize,
+    scales: &[f32],
+    zeros: &[f32],
+    n: usize,
+    group_size: usize,
+    frag: &mut [f32],
+) {
+    select_quick_decoder(true)(run, row0, col0, scales, zeros, n, group_size, frag)
+}
+
+/// Portable scalar implementation of [`decode_quick_run_into`] — also the
+/// reference the SIMD variant is property-tested against (bit-identical).
+#[inline]
+#[allow(clippy::too_many_arguments)]
+pub fn decode_quick_run_into_scalar(
     run: &[u32],
     row0: usize,
     col0: usize,
@@ -80,19 +154,116 @@ pub fn decode_quick_run_into(
     }
 }
 
+/// AVX2 implementation of [`decode_quick_run_into`]: one variable shift
+/// expands all 8 nibbles of a word at once; the group metadata row and
+/// the fragment row are each a single 256-bit load/store.
+#[cfg(target_arch = "x86_64")]
+#[allow(clippy::too_many_arguments)]
+fn decode_quick_run_into_avx2(
+    run: &[u32],
+    row0: usize,
+    col0: usize,
+    scales: &[f32],
+    zeros: &[f32],
+    n: usize,
+    group_size: usize,
+    frag: &mut [f32],
+) {
+    assert_eq!(run.len(), TILE_ROWS);
+    assert!(frag.len() >= TILE_ROWS * TILE_COLS);
+    let last_gbase = ((row0 + TILE_ROWS - 1) / group_size) * n + col0;
+    assert!(scales.len() >= last_gbase + TILE_COLS && zeros.len() >= last_gbase + TILE_COLS);
+    // SAFETY: AVX2 presence was checked by `select_quick_decoder`; the
+    // asserts above bound every load/store offset used in the body.
+    unsafe {
+        decode_quick_run_into_avx2_body(run, row0, col0, scales, zeros, n, group_size, frag)
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn decode_quick_run_into_avx2_body(
+    run: &[u32],
+    row0: usize,
+    col0: usize,
+    scales: &[f32],
+    zeros: &[f32],
+    n: usize,
+    group_size: usize,
+    frag: &mut [f32],
+) {
+    use std::arch::x86_64::*;
+    let shifts = _mm256_setr_epi32(0, 4, 8, 12, 16, 20, 24, 28);
+    let mask = _mm256_set1_epi32(0xF);
+    let fp = frag.as_mut_ptr();
+    for (r, &word) in run.iter().enumerate() {
+        let gbase = ((row0 + r) / group_size) * n + col0;
+        let s = _mm256_loadu_ps(scales.as_ptr().add(gbase));
+        let z = _mm256_loadu_ps(zeros.as_ptr().add(gbase));
+        let q = _mm256_and_si256(_mm256_srlv_epi32(_mm256_set1_epi32(word as i32), shifts), mask);
+        let v = _mm256_mul_ps(_mm256_sub_ps(_mm256_cvtepi32_ps(q), z), s);
+        _mm256_storeu_ps(fp.add(r * TILE_COLS), v);
+    }
+}
+
 /// Decode one stock-AWQ word (FT nibble order) into 8 dequantized f32s in
 /// *logical* column order, scattering through [`FT_ORDER`] — the runtime
 /// permutation the baseline write-back kernel pays per word.
 ///
 /// `s8` / `z8` hold the group's scales/zeros for the word's 8 logical
 /// columns; `out` receives logical columns `8*wj .. 8*wj + 8`.
+///
+/// Dispatches to the SIMD implementation when the host supports it; use
+/// [`decode_awq_word_into_scalar`] to pin the portable loop.
 #[inline]
 pub fn decode_awq_word_into(word: u32, s8: &[f32], z8: &[f32], out: &mut [f32]) {
+    select_awq_decoder(true)(word, s8, z8, out)
+}
+
+/// Portable scalar implementation of [`decode_awq_word_into`] — also the
+/// reference the SIMD variant is property-tested against (bit-identical).
+#[inline]
+pub fn decode_awq_word_into_scalar(word: u32, s8: &[f32], z8: &[f32], out: &mut [f32]) {
     debug_assert!(s8.len() >= TILE_COLS && z8.len() >= TILE_COLS && out.len() >= TILE_COLS);
     for (p, &dst) in FT_ORDER.iter().enumerate() {
         let q = ((word >> (4 * p)) & 0xF) as f32;
         out[dst] = (q - z8[dst]) * s8[dst];
     }
+}
+
+/// `FT_INV[j]` = the nibble slot holding logical column `j`
+/// (the inverse of [`FT_ORDER`]): `out[j] = nibbles[FT_INV[j]]`.
+#[cfg(target_arch = "x86_64")]
+const FT_INV: [i32; PACK_FACTOR] = [0, 4, 1, 5, 2, 6, 3, 7];
+
+/// AVX2 implementation of [`decode_awq_word_into`]: the FT-order
+/// unscramble becomes a `vpermps` — still a per-word runtime permutation,
+/// exactly the cost class the QUICK layout moves offline.
+#[cfg(target_arch = "x86_64")]
+fn decode_awq_word_into_avx2(word: u32, s8: &[f32], z8: &[f32], out: &mut [f32]) {
+    assert!(s8.len() >= TILE_COLS && z8.len() >= TILE_COLS && out.len() >= TILE_COLS);
+    // SAFETY: AVX2 presence was checked by `select_awq_decoder`; the
+    // assert above bounds the three 8-float loads/stores.
+    unsafe { decode_awq_word_into_avx2_body(word, s8, z8, out) }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn decode_awq_word_into_avx2_body(word: u32, s8: &[f32], z8: &[f32], out: &mut [f32]) {
+    use std::arch::x86_64::*;
+    let shifts = _mm256_setr_epi32(0, 4, 8, 12, 16, 20, 24, 28);
+    let mask = _mm256_set1_epi32(0xF);
+    let perm = _mm256_setr_epi32(
+        FT_INV[0], FT_INV[1], FT_INV[2], FT_INV[3], FT_INV[4], FT_INV[5], FT_INV[6], FT_INV[7],
+    );
+    let q = _mm256_and_si256(_mm256_srlv_epi32(_mm256_set1_epi32(word as i32), shifts), mask);
+    // Unscramble FT slot order -> logical column order, then apply the
+    // affine with straight (logical-order) metadata loads.
+    let ql = _mm256_permutevar8x32_ps(_mm256_cvtepi32_ps(q), perm);
+    let s = _mm256_loadu_ps(s8.as_ptr());
+    let z = _mm256_loadu_ps(z8.as_ptr());
+    _mm256_storeu_ps(out.as_mut_ptr(), _mm256_mul_ps(_mm256_sub_ps(ql, z), s));
 }
 
 #[cfg(test)]
@@ -163,6 +334,59 @@ mod tests {
                 );
                 assert_eq!(row, reference[r * n + c0..r * n + c0 + TILE_COLS], "r={r} wj={wj}");
             }
+        }
+    }
+
+    #[test]
+    fn simd_decoders_are_bit_identical_to_scalar() {
+        // Same (q - z) * s arithmetic, no FMA: the SIMD decoders must be
+        // *bit*-equal, not just close.
+        let (k, n, g) = (64, 40, 32);
+        let t = quantize_groupwise(&rand_w(k, n, 17), k, n, g);
+        let stream = pack_quick(&t.codes, k, n);
+        let words = pack_awq(&t.codes, k, n);
+        let w_total = n / TILE_COLS;
+        let quick_simd = select_quick_decoder(true);
+        let awq_simd = select_awq_decoder(true);
+        let mut a = [0f32; TILE_ROWS * TILE_COLS];
+        let mut b = [0f32; TILE_ROWS * TILE_COLS];
+        for kt in 0..k / TILE_ROWS {
+            for wj in 0..w_total {
+                let off = quick_run_offset(kt, wj, w_total);
+                let run = &stream[off..off + TILE_ROWS];
+                decode_quick_run_into_scalar(
+                    run,
+                    kt * TILE_ROWS,
+                    wj * TILE_COLS,
+                    &t.scales,
+                    &t.zeros,
+                    n,
+                    g,
+                    &mut a,
+                );
+                quick_simd(run, kt * TILE_ROWS, wj * TILE_COLS, &t.scales, &t.zeros, n, g, &mut b);
+                assert_eq!(a, b, "quick kt={kt} wj={wj}");
+            }
+        }
+        let (mut ra, mut rb) = (vec![0f32; TILE_COLS], vec![0f32; TILE_COLS]);
+        for r in 0..k {
+            let gbase = (r / g) * n;
+            for wj in 0..w_total {
+                let c0 = wj * TILE_COLS;
+                let s8 = &t.scales[gbase + c0..gbase + c0 + TILE_COLS];
+                let z8 = &t.zeros[gbase + c0..gbase + c0 + TILE_COLS];
+                decode_awq_word_into_scalar(words[r * w_total + wj], s8, z8, &mut ra);
+                awq_simd(words[r * w_total + wj], s8, z8, &mut rb);
+                assert_eq!(ra, rb, "awq r={r} wj={wj}");
+            }
+        }
+    }
+
+    #[test]
+    fn ft_inv_inverts_ft_order() {
+        #[cfg(target_arch = "x86_64")]
+        for (p, &dst) in FT_ORDER.iter().enumerate() {
+            assert_eq!(FT_INV[dst] as usize, p);
         }
     }
 

@@ -1,0 +1,83 @@
+//! Allocation-counting global allocator shim (std-only substrate).
+//!
+//! The kernel runtime's steady-state contract — plan-cached GEMM calls
+//! allocate *nothing* — is easy to regress silently. The hot-path bench
+//! registers a [`CountingAlloc`] as its `#[global_allocator]` and
+//! asserts the per-call allocation delta is exactly zero after warmup;
+//! any new `Vec` sneaking into the decode/dispatch path fails the bench
+//! loudly instead of showing up as a mystery slowdown.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// A [`System`]-backed allocator that counts allocation events and
+/// bytes. Register with `#[global_allocator]` in a bench/binary, then
+/// diff [`CountingAlloc::allocations`] around the region under test.
+pub struct CountingAlloc {
+    allocs: AtomicU64,
+    bytes: AtomicU64,
+}
+
+impl CountingAlloc {
+    /// A fresh counter (const: usable as a `static` global allocator).
+    pub const fn new() -> CountingAlloc {
+        CountingAlloc { allocs: AtomicU64::new(0), bytes: AtomicU64::new(0) }
+    }
+
+    /// Allocation events observed so far (alloc + realloc; frees are not
+    /// counted — steady-state hot paths must show a *zero* delta here).
+    pub fn allocations(&self) -> u64 {
+        self.allocs.load(Ordering::Relaxed)
+    }
+
+    /// Bytes requested by those events.
+    pub fn allocated_bytes(&self) -> u64 {
+        self.bytes.load(Ordering::Relaxed)
+    }
+}
+
+impl Default for CountingAlloc {
+    fn default() -> Self {
+        CountingAlloc::new()
+    }
+}
+
+// SAFETY: defers every operation to `System`, only adding relaxed
+// counter bumps — the layout contract is `System`'s own.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        self.allocs.fetch_add(1, Ordering::Relaxed);
+        self.bytes.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        self.allocs.fetch_add(1, Ordering::Relaxed);
+        self.bytes.fetch_add(new_size as u64, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_direct_use() {
+        // Not registered as the global allocator here — exercise the
+        // trait impl directly.
+        let counter = CountingAlloc::new();
+        let layout = Layout::from_size_align(64, 8).unwrap();
+        unsafe {
+            let p = counter.alloc(layout);
+            assert!(!p.is_null());
+            counter.dealloc(p, layout);
+        }
+        assert_eq!(counter.allocations(), 1);
+        assert_eq!(counter.allocated_bytes(), 64);
+    }
+}

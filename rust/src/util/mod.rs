@@ -1,12 +1,15 @@
 //! std-only infrastructure substrates (the offline build has no external
 //! crates beyond `xla` + `anyhow`): JSON parsing, deterministic RNG +
-//! distributions, a bench harness, and a property-testing helper.
+//! distributions, a bench harness, a property-testing helper, and an
+//! allocation-counting global allocator for zero-alloc hot-path gates.
 
+pub mod alloc;
 pub mod bench;
 pub mod json;
 pub mod proptest;
 pub mod rng;
 
+pub use alloc::CountingAlloc;
 pub use bench::Bench;
 pub use json::Json;
 pub use rng::Rng;

@@ -1,13 +1,19 @@
 //! Integration tests for the native W4A16 kernel subsystem: the fused /
 //! write-back / naive backend trio end to end (packing → GEMM →
-//! differential agreement), the threading partitioner at realistic
-//! shapes, and the measured-cost calibration hook into `gpusim`.
+//! differential agreement), the runtime layer (persistent pool, plan
+//! cache, SIMD dispatch) at realistic shapes, the full-model
+//! `StepExecutor`, and the measured-cost calibration hooks into
+//! `gpusim`.
 
-use quick_infer::gpusim::{calibrate_writeback, Calib, Gpu, KernelKind};
+use quick_infer::gpusim::{
+    calibrate_step_writeback, calibrate_writeback, Calib, Gpu, KernelKind,
+};
 use quick_infer::kernel::{
     gemm_awq_writeback, gemm_quick_fused, max_rel_err, AwqWeights, AwqWritebackBackend, Blocking,
-    KernelBackend, NaiveBackend, QuickFusedBackend, QuickWeights,
+    KernelBackend, NaiveBackend, PlanCache, QuickFusedBackend, QuickWeights, StepBackend,
+    StepExecutor, WorkerPool,
 };
+use quick_infer::model::Model;
 use quick_infer::quant::quantize_groupwise;
 use quick_infer::util::Rng;
 
@@ -53,13 +59,98 @@ fn explicit_thread_counts_are_deterministic() {
     let one = Blocking { threads: 1, ..Blocking::default() };
     gemm_quick_fused(&x, m, &qw, &one, &mut base_q).unwrap();
     gemm_awq_writeback(&x, m, &aw, &one, &mut base_a).unwrap();
-    for threads in [2usize, 3, 7] {
-        let b = Blocking { threads, ..Blocking::default() };
-        let mut y = vec![0f32; m * n];
+    // Work stealing must not change results: a column's reduction order
+    // is fixed whichever participant claims its tile, under both the
+    // pooled and the spawn-per-call dispatcher (nc_words=2 gives 16
+    // tiles, so every thread count below actually splits).
+    for pool in [true, false] {
+        for threads in [2usize, 3, 7] {
+            let b = Blocking { threads, nc_words: 2, pool, ..Blocking::default() };
+            let mut y = vec![0f32; m * n];
+            gemm_quick_fused(&x, m, &qw, &b, &mut y).unwrap();
+            assert_eq!(y, base_q, "fused threads={threads} pool={pool} must be bit-identical");
+            gemm_awq_writeback(&x, m, &aw, &b, &mut y).unwrap();
+            assert_eq!(y, base_a, "write-back threads={threads} pool={pool}");
+        }
+    }
+}
+
+#[test]
+fn repeated_calls_hit_the_plan_cache_and_pool() {
+    // Decode steady state: many same-shape calls after the first must
+    // neither rebuild plans nor change results. Exercised on the global
+    // cache + pool exactly as the engine would.
+    let (k, n, g, m) = (256usize, 512usize, 128usize, 4usize);
+    let t = rand_layer(k, n, g, 77);
+    let qw = QuickWeights::from_quantized(&t);
+    let b = Blocking { nc_words: 4, ..Blocking::default() };
+    let mut rng = Rng::seed_from_u64(78);
+    let x: Vec<f32> = (0..m * k).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect();
+    let mut first = vec![0f32; m * n];
+    gemm_quick_fused(&x, m, &qw, &b, &mut first).unwrap();
+    let plan_first = PlanCache::global().plan(m, k, n, &b).unwrap();
+    let mut y = vec![0f32; m * n];
+    for _ in 0..32 {
         gemm_quick_fused(&x, m, &qw, &b, &mut y).unwrap();
-        assert_eq!(y, base_q, "fused threads={threads} must be bit-identical");
-        gemm_awq_writeback(&x, m, &aw, &b, &mut y).unwrap();
-        assert_eq!(y, base_a, "write-back threads={threads} must be bit-identical");
+        assert_eq!(y, first, "steady-state call diverged");
+    }
+    let plan_later = PlanCache::global().plan(m, k, n, &b).unwrap();
+    assert!(
+        std::sync::Arc::ptr_eq(&plan_first, &plan_later),
+        "steady-state calls must keep hitting the same memoized plan"
+    );
+    assert!(PlanCache::global().len() >= 1 && !PlanCache::global().is_empty());
+    assert!(WorkerPool::global().workers() + 1 >= 1);
+}
+
+#[test]
+fn step_executor_runs_tiny_end_to_end_and_calibrates() {
+    // The tentpole's acceptance path: a full LlmSpec decode step through
+    // the native runtime produces a tokens/sec number, and the
+    // fused/write-back step gap feeds calibrate_step_writeback.
+    let spec = Model::Tiny.spec();
+    let b = Blocking::default();
+    let mut fused = StepExecutor::new(&spec, StepBackend::Fused, b, 128, 8, 42).unwrap();
+    let mut wb = StepExecutor::new(&spec, StepBackend::Writeback, b, 128, 8, 42).unwrap();
+    // Warm both (plans built), then measure one step each.
+    fused.step(8).unwrap();
+    wb.step(8).unwrap();
+    let rf = fused.step(8).unwrap();
+    let rw = wb.step(8).unwrap();
+    assert!(rf.tokens_per_s > 0.0 && rw.tokens_per_s > 0.0);
+    assert_eq!(rf.gemm_calls, 29, "7 GEMMs x 4 layers + lm_head");
+    let calib = calibrate_step_writeback(
+        &Gpu::Rtx4090.spec(),
+        &spec,
+        8,
+        rf.wall_s,
+        rw.wall_s,
+        &Calib::default(),
+    );
+    assert!(calib.writeback_scale >= 0.0 && calib.writeback_scale <= 1024.0);
+    // The calibrated Calib plugs into any downstream model query.
+    let p = quick_infer::gpusim::kernel_model::model_step_gemms(
+        &Gpu::Rtx4090.spec(),
+        &spec,
+        KernelKind::Awq,
+        8,
+        &calib,
+    );
+    assert!(p > 0.0);
+}
+
+#[test]
+fn step_executor_tp_ranks_agree_with_full_model_shapes() {
+    let spec = Model::Tiny.spec();
+    let b = Blocking::default();
+    for tp in [1u64, 2, 4] {
+        let rank = StepExecutor::new_tp(&spec, tp, StepBackend::Fused, b, 64, 2, 9).unwrap();
+        let want: usize = spec.tp_gemms(tp).len();
+        assert_eq!(rank.gemms().len(), want, "tp={tp}");
+        let full_flops = StepExecutor::new(&spec, StepBackend::Fused, b, 64, 2, 9)
+            .unwrap()
+            .step_flops(2);
+        assert!((rank.step_flops(2) - full_flops / tp as f64).abs() < 1.0, "tp={tp}");
     }
 }
 

@@ -444,6 +444,100 @@ fn prop_continuous_scheduler_invariants_and_progress() {
 }
 
 #[test]
+fn prop_simd_runtime_equals_scalar_runtime() {
+    // SIMD microkernel + SIMD decoders ≡ their scalar references over
+    // random shapes, strides (the write-back panel gives the microkernel
+    // arbitrary tile strides), blockings, and thread/dispatch modes. The
+    // decoders are bit-identical (no FMA); the microkernel difference is
+    // fused-multiply-add's single rounding, which grows with K — 1e-5 at
+    // full-GEMM K here, with the strict 1e-6 short-reduction property in
+    // kernel/microkernel.rs.
+    use quick_infer::kernel::{
+        gemm_awq_writeback, gemm_quick_fused, max_rel_err, AwqWeights, Blocking, QuickWeights,
+    };
+    check("simd-vs-scalar-runtime", 0x51D5, default_cases(), |rng| {
+        let g = [32usize, 64][rng.range_usize(0, 1)];
+        let k = g * rng.range_usize(1, 2);
+        let n = rng.range_usize(1, 10) * 8;
+        let m = rng.range_usize(1, 9);
+        let w: Vec<f32> = (0..k * n).map(|_| (rng.f64() * 2.0 - 1.0) as f32).collect();
+        let t = quant::quantize_groupwise(&w, k, n, g);
+        let x: Vec<f32> = (0..m * k).map(|_| (rng.f64() * 2.0 - 1.0) as f32).collect();
+        let base = Blocking {
+            mc: [4usize, 64][rng.range_usize(0, 1)],
+            kc: [16usize, 64][rng.range_usize(0, 1)],
+            nc_words: [1usize, 3, 16][rng.range_usize(0, 2)],
+            threads: rng.range_usize(1, 3),
+            simd: true,
+            pool: rng.range_usize(0, 1) == 0,
+        };
+        let scalar = Blocking { simd: false, ..base };
+        let qw = QuickWeights::from_quantized(&t);
+        let aw = AwqWeights::from_quantized(&t);
+        let mut y_simd = vec![0f32; m * n];
+        let mut y_scalar = vec![0f32; m * n];
+        gemm_quick_fused(&x, m, &qw, &base, &mut y_simd).unwrap();
+        gemm_quick_fused(&x, m, &qw, &scalar, &mut y_scalar).unwrap();
+        let ef = max_rel_err(&y_simd, &y_scalar);
+        gemm_awq_writeback(&x, m, &aw, &base, &mut y_simd).unwrap();
+        gemm_awq_writeback(&x, m, &aw, &scalar, &mut y_scalar).unwrap();
+        let ew = max_rel_err(&y_simd, &y_scalar);
+        assert!(
+            ef <= 1e-5 && ew <= 1e-5,
+            "k={k} n={n} g={g} m={m} {base:?}: fused {ef:.2e} wb {ew:.2e}"
+        );
+    });
+}
+
+#[test]
+fn prop_step_executor_equals_per_gemm_naive() {
+    // A fused (or write-back) StepExecutor's per-GEMM outputs must match
+    // a naive executor built from the same seed — i.e. per-GEMM
+    // NaiveBackend calls on identical weights and activations — within
+    // the kernel differential bar, over random miniature LlmSpecs.
+    use quick_infer::kernel::{max_rel_err, Blocking, StepBackend, StepExecutor};
+    use quick_infer::model::LlmSpec;
+    check("step-executor-vs-naive", 0x57E9A, 16, |rng| {
+        // Dimensions aligned for the kernel contract: d_model/d_ff
+        // multiples of 32 (group divides K), vocab a multiple of 8,
+        // whole heads per KV group.
+        let n_heads = [2u64, 4][rng.range_usize(0, 1)];
+        let d_model = [64u64, 128][rng.range_usize(0, 1)];
+        let spec = LlmSpec {
+            name: "rand-step",
+            vocab: 8 * rng.range_u64(2, 12),
+            d_model,
+            n_layers: rng.range_u64(1, 2),
+            n_heads,
+            kv_heads: n_heads,
+            d_ff: 32 * rng.range_u64(2, 6),
+            max_seq: 64,
+        };
+        let group = 32usize;
+        let m_max = rng.range_usize(1, 4);
+        let seed = rng.next_u64();
+        let backend = [StepBackend::Fused, StepBackend::Writeback][rng.range_usize(0, 1)];
+        let b = Blocking { kc: 32, ..Blocking::default() };
+        let mut opt = StepExecutor::new(&spec, backend, b, group, m_max, seed).unwrap();
+        let mut naive =
+            StepExecutor::new(&spec, StepBackend::Naive, b, group, m_max, seed).unwrap();
+        let m = rng.range_usize(1, m_max);
+        let r_opt = opt.step(m).unwrap();
+        let r_naive = naive.step(m).unwrap();
+        assert_eq!(r_opt.gemm_calls, r_naive.gemm_calls);
+        for gi in 0..opt.gemms().len() {
+            let err = max_rel_err(opt.output(gi, m), naive.output(gi, m));
+            assert!(
+                err <= 1e-4,
+                "{:?} gemm {gi} ({}) m={m}: rel err {err:.2e} ({spec:?})",
+                backend,
+                opt.gemms()[gi].name
+            );
+        }
+    });
+}
+
+#[test]
 fn prop_kernel_backends_agree_with_reference() {
     // The differential gate of the native kernel subsystem, in both CI
     // profiles: gemm_quick_fused ≡ gemm_awq_writeback ≡ naive
@@ -467,6 +561,7 @@ fn prop_kernel_backends_agree_with_reference() {
             kc: [16usize, 64, 256][rng.range_usize(0, 2)],
             nc_words: [1usize, 2, 16][rng.range_usize(0, 2)],
             threads: rng.range_usize(1, 3),
+            ..Blocking::default()
         };
         let naive = NaiveBackend::from_quantized(&t);
         let fused = QuickFusedBackend::new(&t, blocking);
