@@ -2,10 +2,11 @@
 //! throughput (incl. the `dequantize_into` reused-buffer and memoized
 //! fragment-perm variants), the native fused/write-back kernel pair —
 //! now with a counting-allocator gate proving the plan-cached runtime
-//! allocates *zero* bytes per call in steady state — KV block manager
-//! ops, batcher step planning, bank-counter inner loop, and — with
-//! artifacts present — the PJRT decode round-trip the engine pays per
-//! token.
+//! allocates *zero* bytes per call in steady state (with the span
+//! tracer off *and* on), the obs tracer's per-span dispatch cost, KV
+//! block manager ops, batcher step planning, bank-counter inner loop,
+//! and — with artifacts present — the PJRT decode round-trip the
+//! engine pays per token.
 
 use quick_infer::coordinator::kv_cache::KvBlockManager;
 use quick_infer::coordinator::{Batcher, GenerationRequest, StepPlan};
@@ -99,6 +100,48 @@ fn bench_kernel(b: &Bench) {
     steady("dequantize_into (reused buffer)", || {
         quant::dequantize_into(&t, &mut deq);
     });
+
+    // The same gates with the span tracer live: instrumentation must
+    // stay allocation-free in steady state too. Each thread's event
+    // ring allocates once on its first span, so warm every pool worker
+    // through a barrier job (tasks == slots forces one claim per
+    // participant) before the counting window opens.
+    {
+        use quick_infer::kernel::WorkerPool;
+        use quick_infer::obs::trace;
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        trace::enable();
+        let pool = WorkerPool::global();
+        let slots = pool.workers() + 1;
+        let started = AtomicUsize::new(0);
+        pool.run(slots, slots, &|_t, _s| {
+            started.fetch_add(1, Ordering::Relaxed);
+            while started.load(Ordering::Relaxed) < slots {
+                std::hint::spin_loop();
+            }
+        });
+        steady("gemm_quick_fused (traced)", || {
+            fused.gemm(&x, m, &mut y);
+        });
+        steady("gemm_awq_writeback (traced)", || {
+            writeback.gemm(&x, m, &mut y);
+        });
+        trace::disable();
+    }
+}
+
+fn bench_obs(b: &Bench) {
+    use quick_infer::obs::trace;
+    println!("-- obs tracer dispatch --");
+    // The permanent cost every instrumentation site pays when tracing
+    // is off: one relaxed load.
+    trace::disable();
+    b.run("span dispatch (tracing disabled)", || trace::span("bench.span", "bench"));
+    // The recording cost (ring overflow folds to the cheaper
+    // drop-newest path; both bound the per-event overhead).
+    trace::enable();
+    b.run("span dispatch (tracing enabled)", || trace::span("bench.span", "bench"));
+    trace::disable();
 }
 
 fn bench_kv(b: &Bench) {
@@ -170,6 +213,7 @@ fn main() {
     let b = Bench::fast();
     bench_quant(&b);
     bench_kernel(&b);
+    bench_obs(&b);
     bench_kv(&b);
     bench_batcher(&b);
     bench_bank(&b);

@@ -28,8 +28,36 @@
 //!   granularity the fixed shapes allow.
 
 use std::collections::VecDeque;
+use std::sync::OnceLock;
+
+use crate::obs::{trace, Counter, Registry};
 
 use super::request::{FinishReason, GenerationRequest, SeqState, Sequence};
+
+/// Registry handles for the continuous scheduler, resolved once.
+struct SchedMetrics {
+    steps: Counter,
+    decode_lanes: Counter,
+    prefill_tokens: Counter,
+    chunked_prefill_tokens: Counter,
+    preemptions: Counter,
+    submitted: Counter,
+}
+
+fn sched_metrics() -> &'static SchedMetrics {
+    static METRICS: OnceLock<SchedMetrics> = OnceLock::new();
+    METRICS.get_or_init(|| {
+        let r = Registry::global();
+        SchedMetrics {
+            steps: r.counter("sched.steps"),
+            decode_lanes: r.counter("sched.decode_lanes"),
+            prefill_tokens: r.counter("sched.prefill_tokens"),
+            chunked_prefill_tokens: r.counter("sched.chunked_prefill_tokens"),
+            preemptions: r.counter("sched.preemptions"),
+            submitted: r.counter("sched.submitted"),
+        }
+    })
+}
 
 // ---------------------------------------------------------------------------
 // Token-budget continuous scheduler (simulator + any token-granular engine).
@@ -162,6 +190,7 @@ impl ContinuousScheduler {
     /// Queue a request. Returns its scheduler slot.
     pub fn submit(&mut self, request_id: u64, prompt_tokens: u64, gen_budget: u64) -> SchedSeqId {
         assert!(prompt_tokens > 0 && gen_budget > 0);
+        sched_metrics().submitted.inc();
         let id = self.seqs.len();
         self.seqs.push(SchedSeq {
             request_id,
@@ -234,6 +263,7 @@ impl ContinuousScheduler {
     /// Plan one step: fill the token budget with decode tokens first, then
     /// chunk the admitted prompts (FCFS) into the remainder.
     pub fn plan_step(&self) -> StepBatch {
+        let mut span = trace::span("sched.plan_step", "scheduler");
         let mut budget = self.policy.token_budget;
         let mut batch = StepBatch::default();
         for &id in &self.running {
@@ -258,6 +288,13 @@ impl ContinuousScheduler {
             batch.chunks.push(PrefillChunk { seq: id, start: s.prefilled, len });
             budget -= len;
         }
+        let m = sched_metrics();
+        m.steps.inc();
+        m.decode_lanes.add(batch.decode.len() as u64);
+        m.prefill_tokens.add(batch.prefill_tokens());
+        span.arg("decode_lanes", batch.decode.len() as f64);
+        span.arg("prefill_tokens", batch.prefill_tokens() as f64);
+        span.arg("chunks", batch.chunks.len() as f64);
         batch
     }
 
@@ -271,6 +308,7 @@ impl ContinuousScheduler {
         debug_assert_eq!(s.prefilled, chunk.start);
         debug_assert!(chunk.len > 0 && chunk.start + chunk.len <= s.prompt_tokens);
         s.prefilled += chunk.len;
+        sched_metrics().chunked_prefill_tokens.add(chunk.len);
         s.in_decode()
     }
 
@@ -302,6 +340,7 @@ impl ContinuousScheduler {
     /// resets so the prompt recomputes on re-admission (a prefix cache can
     /// discount the recompute via `admit_next`'s `cached_prefix`).
     pub fn preempt(&mut self, id: SchedSeqId) {
+        sched_metrics().preemptions.inc();
         let s = &mut self.seqs[id];
         debug_assert_eq!(s.state, SchedState::Running);
         s.gen_budget -= s.generated.min(s.gen_budget.saturating_sub(1));

@@ -27,6 +27,7 @@
 //! tokens follow the same rule: slot `prefilled` is written before any
 //! later slot becomes visible.
 
+use std::sync::OnceLock;
 use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
@@ -36,7 +37,29 @@ use super::sampler;
 use super::metrics::EngineMetrics;
 use super::prefix::PrefixIndex;
 use super::request::{FinishReason, GenerationRequest, SeqState};
+use crate::obs::{HistogramHandle, Registry};
 use crate::runtime::{HostTensor, Runtime};
+
+/// Registry mirrors of the engine's latency histograms, resolved once.
+/// `EngineMetrics` stays the per-engine aggregate; these feed the
+/// process-wide snapshot (`report obs`).
+struct EngineObs {
+    ttft_s: HistogramHandle,
+    itl_s: HistogramHandle,
+    e2e_s: HistogramHandle,
+}
+
+fn engine_obs() -> &'static EngineObs {
+    static OBS: OnceLock<EngineObs> = OnceLock::new();
+    OBS.get_or_init(|| {
+        let r = Registry::global();
+        EngineObs {
+            ttft_s: r.histogram("engine.ttft_s"),
+            itl_s: r.histogram("engine.itl_s"),
+            e2e_s: r.histogram("engine.e2e_s"),
+        }
+    })
+}
 
 /// Engine configuration.
 #[derive(Debug, Clone)]
@@ -360,9 +383,9 @@ impl Engine {
             let seq = &mut self.batcher.seqs[seq_index];
             seq.push_generated(tok);
             self.metrics.generated_tokens += 1;
-            self.metrics
-                .ttft
-                .record(seq.first_token_at.unwrap().duration_since(seq.enqueued_at));
+            let ttft = seq.first_token_at.unwrap().duration_since(seq.enqueued_at);
+            self.metrics.ttft.record(ttft);
+            engine_obs().ttft_s.record(ttft);
             self.last_token_at[lane] = Some(Instant::now());
             self.maybe_finish_lane(lane)?;
         }
@@ -514,7 +537,9 @@ impl Engine {
             self.batcher.seqs[seq_index].push_generated(tok);
             self.metrics.generated_tokens += 1;
             if let Some(prev) = self.last_token_at[lane] {
-                self.metrics.itl.record(now.duration_since(prev));
+                let itl = now.duration_since(prev);
+                self.metrics.itl.record(itl);
+                engine_obs().itl_s.record(itl);
             }
             self.last_token_at[lane] = Some(now);
             let was = self.batcher.seq_in_lane(lane).is_some();
@@ -545,9 +570,9 @@ impl Engine {
                 let seq = &mut self.batcher.seqs[seq_index];
                 seq.push_generated(tok);
                 self.metrics.generated_tokens += 1;
-                self.metrics
-                    .ttft
-                    .record(seq.first_token_at.unwrap().duration_since(seq.enqueued_at));
+                let ttft = seq.first_token_at.unwrap().duration_since(seq.enqueued_at);
+                self.metrics.ttft.record(ttft);
+                engine_obs().ttft_s.record(ttft);
                 self.last_token_at[lane] = Some(now);
                 let was = self.batcher.seq_in_lane(lane).is_some();
                 self.maybe_finish_lane(lane)?;
@@ -577,9 +602,9 @@ impl Engine {
             self.last_token_at[lane] = None;
             let seq = &self.batcher.seqs[seq_index];
             self.metrics.requests_finished += 1;
-            self.metrics
-                .e2e
-                .record(seq.finished_at.unwrap().duration_since(seq.enqueued_at));
+            let e2e = seq.finished_at.unwrap().duration_since(seq.enqueued_at);
+            self.metrics.e2e.record(e2e);
+            engine_obs().e2e_s.record(e2e);
             self.completions.push(Completion {
                 id: seq.req.id,
                 tokens: seq.output_tokens().to_vec(),

@@ -1,70 +1,13 @@
 //! Serving metrics: throughput counters and latency histograms.
+//!
+//! The latency [`Histogram`] itself lives in [`crate::obs`] since PR 6
+//! (the registry, the simulations, and the engine all share one
+//! implementation); this module keeps the engine-side aggregate and its
+//! report, rendered through the shared [`Report`] writer so serving
+//! output and `report obs` cannot drift apart.
 
-use std::time::Duration;
-
-/// Fixed-bucket latency histogram (log-spaced, 1 us .. ~1000 s).
-#[derive(Debug, Clone)]
-pub struct Histogram {
-    buckets: Vec<u64>,
-    bounds: Vec<f64>,
-    count: u64,
-    sum_s: f64,
-    max_s: f64,
-}
-
-impl Default for Histogram {
-    fn default() -> Self {
-        Self::new()
-    }
-}
-
-impl Histogram {
-    pub fn new() -> Self {
-        // 1us * 2^i, 30 buckets -> covers up to ~1073 s.
-        let bounds: Vec<f64> = (0..30).map(|i| 1e-6 * (1u64 << i) as f64).collect();
-        Histogram { buckets: vec![0; 31], bounds, count: 0, sum_s: 0.0, max_s: 0.0 }
-    }
-
-    pub fn record(&mut self, d: Duration) {
-        self.record_s(d.as_secs_f64());
-    }
-
-    pub fn record_s(&mut self, s: f64) {
-        let idx = self.bounds.partition_point(|&b| b < s);
-        self.buckets[idx] += 1;
-        self.count += 1;
-        self.sum_s += s;
-        self.max_s = self.max_s.max(s);
-    }
-
-    pub fn count(&self) -> u64 {
-        self.count
-    }
-
-    pub fn mean_s(&self) -> f64 {
-        if self.count == 0 { 0.0 } else { self.sum_s / self.count as f64 }
-    }
-
-    pub fn max_s(&self) -> f64 {
-        self.max_s
-    }
-
-    /// Approximate quantile from bucket upper bounds.
-    pub fn quantile_s(&self, q: f64) -> f64 {
-        if self.count == 0 {
-            return 0.0;
-        }
-        let target = (q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64;
-        let mut acc = 0;
-        for (i, &c) in self.buckets.iter().enumerate() {
-            acc += c;
-            if acc >= target {
-                return if i < self.bounds.len() { self.bounds[i] } else { self.max_s };
-            }
-        }
-        self.max_s
-    }
-}
+pub use crate::obs::Histogram;
+use crate::obs::Report;
 
 /// Aggregated engine metrics.
 #[derive(Debug, Default, Clone)]
@@ -114,65 +57,57 @@ impl EngineMetrics {
     }
 
     pub fn report(&self, wall_s: f64) -> String {
-        format!(
-            "requests: {} admitted, {} finished, {} rejected\n\
-             tokens:   {} prompt, {} generated\n\
-             steps:    {} total ({} prefill, {} decode; mean decode batch {:.2}; {} chunk-riding prompt tokens)\n\
-             prefix:   {} hits / {} misses ({:.0}% hit rate), {} tokens skipped, {} evictions\n\
-             wall:     {:.2}s -> {:.1} gen tok/s\n\
-             TTFT:     mean {:.1} ms, p50 {:.1} ms, p99 {:.1} ms\n\
-             ITL:      mean {:.1} ms, p50 {:.1} ms, p99 {:.1} ms",
-            self.requests_admitted,
-            self.requests_finished,
-            self.requests_rejected,
-            self.prompt_tokens,
-            self.generated_tokens,
-            self.engine_steps,
-            self.prefill_steps,
-            self.decode_steps,
-            self.mean_decode_batch(),
-            self.chunked_prefill_tokens,
-            self.prefix_hits,
-            self.prefix_misses,
-            self.prefix_hit_rate() * 100.0,
-            self.prefix_tokens_skipped,
-            self.prefix_evictions,
-            wall_s,
-            self.generated_tokens as f64 / wall_s.max(1e-9),
-            self.ttft.mean_s() * 1e3,
-            self.ttft.quantile_s(0.5) * 1e3,
-            self.ttft.quantile_s(0.99) * 1e3,
-            self.itl.mean_s() * 1e3,
-            self.itl.quantile_s(0.5) * 1e3,
-            self.itl.quantile_s(0.99) * 1e3,
-        )
+        let mut r = Report::new();
+        r.line(
+            "requests",
+            format!(
+                "{} admitted, {} finished, {} rejected",
+                self.requests_admitted, self.requests_finished, self.requests_rejected
+            ),
+        );
+        r.line(
+            "tokens",
+            format!("{} prompt, {} generated", self.prompt_tokens, self.generated_tokens),
+        );
+        r.line(
+            "steps",
+            format!(
+                "{} total ({} prefill, {} decode; mean decode batch {:.2}; {} chunk-riding prompt tokens)",
+                self.engine_steps,
+                self.prefill_steps,
+                self.decode_steps,
+                self.mean_decode_batch(),
+                self.chunked_prefill_tokens,
+            ),
+        );
+        r.line(
+            "prefix",
+            format!(
+                "{} hits / {} misses ({:.0}% hit rate), {} tokens skipped, {} evictions",
+                self.prefix_hits,
+                self.prefix_misses,
+                self.prefix_hit_rate() * 100.0,
+                self.prefix_tokens_skipped,
+                self.prefix_evictions,
+            ),
+        );
+        r.line(
+            "wall",
+            format!(
+                "{:.2}s -> {:.1} gen tok/s",
+                wall_s,
+                self.generated_tokens as f64 / wall_s.max(1e-9)
+            ),
+        );
+        r.line("TTFT", Report::hist_ms(&self.ttft));
+        r.line("ITL", Report::hist_ms(&self.itl));
+        r.finish()
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    #[test]
-    fn histogram_quantiles_ordered() {
-        let mut h = Histogram::new();
-        for i in 1..=1000u64 {
-            h.record_s(i as f64 * 1e-4); // 0.1ms .. 100ms
-        }
-        assert_eq!(h.count(), 1000);
-        let p50 = h.quantile_s(0.5);
-        let p99 = h.quantile_s(0.99);
-        assert!(p50 <= p99);
-        assert!(p50 > 1e-3 && p99 <= h.max_s() * 2.0);
-        assert!((h.mean_s() - 0.05).abs() < 0.01);
-    }
-
-    #[test]
-    fn empty_histogram_is_zero() {
-        let h = Histogram::new();
-        assert_eq!(h.quantile_s(0.99), 0.0);
-        assert_eq!(h.mean_s(), 0.0);
-    }
 
     #[test]
     fn mean_decode_batch() {
@@ -193,5 +128,16 @@ mod tests {
         let report = m.report(1.0);
         assert!(report.contains("75% hit rate"), "{report}");
         assert!(report.contains("48 tokens skipped"), "{report}");
+    }
+
+    #[test]
+    fn report_routes_through_shared_writer() {
+        let mut m = EngineMetrics::new();
+        m.ttft.record_s(2e-3);
+        let report = m.report(1.0);
+        // The TTFT/ITL lines are Report::hist_ms renderings with the
+        // 10-column label gutter the Report writer enforces.
+        assert!(report.contains(&format!("TTFT:     {}", Report::hist_ms(&m.ttft))), "{report}");
+        assert!(report.contains("ITL:      mean"), "{report}");
     }
 }

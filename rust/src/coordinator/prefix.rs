@@ -21,10 +21,38 @@
 //! serving regime the ROADMAP targets).
 
 use std::collections::{HashMap, HashSet};
+use std::sync::OnceLock;
 
 use anyhow::{bail, Result};
 
+use crate::obs::{Counter, Registry};
+
 use super::kv_cache::{KvBlockManager, SeqId};
+
+/// Registry mirrors of [`PrefixStats`], resolved once. The per-cache
+/// struct stays the source of truth for reports; the registry view is
+/// what `report obs` and trace consumers see process-wide.
+struct PrefixMetrics {
+    hits: Counter,
+    misses: Counter,
+    tokens_skipped: Counter,
+    evictions: Counter,
+    registered_blocks: Counter,
+}
+
+fn prefix_metrics() -> &'static PrefixMetrics {
+    static METRICS: OnceLock<PrefixMetrics> = OnceLock::new();
+    METRICS.get_or_init(|| {
+        let r = Registry::global();
+        PrefixMetrics {
+            hits: r.counter("prefix.hits"),
+            misses: r.counter("prefix.misses"),
+            tokens_skipped: r.counter("prefix.tokens_skipped"),
+            evictions: r.counter("prefix.evictions"),
+            registered_blocks: r.counter("prefix.registered_blocks"),
+        }
+    })
+}
 
 /// Chained content hash of a full KV block.
 pub type BlockHash = u64;
@@ -368,8 +396,11 @@ impl PrefixCache {
                 if skipped > 0 {
                     self.stats.hits += 1;
                     self.stats.tokens_skipped += skipped;
+                    prefix_metrics().hits.inc();
+                    prefix_metrics().tokens_skipped.add(skipped);
                 } else {
                     self.stats.misses += 1;
+                    prefix_metrics().misses.inc();
                 }
                 return Ok(skipped);
             }
@@ -390,6 +421,7 @@ impl PrefixCache {
         kv.allocate(seq, tokens.len().max(1) as u64)?;
         if self.enabled {
             self.stats.misses += 1;
+            prefix_metrics().misses.inc();
         }
         Ok(0)
     }
@@ -410,6 +442,7 @@ impl PrefixCache {
         for (_, b) in self.index.insert(&tokens[..n * bs], &full[..n]) {
             kv.mark_cached(b)?;
             self.stats.registered_blocks += 1;
+            prefix_metrics().registered_blocks.inc();
         }
         Ok(())
     }
@@ -441,6 +474,7 @@ impl PrefixCache {
             for b in freed {
                 kv.evict(b).expect("evict_lru returned a non-evictable block");
                 self.stats.evictions += 1;
+                prefix_metrics().evictions.inc();
             }
         }
         true

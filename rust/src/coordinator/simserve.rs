@@ -19,14 +19,24 @@
 //! gain as a function of hit rate; disjoint traffic is unaffected.
 
 use std::collections::VecDeque;
+use std::sync::OnceLock;
 
 use crate::gpusim::kernel_model::{model_gemm, Calib, KernelKind};
 use crate::gpusim::DeviceSpec;
 use crate::model::LlmSpec;
+use crate::obs::{Histogram, HistogramHandle, Registry, Report};
 use crate::workload::Request;
 
 use super::kv_cache::{blocks_for_device, KvBlockManager};
 use super::prefix::PrefixCache;
+
+/// Registry mirror of the continuous simulator's TTFT distribution (the
+/// local [`Histogram`] stays the source of each run's `mean_ttft_s`; the
+/// mirror is what `report obs` sees across runs).
+fn sim_ttft_hist() -> &'static HistogramHandle {
+    static H: OnceLock<HistogramHandle> = OnceLock::new();
+    H.get_or_init(|| Registry::global().histogram("sim.ttft_s"))
+}
 
 /// Simulation policy knobs (vLLM defaults where applicable).
 #[derive(Debug, Clone, Copy)]
@@ -95,6 +105,35 @@ impl SimResult {
     pub fn prefix_hit_rate(&self) -> f64 {
         let n = self.prefix_hits + self.prefix_misses;
         if n == 0 { 0.0 } else { self.prefix_hits as f64 / n as f64 }
+    }
+
+    /// Render through the shared [`Report`] writer — the same layout
+    /// `EngineMetrics::report` and `report obs` use.
+    pub fn report(&self) -> String {
+        let mut r = Report::new();
+        r.line("requests", format!("{} finished in {:.2}s (sim)", self.finished, self.wall_s));
+        r.line(
+            "tokens",
+            format!(
+                "{} prompt + {} generated ({:.1} gen tok/s, {:.1} total tok/s)",
+                self.prompt_tokens, self.gen_tokens, self.gen_tok_per_s, self.total_tok_per_s
+            ),
+        );
+        r.line(
+            "batching",
+            format!("mean decode batch {:.1}, {} preemptions", self.mean_batch, self.preemptions),
+        );
+        r.line(
+            "prefix",
+            format!(
+                "{:.0}% hit rate, {} tokens skipped, {} evictions",
+                self.prefix_hit_rate() * 100.0,
+                self.prefix_tokens_skipped,
+                self.prefix_evictions
+            ),
+        );
+        r.line("TTFT", format!("mean {:.1} ms", self.mean_ttft_s * 1e3));
+        r.finish()
     }
 }
 
@@ -221,8 +260,7 @@ pub fn simulate_serving(
     let mut decode_steps = 0u64;
     let mut decode_lane_steps = 0u64;
     let mut preemptions = 0u64;
-    let mut ttft_sum = 0.0f64;
-    let mut ttft_n = 0u64;
+    let mut ttft = Histogram::new();
 
     while !waiting.is_empty() || !running.is_empty() {
         // --- admission: batch prefills while budget allows; a matched
@@ -262,8 +300,7 @@ pub fn simulate_serving(
             for r in running.iter_mut().filter(|r| r.generated == 0) {
                 r.generated = 1;
                 gen_tokens += 1;
-                ttft_sum += clock - r.req.arrival_s();
-                ttft_n += 1;
+                ttft.record_s(clock - r.req.arrival_s());
                 let _ = append_with_reclaim(&mut kv, &mut cache, r.req.id);
             }
         }
@@ -334,7 +371,7 @@ pub fn simulate_serving(
         },
         oom: false,
         preemptions,
-        mean_ttft_s: ttft_sum / ttft_n.max(1) as f64,
+        mean_ttft_s: ttft.mean_s(),
         prefix_hits: cache.stats.hits,
         prefix_misses: cache.stats.misses,
         prefix_tokens_skipped: cache.stats.tokens_skipped,
@@ -561,8 +598,7 @@ pub fn simulate_online(
     let mut clock = 0.0f64;
     let mut gen_tokens = 0u64;
     let mut latencies = Vec::with_capacity(requests.len());
-    let mut ttft_sum = 0.0f64;
-    let mut ttft_n = 0u64;
+    let mut ttft = Histogram::new();
 
     loop {
         // Move arrived requests into the queue.
@@ -604,8 +640,7 @@ pub fn simulate_online(
             for r in running.iter_mut().filter(|r| r.generated == 0) {
                 r.generated = 1;
                 gen_tokens += 1;
-                ttft_sum += clock - r.req.arrival_s();
-                ttft_n += 1;
+                ttft.record_s(clock - r.req.arrival_s());
                 let _ = append_with_reclaim(&mut kv, &mut cache, r.req.id);
             }
         }
@@ -655,7 +690,7 @@ pub fn simulate_online(
         gen_tok_per_s: gen_tokens as f64 / clock.max(1e-9),
         latencies,
         oom: false,
-        mean_ttft_s: ttft_sum / ttft_n.max(1) as f64,
+        mean_ttft_s: ttft.mean_s(),
         prefix_hits: cache.stats.hits,
         prefix_tokens_skipped: cache.stats.tokens_skipped,
         prefix_evictions: cache.stats.evictions,
@@ -839,6 +874,42 @@ impl ContinuousResult {
         let n = self.prefix_hits + self.prefix_misses;
         if n == 0 { 0.0 } else { self.prefix_hits as f64 / n as f64 }
     }
+
+    /// Render through the shared [`Report`] writer — the same layout
+    /// `EngineMetrics::report` and `report obs` use.
+    pub fn report(&self) -> String {
+        let mut r = Report::new();
+        r.line("requests", format!("{} finished in {:.2}s (sim)", self.finished, self.wall_s));
+        r.line(
+            "tokens",
+            format!(
+                "{} prompt + {} generated ({:.1} gen tok/s, {:.1} total tok/s)",
+                self.prompt_tokens, self.gen_tokens, self.gen_tok_per_s, self.total_tok_per_s
+            ),
+        );
+        r.line(
+            "steps",
+            format!(
+                "{} mixed steps, mean {:.1} tokens/step, mean decode batch {:.1}",
+                self.steps, self.mean_step_tokens, self.mean_decode_batch
+            ),
+        );
+        r.line(
+            "batching",
+            format!("{} prefill chunks, {} preemptions", self.prefill_chunks, self.preemptions),
+        );
+        r.line(
+            "prefix",
+            format!(
+                "{:.0}% hit rate, {} tokens skipped, {} evictions",
+                self.prefix_hit_rate() * 100.0,
+                self.prefix_tokens_skipped,
+                self.prefix_evictions
+            ),
+        );
+        r.line("TTFT", format!("mean {:.1} ms", self.mean_ttft_s * 1e3));
+        r.finish()
+    }
 }
 
 /// Continuous batching with chunked prefill over arrivals (offline
@@ -955,8 +1026,7 @@ fn run_continuous(
     let mut decode_lane_steps = 0u64;
     let mut prefill_chunks = 0u64;
     let mut preemptions = 0u64;
-    let mut ttft_sum = 0.0f64;
-    let mut ttft_n = 0u64;
+    let mut ttft = Histogram::new();
 
     loop {
         while pending.front().is_some_and(|r| r.arrival_s() <= clock) {
@@ -1073,8 +1143,9 @@ fn run_continuous(
                 sched.commit_first_token(c.seq);
                 gen_tokens += 1;
                 let req = slot_req[c.seq];
-                ttft_sum += clock - req.arrival_s();
-                ttft_n += 1;
+                let dt = clock - req.arrival_s();
+                ttft.record_s(dt);
+                sim_ttft_hist().record_s(dt);
                 let s = sched.seq(c.seq);
                 if s.generated >= s.gen_budget {
                     register_and_free(&mut kv, &mut cache, &req);
@@ -1124,7 +1195,7 @@ fn run_continuous(
         prefill_chunks,
         oom: false,
         preemptions,
-        mean_ttft_s: ttft_sum / ttft_n.max(1) as f64,
+        mean_ttft_s: ttft.mean_s(),
         prefix_hits: cache.stats.hits,
         prefix_misses: cache.stats.misses,
         prefix_tokens_skipped: cache.stats.tokens_skipped,
@@ -1165,8 +1236,7 @@ pub fn simulate_static_wave(
     let mut step_tokens_sum = 0u64;
     let mut decode_steps = 0u64;
     let mut decode_lane_steps = 0u64;
-    let mut ttft_sum = 0.0f64;
-    let mut ttft_n = 0u64;
+    let mut ttft = Histogram::new();
 
     loop {
         while pending.front().is_some_and(|r| r.arrival_s() <= clock) {
@@ -1213,8 +1283,7 @@ pub fn simulate_static_wave(
         for s in wave.iter_mut() {
             s.generated = 1;
             gen_tokens += 1;
-            ttft_sum += clock - s.req.arrival_s();
-            ttft_n += 1;
+            ttft.record_s(clock - s.req.arrival_s());
         }
 
         // --- decode until the whole wave drains ---
@@ -1260,7 +1329,7 @@ pub fn simulate_static_wave(
         prefill_chunks: 0,
         oom: false,
         preemptions: 0,
-        mean_ttft_s: ttft_sum / ttft_n.max(1) as f64,
+        mean_ttft_s: ttft.mean_s(),
         prefix_hits: 0,
         prefix_misses: 0,
         prefix_tokens_skipped: 0,

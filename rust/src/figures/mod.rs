@@ -606,6 +606,10 @@ pub struct DecodeSweepRow {
     pub pool_dispatch_ns: f64,
     /// Median ns for the same no-op job via spawn-per-call threads.
     pub spawn_dispatch_ns: f64,
+    /// Median ns for the pooled no-op dispatch with the span tracer
+    /// enabled — `pool_dispatch_traced_ns - pool_dispatch_ns` is the
+    /// per-dispatch tracing tax the obs layer charges.
+    pub pool_dispatch_traced_ns: f64,
 }
 
 impl DecodeSweepRow {
@@ -713,7 +717,7 @@ pub fn decode_sweep_with(
 
     writeln!(
         out,
-        "{:>4} {:>11} {:>11} {:>11} {:>11} {:>11} {:>9} {:>10} {:>10}",
+        "{:>4} {:>11} {:>11} {:>11} {:>11} {:>11} {:>9} {:>10} {:>10} {:>10}",
         "m",
         "pool+simd",
         "pool+scal",
@@ -722,7 +726,8 @@ pub fn decode_sweep_with(
         "wb pool",
         "runtime x",
         "disp pool",
-        "disp spawn"
+        "disp spawn",
+        "disp trace"
     )?;
     let mut rows = Vec::new();
     for &m in batches {
@@ -762,6 +767,19 @@ pub fn decode_sweep_with(
                 crate::kernel::partition::spawn_run(tasks, threads, &|_t, _s| {});
             })
             .median_ns;
+        // Same pooled dispatch with the span tracer live: the delta is
+        // the obs layer's per-dispatch tax, reported next to the raw
+        // number so regressions show up in `bench check`.
+        let was_tracing = crate::obs::trace::enabled();
+        crate::obs::trace::enable();
+        let pool_dispatch_traced_ns = bench
+            .run(&format!("dispatch pool traced m{m} ({tasks}t/{threads}w)"), || {
+                WorkerPool::global().run(tasks, threads, &|_t, _s| {});
+            })
+            .median_ns;
+        if !was_tracing {
+            crate::obs::trace::disable();
+        }
         let row = DecodeSweepRow {
             m,
             fused_pool_simd_gflops,
@@ -771,10 +789,11 @@ pub fn decode_sweep_with(
             writeback_pool_simd_gflops,
             pool_dispatch_ns,
             spawn_dispatch_ns,
+            pool_dispatch_traced_ns,
         };
         writeln!(
             out,
-            "{:>4} {:>11.2} {:>11.2} {:>11.2} {:>11.2} {:>11.2} {:>8.2}x {:>10} {:>10}",
+            "{:>4} {:>11.2} {:>11.2} {:>11.2} {:>11.2} {:>11.2} {:>8.2}x {:>10} {:>10} {:>10}",
             m,
             row.fused_pool_simd_gflops,
             row.fused_pool_scalar_gflops,
@@ -784,6 +803,7 @@ pub fn decode_sweep_with(
             row.runtime_speedup(),
             crate::util::bench::fmt_ns(row.pool_dispatch_ns),
             crate::util::bench::fmt_ns(row.spawn_dispatch_ns),
+            crate::util::bench::fmt_ns(row.pool_dispatch_traced_ns),
         )?;
         rows.push(row);
     }
@@ -886,6 +906,13 @@ pub fn step_throughput_with(
     let b = Blocking::default();
     let mut fused = StepExecutor::new(&spec, StepBackend::Fused, b, group_size, m_max, 0x57E9)?;
     let mut wb = StepExecutor::new(&spec, StepBackend::Writeback, b, group_size, m_max, 0x57E9)?;
+    // Drift accountant: every measured GEMM also records its
+    // gpusim-modeled latency, so `report obs` can surface the running
+    // modeled/measured ratio per shape.
+    let drift_dev = Gpu::Rtx4090.spec();
+    let drift_calib = Calib::default();
+    fused.enable_drift(&drift_dev, &drift_calib);
+    wb.enable_drift(&drift_dev, &drift_calib);
     writeln!(
         out,
         "{:>4} {:>12} {:>12} {:>12} {:>12} {:>10}",
@@ -1265,7 +1292,10 @@ mod tests {
     fn decode_sweep_smoke_is_consistent() {
         // Tiny shape + smoke bench: exercises every runtime tier (pool /
         // spawn x simd / scalar), the dispatch-overhead rows, and the
-        // differential gate without meaningful wall time.
+        // differential gate without meaningful wall time. The traced
+        // dispatch row toggles the process-global tracer, so take the
+        // obs test guard.
+        let _g = crate::obs::trace::test_guard();
         let b = Bench::smoke().silent();
         let r = decode_sweep_with(&mut std::io::sink(), 64, 48, 32, &[1, 2], &b).unwrap();
         assert_eq!(r.rows.len(), 2);
@@ -1278,6 +1308,7 @@ mod tests {
         for row in &r.rows {
             assert!(row.fused_pool_simd_gflops > 0.0 && row.fused_spawn_scalar_gflops > 0.0);
             assert!(row.pool_dispatch_ns >= 0.0 && row.spawn_dispatch_ns >= 0.0);
+            assert!(row.pool_dispatch_traced_ns >= 0.0);
             assert!(row.runtime_speedup() > 0.0 && row.fused_over_writeback() > 0.0);
         }
         assert!(["avx2", "neon", "scalar"].contains(&r.simd_level));

@@ -20,17 +20,51 @@
 //! outputs must match a naive executor's per-GEMM reference outputs on
 //! identical seeds (`tests/property_tests.rs`).
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashMap};
+use std::sync::OnceLock;
 use std::time::Instant;
 
 use anyhow::Result;
 
+use crate::gpusim::kernel_model::model_gemm;
+use crate::gpusim::{Calib, DeviceSpec, KernelKind};
 use crate::model::{GemmShape, LlmSpec};
+use crate::obs::{trace, Counter, DriftAccountant, Registry};
 use crate::quant::quantize_groupwise;
 use crate::util::Rng;
 
 use super::blocking::Blocking;
 use super::{AwqWritebackBackend, KernelBackend, NaiveBackend, QuickFusedBackend};
+
+/// Registry handles for the executor's step counters, resolved once.
+struct ExecMetrics {
+    steps: Counter,
+    gemm_calls: Counter,
+}
+
+fn exec_metrics() -> &'static ExecMetrics {
+    static METRICS: OnceLock<ExecMetrics> = OnceLock::new();
+    METRICS.get_or_init(|| {
+        let r = Registry::global();
+        ExecMetrics {
+            steps: r.counter("executor.steps"),
+            gemm_calls: r.counter("executor.gemm_calls"),
+        }
+    })
+}
+
+/// Drift-accounting configuration: which `gpusim` kernel model to hold
+/// the measured GEMMs against (see [`StepExecutor::enable_drift`]).
+struct DriftConfig {
+    dev: DeviceSpec,
+    kind: KernelKind,
+    calib: Calib,
+    /// Memoized modeled latency per `(m, gemm_index)` — `model_gemm`
+    /// allocates while searching tile candidates, so the model is
+    /// evaluated once per shape and the steady-state step stays
+    /// allocation-free.
+    modeled_s: HashMap<(usize, usize), f64>,
+}
 
 /// Which executable backend a [`StepExecutor`] drives.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -109,6 +143,10 @@ pub struct StepExecutor {
     /// One output buffer per GEMM (`m_max * n`, sliced to the step's M);
     /// retained so reference checks can inspect the last step's outputs.
     ys: Vec<Vec<f32>>,
+    /// Measured seconds of each GEMM group in the most recent step.
+    gemm_s: Vec<f64>,
+    /// When set, every step feeds the modeled-vs-measured ledger.
+    drift: Option<DriftConfig>,
 }
 
 impl StepExecutor {
@@ -181,7 +219,23 @@ impl StepExecutor {
             });
         }
         let ys = gemms.iter().map(|g| vec![0f32; m_max * g.n]).collect();
-        Ok(StepExecutor { name, backend, m_max, gemms, xs, ys })
+        let gemm_s = vec![0.0; gemms.len()];
+        Ok(StepExecutor { name, backend, m_max, gemms, xs, ys, gemm_s, drift: None })
+    }
+
+    /// Start feeding the process-wide [`DriftAccountant`]: every later
+    /// [`StepExecutor::step`] records each GEMM's `gpusim`-modeled
+    /// latency on `dev` under `calib` next to the measured one, keyed by
+    /// shape. The kernel kind is implied by the backend (fused → QUICK,
+    /// write-back → AWQ, naive → fp16 reference).
+    pub fn enable_drift(&mut self, dev: &DeviceSpec, calib: &Calib) {
+        let kind = match self.backend {
+            StepBackend::Naive => KernelKind::Fp16,
+            StepBackend::Fused => KernelKind::Quick,
+            StepBackend::Writeback => KernelKind::Awq,
+        };
+        self.drift =
+            Some(DriftConfig { dev: *dev, kind, calib: *calib, modeled_s: HashMap::new() });
     }
 
     /// Model/config name this executor was built from.
@@ -220,15 +274,52 @@ impl StepExecutor {
         );
         let t0 = Instant::now();
         let mut gemm_calls = 0;
+        let tracing = trace::enabled();
         for (gi, g) in self.gemms.iter().enumerate() {
             let x = &self.xs[&g.k][..m * g.k];
             let y = &mut self.ys[gi][..m * g.n];
+            let span_t0 = if tracing { trace::now_ns() } else { 0 };
+            let g0 = Instant::now();
             for _ in 0..g.count {
                 g.backend.gemm(x, m, y);
                 gemm_calls += 1;
             }
+            let dt = g0.elapsed().as_secs_f64().max(1e-12);
+            self.gemm_s[gi] = dt;
+            if tracing {
+                let gflops = 2.0 * (m * g.k * g.n * g.count) as f64 / dt / 1e9;
+                trace::complete(
+                    g.name,
+                    "executor",
+                    span_t0,
+                    (dt * 1e9) as u64,
+                    &[("m", m as f64), ("k", g.k as f64), ("n", g.n as f64), ("gflops", gflops)],
+                );
+            }
+            if let Some(drift) = &mut self.drift {
+                let modeled_call = *drift.modeled_s.entry((m, gi)).or_insert_with(|| {
+                    model_gemm(
+                        &drift.dev,
+                        drift.kind,
+                        m as u64,
+                        g.n as u64,
+                        g.k as u64,
+                        &drift.calib,
+                    )
+                    .latency_s
+                });
+                DriftAccountant::global().record(
+                    (m as u64, g.k as u64, g.n as u64),
+                    modeled_call * g.count as f64,
+                    dt,
+                    g.count as u64,
+                );
+            }
         }
         let wall_s = t0.elapsed().as_secs_f64().max(1e-12);
+        let em = exec_metrics();
+        em.steps.inc();
+        em.gemm_calls.add(gemm_calls as u64);
         Ok(StepResult {
             m,
             wall_s,
@@ -236,6 +327,13 @@ impl StepExecutor {
             flops: self.step_flops(m),
             tokens_per_s: m as f64 / wall_s,
         })
+    }
+
+    /// Measured seconds of each GEMM group (all `count` calls) in the
+    /// most recent [`StepExecutor::step`], indexed like
+    /// [`StepExecutor::gemms`]. Zeros before the first step.
+    pub fn last_gemm_s(&self) -> &[f64] {
+        &self.gemm_s
     }
 
     /// The activation buffer for reduction dimension `k`, sliced to

@@ -26,6 +26,7 @@ use std::sync::{Arc, Mutex, OnceLock};
 
 use anyhow::Result;
 
+use crate::obs::{Counter, Registry};
 use crate::quant::decode::TILE_ROWS;
 use crate::quant::{quick_run_offset, PACK_FACTOR};
 
@@ -230,6 +231,21 @@ fn lock_ignore_poison<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
     m.lock().unwrap_or_else(|e| e.into_inner())
 }
 
+/// Registry handles for the plan cache's hit/miss counters, resolved
+/// once; the steady-state hit path adds one relaxed atomic increment.
+struct CacheMetrics {
+    hits: Counter,
+    misses: Counter,
+}
+
+fn cache_metrics() -> &'static CacheMetrics {
+    static METRICS: OnceLock<CacheMetrics> = OnceLock::new();
+    METRICS.get_or_init(|| {
+        let r = Registry::global();
+        CacheMetrics { hits: r.counter("plan_cache.hits"), misses: r.counter("plan_cache.misses") }
+    })
+}
+
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 struct PlanKey {
     m: usize,
@@ -274,8 +290,10 @@ impl PlanCache {
         anyhow::ensure!(m > 0, "M must be > 0");
         let key = PlanKey { m, k, n, b: *b };
         if let Some(plan) = self.plans.lock().unwrap().get(&key) {
+            cache_metrics().hits.inc();
             return Ok(Arc::clone(plan));
         }
+        cache_metrics().misses.inc();
         let offsets = {
             let mut map = self.offsets.lock().unwrap();
             let entry =

@@ -31,11 +31,51 @@
 
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::obs::{trace, Counter, Gauge, Registry};
 
 /// A task body: `(task_index, slot)` where `slot < threads` identifies
 /// the participant (stable per participant within one job — used to
 /// index per-slot scratch).
 pub type Task<'a> = dyn Fn(usize, usize) + Sync + 'a;
+
+/// Registry handles for the pool's metrics, resolved once — steady-state
+/// updates are relaxed atomic ops (see the zero-alloc contract above).
+struct PoolMetrics {
+    /// Jobs dispatched through the parked workers (inline fast-path
+    /// jobs are not counted — no pool machinery runs).
+    jobs: Counter,
+    /// Tasks (column-panel tiles) executed across all participants.
+    tasks_run: Counter,
+    /// Tasks claimed by pool workers rather than the submitting thread —
+    /// tiles the work-stealing cursor moved off the caller.
+    tasks_stolen: Counter,
+    /// Condvar park transitions in [`worker_loop`].
+    parks: Counter,
+    /// Condvar wake-ups in [`worker_loop`] (includes spurious wakes).
+    wakes: Counter,
+    /// Total participant busy nanoseconds (claim loop entry to drain).
+    busy_ns: Counter,
+    /// Unclaimed tasks of the in-flight job (0 between jobs).
+    queue_depth: Gauge,
+}
+
+fn metrics() -> &'static PoolMetrics {
+    static METRICS: OnceLock<PoolMetrics> = OnceLock::new();
+    METRICS.get_or_init(|| {
+        let r = Registry::global();
+        PoolMetrics {
+            jobs: r.counter("pool.jobs"),
+            tasks_run: r.counter("pool.tasks_run"),
+            tasks_stolen: r.counter("pool.tasks_stolen"),
+            parks: r.counter("pool.parks"),
+            wakes: r.counter("pool.wakes"),
+            busy_ns: r.counter("pool.busy_ns"),
+            queue_depth: r.gauge("pool.queue_depth"),
+        }
+    })
+}
 
 struct State {
     /// Monotone job counter; workers use it to tell a fresh job from one
@@ -146,6 +186,10 @@ impl WorkerPool {
             return;
         }
         let _submission = self.submit.lock().unwrap();
+        let _span =
+            trace::span2("pool.run", "pool", "tasks", tasks as f64, "threads", slots as f64);
+        metrics().jobs.inc();
+        metrics().queue_depth.set(tasks as i64);
         // SAFETY: lifetime erasure only — the pointee outlives this call,
         // and the claim/completion protocol below guarantees no worker
         // dereferences the body after this function returns (claims
@@ -175,6 +219,7 @@ impl WorkerPool {
         st.body = None;
         let payload = st.panic_payload.take();
         drop(st);
+        metrics().queue_depth.set(0);
         if let Some(payload) = payload {
             // Scope-join semantics: a panic anywhere in the job resumes
             // on the submitting thread, original payload intact, once
@@ -203,6 +248,9 @@ impl Drop for WorkerPool {
 /// panicking body is caught and recorded so the job still drains (and a
 /// worker thread survives); the caller re-raises it after the join.
 fn participate(shared: &Shared, epoch: u64, body: &Task<'_>, slot: usize) {
+    let mut span = trace::span1("pool.participate", "pool", "slot", slot as f64);
+    let t0 = Instant::now();
+    let mut claimed = 0u64;
     loop {
         let t = {
             let mut st = shared.state.lock().unwrap();
@@ -213,6 +261,8 @@ fn participate(shared: &Shared, epoch: u64, body: &Task<'_>, slot: usize) {
             st.next += 1;
             t
         };
+        claimed += 1;
+        metrics().queue_depth.add(-1);
         let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| body(t, slot)));
         let mut st = shared.state.lock().unwrap();
         if st.epoch == epoch {
@@ -225,6 +275,13 @@ fn participate(shared: &Shared, epoch: u64, body: &Task<'_>, slot: usize) {
             }
         }
     }
+    let m = metrics();
+    m.busy_ns.add(t0.elapsed().as_nanos() as u64);
+    m.tasks_run.add(claimed);
+    if slot != 0 {
+        m.tasks_stolen.add(claimed);
+    }
+    span.arg("claimed", claimed as f64);
 }
 
 fn worker_loop(shared: &Shared) {
@@ -249,7 +306,9 @@ fn worker_loop(shared: &Shared) {
                         last_epoch = st.epoch;
                     }
                 }
+                metrics().parks.inc();
                 st = shared.work_cv.wait(st).unwrap();
+                metrics().wakes.inc();
             }
         };
         last_epoch = epoch;

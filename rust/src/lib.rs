@@ -35,6 +35,10 @@
 //!   ride the same mixed step), paged KV-cache manager with copy-on-write
 //!   block sharing, automatic prefix cache (`coordinator::prefix`),
 //!   preemption/requeue under KV pressure, metrics.
+//! * [`obs`] — always-on observability: process-wide metrics registry,
+//!   lock-free span tracer emitting Perfetto-loadable Chrome-trace JSON
+//!   (`--trace <path>`), and the per-GEMM-shape modeled-vs-measured
+//!   drift accountant (`report obs`).
 //!
 //! Python never runs on the request path: `make artifacts` AOT-lowers the
 //! JAX/Pallas model once, and the [`runtime`] executes the HLO from Rust.
@@ -51,6 +55,7 @@ pub mod coordinator;
 pub mod gpusim;
 pub mod kernel;
 pub mod model;
+pub mod obs;
 pub mod quant;
 pub mod runtime;
 pub mod tokenizer;

@@ -9,6 +9,9 @@
 //!   measured on this CPU) and print paper-style rows.
 //! * `bench`    — measured native-kernel benchmarks with structured JSON
 //!   trajectory output (`bench kernels` → `BENCH_kernels.json`).
+//! * `report`   — observability: print the metrics-registry snapshot and
+//!   model/measured drift (`report obs`), or validate a Chrome-trace
+//!   file written by `--trace` (`report trace PATH`).
 //! * `profile`  — one-GEMM kernel-model breakdown on a chosen device.
 //! * `loadtest` — online latency percentiles vs offered load.
 //! * `generate` — end-to-end text generation on the tiny model.
@@ -33,6 +36,10 @@ const SIMULATE_TARGETS: &str = "fig3|fig7|fig8|table1|prefix|continuous|tp|kerne
 /// sync with the USAGE block and the dispatch match below).
 const BENCH_TARGETS: &str = "kernels|check";
 
+/// Valid `report` targets, listed by the unknown-target error (keep in
+/// sync with the USAGE block and the dispatch match below).
+const REPORT_TARGETS: &str = "obs|trace";
+
 const USAGE: &str = "\
 quick-infer — QUICK (2024) reproduction: conflict-free W4A16 inference stack
 
@@ -43,7 +50,7 @@ USAGE:
         Defaults: --artifacts artifacts, --kernel quick, --requests 32, --seed 0.
 
     quick-infer simulate [fig3|fig7|fig8|table1|prefix|continuous|tp|kernel-matmul|step|all]
-                         [--model M]
+                         [--model M] [--trace PATH]
         Regenerate one experiment from the gpusim cost model (default: all).
           fig3        smem bank conflicts per kernel
           fig7        GEMM TOPS vs batch on all four devices
@@ -61,7 +68,7 @@ USAGE:
                       step-fitted gpusim calibration (not part of 'all')
 
     quick-infer bench    [kernels|check] [--k K] [--n N] [--group-size G]
-                         [--json PATH] [--quick] [--decode-sweep]
+                         [--json PATH] [--quick] [--decode-sweep] [--trace PATH]
         Run a measured native-kernel benchmark and append a structured
         JSON point to the perf trajectory (default target: kernels).
           kernels     fused-from-interleaved vs dequant-to-scratch GEMM,
@@ -78,6 +85,23 @@ USAGE:
         BENCH_kernels.json at the repo root (nearest ancestor with
         ROADMAP.md/.git, else the cwd). --quick shrinks the layer to
         512x512 and the sample count for CI smoke runs.
+
+    quick-infer report   [obs|trace PATH] [--min-spans N] [--min-threads N]
+        Observability reports (default target: obs).
+          obs         run a short instrumented workload, then print the
+                      metrics-registry snapshot (pool, plan cache,
+                      executor, scheduler, prefix cache, latency
+                      histograms) and the per-GEMM-shape modeled vs
+                      measured drift ratios
+          trace       parse a Chrome-trace JSON written by --trace and
+                      exit non-zero unless it holds >= --min-spans spans
+                      (default 1) from >= --min-threads threads
+                      (default 1)
+
+        Any simulate or bench run accepts --trace PATH: record runtime
+        spans (executor GEMMs, worker pool, scheduler) while the command
+        runs and write Chrome-trace-event JSON to PATH — open it in
+        Perfetto or chrome://tracing.
 
     quick-infer profile  [--gpu 4090|a6000|l40|a100] [--m M] [--n N] [--k K]
         Per-kernel latency/TOPS breakdown of one GEMM.
@@ -164,13 +188,15 @@ fn main() -> Result<()> {
             args.get_num("requests", 32usize)?,
             args.get_num("seed", 0u64)?,
         ),
-        "simulate" => {
+        "simulate" => with_trace(args.flags.get("trace"), || {
             simulate(args.positional.first().map(String::as_str).unwrap_or("all"), &args)
+        }),
+        "bench" => with_trace(args.flags.get("trace"), || {
+            bench_cmd(args.positional.first().map(String::as_str).unwrap_or("kernels"), &args)
+        }),
+        "report" => {
+            report_cmd(args.positional.first().map(String::as_str).unwrap_or("obs"), &args)
         }
-        "bench" => bench_cmd(
-            args.positional.first().map(String::as_str).unwrap_or("kernels"),
-            &args,
-        ),
         "quantize" => quantize_demo(
             args.get_num("k", 256usize)?,
             args.get_num("n", 256usize)?,
@@ -197,6 +223,126 @@ fn main() -> Result<()> {
         }
         other => bail!("unknown command '{other}'\n{USAGE}"),
     }
+}
+
+/// Run `f` with the span tracer on when `--trace PATH` was given,
+/// writing the Chrome-trace JSON and a one-line summary afterwards.
+fn with_trace(path: Option<&String>, f: impl FnOnce() -> Result<()>) -> Result<()> {
+    use quick_infer::obs::trace;
+    let Some(path) = path else { return f() };
+    if !trace::COMPILED {
+        bail!("--trace needs the tracer, but this binary was built with the trace_off feature");
+    }
+    trace::enable();
+    let res = f();
+    trace::disable();
+    trace::write_chrome_trace(std::path::Path::new(path))?;
+    println!(
+        "wrote trace {path}: {} spans from {} threads ({} dropped)",
+        trace::events_recorded(),
+        trace::threads_with_events(),
+        trace::events_dropped()
+    );
+    res
+}
+
+/// Dispatch `quick-infer report <target>`; unknown targets list the
+/// valid ones.
+fn report_cmd(target: &str, args: &Args) -> Result<()> {
+    match target {
+        "obs" => report_obs(),
+        "trace" => report_trace(
+            args.positional.get(1).map(String::as_str),
+            args.get_num("min-spans", 1usize)?,
+            args.get_num("min-threads", 1usize)?,
+        ),
+        other => bail!("unknown report target '{other}' — valid targets: {REPORT_TARGETS}"),
+    }
+}
+
+/// `report obs`: run a short instrumented workload so every subsystem
+/// has recorded something, then print the registry snapshot and the
+/// per-shape model/measured drift ratios.
+fn report_obs() -> Result<()> {
+    use quick_infer::coordinator::simserve::{
+        simulate_continuous, simulate_serving, ContinuousPolicy, SimPolicy,
+    };
+    use quick_infer::model::Model;
+    use quick_infer::obs::{DriftAccountant, Registry};
+    use quick_infer::util::Bench;
+    use quick_infer::workload::{BurstyWorkload, SharedPrefixWorkload};
+
+    println!("populating the registry with a short instrumented workload...");
+    // Measured step sweep on the tiny model: executor spans, worker
+    // pool, plan cache, and the drift accountant.
+    figures::step_throughput_with(
+        &mut std::io::sink(),
+        Model::Tiny,
+        128,
+        &[1, 4],
+        &Bench::smoke().silent(),
+    )?;
+    // Small simulated serving runs: continuous scheduler + prefix cache.
+    let dev = Gpu::RtxA6000.spec();
+    let spec = Model::Vicuna13B.spec();
+    let calib = Calib::default();
+    let bursty = BurstyWorkload::default().online(60, 1.0, 2028);
+    let cont = simulate_continuous(
+        &dev,
+        &spec,
+        KernelKind::Quick,
+        &bursty,
+        &ContinuousPolicy::default(),
+        &calib,
+    );
+    let shared = SharedPrefixWorkload::default().offline(40, 2029);
+    let _ =
+        simulate_serving(&dev, &spec, KernelKind::Quick, &shared, &SimPolicy::default(), &calib);
+
+    println!("\nsample continuous run ({} on {}, QUICK):", spec.name, dev.name);
+    println!("{}", cont.report());
+    println!();
+    println!("{}", Registry::global().report());
+    println!();
+    println!("{}", DriftAccountant::global().report());
+    Ok(())
+}
+
+/// `report trace`: parse a Chrome-trace JSON written by `--trace` and
+/// fail unless it holds enough spans from enough distinct threads — the
+/// CI smoke gate behind the trace artifact.
+fn report_trace(path: Option<&str>, min_spans: usize, min_threads: usize) -> Result<()> {
+    use quick_infer::util::Json;
+    let path = path.ok_or_else(|| anyhow::anyhow!("report trace needs a file path"))?;
+    let text =
+        std::fs::read_to_string(path).map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
+    let doc = Json::parse(text.trim())?;
+    let events = doc.req("traceEvents")?.as_arr()?;
+    let mut spans = 0usize;
+    let mut tids = std::collections::BTreeSet::new();
+    for ev in events {
+        if ev.req("ph")?.as_str()? != "X" {
+            continue;
+        }
+        anyhow::ensure!(!ev.req("name")?.as_str()?.is_empty(), "span with an empty name");
+        let (ts, dur) = (ev.req("ts")?.as_f64()?, ev.req("dur")?.as_f64()?);
+        anyhow::ensure!(ts >= 0.0 && dur >= 0.0, "span with negative ts/dur: {ts}/{dur}");
+        spans += 1;
+        tids.insert(ev.req("tid")?.as_f64()? as u64);
+    }
+    let dropped = doc.req("droppedEvents")?.as_f64()?;
+    println!(
+        "trace ok: {spans} spans across {} threads ({} events total, {dropped} dropped)",
+        tids.len(),
+        events.len()
+    );
+    anyhow::ensure!(spans >= min_spans, "only {spans} spans, need >= {min_spans}");
+    anyhow::ensure!(
+        tids.len() >= min_threads,
+        "spans from only {} threads, need >= {min_threads}",
+        tids.len()
+    );
+    Ok(())
 }
 
 fn serve(artifacts: &str, kernel: &str, n_requests: usize, seed: u64) -> Result<()> {
@@ -404,6 +550,10 @@ fn bench_kernels(
                 );
                 o.insert("pool_dispatch_ns".to_string(), Json::Num(r.pool_dispatch_ns));
                 o.insert("spawn_dispatch_ns".to_string(), Json::Num(r.spawn_dispatch_ns));
+                o.insert(
+                    "pool_dispatch_traced_ns".to_string(),
+                    Json::Num(r.pool_dispatch_traced_ns),
+                );
                 o.insert("runtime_speedup".to_string(), Json::Num(r.runtime_speedup()));
                 o.insert("fused_over_writeback".to_string(), Json::Num(r.fused_over_writeback()));
                 Json::Obj(o)

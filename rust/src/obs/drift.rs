@@ -1,0 +1,178 @@
+//! Model-vs-measured drift accounting.
+//!
+//! The ROADMAP's open seam: serving simulations run on `gpusim`-modeled
+//! kernel latencies while the native kernel runtime measures real ones,
+//! and the two meet only at one-shot calibration. The drift accountant
+//! makes that seam continuously observable — every instrumented
+//! [`crate::kernel::StepExecutor`] step records the modeled latency next
+//! to the measured one, keyed by GEMM shape, and `report obs` surfaces
+//! the running modeled/measured ratio per shape. A ratio near 1.0 means
+//! the cost model tracks the silicon; a drifting shape pinpoints where
+//! the model needs recalibration.
+
+use std::collections::BTreeMap;
+use std::sync::{Mutex, OnceLock};
+
+use crate::util::Json;
+
+use super::registry::Report;
+
+/// A GEMM shape as the accountant keys it: `m` activation rows against
+/// a `k x n` weight.
+pub type ShapeKey = (u64, u64, u64);
+
+/// Accumulated modeled-vs-measured time for one GEMM shape.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct DriftStat {
+    /// Total `gpusim`-modeled seconds attributed to this shape.
+    pub modeled_s: f64,
+    /// Total measured wall seconds for the same calls.
+    pub measured_s: f64,
+    /// Kernel invocations folded in.
+    pub samples: u64,
+}
+
+impl DriftStat {
+    /// Running modeled/measured ratio (1.0 = the model tracks the
+    /// measurement exactly; 0 when nothing has been measured).
+    pub fn ratio(&self) -> f64 {
+        if self.measured_s <= 0.0 { 0.0 } else { self.modeled_s / self.measured_s }
+    }
+}
+
+/// Process-wide ledger of modeled vs. measured GEMM latency per shape.
+///
+/// Recording takes a short lock and updates in place; a shape allocates
+/// only on its first appearance, so steady-state accounting stays
+/// allocation-free.
+#[derive(Debug, Default)]
+pub struct DriftAccountant {
+    shapes: Mutex<BTreeMap<ShapeKey, DriftStat>>,
+}
+
+impl DriftAccountant {
+    /// A fresh, empty accountant (tests; production code uses
+    /// [`DriftAccountant::global`]).
+    pub fn new() -> DriftAccountant {
+        DriftAccountant::default()
+    }
+
+    /// The process-wide accountant instrumented executors report to.
+    pub fn global() -> &'static DriftAccountant {
+        static GLOBAL: OnceLock<DriftAccountant> = OnceLock::new();
+        GLOBAL.get_or_init(DriftAccountant::new)
+    }
+
+    /// Fold one observation for shape `(m, k, n)`: `modeled_s` of
+    /// `gpusim` cost next to `measured_s` of wall time, covering
+    /// `samples` kernel invocations.
+    pub fn record(&self, key: ShapeKey, modeled_s: f64, measured_s: f64, samples: u64) {
+        let mut shapes = self.shapes.lock().unwrap_or_else(|e| e.into_inner());
+        let stat = shapes.entry(key).or_default();
+        stat.modeled_s += modeled_s;
+        stat.measured_s += measured_s;
+        stat.samples += samples;
+    }
+
+    /// `true` when nothing has been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.shapes.lock().unwrap_or_else(|e| e.into_inner()).is_empty()
+    }
+
+    /// Point-in-time copy of every shape's accumulated stat, sorted by
+    /// shape key.
+    pub fn snapshot(&self) -> Vec<(ShapeKey, DriftStat)> {
+        self.shapes
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .iter()
+            .map(|(k, v)| (*k, *v))
+            .collect()
+    }
+
+    /// Discard all recorded shapes.
+    pub fn reset(&self) {
+        self.shapes.lock().unwrap_or_else(|e| e.into_inner()).clear();
+    }
+
+    /// Deterministic JSON: an array of `{m, k, n, modeled_s,
+    /// measured_s, samples, ratio}` objects sorted by shape.
+    pub fn json(&self) -> Json {
+        Json::Arr(
+            self.snapshot()
+                .into_iter()
+                .map(|((m, k, n), s)| {
+                    let mut o = BTreeMap::new();
+                    o.insert("m".to_string(), Json::Num(m as f64));
+                    o.insert("k".to_string(), Json::Num(k as f64));
+                    o.insert("n".to_string(), Json::Num(n as f64));
+                    o.insert("modeled_s".to_string(), Json::Num(s.modeled_s));
+                    o.insert("measured_s".to_string(), Json::Num(s.measured_s));
+                    o.insert("samples".to_string(), Json::Num(s.samples as f64));
+                    o.insert("ratio".to_string(), Json::Num(s.ratio()));
+                    Json::Obj(o)
+                })
+                .collect(),
+        )
+    }
+
+    /// Per-shape drift table rendered through the shared [`Report`]
+    /// writer.
+    pub fn report(&self) -> String {
+        let mut r = Report::new();
+        r.section("model/measured drift (per GEMM shape)");
+        let snap = self.snapshot();
+        if snap.is_empty() {
+            r.metric("(none)", "no instrumented steps recorded");
+        }
+        for ((m, k, n), s) in snap {
+            r.metric(
+                &format!("m{m} {k}x{n}"),
+                format!(
+                    "modeled {:>9.1} us, measured {:>9.1} us, ratio {:.3} (n={})",
+                    s.modeled_s / s.samples.max(1) as f64 * 1e6,
+                    s.measured_s / s.samples.max(1) as f64 * 1e6,
+                    s.ratio(),
+                    s.samples
+                ),
+            );
+        }
+        r.finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_and_ratios() {
+        let d = DriftAccountant::new();
+        assert!(d.is_empty());
+        d.record((8, 256, 512), 2e-6, 4e-6, 1);
+        d.record((8, 256, 512), 2e-6, 4e-6, 1);
+        d.record((1, 256, 256), 1e-6, 1e-6, 3);
+        let snap = d.snapshot();
+        assert_eq!(snap.len(), 2);
+        // Sorted by shape key: (1, 256, 256) first.
+        assert_eq!(snap[0].0, (1, 256, 256));
+        assert_eq!(snap[0].1.samples, 3);
+        assert!((snap[1].1.ratio() - 0.5).abs() < 1e-12);
+        let doc = Json::parse(&d.json().to_string()).unwrap();
+        let arr = doc.as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        assert!((arr[1].req("ratio").unwrap().as_f64().unwrap() - 0.5).abs() < 1e-12);
+        let text = d.report();
+        assert!(text.contains("m8 256x512"), "{text}");
+        assert!(text.contains("ratio 0.500"), "{text}");
+        d.reset();
+        assert!(d.is_empty());
+    }
+
+    #[test]
+    fn empty_ratio_is_zero() {
+        assert_eq!(DriftStat::default().ratio(), 0.0);
+        let text = DriftAccountant::new().report();
+        assert!(text.contains("no instrumented steps"), "{text}");
+    }
+}

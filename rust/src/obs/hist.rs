@@ -1,0 +1,191 @@
+//! Shared fixed-bucket latency histogram.
+//!
+//! Grown out of `coordinator::metrics` (PR 2) into the observability
+//! layer so the engine, the serving simulations, and the metrics
+//! [`super::Registry`] all accumulate latencies through one
+//! implementation. Buckets are log-spaced powers of two from 1 µs, so
+//! recording is a branch-free `partition_point` and the memory footprint
+//! is constant regardless of sample count.
+
+use std::time::Duration;
+
+/// Fixed-bucket latency histogram (log-spaced, 1 µs .. ~1073 s).
+///
+/// Records are O(log buckets) with no allocation after construction;
+/// quantiles interpolate linearly inside the winning bucket and are
+/// clamped to the observed maximum, so `quantile_s(1.0) == max_s()`.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    buckets: Vec<u64>,
+    bounds: Vec<f64>,
+    count: u64,
+    sum_s: f64,
+    max_s: f64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    /// An empty histogram with the standard latency bucketing.
+    pub fn new() -> Self {
+        // 1us * 2^i, 30 buckets -> covers up to ~1073 s.
+        let bounds: Vec<f64> = (0..30).map(|i| 1e-6 * (1u64 << i) as f64).collect();
+        Histogram { buckets: vec![0; 31], bounds, count: 0, sum_s: 0.0, max_s: 0.0 }
+    }
+
+    /// Record one duration.
+    pub fn record(&mut self, d: Duration) {
+        self.record_s(d.as_secs_f64());
+    }
+
+    /// Record one latency in seconds.
+    pub fn record_s(&mut self, s: f64) {
+        let idx = self.bounds.partition_point(|&b| b < s);
+        self.buckets[idx] += 1;
+        self.count += 1;
+        self.sum_s += s;
+        self.max_s = self.max_s.max(s);
+    }
+
+    /// Samples recorded so far.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// `true` when nothing has been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Sum of all recorded latencies, in seconds.
+    pub fn sum_s(&self) -> f64 {
+        self.sum_s
+    }
+
+    /// Mean recorded latency (0 when empty).
+    pub fn mean_s(&self) -> f64 {
+        if self.count == 0 { 0.0 } else { self.sum_s / self.count as f64 }
+    }
+
+    /// Largest recorded latency (0 when empty).
+    pub fn max_s(&self) -> f64 {
+        self.max_s
+    }
+
+    /// Approximate quantile, interpolated linearly within the winning
+    /// bucket (the pre-PR-6 version returned the bucket's raw upper
+    /// bound, which inflated every quantile by up to 2x — a power-of-two
+    /// bucket's width). Results never exceed [`Histogram::max_s`].
+    pub fn quantile_s(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).max(1);
+        let mut acc = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            let before = acc;
+            acc += c;
+            if acc >= target && c > 0 {
+                let lo = if i == 0 { 0.0 } else { self.bounds[i - 1] };
+                let hi =
+                    if i < self.bounds.len() { self.bounds[i] } else { self.max_s.max(lo) };
+                let frac = (target - before) as f64 / c as f64;
+                return (lo + (hi - lo) * frac).min(self.max_s);
+            }
+        }
+        self.max_s
+    }
+
+    /// Fold another histogram into this one. Bucketing is identical by
+    /// construction, so the merge is exact: count, sum, max, and every
+    /// bucket equal what a single histogram recording both sample
+    /// streams would hold.
+    pub fn merge(&mut self, other: &Histogram) {
+        for (b, ob) in self.buckets.iter_mut().zip(&other.buckets) {
+            *b += ob;
+        }
+        self.count += other.count;
+        self.sum_s += other.sum_s;
+        self.max_s = self.max_s.max(other.max_s);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_quantiles_ordered() {
+        let mut h = Histogram::new();
+        for i in 1..=1000u64 {
+            h.record_s(i as f64 * 1e-4); // 0.1ms .. 100ms
+        }
+        assert_eq!(h.count(), 1000);
+        let p50 = h.quantile_s(0.5);
+        let p99 = h.quantile_s(0.99);
+        assert!(p50 <= p99);
+        assert!(p50 > 1e-3 && p99 <= h.max_s() * 2.0);
+        assert!((h.mean_s() - 0.05).abs() < 0.01);
+    }
+
+    #[test]
+    fn empty_histogram_is_zero() {
+        let h = Histogram::new();
+        assert_eq!(h.quantile_s(0.99), 0.0);
+        assert_eq!(h.mean_s(), 0.0);
+        assert!(h.is_empty());
+    }
+
+    #[test]
+    fn quantile_interpolates_within_bucket() {
+        // All mass in one bucket: (2.048ms, 4.096ms]. The old
+        // implementation returned the 4.096ms upper bound for every
+        // quantile; interpolation must land strictly inside the bucket
+        // for interior quantiles and never exceed the observed max.
+        let mut h = Histogram::new();
+        for _ in 0..100 {
+            h.record_s(3e-3);
+        }
+        let p10 = h.quantile_s(0.10);
+        let p90 = h.quantile_s(0.90);
+        assert!(p10 > 2.048e-3 && p10 < 4.096e-3, "p10={p10}");
+        assert!(p90 > p10, "p90={p90} p10={p10}");
+        assert!(h.quantile_s(1.0) <= h.max_s());
+    }
+
+    #[test]
+    fn quantile_monotone_in_q() {
+        let mut h = Histogram::new();
+        for i in 0..200u64 {
+            h.record_s(1e-5 * (1 + i * 37 % 999) as f64);
+        }
+        let mut prev = 0.0;
+        for i in 0..=20 {
+            let v = h.quantile_s(i as f64 / 20.0);
+            assert!(v >= prev, "q={}: {v} < {prev}", i as f64 / 20.0);
+            prev = v;
+        }
+        assert!(prev <= h.max_s());
+    }
+
+    #[test]
+    fn merge_is_exact() {
+        let (mut a, mut b, mut whole) = (Histogram::new(), Histogram::new(), Histogram::new());
+        for i in 1..=500u64 {
+            let s = i as f64 * 3.7e-5;
+            if i % 2 == 0 { a.record_s(s) } else { b.record_s(s) }
+            whole.record_s(s);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), whole.count());
+        assert!((a.sum_s() - whole.sum_s()).abs() < 1e-12);
+        assert_eq!(a.max_s(), whole.max_s());
+        for q in [0.1, 0.5, 0.9, 0.99] {
+            assert_eq!(a.quantile_s(q), whole.quantile_s(q), "q={q}");
+        }
+    }
+}

@@ -1,0 +1,37 @@
+//! Always-on observability: metrics registry, span tracer, and
+//! model-vs-measured drift accounting (std-only).
+//!
+//! The paper's claim is a *measured* kernel gap, and the serving stack
+//! above it schedules against *modeled* `gpusim` costs — this module
+//! makes both sides continuously visible so every kernel and scheduling
+//! change is verifiable rather than asserted:
+//!
+//! * [`Registry`] — process-wide named [`Counter`]s, [`Gauge`]s, and
+//!   latency [`Histogram`]s with a deterministic JSON snapshot and a
+//!   shared text [`Report`] writer (`quick-infer report obs`).
+//! * [`trace`] — a low-overhead span tracer with lock-free per-thread
+//!   ring buffers emitting Chrome-trace-event JSON; pass
+//!   `--trace <path>` to any `simulate`/`bench` target and open the
+//!   file in Perfetto. Disabled probes cost one atomic load; the
+//!   `trace_off` cargo feature compiles them out entirely.
+//! * [`DriftAccountant`] — per-GEMM-shape ledger of `gpusim`-modeled
+//!   latency next to measured wall time, surfacing a running
+//!   modeled/measured ratio per shape.
+//!
+//! Instrumented layers: `kernel::StepExecutor` (per-GEMM spans with
+//! GFLOP/s + drift), `kernel::WorkerPool` (per-worker busy time,
+//! steals, park/wake, queue depth), `kernel::PlanCache` (hit/miss),
+//! `coordinator::ContinuousScheduler` (batch composition, chunked
+//! prefill, preemptions), `coordinator::prefix` (hit rate, evictions),
+//! and the serving `Engine` (TTFT/TPOT/E2E histograms). The hotpath
+//! bench proves the instrumented kernel paths still allocate nothing in
+//! steady state with tracing enabled.
+
+pub mod drift;
+pub mod hist;
+pub mod registry;
+pub mod trace;
+
+pub use drift::{DriftAccountant, DriftStat};
+pub use hist::Histogram;
+pub use registry::{Counter, Gauge, HistogramHandle, Registry, Report};

@@ -1,0 +1,334 @@
+//! Process-wide metrics registry: named counters, gauges, and latency
+//! histograms with a deterministic JSON snapshot and a shared text
+//! report writer.
+//!
+//! Instrumentation sites acquire a handle once (typically through a
+//! `OnceLock`) and then update it forever after with a relaxed atomic op
+//! or a short uncontended lock — no allocation, no name lookup — so the
+//! registry can stay on in throughput runs without violating the
+//! kernel runtime's zero-steady-state-allocation contract.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Duration;
+
+use crate::util::Json;
+
+use super::hist::Histogram;
+
+fn lock_ignore_poison<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// A monotonically increasing event counter. Cloning shares the
+/// underlying atomic, so a handle cached at an instrumentation site
+/// observes [`Registry::reset`] (which zeroes in place).
+#[derive(Debug, Clone, Default)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    /// Add one.
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    /// Add `n`.
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A last-write-wins signed instantaneous value (queue depths, active
+/// worker counts). Cloning shares the underlying atomic.
+#[derive(Debug, Clone, Default)]
+pub struct Gauge(Arc<AtomicI64>);
+
+impl Gauge {
+    /// Overwrite the value.
+    #[inline]
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    /// Adjust the value by `delta` (may be negative).
+    #[inline]
+    pub fn add(&self, delta: i64) {
+        self.0.fetch_add(delta, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A shared handle onto a registered [`Histogram`]. Records take a
+/// short mutex (locking does not allocate), so the handle is safe on
+/// serving paths guarded by the zero-alloc gate.
+#[derive(Debug, Clone)]
+pub struct HistogramHandle(Arc<Mutex<Histogram>>);
+
+impl Default for HistogramHandle {
+    fn default() -> Self {
+        HistogramHandle(Arc::new(Mutex::new(Histogram::new())))
+    }
+}
+
+impl HistogramHandle {
+    /// Record one duration.
+    #[inline]
+    pub fn record(&self, d: Duration) {
+        self.record_s(d.as_secs_f64());
+    }
+
+    /// Record one latency in seconds.
+    #[inline]
+    pub fn record_s(&self, s: f64) {
+        lock_ignore_poison(&self.0).record_s(s);
+    }
+
+    /// A point-in-time copy of the underlying histogram.
+    pub fn snapshot(&self) -> Histogram {
+        lock_ignore_poison(&self.0).clone()
+    }
+}
+
+/// Process-wide registry of named metrics.
+///
+/// Names are `&'static str` in dotted `subsystem.metric` form (see the
+/// README glossary). `BTreeMap` storage makes [`Registry::snapshot`]
+/// and [`Registry::report`] deterministic: same metric values, same
+/// bytes out.
+#[derive(Debug, Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<&'static str, Counter>>,
+    gauges: Mutex<BTreeMap<&'static str, Gauge>>,
+    hists: Mutex<BTreeMap<&'static str, HistogramHandle>>,
+}
+
+impl Registry {
+    /// A fresh, empty registry (tests; production code uses
+    /// [`Registry::global`]).
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// The process-wide registry every instrumentation site reports to.
+    pub fn global() -> &'static Registry {
+        static GLOBAL: OnceLock<Registry> = OnceLock::new();
+        GLOBAL.get_or_init(Registry::new)
+    }
+
+    /// The counter named `name`, registering it on first use.
+    pub fn counter(&self, name: &'static str) -> Counter {
+        lock_ignore_poison(&self.counters).entry(name).or_default().clone()
+    }
+
+    /// The gauge named `name`, registering it on first use.
+    pub fn gauge(&self, name: &'static str) -> Gauge {
+        lock_ignore_poison(&self.gauges).entry(name).or_default().clone()
+    }
+
+    /// The histogram named `name`, registering it on first use.
+    pub fn histogram(&self, name: &'static str) -> HistogramHandle {
+        lock_ignore_poison(&self.hists).entry(name).or_default().clone()
+    }
+
+    /// Zero every metric in place. Handles cached at instrumentation
+    /// sites stay valid and observe the reset.
+    pub fn reset(&self) {
+        for c in lock_ignore_poison(&self.counters).values() {
+            c.0.store(0, Ordering::Relaxed);
+        }
+        for g in lock_ignore_poison(&self.gauges).values() {
+            g.0.store(0, Ordering::Relaxed);
+        }
+        for h in lock_ignore_poison(&self.hists).values() {
+            *lock_ignore_poison(&h.0) = Histogram::new();
+        }
+    }
+
+    /// Deterministic JSON snapshot: `{"counters": {...}, "gauges":
+    /// {...}, "histograms": {name: {count, mean_s, p50_s, p99_s,
+    /// max_s}}}`, keys sorted.
+    pub fn snapshot(&self) -> Json {
+        let counters = lock_ignore_poison(&self.counters)
+            .iter()
+            .map(|(k, v)| (k.to_string(), Json::Num(v.get() as f64)))
+            .collect();
+        let gauges = lock_ignore_poison(&self.gauges)
+            .iter()
+            .map(|(k, v)| (k.to_string(), Json::Num(v.get() as f64)))
+            .collect();
+        let hists = lock_ignore_poison(&self.hists)
+            .iter()
+            .map(|(k, v)| {
+                let h = v.snapshot();
+                let mut o = BTreeMap::new();
+                o.insert("count".to_string(), Json::Num(h.count() as f64));
+                o.insert("mean_s".to_string(), Json::Num(h.mean_s()));
+                o.insert("p50_s".to_string(), Json::Num(h.quantile_s(0.5)));
+                o.insert("p99_s".to_string(), Json::Num(h.quantile_s(0.99)));
+                o.insert("max_s".to_string(), Json::Num(h.max_s()));
+                (k.to_string(), Json::Obj(o))
+            })
+            .collect();
+        let mut doc = BTreeMap::new();
+        doc.insert("counters".to_string(), Json::Obj(counters));
+        doc.insert("gauges".to_string(), Json::Obj(gauges));
+        doc.insert("histograms".to_string(), Json::Obj(hists));
+        Json::Obj(doc)
+    }
+
+    /// Human-readable snapshot rendered through the shared [`Report`]
+    /// writer (the same formatting `EngineMetrics::report` uses, so
+    /// serving output and `report obs` cannot drift apart).
+    pub fn report(&self) -> String {
+        let mut r = Report::new();
+        r.section("counters");
+        for (name, c) in lock_ignore_poison(&self.counters).iter() {
+            r.metric(name, c.get().to_string());
+        }
+        r.section("gauges");
+        for (name, g) in lock_ignore_poison(&self.gauges).iter() {
+            r.metric(name, g.get().to_string());
+        }
+        r.section("histograms");
+        for (name, h) in lock_ignore_poison(&self.hists).iter() {
+            let h = h.snapshot();
+            r.metric(name, format!("{}{}", Report::hist_ms(&h), format_args!(" (n={})", h.count())));
+        }
+        r.finish()
+    }
+}
+
+/// Shared text-report writer: one formatting path for engine metric
+/// summaries, registry dumps, and drift tables, so every surface that
+/// prints counters renders them identically.
+#[derive(Debug, Default)]
+pub struct Report {
+    out: String,
+}
+
+impl Report {
+    /// An empty report.
+    pub fn new() -> Report {
+        Report::default()
+    }
+
+    /// One `label:    text` line; labels are padded to a 10-column
+    /// gutter (the engine-report layout).
+    pub fn line(&mut self, label: &str, text: impl AsRef<str>) -> &mut Report {
+        let _ = writeln!(self.out, "{:<10}{}", format!("{label}:"), text.as_ref());
+        self
+    }
+
+    /// An unindented section header (`name:`).
+    pub fn section(&mut self, name: &str) -> &mut Report {
+        let _ = writeln!(self.out, "{name}:");
+        self
+    }
+
+    /// One indented `name  value` line under a [`Report::section`].
+    pub fn metric(&mut self, name: &str, value: impl AsRef<str>) -> &mut Report {
+        let _ = writeln!(self.out, "  {:<34} {}", name, value.as_ref());
+        self
+    }
+
+    /// The canonical mean/p50/p99 rendering of a latency histogram, in
+    /// milliseconds.
+    pub fn hist_ms(h: &Histogram) -> String {
+        format!(
+            "mean {:.1} ms, p50 {:.1} ms, p99 {:.1} ms",
+            h.mean_s() * 1e3,
+            h.quantile_s(0.5) * 1e3,
+            h.quantile_s(0.99) * 1e3,
+        )
+    }
+
+    /// The finished report text (no trailing newline).
+    pub fn finish(&mut self) -> String {
+        let s = std::mem::take(&mut self.out);
+        s.trim_end().to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_gauges_histograms_roundtrip() {
+        let r = Registry::new();
+        let c = r.counter("test.count");
+        c.inc();
+        c.add(4);
+        assert_eq!(r.counter("test.count").get(), 5);
+        let g = r.gauge("test.depth");
+        g.set(7);
+        g.add(-2);
+        assert_eq!(r.gauge("test.depth").get(), 5);
+        let h = r.histogram("test.lat_s");
+        h.record_s(1e-3);
+        h.record(Duration::from_millis(2));
+        assert_eq!(r.histogram("test.lat_s").snapshot().count(), 2);
+    }
+
+    #[test]
+    fn snapshot_is_deterministic() {
+        let build = || {
+            let r = Registry::new();
+            // Register in different orders; BTreeMap sorts either way.
+            for name in ["b.two", "a.one", "c.three"] {
+                r.counter(name).add(name.len() as u64);
+            }
+            r.gauge("z.depth").set(-3);
+            r.histogram("lat").record_s(0.25);
+            r
+        };
+        let (r1, r2) = (build(), build());
+        assert_eq!(r1.snapshot().to_string(), r2.snapshot().to_string());
+        assert_eq!(r1.report(), r2.report());
+        let doc = Json::parse(&r1.snapshot().to_string()).unwrap();
+        assert_eq!(doc.req("counters").unwrap().req("a.one").unwrap().as_u64().unwrap(), 5);
+        assert_eq!(doc.req("gauges").unwrap().req("z.depth").unwrap().as_f64().unwrap(), -3.0);
+        assert!(
+            doc.req("histograms").unwrap().req("lat").unwrap().req("p99_s").unwrap().as_f64().unwrap()
+                > 0.0
+        );
+    }
+
+    #[test]
+    fn reset_preserves_cached_handles() {
+        let r = Registry::new();
+        let c = r.counter("x");
+        let h = r.histogram("y");
+        c.add(9);
+        h.record_s(1.0);
+        r.reset();
+        assert_eq!(c.get(), 0);
+        assert_eq!(h.snapshot().count(), 0);
+        c.inc(); // cached handle still feeds the registry
+        assert_eq!(r.counter("x").get(), 1);
+    }
+
+    #[test]
+    fn report_writer_layout() {
+        let mut rep = Report::new();
+        rep.line("TTFT", "mean 1.0 ms");
+        rep.section("counters");
+        rep.metric("a.b", "3");
+        let text = rep.finish();
+        assert!(text.contains("TTFT:     mean 1.0 ms"), "{text}");
+        assert!(text.contains("counters:\n  a.b"), "{text}");
+    }
+}

@@ -1,0 +1,432 @@
+//! Low-overhead span tracer with lock-free per-thread ring buffers,
+//! exporting Chrome-trace-event JSON (loadable in Perfetto or
+//! `chrome://tracing`).
+//!
+//! Design constraints, in priority order:
+//!
+//! 1. **Disabled is free.** [`enabled`] is one relaxed atomic load (and
+//!    a compile-time constant `false` under the `trace_off` feature), so
+//!    instrumentation can live permanently inside the kernel runtime's
+//!    hot loops.
+//! 2. **Enabled allocates only at thread warmup.** Each thread lazily
+//!    allocates one fixed-capacity event ring on its first span and
+//!    registers it in a global list; after that, recording a span is a
+//!    slot write plus one `Release` store — no locks, no allocation.
+//!    The hotpath bench's `CountingAlloc` gate holds with tracing on.
+//! 3. **Concurrent emission is well-formed.** Rings are single-producer
+//!    (the owning thread) and drop-newest when full — slots are never
+//!    overwritten, so the exporter's `Acquire` read of the published
+//!    length sees only fully written events and the emitted trace is
+//!    never torn or interleaved.
+//!
+//! Spans are scoped guards ([`span`]) or explicit completes
+//! ([`complete`]) carrying up to four numeric args each; thread names
+//! surface as Chrome-trace `"M"` metadata records.
+
+use std::cell::{OnceCell, UnsafeCell};
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::util::Json;
+
+/// Events each thread can hold before dropping (drop-newest keeps the
+/// ring race-free; the `obs.trace.dropped` count is exported in the
+/// trace metadata so truncation is visible).
+pub const RING_CAP: usize = 8192;
+
+/// `false` when the tracer was compiled out with the `trace_off` cargo
+/// feature — every probe then folds to a constant branch.
+pub const COMPILED: bool = cfg!(not(feature = "trace_off"));
+
+#[derive(Clone, Copy)]
+struct Event {
+    name: &'static str,
+    cat: &'static str,
+    t0_ns: u64,
+    dur_ns: u64,
+    args: [(&'static str, f64); 4],
+    n_args: u8,
+}
+
+const EMPTY_EVENT: Event =
+    Event { name: "", cat: "", t0_ns: 0, dur_ns: 0, args: [("", 0.0); 4], n_args: 0 };
+
+struct Ring {
+    slots: Box<[UnsafeCell<Event>]>,
+    /// Published event count. Only the owning thread stores (with
+    /// `Release`, after fully writing slot `len`); readers load with
+    /// `Acquire`, which makes every slot below the loaded value visible
+    /// and immutable — published slots are never rewritten.
+    len: AtomicUsize,
+    dropped: AtomicU64,
+    tid: u64,
+    thread_name: String,
+}
+
+// SAFETY: the UnsafeCell slots follow an SPSC publication protocol —
+// only the owning thread writes, only at index `len`, and publishes via
+// a Release store of `len + 1`; concurrent readers touch only indices
+// below an Acquire-loaded `len`. See `Ring::len`.
+unsafe impl Sync for Ring {}
+unsafe impl Send for Ring {}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+fn rings() -> &'static Mutex<Vec<Arc<Ring>>> {
+    static RINGS: OnceLock<Mutex<Vec<Arc<Ring>>>> = OnceLock::new();
+    RINGS.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+thread_local! {
+    static LOCAL_RING: OnceCell<Arc<Ring>> = const { OnceCell::new() };
+}
+
+/// Whether spans are being recorded right now. One relaxed load; the
+/// hot-path probe every instrumentation site gates on.
+#[inline]
+pub fn enabled() -> bool {
+    COMPILED && ENABLED.load(Ordering::Relaxed)
+}
+
+/// Start recording spans (also pins the trace epoch so timestamps start
+/// near zero). A no-op when compiled out via `trace_off`.
+pub fn enable() {
+    let _ = epoch();
+    ENABLED.store(true, Ordering::Relaxed);
+}
+
+/// Stop recording spans. Already-recorded events stay exportable.
+pub fn disable() {
+    ENABLED.store(false, Ordering::Relaxed);
+}
+
+/// Nanoseconds since the trace epoch (pinned on first [`enable`]).
+#[inline]
+pub fn now_ns() -> u64 {
+    epoch().elapsed().as_nanos() as u64
+}
+
+fn register_ring() -> Arc<Ring> {
+    let mut all = rings().lock().unwrap_or_else(|e| e.into_inner());
+    let tid = all.len() as u64 + 1;
+    let thread_name = std::thread::current()
+        .name()
+        .map(str::to_string)
+        .unwrap_or_else(|| format!("thread-{tid}"));
+    let slots: Box<[UnsafeCell<Event>]> =
+        (0..RING_CAP).map(|_| UnsafeCell::new(EMPTY_EVENT)).collect();
+    let ring = Arc::new(Ring {
+        slots,
+        len: AtomicUsize::new(0),
+        dropped: AtomicU64::new(0),
+        tid,
+        thread_name,
+    });
+    all.push(Arc::clone(&ring));
+    ring
+}
+
+#[inline]
+fn record(ev: Event) {
+    LOCAL_RING.with(|cell| {
+        let ring = cell.get_or_init(register_ring);
+        let len = ring.len.load(Ordering::Relaxed);
+        if len >= RING_CAP {
+            ring.dropped.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        // SAFETY: sole producer; slot `len` is unpublished until the
+        // Release store below.
+        unsafe { *ring.slots[len].get() = ev };
+        ring.len.store(len + 1, Ordering::Release);
+    });
+}
+
+/// Record a completed span explicitly: it started `start_ns` after the
+/// trace epoch and ran for `dur_ns`. Up to four `args` are kept (the
+/// Chrome-trace `args` object); extras are dropped. No-op when
+/// disabled.
+pub fn complete(
+    name: &'static str,
+    cat: &'static str,
+    start_ns: u64,
+    dur_ns: u64,
+    args: &[(&'static str, f64)],
+) {
+    if !enabled() {
+        return;
+    }
+    let mut ev = Event { name, cat, t0_ns: start_ns, dur_ns, ..EMPTY_EVENT };
+    for (i, &(k, v)) in args.iter().take(4).enumerate() {
+        ev.args[i] = (k, v);
+        ev.n_args = (i + 1) as u8;
+    }
+    record(ev);
+}
+
+/// A scoped span: records one complete event from construction to drop.
+/// Construction while the tracer is disabled costs one atomic load and
+/// records nothing.
+#[must_use = "a span records its duration when dropped"]
+pub struct Span {
+    name: &'static str,
+    cat: &'static str,
+    start_ns: u64,
+    args: [(&'static str, f64); 4],
+    n_args: u8,
+    armed: bool,
+}
+
+impl Span {
+    /// Attach a numeric arg discovered mid-span (e.g. how many tasks a
+    /// worker ended up claiming). At most four args are kept.
+    #[inline]
+    pub fn arg(&mut self, key: &'static str, value: f64) {
+        if self.armed && (self.n_args as usize) < 4 {
+            self.args[self.n_args as usize] = (key, value);
+            self.n_args += 1;
+        }
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if self.armed {
+            let mut ev = Event {
+                name: self.name,
+                cat: self.cat,
+                t0_ns: self.start_ns,
+                dur_ns: now_ns().saturating_sub(self.start_ns),
+                args: self.args,
+                n_args: self.n_args,
+            };
+            if !enabled() {
+                return;
+            }
+            ev.dur_ns = ev.dur_ns.max(1);
+            record(ev);
+        }
+    }
+}
+
+/// Open a scoped span named `name` in category `cat`.
+#[inline]
+pub fn span(name: &'static str, cat: &'static str) -> Span {
+    let armed = enabled();
+    Span {
+        name,
+        cat,
+        start_ns: if armed { now_ns() } else { 0 },
+        args: [("", 0.0); 4],
+        n_args: 0,
+        armed,
+    }
+}
+
+/// Open a scoped span carrying one numeric arg.
+#[inline]
+pub fn span1(name: &'static str, cat: &'static str, k0: &'static str, v0: f64) -> Span {
+    let mut s = span(name, cat);
+    s.arg(k0, v0);
+    s
+}
+
+/// Open a scoped span carrying two numeric args.
+#[inline]
+pub fn span2(
+    name: &'static str,
+    cat: &'static str,
+    k0: &'static str,
+    v0: f64,
+    k1: &'static str,
+    v1: f64,
+) -> Span {
+    let mut s = span(name, cat);
+    s.arg(k0, v0);
+    s.arg(k1, v1);
+    s
+}
+
+/// Total events currently held across all thread rings.
+pub fn events_recorded() -> u64 {
+    let all = rings().lock().unwrap_or_else(|e| e.into_inner());
+    all.iter().map(|r| r.len.load(Ordering::Acquire) as u64).sum()
+}
+
+/// Events rejected because a thread's ring was full.
+pub fn events_dropped() -> u64 {
+    let all = rings().lock().unwrap_or_else(|e| e.into_inner());
+    all.iter().map(|r| r.dropped.load(Ordering::Relaxed)).sum()
+}
+
+/// Number of threads that have recorded at least one event.
+pub fn threads_with_events() -> usize {
+    let all = rings().lock().unwrap_or_else(|e| e.into_inner());
+    all.iter().filter(|r| r.len.load(Ordering::Acquire) > 0).count()
+}
+
+/// Discard all recorded events (ring capacity and registration are
+/// kept). **Requires quiescence**: call only while the tracer is
+/// disabled and no instrumented work is in flight, otherwise a thread
+/// mid-record may republish stale slots.
+pub fn reset() {
+    let all = rings().lock().unwrap_or_else(|e| e.into_inner());
+    for r in all.iter() {
+        r.len.store(0, Ordering::Release);
+        r.dropped.store(0, Ordering::Relaxed);
+    }
+}
+
+fn event_json(ring: &Ring, ev: &Event) -> Json {
+    let mut o = BTreeMap::new();
+    o.insert("name".to_string(), Json::Str(ev.name.to_string()));
+    o.insert("cat".to_string(), Json::Str(ev.cat.to_string()));
+    o.insert("ph".to_string(), Json::Str("X".to_string()));
+    o.insert("ts".to_string(), Json::Num(ev.t0_ns as f64 / 1e3));
+    o.insert("dur".to_string(), Json::Num(ev.dur_ns as f64 / 1e3));
+    o.insert("pid".to_string(), Json::Num(1.0));
+    o.insert("tid".to_string(), Json::Num(ring.tid as f64));
+    let mut args = BTreeMap::new();
+    for &(k, v) in ev.args.iter().take(ev.n_args as usize) {
+        args.insert(k.to_string(), Json::Num(v));
+    }
+    o.insert("args".to_string(), Json::Obj(args));
+    Json::Obj(o)
+}
+
+fn meta_json(tid: u64, which: &str, name: &str) -> Json {
+    let mut o = BTreeMap::new();
+    o.insert("name".to_string(), Json::Str(which.to_string()));
+    o.insert("ph".to_string(), Json::Str("M".to_string()));
+    o.insert("pid".to_string(), Json::Num(1.0));
+    o.insert("tid".to_string(), Json::Num(tid as f64));
+    let mut args = BTreeMap::new();
+    args.insert("name".to_string(), Json::Str(name.to_string()));
+    o.insert("args".to_string(), Json::Obj(args));
+    Json::Obj(o)
+}
+
+/// Everything recorded so far as a Chrome-trace-event JSON document
+/// (`{"traceEvents": [...]}` object form, `ts`/`dur` in microseconds).
+pub fn chrome_trace_json() -> Json {
+    let all = rings().lock().unwrap_or_else(|e| e.into_inner());
+    let mut events = vec![meta_json(0, "process_name", "quick-infer")];
+    for ring in all.iter() {
+        events.push(meta_json(ring.tid, "thread_name", &ring.thread_name));
+        let n = ring.len.load(Ordering::Acquire).min(RING_CAP);
+        for slot in ring.slots.iter().take(n) {
+            // SAFETY: indices below the Acquire-loaded `len` are fully
+            // published and never rewritten (drop-newest ring).
+            let ev = unsafe { *slot.get() };
+            events.push(event_json(ring, &ev));
+        }
+    }
+    let mut doc = BTreeMap::new();
+    doc.insert("traceEvents".to_string(), Json::Arr(events));
+    doc.insert("displayTimeUnit".to_string(), Json::Str("ms".to_string()));
+    doc.insert("droppedEvents".to_string(), Json::Num(events_dropped() as f64));
+    Json::Obj(doc)
+}
+
+/// Write [`chrome_trace_json`] to `path` (open the file in Perfetto /
+/// `chrome://tracing` to inspect the run).
+pub fn write_chrome_trace(path: &Path) -> Result<()> {
+    std::fs::write(path, format!("{}\n", chrome_trace_json()))
+        .map_err(|e| anyhow::anyhow!("writing trace to {}: {e}", path.display()))?;
+    Ok(())
+}
+
+/// Serializes unit tests that toggle the process-global tracer (they
+/// share one test binary); every test that calls [`enable`]/[`disable`]
+/// must hold this guard, whichever module it lives in.
+#[cfg(test)]
+pub(crate) fn test_guard() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    use super::test_guard as test_lock;
+
+    fn count_named(doc: &Json, name: &str) -> usize {
+        doc.req("traceEvents")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .filter(|e| e.get("name").map(|n| n.as_str().unwrap() == name).unwrap_or(false))
+            .count()
+    }
+
+    #[test]
+    fn disabled_spans_record_nothing() {
+        let _g = test_lock();
+        disable();
+        {
+            let _s = span("obs_test_disabled_span", "test");
+        }
+        complete("obs_test_disabled_complete", "test", 0, 10, &[]);
+        let doc = chrome_trace_json();
+        assert_eq!(count_named(&doc, "obs_test_disabled_span"), 0);
+        assert_eq!(count_named(&doc, "obs_test_disabled_complete"), 0);
+    }
+
+    #[test]
+    fn spans_round_trip_through_chrome_json() {
+        let _g = test_lock();
+        enable();
+        {
+            let mut s = span1("obs_test_span", "test", "m", 32.0);
+            s.arg("extra", 7.0);
+        }
+        complete("obs_test_complete", "test", 5_000, 2_000, &[("k", 1.0)]);
+        disable();
+        let doc = chrome_trace_json();
+        assert!(count_named(&doc, "obs_test_span") >= 1);
+        assert!(count_named(&doc, "obs_test_complete") >= 1);
+        // Re-parse through the strict JSON parser: the export is valid.
+        let parsed = Json::parse(&doc.to_string()).unwrap();
+        let events = parsed.req("traceEvents").unwrap().as_arr().unwrap();
+        let ev = events
+            .iter()
+            .find(|e| e.get("name").map(|n| n.as_str().unwrap() == "obs_test_complete") == Some(true))
+            .unwrap();
+        assert_eq!(ev.req("ph").unwrap().as_str().unwrap(), "X");
+        assert_eq!(ev.req("ts").unwrap().as_f64().unwrap(), 5.0);
+        assert_eq!(ev.req("dur").unwrap().as_f64().unwrap(), 2.0);
+        assert_eq!(ev.req("args").unwrap().req("k").unwrap().as_f64().unwrap(), 1.0);
+        // Thread metadata is present for this thread's ring.
+        assert!(events.iter().any(|e| {
+            e.get("ph").map(|p| p.as_str().unwrap() == "M") == Some(true)
+                && e.get("name").map(|n| n.as_str().unwrap() == "thread_name") == Some(true)
+        }));
+    }
+
+    #[test]
+    fn ring_drops_newest_when_full() {
+        let _g = test_lock();
+        enable();
+        for _ in 0..2 * RING_CAP {
+            complete("obs_test_flood", "test", 0, 1, &[]);
+        }
+        disable();
+        assert!(events_dropped() > 0);
+        // The ring stayed at capacity: no wraparound, no torn slots.
+        let all = rings().lock().unwrap();
+        let mine = all.iter().map(|r| r.len.load(Ordering::Acquire)).max().unwrap();
+        assert!(mine <= RING_CAP);
+    }
+}

@@ -1,0 +1,221 @@
+//! Integration tests for the observability subsystem: concurrent span
+//! emission through the worker pool and the instrumented executor,
+//! Chrome-trace export well-formedness under random GEMM shapes and
+//! thread counts, histogram record/merge/quantile invariants, and
+//! registry snapshot determinism.
+//!
+//! Runs as its own process, so enabling the process-global tracer here
+//! cannot interfere with the library's unit tests; the tests in this
+//! file that toggle the tracer serialize through `trace_lock`.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use quick_infer::kernel::{
+    gemm_quick_fused, Blocking, QuickWeights, StepBackend, StepExecutor, WorkerPool,
+};
+use quick_infer::model::Model;
+use quick_infer::obs::{trace, Histogram, Registry};
+use quick_infer::quant::quantize_groupwise;
+use quick_infer::util::{proptest, Json, Rng};
+
+/// The tracer is process-global; tests that toggle it run one at a time.
+fn trace_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Force every participant of `pool` (caller + all workers) to record a
+/// `pool.participate` span: with `tasks == slots` and a barrier body, no
+/// participant can claim a second task before every claim has happened.
+fn barrier_job(pool: &WorkerPool) {
+    let slots = pool.workers() + 1;
+    let started = AtomicUsize::new(0);
+    pool.run(slots, slots, &|_t, _s| {
+        started.fetch_add(1, Ordering::Relaxed);
+        while started.load(Ordering::Relaxed) < slots {
+            std::hint::spin_loop();
+        }
+    });
+}
+
+#[test]
+fn concurrent_spans_export_well_formed_chrome_trace() {
+    let _g = trace_lock();
+    trace::reset();
+    trace::enable();
+
+    // Dedicated 2-worker pool: guaranteed multi-thread emission even on
+    // a single-core host (workers spawn regardless of core count).
+    let pool = WorkerPool::new(2);
+    for _ in 0..4 {
+        barrier_job(&pool);
+    }
+    // Executor spans (per-GEMM, with shape + GFLOP/s args) from the tiny
+    // model's full weight-GEMM stream.
+    let spec = Model::Tiny.spec();
+    let mut exec =
+        StepExecutor::new(&spec, StepBackend::Fused, Blocking::default(), 128, 4, 0xB0B).unwrap();
+    exec.step(4).unwrap();
+    trace::disable();
+
+    assert!(trace::events_recorded() > 0);
+    assert!(trace::threads_with_events() >= 3, "caller + 2 pool workers");
+
+    // Round-trip through the strict JSON parser and validate every span.
+    let doc = Json::parse(&trace::chrome_trace_json().to_string()).unwrap();
+    let events = doc.req("traceEvents").unwrap().as_arr().unwrap();
+    let mut tids = std::collections::BTreeSet::new();
+    let (mut participate, mut executor) = (0usize, 0usize);
+    for ev in events {
+        if ev.req("ph").unwrap().as_str().unwrap() != "X" {
+            continue;
+        }
+        let name = ev.req("name").unwrap().as_str().unwrap();
+        assert!(!name.is_empty(), "span with an empty name");
+        assert!(ev.req("ts").unwrap().as_f64().unwrap() >= 0.0);
+        assert!(ev.req("dur").unwrap().as_f64().unwrap() >= 0.0);
+        tids.insert(ev.req("tid").unwrap().as_f64().unwrap() as u64);
+        match ev.req("cat").unwrap().as_str().unwrap() {
+            "pool" if name == "pool.participate" => participate += 1,
+            "executor" => {
+                executor += 1;
+                let args = ev.req("args").unwrap();
+                assert!(args.req("m").unwrap().as_f64().unwrap() >= 1.0);
+                assert!(args.req("k").unwrap().as_f64().unwrap() >= 1.0);
+                assert!(args.req("n").unwrap().as_f64().unwrap() >= 1.0);
+                assert!(args.req("gflops").unwrap().as_f64().unwrap() > 0.0);
+            }
+            _ => {}
+        }
+    }
+    assert!(tids.len() >= 3, "expected spans from >= 3 threads, got {}", tids.len());
+    assert!(participate >= 4 * 3, "one participate span per slot per barrier job");
+    assert!(executor >= 8, "one span per distinct StepGemm of the tiny model");
+}
+
+#[test]
+fn random_shapes_and_thread_counts_keep_the_export_well_formed() {
+    let _g = trace_lock();
+    trace::reset();
+    trace::enable();
+    let pool = WorkerPool::new(3);
+    proptest::check("concurrent-span-emission", 0x0B5_7EA3, 16, |rng| {
+        // Random pool-job geometry: emission must never lose or double
+        // a task whatever claims race with the span recording.
+        let tasks = rng.range_usize(1, 32);
+        let threads = rng.range_usize(1, 4);
+        let hits: Vec<AtomicUsize> = (0..tasks).map(|_| AtomicUsize::new(0)).collect();
+        pool.run(tasks, threads, &|t, _s| {
+            hits[t].fetch_add(1, Ordering::Relaxed);
+        });
+        for (t, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::Relaxed), 1, "task {t} of {tasks}");
+        }
+        // A random GEMM shape through the instrumented fused path (the
+        // global pool may run it inline on a small host — the tracer
+        // must be shape- and dispatch-agnostic either way).
+        let m = rng.range_usize(1, 8);
+        let k = 16 * rng.range_usize(1, 4);
+        let n = 8 * rng.range_usize(1, 8);
+        let mut vals = Rng::seed_from_u64(rng.next_u64());
+        let w: Vec<f32> = (0..k * n).map(|_| vals.range_f64(-1.0, 1.0) as f32).collect();
+        let t = quantize_groupwise(&w, k, n, 16);
+        let qw = QuickWeights::from_quantized(&t);
+        let x: Vec<f32> = (0..m * k).map(|_| vals.range_f64(-1.0, 1.0) as f32).collect();
+        let mut y = vec![0f32; m * n];
+        let b = Blocking { threads, nc_words: 1, ..Blocking::default() };
+        gemm_quick_fused(&x, m, &qw, &b, &mut y).unwrap();
+    });
+    trace::disable();
+
+    // Whatever the shapes did to the rings, the export stays parseable
+    // and every complete event is well-formed.
+    let doc = Json::parse(&trace::chrome_trace_json().to_string()).unwrap();
+    let events = doc.req("traceEvents").unwrap().as_arr().unwrap();
+    let spans: Vec<_> =
+        events.iter().filter(|e| e.req("ph").unwrap().as_str().unwrap() == "X").collect();
+    assert!(!spans.is_empty());
+    for ev in spans {
+        assert!(!ev.req("name").unwrap().as_str().unwrap().is_empty());
+        assert!(ev.req("dur").unwrap().as_f64().unwrap() >= 0.0);
+    }
+}
+
+#[test]
+fn histogram_record_merge_quantile_invariants() {
+    proptest::check("histogram-invariants", 0x415, 48, |rng| {
+        let n = rng.range_usize(1, 400);
+        let split = rng.range_usize(0, n);
+        let (mut a, mut b, mut whole) = (Histogram::new(), Histogram::new(), Histogram::new());
+        let mut max = 0.0f64;
+        let mut sum = 0.0f64;
+        for i in 0..n {
+            // Log-uniform over the full bucket range, ~100ns .. ~100s.
+            let s = 1e-7 * 10f64.powf(rng.range_f64(0.0, 9.0));
+            if i < split {
+                a.record_s(s);
+            } else {
+                b.record_s(s);
+            }
+            whole.record_s(s);
+            max = max.max(s);
+            sum += s;
+        }
+        // Record invariants: count/sum/max track the sample stream.
+        assert_eq!(whole.count(), n as u64);
+        assert!((whole.sum_s() - sum).abs() <= 1e-9 * sum.max(1.0));
+        assert_eq!(whole.max_s(), max);
+        assert!(whole.mean_s() <= whole.max_s());
+        // Quantile invariants: monotone in q, bounded by the max.
+        let mut prev = 0.0;
+        for i in 0..=10 {
+            let v = whole.quantile_s(i as f64 / 10.0);
+            assert!(v >= prev, "q={}: {v} < {prev}", i as f64 / 10.0);
+            assert!(v <= whole.max_s());
+            prev = v;
+        }
+        // Merge invariant: merging the split halves is exact.
+        a.merge(&b);
+        assert_eq!(a.count(), whole.count());
+        assert!((a.sum_s() - whole.sum_s()).abs() <= 1e-9 * sum.max(1.0));
+        assert_eq!(a.max_s(), whole.max_s());
+        for q in [0.01, 0.25, 0.5, 0.75, 0.99] {
+            assert_eq!(a.quantile_s(q), whole.quantile_s(q), "q={q}");
+        }
+    });
+}
+
+#[test]
+fn registry_snapshot_is_deterministic_across_builds() {
+    let build = |order: &[usize]| {
+        let r = Registry::new();
+        let names = ["pool.jobs", "executor.steps", "sched.steps", "plan_cache.hits"];
+        for &i in order {
+            r.counter(names[i]).add((i + 1) as u64);
+        }
+        r.gauge("pool.queue_depth").set(-2);
+        for s in [1e-4, 2e-3, 0.5] {
+            r.histogram("engine.ttft_s").record_s(s);
+        }
+        r
+    };
+    // Same metrics, different registration orders: identical bytes out.
+    let a = build(&[0, 1, 2, 3]);
+    let b = build(&[3, 2, 1, 0]);
+    assert_eq!(a.snapshot().to_string(), b.snapshot().to_string());
+    assert_eq!(a.report(), b.report());
+    // The snapshot round-trips through the strict parser.
+    let doc = Json::parse(&a.snapshot().to_string()).unwrap();
+    assert_eq!(
+        doc.req("counters").unwrap().req("executor.steps").unwrap().as_f64().unwrap(),
+        2.0
+    );
+    assert_eq!(
+        doc.req("gauges").unwrap().req("pool.queue_depth").unwrap().as_f64().unwrap(),
+        -2.0
+    );
+    let h = doc.req("histograms").unwrap().req("engine.ttft_s").unwrap();
+    assert_eq!(h.req("count").unwrap().as_f64().unwrap(), 3.0);
+    assert!(h.req("p99_s").unwrap().as_f64().unwrap() > 0.0);
+}
