@@ -331,10 +331,13 @@ pub fn chrome_trace_json() -> Json {
             events.push(event_json(ring, &ev));
         }
     }
+    // `rings()` is a non-reentrant mutex and `all` is still held here, so
+    // the dropped total must come from the guard, not events_dropped().
+    let dropped: u64 = all.iter().map(|r| r.dropped.load(Ordering::Relaxed)).sum();
     let mut doc = BTreeMap::new();
     doc.insert("traceEvents".to_string(), Json::Arr(events));
     doc.insert("displayTimeUnit".to_string(), Json::Str("ms".to_string()));
-    doc.insert("droppedEvents".to_string(), Json::Num(events_dropped() as f64));
+    doc.insert("droppedEvents".to_string(), Json::Num(dropped as f64));
     Json::Obj(doc)
 }
 
