@@ -26,6 +26,12 @@
 //!   prompt is teacher-forced one token per *mixed* decode step alongside
 //!   decoding lanes — the same decode-first/chunk-riding policy at the
 //!   granularity the fixed shapes allow.
+//!
+//! The [`ContinuousScheduler`]'s step plans are consumed two ways: the
+//! modeled serving twins price each step through `gpusim`, and the
+//! `--measured` twins (`coordinator::measured`) *execute* each step's
+//! mixed token count as a real GEMM stream on the native kernel runtime
+//! — same plans, same admission, different clock.
 
 use std::collections::VecDeque;
 use std::sync::OnceLock;

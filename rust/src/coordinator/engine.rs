@@ -18,6 +18,13 @@
 //! serial batch-1 teacher-forcing; their tail tokens ride steps the
 //! decoding lanes were paying for anyway.
 //!
+//! This engine serves real tokens through PJRT; its scheduling twin on
+//! the native kernel runtime is `coordinator::measured` +
+//! `simserve::simulate_continuous_measured`, which drives the same
+//! decode-first/chunked-prefill step shape through per-rank
+//! `StepExecutor` GEMM streams and reports measured tokens/sec against
+//! the `gpusim` model (the drift ledger quantifies the seam).
+//!
 //! Correctness note on padded prefill: the prefill artifact processes a
 //! fixed-length prompt window; pad slots beyond the true length hold
 //! garbage K/V, but decode writes token `t` at slot `pos = len + t` *before*

@@ -1,0 +1,318 @@
+//! Measured serving runtime: the bridge that closes the
+//! modeled-vs-measured seam.
+//!
+//! The serving simulators in [`super::simserve`] advance their clock by
+//! `gpusim`-modeled step latencies. This module supplies the *measured*
+//! twin: a [`MeasuredEngine`] holds one prepared
+//! [`StepExecutor`](crate::kernel::StepExecutor) per tensor-parallel
+//! rank and, for every scheduler step, runs the full weight-GEMM stream
+//! at the step's actual mixed prefill/decode batch `M` on this CPU —
+//! through the same `WorkerPool`-backed fused/write-back kernels
+//! `simulate step` benchmarks. The step's charged latency is
+//!
+//! ```text
+//! measured GEMM-stream wall time (tp ranks run concurrently)
+//!   + gpusim-priced ring collectives (tp_step_comm_s, 0 at tp = 1)
+//! ```
+//!
+//! Attention and non-GEMM glue are *not* executed (the native runtime
+//! is a weight-GEMM runtime), so the measured clock deliberately covers
+//! only the terms the runtime can measure; the modeled step latency is
+//! still evaluated side by side and accumulated in
+//! [`MeasuredStats::modeled_s`], and per-GEMM drift feeds the global
+//! [`DriftAccountant`](crate::obs::DriftAccountant) ledger via
+//! `StepExecutor::enable_drift`. Prefix-cache hits shrink the
+//! scheduler's planned chunks, so cached tokens never reach
+//! [`MeasuredEngine::execute`] — a hit skips real compute, observable
+//! as fewer [`MeasuredStats::executed_tokens`].
+//!
+//! TP ranks are spawned as scoped threads but share this host's one
+//! `WorkerPool`, whose submit lock serializes GEMM jobs — the measured
+//! wall time is the ranks-share-one-CPU stand-in, with the inter-rank
+//! communication priced by the same collective model `simulate tp`
+//! uses.
+
+use anyhow::Result;
+use std::time::Instant;
+
+use crate::gpusim::{tp_step_comm_s, Calib, DeviceSpec};
+use crate::kernel::{Blocking, StepBackend, StepExecutor};
+use crate::model::LlmSpec;
+use crate::workload::{BurstyWorkload, Request, SharedPrefixWorkload};
+
+/// Running totals of a measured serving run.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct MeasuredStats {
+    /// Scheduler steps executed on the native runtime.
+    pub steps: u64,
+    /// Tokens that actually ran through the GEMM stream (sum of step
+    /// batches). Prefix-cache hits reduce this — cached tokens are
+    /// never planned into a step.
+    pub executed_tokens: u64,
+    /// Measured wall seconds of the GEMM streams (concurrent ranks).
+    pub gemm_wall_s: f64,
+    /// Modeled ring-collective seconds charged on top (0 at tp = 1).
+    pub comm_s: f64,
+    /// What the `gpusim` cost model priced the same steps at (the
+    /// modeled twin, evaluated side by side every step).
+    pub modeled_s: f64,
+}
+
+impl MeasuredStats {
+    /// Seconds the measured clock advanced: GEMM wall + priced comm.
+    pub fn measured_total_s(&self) -> f64 {
+        self.gemm_wall_s + self.comm_s
+    }
+
+    /// Modeled-over-measured time across the run, `None` before any
+    /// step. The modeled side includes attention/glue terms the
+    /// runtime does not execute, so this is the *serving-level* seam
+    /// width, not a per-kernel ratio (the drift ledger has those).
+    pub fn modeled_over_measured(&self) -> Option<f64> {
+        if self.measured_total_s() <= 0.0 {
+            None
+        } else {
+            Some(self.modeled_s / self.measured_total_s())
+        }
+    }
+}
+
+/// One prepared native runtime per TP rank, stepped by the serving
+/// simulators in place of the cost model (see the module docs).
+pub struct MeasuredEngine {
+    dev: DeviceSpec,
+    spec: LlmSpec,
+    tp: u64,
+    ranks: Vec<StepExecutor>,
+    /// Totals over every executed step.
+    pub stats: MeasuredStats,
+}
+
+impl MeasuredEngine {
+    /// Prepare `tp` ranks of `spec`'s weight-GEMM stream for `backend`,
+    /// each with its own seeded random quantized weights (seed + rank)
+    /// and drift instrumentation against `dev`/`calib`. `tp = 1` builds
+    /// the full un-sharded stream; `tp > 1` builds each rank's
+    /// `tp_gemms` share (errors on non-divisible head counts before
+    /// touching `tp_gemms`, which would panic).
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        dev: &DeviceSpec,
+        spec: &LlmSpec,
+        backend: StepBackend,
+        tp: u64,
+        group_size: usize,
+        m_max: usize,
+        seed: u64,
+        calib: &Calib,
+    ) -> Result<MeasuredEngine> {
+        anyhow::ensure!(tp >= 1, "tp must be >= 1, got {tp}");
+        anyhow::ensure!(
+            spec.n_heads % tp == 0 && spec.kv_heads % tp == 0,
+            "{}: {} heads / {} kv heads not divisible by tp={tp}",
+            spec.name,
+            spec.n_heads,
+            spec.kv_heads
+        );
+        let mut ranks = Vec::with_capacity(tp as usize);
+        for rank in 0..tp {
+            let mut e = if tp == 1 {
+                StepExecutor::new(spec, backend, Blocking::default(), group_size, m_max, seed)?
+            } else {
+                StepExecutor::new_tp(
+                    spec,
+                    tp,
+                    backend,
+                    Blocking::default(),
+                    group_size,
+                    m_max,
+                    seed + rank,
+                )?
+            };
+            e.enable_drift(dev, calib);
+            ranks.push(e);
+        }
+        Ok(MeasuredEngine {
+            dev: *dev,
+            spec: *spec,
+            tp,
+            ranks,
+            stats: MeasuredStats::default(),
+        })
+    }
+
+    /// TP group size the engine was built for.
+    pub fn tp_degree(&self) -> u64 {
+        self.tp
+    }
+
+    /// Largest step batch [`MeasuredEngine::execute`] accepts.
+    pub fn m_max(&self) -> usize {
+        self.ranks[0].m_max()
+    }
+
+    /// Backend every rank's GEMMs run through.
+    pub fn backend(&self) -> StepBackend {
+        self.ranks[0].backend_kind()
+    }
+
+    /// Execute one scheduler step of `m` tokens for real and return the
+    /// seconds to advance the serving clock by: the measured wall time
+    /// of the concurrent per-rank GEMM streams plus the modeled ring
+    /// collectives. `modeled_s` is the cost model's price for the same
+    /// step, accumulated as the side-by-side twin.
+    ///
+    /// # Panics
+    /// If `m` is outside `1..=m_max` — the serving policy must size the
+    /// engine to its token budget up front.
+    pub fn execute(&mut self, m: usize, modeled_s: f64) -> f64 {
+        assert!(
+            m >= 1 && m <= self.m_max(),
+            "measured step batch {m} outside 1..={}",
+            self.m_max()
+        );
+        let t0 = Instant::now();
+        let (rank0, rest) = self.ranks.split_at_mut(1);
+        if rest.is_empty() {
+            rank0[0].step(m).expect("batch within m_max");
+        } else {
+            // The group steps in lockstep: peers on scoped threads, rank
+            // 0 on the caller. All GEMM jobs funnel through the shared
+            // WorkerPool (ranks share this one CPU), so the wall time
+            // measured here is the group-wide step time.
+            std::thread::scope(|s| {
+                let peers: Vec<_> = rest
+                    .iter_mut()
+                    .map(|r| s.spawn(move || r.step(m).map(|_| ())))
+                    .collect();
+                rank0[0].step(m).expect("batch within m_max");
+                for p in peers {
+                    p.join().expect("rank thread panicked").expect("batch within m_max");
+                }
+            });
+        }
+        let wall = t0.elapsed().as_secs_f64().max(1e-12);
+        let comm = tp_step_comm_s(&self.dev, &self.spec, m as u64, self.tp);
+        self.stats.steps += 1;
+        self.stats.executed_tokens += m as u64;
+        self.stats.gemm_wall_s += wall;
+        self.stats.comm_s += comm;
+        self.stats.modeled_s += modeled_s;
+        wall + comm
+    }
+}
+
+/// The bursty workload scaled to the tiny model the measured runtime
+/// can serve: the same shape as [`BurstyWorkload::default`] (bursts,
+/// long prompts, heavy-tail generations), with every request fitting
+/// the tiny model's 64-token context, so a measured run stays in the
+/// single-digit-GFLOP range.
+pub fn measured_bursty(n: usize, seed: u64) -> Vec<Request> {
+    BurstyWorkload {
+        burst_size: (3, 8),
+        long_frac: 0.25,
+        tail_frac: 0.25,
+        short_prompt: (4, 10),
+        short_gen: (4, 12),
+        tail_gen: (24, 48),
+        long_prompt: (24, 40),
+        long_gen: (2, 8),
+    }
+    .offline(n, seed)
+}
+
+/// The shared-prefix workload scaled to the tiny model: same popularity
+/// skew and multi-turn structure as [`SharedPrefixWorkload::default`],
+/// with system prompts spanning several full cache blocks (the measured
+/// policy's 8-token blocks) while every conversation turn still fits
+/// the 64-token context.
+pub fn measured_shared_prefix(n: usize, seed: u64) -> Vec<Request> {
+    SharedPrefixWorkload {
+        n_system_prompts: 4,
+        zipf_s: 1.1,
+        sys_tokens: (32, 40),
+        user_tokens: (2, 4),
+        gen_tokens: (2, 4),
+        turns: (2, 2),
+    }
+    .offline(n, seed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::Gpu;
+    use crate::model::Model;
+
+    #[test]
+    fn executes_and_accumulates() {
+        let dev = Gpu::RtxA6000.spec();
+        let spec = Model::Tiny.spec();
+        let mut eng =
+            MeasuredEngine::new(&dev, &spec, StepBackend::Fused, 1, 128, 8, 7, &Calib::default())
+                .unwrap();
+        let dt = eng.execute(4, 1e-3);
+        assert!(dt > 0.0);
+        assert_eq!(eng.stats.steps, 1);
+        assert_eq!(eng.stats.executed_tokens, 4);
+        assert_eq!(eng.stats.comm_s, 0.0, "tp=1 has no collectives");
+        assert!((eng.stats.modeled_s - 1e-3).abs() < 1e-15);
+        assert!(eng.stats.modeled_over_measured().is_some());
+    }
+
+    #[test]
+    fn tp_group_prices_collectives_and_shards_flops() {
+        let dev = Gpu::A100.spec();
+        let spec = Model::Tiny.spec();
+        let calib = Calib::default();
+        let mut tp2 =
+            MeasuredEngine::new(&dev, &spec, StepBackend::Fused, 2, 128, 8, 7, &calib).unwrap();
+        let dt = tp2.execute(8, 0.0);
+        let comm = tp_step_comm_s(&dev, &spec, 8, 2);
+        assert!(comm > 0.0);
+        assert!(dt >= comm, "charged time must include the priced collectives");
+        assert_eq!(tp2.stats.comm_s, comm);
+    }
+
+    #[test]
+    fn rejects_indivisible_tp() {
+        let dev = Gpu::A100.spec();
+        let spec = Model::Tiny.spec(); // 4 heads
+        assert!(MeasuredEngine::new(
+            &dev,
+            &spec,
+            StepBackend::Fused,
+            3,
+            128,
+            8,
+            7,
+            &Calib::default()
+        )
+        .is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "outside")]
+    fn execute_rejects_oversized_batches() {
+        let dev = Gpu::RtxA6000.spec();
+        let spec = Model::Tiny.spec();
+        let mut eng =
+            MeasuredEngine::new(&dev, &spec, StepBackend::Fused, 1, 128, 4, 7, &Calib::default())
+                .unwrap();
+        eng.execute(5, 0.0);
+    }
+
+    #[test]
+    fn scaled_workloads_fit_the_tiny_context() {
+        let spec = Model::Tiny.spec();
+        for r in measured_bursty(64, 1).iter().chain(&measured_shared_prefix(64, 2)) {
+            assert!(
+                r.prompt_tokens + r.gen_tokens <= spec.max_seq,
+                "request {} needs {} tokens, context is {}",
+                r.id,
+                r.prompt_tokens + r.gen_tokens,
+                spec.max_seq
+            );
+        }
+    }
+}

@@ -27,11 +27,18 @@
 //!   pool grown by the weight bytes TP frees), the static
 //!   prefill-then-decode wave baseline, and the legacy step-admission
 //!   reference behind Table 1 / Fig. 8.
+//! * [`measured`] — the modeled-vs-measured bridge: a
+//!   [`measured::MeasuredEngine`] holds one native `StepExecutor` per TP
+//!   rank and executes each scheduler step's GEMM stream for real, so
+//!   `simserve`'s `*_measured` twins report throughput from this CPU's
+//!   kernels (ring collectives priced by `gpusim::collective`) while
+//!   feeding the drift ledger against the modeled twin.
 //! * [`metrics`] — throughput counters and TTFT/ITL histograms.
 
 pub mod batcher;
 pub mod engine;
 pub mod kv_cache;
+pub mod measured;
 pub mod metrics;
 pub mod prefix;
 pub mod request;
@@ -45,11 +52,13 @@ pub use batcher::{
 };
 pub use engine::{Completion, Engine, EngineConfig};
 pub use kv_cache::{blocks_for_device, KvBlockManager};
+pub use measured::{measured_bursty, measured_shared_prefix, MeasuredEngine, MeasuredStats};
 pub use metrics::{EngineMetrics, Histogram};
 pub use prefix::{chain_hash, BlockHash, PrefixCache, PrefixIndex, PrefixStats, ROOT_HASH};
 pub use request::{FinishReason, GenerationRequest, SeqState, Sequence};
 pub use router::{prefix_key, Policy, RouteDecision, Router};
 pub use simserve::{
-    simulate_continuous, simulate_serving, simulate_static_wave, simulate_tp,
-    ContinuousPolicy, ContinuousResult, SimPolicy, SimResult,
+    simulate_continuous, simulate_continuous_measured, simulate_serving, simulate_static_wave,
+    simulate_static_wave_measured, simulate_tp, simulate_tp_measured, ContinuousPolicy,
+    ContinuousResult, MeasuredRun, SimPolicy, SimResult,
 };

@@ -791,8 +791,12 @@ mod online_tests {
 // the static prefill-then-decode wave baseline it replaces.
 // ---------------------------------------------------------------------------
 
+use anyhow::Result;
+
 use super::batcher::{ChunkPolicy, ContinuousScheduler};
+use super::measured::{MeasuredEngine, MeasuredStats};
 use crate::gpusim::tp_step_latency;
+use crate::kernel::StepBackend;
 
 /// Policy for [`simulate_continuous`] / [`simulate_static_wave`].
 #[derive(Debug, Clone, Copy)]
@@ -825,6 +829,23 @@ impl Default for ContinuousPolicy {
             token_budget: 512,
             enable_prefix_cache: true,
             wave_prefill_tokens: 4096,
+        }
+    }
+}
+
+impl ContinuousPolicy {
+    /// Policy sized for the *measured* twins serving the tiny model on
+    /// the native runtime: a 128-token step budget (the executor's
+    /// buffers are allocated to it up front) and 8-token KV blocks so
+    /// the scaled-down shared-prefix prompts still span whole cached
+    /// blocks.
+    pub fn measured_default() -> Self {
+        ContinuousPolicy {
+            max_num_seqs: 64,
+            block_size: 8,
+            token_budget: 128,
+            wave_prefill_tokens: 128,
+            ..ContinuousPolicy::default()
         }
     }
 }
@@ -930,7 +951,7 @@ pub fn simulate_continuous(
     policy: &ContinuousPolicy,
     calib: &Calib,
 ) -> ContinuousResult {
-    run_continuous(dev, spec, kind, requests, policy, calib, 1)
+    run_continuous(dev, spec, kind, requests, policy, calib, 1, None)
 }
 
 /// Token budget for a `tp`-way group: scale the configured per-step budget
@@ -981,9 +1002,17 @@ pub fn simulate_tp(
         token_budget: tp_scaled_token_budget(dev, spec, kind, policy, tp, calib),
         ..*policy
     };
-    run_continuous(dev, spec, kind, requests, &scaled, calib, tp)
+    run_continuous(dev, spec, kind, requests, &scaled, calib, tp, None)
 }
 
+/// The continuous-batching loop behind both twins. With `measured:
+/// None` the clock advances by the modeled step latency (bit-identical
+/// to the pre-measured-runtime behavior); with `Some(engine)` every
+/// planned step executes its GEMM stream for real on the native runtime
+/// and the clock advances by the measured wall time plus priced
+/// collectives, while the modeled latency is still evaluated as the
+/// side-by-side twin (drift ledger, [`MeasuredStats::modeled_s`]).
+#[allow(clippy::too_many_arguments)]
 fn run_continuous(
     dev: &DeviceSpec,
     spec: &LlmSpec,
@@ -992,6 +1021,7 @@ fn run_continuous(
     policy: &ContinuousPolicy,
     calib: &Calib,
     tp_degree: u64,
+    mut measured: Option<&mut MeasuredEngine>,
 ) -> ContinuousResult {
     let blocks =
         tp_kv_pool_blocks(dev, spec, kind, policy.block_size, policy.headroom_frac, tp_degree);
@@ -1127,7 +1157,14 @@ fn run_continuous(
             batch.prefill_attn_ctx_tokens(),
             calib,
         );
-        clock += perf.total_s();
+        clock += match measured.as_deref_mut() {
+            None => perf.total_s(),
+            // Real compute: the step's mixed batch M through the
+            // per-rank GEMM streams. Prefix-cache hits already shrank
+            // the planned chunks, so cached tokens never reach the
+            // runtime.
+            Some(eng) => eng.execute(batch.step_tokens() as usize, perf.total_s()),
+        };
         steps += 1;
         step_tokens_sum += batch.step_tokens();
         prefill_chunks += batch.chunks.len() as u64;
@@ -1220,6 +1257,22 @@ pub fn simulate_static_wave(
     policy: &ContinuousPolicy,
     calib: &Calib,
 ) -> ContinuousResult {
+    run_static_wave(dev, spec, kind, requests, policy, calib, None)
+}
+
+/// The wave loop behind both twins (same `measured` contract as
+/// [`run_continuous`]): a measured run executes each whole-wave prefill
+/// call and each drain decode step as a real GEMM stream at that call's
+/// token count.
+fn run_static_wave(
+    dev: &DeviceSpec,
+    spec: &LlmSpec,
+    kind: KernelKind,
+    requests: &[Request],
+    policy: &ContinuousPolicy,
+    calib: &Calib,
+    mut measured: Option<&mut MeasuredEngine>,
+) -> ContinuousResult {
     let blocks = kv_pool_blocks(dev, spec, kind, policy.block_size, policy.headroom_frac);
     if blocks == 0 {
         return ContinuousResult { oom: true, ..Default::default() };
@@ -1275,7 +1328,11 @@ pub fn simulate_static_wave(
         let mut rem: u64 = wave.iter().map(|s| s.req.prompt_tokens).sum();
         while rem > 0 {
             let call = rem.min(policy.wave_prefill_tokens.max(1));
-            clock += prefill_latency(dev, spec, kind, call, calib);
+            let modeled = prefill_latency(dev, spec, kind, call, calib);
+            clock += match measured.as_deref_mut() {
+                None => modeled,
+                Some(eng) => eng.execute(call as usize, modeled),
+            };
             steps += 1;
             step_tokens_sum += call;
             rem -= call;
@@ -1300,7 +1357,11 @@ pub fn simulate_static_wave(
                 .map(|&i| wave[i].req.prompt_tokens + wave[i].generated)
                 .sum::<u64>()
                 / batch;
-            clock += decode_latency(dev, spec, kind, batch, mean_ctx, calib);
+            let modeled = decode_latency(dev, spec, kind, batch, mean_ctx, calib);
+            clock += match measured.as_deref_mut() {
+                None => modeled,
+                Some(eng) => eng.execute(batch as usize, modeled),
+            };
             steps += 1;
             step_tokens_sum += batch;
             decode_steps += 1;
@@ -1335,6 +1396,140 @@ pub fn simulate_static_wave(
         prefix_tokens_skipped: 0,
         prefix_evictions: 0,
     }
+}
+
+// ---------------------------------------------------------------------------
+// Measured twins: the same serving loops with the clock advanced by the
+// native StepExecutor runtime instead of the cost model.
+// ---------------------------------------------------------------------------
+
+/// Outcome of a measured serving run: the usual serving result (its
+/// `wall_s` and throughputs computed on the *measured* clock) plus the
+/// runtime's accumulated [`MeasuredStats`].
+#[derive(Debug, Clone, Copy)]
+pub struct MeasuredRun {
+    /// Serving result on the measured clock.
+    pub result: ContinuousResult,
+    /// Native-runtime totals (executed tokens, GEMM wall, priced comm,
+    /// modeled twin seconds).
+    pub stats: MeasuredStats,
+}
+
+impl MeasuredRun {
+    /// Render the serving result plus the measured-runtime summary.
+    pub fn report(&self) -> String {
+        let s = &self.stats;
+        let ratio = match s.modeled_over_measured() {
+            Some(v) => format!("{v:.3}"),
+            None => "n/a".to_string(),
+        };
+        let mut r = Report::new();
+        r.line(
+            "measured",
+            format!(
+                "{} steps, {} executed tokens, GEMM wall {:.4}s + comm {:.4}s",
+                s.steps, s.executed_tokens, s.gemm_wall_s, s.comm_s
+            ),
+        );
+        r.line(
+            "modeled twin",
+            format!("{:.4}s for the same steps (modeled/measured {ratio})", s.modeled_s),
+        );
+        format!("{}{}", self.result.report(), r.finish())
+    }
+}
+
+/// Executor batch capacity a measured run must be provisioned for: the
+/// scheduler's token budget, the wave baseline's prefill call cap, and
+/// the largest possible decode batch.
+fn measured_m_max(policy: &ContinuousPolicy) -> usize {
+    policy
+        .token_budget
+        .max(policy.wave_prefill_tokens)
+        .max(policy.max_num_seqs as u64) as usize
+}
+
+/// [`simulate_continuous`] with every step executed on the native
+/// runtime (see [`MeasuredEngine`]): same scheduler, same prefix cache,
+/// same admission — the clock advances by measured GEMM wall time, and
+/// every step also feeds the drift ledger against the `calib`-modeled
+/// twin. `group_size`/`seed` parameterize the random quantized weights.
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_continuous_measured(
+    dev: &DeviceSpec,
+    spec: &LlmSpec,
+    backend: StepBackend,
+    requests: &[Request],
+    policy: &ContinuousPolicy,
+    calib: &Calib,
+    group_size: usize,
+    seed: u64,
+) -> Result<MeasuredRun> {
+    simulate_tp_measured(dev, spec, backend, requests, policy, 1, calib, group_size, seed)
+}
+
+/// [`simulate_tp`]'s measured twin: `tp_degree` per-rank GEMM streams
+/// run concurrently (sharing this host's worker pool) with the ring
+/// collectives priced by [`crate::gpusim::tp_step_comm_s`]. Errors if
+/// `spec`'s head counts are not divisible by `tp_degree`.
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_tp_measured(
+    dev: &DeviceSpec,
+    spec: &LlmSpec,
+    backend: StepBackend,
+    requests: &[Request],
+    policy: &ContinuousPolicy,
+    tp_degree: u64,
+    calib: &Calib,
+    group_size: usize,
+    seed: u64,
+) -> Result<MeasuredRun> {
+    let tp = tp_degree.max(1);
+    let kind = backend.kernel_kind();
+    let scaled = ContinuousPolicy {
+        token_budget: tp_scaled_token_budget(dev, spec, kind, policy, tp, calib),
+        ..*policy
+    };
+    let mut eng = MeasuredEngine::new(
+        dev,
+        spec,
+        backend,
+        tp,
+        group_size,
+        measured_m_max(&scaled),
+        seed,
+        calib,
+    )?;
+    let result = run_continuous(dev, spec, kind, requests, &scaled, calib, tp, Some(&mut eng));
+    Ok(MeasuredRun { result, stats: eng.stats })
+}
+
+/// [`simulate_static_wave`]'s measured twin — the baseline a measured
+/// continuous run is compared against on equal (real) compute.
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_static_wave_measured(
+    dev: &DeviceSpec,
+    spec: &LlmSpec,
+    backend: StepBackend,
+    requests: &[Request],
+    policy: &ContinuousPolicy,
+    calib: &Calib,
+    group_size: usize,
+    seed: u64,
+) -> Result<MeasuredRun> {
+    let mut eng = MeasuredEngine::new(
+        dev,
+        spec,
+        backend,
+        1,
+        group_size,
+        measured_m_max(policy),
+        seed,
+        calib,
+    )?;
+    let kind = backend.kernel_kind();
+    let result = run_static_wave(dev, spec, kind, requests, policy, calib, Some(&mut eng));
+    Ok(MeasuredRun { result, stats: eng.stats })
 }
 
 #[cfg(test)]

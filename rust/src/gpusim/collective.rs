@@ -88,6 +88,23 @@ impl TpStepBreakdown {
     }
 }
 
+/// Collective time one TP step of `m` tokens spends synchronizing:
+/// `2 · n_layers` ring all-reduces of the `(m, d_model)` fp16
+/// activations plus one `(m, vocab)` logits all-gather for the
+/// column-sharded lm_head. Zero at `tp_degree = 1`.
+///
+/// This is exactly the `comm_s` term of [`tp_step_latency`] (same float
+/// operations in the same order); it is exposed separately so the
+/// measured serving runtime (`coordinator::measured`) can price its
+/// ring-collective stand-in identically while the GEMM stream runs for
+/// real.
+pub fn tp_step_comm_s(dev: &DeviceSpec, spec: &LlmSpec, m: u64, tp_degree: u64) -> f64 {
+    let activation_bytes = (m * spec.d_model) as f64 * 2.0;
+    let logits_bytes = (m * spec.vocab) as f64 * 2.0;
+    spec.n_layers as f64 * 2.0 * ring_all_reduce_s(dev, activation_bytes, tp_degree)
+        + ring_all_gather_s(dev, logits_bytes, tp_degree)
+}
+
 /// Latency of one mixed decode + chunked-prefill step on a `tp`-way
 /// tensor-parallel group of `dev` GPUs.
 ///
@@ -143,10 +160,7 @@ pub fn tp_step_latency(
     } else {
         0.0
     };
-    let activation_bytes = (m * spec.d_model) as f64 * 2.0;
-    let logits_bytes = (m * spec.vocab) as f64 * 2.0;
-    let comm_s = spec.n_layers as f64 * 2.0 * ring_all_reduce_s(dev, activation_bytes, tp_degree)
-        + ring_all_gather_s(dev, logits_bytes, tp_degree);
+    let comm_s = tp_step_comm_s(dev, spec, m, tp_degree);
     let other_s = spec.n_layers as f64 * 4.0 * calib.overhead_s;
     TpStepBreakdown {
         tp_degree,

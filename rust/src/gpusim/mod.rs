@@ -45,7 +45,9 @@ pub mod report;
 pub mod trace;
 
 pub use bank::BankCounter;
-pub use collective::{ring_all_gather_s, ring_all_reduce_s, tp_step_latency, TpStepBreakdown};
+pub use collective::{
+    ring_all_gather_s, ring_all_reduce_s, tp_step_comm_s, tp_step_latency, TpStepBreakdown,
+};
 pub use e2e::{
     decode_step_latency, max_batch_before_oom, mixed_step_latency, tokens_per_second,
     DecodeBreakdown, MixedStepBreakdown,

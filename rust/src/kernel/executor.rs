@@ -86,6 +86,17 @@ impl StepBackend {
             StepBackend::Writeback => "writeback",
         }
     }
+
+    /// The `gpusim` kernel this backend stands in for (fused → QUICK,
+    /// write-back → AWQ, naive → fp16 reference) — the modeled twin
+    /// drift accounting and the measured serving twins price against.
+    pub fn kernel_kind(self) -> KernelKind {
+        match self {
+            StepBackend::Naive => KernelKind::Fp16,
+            StepBackend::Fused => KernelKind::Quick,
+            StepBackend::Writeback => KernelKind::Awq,
+        }
+    }
 }
 
 /// One weight GEMM of the step, prepared for repeated execution.
@@ -145,6 +156,10 @@ pub struct StepExecutor {
     ys: Vec<Vec<f32>>,
     /// Measured seconds of each GEMM group in the most recent step.
     gemm_s: Vec<f64>,
+    /// Batch of the most recent completed step (0 before the first):
+    /// rows beyond it in `ys` are stale leftovers from earlier steps, so
+    /// [`StepExecutor::output`] refuses to serve past it.
+    last_m: usize,
     /// When set, every step feeds the modeled-vs-measured ledger.
     drift: Option<DriftConfig>,
 }
@@ -220,7 +235,7 @@ impl StepExecutor {
         }
         let ys = gemms.iter().map(|g| vec![0f32; m_max * g.n]).collect();
         let gemm_s = vec![0.0; gemms.len()];
-        Ok(StepExecutor { name, backend, m_max, gemms, xs, ys, gemm_s, drift: None })
+        Ok(StepExecutor { name, backend, m_max, gemms, xs, ys, gemm_s, last_m: 0, drift: None })
     }
 
     /// Start feeding the process-wide [`DriftAccountant`]: every later
@@ -229,13 +244,12 @@ impl StepExecutor {
     /// shape. The kernel kind is implied by the backend (fused → QUICK,
     /// write-back → AWQ, naive → fp16 reference).
     pub fn enable_drift(&mut self, dev: &DeviceSpec, calib: &Calib) {
-        let kind = match self.backend {
-            StepBackend::Naive => KernelKind::Fp16,
-            StepBackend::Fused => KernelKind::Quick,
-            StepBackend::Writeback => KernelKind::Awq,
-        };
-        self.drift =
-            Some(DriftConfig { dev: *dev, kind, calib: *calib, modeled_s: HashMap::new() });
+        self.drift = Some(DriftConfig {
+            dev: *dev,
+            kind: self.backend.kernel_kind(),
+            calib: *calib,
+            modeled_s: HashMap::new(),
+        });
     }
 
     /// Model/config name this executor was built from.
@@ -317,6 +331,7 @@ impl StepExecutor {
             }
         }
         let wall_s = t0.elapsed().as_secs_f64().max(1e-12);
+        self.last_m = m;
         let em = exec_metrics();
         em.steps.inc();
         em.gemm_calls.add(gemm_calls as u64);
@@ -342,9 +357,20 @@ impl StepExecutor {
         &self.xs[&k][..m * k]
     }
 
-    /// GEMM `gi`'s output from the most recent step that ran at batch
-    /// >= `m`, sliced to `m` rows (reference checks).
+    /// GEMM `gi`'s output from the most recent step, sliced to `m`
+    /// rows (reference checks).
+    ///
+    /// # Panics
+    /// If `m` exceeds the batch of the last executed step: rows past it
+    /// still hold values from an *earlier* step and must not be served
+    /// as current output.
     pub fn output(&self, gi: usize, m: usize) -> &[f32] {
+        assert!(
+            m <= self.last_m,
+            "output(gi={gi}, m={m}): last step ran at batch {}; rows {}..{m} are stale",
+            self.last_m,
+            self.last_m,
+        );
         &self.ys[gi][..m * self.gemms[gi].n]
     }
 }
@@ -391,6 +417,29 @@ mod tests {
         assert!(e.step(0).is_err());
         assert!(e.step(3).is_err());
         assert!(e.step(2).is_ok());
+    }
+
+    #[test]
+    #[should_panic(expected = "stale")]
+    fn output_refuses_rows_beyond_last_step() {
+        let spec = Model::Tiny.spec();
+        let mut e =
+            StepExecutor::new(&spec, StepBackend::Naive, Blocking::default(), 128, 4, 7).unwrap();
+        e.step(3).unwrap();
+        e.step(2).unwrap();
+        // Rows 2..3 still hold the step(3) values; serving them as the
+        // current step's output is the bug this guards against.
+        let _ = e.output(0, 3);
+    }
+
+    #[test]
+    fn output_serves_rows_up_to_last_step() {
+        let spec = Model::Tiny.spec();
+        let mut e =
+            StepExecutor::new(&spec, StepBackend::Naive, Blocking::default(), 128, 4, 7).unwrap();
+        e.step(3).unwrap();
+        assert_eq!(e.output(0, 3).len(), 3 * e.gemms()[0].n);
+        assert_eq!(e.output(0, 2).len(), 2 * e.gemms()[0].n);
     }
 
     #[test]

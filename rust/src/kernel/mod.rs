@@ -49,6 +49,13 @@
 //!   reports measured end-to-end tokens/sec (`simulate step`), the
 //!   number [`crate::gpusim::calibrate_step_writeback`] fits the GPU
 //!   model against.
+//!
+//! Since PR 7 this runtime also backs the *serving* path end to end: the
+//! `--measured` twins of `simulate continuous` / `simulate tp` hand every
+//! scheduler step's mixed chunked-prefill/decode batch to a
+//! [`StepExecutor`] per TP rank (`coordinator::measured`), so the plan
+//! cache sees the serving-path batch sizes — not just decode shapes — and
+//! the pool takes concurrent submissions from rank threads.
 
 mod blocking;
 mod executor;

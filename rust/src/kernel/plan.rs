@@ -20,6 +20,13 @@
 //! Blocking)`), mirroring `quant::ldmatrix_fragment_perm_memo`: the first
 //! call per shape builds, every later call — every subsequent decode
 //! step — is a map hit.
+//!
+//! The measured serving twins (`simulate continuous --measured`) widened
+//! the M population the cache serves: the continuous scheduler executes
+//! steps at its *actual* mixed chunked-prefill/decode token counts, so
+//! alongside the handful of decode shapes the cache now memoizes one
+//! plan per distinct step batch the serving policy produces (bounded by
+//! its token budget).
 
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex, OnceLock};

@@ -27,7 +27,11 @@
 //!
 //! One job runs at a time (submissions serialize on a mutex); the
 //! caller's thread always participates as slot 0, so a pool with `w`
-//! workers yields up to `w + 1`-way parallelism.
+//! workers yields up to `w + 1`-way parallelism. The measured
+//! tensor-parallel serving path leans on exactly this: each TP rank's
+//! `StepExecutor` submits from its own thread, the submit mutex
+//! interleaves their GEMM jobs, and the resulting group wall time is the
+//! ranks-share-one-CPU stand-in `coordinator::measured` reports.
 
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread::JoinHandle;

@@ -6,7 +6,11 @@
 //! * `simulate` — regenerate a paper experiment or serving extension
 //!   (fig3 | fig7 | fig8 | table1 | prefix | continuous | tp |
 //!   kernel-matmul | all) from the gpusim cost model (kernel-matmul:
-//!   measured on this CPU) and print paper-style rows.
+//!   measured on this CPU) and print paper-style rows. `continuous` and
+//!   `tp` accept `--measured`: serve the same workloads on the native
+//!   StepExecutor runtime (real GEMM streams on this CPU, modeled ring
+//!   collectives) and report measured tokens/sec next to the modeled
+//!   twin, feeding the drift ledger.
 //! * `bench`    — measured native-kernel benchmarks with structured JSON
 //!   trajectory output (`bench kernels` → `BENCH_kernels.json`).
 //! * `report`   — observability: print the metrics-registry snapshot and
@@ -50,15 +54,23 @@ USAGE:
         Defaults: --artifacts artifacts, --kernel quick, --requests 32, --seed 0.
 
     quick-infer simulate [fig3|fig7|fig8|table1|prefix|continuous|tp|kernel-matmul|step|all]
-                         [--model M] [--trace PATH]
+                         [--model M] [--trace PATH] [--measured] [--quick]
         Regenerate one experiment from the gpusim cost model (default: all).
           fig3        smem bank conflicts per kernel
           fig7        GEMM TOPS vs batch on all four devices
           fig8        end-to-end decode tokens/s vs batch (with OOM cutoffs)
           table1      vLLM-style serving throughput (A6000)
           prefix      automatic prefix cache on/off (extension)
-          continuous  continuous batching vs static waves (extension)
-          tp          tensor-parallel scaling sweep, tp 1|2|4|8 (extension)
+          continuous  continuous batching vs static waves (extension);
+                      --measured serves the tiny model on the native
+                      StepExecutor runtime instead of the cost model:
+                      real GEMM streams per mixed prefill/decode step,
+                      prefix hits skip real compute, drift ledger
+                      populated per shape (--quick shrinks the workload)
+          tp          tensor-parallel scaling sweep, tp 1|2|4|8 (extension);
+                      --measured runs tp ranks concurrently on the
+                      native runtime with gpusim-priced ring collectives
+                      (--quick limits degrees to 1|2)
           kernel-matmul  *measured* native fused vs write-back W4A16 GEMM
                       M-sweep on this CPU, 1024x1024 g128 (not part of
                       'all': host-dependent wall time, not a model query)
@@ -68,7 +80,8 @@ USAGE:
                       step-fitted gpusim calibration (not part of 'all')
 
     quick-infer bench    [kernels|check] [--k K] [--n N] [--group-size G]
-                         [--json PATH] [--quick] [--decode-sweep] [--trace PATH]
+                         [--json PATH] [--quick] [--decode-sweep] [--strict]
+                         [--trace PATH]
         Run a measured native-kernel benchmark and append a structured
         JSON point to the perf trajectory (default target: kernels).
           kernels     fused-from-interleaved vs dequant-to-scratch GEMM,
@@ -80,7 +93,9 @@ USAGE:
                       sweep.
           check       parse a previously written BENCH_kernels.json and
                       exit non-zero unless it is well-formed and its
-                      differential gate passed (CI post-step).
+                      differential gate passed (CI post-step). A
+                      committed '\"placeholder\": true' file passes with
+                      a warning; --strict rejects it (CI).
         Defaults: --k 4096, --n 4096, --group-size 128, --json writes
         BENCH_kernels.json at the repo root (nearest ancestor with
         ROADMAP.md/.git, else the cwd). --quick shrinks the layer to
@@ -132,7 +147,7 @@ struct Args {
 }
 
 /// Flags that take no value (presence means `true`).
-const BOOL_FLAGS: [&str; 2] = ["quick", "decode-sweep"];
+const BOOL_FLAGS: [&str; 4] = ["quick", "decode-sweep", "measured", "strict"];
 
 impl Args {
     fn parse(argv: &[String]) -> Result<Args> {
@@ -299,12 +314,35 @@ fn report_obs() -> Result<()> {
     let _ =
         simulate_serving(&dev, &spec, KernelKind::Quick, &shared, &SimPolicy::default(), &calib);
 
+    // A small *measured* continuous run: the serving path driven by the
+    // native StepExecutor runtime, feeding the drift ledger per shape.
+    use quick_infer::coordinator::measured::measured_bursty;
+    use quick_infer::coordinator::simserve::simulate_continuous_measured;
+    use quick_infer::kernel::StepBackend;
+    let tiny = Model::Tiny.spec();
+    let measured = simulate_continuous_measured(
+        &dev,
+        &tiny,
+        StepBackend::Fused,
+        &measured_bursty(8, 2030),
+        &ContinuousPolicy::measured_default(),
+        &calib,
+        128,
+        0x5EED,
+    )?;
+
     println!("\nsample continuous run ({} on {}, QUICK):", spec.name, dev.name);
     println!("{}", cont.report());
+    println!("\nsample measured continuous run ({} on this CPU, fused):", tiny.name);
+    println!("{}", measured.report());
     println!();
     println!("{}", Registry::global().report());
     println!();
     println!("{}", DriftAccountant::global().report());
+    anyhow::ensure!(
+        !DriftAccountant::global().is_empty(),
+        "drift ledger is empty after a measured run — the modeled-vs-measured seam is dark"
+    );
     Ok(())
 }
 
@@ -397,10 +435,24 @@ fn simulate(which: &str, args: &Args) -> Result<()> {
             figures::prefix_cache(out)?;
         }
         "continuous" => {
-            figures::continuous_batching(out)?;
+            if args.flags.contains_key("measured") {
+                let n = if args.flags.contains_key("quick") { 16 } else { 48 };
+                figures::measured_serving(out, n)?;
+            } else {
+                figures::continuous_batching(out)?;
+            }
         }
         "tp" => {
-            figures::tensor_parallel(out)?;
+            if args.flags.contains_key("measured") {
+                let (degrees, n): (&[u64], usize) = if args.flags.contains_key("quick") {
+                    (&[1, 2], 12)
+                } else {
+                    (&[1, 2, 4], 32)
+                };
+                figures::tensor_parallel_measured(out, degrees, n)?;
+            } else {
+                figures::tensor_parallel(out)?;
+            }
         }
         "kernel-matmul" => {
             figures::kernel_matmul(out)?;
@@ -439,7 +491,10 @@ fn bench_cmd(target: &str, args: &Args) -> Result<()> {
             args.flags.contains_key("quick"),
             args.flags.contains_key("decode-sweep"),
         ),
-        "check" => bench_check(args.positional.get(1).map(String::as_str)),
+        "check" => bench_check(
+            args.positional.get(1).map(String::as_str),
+            args.flags.contains_key("strict"),
+        ),
         other => bail!("unknown bench target '{other}' — valid targets: {BENCH_TARGETS}"),
     }
 }
@@ -612,7 +667,7 @@ fn bench_kernels(
 /// (default: the repo-root trajectory path) and fail unless it parses
 /// and its differential gate passed — the CI step that proves the
 /// artifact the job uploads is a valid trajectory point.
-fn bench_check(path: Option<&str>) -> Result<()> {
+fn bench_check(path: Option<&str>, strict: bool) -> Result<()> {
     use quick_infer::util::Json;
     let path = match path {
         Some(p) => std::path::PathBuf::from(p),
@@ -621,6 +676,26 @@ fn bench_check(path: Option<&str>) -> Result<()> {
     let text = std::fs::read_to_string(&path)
         .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
     let doc = Json::parse(text.trim())?;
+    // The committed trajectory file may be an explicit placeholder from
+    // an environment that never ran the bench (no toolchain). That is a
+    // documented state, not a broken artifact — accept it with a warning
+    // so a fresh clone passes the README's check. CI passes --strict:
+    // there the bench just ran, so a placeholder means the pipeline is
+    // broken and must fail.
+    if matches!(doc.get("placeholder"), Some(Json::Bool(true))) {
+        anyhow::ensure!(
+            !strict,
+            "{} is a placeholder (no measured runs) but --strict requires a real snapshot",
+            path.display()
+        );
+        println!(
+            "warning: {} is a committed placeholder with no measured runs; run \
+             `cargo run --release -- bench kernels` to record real numbers \
+             (CI validates with --strict)",
+            path.display()
+        );
+        return Ok(());
+    }
     let runs = doc.req("runs")?.as_arr()?;
     anyhow::ensure!(!runs.is_empty(), "bench JSON records no runs");
     let gate = doc.req("differential_gate")?;

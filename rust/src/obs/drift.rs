@@ -35,8 +35,18 @@ pub struct DriftStat {
 impl DriftStat {
     /// Running modeled/measured ratio (1.0 = the model tracks the
     /// measurement exactly; 0 when nothing has been measured).
+    ///
+    /// Prefer [`DriftStat::ratio_opt`] when rendering: the 0.0 returned
+    /// here for an unmeasured shape is a sentinel, indistinguishable
+    /// from a catastrophic model overshoot.
     pub fn ratio(&self) -> f64 {
-        if self.measured_s <= 0.0 { 0.0 } else { self.modeled_s / self.measured_s }
+        self.ratio_opt().unwrap_or(0.0)
+    }
+
+    /// Running modeled/measured ratio, or `None` when nothing has been
+    /// measured for this shape.
+    pub fn ratio_opt(&self) -> Option<f64> {
+        if self.measured_s <= 0.0 { None } else { Some(self.modeled_s / self.measured_s) }
     }
 }
 
@@ -96,7 +106,9 @@ impl DriftAccountant {
     }
 
     /// Deterministic JSON: an array of `{m, k, n, modeled_s,
-    /// measured_s, samples, ratio}` objects sorted by shape.
+    /// measured_s, samples, ratio}` objects sorted by shape. The
+    /// `ratio` key is omitted for a shape with no measured time — a
+    /// sentinel 0.0 would read as extreme model overshoot.
     pub fn json(&self) -> Json {
         Json::Arr(
             self.snapshot()
@@ -109,7 +121,9 @@ impl DriftAccountant {
                     o.insert("modeled_s".to_string(), Json::Num(s.modeled_s));
                     o.insert("measured_s".to_string(), Json::Num(s.measured_s));
                     o.insert("samples".to_string(), Json::Num(s.samples as f64));
-                    o.insert("ratio".to_string(), Json::Num(s.ratio()));
+                    if let Some(ratio) = s.ratio_opt() {
+                        o.insert("ratio".to_string(), Json::Num(ratio));
+                    }
                     Json::Obj(o)
                 })
                 .collect(),
@@ -126,13 +140,16 @@ impl DriftAccountant {
             r.metric("(none)", "no instrumented steps recorded");
         }
         for ((m, k, n), s) in snap {
+            let ratio = match s.ratio_opt() {
+                Some(v) => format!("{v:.3}"),
+                None => "n/a".to_string(),
+            };
             r.metric(
                 &format!("m{m} {k}x{n}"),
                 format!(
-                    "modeled {:>9.1} us, measured {:>9.1} us, ratio {:.3} (n={})",
+                    "modeled {:>9.1} us, measured {:>9.1} us, ratio {ratio} (n={})",
                     s.modeled_s / s.samples.max(1) as f64 * 1e6,
                     s.measured_s / s.samples.max(1) as f64 * 1e6,
-                    s.ratio(),
                     s.samples
                 ),
             );
@@ -172,7 +189,22 @@ mod tests {
     #[test]
     fn empty_ratio_is_zero() {
         assert_eq!(DriftStat::default().ratio(), 0.0);
+        assert_eq!(DriftStat::default().ratio_opt(), None);
         let text = DriftAccountant::new().report();
         assert!(text.contains("no instrumented steps"), "{text}");
+    }
+
+    #[test]
+    fn unmeasured_shape_renders_na_and_omits_json_ratio() {
+        let d = DriftAccountant::new();
+        d.record((4, 128, 128), 5e-6, 0.0, 0);
+        let text = d.report();
+        assert!(text.contains("ratio n/a"), "{text}");
+        assert!(!text.contains("ratio 0.000"), "{text}");
+        let doc = Json::parse(&d.json().to_string()).unwrap();
+        let arr = doc.as_arr().unwrap();
+        assert_eq!(arr.len(), 1);
+        assert!(arr[0].get("ratio").is_none(), "sentinel ratio must be omitted");
+        assert!(arr[0].get("modeled_s").is_some());
     }
 }
