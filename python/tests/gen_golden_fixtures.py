@@ -37,13 +37,80 @@ CASES = [
     dict(k=128, n=64, seed=4, group_size=128),
 ]
 
+# Quantized-KV cases (``rust/src/quant/kv.rs`` + the fused attention
+# microkernel in ``rust/src/kernel/attention.rs``): per-token head-dim-group
+# asymmetric quantization, packed little-endian into u32 words. K and V bit
+# widths may differ; the first case also pins the degenerate constant-group
+# (``s = 1.0``) path. Inputs are stored as f32 bit patterns, so the Rust
+# side reproduces packing/metadata *bit-exactly* with no RNG coupling, and
+# the f64-reference attention output is tolerance-checked.
+KV_CASES = [
+    dict(seq=40, d=64, group=32, kbits=4, vbits=4, m=4, seed=101),
+    dict(seq=24, d=32, group=16, kbits=8, vbits=8, m=2, seed=102),
+    dict(seq=9, d=64, group=64, kbits=8, vbits=4, m=3, seed=103),
+]
+
 
 def words_hex(a: np.ndarray) -> str:
     return " ".join(f"{w:08x}" for w in np.asarray(a, dtype=np.uint32).reshape(-1))
 
 
+def f32_words_hex(a: np.ndarray) -> str:
+    """f32 buffer rendered as 8-hex-digit IEEE-754 bit patterns."""
+    flat = np.ascontiguousarray(a, dtype=np.float32).reshape(-1)
+    return words_hex(flat.view(np.uint32))
+
+
 def nibbles_hex(a: np.ndarray) -> str:
     return "".join(f"{int(v):x}" for v in np.asarray(a).reshape(-1))
+
+
+def quantize_kv_np(x: np.ndarray, group: int, bits: int):
+    """Bit-exact numpy mirror of Rust ``quant::kv::quantize_kv``.
+
+    All arithmetic stays in float32 and ``np.rint`` rounds half-to-even,
+    matching Rust's ``round_ties_even`` — the packed words, scales and
+    zeros must agree with the Rust implementation bit for bit.
+    """
+    seq, d = x.shape
+    assert bits in (4, 8) and group % 8 == 0 and d % group == 0
+    qmax = np.float32((1 << bits) - 1)
+    cpw = 32 // bits
+    g = x.reshape(seq, d // group, group)
+    lo = g.min(axis=2)
+    hi = g.max(axis=2)
+    s = (hi - lo) / qmax
+    s = np.where(s <= np.float32(0.0), np.float32(1.0), s).astype(np.float32)
+    z = np.clip(np.rint(-lo / s), np.float32(0.0), qmax).astype(np.float32)
+    q = np.clip(np.rint(g / s[:, :, None]) + z[:, :, None], np.float32(0.0), qmax)
+    q = q.reshape(seq, d).astype(np.uint32)
+    words = np.zeros((seq, d // cpw), np.uint32)
+    for j in range(d):
+        words[:, j // cpw] |= q[:, j] << np.uint32(bits * (j % cpw))
+    return words, s, z
+
+
+def dequantize_kv_np(words, scales, zeros, seq, d, group, bits):
+    """Numpy mirror of the Rust scalar KV row decoder: ``(q - z) * s``."""
+    cpw = 32 // bits
+    mask = np.uint32((1 << bits) - 1)
+    q = np.zeros((seq, d), np.float32)
+    for j in range(d):
+        q[:, j] = ((words[:, j // cpw] >> np.uint32(bits * (j % cpw))) & mask).astype(
+            np.float32
+        )
+    gi = np.arange(d) // group
+    return (q - zeros[:, gi]) * scales[:, gi]
+
+
+def naive_attention_np(q, k, v, scale):
+    """f64 reference: ``softmax(q k^T * scale) v``, cast to f32 at the end
+    (mirrors Rust ``kernel::naive_attention`` up to f64 summation order)."""
+    s = (q.astype(np.float64) @ k.astype(np.float64).T) * float(scale)
+    s -= s.max(axis=1, keepdims=True)
+    p = np.exp(s)
+    out = (p @ v.astype(np.float64)) / p.sum(axis=1, keepdims=True)
+    return out.astype(np.float32)
 
 
 def main(out_dir: str) -> None:
@@ -81,6 +148,53 @@ def main(out_dir: str) -> None:
             f.write(f"quick {words_hex(quick)}\n")
             f.write(f"qzeros {words_hex(qzeros)}\n")
             f.write(f"perm {' '.join(str(int(p)) for p in perm)}\n")
+        print(f"wrote {path}")
+
+    for c in KV_CASES:
+        seq, d, gs = c["seq"], c["d"], c["group"]
+        kb, vb, m, seed = c["kbits"], c["vbits"], c["m"], c["seed"]
+        rng = np.random.default_rng(seed)
+        k = rng.uniform(-1.0, 1.0, size=(seq, d)).astype(np.float32)
+        v = rng.uniform(-1.0, 1.0, size=(seq, d)).astype(np.float32)
+        q = rng.uniform(-1.0, 1.0, size=(m, d)).astype(np.float32)
+        # Pin the degenerate path: an all-equal group quantizes with s = 1.
+        k[0, :gs] = np.float32(0.5)
+
+        kw, ks, kz = quantize_kv_np(k, gs, kb)
+        vw, vs, vz = quantize_kv_np(v, gs, vb)
+        kd = dequantize_kv_np(kw, ks, kz, seq, d, gs, kb)
+        vd = dequantize_kv_np(vw, vs, vz, seq, d, gs, vb)
+
+        # The reference must round-trip within half a quantization step.
+        gi = np.arange(d) // gs
+        assert np.all(np.abs(k - kd) <= ks[:, gi] * 0.5 + 1e-5)
+        assert np.all(np.abs(v - vd) <= vs[:, gi] * 0.5 + 1e-5)
+
+        scale = np.float32(1.0) / np.sqrt(np.float32(d))
+        attn = naive_attention_np(q, kd, vd, scale)
+
+        path = out / f"kv_s{seq}_d{d}_b{kb}{vb}.txt"
+        with open(path, "w") as f:
+            f.write("# golden KV-quant vectors — generated by "
+                    "python/tests/gen_golden_fixtures.py\n")
+            f.write("# f32 buffers are IEEE-754 bit patterns; do not edit by hand\n")
+            f.write(f"seq {seq}\n")
+            f.write(f"d {d}\n")
+            f.write(f"group {gs}\n")
+            f.write(f"kbits {kb}\n")
+            f.write(f"vbits {vb}\n")
+            f.write(f"m {m}\n")
+            f.write(f"seed {seed}\n")
+            f.write(f"q {f32_words_hex(q)}\n")
+            f.write(f"k {f32_words_hex(k)}\n")
+            f.write(f"v {f32_words_hex(v)}\n")
+            f.write(f"k_words {words_hex(kw)}\n")
+            f.write(f"k_scales {f32_words_hex(ks)}\n")
+            f.write(f"k_zeros {f32_words_hex(kz)}\n")
+            f.write(f"v_words {words_hex(vw)}\n")
+            f.write(f"v_scales {f32_words_hex(vs)}\n")
+            f.write(f"v_zeros {f32_words_hex(vz)}\n")
+            f.write(f"attn {f32_words_hex(attn)}\n")
         print(f"wrote {path}")
 
 

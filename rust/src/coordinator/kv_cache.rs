@@ -27,13 +27,26 @@ use std::collections::{HashMap, HashSet};
 
 use anyhow::{bail, ensure, Result};
 
+use crate::quant::KvPrecision;
+
 /// Sequence identifier.
 pub type SeqId = u64;
 
 /// Fixed-capacity block pool + per-sequence block tables.
+///
+/// Blocks are fixed-size *byte slabs* sized to hold `block_size` f16
+/// tokens. A sequence stored at a quantized [`KvPrecision`] packs more
+/// tokens into the same slab ([`KvPrecision::tokens_per_block`]), so the
+/// same pool admits ~2x (8-bit) to ~3.4x (4-bit) the resident tokens —
+/// while the refcount/COW/prefix machinery, which only moves whole
+/// slabs, is untouched. Each sequence records the precision it was
+/// allocated at; admission ([`KvBlockManager::can_admit`]) prices the
+/// pool-default precision set by [`KvBlockManager::with_precision`].
 #[derive(Debug)]
 pub struct KvBlockManager {
     block_size: u64,
+    /// Pool-default storage precision for new sequences.
+    precision: KvPrecision,
     total_blocks: u64,
     free: Vec<u32>,
     /// Per-block count of sequences referencing it.
@@ -55,6 +68,9 @@ pub struct BlockTable {
     pub blocks: Vec<u32>,
     /// Tokens currently stored.
     pub tokens: u64,
+    /// Storage precision this sequence's blocks were packed at (fixed at
+    /// allocation; forks inherit it).
+    pub precision: KvPrecision,
 }
 
 impl KvBlockManager {
@@ -63,6 +79,7 @@ impl KvBlockManager {
         assert!((0.0..0.5).contains(&watermark_frac));
         KvBlockManager {
             block_size,
+            precision: KvPrecision::F16,
             total_blocks,
             free: (0..total_blocks as u32).rev().collect(),
             refs: vec![0; total_blocks as usize],
@@ -102,8 +119,33 @@ impl KvBlockManager {
         self.cow_forks
     }
 
+    /// Set the pool-default [`KvPrecision`] for sequences allocated after
+    /// this call (builder-style; `F16` if never called, which reproduces
+    /// the pre-quantization block math bit-for-bit).
+    pub fn with_precision(mut self, precision: KvPrecision) -> Self {
+        self.precision = precision;
+        self
+    }
+
+    /// The pool-default storage precision.
+    pub fn precision(&self) -> KvPrecision {
+        self.precision
+    }
+
+    /// Tokens one slab holds at the pool-default precision.
+    pub fn tokens_per_block(&self) -> u64 {
+        self.precision.tokens_per_block(self.block_size)
+    }
+
+    /// Blocks a sequence of `tokens` needs at the pool-default precision.
     pub fn blocks_needed(&self, tokens: u64) -> u64 {
-        tokens.div_ceil(self.block_size)
+        self.blocks_needed_at(tokens, self.precision)
+    }
+
+    /// Blocks a sequence of `tokens` needs at an explicit precision —
+    /// the per-precision byte cost, in slab units.
+    pub fn blocks_needed_at(&self, tokens: u64, precision: KvPrecision) -> u64 {
+        tokens.div_ceil(precision.tokens_per_block(self.block_size))
     }
 
     pub fn ref_count(&self, block: u32) -> u32 {
@@ -121,15 +163,34 @@ impl KvBlockManager {
 
     /// Admission check: can a new sequence of `prompt_tokens` be allocated
     /// without dipping into the decode watermark? Idle cached blocks count
-    /// as capacity — eviction reclaims them on demand.
+    /// as capacity — eviction reclaims them on demand. Prices the
+    /// pool-default precision.
     pub fn can_admit(&self, prompt_tokens: u64) -> bool {
-        self.blocks_needed(prompt_tokens.max(1)) + self.watermark_blocks
+        self.can_admit_at(prompt_tokens, self.precision)
+    }
+
+    /// [`Self::can_admit`] at an explicit per-sequence precision.
+    pub fn can_admit_at(&self, prompt_tokens: u64, precision: KvPrecision) -> bool {
+        self.blocks_needed_at(prompt_tokens.max(1), precision) + self.watermark_blocks
             <= self.free_blocks() + self.cached_idle
     }
 
-    /// Allocate the block table for a new sequence's prompt.
+    /// Allocate the block table for a new sequence's prompt at the
+    /// pool-default precision.
     pub fn allocate(&mut self, seq: SeqId, prompt_tokens: u64) -> Result<()> {
         self.allocate_shared(seq, prompt_tokens, &[])
+    }
+
+    /// [`Self::allocate`] at an explicit per-sequence precision (mixed
+    /// pools: e.g. latency-critical sequences kept at f16 next to
+    /// quantized bulk traffic).
+    pub fn allocate_with_precision(
+        &mut self,
+        seq: SeqId,
+        prompt_tokens: u64,
+        precision: KvPrecision,
+    ) -> Result<()> {
+        self.allocate_shared_at(seq, prompt_tokens, &[], precision)
     }
 
     /// Allocate a new sequence whose first `shared.len()` blocks are
@@ -142,10 +203,24 @@ impl KvBlockManager {
         prompt_tokens: u64,
         shared: &[u32],
     ) -> Result<()> {
+        self.allocate_shared_at(seq, prompt_tokens, shared, self.precision)
+    }
+
+    /// [`Self::allocate_shared`] at an explicit per-sequence precision.
+    /// Shared (leased) blocks must have been packed at the same precision
+    /// the new sequence reads them at — the prefix cache guarantees this
+    /// by keying pools, not blocks; here it is the caller's contract.
+    pub fn allocate_shared_at(
+        &mut self,
+        seq: SeqId,
+        prompt_tokens: u64,
+        shared: &[u32],
+        precision: KvPrecision,
+    ) -> Result<()> {
         if self.tables.contains_key(&seq) {
             bail!("sequence {seq} already has a block table");
         }
-        let need = self.blocks_needed(prompt_tokens.max(1));
+        let need = self.blocks_needed_at(prompt_tokens.max(1), precision);
         ensure!(
             shared.len() as u64 <= need,
             "shared prefix ({} blocks) longer than the sequence needs ({need})",
@@ -177,7 +252,7 @@ impl KvBlockManager {
             self.refs[b as usize] += 1;
             blocks.push(b);
         }
-        self.tables.insert(seq, BlockTable { blocks, tokens: prompt_tokens });
+        self.tables.insert(seq, BlockTable { blocks, tokens: prompt_tokens, precision });
         Ok(())
     }
 
@@ -207,7 +282,8 @@ impl KvBlockManager {
             Some(t) => t,
             None => bail!("seal: unknown sequence {seq}"),
         };
-        let full = (table.tokens / self.block_size) as usize;
+        let tpb = table.precision.tokens_per_block(self.block_size);
+        let full = (table.tokens / tpb) as usize;
         Ok(table.blocks[..full.min(table.blocks.len())].to_vec())
     }
 
@@ -221,7 +297,7 @@ impl KvBlockManager {
             None => bail!("append_token: unknown sequence {seq}"),
         };
         table.tokens += 1;
-        let need = table.tokens.div_ceil(bs);
+        let need = table.tokens.div_ceil(table.precision.tokens_per_block(bs));
         if need > table.blocks.len() as u64 {
             // Crossed a block boundary: claim a fresh block.
             match self.free.pop() {
@@ -339,7 +415,8 @@ impl KvBlockManager {
                 counted[b as usize] += 1;
             }
             ensure!(
-                t.blocks.len() as u64 >= t.tokens.div_ceil(self.block_size),
+                t.blocks.len() as u64
+                    >= t.tokens.div_ceil(t.precision.tokens_per_block(self.block_size)),
                 "seq {seq} has fewer blocks than tokens need"
             );
         }
@@ -553,6 +630,66 @@ mod tests {
         m.free_seq(1).unwrap();
         m.evict(b).unwrap();
         assert!(m.evict(b).is_err(), "already evicted");
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn watermark_math_prices_per_precision_byte_cost() {
+        // Same byte pool (20 slabs sized for 16 f16 tokens, watermark 5
+        // slabs) at each storage precision: admission must count blocks
+        // in *slab* units derived from the precision's byte cost, so the
+        // quantized pools admit proportionally more tokens before the
+        // watermark bites.
+        for (prec, tpb) in [
+            (KvPrecision::F16, 16u64),
+            (KvPrecision::Int8, 29),
+            (KvPrecision::Int4, 53),
+        ] {
+            let m = KvBlockManager::new(20, 16, 0.25).with_precision(prec);
+            assert_eq!(m.tokens_per_block(), tpb, "{prec:?}");
+            assert_eq!(m.blocks_needed(tpb * 3 + 1), 4, "{prec:?}");
+            // 14 blocks + 5 watermark fits in 20; 16 + 5 does not.
+            assert!(m.can_admit(tpb * 14), "{prec:?}");
+            assert!(!m.can_admit(tpb * 16), "{prec:?}");
+        }
+    }
+
+    #[test]
+    fn mixed_precision_sequences_share_one_pool() {
+        let mut m = KvBlockManager::new(8, 4, 0.0); // slabs of 4 f16 tokens
+        let tpb4 = KvPrecision::Int4.tokens_per_block(4); // 13 tokens/slab
+        assert_eq!(tpb4, 13);
+        m.allocate(1, 8).unwrap(); // f16 default: 2 slabs
+        m.allocate_with_precision(2, 20, KvPrecision::Int4).unwrap(); // 2 slabs
+        assert_eq!(m.allocated_blocks(), 4);
+        assert_eq!(m.table(1).unwrap().precision, KvPrecision::F16);
+        assert_eq!(m.table(2).unwrap().precision, KvPrecision::Int4);
+        m.check_invariants().unwrap();
+        // Per-sequence boundary math: the f16 seq claims a slab on its
+        // 9th token; the int4 seq has 13-token slabs, so token 21 of 26
+        // capacity stays in place.
+        assert!(m.append_token(1).unwrap());
+        assert!(!m.append_token(2).unwrap());
+        // Admission at an explicit precision prices that precision.
+        assert!(m.can_admit_at(13 * 3, KvPrecision::Int4));
+        assert!(!m.can_admit_at(13 * 3, KvPrecision::F16));
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn quantized_pool_boundary_and_cow_respect_tokens_per_block() {
+        let mut m = KvBlockManager::new(8, 4, 0.0).with_precision(KvPrecision::Int8);
+        let tpb = KvPrecision::Int8.tokens_per_block(4); // 7 tokens/slab
+        assert_eq!(tpb, 7);
+        m.allocate(1, tpb).unwrap(); // exactly one full slab
+        assert_eq!(m.allocated_blocks(), 1);
+        assert_eq!(m.seal(1).unwrap().len(), 1);
+        assert!(m.append_token(1).unwrap(), "boundary claims a slab");
+        // Fork shares the partial tail; the child's append copy-on-writes.
+        m.fork(1, 2).unwrap();
+        assert!(m.append_token(2).unwrap());
+        assert_eq!(m.cow_forks(), 1);
+        assert_eq!(m.table(2).unwrap().precision, KvPrecision::Int8);
         m.check_invariants().unwrap();
     }
 

@@ -15,11 +15,17 @@
 //!   + gpusim-priced ring collectives (tp_step_comm_s, 0 at tp = 1)
 //! ```
 //!
-//! Attention and non-GEMM glue are *not* executed (the native runtime
-//! is a weight-GEMM runtime), so the measured clock deliberately covers
-//! only the terms the runtime can measure; the modeled step latency is
-//! still evaluated side by side and accumulated in
-//! [`MeasuredStats::modeled_s`], and per-GEMM drift feeds the global
+//! Since PR 8 the decode-attention term is executed too: each rank's
+//! executor runs the fused quantized-KV attention kernel
+//! (`kernel::attn_quant_fused`, or the dense-tiled baseline at
+//! [`KvPrecision::F16`]) once per per-rank (layer × KV head) at a fixed
+//! representative context of [`MEASURED_ATTN_CTX`] tokens, inside the
+//! same step wall clock — so the measured clock now covers GEMMs *and*
+//! attention, and the drift ledger gains `(m, ctx, head_dim)` rows
+//! priced against `gpusim::kv_attn_term`. Non-GEMM elementwise glue
+//! remains modeled only. The modeled step latency is still evaluated
+//! side by side and accumulated in [`MeasuredStats::modeled_s`], and
+//! per-GEMM drift feeds the global
 //! [`DriftAccountant`](crate::obs::DriftAccountant) ledger via
 //! `StepExecutor::enable_drift`. Prefix-cache hits shrink the
 //! scheduler's planned chunks, so cached tokens never reach
@@ -38,7 +44,15 @@ use std::time::Instant;
 use crate::gpusim::{tp_step_comm_s, Calib, DeviceSpec};
 use crate::kernel::{Blocking, StepBackend, StepExecutor};
 use crate::model::LlmSpec;
+use crate::quant::KvPrecision;
 use crate::workload::{BurstyWorkload, Request, SharedPrefixWorkload};
+
+/// Representative decode context length (KV rows per lane) the measured
+/// attention term runs at. Deliberately *not* a weight dimension of any
+/// tabulated model, so the `(m, ctx, head_dim)` drift keys never
+/// collide with the GEMM `(m, k, n)` keys, and small enough to fit the
+/// tiny model's 64-token context.
+pub const MEASURED_ATTN_CTX: usize = 48;
 
 /// Running totals of a measured serving run.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
@@ -91,10 +105,12 @@ pub struct MeasuredEngine {
 impl MeasuredEngine {
     /// Prepare `tp` ranks of `spec`'s weight-GEMM stream for `backend`,
     /// each with its own seeded random quantized weights (seed + rank)
-    /// and drift instrumentation against `dev`/`calib`. `tp = 1` builds
-    /// the full un-sharded stream; `tp > 1` builds each rank's
-    /// `tp_gemms` share (errors on non-divisible head counts before
-    /// touching `tp_gemms`, which would panic).
+    /// and drift instrumentation against `dev`/`calib`, plus the
+    /// measured decode-attention term over `kv_precision` KV at
+    /// [`MEASURED_ATTN_CTX`] tokens. `tp = 1` builds the full un-sharded
+    /// stream; `tp > 1` builds each rank's `tp_gemms` share (errors on
+    /// non-divisible head counts before touching `tp_gemms`, which
+    /// would panic).
     #[allow(clippy::too_many_arguments)]
     pub fn new(
         dev: &DeviceSpec,
@@ -104,6 +120,7 @@ impl MeasuredEngine {
         group_size: usize,
         m_max: usize,
         seed: u64,
+        kv_precision: KvPrecision,
         calib: &Calib,
     ) -> Result<MeasuredEngine> {
         anyhow::ensure!(tp >= 1, "tp must be >= 1, got {tp}");
@@ -130,6 +147,13 @@ impl MeasuredEngine {
                 )?
             };
             e.enable_drift(dev, calib);
+            e.enable_attention(
+                spec,
+                tp,
+                kv_precision,
+                MEASURED_ATTN_CTX,
+                seed.wrapping_add(0xA77).wrapping_add(rank),
+            )?;
             ranks.push(e);
         }
         Ok(MeasuredEngine {
@@ -248,11 +272,22 @@ mod tests {
     fn executes_and_accumulates() {
         let dev = Gpu::RtxA6000.spec();
         let spec = Model::Tiny.spec();
-        let mut eng =
-            MeasuredEngine::new(&dev, &spec, StepBackend::Fused, 1, 128, 8, 7, &Calib::default())
-                .unwrap();
+        let mut eng = MeasuredEngine::new(
+            &dev,
+            &spec,
+            StepBackend::Fused,
+            1,
+            128,
+            8,
+            7,
+            KvPrecision::Int4,
+            &Calib::default(),
+        )
+        .unwrap();
         let dt = eng.execute(4, 1e-3);
         assert!(dt > 0.0);
+        assert!(eng.ranks[0].attention_enabled(), "measured steps execute attention");
+        assert!(eng.ranks[0].last_attn_s() > 0.0, "attention term timed");
         assert_eq!(eng.stats.steps, 1);
         assert_eq!(eng.stats.executed_tokens, 4);
         assert_eq!(eng.stats.comm_s, 0.0, "tp=1 has no collectives");
@@ -265,8 +300,18 @@ mod tests {
         let dev = Gpu::A100.spec();
         let spec = Model::Tiny.spec();
         let calib = Calib::default();
-        let mut tp2 =
-            MeasuredEngine::new(&dev, &spec, StepBackend::Fused, 2, 128, 8, 7, &calib).unwrap();
+        let mut tp2 = MeasuredEngine::new(
+            &dev,
+            &spec,
+            StepBackend::Fused,
+            2,
+            128,
+            8,
+            7,
+            KvPrecision::F16,
+            &calib,
+        )
+        .unwrap();
         let dt = tp2.execute(8, 0.0);
         let comm = tp_step_comm_s(&dev, &spec, 8, 2);
         assert!(comm > 0.0);
@@ -286,6 +331,7 @@ mod tests {
             128,
             8,
             7,
+            KvPrecision::F16,
             &Calib::default()
         )
         .is_err());
@@ -296,9 +342,18 @@ mod tests {
     fn execute_rejects_oversized_batches() {
         let dev = Gpu::RtxA6000.spec();
         let spec = Model::Tiny.spec();
-        let mut eng =
-            MeasuredEngine::new(&dev, &spec, StepBackend::Fused, 1, 128, 4, 7, &Calib::default())
-                .unwrap();
+        let mut eng = MeasuredEngine::new(
+            &dev,
+            &spec,
+            StepBackend::Fused,
+            1,
+            128,
+            4,
+            7,
+            KvPrecision::F16,
+            &Calib::default(),
+        )
+        .unwrap();
         eng.execute(5, 0.0);
     }
 

@@ -52,7 +52,9 @@ pub use batcher::{
 };
 pub use engine::{Completion, Engine, EngineConfig};
 pub use kv_cache::{blocks_for_device, KvBlockManager};
-pub use measured::{measured_bursty, measured_shared_prefix, MeasuredEngine, MeasuredStats};
+pub use measured::{
+    measured_bursty, measured_shared_prefix, MeasuredEngine, MeasuredStats, MEASURED_ATTN_CTX,
+};
 pub use metrics::{EngineMetrics, Histogram};
 pub use prefix::{chain_hash, BlockHash, PrefixCache, PrefixIndex, PrefixStats, ROOT_HASH};
 pub use request::{FinishReason, GenerationRequest, SeqState, Sequence};

@@ -43,13 +43,50 @@ pub fn decode_step_latency(
         gemm_s += p.latency_s * g.count as f64;
     }
     // Decode attention reads each sequence's K and V once: bandwidth-bound.
-    let kv_read = spec.kv_bytes(batch, ctx_len);
-    let attn_s = kv_read / (dev.dram_bw() * calib.dram_eff)
-        + spec.n_layers as f64 * 2.0 * calib.overhead_s; // 2 attn kernels/layer
+    let attn_s = kv_attn_term(dev, spec, batch, ctx_len, calib);
     // Elementwise glue: norms/rope/residuals, ~20 small launches per layer
     // fused down to ~4 in practice.
     let other_s = spec.n_layers as f64 * 4.0 * calib.overhead_s;
     DecodeBreakdown { batch, gemm_s, attn_s, other_s }
+}
+
+/// The decode-attention KV-bandwidth term shared by
+/// [`decode_step_latency`] and [`mixed_step_latency`]: each decode lane
+/// reads its sequence's K and V once at derated DRAM bandwidth (scaled
+/// by [`Calib::kv_attn_scale`]), plus two attention-kernel launches per
+/// layer. At the default `kv_attn_scale = 1.0` this is bit-identical to
+/// the pure first-principles term. Public so the measured path
+/// (`kernel::StepExecutor::enable_attention`) can price the modeled side
+/// of its per-shape attention drift rows with the exact same formula.
+pub fn kv_attn_term(dev: &DeviceSpec, spec: &LlmSpec, batch: u64, ctx: u64, calib: &Calib) -> f64 {
+    calib.kv_attn_scale * spec.kv_bytes(batch, ctx) / (dev.dram_bw() * calib.dram_eff)
+        + spec.n_layers as f64 * 2.0 * calib.overhead_s // 2 attn kernels/layer
+}
+
+/// Fit [`Calib::kv_attn_scale`] so the modeled decode-attention term at
+/// `(batch, ctx)` matches an *attention wall time measured* by the fused
+/// dequant-attention kernel (`kernel::attn_quant_fused` running inside
+/// `kernel::StepExecutor` — see `StepExecutor::enable_attention`). The
+/// term is linear in the scale, so this solves directly rather than
+/// bisecting, with the same `[0, 1024]` clamp-to-achievable semantics as
+/// [`super::calibrate_writeback`].
+///
+/// # Panics
+///
+/// Panics unless `measured_attn_s` is positive.
+pub fn calibrate_kv_attn(
+    dev: &DeviceSpec,
+    spec: &LlmSpec,
+    batch: u64,
+    ctx: u64,
+    measured_attn_s: f64,
+    base: &Calib,
+) -> Calib {
+    assert!(measured_attn_s > 0.0, "measured attention latency must be positive");
+    let bw_s = spec.kv_bytes(batch, ctx.max(1)) / (dev.dram_bw() * base.dram_eff);
+    let overhead_s = spec.n_layers as f64 * 2.0 * base.overhead_s;
+    let scale = ((measured_attn_s - overhead_s) / bw_s).clamp(0.0, 1024.0);
+    Calib { kv_attn_scale: scale, ..*base }
 }
 
 /// Breakdown of one *mixed* engine step: `decode_batch` sequences each
@@ -123,8 +160,7 @@ pub fn mixed_step_latency(
         gemm_s += model_gemm(dev, kind, m, g.n, g.k, calib).latency_s * g.count as f64;
     }
     let decode_attn_s = if decode_batch > 0 {
-        spec.kv_bytes(decode_batch, decode_mean_ctx.max(1)) / (dev.dram_bw() * calib.dram_eff)
-            + spec.n_layers as f64 * 2.0 * calib.overhead_s
+        kv_attn_term(dev, spec, decode_batch, decode_mean_ctx.max(1), calib)
     } else {
         0.0
     };
@@ -339,6 +375,43 @@ mod tests {
         let spec = Model::Llama33B.spec();
         let b = decode_step_latency(&dev, &spec, KernelKind::Quick, 32, 256, &Calib::default());
         assert!(b.gemm_s > b.attn_s);
+    }
+
+    #[test]
+    fn calibrate_kv_attn_matches_measured_attention() {
+        let dev = Gpu::A100.spec();
+        let spec = Model::Llama33B.spec();
+        let base = Calib::default();
+        let (batch, ctx) = (16u64, 700u64);
+        // Synthesize a "measured" attention time from a known scale and
+        // check the fit recovers it (the term is linear in the scale).
+        let truth = Calib { kv_attn_scale: 2.5, ..base };
+        let measured = decode_step_latency(&dev, &spec, KernelKind::Quick, batch, ctx, &truth)
+            .attn_s;
+        let fit = calibrate_kv_attn(&dev, &spec, batch, ctx, measured, &base);
+        assert!((fit.kv_attn_scale - 2.5).abs() < 1e-9, "{}", fit.kv_attn_scale);
+        // Every other knob is carried over from the base.
+        assert_eq!(fit.writeback_scale, base.writeback_scale);
+        // The fitted calib reproduces the measured term.
+        let re = decode_step_latency(&dev, &spec, KernelKind::Quick, batch, ctx, &fit).attn_s;
+        assert!((re - measured).abs() / measured < 1e-12);
+        // A measured time at or below the launch-overhead floor clamps to 0.
+        let floor = calibrate_kv_attn(&dev, &spec, batch, ctx, 1e-12, &base);
+        assert_eq!(floor.kv_attn_scale, 0.0);
+    }
+
+    #[test]
+    fn default_kv_attn_scale_is_identity() {
+        // kv_attn_scale = 1.0 must reproduce the historical term exactly
+        // (1.0 * x == x in IEEE arithmetic): spot-check against the
+        // hand-written formula.
+        let dev = Gpu::RtxA6000.spec();
+        let spec = Model::Vicuna13B.spec();
+        let calib = Calib::default();
+        let b = decode_step_latency(&dev, &spec, KernelKind::Quick, 8, 333, &calib);
+        let want = spec.kv_bytes(8, 333) / (dev.dram_bw() * calib.dram_eff)
+            + spec.n_layers as f64 * 2.0 * calib.overhead_s;
+        assert_eq!(b.attn_s.to_bits(), want.to_bits());
     }
 }
 

@@ -90,6 +90,14 @@ pub struct Calib {
     /// it so the modeled AWQ/QUICK gap matches the gap *measured* by the
     /// native kernel backend (`crate::kernel`, `bench kernels`).
     pub writeback_scale: f64,
+    /// Multiplier on the decode-attention KV-bandwidth term of
+    /// [`super::decode_step_latency`] / [`super::mixed_step_latency`].
+    /// `1.0` = pure first-principles model (attention reads each
+    /// sequence's K and V once at `dram_eff` bandwidth);
+    /// [`calibrate_kv_attn`] sets it so the modeled term matches the
+    /// attention wall time *measured* by the fused dequant-attention
+    /// kernel (`kernel::attn_quant_fused` via `StepExecutor`).
+    pub kv_attn_scale: f64,
 }
 
 impl Default for Calib {
@@ -101,6 +109,7 @@ impl Default for Calib {
             overhead_s: 8e-6,
             swizzle_span: 8,
             writeback_scale: 1.0,
+            kv_attn_scale: 1.0,
         }
     }
 }

@@ -49,8 +49,8 @@ pub use collective::{
     ring_all_gather_s, ring_all_reduce_s, tp_step_comm_s, tp_step_latency, TpStepBreakdown,
 };
 pub use e2e::{
-    decode_step_latency, max_batch_before_oom, mixed_step_latency, tokens_per_second,
-    DecodeBreakdown, MixedStepBreakdown,
+    calibrate_kv_attn, decode_step_latency, kv_attn_term, max_batch_before_oom,
+    mixed_step_latency, tokens_per_second, DecodeBreakdown, MixedStepBreakdown,
 };
 pub use gpu::{DeviceSpec, Gpu};
 pub use kernel_model::{

@@ -1,0 +1,423 @@
+//! Fused dequant-attention over block-quantized KV — the attention twin
+//! of `gemm_quick_fused`.
+//!
+//! [`attn_quant_fused`] streams one head's packed K/V
+//! ([`crate::quant::QuantizedKv`]) in KV-tile order and, per tile,
+//! decodes the rows in-register (scalar or AVX2 via
+//! [`crate::quant::select_kv_decoder`]), computes the tile's `QK^T`
+//! scores, folds them into a FlashAttention-style online softmax
+//! (running max `m`, exp-sum `l`, rescale factor `alpha = exp(m_prev -
+//! m_next)`), and accumulates the tile's `A·V` contribution — one
+//! I/O-aware pass, no materialized `seq`-length score row beyond the
+//! tile, no dequantized KV ever written to memory. Query rows are
+//! striped across the shared [`super::WorkerPool`], the same threading
+//! substrate the GEMM paths use.
+//!
+//! [`naive_attention`] is the f64-accumulating scalar reference (full
+//! softmax, dense f32 K/V) every fused variant is differential-tested
+//! against at the documented `1e-4` [`super::max_rel_err`] gate — pass
+//! it the [`crate::quant::dequantize_kv`] of the same packed KV and the
+//! quantization error cancels, leaving only kernel arithmetic under
+//! test. [`attn_dense_tiled`] runs the identical tiled online-softmax
+//! loop over dense f32 rows: the "f16 KV" baseline of the bench sweep
+//! (`bench kernels --attention`), isolating the in-register decode cost
+//! from the online-softmax restructuring.
+
+use anyhow::{ensure, Result};
+
+use crate::quant::{select_kv_decoder, KvDecodeFn, QuantizedKv};
+
+use super::pool::WorkerPool;
+
+/// Tuning knobs for the tiled attention kernels (the attention analogue
+/// of [`super::Blocking`]).
+#[derive(Debug, Clone, Copy)]
+pub struct AttnConfig {
+    /// KV rows per online-softmax tile (the panel one rescale covers).
+    pub seq_tile: usize,
+    /// Worker threads; `0` = auto (1 for small problems, else cores,
+    /// capped at the query-row count).
+    pub threads: usize,
+    /// Use the SIMD KV decoders when the CPU supports them.
+    pub simd: bool,
+}
+
+impl Default for AttnConfig {
+    fn default() -> Self {
+        AttnConfig { seq_tile: 64, threads: 0, simd: true }
+    }
+}
+
+impl AttnConfig {
+    /// Resolve the worker count for an `(m, seq, d)` problem: explicit
+    /// counts are capped at `m` (one query row is the unit of work);
+    /// auto stays single-threaded until the flop count outgrows
+    /// dispatch overhead (same break-even structure as
+    /// [`super::Blocking::resolve_threads`]).
+    pub fn resolve_threads(&self, m: usize, seq: usize, d: usize) -> usize {
+        let cap = m.max(1);
+        if self.threads > 0 {
+            return self.threads.min(cap);
+        }
+        let flops = 4.0 * m as f64 * seq as f64 * d as f64;
+        if flops < (1u64 << 22) as f64 {
+            return 1;
+        }
+        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1).min(cap).max(1)
+    }
+}
+
+/// Reference attention: `out = softmax(q K^T * scale) V` with f64
+/// scores, f64 full softmax, and f64 `A·V` accumulation — essentially
+/// exact at these sizes, keeping the reference's own rounding out of
+/// the differential gate (same rationale as [`super::NaiveBackend`]).
+///
+/// `q` is `(m, d)` row-major, `k`/`v` are `(seq, d)` row-major, `out`
+/// is `(m, d)`.
+///
+/// # Panics
+///
+/// Panics on buffer-length mismatches or `seq == 0`.
+pub fn naive_attention(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    m: usize,
+    seq: usize,
+    d: usize,
+    scale: f32,
+    out: &mut [f32],
+) {
+    assert!(seq > 0, "empty KV");
+    assert_eq!(q.len(), m * d, "q buffer size");
+    assert_eq!(k.len(), seq * d, "k buffer size");
+    assert_eq!(v.len(), seq * d, "v buffer size");
+    assert_eq!(out.len(), m * d, "out buffer size");
+    let mut scores = vec![0f64; seq];
+    let mut acc = vec![0f64; d];
+    for i in 0..m {
+        let qrow = &q[i * d..(i + 1) * d];
+        let mut smax = f64::NEG_INFINITY;
+        for (j, sc) in scores.iter_mut().enumerate() {
+            let krow = &k[j * d..(j + 1) * d];
+            let mut dot = 0f64;
+            for (&qv, &kv) in qrow.iter().zip(krow) {
+                dot += qv as f64 * kv as f64;
+            }
+            *sc = dot * scale as f64;
+            smax = smax.max(*sc);
+        }
+        let mut l = 0f64;
+        for sc in scores.iter_mut() {
+            *sc = (*sc - smax).exp();
+            l += *sc;
+        }
+        acc.fill(0.0);
+        for (j, &p) in scores.iter().enumerate() {
+            let vrow = &v[j * d..(j + 1) * d];
+            for (a, &vv) in acc.iter_mut().zip(vrow) {
+                *a += p * vv as f64;
+            }
+        }
+        let orow = &mut out[i * d..(i + 1) * d];
+        for (o, &a) in orow.iter_mut().zip(&acc) {
+            *o = (a / l) as f32;
+        }
+    }
+}
+
+/// A KV operand the tiled kernel can stream row-by-row: packed quantized
+/// rows decoded through a selected [`KvDecodeFn`], or dense f32 rows
+/// (the f16-baseline path, a plain copy into the tile scratch).
+enum KvRef<'a> {
+    Quant(&'a QuantizedKv, KvDecodeFn),
+    Dense(&'a [f32]),
+}
+
+impl KvRef<'_> {
+    /// Materialize row `j` into `row` (`d` floats).
+    #[inline]
+    fn decode_row(&self, j: usize, row: &mut [f32]) {
+        match *self {
+            KvRef::Quant(kv, decode) => {
+                let (s, z) = kv.token_meta(j);
+                decode(kv.token_words(j), s, z, kv.group, row);
+            }
+            KvRef::Dense(data) => {
+                let d = row.len();
+                row.copy_from_slice(&data[j * d..(j + 1) * d]);
+            }
+        }
+    }
+}
+
+/// Fused attention over quantized KV: per KV tile, decode K rows
+/// in-register, compute `QK^T` scores, update the online softmax
+/// (`m`/`l`/accumulator rescaled by `alpha = exp(m_prev - m_next)`),
+/// decode V rows, and accumulate `A·V` — then normalize once at the
+/// end. K and V may use different bit widths; they must agree on
+/// `seq`/`d`. Differentially gated against [`naive_attention`] at
+/// `1e-4` max relative error ([`super::max_rel_err`]) in both debug and
+/// release.
+///
+/// `q` is `(m, d)` row-major, `out` is `(m, d)`.
+///
+/// # Errors
+///
+/// Errors on shape mismatches between `q`, `kq`, `vq`, and `out`, on
+/// `seq == 0`, and on a zero `seq_tile`.
+pub fn attn_quant_fused(
+    q: &[f32],
+    kq: &QuantizedKv,
+    vq: &QuantizedKv,
+    m: usize,
+    scale: f32,
+    cfg: &AttnConfig,
+    out: &mut [f32],
+) -> Result<()> {
+    ensure!(kq.seq == vq.seq && kq.d == vq.d, "K/V shape mismatch");
+    let kref = KvRef::Quant(kq, select_kv_decoder(kq.bits, cfg.simd));
+    let vref = KvRef::Quant(vq, select_kv_decoder(vq.bits, cfg.simd));
+    attn_tiled(q, &kref, &vref, m, kq.seq, kq.d, scale, cfg, out)
+}
+
+/// The tiled online-softmax loop over *dense* f32 KV — identical
+/// arithmetic to [`attn_quant_fused`] minus the in-register decode; the
+/// unquantized ("f16 KV") baseline of the attention bench sweep.
+///
+/// # Errors
+///
+/// Errors on shape mismatches, `seq == 0`, or a zero `seq_tile`.
+#[allow(clippy::too_many_arguments)]
+pub fn attn_dense_tiled(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    m: usize,
+    seq: usize,
+    d: usize,
+    scale: f32,
+    cfg: &AttnConfig,
+    out: &mut [f32],
+) -> Result<()> {
+    ensure!(k.len() == seq * d && v.len() == seq * d, "K/V buffer size");
+    attn_tiled(q, &KvRef::Dense(k), &KvRef::Dense(v), m, seq, d, scale, cfg, out)
+}
+
+/// Shared tiled kernel: query rows striped over the worker pool, one
+/// online-softmax state per row, KV streamed tile-by-tile through the
+/// operands' row decoders.
+#[allow(clippy::too_many_arguments)]
+fn attn_tiled(
+    q: &[f32],
+    k: &KvRef<'_>,
+    v: &KvRef<'_>,
+    m: usize,
+    seq: usize,
+    d: usize,
+    scale: f32,
+    cfg: &AttnConfig,
+    out: &mut [f32],
+) -> Result<()> {
+    ensure!(seq > 0, "empty KV");
+    ensure!(cfg.seq_tile > 0, "seq_tile must be positive");
+    ensure!(q.len() == m * d, "q buffer size: {} != {m} x {d}", q.len());
+    ensure!(out.len() == m * d, "out buffer size: {} != {m} x {d}", out.len());
+    if m == 0 {
+        return Ok(());
+    }
+    let threads = cfg.resolve_threads(m, seq, d);
+    let tile = cfg.seq_tile;
+
+    // Disjoint-row output writes from pool workers (each query row is
+    // owned by exactly one task below).
+    struct OutPtr(*mut f32);
+    unsafe impl Sync for OutPtr {}
+    let out_ptr = OutPtr(out.as_mut_ptr());
+
+    let body = move |task: usize, _slot: usize| {
+        // One scratch set per task (tasks == threads, rows striped), so
+        // a call allocates O(threads) tile buffers, not O(m).
+        let mut krow = vec![0f32; d];
+        let mut vrow = vec![0f32; d];
+        let mut scores = vec![0f32; tile];
+        let mut acc = vec![0f32; d];
+        for i in (task..m).step_by(threads) {
+            let qrow = &q[i * d..(i + 1) * d];
+            let mut m_run = f32::NEG_INFINITY;
+            let mut l = 0f32;
+            acc.fill(0.0);
+            let mut t0 = 0;
+            while t0 < seq {
+                let t1 = (t0 + tile).min(seq);
+                // QK^T for the tile, K decoded in-register row by row.
+                let mut m_tile = f32::NEG_INFINITY;
+                for j in t0..t1 {
+                    k.decode_row(j, &mut krow);
+                    let mut dot = 0f32;
+                    for (&qv, &kv) in qrow.iter().zip(&krow) {
+                        dot += qv * kv;
+                    }
+                    let s = dot * scale;
+                    scores[j - t0] = s;
+                    m_tile = m_tile.max(s);
+                }
+                // Online-softmax fold: rescale state to the new max.
+                let m_next = m_run.max(m_tile);
+                let alpha = (m_run - m_next).exp(); // 0 on the first tile
+                l *= alpha;
+                if alpha != 1.0 {
+                    for a in acc.iter_mut() {
+                        *a *= alpha;
+                    }
+                }
+                // A·V for the tile, V decoded in-register row by row.
+                for j in t0..t1 {
+                    let p = (scores[j - t0] - m_next).exp();
+                    l += p;
+                    v.decode_row(j, &mut vrow);
+                    for (a, &vv) in acc.iter_mut().zip(&vrow) {
+                        *a += p * vv;
+                    }
+                }
+                m_run = m_next;
+                t0 = t1;
+            }
+            // SAFETY: rows are striped `task, task+threads, ...` — no two
+            // tasks touch the same output row; the slice outlives run().
+            let orow = unsafe {
+                std::slice::from_raw_parts_mut(out_ptr.0.add(i * d), d)
+            };
+            for (o, &a) in orow.iter_mut().zip(&acc) {
+                *o = a / l;
+            }
+        }
+    };
+    WorkerPool::global().run(threads, threads, &body);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::max_rel_err;
+    use crate::quant::{dequantize_kv, quantize_kv};
+    use crate::util::Rng;
+
+    fn rand_buf(rng: &mut Rng, n: usize, lo: f64, hi: f64) -> Vec<f32> {
+        (0..n).map(|_| rng.range_f64(lo, hi) as f32).collect()
+    }
+
+    #[test]
+    fn naive_softmax_rows_are_convex_combinations() {
+        // With all-equal V rows, attention output equals that row exactly
+        // regardless of the scores.
+        let (m, seq, d) = (3, 17, 16);
+        let mut rng = Rng::seed_from_u64(3);
+        let q = rand_buf(&mut rng, m * d, -1.0, 1.0);
+        let k = rand_buf(&mut rng, seq * d, -1.0, 1.0);
+        let vrow = rand_buf(&mut rng, d, -1.0, 1.0);
+        let v: Vec<f32> = (0..seq).flat_map(|_| vrow.iter().copied()).collect();
+        let mut out = vec![0f32; m * d];
+        naive_attention(&q, &k, &v, m, seq, d, 0.125, &mut out);
+        for i in 0..m {
+            assert!(max_rel_err(&out[i * d..(i + 1) * d], &vrow) <= 1e-6);
+        }
+    }
+
+    #[test]
+    fn fused_matches_naive_on_dequantized_kv() {
+        let mut rng = Rng::seed_from_u64(7);
+        for &bits in &[4u32, 8] {
+            let (m, seq, d, group) = (5, 83, 64, 32);
+            let q = rand_buf(&mut rng, m * d, -1.0, 1.0);
+            let k = rand_buf(&mut rng, seq * d, -1.0, 1.0);
+            let v = rand_buf(&mut rng, seq * d, -1.0, 1.0);
+            let kq = quantize_kv(&k, seq, d, group, bits);
+            let vq = quantize_kv(&v, seq, d, group, bits);
+            let scale = 1.0 / (d as f32).sqrt();
+            let mut want = vec![0f32; m * d];
+            naive_attention(
+                &q,
+                &dequantize_kv(&kq),
+                &dequantize_kv(&vq),
+                m,
+                seq,
+                d,
+                scale,
+                &mut want,
+            );
+            for cfg in [
+                AttnConfig::default(),
+                AttnConfig { seq_tile: 16, threads: 1, simd: false },
+                AttnConfig { seq_tile: 7, threads: 3, simd: true },
+            ] {
+                let mut got = vec![0f32; m * d];
+                attn_quant_fused(&q, &kq, &vq, m, scale, &cfg, &mut got).unwrap();
+                let err = max_rel_err(&got, &want);
+                assert!(err <= 1e-4, "bits={bits} cfg={cfg:?}: {err}");
+            }
+        }
+    }
+
+    #[test]
+    fn dense_tiled_matches_naive() {
+        let (m, seq, d) = (4, 130, 32);
+        let mut rng = Rng::seed_from_u64(9);
+        let q = rand_buf(&mut rng, m * d, -1.0, 1.0);
+        let k = rand_buf(&mut rng, seq * d, -1.0, 1.0);
+        let v = rand_buf(&mut rng, seq * d, -1.0, 1.0);
+        let scale = 1.0 / (d as f32).sqrt();
+        let mut want = vec![0f32; m * d];
+        naive_attention(&q, &k, &v, m, seq, d, scale, &mut want);
+        let mut got = vec![0f32; m * d];
+        let cfg = AttnConfig { seq_tile: 33, ..Default::default() };
+        attn_dense_tiled(&q, &k, &v, m, seq, d, scale, &cfg, &mut got).unwrap();
+        assert!(max_rel_err(&got, &want) <= 1e-4);
+    }
+
+    #[test]
+    fn mixed_kv_bits_and_shape_errors() {
+        let mut rng = Rng::seed_from_u64(13);
+        let (m, seq, d, group) = (2, 21, 32, 32);
+        let q = rand_buf(&mut rng, m * d, -1.0, 1.0);
+        let k = rand_buf(&mut rng, seq * d, -1.0, 1.0);
+        let v = rand_buf(&mut rng, seq * d, -1.0, 1.0);
+        // 8-bit K with 4-bit V is a legal (and useful) combination.
+        let kq = quantize_kv(&k, seq, d, group, 8);
+        let vq = quantize_kv(&v, seq, d, group, 4);
+        let mut out = vec![0f32; m * d];
+        let scale = 1.0 / (d as f32).sqrt();
+        attn_quant_fused(&q, &kq, &vq, m, scale, &AttnConfig::default(), &mut out).unwrap();
+        let mut want = vec![0f32; m * d];
+        naive_attention(&q, &dequantize_kv(&kq), &dequantize_kv(&vq), m, seq, d, scale, &mut want);
+        assert!(max_rel_err(&out, &want) <= 1e-4);
+        // Mismatched seq rejected.
+        let short = quantize_kv(&v[..(seq - 1) * d], seq - 1, d, group, 4);
+        assert!(attn_quant_fused(&q, &kq, &short, m, scale, &AttnConfig::default(), &mut out)
+            .is_err());
+        // Wrong out length rejected.
+        let mut bad = vec![0f32; m * d - 1];
+        assert!(attn_quant_fused(&q, &kq, &vq, m, scale, &AttnConfig::default(), &mut bad)
+            .is_err());
+    }
+
+    #[test]
+    fn long_sequences_stay_stable_under_large_scores() {
+        // Large scale pushes scores far apart: the online rescale must
+        // not overflow/underflow where a naive unshifted softmax would.
+        let (m, seq, d, group) = (2, 257, 32, 32);
+        let mut rng = Rng::seed_from_u64(17);
+        let q = rand_buf(&mut rng, m * d, -3.0, 3.0);
+        let k = rand_buf(&mut rng, seq * d, -3.0, 3.0);
+        let v = rand_buf(&mut rng, seq * d, -1.0, 1.0);
+        let kq = quantize_kv(&k, seq, d, group, 8);
+        let vq = quantize_kv(&v, seq, d, group, 8);
+        let mut want = vec![0f32; m * d];
+        naive_attention(&q, &dequantize_kv(&kq), &dequantize_kv(&vq), m, seq, d, 4.0, &mut want);
+        let mut got = vec![0f32; m * d];
+        attn_quant_fused(&q, &kq, &vq, m, 4.0, &AttnConfig::default(), &mut got).unwrap();
+        assert!(got.iter().all(|x| x.is_finite()));
+        assert!(max_rel_err(&got, &want) <= 1e-4);
+    }
+}

@@ -19,6 +19,15 @@
 //! Correctness is property-tested: a fused (or write-back) executor's
 //! outputs must match a naive executor's per-GEMM reference outputs on
 //! identical seeds (`tests/property_tests.rs`).
+//!
+//! Since PR 8 the step can also *execute the decode-attention term*
+//! ([`StepExecutor::enable_attention`]): per step, the fused
+//! quantized-KV kernel ([`super::attn_quant_fused`]) runs once per
+//! (layer × KV head) over a seeded KV cache at a representative context
+//! length, timed next to the GEMM stream, with its drift recorded per
+//! `(m, ctx, head_dim)` against the `gpusim` KV-bandwidth term
+//! ([`crate::gpusim::kv_attn_term`]) — the measured side
+//! [`crate::gpusim::calibrate_kv_attn`] fits against.
 
 use std::collections::{BTreeMap, HashMap};
 use std::sync::OnceLock;
@@ -27,12 +36,13 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::gpusim::kernel_model::model_gemm;
-use crate::gpusim::{Calib, DeviceSpec, KernelKind};
+use crate::gpusim::{kv_attn_term, Calib, DeviceSpec, KernelKind};
 use crate::model::{GemmShape, LlmSpec};
 use crate::obs::{trace, Counter, DriftAccountant, Registry};
-use crate::quant::quantize_groupwise;
+use crate::quant::{quantize_groupwise, quantize_kv, KvPrecision, QuantizedKv, KV_GROUP};
 use crate::util::Rng;
 
+use super::attention::{attn_dense_tiled, attn_quant_fused, AttnConfig};
 use super::blocking::Blocking;
 use super::{AwqWritebackBackend, KernelBackend, NaiveBackend, QuickFusedBackend};
 
@@ -64,6 +74,43 @@ struct DriftConfig {
     /// evaluated once per shape and the steady-state step stays
     /// allocation-free.
     modeled_s: HashMap<(usize, usize), f64>,
+}
+
+/// The executable decode-attention term of a step (see
+/// [`StepExecutor::enable_attention`]): a seeded quantized (or dense)
+/// KV cache at a fixed representative context length, plus the query /
+/// output buffers the fused kernel streams through every step.
+struct AttnState {
+    /// Spec the modeled twin prices the whole-model term from.
+    spec: LlmSpec,
+    /// Representative decode context length (KV rows per lane).
+    ctx: usize,
+    /// Head dimension (`spec.head_dim()`).
+    head_dim: usize,
+    /// Fused-kernel invocations per step: per-rank layers × KV heads.
+    calls: usize,
+    /// Tensor-parallel ways — the modeled whole-model term is divided by
+    /// this to price one rank's share.
+    tp: u64,
+    /// Quantized K/V (`None` at [`KvPrecision::F16`], which runs the
+    /// dense-tiled baseline over `k_dense`/`v_dense` instead).
+    kq: Option<QuantizedKv>,
+    vq: Option<QuantizedKv>,
+    /// Dense f32 K/V for the F16 path (empty when quantized).
+    k_dense: Vec<f32>,
+    v_dense: Vec<f32>,
+    /// Query rows, `m_max * head_dim` (sliced to the step's M).
+    q: Vec<f32>,
+    /// Attention output, `m_max * head_dim` (overwritten per call).
+    out: Vec<f32>,
+    cfg: AttnConfig,
+    /// `1 / sqrt(head_dim)`.
+    scale: f32,
+    /// Measured seconds of the attention term in the most recent step.
+    attn_s: f64,
+    /// Memoized modeled attention seconds per batch M (same rationale as
+    /// [`DriftConfig::modeled_s`]).
+    modeled_s: HashMap<usize, f64>,
 }
 
 /// Which executable backend a [`StepExecutor`] drives.
@@ -162,6 +209,8 @@ pub struct StepExecutor {
     last_m: usize,
     /// When set, every step feeds the modeled-vs-measured ledger.
     drift: Option<DriftConfig>,
+    /// When set, every step also executes the decode-attention term.
+    attn: Option<AttnState>,
 }
 
 impl StepExecutor {
@@ -235,7 +284,18 @@ impl StepExecutor {
         }
         let ys = gemms.iter().map(|g| vec![0f32; m_max * g.n]).collect();
         let gemm_s = vec![0.0; gemms.len()];
-        Ok(StepExecutor { name, backend, m_max, gemms, xs, ys, gemm_s, last_m: 0, drift: None })
+        Ok(StepExecutor {
+            name,
+            backend,
+            m_max,
+            gemms,
+            xs,
+            ys,
+            gemm_s,
+            last_m: 0,
+            drift: None,
+            attn: None,
+        })
     }
 
     /// Start feeding the process-wide [`DriftAccountant`]: every later
@@ -250,6 +310,90 @@ impl StepExecutor {
             calib: *calib,
             modeled_s: HashMap::new(),
         });
+    }
+
+    /// Start *executing* the decode-attention term: every later
+    /// [`StepExecutor::step`] runs the fused quantized-KV attention
+    /// kernel once per (per-rank layer × KV head) — `spec.n_layers *
+    /// spec.kv_heads / tp` calls — over a seeded KV cache of `ctx`
+    /// tokens at `precision` ([`KvPrecision::F16`] runs the dense-tiled
+    /// baseline instead), timed inside the step wall clock. When
+    /// [`StepExecutor::enable_drift`] is also on, each step records the
+    /// measured attention seconds against the `gpusim` KV-bandwidth
+    /// term under the shape key `(m, ctx, head_dim)` — disjoint from
+    /// the GEMM `(m, k, n)` keys as long as `ctx` is not a weight
+    /// reduction dimension (pick something well under `d_model`).
+    ///
+    /// # Errors
+    ///
+    /// Errors when `ctx == 0`, `tp` is zero or does not divide
+    /// `spec.kv_heads`, or a quantized precision is requested for a
+    /// head dimension not divisible by 8 (the KV packing contract).
+    pub fn enable_attention(
+        &mut self,
+        spec: &LlmSpec,
+        tp: u64,
+        precision: KvPrecision,
+        ctx: usize,
+        seed: u64,
+    ) -> Result<()> {
+        anyhow::ensure!(ctx > 0, "attention context must be positive");
+        anyhow::ensure!(
+            tp >= 1 && spec.kv_heads % tp == 0,
+            "{}: {} KV heads not divisible by tp={tp}",
+            spec.name,
+            spec.kv_heads
+        );
+        let head_dim = spec.head_dim() as usize;
+        let calls = ((spec.n_layers * (spec.kv_heads / tp)) as usize).max(1);
+        let mut rng = Rng::seed_from_u64(seed);
+        let k: Vec<f32> = (0..ctx * head_dim).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect();
+        let v: Vec<f32> = (0..ctx * head_dim).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect();
+        let q: Vec<f32> =
+            (0..self.m_max * head_dim).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect();
+        let (kq, vq, k_dense, v_dense) = match precision {
+            KvPrecision::F16 => (None, None, k, v),
+            KvPrecision::Int8 | KvPrecision::Int4 => {
+                anyhow::ensure!(
+                    head_dim % 8 == 0,
+                    "{}: head_dim {head_dim} not divisible by 8 (KV packing)",
+                    spec.name
+                );
+                // Largest 8-aligned group (≤ KV_GROUP) dividing head_dim.
+                let group = if head_dim % KV_GROUP == 0 {
+                    KV_GROUP
+                } else if head_dim % 16 == 0 {
+                    16
+                } else {
+                    8
+                };
+                let bits = precision.bits();
+                (
+                    Some(quantize_kv(&k, ctx, head_dim, group, bits)),
+                    Some(quantize_kv(&v, ctx, head_dim, group, bits)),
+                    Vec::new(),
+                    Vec::new(),
+                )
+            }
+        };
+        self.attn = Some(AttnState {
+            spec: *spec,
+            ctx,
+            head_dim,
+            calls,
+            tp,
+            kq,
+            vq,
+            k_dense,
+            v_dense,
+            q,
+            out: vec![0f32; self.m_max * head_dim],
+            cfg: AttnConfig::default(),
+            scale: 1.0 / (head_dim as f32).sqrt(),
+            attn_s: 0.0,
+            modeled_s: HashMap::new(),
+        });
+        Ok(())
     }
 
     /// Model/config name this executor was built from.
@@ -330,6 +474,60 @@ impl StepExecutor {
                 );
             }
         }
+        if let Some(attn) = &mut self.attn {
+            let d = attn.head_dim;
+            let q = &attn.q[..m * d];
+            let out = &mut attn.out[..m * d];
+            let span_t0 = if tracing { trace::now_ns() } else { 0 };
+            let a0 = Instant::now();
+            for _ in 0..attn.calls {
+                match (&attn.kq, &attn.vq) {
+                    (Some(kq), Some(vq)) => {
+                        attn_quant_fused(q, kq, vq, m, attn.scale, &attn.cfg, out)?
+                    }
+                    _ => attn_dense_tiled(
+                        q,
+                        &attn.k_dense,
+                        &attn.v_dense,
+                        m,
+                        attn.ctx,
+                        d,
+                        attn.scale,
+                        &attn.cfg,
+                        out,
+                    )?,
+                }
+            }
+            let dt = a0.elapsed().as_secs_f64().max(1e-12);
+            attn.attn_s = dt;
+            if tracing {
+                trace::complete(
+                    "attn",
+                    "executor",
+                    span_t0,
+                    (dt * 1e9) as u64,
+                    &[
+                        ("m", m as f64),
+                        ("ctx", attn.ctx as f64),
+                        ("head_dim", d as f64),
+                        ("calls", attn.calls as f64),
+                    ],
+                );
+            }
+            if let Some(drift) = &self.drift {
+                // Whole-model modeled attention seconds, one rank's share.
+                let modeled = *attn.modeled_s.entry(m).or_insert_with(|| {
+                    kv_attn_term(&drift.dev, &attn.spec, m as u64, attn.ctx as u64, &drift.calib)
+                        / attn.tp as f64
+                });
+                DriftAccountant::global().record(
+                    (m as u64, attn.ctx as u64, d as u64),
+                    modeled,
+                    dt,
+                    attn.calls as u64,
+                );
+            }
+        }
         let wall_s = t0.elapsed().as_secs_f64().max(1e-12);
         self.last_m = m;
         let em = exec_metrics();
@@ -349,6 +547,18 @@ impl StepExecutor {
     /// [`StepExecutor::gemms`]. Zeros before the first step.
     pub fn last_gemm_s(&self) -> &[f64] {
         &self.gemm_s
+    }
+
+    /// Whether [`StepExecutor::enable_attention`] is on.
+    pub fn attention_enabled(&self) -> bool {
+        self.attn.is_some()
+    }
+
+    /// Measured seconds of the decode-attention term (all `layers × KV
+    /// heads` kernel calls) in the most recent step — `0.0` before the
+    /// first step or when attention execution is not enabled.
+    pub fn last_attn_s(&self) -> f64 {
+        self.attn.as_ref().map_or(0.0, |a| a.attn_s)
     }
 
     /// The activation buffer for reduction dimension `k`, sliced to
@@ -447,5 +657,51 @@ mod tests {
         let spec = Model::Tiny.spec();
         let e = StepExecutor::new(&spec, StepBackend::Fused, Blocking::default(), 96, 2, 3);
         assert!(e.is_err(), "96 does not divide d_model=256");
+    }
+
+    #[test]
+    fn attention_term_is_measured_alongside_the_gemms() {
+        let spec = Model::Tiny.spec();
+        let mut e =
+            StepExecutor::new(&spec, StepBackend::Fused, Blocking::default(), 128, 3, 5).unwrap();
+        assert!(!e.attention_enabled());
+        assert_eq!(e.last_attn_s(), 0.0);
+        for precision in [KvPrecision::Int4, KvPrecision::Int8, KvPrecision::F16] {
+            e.enable_attention(&spec, 1, precision, 48, 0xA77).unwrap();
+            assert!(e.attention_enabled());
+            let r = e.step(3).unwrap();
+            let attn_s = e.last_attn_s();
+            assert!(attn_s > 0.0, "{precision:?}: attention term untimed");
+            assert!(attn_s <= r.wall_s, "{precision:?}: attention outside the step wall clock");
+        }
+    }
+
+    #[test]
+    fn attention_drift_is_recorded_under_its_own_shape_key() {
+        let spec = Model::Tiny.spec();
+        // ctx = 37 is not a GEMM dimension of any model, so the key is
+        // uniquely this test's even on the shared global accountant.
+        let (ctx, m) = (37usize, 2usize);
+        let mut e =
+            StepExecutor::new(&spec, StepBackend::Fused, Blocking::default(), 128, 2, 9).unwrap();
+        e.enable_drift(&crate::gpusim::Gpu::A100.spec(), &Calib::default());
+        e.enable_attention(&spec, 1, KvPrecision::Int4, ctx, 0xA77).unwrap();
+        e.step(m).unwrap();
+        let key = (m as u64, ctx as u64, spec.head_dim());
+        let snap = DriftAccountant::global().snapshot();
+        let stat = snap.iter().find(|(k, _)| *k == key);
+        let (_, stat) = stat.expect("attention drift row missing");
+        assert!(stat.modeled_s > 0.0 && stat.measured_s > 0.0);
+        assert_eq!(stat.samples % (spec.n_layers * spec.kv_heads), 0);
+    }
+
+    #[test]
+    fn enable_attention_rejects_bad_shapes() {
+        let spec = Model::Tiny.spec();
+        let mut e =
+            StepExecutor::new(&spec, StepBackend::Fused, Blocking::default(), 128, 2, 9).unwrap();
+        assert!(e.enable_attention(&spec, 1, KvPrecision::Int4, 0, 1).is_err(), "ctx 0");
+        assert!(e.enable_attention(&spec, 3, KvPrecision::Int4, 16, 1).is_err(), "tp 3 vs 4 heads");
+        assert!(!e.attention_enabled(), "failed enables must not arm the term");
     }
 }

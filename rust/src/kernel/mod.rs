@@ -57,6 +57,7 @@
 //! cache sees the serving-path batch sizes — not just decode shapes — and
 //! the pool takes concurrent submissions from rank threads.
 
+mod attention;
 mod blocking;
 mod executor;
 mod fused;
@@ -66,6 +67,7 @@ mod plan;
 mod pool;
 mod writeback;
 
+pub use attention::{attn_dense_tiled, attn_quant_fused, naive_attention, AttnConfig};
 pub use blocking::Blocking;
 pub use executor::{StepBackend, StepExecutor, StepGemm, StepResult};
 pub use fused::{gemm_quick_fused, gemm_quick_fused_planned, QuickWeights};

@@ -5,8 +5,9 @@
 //!   the AOT-compiled tiny model and print serving metrics.
 //! * `simulate` — regenerate a paper experiment or serving extension
 //!   (fig3 | fig7 | fig8 | table1 | prefix | continuous | tp |
-//!   kernel-matmul | all) from the gpusim cost model (kernel-matmul:
-//!   measured on this CPU) and print paper-style rows. `continuous` and
+//!   kernel-matmul | step | kv | all) from the gpusim cost model
+//!   (kernel-matmul/step/kv: measured on this CPU) and print paper-style
+//!   rows. `continuous` and
 //!   `tp` accept `--measured`: serve the same workloads on the native
 //!   StepExecutor runtime (real GEMM streams on this CPU, modeled ring
 //!   collectives) and report measured tokens/sec next to the modeled
@@ -34,7 +35,8 @@ use quick_infer::workload;
 
 /// Valid `simulate` targets, listed by the unknown-target error (keep in
 /// sync with the USAGE block and the dispatch match below).
-const SIMULATE_TARGETS: &str = "fig3|fig7|fig8|table1|prefix|continuous|tp|kernel-matmul|step|all";
+const SIMULATE_TARGETS: &str =
+    "fig3|fig7|fig8|table1|prefix|continuous|tp|kernel-matmul|step|kv|all";
 
 /// Valid `bench` targets, listed by the unknown-target error (keep in
 /// sync with the USAGE block and the dispatch match below).
@@ -53,7 +55,7 @@ USAGE:
         Serve a synthetic workload on the AOT-compiled tiny model via PJRT.
         Defaults: --artifacts artifacts, --kernel quick, --requests 32, --seed 0.
 
-    quick-infer simulate [fig3|fig7|fig8|table1|prefix|continuous|tp|kernel-matmul|step|all]
+    quick-infer simulate [fig3|fig7|fig8|table1|prefix|continuous|tp|kernel-matmul|step|kv|all]
                          [--model M] [--trace PATH] [--measured] [--quick]
         Regenerate one experiment from the gpusim cost model (default: all).
           fig3        smem bank conflicts per kernel
@@ -78,19 +80,27 @@ USAGE:
                       weight GEMM of --model (default tiny) through the
                       native runtime at M in {1, 2, 4, 8}, plus the
                       step-fitted gpusim calibration (not part of 'all')
+          kv          quantized KV cache: per-precision density table
+                      (f16/kv8/kv4 bytes per token, tokens per block),
+                      shared-prefix serving under memory pressure at each
+                      precision, and a *measured* fused dequant-attention
+                      call fit into the gpusim kv_attn_scale calibration
+                      (not part of 'all': includes host wall time)
 
     quick-infer bench    [kernels|check] [--k K] [--n N] [--group-size G]
-                         [--json PATH] [--quick] [--decode-sweep] [--strict]
-                         [--trace PATH]
+                         [--json PATH] [--quick] [--decode-sweep] [--attention]
+                         [--strict] [--trace PATH]
         Run a measured native-kernel benchmark and append a structured
         JSON point to the perf trajectory (default target: kernels).
           kernels     fused-from-interleaved vs dequant-to-scratch GEMM,
                       M in {1, 8, 32, 128, 256}, plus the decode-shape
                       runtime sweep (M in {1, 2, 4, 8}: pool-vs-spawn,
-                      SIMD-vs-scalar, dispatch overhead); exits non-zero
-                      if either path diverges from the naive reference
-                      (>1e-4 rel). --decode-sweep runs only the decode
-                      sweep.
+                      SIMD-vs-scalar, dispatch overhead) and the fused
+                      dequant-attention KV sweep (kv4/kv8 vs dense over
+                      context x batch); exits non-zero if any path
+                      diverges from the naive reference (>1e-4 rel).
+                      --decode-sweep runs only the decode sweep;
+                      --attention runs only the attention sweep.
           check       parse a previously written BENCH_kernels.json and
                       exit non-zero unless it is well-formed and its
                       differential gate passed (CI post-step). A
@@ -147,7 +157,7 @@ struct Args {
 }
 
 /// Flags that take no value (presence means `true`).
-const BOOL_FLAGS: [&str; 4] = ["quick", "decode-sweep", "measured", "strict"];
+const BOOL_FLAGS: [&str; 5] = ["quick", "decode-sweep", "attention", "measured", "strict"];
 
 impl Args {
     fn parse(argv: &[String]) -> Result<Args> {
@@ -457,6 +467,9 @@ fn simulate(which: &str, args: &Args) -> Result<()> {
         "kernel-matmul" => {
             figures::kernel_matmul(out)?;
         }
+        "kv" => {
+            figures::kv_cache_quant(out)?;
+        }
         "step" => {
             let name = args.get("model", "tiny");
             let model = quick_infer::model::Model::parse(&name)
@@ -490,6 +503,7 @@ fn bench_cmd(target: &str, args: &Args) -> Result<()> {
             args.flags.get("json").map(String::as_str),
             args.flags.contains_key("quick"),
             args.flags.contains_key("decode-sweep"),
+            args.flags.contains_key("attention"),
         ),
         "check" => bench_check(
             args.positional.get(1).map(String::as_str),
@@ -518,9 +532,10 @@ fn bench_trajectory_path(name: &str) -> std::path::PathBuf {
 
 /// `bench kernels`: measured fused vs write-back M-sweep, the
 /// decode-shape runtime sweep (pool-vs-spawn, SIMD-vs-scalar, dispatch
-/// overhead), the differential gate, and the gpusim calibration — all
-/// emitted as one structured JSON point (always written, even when the
-/// gate then fails the process).
+/// overhead), the fused dequant-attention KV sweep, the differential
+/// gates, and the gpusim calibration — all emitted as one structured
+/// JSON point (always written, even when a gate then fails the process).
+#[allow(clippy::too_many_arguments)]
 fn bench_kernels(
     k: usize,
     n: usize,
@@ -528,15 +543,20 @@ fn bench_kernels(
     json: Option<&str>,
     quick: bool,
     decode_only: bool,
+    attention_only: bool,
 ) -> Result<()> {
     use quick_infer::util::{Bench, Json};
+    anyhow::ensure!(
+        !(decode_only && attention_only),
+        "--decode-sweep and --attention are mutually exclusive"
+    );
     let (k, n, bench) = if quick {
         (512.min(k), 512.min(n), Bench::smoke())
     } else {
         (k, n, Bench::fast())
     };
     let out = &mut std::io::stdout();
-    let report = if decode_only {
+    let report = if decode_only || attention_only {
         None
     } else {
         Some(figures::kernel_matmul_with(
@@ -548,14 +568,38 @@ fn bench_kernels(
             &bench,
         )?)
     };
-    let decode = figures::decode_sweep_with(
-        out,
-        k,
-        n,
-        group_size,
-        &figures::DECODE_SWEEP_BATCHES,
-        &bench,
-    )?;
+    let decode = if attention_only {
+        None
+    } else {
+        Some(figures::decode_sweep_with(
+            out,
+            k,
+            n,
+            group_size,
+            &figures::DECODE_SWEEP_BATCHES,
+            &bench,
+        )?)
+    };
+    // Attention sweep: head dim / group are the KV-cache contract
+    // (d=128, g=KV_GROUP), not the weight-layer shape; --quick shrinks
+    // the swept contexts and batches.
+    let (attn_seqs, attn_batches): (&[usize], &[usize]) = if quick {
+        (&[64, 256], &[1, 4])
+    } else {
+        (&figures::ATTN_SWEEP_SEQS, &figures::ATTN_SWEEP_BATCHES)
+    };
+    let attn = if decode_only {
+        None
+    } else {
+        Some(figures::attention_sweep_with(
+            out,
+            128,
+            quick_infer::quant::KV_GROUP,
+            attn_seqs,
+            attn_batches,
+            &bench,
+        )?)
+    };
 
     let path = match json {
         Some(p) => std::path::PathBuf::from(p),
@@ -581,8 +625,8 @@ fn bench_kernels(
     );
     let decode_rows = Json::Arr(
         decode
-            .rows
             .iter()
+            .flat_map(|d| d.rows.iter())
             .map(|r| {
                 let mut o = std::collections::BTreeMap::new();
                 o.insert("m".to_string(), Json::Num(r.m as f64));
@@ -615,37 +659,72 @@ fn bench_kernels(
             })
             .collect(),
     );
-    // The gate is the worst divergence either sweep observed.
-    let (mut fused_err, mut wb_err) = (decode.fused_rel_err, decode.writeback_rel_err);
-    if let Some(rep) = &report {
-        fused_err = fused_err.max(rep.fused_rel_err);
-        wb_err = wb_err.max(rep.writeback_rel_err);
+    let attn_rows = Json::Arr(
+        attn.iter()
+            .flat_map(|a| a.rows.iter())
+            .map(|r| {
+                let mut o = std::collections::BTreeMap::new();
+                o.insert("seq".to_string(), Json::Num(r.seq as f64));
+                o.insert("m".to_string(), Json::Num(r.m as f64));
+                o.insert("q4_gflops".to_string(), Json::Num(r.q4_gflops));
+                o.insert("q8_gflops".to_string(), Json::Num(r.q8_gflops));
+                o.insert("dense_gflops".to_string(), Json::Num(r.dense_gflops));
+                o.insert("q4_over_dense".to_string(), Json::Num(r.q4_over_dense()));
+                Json::Obj(o)
+            })
+            .collect(),
+    );
+    // Each gate key is the worst divergence any sweep that ran observed;
+    // keys for skipped sweeps are omitted.
+    let mut fused_err = None;
+    let mut wb_err = None;
+    if let Some(d) = &decode {
+        fused_err = Some(d.fused_rel_err);
+        wb_err = Some(d.writeback_rel_err);
     }
+    if let Some(rep) = &report {
+        fused_err = Some(fused_err.unwrap_or(0.0).max(rep.fused_rel_err));
+        wb_err = Some(wb_err.unwrap_or(0.0).max(rep.writeback_rel_err));
+    }
+    let attn_err = attn.as_ref().map(|a| a.q4_rel_err.max(a.q8_rel_err).max(a.dense_rel_err));
     let mut gate = std::collections::BTreeMap::new();
-    gate.insert("fused_rel_err".to_string(), Json::Num(fused_err));
-    gate.insert("writeback_rel_err".to_string(), Json::Num(wb_err));
+    if let Some(e) = fused_err {
+        gate.insert("fused_rel_err".to_string(), Json::Num(e));
+    }
+    if let Some(e) = wb_err {
+        gate.insert("writeback_rel_err".to_string(), Json::Num(e));
+    }
+    if let Some(e) = attn_err {
+        gate.insert("attn_rel_err".to_string(), Json::Num(e));
+    }
     gate.insert("tolerance".to_string(), Json::Num(1e-4));
-    let last = decode.rows.last().expect("non-empty decode sweep");
-    let min_gap = decode
-        .rows
-        .iter()
-        .map(figures::DecodeSweepRow::fused_over_writeback)
-        .fold(f64::INFINITY, f64::min);
-    let mut acceptance = std::collections::BTreeMap::new();
-    acceptance.insert("runtime_speedup_at_max_m".to_string(), Json::Num(last.runtime_speedup()));
-    acceptance.insert("runtime_speedup_bar".to_string(), Json::Num(1.5));
-    acceptance.insert("min_fused_over_writeback".to_string(), Json::Num(min_gap));
-    acceptance.insert("fused_over_writeback_bar".to_string(), Json::Num(1.0));
     let mut extra = vec![
         ("bench", Json::Str("kernels".to_string())),
         ("quick", Json::Bool(quick)),
-        ("simd_level", Json::Str(decode.simd_level.to_string())),
         ("shape", Json::Obj(shape)),
         ("rows", rows),
-        ("decode_sweep", decode_rows),
         ("differential_gate", Json::Obj(gate)),
-        ("acceptance", Json::Obj(acceptance)),
     ];
+    if let Some(d) = &decode {
+        extra.push(("simd_level", Json::Str(d.simd_level.to_string())));
+        extra.push(("decode_sweep", decode_rows));
+        let last = d.rows.last().expect("non-empty decode sweep");
+        let min_gap = d
+            .rows
+            .iter()
+            .map(figures::DecodeSweepRow::fused_over_writeback)
+            .fold(f64::INFINITY, f64::min);
+        let mut acceptance = std::collections::BTreeMap::new();
+        acceptance
+            .insert("runtime_speedup_at_max_m".to_string(), Json::Num(last.runtime_speedup()));
+        acceptance.insert("runtime_speedup_bar".to_string(), Json::Num(1.5));
+        acceptance.insert("min_fused_over_writeback".to_string(), Json::Num(min_gap));
+        acceptance.insert("fused_over_writeback_bar".to_string(), Json::Num(1.0));
+        extra.push(("acceptance", Json::Obj(acceptance)));
+    }
+    if attn.is_some() {
+        extra.push(("attention_sweep", attn_rows));
+    }
     if let Some(rep) = &report {
         extra.push(("calibrated_writeback_scale", Json::Num(rep.calibrated.writeback_scale)));
     }
@@ -654,12 +733,11 @@ fn bench_kernels(
 
     // CI gate: structured output above, hard failure below — a diverging
     // kernel must fail the job even though the artifact was written.
-    anyhow::ensure!(
-        fused_err <= 1e-4 && wb_err <= 1e-4,
-        "kernel divergence: fused {:.2e} / write-back {:.2e} vs naive exceeds 1e-4",
-        fused_err,
-        wb_err
-    );
+    for (label, err) in [("fused", fused_err), ("write-back", wb_err), ("attention", attn_err)] {
+        if let Some(e) = err {
+            anyhow::ensure!(e <= 1e-4, "kernel divergence: {label} {e:.2e} vs naive exceeds 1e-4");
+        }
+    }
     Ok(())
 }
 
@@ -700,19 +778,49 @@ fn bench_check(path: Option<&str>, strict: bool) -> Result<()> {
     anyhow::ensure!(!runs.is_empty(), "bench JSON records no runs");
     let gate = doc.req("differential_gate")?;
     let tol = gate.req("tolerance")?.as_f64()?;
-    let fused = gate.req("fused_rel_err")?.as_f64()?;
-    let wb = gate.req("writeback_rel_err")?.as_f64()?;
+    // A partial run (--decode-sweep / --attention) records only its own
+    // gate keys; validate every key present and require at least one.
+    // --strict (CI, after a full `bench kernels` run) requires them all.
+    let mut checked: Vec<(&str, f64)> = Vec::new();
+    for key in ["fused_rel_err", "writeback_rel_err", "attn_rel_err"] {
+        if let Some(v) = gate.get(key) {
+            let e = v.as_f64()?;
+            anyhow::ensure!(
+                e <= tol,
+                "differential gate failed: {key} {e:.2e} vs tolerance {tol:.0e}"
+            );
+            checked.push((key, e));
+        }
+    }
+    anyhow::ensure!(!checked.is_empty(), "differential gate records no error keys");
     anyhow::ensure!(
-        fused <= tol && wb <= tol,
-        "differential gate failed: fused {fused:.2e} / write-back {wb:.2e} vs tolerance {tol:.0e}"
+        !strict || checked.len() == 3,
+        "--strict requires all three gate keys (fused/write-back/attention), found {:?}",
+        checked.iter().map(|(k, _)| *k).collect::<Vec<_>>()
     );
-    let decode_rows = doc.req("decode_sweep")?.as_arr()?;
-    anyhow::ensure!(!decode_rows.is_empty(), "decode sweep is empty");
+    let decode_rows = doc.get("decode_sweep").map(Json::as_arr).transpose()?;
+    if let Some(rows) = decode_rows {
+        anyhow::ensure!(!rows.is_empty(), "decode sweep is empty");
+    }
+    let attn_rows = doc.get("attention_sweep").map(Json::as_arr).transpose()?;
+    if let Some(rows) = attn_rows {
+        anyhow::ensure!(!rows.is_empty(), "attention sweep is empty");
+    }
+    anyhow::ensure!(
+        !strict || (decode_rows.is_some() && attn_rows.is_some()),
+        "--strict requires both the decode and attention sweeps in the snapshot"
+    );
+    let gate_summary = checked
+        .iter()
+        .map(|(k, e)| format!("{k} {e:.2e}"))
+        .collect::<Vec<_>>()
+        .join(", ");
     println!(
-        "bench JSON ok: {} runs, {} decode-sweep rows, gate fused {fused:.2e} / wb {wb:.2e} \
+        "bench JSON ok: {} runs, {} decode-sweep rows, {} attention rows, gate [{gate_summary}] \
          (tol {tol:.0e})",
         runs.len(),
-        decode_rows.len()
+        decode_rows.map_or(0, <[Json]>::len),
+        attn_rows.map_or(0, <[Json]>::len)
     );
     if let Some(acc) = doc.get("acceptance") {
         let speedup = acc.req("runtime_speedup_at_max_m")?.as_f64()?;

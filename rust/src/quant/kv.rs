@@ -1,0 +1,470 @@
+//! Block-quantized KV storage: per-token, per-head-dim-group asymmetric
+//! quantization at 4 or 8 bits, with a packed word layout the fused
+//! attention microkernel ([`crate::kernel::attn_quant_fused`]) streams and
+//! decodes in-register, exactly as `gemm_quick_fused` does for weights.
+//!
+//! Layout: K (and V) for one head are row-major `(seq, d)` — one row per
+//! token, `d` the head dimension. Quantization groups run *along the head
+//! dimension* (contrast weights, where groups run along K): each token row
+//! is split into `d / group` groups, and each group gets its own
+//! `(scale, zero)` pair. The arithmetic mirrors
+//! [`super::quantize_groupwise`] exactly — `round_ties_even`, degenerate
+//! `s = 1.0`, dequant `(q - z) * s` with no FMA — so the scalar and SIMD
+//! decoders are bit-identical and the Python fixture generator can
+//! reproduce the codes bit-exactly.
+//!
+//! Packing is little-endian within a `u32` word (code `j` occupies bits
+//! `j * bits ..`), the same nibble order as [`super::PACK_FACTOR`] packing:
+//! 8 codes per word at 4 bits, 4 codes per word at 8 bits. Because groups
+//! are required to be a multiple of 8 head-dims, every 8-lane SIMD chunk
+//! falls inside one group and the AVX2 decoders broadcast a single
+//! `(scale, zero)` per chunk.
+
+/// Head-dim quantization group used by the KV cache layout (and by the
+/// byte accounting in [`KvPrecision::bytes_per_elem`] /
+/// [`KvPrecision::tokens_per_block`]). 32 dims per `(scale, zero)` pair
+/// keeps metadata under 10% of payload at 4 bits.
+pub const KV_GROUP: usize = 32;
+
+/// f16 bytes per stored KV element (the unquantized baseline).
+const F16_BYTES: f64 = 2.0;
+
+/// Storage precision of a KV block pool (or of one sequence's blocks).
+///
+/// `F16` is the unquantized baseline the serving stack has always used;
+/// the quantized variants shrink per-token byte cost so the same pool of
+/// fixed-size byte slabs holds more tokens per block
+/// ([`KvPrecision::tokens_per_block`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum KvPrecision {
+    /// Unquantized half-precision storage: 2 bytes per element.
+    F16,
+    /// 8-bit asymmetric per-group codes (+ per-group scale/zero).
+    Int8,
+    /// 4-bit asymmetric per-group codes (+ per-group scale/zero).
+    Int4,
+}
+
+impl Default for KvPrecision {
+    /// The unquantized baseline — defaulting to `F16` keeps every
+    /// pre-existing pool bit-identical to the pre-quantization block math.
+    fn default() -> Self {
+        KvPrecision::F16
+    }
+}
+
+impl KvPrecision {
+    /// Stored bits per KV element (payload only, excluding group metadata).
+    pub fn bits(self) -> u32 {
+        match self {
+            KvPrecision::F16 => 16,
+            KvPrecision::Int8 => 8,
+            KvPrecision::Int4 => 4,
+        }
+    }
+
+    /// Short label for bench rows / JSON records.
+    pub fn label(self) -> &'static str {
+        match self {
+            KvPrecision::F16 => "f16",
+            KvPrecision::Int8 => "kv8",
+            KvPrecision::Int4 => "kv4",
+        }
+    }
+
+    /// Effective bytes per stored KV element, including amortized group
+    /// metadata: each group of `group` elements carries an f16 scale
+    /// (2 bytes) and a u8 zero-point (1 byte). `F16` stores no metadata.
+    ///
+    /// At the cache's [`KV_GROUP`] of 32: f16 → 2.0, Int8 → ~1.094,
+    /// Int4 → ~0.594 — a ~3.4x density win for 4-bit.
+    pub fn bytes_per_elem(self, group: usize) -> f64 {
+        assert!(group > 0, "group must be positive");
+        match self {
+            KvPrecision::F16 => F16_BYTES,
+            KvPrecision::Int8 => 1.0 + 3.0 / group as f64,
+            KvPrecision::Int4 => 0.5 + 3.0 / group as f64,
+        }
+    }
+
+    /// Tokens one fixed-size KV block slab holds at this precision.
+    ///
+    /// Blocks are byte slabs sized for `block_size` *f16* tokens; a
+    /// quantized sequence packs `floor(block_size * 2 / bytes_per_elem)`
+    /// tokens into the same slab. `F16` returns exactly `block_size`, so
+    /// the default precision reproduces the historical block math
+    /// bit-for-bit.
+    pub fn tokens_per_block(self, block_size: u64) -> u64 {
+        let t = (block_size as f64 * F16_BYTES / self.bytes_per_elem(KV_GROUP)).floor();
+        (t as u64).max(1)
+    }
+}
+
+/// One head's quantized K or V tensor: packed codes plus per-(token,
+/// group) scale/zero metadata, row-major in tokens.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuantizedKv {
+    /// 4 or 8.
+    pub bits: u32,
+    /// Tokens stored (rows).
+    pub seq: usize,
+    /// Head dimension (columns).
+    pub d: usize,
+    /// Head-dim group size (scale/zero granularity).
+    pub group: usize,
+    /// Packed codes, `seq * d / (32 / bits)` words, little-endian codes
+    /// within each word, tokens contiguous.
+    pub words: Vec<u32>,
+    /// Per-(token, group) scales, row-major `(seq, d / group)`.
+    pub scales: Vec<f32>,
+    /// Per-(token, group) zero-points (integral, stored as f32).
+    pub zeros: Vec<f32>,
+}
+
+impl QuantizedKv {
+    /// Packed words per token row.
+    pub fn words_per_token(&self) -> usize {
+        self.d / (32 / self.bits as usize)
+    }
+
+    /// Scale/zero groups per token row.
+    pub fn groups_per_token(&self) -> usize {
+        self.d / self.group
+    }
+
+    /// The packed words of token row `t`.
+    pub fn token_words(&self, t: usize) -> &[u32] {
+        let w = self.words_per_token();
+        &self.words[t * w..(t + 1) * w]
+    }
+
+    /// The `(scales, zeros)` metadata rows of token row `t`.
+    pub fn token_meta(&self, t: usize) -> (&[f32], &[f32]) {
+        let g = self.groups_per_token();
+        (&self.scales[t * g..(t + 1) * g], &self.zeros[t * g..(t + 1) * g])
+    }
+}
+
+/// Quantize a row-major `(seq, d)` K or V tensor to `bits` ∈ {4, 8} with
+/// head-dim groups of `group`, packing codes little-endian into `u32`
+/// words. Mirrors [`super::quantize_groupwise`]'s arithmetic exactly
+/// (round-half-even, degenerate `s = 1.0`) with groups along the head
+/// dimension instead of K.
+///
+/// # Panics
+///
+/// Panics unless `bits ∈ {4, 8}`, `group` is a positive multiple of 8
+/// (the SIMD decoders broadcast one scale per 8-lane chunk), `d` is a
+/// multiple of `group`, and `data.len() == seq * d`.
+pub fn quantize_kv(data: &[f32], seq: usize, d: usize, group: usize, bits: u32) -> QuantizedKv {
+    assert!(bits == 4 || bits == 8, "KV bits must be 4 or 8, got {bits}");
+    assert!(
+        group > 0 && group % 8 == 0,
+        "KV group must be a positive multiple of 8, got {group}"
+    );
+    assert!(d > 0 && d % group == 0, "head dim {d} not divisible by group {group}");
+    assert_eq!(data.len(), seq * d, "KV buffer size mismatch");
+    let qmax = ((1u32 << bits) - 1) as f32;
+    let cpw = 32 / bits as usize;
+    let groups = d / group;
+    let mut scales = vec![0f32; seq * groups];
+    let mut zeros = vec![0f32; seq * groups];
+    let mut words = vec![0u32; seq * d / cpw];
+    for t in 0..seq {
+        let row = &data[t * d..(t + 1) * d];
+        let srow = &mut scales[t * groups..(t + 1) * groups];
+        let zrow = &mut zeros[t * groups..(t + 1) * groups];
+        for gi in 0..groups {
+            let chunk = &row[gi * group..(gi + 1) * group];
+            let (mut lo, mut hi) = (chunk[0], chunk[0]);
+            for &v in &chunk[1..] {
+                if v < lo {
+                    lo = v;
+                }
+                if v > hi {
+                    hi = v;
+                }
+            }
+            let mut s = (hi - lo) / qmax;
+            if s <= 0.0 {
+                s = 1.0; // degenerate all-equal group (matches quantize_groupwise)
+            }
+            srow[gi] = s;
+            zrow[gi] = (-lo / s).round_ties_even().clamp(0.0, qmax);
+        }
+        let wrow = &mut words[t * (d / cpw)..(t + 1) * (d / cpw)];
+        for (j, &v) in row.iter().enumerate() {
+            let gi = j / group;
+            let q = ((v / srow[gi]).round_ties_even() + zrow[gi]).clamp(0.0, qmax) as u32;
+            wrow[j / cpw] |= q << (bits * (j % cpw) as u32);
+        }
+    }
+    QuantizedKv { bits, seq, d, group, words, scales, zeros }
+}
+
+/// Dequantize a whole [`QuantizedKv`] back to a row-major `(seq, d)` f32
+/// buffer — the reference inverse, used by `naive_attention` callers and
+/// the round-trip property tests. Decodes through the scalar row decoder,
+/// so it is bit-identical to what the fused kernel streams.
+pub fn dequantize_kv(kv: &QuantizedKv) -> Vec<f32> {
+    let mut out = vec![0f32; kv.seq * kv.d];
+    let decode = select_kv_decoder(kv.bits, false);
+    for t in 0..kv.seq {
+        let (s, z) = kv.token_meta(t);
+        decode(kv.token_words(t), s, z, kv.group, &mut out[t * kv.d..(t + 1) * kv.d]);
+    }
+    out
+}
+
+/// Signature shared by the KV row decoders (scalar and SIMD): decode one
+/// token's packed words into `out` (`d = out.len()` floats), applying the
+/// token's per-group `(scales, zeros)` with head-dim groups of `group`.
+pub type KvDecodeFn = fn(&[u32], &[f32], &[f32], usize, &mut [f32]);
+
+/// Pick the KV row decoder for `bits` ∈ {4, 8}: SIMD when requested and
+/// supported, the scalar loop otherwise. As with
+/// [`super::decode::select_quick_decoder`], the pairs are bit-identical
+/// (same `(q - z) * s` f32 arithmetic, no FMA) — a pure speed knob.
+///
+/// # Panics
+///
+/// Panics unless `bits` is 4 or 8.
+pub fn select_kv_decoder(bits: u32, simd: bool) -> KvDecodeFn {
+    assert!(bits == 4 || bits == 8, "KV bits must be 4 or 8, got {bits}");
+    #[cfg(target_arch = "x86_64")]
+    if simd && super::decode::avx2_available() {
+        return if bits == 4 { decode_kv4_row_avx2 } else { decode_kv8_row_avx2 };
+    }
+    let _ = simd;
+    if bits == 4 {
+        decode_kv4_row_scalar
+    } else {
+        decode_kv8_row_scalar
+    }
+}
+
+/// Scalar 4-bit row decode: 8 little-endian nibbles per word,
+/// `(q - z) * s` per element. The reference the AVX2 path is
+/// bit-identical to.
+pub fn decode_kv4_row_scalar(
+    words: &[u32],
+    scales: &[f32],
+    zeros: &[f32],
+    group: usize,
+    out: &mut [f32],
+) {
+    let d = out.len();
+    debug_assert_eq!(words.len(), d / 8);
+    debug_assert!(group % 8 == 0 && d % group == 0);
+    for (w, &word) in words.iter().enumerate() {
+        let base = w * 8;
+        for j in 0..8 {
+            let q = ((word >> (4 * j)) & 0xF) as i32;
+            let gi = (base + j) / group;
+            out[base + j] = (q as f32 - zeros[gi]) * scales[gi];
+        }
+    }
+}
+
+/// Scalar 8-bit row decode: 4 little-endian bytes per word.
+pub fn decode_kv8_row_scalar(
+    words: &[u32],
+    scales: &[f32],
+    zeros: &[f32],
+    group: usize,
+    out: &mut [f32],
+) {
+    let d = out.len();
+    debug_assert_eq!(words.len(), d / 4);
+    debug_assert!(group % 8 == 0 && d % group == 0);
+    for (w, &word) in words.iter().enumerate() {
+        let base = w * 4;
+        for j in 0..4 {
+            let q = ((word >> (8 * j)) & 0xFF) as i32;
+            let gi = (base + j) / group;
+            out[base + j] = (q as f32 - zeros[gi]) * scales[gi];
+        }
+    }
+}
+
+/// AVX2 4-bit row decode — safe wrapper. Hard-asserts the bounds the
+/// unsafe body relies on (the SIMD stores write 8 floats per word).
+#[cfg(target_arch = "x86_64")]
+fn decode_kv4_row_avx2(
+    words: &[u32],
+    scales: &[f32],
+    zeros: &[f32],
+    group: usize,
+    out: &mut [f32],
+) {
+    let d = out.len();
+    assert!(group % 8 == 0 && d % group == 0, "AVX2 KV decode needs 8-aligned groups");
+    assert_eq!(words.len(), d / 8, "word count for head dim {d}");
+    let groups = d / group;
+    assert!(scales.len() >= groups && zeros.len() >= groups, "group metadata short");
+    // SAFETY: only called when avx2_available(); bounds asserted above.
+    unsafe { decode_kv4_row_avx2_body(words, scales, zeros, group, out) }
+}
+
+/// One word → 8 lanes: variable right-shifts (0,4,..,28) + mask expand the
+/// nibbles, then `(q - z) * s` with the chunk's single broadcast
+/// scale/zero (groups are 8-aligned, so a word never straddles groups).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn decode_kv4_row_avx2_body(
+    words: &[u32],
+    scales: &[f32],
+    zeros: &[f32],
+    group: usize,
+    out: &mut [f32],
+) {
+    use std::arch::x86_64::*;
+    let shifts = _mm256_setr_epi32(0, 4, 8, 12, 16, 20, 24, 28);
+    let mask = _mm256_set1_epi32(0xF);
+    for (w, &word) in words.iter().enumerate() {
+        let gi = (w * 8) / group;
+        let q = _mm256_and_si256(_mm256_srlv_epi32(_mm256_set1_epi32(word as i32), shifts), mask);
+        let v = _mm256_mul_ps(
+            _mm256_sub_ps(_mm256_cvtepi32_ps(q), _mm256_set1_ps(*zeros.get_unchecked(gi))),
+            _mm256_set1_ps(*scales.get_unchecked(gi)),
+        );
+        _mm256_storeu_ps(out.as_mut_ptr().add(w * 8), v);
+    }
+}
+
+/// AVX2 8-bit row decode — safe wrapper (processes word *pairs*, 8 codes
+/// at a time; `d % 8 == 0` follows from the 8-aligned-group contract).
+#[cfg(target_arch = "x86_64")]
+fn decode_kv8_row_avx2(
+    words: &[u32],
+    scales: &[f32],
+    zeros: &[f32],
+    group: usize,
+    out: &mut [f32],
+) {
+    let d = out.len();
+    assert!(group % 8 == 0 && d % group == 0, "AVX2 KV decode needs 8-aligned groups");
+    assert_eq!(words.len(), d / 4, "word count for head dim {d}");
+    let groups = d / group;
+    assert!(scales.len() >= groups && zeros.len() >= groups, "group metadata short");
+    // SAFETY: only called when avx2_available(); bounds asserted above.
+    unsafe { decode_kv8_row_avx2_body(words, scales, zeros, group, out) }
+}
+
+/// Two words → 8 lanes: `cvtepu8` expands each word's 4 little-endian
+/// bytes (the scalar loop's byte order), stacked into one 256-bit lane.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn decode_kv8_row_avx2_body(
+    words: &[u32],
+    scales: &[f32],
+    zeros: &[f32],
+    group: usize,
+    out: &mut [f32],
+) {
+    use std::arch::x86_64::*;
+    for p in 0..words.len() / 2 {
+        let gi = (p * 8) / group;
+        let lo = _mm_cvtepu8_epi32(_mm_cvtsi32_si128(*words.get_unchecked(2 * p) as i32));
+        let hi = _mm_cvtepu8_epi32(_mm_cvtsi32_si128(*words.get_unchecked(2 * p + 1) as i32));
+        let q = _mm256_set_m128i(hi, lo);
+        let v = _mm256_mul_ps(
+            _mm256_sub_ps(_mm256_cvtepi32_ps(q), _mm256_set1_ps(*zeros.get_unchecked(gi))),
+            _mm256_set1_ps(*scales.get_unchecked(gi)),
+        );
+        _mm256_storeu_ps(out.as_mut_ptr().add(p * 8), v);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn rand_kv(rng: &mut Rng, seq: usize, d: usize) -> Vec<f32> {
+        (0..seq * d).map(|_| rng.range_f64(-2.0, 2.0) as f32).collect()
+    }
+
+    #[test]
+    fn precision_byte_accounting() {
+        assert_eq!(KvPrecision::F16.bytes_per_elem(32), 2.0);
+        let e8 = KvPrecision::Int8.bytes_per_elem(32);
+        let e4 = KvPrecision::Int4.bytes_per_elem(32);
+        assert!((e8 - 1.09375).abs() < 1e-12);
+        assert!((e4 - 0.59375).abs() < 1e-12);
+        // f16 precision reproduces the historical block math exactly.
+        for bs in [1, 8, 16, 64] {
+            assert_eq!(KvPrecision::F16.tokens_per_block(bs), bs);
+        }
+        // 4-bit holds >= 3x the tokens per slab (the ISSUE's bar).
+        assert!(KvPrecision::Int4.tokens_per_block(16) >= 3 * 16);
+        assert!(KvPrecision::Int8.tokens_per_block(16) > 16);
+    }
+
+    #[test]
+    fn roundtrip_error_bounded_per_block() {
+        let mut rng = Rng::seed_from_u64(11);
+        for &bits in &[4u32, 8] {
+            let (seq, d, group) = (13, 64, 32);
+            let data = rand_kv(&mut rng, seq, d);
+            let kv = quantize_kv(&data, seq, d, group, bits);
+            let back = dequantize_kv(&kv);
+            for t in 0..seq {
+                let (s, _) = kv.token_meta(t);
+                for j in 0..d {
+                    let err = (data[t * d + j] - back[t * d + j]).abs();
+                    let bound = s[j / group] * 0.5 + 1e-6;
+                    assert!(err <= bound, "bits={bits} t={t} j={j}: {err} > {bound}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn degenerate_constant_group_is_exact() {
+        let (seq, d, group) = (2, 32, 32);
+        let data = vec![0.75f32; seq * d];
+        for &bits in &[4u32, 8] {
+            let kv = quantize_kv(&data, seq, d, group, bits);
+            assert_eq!(dequantize_kv(&kv), data, "bits={bits}");
+        }
+    }
+
+    #[test]
+    fn scalar_and_simd_decoders_bit_identical() {
+        let mut rng = Rng::seed_from_u64(23);
+        for &bits in &[4u32, 8] {
+            let (seq, d, group) = (7, 128, 32);
+            let data = rand_kv(&mut rng, seq, d);
+            let kv = quantize_kv(&data, seq, d, group, bits);
+            let scalar = select_kv_decoder(bits, false);
+            let simd = select_kv_decoder(bits, true);
+            let mut a = vec![0f32; d];
+            let mut b = vec![0f32; d];
+            for t in 0..seq {
+                let (s, z) = kv.token_meta(t);
+                scalar(kv.token_words(t), s, z, group, &mut a);
+                simd(kv.token_words(t), s, z, group, &mut b);
+                let ab: Vec<u32> = a.iter().map(|v| v.to_bits()).collect();
+                let bb: Vec<u32> = b.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(ab, bb, "bits={bits} token {t}");
+            }
+        }
+    }
+
+    #[test]
+    fn packing_is_little_endian_in_word() {
+        // d = 8, one group: codes j occupy bits 4j (4-bit) / 8j (8-bit).
+        let data: Vec<f32> = (0..8).map(|j| j as f32).collect();
+        let kv4 = quantize_kv(&data, 1, 8, 8, 4);
+        // Range 0..7 over qmax 15: scale = 7/15, zero = 0 -> code j maps
+        // monotonically; the low nibble is element 0.
+        assert_eq!(kv4.words.len(), 1);
+        assert_eq!(kv4.words[0] & 0xF, 0, "element 0 in the low nibble");
+        assert_eq!(kv4.words[0] >> 28, 15, "element 7 in the high nibble");
+        let kv8 = quantize_kv(&data, 1, 8, 8, 8);
+        assert_eq!(kv8.words.len(), 2);
+        assert_eq!(kv8.words[0] & 0xFF, 0);
+        assert_eq!(kv8.words[1] >> 24, 255);
+    }
+}

@@ -23,11 +23,15 @@
 mod awq;
 pub mod decode;
 mod interleave;
+pub mod kv;
 mod pack;
 mod search;
 pub mod shard;
 
 pub use awq::{dequantize, dequantize_into, quantize_groupwise, QuantizedTensor, QBITS, QMAX};
+pub use kv::{
+    dequantize_kv, quantize_kv, select_kv_decoder, KvDecodeFn, KvPrecision, QuantizedKv, KV_GROUP,
+};
 pub use decode::{decode_awq_word_into, decode_quick_run_into, quick_run_offset};
 pub use interleave::{
     apply_word_perm, invert_perm, ldmatrix_fragment_perm, ldmatrix_fragment_perm_memo,

@@ -44,19 +44,30 @@ fn parse_words(s: &str) -> Vec<u32> {
         .collect()
 }
 
-fn load_fixture(name: &str) -> Fixture {
+/// f32 buffers travel as IEEE-754 bit patterns — parsing is bit-exact.
+fn parse_f32_words(s: &str) -> Vec<f32> {
+    parse_words(s).into_iter().map(f32::from_bits).collect()
+}
+
+fn load_fields(name: &str) -> HashMap<String, String> {
     let path = fixtures_dir().join(name);
     let text = std::fs::read_to_string(&path)
         .unwrap_or_else(|e| panic!("fixture {} unreadable: {e}", path.display()));
-    let mut fields: HashMap<&str, &str> = HashMap::new();
+    let mut fields = HashMap::new();
     for line in text.lines() {
         if line.starts_with('#') || line.trim().is_empty() {
             continue;
         }
         let (key, value) = line.split_once(' ').expect("`key value` line");
-        fields.insert(key, value);
+        fields.insert(key.to_string(), value.to_string());
     }
-    let get = |key: &str| *fields.get(key).unwrap_or_else(|| panic!("missing field {key}"));
+    fields
+}
+
+fn load_fixture(name: &str) -> Fixture {
+    let fields = load_fields(name);
+    let get =
+        |key: &str| fields.get(key).unwrap_or_else(|| panic!("missing field {key}")).as_str();
     Fixture {
         k: get("k").parse().unwrap(),
         n: get("n").parse().unwrap(),
@@ -77,6 +88,56 @@ const FIXTURES: [&str; 4] = [
     "pack_k64_n128.txt",
     "pack_k128_n64.txt",
 ];
+
+/// A quantized-KV golden case: dense f32 inputs (as bit patterns, so the
+/// Rust side requantizes the *exact* floats Python saw), the packed
+/// words + per-(token, group) scale/zero metadata Python produced, and
+/// the f64-reference attention output over the dequantized KV.
+struct KvFixture {
+    seq: usize,
+    d: usize,
+    group: usize,
+    kbits: u32,
+    vbits: u32,
+    m: usize,
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    k_words: Vec<u32>,
+    k_scales: Vec<f32>,
+    k_zeros: Vec<f32>,
+    v_words: Vec<u32>,
+    v_scales: Vec<f32>,
+    v_zeros: Vec<f32>,
+    attn: Vec<f32>,
+}
+
+fn load_kv_fixture(name: &str) -> KvFixture {
+    let fields = load_fields(name);
+    let get =
+        |key: &str| fields.get(key).unwrap_or_else(|| panic!("missing field {key}")).as_str();
+    KvFixture {
+        seq: get("seq").parse().unwrap(),
+        d: get("d").parse().unwrap(),
+        group: get("group").parse().unwrap(),
+        kbits: get("kbits").parse().unwrap(),
+        vbits: get("vbits").parse().unwrap(),
+        m: get("m").parse().unwrap(),
+        q: parse_f32_words(get("q")),
+        k: parse_f32_words(get("k")),
+        v: parse_f32_words(get("v")),
+        k_words: parse_words(get("k_words")),
+        k_scales: parse_f32_words(get("k_scales")),
+        k_zeros: parse_f32_words(get("k_zeros")),
+        v_words: parse_words(get("v_words")),
+        v_scales: parse_f32_words(get("v_scales")),
+        v_zeros: parse_f32_words(get("v_zeros")),
+        attn: parse_f32_words(get("attn")),
+    }
+}
+
+const KV_FIXTURES: [&str; 3] =
+    ["kv_s40_d64_b44.txt", "kv_s24_d32_b88.txt", "kv_s9_d64_b84.txt"];
 
 #[test]
 fn fixtures_are_well_formed() {
@@ -232,5 +293,82 @@ fn kernel_backends_match_python_fixture_weights() {
         writeback.gemm(&x, m, &mut got);
         let e = max_rel_err(&got, &want);
         assert!(e <= 1e-4, "{name}: write-back rel err {e:.2e}");
+    }
+}
+
+#[test]
+fn kv_fixtures_are_well_formed() {
+    for name in KV_FIXTURES {
+        let f = load_kv_fixture(name);
+        let groups = f.d / f.group;
+        assert_eq!(f.q.len(), f.m * f.d, "{name}: q size");
+        assert_eq!(f.k.len(), f.seq * f.d, "{name}: k size");
+        assert_eq!(f.v.len(), f.seq * f.d, "{name}: v size");
+        assert_eq!(f.k_words.len(), f.seq * f.d / (32 / f.kbits as usize), "{name}: k words");
+        assert_eq!(f.v_words.len(), f.seq * f.d / (32 / f.vbits as usize), "{name}: v words");
+        assert_eq!(f.k_scales.len(), f.seq * groups, "{name}: k scales");
+        assert_eq!(f.k_zeros.len(), f.seq * groups, "{name}: k zeros");
+        assert_eq!(f.v_scales.len(), f.seq * groups, "{name}: v scales");
+        assert_eq!(f.v_zeros.len(), f.seq * groups, "{name}: v zeros");
+        assert_eq!(f.attn.len(), f.m * f.d, "{name}: attn size");
+    }
+}
+
+#[test]
+fn kv_quantization_matches_python_bit_exact() {
+    // Requantizing the fixture's exact f32 inputs must reproduce the
+    // Python-generated packed words, scales, and zeros bit for bit —
+    // both languages round half-to-even in f32 with the degenerate
+    // all-equal group mapped to s = 1.
+    use quick_infer::quant::quantize_kv;
+    let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+    for name in KV_FIXTURES {
+        let f = load_kv_fixture(name);
+        let kq = quantize_kv(&f.k, f.seq, f.d, f.group, f.kbits);
+        assert_eq!(kq.words, f.k_words, "{name}: K packed words drift");
+        assert_eq!(bits(&kq.scales), bits(&f.k_scales), "{name}: K scales drift");
+        assert_eq!(bits(&kq.zeros), bits(&f.k_zeros), "{name}: K zeros drift");
+        let vq = quantize_kv(&f.v, f.seq, f.d, f.group, f.vbits);
+        assert_eq!(vq.words, f.v_words, "{name}: V packed words drift");
+        assert_eq!(bits(&vq.scales), bits(&f.v_scales), "{name}: V scales drift");
+        assert_eq!(bits(&vq.zeros), bits(&f.v_zeros), "{name}: V zeros drift");
+    }
+}
+
+#[test]
+fn kv_attention_matches_python_reference() {
+    // naive_attention (f64 reference) must land within 1e-5 of Python's
+    // f64 reference (summation order differs, so not bit-exact), and
+    // the fused in-register-decode kernel within the documented 1e-4
+    // gate, scalar and SIMD alike.
+    use quick_infer::kernel::{attn_quant_fused, max_rel_err, naive_attention, AttnConfig};
+    use quick_infer::quant::{dequantize_kv, quantize_kv};
+    for name in KV_FIXTURES {
+        let f = load_kv_fixture(name);
+        let kq = quantize_kv(&f.k, f.seq, f.d, f.group, f.kbits);
+        let vq = quantize_kv(&f.v, f.seq, f.d, f.group, f.vbits);
+        let scale = 1.0 / (f.d as f32).sqrt();
+        let mut naive = vec![0f32; f.m * f.d];
+        naive_attention(
+            &f.q,
+            &dequantize_kv(&kq),
+            &dequantize_kv(&vq),
+            f.m,
+            f.seq,
+            f.d,
+            scale,
+            &mut naive,
+        );
+        let e = max_rel_err(&naive, &f.attn);
+        assert!(e <= 1e-5, "{name}: naive vs python reference {e:.2e}");
+        for cfg in [
+            AttnConfig { seq_tile: 64, threads: 1, simd: false },
+            AttnConfig { seq_tile: 16, threads: 2, simd: true },
+        ] {
+            let mut got = vec![0f32; f.m * f.d];
+            attn_quant_fused(&f.q, &kq, &vq, f.m, scale, &cfg, &mut got).unwrap();
+            let e = max_rel_err(&got, &f.attn);
+            assert!(e <= 1e-4, "{name} cfg={cfg:?}: fused vs python reference {e:.2e}");
+        }
     }
 }

@@ -105,10 +105,15 @@ fn prop_shard_then_pack_quick_roundtrips() {
 
 #[test]
 fn prop_kv_manager_never_leaks_or_double_allocates() {
+    use quick_infer::quant::KvPrecision;
     check("kv-ledger", 0xD00D, default_cases(), |rng| {
         let blocks = rng.range_u64(8, 256);
         let bs = [4u64, 8, 16][rng.range_usize(0, 2)];
-        let mut m = KvBlockManager::new(blocks, bs, 0.0);
+        // The ledger invariants are precision-independent: quantized
+        // pools only change tokens-per-slab, never refcount math.
+        let prec = [KvPrecision::F16, KvPrecision::Int8, KvPrecision::Int4]
+            [rng.range_usize(0, 2)];
+        let mut m = KvBlockManager::new(blocks, bs, 0.0).with_precision(prec);
         let mut live: Vec<u64> = Vec::new();
         let mut next_id = 0u64;
         for _ in 0..200 {
@@ -149,9 +154,14 @@ fn prop_kv_cow_fork_seal_conserves_refcounts() {
     // references, no leaks, idle-counter consistency — must hold after
     // every op, and draining everything must return the full pool.
     check("kv-cow-ledger", 0xC0DE, default_cases(), |rng| {
+        use quick_infer::quant::KvPrecision;
         let blocks = rng.range_u64(8, 128);
         let bs = [4u64, 8, 16][rng.range_usize(0, 2)];
-        let mut m = KvBlockManager::new(blocks, bs, 0.0);
+        // fork/seal/mark_cached/evict operate on packed blocks unchanged
+        // at every storage precision (the ISSUE's COW-composition claim).
+        let prec = [KvPrecision::F16, KvPrecision::Int8, KvPrecision::Int4]
+            [rng.range_usize(0, 2)];
+        let mut m = KvBlockManager::new(blocks, bs, 0.0).with_precision(prec);
         let mut live: Vec<u64> = Vec::new();
         let mut marked: Vec<u32> = Vec::new();
         let mut next_id = 0u64;
@@ -579,6 +589,109 @@ fn prop_kernel_backends_agree_with_reference() {
             ef <= 1e-4 && ew <= 1e-4 && efw <= 1e-4,
             "k={k} n={n} g={g} m={m} blocking={blocking:?}: \
              fused {ef:.2e} wb {ew:.2e} fused-vs-wb {efw:.2e}"
+        );
+    });
+}
+
+#[test]
+fn prop_kv_quant_roundtrip_bounded_per_block() {
+    // KV quantize -> pack -> decode round-trip error is bounded per
+    // (token, head-dim group): at most half an LSB of that group's scale.
+    // At 8 bits the scale is range/255 — an fp8-ish bound; at 4 bits it
+    // is range/15, the documented looser bound. The scalar and SIMD
+    // decoders must also be bit-identical on every row (no FMA).
+    use quick_infer::quant::{dequantize_kv, quantize_kv, select_kv_decoder};
+    check("kv-quant-roundtrip", 0x4B0B10C, default_cases(), |rng| {
+        let group = [8usize, 16, 32][rng.range_usize(0, 2)];
+        let d = group * rng.range_usize(1, 4);
+        let seq = rng.range_usize(1, 40);
+        let bits = [4u32, 8][rng.range_usize(0, 1)];
+        let data: Vec<f32> =
+            (0..seq * d).map(|_| (rng.f64() * 4.0 - 2.0) as f32).collect();
+        let kv = quantize_kv(&data, seq, d, group, bits);
+        let back = dequantize_kv(&kv);
+        for t in 0..seq {
+            let (s, _) = kv.token_meta(t);
+            for j in 0..d {
+                let err = (data[t * d + j] - back[t * d + j]).abs();
+                let bound = s[j / group] * 0.5 + 1e-5;
+                assert!(
+                    err <= bound,
+                    "bits={bits} seq={seq} d={d} group={group} t={t} j={j}: {err} > {bound}"
+                );
+            }
+        }
+        let scalar = select_kv_decoder(bits, false);
+        let simd = select_kv_decoder(bits, true);
+        let mut a = vec![0f32; d];
+        let mut b = vec![0f32; d];
+        for t in 0..seq {
+            let (s, z) = kv.token_meta(t);
+            scalar(kv.token_words(t), s, z, group, &mut a);
+            simd(kv.token_words(t), s, z, group, &mut b);
+            assert!(
+                a.iter().zip(&b).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "bits={bits} t={t}: scalar/SIMD decode differ"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_attn_quant_fused_matches_naive_reference() {
+    // The attention differential gate over random shapes, bit widths
+    // (K and V independently 4/8-bit), tilings, and thread counts:
+    // attn_quant_fused ≡ naive_attention on the dequantized KV within
+    // 1e-4 — including the COW-forked-block case, where two sequences
+    // read the *same* packed blocks (bit-identical outputs) and a
+    // diverged copy leaves the parent's pass untouched.
+    use quick_infer::kernel::{attn_quant_fused, max_rel_err, naive_attention, AttnConfig};
+    use quick_infer::quant::{dequantize_kv, quantize_kv};
+    check("attn-fused-vs-naive", 0xA77E4D, default_cases(), |rng| {
+        let group = [8usize, 16, 32][rng.range_usize(0, 2)];
+        let d = group * rng.range_usize(1, 3);
+        let seq = rng.range_usize(1, 96);
+        let m = rng.range_usize(1, 8);
+        let kbits = [4u32, 8][rng.range_usize(0, 1)];
+        let vbits = [4u32, 8][rng.range_usize(0, 1)];
+        let q: Vec<f32> = (0..m * d).map(|_| (rng.f64() * 2.0 - 1.0) as f32).collect();
+        let k: Vec<f32> = (0..seq * d).map(|_| (rng.f64() * 2.0 - 1.0) as f32).collect();
+        let v: Vec<f32> = (0..seq * d).map(|_| (rng.f64() * 2.0 - 1.0) as f32).collect();
+        let kq = quantize_kv(&k, seq, d, group, kbits);
+        let vq = quantize_kv(&v, seq, d, group, vbits);
+        let scale = 1.0 / (d as f32).sqrt();
+        let cfg = AttnConfig {
+            seq_tile: rng.range_usize(1, seq + 8),
+            threads: rng.range_usize(0, 4),
+            simd: rng.f64() < 0.5,
+        };
+        let mut want = vec![0f32; m * d];
+        naive_attention(&q, &dequantize_kv(&kq), &dequantize_kv(&vq), m, seq, d, scale, &mut want);
+        let mut got = vec![0f32; m * d];
+        attn_quant_fused(&q, &kq, &vq, m, scale, &cfg, &mut got).unwrap();
+        let err = max_rel_err(&got, &want);
+        assert!(
+            err <= 1e-4,
+            "m={m} seq={seq} d={d} group={group} kbits={kbits} vbits={vbits} cfg={cfg:?}: {err}"
+        );
+        // COW fork: a forked sequence's pass over the shared packed
+        // blocks is bit-identical to the parent's.
+        let mut fork_out = vec![0f32; m * d];
+        attn_quant_fused(&q, &kq, &vq, m, scale, &cfg, &mut fork_out).unwrap();
+        assert!(
+            got.iter().zip(&fork_out).all(|(x, y)| x.to_bits() == y.to_bits()),
+            "shared packed blocks must decode identically"
+        );
+        // Divergence copies: mutating the fork's private copy must leave
+        // the parent's blocks (and its re-run) untouched.
+        let mut diverged = kq.clone();
+        let last = diverged.words.len() - 1;
+        diverged.words[last] ^= 0x1;
+        let mut again = vec![0f32; m * d];
+        attn_quant_fused(&q, &kq, &vq, m, scale, &cfg, &mut again).unwrap();
+        assert!(
+            got.iter().zip(&again).all(|(x, y)| x.to_bits() == y.to_bits()),
+            "parent pass disturbed by the fork's divergence"
         );
     });
 }

@@ -1,0 +1,186 @@
+//! Integration: the quantized KV cache end to end through the serving
+//! stack — the block pool's density win at equal bytes, prefix-cache
+//! behavior that is invariant to storage precision, and the measured
+//! runtime's per-step attention term feeding the drift ledger under its
+//! own shape keys.
+//!
+//! Like `measured_serving.rs`, every test serializes on one lock: the
+//! measured runs share the machine's cores (and the global drift
+//! ledger), and even the bookkeeping tests are cheap enough that
+//! serializing costs nothing.
+
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+use quick_infer::coordinator::measured::measured_bursty;
+use quick_infer::coordinator::simserve::{
+    simulate_continuous, simulate_continuous_measured, ContinuousPolicy,
+};
+use quick_infer::coordinator::{KvBlockManager, MEASURED_ATTN_CTX};
+use quick_infer::gpusim::kernel_model::{Calib, KernelKind};
+use quick_infer::gpusim::Gpu;
+use quick_infer::kernel::StepBackend;
+use quick_infer::model::Model;
+use quick_infer::obs::DriftAccountant;
+use quick_infer::quant::KvPrecision;
+use quick_infer::workload::SharedPrefixWorkload;
+
+const GROUP_SIZE: usize = 128;
+const SEED: u64 = 0x5EED;
+
+fn serial() -> MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(())).lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Fill a pool of `blocks` fixed-size slabs with one growing sequence
+/// until the pool is exhausted, returning the resident token count. The
+/// slab byte budget is identical across precisions — only the per-token
+/// byte cost differs.
+fn pool_token_capacity(precision: KvPrecision, blocks: u64) -> u64 {
+    let mut kv = KvBlockManager::new(blocks, 16, 0.0).with_precision(precision);
+    kv.allocate(0, 1).unwrap();
+    let mut resident = 1u64;
+    while kv.append_token(0).is_ok() {
+        resident += 1;
+    }
+    kv.check_invariants().unwrap();
+    // A full pool packs every slab completely.
+    assert_eq!(resident, blocks * kv.tokens_per_block(), "{precision:?}");
+    resident
+}
+
+#[test]
+fn quantized_pool_admits_3x_resident_tokens_at_equal_bytes() {
+    let _g = serial();
+    let blocks = 64u64;
+    let f16 = pool_token_capacity(KvPrecision::F16, blocks);
+    let q8 = pool_token_capacity(KvPrecision::Int8, blocks);
+    let q4 = pool_token_capacity(KvPrecision::Int4, blocks);
+    assert_eq!(f16, blocks * 16, "f16 reproduces the historical block math");
+    // The ISSUE's acceptance bar: >= 3x resident tokens at equal bytes
+    // for 4-bit, and a strict (if smaller) win for 8-bit.
+    assert!(
+        q4 >= 3 * f16,
+        "4-bit pool holds {q4} tokens, f16 holds {f16} — below the 3x bar"
+    );
+    assert!(q8 > f16, "8-bit pool holds {q8} tokens, f16 holds {f16}");
+}
+
+#[test]
+fn cow_prefix_sharing_is_intact_on_quantized_blocks() {
+    let _g = serial();
+    for precision in [KvPrecision::Int4, KvPrecision::Int8] {
+        let mut kv = KvBlockManager::new(32, 16, 0.0).with_precision(precision);
+        let tpb = kv.tokens_per_block();
+        // Two full blocks plus a partial third — fork shares all three.
+        let prompt = 2 * tpb + tpb / 2;
+        kv.allocate(1, prompt).unwrap();
+        kv.fork(1, 2).unwrap();
+        assert_eq!(kv.cow_forks(), 0, "{precision:?}: fork shares, it must not copy");
+        kv.check_invariants().unwrap();
+        // Sealing the parent yields only its *full* quantized blocks.
+        let sealed = kv.seal(1).unwrap();
+        assert_eq!(sealed.len(), 2, "{precision:?}: full blocks at {tpb} tokens/block");
+        for b in &sealed {
+            assert_eq!(kv.ref_count(*b), 2, "{precision:?}: fork must share block {b}");
+        }
+        // Appending into the shared partial block triggers exactly one
+        // copy-on-write; the ledger stays exact.
+        for _ in 0..tpb {
+            kv.append_token(2).unwrap();
+        }
+        assert_eq!(kv.cow_forks(), 1, "{precision:?}: shared tail must copy-on-write once");
+        kv.check_invariants().unwrap();
+        kv.free_seq(2).unwrap();
+        kv.free_seq(1).unwrap();
+        kv.check_invariants().unwrap();
+        assert_eq!(kv.allocated_blocks(), 0, "{precision:?}: blocks leaked");
+    }
+}
+
+#[test]
+fn prefix_hit_rate_is_precision_invariant_on_shared_prefix_traffic() {
+    let _g = serial();
+    // System prompts long enough that a shared prefix spans whole cached
+    // blocks at *both* granularities (16 tokens/block at f16, 53 at
+    // 4-bit), on a device whose pool admits the whole offline burst in
+    // arrival order for both runs — so every admission's hit-or-miss
+    // classification depends only on the traffic, not the precision.
+    let reqs = SharedPrefixWorkload {
+        sys_tokens: (256, 384),
+        ..SharedPrefixWorkload::default()
+    }
+    .offline(24, 31);
+    let dev = Gpu::RtxA6000.spec();
+    let spec = Model::Vicuna13B.spec();
+    let base = ContinuousPolicy::default();
+    let calib = Calib::default();
+    let f16 = simulate_continuous(&dev, &spec, KernelKind::Quick, &reqs, &base, &calib);
+    let q4 = simulate_continuous(
+        &dev,
+        &spec,
+        KernelKind::Quick,
+        &reqs,
+        &ContinuousPolicy { kv_precision: KvPrecision::Int4, ..base },
+        &calib,
+    );
+    assert!(!f16.oom && !q4.oom);
+    assert_eq!(f16.finished, reqs.len());
+    assert_eq!(q4.finished, reqs.len());
+    assert!(f16.prefix_hits > 0, "shared-prefix traffic must hit the cache");
+    assert_eq!(q4.prefix_hits, f16.prefix_hits, "hit count changed under quantized KV");
+    assert_eq!(q4.prefix_misses, f16.prefix_misses, "miss count changed under quantized KV");
+    assert!(
+        (q4.prefix_hit_rate() - f16.prefix_hit_rate()).abs() < 1e-12,
+        "hit rate drifted: q4 {:.4} vs f16 {:.4}",
+        q4.prefix_hit_rate(),
+        f16.prefix_hit_rate()
+    );
+    assert!(q4.prefix_tokens_skipped > 0, "hits must skip prefill tokens at 4-bit too");
+}
+
+#[test]
+fn measured_run_records_attention_shape_drift_rows() {
+    let _g = serial();
+    // A measured continuous run over quantized KV: every step executes
+    // the decode-attention term on the real fused kernel, and the drift
+    // ledger gains rows keyed (m, MEASURED_ATTN_CTX, head_dim) —
+    // disjoint from the GEMM (m, k, n) keys because the pinned ctx is
+    // not a weight dimension of any tabulated model.
+    let spec = Model::Tiny.spec();
+    let dev = Gpu::RtxA6000.spec();
+    let policy = ContinuousPolicy {
+        kv_precision: KvPrecision::Int4,
+        ..ContinuousPolicy::measured_default()
+    };
+    let reqs = measured_bursty(6, 707);
+    let run = simulate_continuous_measured(
+        &dev,
+        &spec,
+        StepBackend::Fused,
+        &reqs,
+        &policy,
+        &Calib::default(),
+        GROUP_SIZE,
+        SEED,
+    )
+    .unwrap();
+    assert_eq!(run.result.finished, 6);
+    let head_dim = spec.head_dim();
+    let snap = DriftAccountant::global().snapshot();
+    let attn_rows: Vec<_> = snap
+        .iter()
+        .filter(|(key, _)| key.1 == MEASURED_ATTN_CTX as u64 && key.2 == head_dim)
+        .collect();
+    assert!(
+        !attn_rows.is_empty(),
+        "drift ledger has no (m, {MEASURED_ATTN_CTX}, {head_dim}) attention rows"
+    );
+    for (key, stat) in attn_rows {
+        assert!(key.0 > 0, "degenerate attention batch in {key:?}");
+        assert!(
+            stat.modeled_s > 0.0 && stat.measured_s > 0.0,
+            "{key:?}: both sides of the seam must be populated, got {stat:?}"
+        );
+    }
+}
