@@ -49,6 +49,7 @@ fn main() {
             &ContinuousPolicy::default(),
             &calib,
         )
+        .expect("simulate_continuous")
         .total_tok_per_s
     });
 }

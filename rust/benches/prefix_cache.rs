@@ -44,6 +44,7 @@ fn main() {
             &SimPolicy::default(),
             &Calib::default(),
         )
+        .expect("simulate_serving")
         .total_tok_per_s
     });
 }

@@ -24,6 +24,7 @@ fn main() {
             &SimPolicy::default(),
             &Calib::default(),
         )
+        .expect("simulate_serving")
         .gen_tok_per_s
     });
 }

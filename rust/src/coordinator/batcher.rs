@@ -541,6 +541,7 @@ impl Batcher {
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used)]
     use super::*;
 
     fn req(id: u64, prompt: usize, max_new: usize) -> GenerationRequest {
@@ -631,6 +632,7 @@ mod tests {
 
 #[cfg(test)]
 mod continuous_tests {
+    #![allow(clippy::unwrap_used)]
     use super::*;
 
     fn sched(budget: u64, max_seqs: usize) -> ContinuousScheduler {

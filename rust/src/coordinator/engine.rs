@@ -174,7 +174,10 @@ impl Engine {
             .ok_or_else(|| anyhow!("no prefill artifact for '{}'", cfg.kernel))?;
         let prefill_seq = prefill.seq.unwrap_or(16) as usize;
         let mc = &m.model_config;
-        let max_lanes = *widths.last().unwrap() as usize;
+        let max_lanes = match widths.last() {
+            Some(&w) => w as usize,
+            None => bail!("no decode widths for kernel '{}'", cfg.kernel),
+        };
         let max_seq = mc.max_seq as usize;
         let batcher = Batcher::new(max_lanes, cfg.max_queue, max_seq);
         Ok(Engine {
@@ -390,7 +393,10 @@ impl Engine {
             let seq = &mut self.batcher.seqs[seq_index];
             seq.push_generated(tok);
             self.metrics.generated_tokens += 1;
-            let ttft = seq.first_token_at.unwrap().duration_since(seq.enqueued_at);
+            let first_at = seq
+                .first_token_at
+                .ok_or_else(|| anyhow!("sequence {} generated without a TTFT stamp", seq.req.id))?;
+            let ttft = first_at.duration_since(seq.enqueued_at);
             self.metrics.ttft.record(ttft);
             engine_obs().ttft_s.record(ttft);
             self.last_token_at[lane] = Some(Instant::now());
@@ -451,11 +457,11 @@ impl Engine {
     fn run_decode(&mut self, lanes: &[usize]) -> Result<()> {
         self.metrics.decode_steps += 1;
         self.metrics.decode_lane_steps += lanes.len() as u64;
-        let nb = *self
-            .widths
-            .iter()
-            .find(|&&w| w as usize >= lanes.len())
-            .unwrap_or(self.widths.last().unwrap()) as usize;
+        let widest = self.widths.iter().find(|&&w| w as usize >= lanes.len());
+        let nb = match widest.or(self.widths.last()) {
+            Some(&w) => w as usize,
+            None => bail!("engine has no decode artifact widths"),
+        };
         anyhow::ensure!(lanes.len() <= nb, "more active lanes than widest artifact");
 
         let le = self.lane_elems();
@@ -524,7 +530,10 @@ impl Engine {
         // publishable once flushed to the host.
         let mut completed_prompts: Vec<(usize, usize)> = Vec::new();
         for (slot, &lane) in lanes.iter().enumerate() {
-            let seq_index = self.batcher.seq_in_lane(lane).unwrap();
+            let seq_index = self
+                .batcher
+                .seq_in_lane(lane)
+                .ok_or_else(|| anyhow!("decode batch references empty lane {lane}"))?;
             if self.batcher.seqs[seq_index].in_prefill() {
                 let seq = &mut self.batcher.seqs[seq_index];
                 seq.prefilled += 1;
@@ -563,7 +572,10 @@ impl Engine {
                 self.sync_steady_to_host()?;
             }
             for &(slot, lane) in &completed_prompts {
-                let seq_index = self.batcher.seq_in_lane(lane).unwrap();
+                let seq_index = self
+                    .batcher
+                    .seq_in_lane(lane)
+                    .ok_or_else(|| anyhow!("prompt-completing lane {lane} is empty"))?;
                 if self.cfg.enable_prefix_cache {
                     let prompt = self.batcher.seqs[seq_index].req.prompt.clone();
                     self.register_prompt_blocks(lane, &prompt);
@@ -577,7 +589,10 @@ impl Engine {
                 let seq = &mut self.batcher.seqs[seq_index];
                 seq.push_generated(tok);
                 self.metrics.generated_tokens += 1;
-                let ttft = seq.first_token_at.unwrap().duration_since(seq.enqueued_at);
+                let first_at = seq.first_token_at.ok_or_else(|| {
+                    anyhow!("sequence {} generated without a TTFT stamp", seq.req.id)
+                })?;
+                let ttft = first_at.duration_since(seq.enqueued_at);
                 self.metrics.ttft.record(ttft);
                 engine_obs().ttft_s.record(ttft);
                 self.last_token_at[lane] = Some(now);
@@ -609,7 +624,10 @@ impl Engine {
             self.last_token_at[lane] = None;
             let seq = &self.batcher.seqs[seq_index];
             self.metrics.requests_finished += 1;
-            let e2e = seq.finished_at.unwrap().duration_since(seq.enqueued_at);
+            let finished_at = seq
+                .finished_at
+                .ok_or_else(|| anyhow!("sequence {} finished without a timestamp", seq.req.id))?;
+            let e2e = finished_at.duration_since(seq.enqueued_at);
             self.metrics.e2e.record(e2e);
             engine_obs().e2e_s.record(e2e);
             self.completions.push(Completion {

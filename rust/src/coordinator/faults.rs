@@ -1,0 +1,1273 @@
+//! Deterministic fault injection, replica failover with KV recompute, and
+//! SLO-aware graceful degradation — the chaos-hardening layer over the
+//! multi-replica serving simulation.
+//!
+//! The subsystem has three parts:
+//!
+//! * **Fault plans** ([`FaultPlan`]): a seeded, sorted schedule of replica
+//!   crashes, recoveries, slowdown ("stall") windows, and transient KV-pool
+//!   pressure windows, generated from a `(seed, scenario)` pair so every
+//!   chaos run replays bit-identically ([`FaultPlan::generate`]).
+//! * **Failover with KV-state correctness** ([`run_chaos`]): a crashed
+//!   replica loses its KV pool and prefix cache wholesale — in-flight
+//!   sequences requeue onto healthy replicas through the recompute path
+//!   with exponential backoff, and the crashed replica's cache is replaced
+//!   by a fresh instance so no phantom prefix hits survive the crash
+//!   (asserted by [`ChaosResult::phantom_guard_violations`]). Recovery
+//!   walks the router's unhealthy → probing → healthy ramp.
+//! * **SLO-aware graceful degradation**: when a replica cannot admit a
+//!   request at the pool precision, [`ShedPolicy::DegradeThenReject`]
+//!   retries admission at [`KvPrecision::Int8`] then [`KvPrecision::Int4`]
+//!   — quantized KV packs more tokens per block, so degraded admissions
+//!   ride out pressure windows that would otherwise shed load — before
+//!   falling back to rejection with a [`RejectReason`]. TTFT-expired heads
+//!   are shed instead of served hopelessly late.
+//!
+//! Every admitted request terminates in exactly one [`Outcome`]: finished,
+//! or rejected with a reason code. The chaos property suite
+//! (`tests/chaos_property.rs`) checks that conservation law over hundreds
+//! of random fault plans.
+
+use std::collections::{HashSet, VecDeque};
+use std::sync::OnceLock;
+
+use anyhow::{ensure, Result};
+
+use crate::gpusim::kernel_model::{Calib, KernelKind};
+use crate::gpusim::{tp_step_latency, DeviceSpec};
+use crate::model::LlmSpec;
+use crate::obs::{trace, Counter, Registry};
+use crate::quant::KvPrecision;
+use crate::util::Rng;
+use crate::workload::Request;
+
+use super::batcher::{ChunkPolicy, ContinuousScheduler, SchedState};
+use super::kv_cache::KvBlockManager;
+use super::prefix::PrefixCache;
+use super::router::{Health, Policy, RouteDecision, Router};
+use super::simserve::{
+    append_with_reclaim, context_ids, register_and_free, tp_kv_pool_blocks, ContinuousPolicy,
+};
+
+/// Named fault schedules [`FaultPlan::generate`] knows how to draw.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scenario {
+    /// No faults — the control arm.
+    Calm,
+    /// One replica crashes mid-run and later recovers.
+    SingleCrash,
+    /// Staggered crash/recover windows rolling across every replica.
+    RollingCrashes,
+    /// Slowdown windows (step latency multiplied) on most replicas.
+    StallStorm,
+    /// Transient KV-pool pressure windows on every replica.
+    PressureWave,
+    /// One crash, one stall window, and one pressure window.
+    Mixed,
+}
+
+impl Scenario {
+    /// Every scenario, in a stable order (seed-cycling in tests).
+    pub const ALL: [Scenario; 6] = [
+        Scenario::Calm,
+        Scenario::SingleCrash,
+        Scenario::RollingCrashes,
+        Scenario::StallStorm,
+        Scenario::PressureWave,
+        Scenario::Mixed,
+    ];
+
+    /// Stable display name.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Scenario::Calm => "calm",
+            Scenario::SingleCrash => "single-crash",
+            Scenario::RollingCrashes => "rolling-crashes",
+            Scenario::StallStorm => "stall-storm",
+            Scenario::PressureWave => "pressure-wave",
+            Scenario::Mixed => "mixed",
+        }
+    }
+}
+
+/// One injectable fault (or its clearing edge).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// Replica dies: KV pool and prefix cache lost, in-flight work
+    /// requeues elsewhere, router marks it down.
+    Crash {
+        /// Target replica index.
+        replica: usize,
+    },
+    /// Crashed replica comes back empty and enters the probe ramp.
+    Recover {
+        /// Target replica index.
+        replica: usize,
+    },
+    /// Replica slows down: step latency multiplied by `factor`.
+    StallStart {
+        /// Target replica index.
+        replica: usize,
+        /// Step-latency multiplier (clamped to `>= 1`).
+        factor: f64,
+    },
+    /// Slowdown window ends.
+    StallEnd {
+        /// Target replica index.
+        replica: usize,
+    },
+    /// A ghost allocation grabs `frac` of the replica's free KV blocks
+    /// (co-tenant memory pressure).
+    PressureStart {
+        /// Target replica index.
+        replica: usize,
+        /// Fraction of currently-free blocks to hold (clamped to [0, 1]).
+        frac: f64,
+    },
+    /// Pressure window ends: the ghost allocation is released.
+    PressureEnd {
+        /// Target replica index.
+        replica: usize,
+    },
+}
+
+/// A fault scheduled at a simulated instant.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultEvent {
+    /// Simulated time the fault fires, seconds.
+    pub at_s: f64,
+    /// What happens.
+    pub kind: FaultKind,
+}
+
+/// A reproducible fault schedule: `(seed, scenario)` fully determines the
+/// event list.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlan {
+    /// Seed the schedule was drawn from.
+    pub seed: u64,
+    /// Scenario shape the schedule was drawn for.
+    pub scenario: Scenario,
+    /// Events sorted by [`FaultEvent::at_s`] (ties keep generation order).
+    pub events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    /// Draw a fault schedule for `n_replicas` replicas over `horizon_s`
+    /// simulated seconds. Same `(seed, scenario, n_replicas, horizon_s)`
+    /// → same plan, always.
+    pub fn generate(seed: u64, scenario: Scenario, n_replicas: usize, horizon_s: f64) -> FaultPlan {
+        let n = n_replicas.max(1);
+        let horizon = if horizon_s.is_finite() && horizon_s > 0.0 { horizon_s } else { 1.0 };
+        let mut rng =
+            Rng::seed_from_u64(seed ^ 0x51C4_05EB_FA17_7001u64.wrapping_mul(scenario as u64 + 1));
+        let mut events: Vec<FaultEvent> = Vec::new();
+        let mut window = |rng: &mut Rng, lo: f64, hi: f64| {
+            let start = horizon * rng.range_f64(lo, hi);
+            let dur = horizon * rng.range_f64(0.15, 0.35);
+            (start, start + dur)
+        };
+        match scenario {
+            Scenario::Calm => {}
+            Scenario::SingleCrash => {
+                let r = rng.range_usize(0, n - 1);
+                let (t0, t1) = window(&mut rng, 0.2, 0.5);
+                events.push(FaultEvent { at_s: t0, kind: FaultKind::Crash { replica: r } });
+                events.push(FaultEvent { at_s: t1, kind: FaultKind::Recover { replica: r } });
+            }
+            Scenario::RollingCrashes => {
+                for r in 0..n {
+                    let base = 0.1 + 0.7 * r as f64 / n as f64;
+                    let t0 = horizon * (base + 0.05 * rng.f64());
+                    let t1 = t0 + horizon * rng.range_f64(0.1, 0.2);
+                    events.push(FaultEvent { at_s: t0, kind: FaultKind::Crash { replica: r } });
+                    events.push(FaultEvent { at_s: t1, kind: FaultKind::Recover { replica: r } });
+                }
+            }
+            Scenario::StallStorm => {
+                for r in 0..n {
+                    if n > 1 && rng.f64() < 0.3 {
+                        continue; // leave some replicas clean
+                    }
+                    let (t0, t1) = window(&mut rng, 0.1, 0.5);
+                    let factor = rng.range_f64(2.0, 8.0);
+                    events.push(FaultEvent {
+                        at_s: t0,
+                        kind: FaultKind::StallStart { replica: r, factor },
+                    });
+                    events.push(FaultEvent { at_s: t1, kind: FaultKind::StallEnd { replica: r } });
+                }
+            }
+            Scenario::PressureWave => {
+                for r in 0..n {
+                    let (t0, t1) = window(&mut rng, 0.1, 0.5);
+                    let frac = rng.range_f64(0.5, 0.95);
+                    events.push(FaultEvent {
+                        at_s: t0,
+                        kind: FaultKind::PressureStart { replica: r, frac },
+                    });
+                    events.push(FaultEvent {
+                        at_s: t1,
+                        kind: FaultKind::PressureEnd { replica: r },
+                    });
+                }
+            }
+            Scenario::Mixed => {
+                let rc = rng.range_usize(0, n - 1);
+                let (c0, c1) = window(&mut rng, 0.25, 0.45);
+                events.push(FaultEvent { at_s: c0, kind: FaultKind::Crash { replica: rc } });
+                events.push(FaultEvent { at_s: c1, kind: FaultKind::Recover { replica: rc } });
+                let rs = rng.range_usize(0, n - 1);
+                let (s0, s1) = window(&mut rng, 0.1, 0.4);
+                let factor = rng.range_f64(2.0, 6.0);
+                events.push(FaultEvent {
+                    at_s: s0,
+                    kind: FaultKind::StallStart { replica: rs, factor },
+                });
+                events.push(FaultEvent { at_s: s1, kind: FaultKind::StallEnd { replica: rs } });
+                let rp = rng.range_usize(0, n - 1);
+                let (p0, p1) = window(&mut rng, 0.1, 0.5);
+                let frac = rng.range_f64(0.5, 0.9);
+                events.push(FaultEvent {
+                    at_s: p0,
+                    kind: FaultKind::PressureStart { replica: rp, frac },
+                });
+                events.push(FaultEvent { at_s: p1, kind: FaultKind::PressureEnd { replica: rp } });
+            }
+        }
+        events.sort_by(|a, b| a.at_s.total_cmp(&b.at_s));
+        FaultPlan { seed, scenario, events }
+    }
+}
+
+/// Per-request latency deadlines the shed ladder enforces.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SloSpec {
+    /// Time-to-first-token deadline: a request still waiting for its first
+    /// dispatch/admission past this is shed with
+    /// [`RejectReason::SloExpired`].
+    pub ttft_s: f64,
+    /// Time-per-output-token budget: finished requests whose mean decode
+    /// interval exceeded this count as [`ChaosResult::tpot_violations`].
+    pub tpot_s: f64,
+}
+
+impl Default for SloSpec {
+    fn default() -> Self {
+        SloSpec { ttft_s: 30.0, tpot_s: 0.5 }
+    }
+}
+
+/// What a replica does when a request cannot be admitted at the pool's
+/// configured KV precision.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShedPolicy {
+    /// Retry admission at kv8 then kv4 (quantized KV packs more tokens
+    /// per block) before giving up — graceful degradation.
+    DegradeThenReject,
+    /// Never degrade: wait, then shed on SLO expiry.
+    RejectOnly,
+}
+
+impl ShedPolicy {
+    /// Stable display name.
+    pub fn label(&self) -> &'static str {
+        match self {
+            ShedPolicy::DegradeThenReject => "degrade",
+            ShedPolicy::RejectOnly => "reject-only",
+        }
+    }
+}
+
+/// Why a request was turned away.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RejectReason {
+    /// Larger than the whole KV pool even at the lowest allowed precision.
+    Oversized,
+    /// Still undispatched/unadmitted past the TTFT deadline.
+    SloExpired,
+    /// Crashed out of its last allowed failover attempt.
+    RetriesExhausted,
+    /// Work left stranded when nothing could ever serve it again.
+    NoCapacity,
+}
+
+impl RejectReason {
+    /// Stable display name.
+    pub fn label(&self) -> &'static str {
+        match self {
+            RejectReason::Oversized => "oversized",
+            RejectReason::SloExpired => "slo-expired",
+            RejectReason::RetriesExhausted => "retries-exhausted",
+            RejectReason::NoCapacity => "no-capacity",
+        }
+    }
+}
+
+/// Terminal state of one admitted request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Outcome {
+    /// Generated its full token budget.
+    Finished,
+    /// Shed with a reason code.
+    Rejected(RejectReason),
+}
+
+/// Configuration for a chaos serving run.
+#[derive(Debug, Clone)]
+pub struct ChaosPolicy {
+    /// Per-replica continuous-batching policy (token budget, block size,
+    /// watermark, base KV precision, ...).
+    pub serve: ContinuousPolicy,
+    /// Replica count.
+    pub n_replicas: usize,
+    /// Routing policy across replicas.
+    pub route: Policy,
+    /// Latency deadlines.
+    pub slo: SloSpec,
+    /// Degrade-or-reject behavior under pool pressure.
+    pub shed: ShedPolicy,
+    /// Failover attempts per request before [`RejectReason::RetriesExhausted`].
+    pub max_retries: u32,
+    /// Base failover backoff, doubled per retry.
+    pub retry_backoff_s: f64,
+    /// Probe completions a recovered replica must serve before it is
+    /// fully routable again.
+    pub probe_successes: u32,
+    /// KV pool size override in blocks per replica; `None` sizes the pool
+    /// from the device/model as the serving simulation does.
+    pub pool_blocks: Option<u64>,
+    /// Livelock backstop: the run errors out after this many scheduler
+    /// iterations.
+    pub max_steps: u64,
+}
+
+impl Default for ChaosPolicy {
+    fn default() -> Self {
+        ChaosPolicy {
+            serve: ContinuousPolicy::default(),
+            n_replicas: 2,
+            route: Policy::LeastLoaded,
+            slo: SloSpec::default(),
+            shed: ShedPolicy::DegradeThenReject,
+            max_retries: 3,
+            retry_backoff_s: 0.05,
+            probe_successes: 2,
+            pool_blocks: None,
+            max_steps: 2_000_000,
+        }
+    }
+}
+
+/// What a chaos run produced.
+#[derive(Debug, Clone, Default)]
+pub struct ChaosResult {
+    /// Requests that generated their full budget.
+    pub finished: usize,
+    /// Requests shed with a reason code.
+    pub rejected: usize,
+    /// Simulated wall time, seconds.
+    pub wall_s: f64,
+    /// Generation tokens delivered by finished requests.
+    pub gen_tokens: u64,
+    /// `gen_tokens / wall_s` — tokens of *completed* work per second.
+    pub goodput_tok_per_s: f64,
+    /// Mixed scheduler steps executed across all replicas.
+    pub steps: u64,
+    /// Crash events applied.
+    pub crashes: u64,
+    /// Recovery events applied.
+    pub recoveries: u64,
+    /// Stall windows opened.
+    pub stall_windows: u64,
+    /// Pressure windows opened.
+    pub pressure_windows: u64,
+    /// KV-pressure preemptions (recompute policy).
+    pub preemptions: u64,
+    /// In-flight sequences requeued off crashed replicas.
+    pub failover_requeues: u64,
+    /// Admissions degraded to kv8.
+    pub degraded_int8: u64,
+    /// Admissions degraded to kv4.
+    pub degraded_int4: u64,
+    /// Rejections: larger than the whole pool.
+    pub rejected_oversized: u64,
+    /// Rejections: TTFT deadline expired.
+    pub rejected_slo: u64,
+    /// Rejections: failover retries exhausted.
+    pub rejected_retries: u64,
+    /// Rejections: stranded with no capacity left, ever.
+    pub rejected_capacity: u64,
+    /// Finished requests whose mean decode interval blew the TPOT budget.
+    pub tpot_violations: u64,
+    /// Prefix-cache hits accumulated across every cache generation
+    /// (crashes replace caches; pre-crash stats fold in here).
+    pub prefix_hits: u64,
+    /// Structural check: nonzero iff a freshly installed post-crash cache
+    /// was not empty. Always 0 unless the failover path regresses.
+    pub phantom_guard_violations: u64,
+    /// `(request id, terminal state)` — exactly one entry per request.
+    pub outcomes: Vec<(u64, Outcome)>,
+}
+
+/// Handles on the `chaos.*` counters in the global metrics registry.
+struct ChaosMetrics {
+    crashes: Counter,
+    recoveries: Counter,
+    stalls: Counter,
+    pressure_events: Counter,
+    degraded_admissions: Counter,
+    rejected: Counter,
+    requeued_on_failover: Counter,
+}
+
+fn chaos_metrics() -> &'static ChaosMetrics {
+    static METRICS: OnceLock<ChaosMetrics> = OnceLock::new();
+    METRICS.get_or_init(|| {
+        let r = Registry::global();
+        ChaosMetrics {
+            crashes: r.counter("chaos.crashes"),
+            recoveries: r.counter("chaos.recoveries"),
+            stalls: r.counter("chaos.stalls"),
+            pressure_events: r.counter("chaos.pressure_events"),
+            degraded_admissions: r.counter("chaos.degraded_admissions"),
+            rejected: r.counter("chaos.rejected"),
+            requeued_on_failover: r.counter("chaos.requeued_on_failover"),
+        }
+    })
+}
+
+/// Ghost sequence id for replica-local pressure allocations; request ids
+/// must stay below this space.
+fn ghost_id(replica: usize) -> u64 {
+    (1u64 << 60) + replica as u64
+}
+
+/// A request waiting to be routed (fresh arrival or failover requeue).
+struct PendingDispatch {
+    req: Request,
+    retries: u32,
+    not_before: f64,
+    orig_gen: u64,
+}
+
+/// One replica's serving state.
+struct ReplicaState {
+    kv: KvBlockManager,
+    cache: PrefixCache,
+    sched: ContinuousScheduler,
+    slot_req: Vec<Request>,
+    slot_ids: Vec<Vec<i32>>,
+    slot_decision: Vec<RouteDecision>,
+    slot_retries: Vec<u32>,
+    slot_first_tok: Vec<Option<f64>>,
+    slot_orig_gen: Vec<u64>,
+    /// Head + pool fingerprint of the last failed admission (retry is
+    /// pointless until either changes).
+    admit_blocked: Option<(usize, u64, u64)>,
+    stall_factor: f64,
+    crashed: bool,
+    ghost: bool,
+    /// Replica-local clock, seconds.
+    now: f64,
+}
+
+impl ReplicaState {
+    fn new(policy: &ChaosPolicy, blocks: u64) -> Self {
+        let kv = KvBlockManager::new(blocks, policy.serve.block_size, policy.serve.watermark_frac)
+            .with_precision(policy.serve.kv_precision);
+        let cache =
+            PrefixCache::new(kv.tokens_per_block() as usize, policy.serve.enable_prefix_cache);
+        let sched = ContinuousScheduler::new(ChunkPolicy {
+            token_budget: policy.serve.token_budget,
+            max_num_seqs: policy.serve.max_num_seqs,
+        });
+        ReplicaState {
+            kv,
+            cache,
+            sched,
+            slot_req: Vec::new(),
+            slot_ids: Vec::new(),
+            slot_decision: Vec::new(),
+            slot_retries: Vec::new(),
+            slot_first_tok: Vec::new(),
+            slot_orig_gen: Vec::new(),
+            admit_blocked: None,
+            stall_factor: 1.0,
+            crashed: false,
+            ghost: false,
+            now: 0.0,
+        }
+    }
+
+    /// Replace every piece of serving state with a fresh instance — the
+    /// crash loses the KV pool, the prefix cache, and the scheduler.
+    fn reset_after_crash(&mut self, policy: &ChaosPolicy, blocks: u64) {
+        let now = self.now;
+        *self = ReplicaState::new(policy, blocks);
+        self.now = now;
+    }
+}
+
+/// Read-only context threaded through the step helpers.
+struct Env<'a> {
+    dev: &'a DeviceSpec,
+    spec: &'a LlmSpec,
+    kind: KernelKind,
+    calib: &'a Calib,
+    policy: &'a ChaosPolicy,
+}
+
+fn record_reject(res: &mut ChaosResult, id: u64, reason: RejectReason) {
+    res.rejected += 1;
+    match reason {
+        RejectReason::Oversized => res.rejected_oversized += 1,
+        RejectReason::SloExpired => res.rejected_slo += 1,
+        RejectReason::RetriesExhausted => res.rejected_retries += 1,
+        RejectReason::NoCapacity => res.rejected_capacity += 1,
+    }
+    res.outcomes.push((id, Outcome::Rejected(reason)));
+    chaos_metrics().rejected.inc();
+}
+
+/// Shed the replica's waiting head: release its router accounting and
+/// record the outcome.
+fn reject_head(
+    rep: &mut ReplicaState,
+    router: &mut Router,
+    res: &mut ChaosResult,
+    reason: RejectReason,
+) {
+    let Some(sid) = rep.sched.reject_waiting_head() else { return };
+    let req = rep.slot_req[sid];
+    router.on_finish(rep.slot_decision[sid], req.prompt_tokens + req.gen_tokens);
+    record_reject(res, req.id, reason);
+}
+
+/// Would this request exceed the whole pool even at the lowest precision
+/// the shed policy may admit it at?
+fn oversized(rep: &ReplicaState, req: &Request, env: &Env<'_>) -> bool {
+    let mut floor = rep.kv.precision();
+    if env.policy.shed == ShedPolicy::DegradeThenReject && KvPrecision::Int4.bits() < floor.bits() {
+        floor = KvPrecision::Int4;
+    }
+    rep.kv.blocks_needed_at(req.prompt_tokens.max(1), floor) + rep.kv.watermark_blocks()
+        > rep.kv.total_blocks()
+}
+
+/// The degradation ladder: try admitting the waiting head at kv8, then
+/// kv4. Degraded sequences skip the prefix cache entirely (no lease, no
+/// registration — `register_and_free`'s precision guard keeps mixed
+/// precisions out of the shared index).
+fn admit_degraded(
+    rep: &mut ReplicaState,
+    sid: usize,
+    env: &Env<'_>,
+    res: &mut ChaosResult,
+) -> Result<bool> {
+    if env.policy.shed != ShedPolicy::DegradeThenReject {
+        return Ok(false);
+    }
+    let req = rep.slot_req[sid];
+    let base_bits = rep.kv.precision().bits();
+    for precision in [KvPrecision::Int8, KvPrecision::Int4] {
+        if precision.bits() >= base_bits {
+            continue;
+        }
+        if !rep.kv.can_admit_at(req.prompt_tokens, precision) {
+            continue;
+        }
+        let need = rep.kv.blocks_needed_at(req.prompt_tokens.max(1), precision);
+        if !rep.cache.reclaim(&mut rep.kv, need) {
+            continue;
+        }
+        rep.kv.allocate_with_precision(req.id, req.prompt_tokens, precision)?;
+        let got = rep.sched.admit_next(0, |_| true);
+        debug_assert_eq!(got, Some(sid));
+        match precision {
+            KvPrecision::Int8 => res.degraded_int8 += 1,
+            _ => res.degraded_int4 += 1,
+        }
+        chaos_metrics().degraded_admissions.inc();
+        return Ok(true);
+    }
+    Ok(false)
+}
+
+/// Complete a running sequence: publish+free its KV, release router
+/// accounting, feed the probe ramp, and record the outcome.
+fn finish_slot(
+    rep: &mut ReplicaState,
+    router: &mut Router,
+    r_idx: usize,
+    sid: usize,
+    env: &Env<'_>,
+    res: &mut ChaosResult,
+) -> Result<()> {
+    let req = rep.slot_req[sid];
+    let generated = rep.sched.seq(sid).generated;
+    register_and_free(&mut rep.kv, &mut rep.cache, &req)?;
+    rep.sched.finish(sid);
+    router.on_finish(rep.slot_decision[sid], req.prompt_tokens + req.gen_tokens);
+    if matches!(router.health(r_idx), Health::Probing) {
+        router.probe_result(r_idx, true);
+    }
+    if let Some(first) = rep.slot_first_tok[sid] {
+        if generated > 1 {
+            let tpot = (rep.now - first) / (generated - 1) as f64;
+            if tpot > env.policy.slo.tpot_s {
+                res.tpot_violations += 1;
+            }
+        }
+    }
+    res.finished += 1;
+    res.gen_tokens += rep.slot_orig_gen[sid];
+    res.outcomes.push((req.id, Outcome::Finished));
+    Ok(())
+}
+
+/// Run admission (with the shed ladder) and one mixed scheduler step on
+/// a replica. Returns whether the replica advanced its clock; `false`
+/// means it is blocked: nothing running and the head unadmittable.
+fn step_replica(
+    rep: &mut ReplicaState,
+    router: &mut Router,
+    r_idx: usize,
+    env: &Env<'_>,
+    res: &mut ChaosResult,
+) -> Result<bool> {
+    // --- admission: FCFS with the SLO shed ladder ---
+    while rep.sched.running_len() < env.policy.serve.max_num_seqs {
+        let Some(sid) = rep.sched.peek_waiting() else { break };
+        let req = rep.slot_req[sid];
+        if rep.sched.running_len() == 0 {
+            // With nothing running the pool will never improve on its
+            // own: shed hopeless or already-expired heads now.
+            if oversized(rep, &req, env) {
+                reject_head(rep, router, res, RejectReason::Oversized);
+                continue;
+            }
+            if rep.slot_retries[sid] == 0 && rep.now - req.arrival_s() >= env.policy.slo.ttft_s {
+                reject_head(rep, router, res, RejectReason::SloExpired);
+                continue;
+            }
+        }
+        let pool = (rep.kv.free_blocks(), rep.kv.cached_idle_blocks());
+        if rep.admit_blocked == Some((sid, pool.0, pool.1)) {
+            break; // same head, same pool: admission would fail again
+        }
+        let admitted = match rep.cache.admit(&mut rep.kv, req.id, &rep.slot_ids[sid]) {
+            Ok(matched) => {
+                let got = rep.sched.admit_next(matched, |_| true);
+                debug_assert_eq!(got, Some(sid));
+                // Publish the prompt's full blocks eagerly so concurrent
+                // same-prefix requests share them.
+                let _ = rep.cache.register(&mut rep.kv, req.id, &rep.slot_ids[sid]);
+                true
+            }
+            Err(_) => admit_degraded(rep, sid, env, res)?,
+        };
+        if admitted {
+            rep.admit_blocked = None;
+        } else {
+            rep.admit_blocked = Some((sid, pool.0, pool.1));
+            break;
+        }
+    }
+
+    // --- one mixed step: decode lanes + FCFS prefill chunks ---
+    let batch = rep.sched.plan_step();
+    if batch.is_empty() {
+        debug_assert_eq!(rep.sched.running_len(), 0);
+        return Ok(false);
+    }
+    let decode_batch = batch.decode.len() as u64;
+    let mean_ctx = if decode_batch > 0 {
+        batch
+            .decode
+            .iter()
+            .map(|&sid| {
+                let s = rep.sched.seq(sid);
+                s.prompt_tokens + s.generated
+            })
+            .sum::<u64>()
+            / decode_batch
+    } else {
+        0
+    };
+    let perf = tp_step_latency(
+        env.dev,
+        env.spec,
+        env.kind,
+        1,
+        decode_batch,
+        mean_ctx,
+        batch.prefill_tokens(),
+        batch.prefill_attn_ctx_tokens(),
+        env.calib,
+    );
+    rep.now += perf.total_s() * rep.stall_factor;
+    res.steps += 1;
+
+    // Commit prefill chunks; a prompt-completing chunk's last logits
+    // yield the sequence's first generated token.
+    for c in &batch.chunks {
+        if rep.sched.commit_chunk(c) {
+            rep.sched.commit_first_token(c.seq);
+            rep.slot_first_tok[c.seq] = Some(rep.now);
+            let (generated, budget) = {
+                let s = rep.sched.seq(c.seq);
+                (s.generated, s.gen_budget)
+            };
+            if generated >= budget {
+                finish_slot(rep, router, r_idx, c.seq, env, res)?;
+                continue;
+            }
+            let req = rep.slot_req[c.seq];
+            if !append_with_reclaim(&mut rep.kv, &mut rep.cache, req.id) {
+                register_and_free(&mut rep.kv, &mut rep.cache, &req)?;
+                rep.sched.preempt(c.seq);
+                res.preemptions += 1;
+            }
+        }
+    }
+    // Commit decode lanes; finished sequences leave their blocks warm in
+    // the cache, KV exhaustion preempts (recompute policy).
+    for &sid in &batch.decode {
+        let done = rep.sched.commit_decode(sid);
+        let req = rep.slot_req[sid];
+        if done {
+            finish_slot(rep, router, r_idx, sid, env, res)?;
+            continue;
+        }
+        if !append_with_reclaim(&mut rep.kv, &mut rep.cache, req.id) {
+            register_and_free(&mut rep.kv, &mut rep.cache, &req)?;
+            rep.sched.preempt(sid);
+            res.preemptions += 1;
+        }
+    }
+    Ok(true)
+}
+
+/// Route every eligible queued request to a healthy replica; shed
+/// first-dispatch requests whose TTFT deadline already expired. Entries
+/// that cannot be placed (backoff pending, or no routable replica) stay
+/// queued.
+fn dispatch_pass(
+    dispatch: &mut VecDeque<PendingDispatch>,
+    router: &mut Router,
+    replicas: &mut [ReplicaState],
+    clock: f64,
+    policy: &ChaosPolicy,
+    res: &mut ChaosResult,
+) {
+    let mut keep: VecDeque<PendingDispatch> = VecDeque::with_capacity(dispatch.len());
+    while let Some(p) = dispatch.pop_front() {
+        if p.not_before > clock {
+            keep.push_back(p);
+            continue;
+        }
+        // Failover retries already produced a first token on their
+        // original replica: TTFT shedding applies to first dispatch only.
+        if p.retries == 0 && clock - p.req.arrival_s() >= policy.slo.ttft_s {
+            record_reject(res, p.req.id, RejectReason::SloExpired);
+            continue;
+        }
+        match router.route(p.req.prompt_tokens + p.req.gen_tokens, None) {
+            Some(d) => {
+                let rep = &mut replicas[d.replica];
+                debug_assert!(!rep.crashed);
+                rep.now = rep.now.max(clock);
+                let sid = rep.sched.submit(p.req.id, p.req.prompt_tokens, p.req.gen_tokens.max(1));
+                debug_assert_eq!(sid, rep.slot_req.len());
+                rep.slot_ids.push(context_ids(&p.req, p.req.prompt_tokens));
+                rep.slot_req.push(p.req);
+                rep.slot_decision.push(d);
+                rep.slot_retries.push(p.retries);
+                rep.slot_first_tok.push(None);
+                rep.slot_orig_gen.push(p.orig_gen);
+            }
+            None => keep.push_back(p),
+        }
+    }
+    *dispatch = keep;
+}
+
+/// Apply one fault event. Crashes requeue live work into `dispatch`.
+#[allow(clippy::too_many_arguments)]
+fn apply_event(
+    e: &FaultEvent,
+    replicas: &mut [ReplicaState],
+    router: &mut Router,
+    dispatch: &mut VecDeque<PendingDispatch>,
+    res: &mut ChaosResult,
+    policy: &ChaosPolicy,
+    blocks: u64,
+) {
+    let _span = trace::span1("chaos.fault", "chaos", "at_ms", e.at_s * 1e3);
+    match e.kind {
+        FaultKind::Crash { replica } => {
+            let Some(rep) = replicas.get_mut(replica) else { return };
+            if rep.crashed {
+                return;
+            }
+            res.crashes += 1;
+            chaos_metrics().crashes.inc();
+            // Zero the router's in-flight accounting for this replica so
+            // it is not "loaded" forever (and not routable while down).
+            let _ = router.mark_down(replica);
+            // The cache dies with the replica: fold its stats into the
+            // run totals before discarding it.
+            res.prefix_hits += rep.cache.stats.hits;
+            // Requeue everything in flight: the KV is gone, so failover
+            // recomputes the remaining generation on a healthy replica.
+            for sid in 0..rep.slot_req.len() {
+                let s = rep.sched.seq(sid);
+                if s.state == SchedState::Finished {
+                    continue;
+                }
+                let req = rep.slot_req[sid];
+                let remaining = s.gen_budget.saturating_sub(s.generated).max(1);
+                let retries = rep.slot_retries[sid] + 1;
+                if retries > policy.max_retries {
+                    record_reject(res, req.id, RejectReason::RetriesExhausted);
+                    continue;
+                }
+                let backoff = policy.retry_backoff_s * (1u64 << (retries - 1).min(20)) as f64;
+                dispatch.push_back(PendingDispatch {
+                    req: Request { gen_tokens: remaining, ..req },
+                    retries,
+                    not_before: e.at_s + backoff,
+                    orig_gen: rep.slot_orig_gen[sid],
+                });
+                res.failover_requeues += 1;
+                chaos_metrics().requeued_on_failover.inc();
+            }
+            rep.reset_after_crash(policy, blocks);
+            // Structural phantom-hit guard: the freshly installed cache
+            // must be empty — a crashed replica's prefix blocks are gone.
+            if rep.cache.stats.hits != 0 || !rep.cache.index().is_empty() {
+                res.phantom_guard_violations += 1;
+            }
+            rep.crashed = true;
+            rep.now = rep.now.max(e.at_s);
+        }
+        FaultKind::Recover { replica } => {
+            let Some(rep) = replicas.get_mut(replica) else { return };
+            if !rep.crashed {
+                return;
+            }
+            rep.crashed = false;
+            rep.now = rep.now.max(e.at_s);
+            router.begin_probe(replica);
+            res.recoveries += 1;
+            chaos_metrics().recoveries.inc();
+        }
+        FaultKind::StallStart { replica, factor } => {
+            let Some(rep) = replicas.get_mut(replica) else { return };
+            if rep.crashed {
+                return;
+            }
+            rep.stall_factor = factor.max(1.0);
+            res.stall_windows += 1;
+            chaos_metrics().stalls.inc();
+        }
+        FaultKind::StallEnd { replica } => {
+            if let Some(rep) = replicas.get_mut(replica) {
+                rep.stall_factor = 1.0;
+            }
+        }
+        FaultKind::PressureStart { replica, frac } => {
+            let Some(rep) = replicas.get_mut(replica) else { return };
+            if rep.crashed {
+                return;
+            }
+            if rep.ghost {
+                let _ = rep.kv.free_seq(ghost_id(replica));
+                rep.ghost = false;
+            }
+            let grab = (rep.kv.free_blocks() as f64 * frac.clamp(0.0, 1.0)) as u64;
+            if grab >= 1 {
+                let tokens = grab * rep.kv.tokens_per_block();
+                if rep.kv.allocate(ghost_id(replica), tokens).is_ok() {
+                    rep.ghost = true;
+                }
+            }
+            res.pressure_windows += 1;
+            chaos_metrics().pressure_events.inc();
+        }
+        FaultKind::PressureEnd { replica } => {
+            let Some(rep) = replicas.get_mut(replica) else { return };
+            if rep.ghost {
+                let _ = rep.kv.free_seq(ghost_id(replica));
+                rep.ghost = false;
+            }
+        }
+    }
+}
+
+/// Serve `requests` on `policy.n_replicas` replicas while `plan`'s faults
+/// fire — a discrete-event simulation over the same continuous-batching
+/// core as `simulate_continuous`, plus the router's health machine,
+/// failover-with-recompute, and the SLO shed ladder.
+///
+/// Deterministic: the same `(requests, plan, policy)` always produces the
+/// same [`ChaosResult`]. Every request terminates in exactly one
+/// [`Outcome`].
+pub fn run_chaos(
+    dev: &DeviceSpec,
+    spec: &LlmSpec,
+    kind: KernelKind,
+    requests: &[Request],
+    plan: &FaultPlan,
+    policy: &ChaosPolicy,
+    calib: &Calib,
+) -> Result<ChaosResult> {
+    ensure!(policy.n_replicas >= 1, "chaos policy needs at least one replica");
+    let mut seen_ids = HashSet::new();
+    for r in requests {
+        ensure!(r.prompt_tokens > 0, "request {} has an empty prompt", r.id);
+        ensure!(r.gen_tokens > 0, "request {} has an empty generation budget", r.id);
+        ensure!(seen_ids.insert(r.id), "duplicate request id {} in chaos workload", r.id);
+        ensure!(r.id < 1 << 60, "request id {} collides with the ghost-sequence id space", r.id);
+    }
+
+    let blocks = match policy.pool_blocks {
+        Some(b) => b,
+        None => {
+            let p = &policy.serve;
+            tp_kv_pool_blocks(dev, spec, kind, p.block_size, p.headroom_frac, 1)
+        }
+    };
+    ensure!(blocks > 0, "KV pool has zero blocks: the device cannot hold the model weights");
+
+    let _span = trace::span2(
+        "chaos.run",
+        "chaos",
+        "replicas",
+        policy.n_replicas as f64,
+        "requests",
+        requests.len() as f64,
+    );
+    let mut router = Router::new(policy.route, &vec![0; policy.n_replicas])?
+        .with_probe_successes(policy.probe_successes);
+    let mut replicas: Vec<ReplicaState> =
+        (0..policy.n_replicas).map(|_| ReplicaState::new(policy, blocks)).collect();
+
+    let mut sorted: Vec<Request> = requests.to_vec();
+    sorted.sort_by_key(|r| (r.arrival_s_micros, r.id));
+    let mut pending: VecDeque<Request> = sorted.into();
+    let mut dispatch: VecDeque<PendingDispatch> = VecDeque::new();
+    let mut events: VecDeque<FaultEvent> = plan.events.iter().copied().collect();
+
+    let mut res = ChaosResult::default();
+    let env = Env { dev, spec, kind, calib, policy };
+    let mut clock = 0.0f64;
+    let mut iters = 0u64;
+
+    loop {
+        iters += 1;
+        ensure!(
+            iters <= policy.max_steps,
+            "chaos run exceeded {} scheduler iterations (livelock backstop)",
+            policy.max_steps
+        );
+
+        // Fault events due at or before the global clock.
+        loop {
+            match events.front() {
+                Some(e) if e.at_s <= clock => {
+                    let e = *e;
+                    events.pop_front();
+                    apply_event(
+                        &e,
+                        &mut replicas,
+                        &mut router,
+                        &mut dispatch,
+                        &mut res,
+                        policy,
+                        blocks,
+                    );
+                }
+                _ => break,
+            }
+        }
+        // Arrivals due.
+        loop {
+            match pending.front() {
+                Some(r) if r.arrival_s() <= clock => {
+                    let r = *r;
+                    pending.pop_front();
+                    dispatch.push_back(PendingDispatch {
+                        req: r,
+                        retries: 0,
+                        not_before: r.arrival_s(),
+                        orig_gen: r.gen_tokens,
+                    });
+                }
+                _ => break,
+            }
+        }
+        dispatch_pass(&mut dispatch, &mut router, &mut replicas, clock, policy, &mut res);
+
+        // Earliest external state change the run still has ahead of it.
+        let mut wake = f64::INFINITY;
+        if let Some(e) = events.front() {
+            wake = wake.min(e.at_s);
+        }
+        if let Some(r) = pending.front() {
+            wake = wake.min(r.arrival_s());
+        }
+        for p in &dispatch {
+            if p.not_before > clock {
+                wake = wake.min(p.not_before);
+            }
+        }
+
+        // Step the earliest-clock replica that can make progress, unless
+        // an external change lands before its step would.
+        let mut order: Vec<usize> = (0..replicas.len())
+            .filter(|&i| !replicas[i].crashed && replicas[i].sched.has_work())
+            .collect();
+        order.sort_by(|&a, &b| replicas[a].now.total_cmp(&replicas[b].now).then(a.cmp(&b)));
+        let mut progressed = false;
+        for &r in &order {
+            let tr = replicas[r].now.max(clock);
+            if wake <= tr {
+                break; // apply the external change first, then re-plan
+            }
+            replicas[r].now = tr;
+            if step_replica(&mut replicas[r], &mut router, r, &env, &mut res)? {
+                clock = tr;
+                progressed = true;
+                break;
+            }
+            // Blocked: nothing running and the head unadmittable. Its
+            // only self-driven transition is head TTFT expiry.
+            let rep = &replicas[r];
+            if let Some(sid) = rep.sched.peek_waiting() {
+                if rep.slot_retries[sid] == 0 {
+                    let deadline = rep.slot_req[sid].arrival_s() + policy.slo.ttft_s;
+                    if deadline > clock {
+                        wake = wake.min(deadline);
+                    }
+                }
+            }
+        }
+        if progressed {
+            continue;
+        }
+        if wake.is_finite() {
+            clock = wake;
+            continue;
+        }
+        break; // nothing can ever happen again
+    }
+
+    // Terminal sweep: whatever is still queued can never be served.
+    while let Some(p) = dispatch.pop_front() {
+        record_reject(&mut res, p.req.id, RejectReason::NoCapacity);
+    }
+    for rep in replicas.iter_mut() {
+        while rep.sched.peek_waiting().is_some() {
+            reject_head(rep, &mut router, &mut res, RejectReason::NoCapacity);
+        }
+    }
+
+    for rep in &replicas {
+        res.prefix_hits += rep.cache.stats.hits;
+        res.wall_s = res.wall_s.max(rep.now);
+    }
+    res.wall_s = res.wall_s.max(clock);
+    res.goodput_tok_per_s = res.gen_tokens as f64 / res.wall_s.max(1e-9);
+    Ok(res)
+}
+
+#[cfg(test)]
+mod tests {
+    #![allow(clippy::unwrap_used)]
+    use super::*;
+    use crate::gpusim::Gpu;
+    use crate::model::Model;
+    use crate::workload::ShareGptLike;
+
+    fn specs() -> (DeviceSpec, LlmSpec) {
+        (Gpu::RtxA6000.spec(), Model::Mistral7B.spec())
+    }
+
+    fn small_policy(n_replicas: usize, shed: ShedPolicy) -> ChaosPolicy {
+        ChaosPolicy {
+            serve: ContinuousPolicy { max_num_seqs: 16, token_budget: 256, ..Default::default() },
+            n_replicas,
+            shed,
+            slo: SloSpec { ttft_s: 1e9, tpot_s: 1e9 },
+            pool_blocks: Some(512),
+            ..Default::default()
+        }
+    }
+
+    fn run(reqs: &[Request], plan: &FaultPlan, policy: &ChaosPolicy) -> ChaosResult {
+        let (dev, spec) = specs();
+        run_chaos(&dev, &spec, KernelKind::Quick, reqs, plan, policy, &Calib::default()).unwrap()
+    }
+
+    fn one_request(id: u64, prompt: u64, gen: u64) -> Request {
+        Request {
+            id,
+            prompt_tokens: prompt,
+            gen_tokens: gen,
+            arrival_s_micros: 0,
+            sys_id: 0,
+            sys_tokens: 0,
+            stream_id: id,
+        }
+    }
+
+    #[test]
+    fn fault_plan_is_deterministic() {
+        let a = FaultPlan::generate(42, Scenario::Mixed, 3, 20.0);
+        let b = FaultPlan::generate(42, Scenario::Mixed, 3, 20.0);
+        assert_eq!(a.events, b.events);
+        assert!(!a.events.is_empty());
+        for w in a.events.windows(2) {
+            assert!(w[0].at_s <= w[1].at_s, "events must be time-sorted");
+        }
+    }
+
+    #[test]
+    fn calm_scenario_completes_every_request() {
+        let reqs = ShareGptLike::new().online(40, 8.0, 7);
+        let plan = FaultPlan::generate(1, Scenario::Calm, 2, 10.0);
+        let res = run(&reqs, &plan, &small_policy(2, ShedPolicy::DegradeThenReject));
+        assert_eq!(res.finished, reqs.len());
+        assert_eq!(res.rejected, 0);
+        assert_eq!(res.outcomes.len(), reqs.len());
+        assert_eq!(res.crashes, 0);
+        assert_eq!(res.phantom_guard_violations, 0);
+        assert!(res.goodput_tok_per_s > 0.0);
+    }
+
+    #[test]
+    fn run_chaos_is_deterministic() {
+        let reqs = ShareGptLike::new().online(25, 15.0, 11);
+        let plan = FaultPlan::generate(9, Scenario::Mixed, 2, 8.0);
+        let policy = small_policy(2, ShedPolicy::DegradeThenReject);
+        let a = run(&reqs, &plan, &policy);
+        let b = run(&reqs, &plan, &policy);
+        assert_eq!(a.outcomes, b.outcomes);
+        assert_eq!(a.steps, b.steps);
+        assert_eq!(a.goodput_tok_per_s.to_bits(), b.goodput_tok_per_s.to_bits());
+    }
+
+    #[test]
+    fn single_crash_fails_over_and_conserves_requests() {
+        let reqs = ShareGptLike::new().offline(30, 3);
+        let plan = FaultPlan {
+            seed: 0,
+            scenario: Scenario::SingleCrash,
+            events: vec![
+                FaultEvent { at_s: 0.05, kind: FaultKind::Crash { replica: 0 } },
+                FaultEvent { at_s: 5.0, kind: FaultKind::Recover { replica: 0 } },
+            ],
+        };
+        let res = run(&reqs, &plan, &small_policy(2, ShedPolicy::DegradeThenReject));
+        assert_eq!(res.crashes, 1);
+        assert_eq!(res.recoveries, 1);
+        assert!(res.failover_requeues > 0, "crash at 0.05s must catch in-flight work");
+        assert_eq!(res.finished + res.rejected, reqs.len());
+        assert_eq!(res.outcomes.len(), reqs.len());
+        let mut ids: Vec<u64> = res.outcomes.iter().map(|&(id, _)| id).collect();
+        ids.sort_unstable();
+        let mut want: Vec<u64> = reqs.iter().map(|r| r.id).collect();
+        want.sort_unstable();
+        assert_eq!(ids, want, "exactly one outcome per request");
+        assert_eq!(res.phantom_guard_violations, 0);
+    }
+
+    #[test]
+    fn degrade_ladder_admits_what_reject_only_sheds() {
+        // 64-block pool, 90% held by pressure: a 100-token prompt needs
+        // 7 blocks + 1 watermark at f16 (> 7 free) but only 4 + 1 at kv8.
+        let reqs = vec![one_request(1, 100, 4)];
+        let plan = FaultPlan {
+            seed: 0,
+            scenario: Scenario::PressureWave,
+            events: vec![FaultEvent {
+                at_s: 0.0,
+                kind: FaultKind::PressureStart { replica: 0, frac: 0.9 },
+            }],
+        };
+        let mut degrade = small_policy(1, ShedPolicy::DegradeThenReject);
+        degrade.pool_blocks = Some(64);
+        let res = run(&reqs, &plan, &degrade);
+        assert_eq!(res.finished, 1);
+        assert_eq!(res.degraded_int8 + res.degraded_int4, 1);
+        assert_eq!(res.pressure_windows, 1);
+
+        let mut reject = small_policy(1, ShedPolicy::RejectOnly);
+        reject.pool_blocks = Some(64);
+        reject.slo = SloSpec { ttft_s: 0.5, tpot_s: 1e9 };
+        let res = run(&reqs, &plan, &reject);
+        assert_eq!(res.finished, 0);
+        assert_eq!(res.rejected_slo, 1, "reject-only sheds on TTFT expiry");
+    }
+
+    #[test]
+    fn oversized_request_rejected_with_reason() {
+        let reqs = vec![one_request(1, 10_000, 4)];
+        let plan = FaultPlan::generate(0, Scenario::Calm, 1, 1.0);
+        let mut policy = small_policy(1, ShedPolicy::DegradeThenReject);
+        policy.pool_blocks = Some(8);
+        let res = run(&reqs, &plan, &policy);
+        assert_eq!(res.rejected_oversized, 1);
+        assert_eq!(res.finished, 0);
+    }
+
+    #[test]
+    fn crash_without_retries_rejects_in_flight_work() {
+        let reqs = vec![one_request(1, 64, 64), one_request(2, 64, 64), one_request(3, 64, 64)];
+        let plan = FaultPlan {
+            seed: 0,
+            scenario: Scenario::SingleCrash,
+            events: vec![FaultEvent { at_s: 0.01, kind: FaultKind::Crash { replica: 0 } }],
+        };
+        let mut policy = small_policy(1, ShedPolicy::DegradeThenReject);
+        policy.max_retries = 0;
+        let res = run(&reqs, &plan, &policy);
+        assert_eq!(res.rejected_retries, 3);
+        assert_eq!(res.finished, 0);
+        assert_eq!(res.outcomes.len(), 3);
+    }
+
+    #[test]
+    fn unrecoverable_crash_strands_requeues_as_no_capacity() {
+        let reqs = vec![one_request(1, 64, 64), one_request(2, 64, 64), one_request(3, 64, 64)];
+        let plan = FaultPlan {
+            seed: 0,
+            scenario: Scenario::SingleCrash,
+            events: vec![FaultEvent { at_s: 0.01, kind: FaultKind::Crash { replica: 0 } }],
+        };
+        let policy = small_policy(1, ShedPolicy::DegradeThenReject);
+        let res = run(&reqs, &plan, &policy);
+        assert_eq!(res.failover_requeues, 3);
+        assert_eq!(res.rejected_capacity, 3, "no replica ever serves again");
+        assert_eq!(res.finished + res.rejected, 3);
+    }
+
+    #[test]
+    fn ghost_ids_stay_out_of_request_space() {
+        let reqs = vec![Request { id: 1 << 60, ..one_request(0, 8, 2) }];
+        let plan = FaultPlan::generate(0, Scenario::Calm, 1, 1.0);
+        let (dev, spec) = specs();
+        let err = run_chaos(
+            &dev,
+            &spec,
+            KernelKind::Quick,
+            &reqs,
+            &plan,
+            &small_policy(1, ShedPolicy::DegradeThenReject),
+            &Calib::default(),
+        );
+        assert!(err.is_err());
+    }
+}

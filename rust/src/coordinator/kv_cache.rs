@@ -25,7 +25,7 @@
 
 use std::collections::{HashMap, HashSet};
 
-use anyhow::{bail, ensure, Result};
+use anyhow::{anyhow, bail, ensure, Result};
 
 use crate::quant::KvPrecision;
 
@@ -248,7 +248,10 @@ impl KvBlockManager {
         }
         let mut blocks: Vec<u32> = shared.to_vec();
         for _ in 0..fresh {
-            let b = self.free.pop().unwrap();
+            let b = self
+                .free
+                .pop()
+                .ok_or_else(|| anyhow!("KV free list drained mid-allocation for sequence {seq}"))?;
             self.refs[b as usize] += 1;
             blocks.push(b);
         }
@@ -287,6 +290,12 @@ impl KvBlockManager {
         Ok(table.blocks[..full.min(table.blocks.len())].to_vec())
     }
 
+    /// Mutable table lookup with a descriptive error for callers that
+    /// already established the sequence is live.
+    fn table_mut(&mut self, seq: SeqId) -> Result<&mut BlockTable> {
+        self.tables.get_mut(&seq).ok_or_else(|| anyhow!("unknown sequence {seq}"))
+    }
+
     /// Append one decoded token; may claim one more block, either at a
     /// block boundary or to copy-on-write a shared partial tail. Returns
     /// true if a block was claimed from the free list.
@@ -303,12 +312,12 @@ impl KvBlockManager {
             match self.free.pop() {
                 Some(b) => {
                     self.refs[b as usize] += 1;
-                    self.tables.get_mut(&seq).unwrap().blocks.push(b);
+                    self.table_mut(seq)?.blocks.push(b);
                     Ok(true)
                 }
                 None => {
                     // Roll back the token count so callers can preempt.
-                    self.tables.get_mut(&seq).unwrap().tokens -= 1;
+                    self.table_mut(seq)?.tokens -= 1;
                     bail!("out of KV blocks while decoding sequence {seq}")
                 }
             }
@@ -321,13 +330,16 @@ impl KvBlockManager {
                     Some(b) => {
                         self.refs[b as usize] += 1;
                         self.refs[tail as usize] -= 1;
-                        let t = self.tables.get_mut(&seq).unwrap();
-                        *t.blocks.last_mut().unwrap() = b;
+                        let t = self.table_mut(seq)?;
+                        match t.blocks.last_mut() {
+                            Some(slot) => *slot = b,
+                            None => bail!("copy-on-write on empty table for sequence {seq}"),
+                        }
                         self.cow_forks += 1;
                         Ok(true)
                     }
                     None => {
-                        self.tables.get_mut(&seq).unwrap().tokens -= 1;
+                        self.table_mut(seq)?.tokens -= 1;
                         bail!("out of KV blocks for copy-on-write on sequence {seq}")
                     }
                 }
@@ -471,6 +483,7 @@ pub fn blocks_for_device(
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used)]
     use super::*;
 
     fn mgr() -> KvBlockManager {

@@ -264,6 +264,7 @@ pub fn measured_shared_prefix(n: usize, seed: u64) -> Vec<Request> {
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used)]
     use super::*;
     use crate::gpusim::Gpu;
     use crate::model::Model;

@@ -107,6 +107,7 @@ impl EngineMetrics {
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used)]
     use super::*;
 
     #[test]

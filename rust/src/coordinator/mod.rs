@@ -34,9 +34,19 @@
 //!   kernels (ring collectives priced by `gpusim::collective`) while
 //!   feeding the drift ledger against the modeled twin.
 //! * [`metrics`] — throughput counters and TTFT/ITL histograms.
+//! * [`faults`] — chaos hardening: deterministic fault plans (crashes,
+//!   stalls, KV-pool pressure), replica failover with KV recompute and
+//!   phantom-prefix-hit prevention, and SLO-aware graceful degradation
+//!   (f16 → kv8 → kv4 admission ladder before rejection).
+
+// Robustness ramp (ISSUE 9): serving hot paths surface descriptive
+// `Result` errors instead of panicking. New coordinator code must not
+// introduce bare `unwrap()`; tests opt out locally.
+#![warn(clippy::unwrap_used)]
 
 pub mod batcher;
 pub mod engine;
+pub mod faults;
 pub mod kv_cache;
 pub mod measured;
 pub mod metrics;
@@ -51,6 +61,10 @@ pub use batcher::{
     StepBatch, StepPlan,
 };
 pub use engine::{Completion, Engine, EngineConfig};
+pub use faults::{
+    run_chaos, ChaosPolicy, ChaosResult, FaultEvent, FaultKind, FaultPlan, Outcome, RejectReason,
+    Scenario, ShedPolicy, SloSpec,
+};
 pub use kv_cache::{blocks_for_device, KvBlockManager};
 pub use measured::{
     measured_bursty, measured_shared_prefix, MeasuredEngine, MeasuredStats, MEASURED_ATTN_CTX,
@@ -58,7 +72,7 @@ pub use measured::{
 pub use metrics::{EngineMetrics, Histogram};
 pub use prefix::{chain_hash, BlockHash, PrefixCache, PrefixIndex, PrefixStats, ROOT_HASH};
 pub use request::{FinishReason, GenerationRequest, SeqState, Sequence};
-pub use router::{prefix_key, Policy, RouteDecision, Router};
+pub use router::{prefix_key, DrainedLoad, Health, Policy, RouteDecision, Router};
 pub use simserve::{
     simulate_continuous, simulate_continuous_measured, simulate_serving, simulate_static_wave,
     simulate_static_wave_measured, simulate_tp, simulate_tp_measured, ContinuousPolicy,

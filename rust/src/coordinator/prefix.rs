@@ -159,7 +159,8 @@ impl PrefixIndex {
 
     fn touch(&mut self, slot: u32) {
         self.tick += 1;
-        self.slots[slot as usize].as_mut().unwrap().last_used = self.tick;
+        self.slots[slot as usize].as_mut().expect("touched slot holds a live node").last_used =
+            self.tick;
     }
 
     /// Longest cached prefix of `tokens`, as a chain of full blocks.
@@ -203,7 +204,10 @@ impl PrefixIndex {
                     break; // collision: refuse to extend a divergent chain
                 }
                 self.tick += 1;
-                self.slots[slot as usize].as_mut().unwrap().last_used = self.tick;
+                self.slots[slot as usize]
+                    .as_mut()
+                    .expect("indexed slot holds a live node")
+                    .last_used = self.tick;
                 parent = Some(slot);
                 h = next;
                 continue;
@@ -228,7 +232,10 @@ impl PrefixIndex {
                 }
             };
             if let Some(p) = parent {
-                self.slots[p as usize].as_mut().unwrap().children += 1;
+                self.slots[p as usize]
+                    .as_mut()
+                    .expect("parent slot holds a live node")
+                    .children += 1;
             }
             self.by_hash.insert(next, slot);
             out.push((i, blocks[i]));
@@ -483,6 +490,7 @@ impl PrefixCache {
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used)]
     use super::*;
 
     fn toks(lo: i32, n: usize) -> Vec<i32> {

@@ -135,6 +135,7 @@ impl Sequence {
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used)]
     use super::*;
 
     fn req(prompt: usize, max_new: usize, eos: Option<i32>) -> GenerationRequest {

@@ -45,6 +45,38 @@ pub fn prefix_key(prompt: &[i32], block_size: usize) -> u64 {
     super::prefix::chain_hash(super::prefix::ROOT_HASH, &prompt[..take])
 }
 
+/// Replica health in the unhealthy → probing → healthy state machine.
+///
+/// A replica marked down ([`Router::mark_down`]) takes no traffic until
+/// the operator (or the fault injector's recovery event) moves it to
+/// [`Health::Probing`] via [`Router::begin_probe`]. A probing replica
+/// accepts **one** request at a time; each completion reported through
+/// [`Router::probe_result`] counts toward the configured success bar
+/// ([`Router::with_probe_successes`]), after which the replica is fully
+/// [`Health::Healthy`] again. A failed probe sends it back to
+/// [`Health::Unhealthy`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Health {
+    /// Routable at full capacity.
+    Healthy,
+    /// Not routable; in-flight accounting was drained on entry.
+    Unhealthy,
+    /// Routable with a single canary request in flight.
+    Probing,
+}
+
+/// In-flight load drained off a replica by [`Router::mark_down`]: the
+/// caller is responsible for requeueing these requests elsewhere (the
+/// KV they accumulated on the dead replica is gone — the recompute
+/// preemption path re-prefills them on the new placement).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct DrainedLoad {
+    /// Requests that were in flight on the drained replica (or group).
+    pub reqs: u64,
+    /// Token load those requests carried.
+    pub tokens: u64,
+}
+
 /// Tracked state of one replica.
 #[derive(Debug, Clone)]
 struct Replica {
@@ -54,7 +86,9 @@ struct Replica {
     inflight_reqs: u64,
     /// Admission cap: max in-flight requests (0 = unlimited).
     max_reqs: u64,
-    healthy: bool,
+    health: Health,
+    /// Successful probe completions since entering [`Health::Probing`].
+    probe_ok: u32,
 }
 
 /// The router.
@@ -65,10 +99,14 @@ pub struct Router {
     /// Ranks per TP group ([`Policy::TpGroup`] only; 1 otherwise).
     tp_degree: usize,
     rr_next: usize,
+    /// Probe completions required to graduate Probing → Healthy.
+    probe_successes: u32,
     /// Requests successfully placed.
     pub routed: u64,
     /// Requests turned away (no replica/group with room).
     pub rejected: u64,
+    /// Requests drained off replicas marked down mid-flight.
+    pub drained: u64,
 }
 
 /// Admission ticket: which replica got the request.
@@ -110,14 +148,24 @@ impl Router {
                     inflight_tokens: 0,
                     inflight_reqs: 0,
                     max_reqs: cap,
-                    healthy: true,
+                    health: Health::Healthy,
+                    probe_ok: 0,
                 })
                 .collect(),
             tp_degree,
             rr_next: 0,
+            probe_successes: 1,
             routed: 0,
             rejected: 0,
+            drained: 0,
         })
+    }
+
+    /// Probe completions a recovering replica must serve before it is
+    /// fully routable again (default 1).
+    pub fn with_probe_successes(mut self, n: u32) -> Self {
+        self.probe_successes = n.max(1);
+        self
     }
 
     /// Replica (rank) count.
@@ -131,9 +179,88 @@ impl Router {
     }
 
     /// Mark a replica (and therefore its whole TP group under
-    /// [`Policy::TpGroup`]) routable or not.
+    /// [`Policy::TpGroup`]) routable or not. Taking a replica down
+    /// **drains** its in-flight accounting — see [`Router::mark_down`],
+    /// which this delegates to — so a replica that dies mid-flight does
+    /// not stay "loaded" forever. Bringing it up skips the probe ramp
+    /// and restores full health immediately.
     pub fn set_healthy(&mut self, replica: usize, healthy: bool) {
-        self.replicas[replica].healthy = healthy;
+        if healthy {
+            for i in self.affected_ranks(replica) {
+                self.replicas[i].health = Health::Healthy;
+                self.replicas[i].probe_ok = 0;
+            }
+        } else {
+            let _ = self.mark_down(replica);
+        }
+    }
+
+    /// A replica's current health state.
+    pub fn health(&self, replica: usize) -> Health {
+        self.replicas[replica].health
+    }
+
+    /// Take a replica out of rotation (its whole TP group under
+    /// [`Policy::TpGroup`]) and drain its in-flight accounting. Returns
+    /// the load that was in flight so the caller can requeue those
+    /// requests on healthy replicas; their route decisions are dead —
+    /// a later [`Router::on_finish`] against one is a harmless no-op
+    /// (counters saturate at zero).
+    pub fn mark_down(&mut self, replica: usize) -> DrainedLoad {
+        let mut drained = DrainedLoad::default();
+        for i in self.affected_ranks(replica) {
+            let r = &mut self.replicas[i];
+            drained.reqs = drained.reqs.max(r.inflight_reqs);
+            drained.tokens = drained.tokens.max(r.inflight_tokens);
+            r.inflight_reqs = 0;
+            r.inflight_tokens = 0;
+            r.health = Health::Unhealthy;
+            r.probe_ok = 0;
+        }
+        self.drained += drained.reqs;
+        drained
+    }
+
+    /// Move an unhealthy replica (group) into the probing state: it may
+    /// take one canary request at a time until [`Router::probe_result`]
+    /// reports enough successes. No-op unless currently unhealthy.
+    pub fn begin_probe(&mut self, replica: usize) {
+        for i in self.affected_ranks(replica) {
+            if self.replicas[i].health == Health::Unhealthy {
+                self.replicas[i].health = Health::Probing;
+                self.replicas[i].probe_ok = 0;
+            }
+        }
+    }
+
+    /// Report the outcome of a request served by a probing replica. A
+    /// success counts toward the configured bar
+    /// ([`Router::with_probe_successes`]); reaching it graduates the
+    /// replica (group) to [`Health::Healthy`]. A failure sends it back
+    /// to [`Health::Unhealthy`] (and re-drains anything in flight).
+    pub fn probe_result(&mut self, replica: usize, ok: bool) {
+        if self.replicas[replica].health != Health::Probing {
+            return;
+        }
+        if !ok {
+            let _ = self.mark_down(replica);
+            return;
+        }
+        let bar = self.probe_successes;
+        let mut graduated = false;
+        for i in self.affected_ranks(replica) {
+            let r = &mut self.replicas[i];
+            r.probe_ok += 1;
+            if r.probe_ok >= bar {
+                graduated = true;
+            }
+        }
+        if graduated {
+            for i in self.affected_ranks(replica) {
+                self.replicas[i].health = Health::Healthy;
+                self.replicas[i].probe_ok = 0;
+            }
+        }
     }
 
     /// The ranks of the TP group containing `replica`.
@@ -142,9 +269,25 @@ impl Router {
         g * self.tp_degree..(g + 1) * self.tp_degree
     }
 
+    /// Ranks a health transition touches: the whole TP group under
+    /// [`Policy::TpGroup`] (a group steps in lockstep, so one sick rank
+    /// takes all of them out), the single replica otherwise.
+    fn affected_ranks(&self, replica: usize) -> std::ops::Range<usize> {
+        if self.policy == Policy::TpGroup {
+            self.group_of(replica)
+        } else {
+            replica..replica + 1
+        }
+    }
+
     fn has_room(&self, i: usize) -> bool {
         let r = &self.replicas[i];
-        r.healthy && (r.max_reqs == 0 || r.inflight_reqs < r.max_reqs)
+        match r.health {
+            Health::Healthy => r.max_reqs == 0 || r.inflight_reqs < r.max_reqs,
+            // One canary in flight at a time while probing.
+            Health::Probing => r.inflight_reqs == 0,
+            Health::Unhealthy => false,
+        }
     }
 
     /// Route one request of `tokens` total work (prompt + max_new).
@@ -244,6 +387,7 @@ impl Router {
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used)]
     use super::*;
 
     #[test]
@@ -393,6 +537,96 @@ mod tests {
     fn ragged_tp_grouping_rejected() {
         assert!(Router::new_tp(Policy::TpGroup, &[0, 0, 0], 2).is_err());
         assert!(Router::new_tp(Policy::TpGroup, &[0, 0], 0).is_err());
+    }
+
+    #[test]
+    fn mark_down_drains_inflight_accounting() {
+        // Regression: a replica marked unhealthy mid-flight used to keep
+        // its inflight_reqs counted forever, so it looked loaded (or at
+        // cap) even after recovery.
+        let mut r = Router::new(Policy::LeastLoaded, &[2, 2]).unwrap();
+        let d0 = r.route(100, None).unwrap();
+        let d1 = r.route(100, None).unwrap();
+        assert_eq!((d0.replica, d1.replica), (0, 1));
+        let drained = r.mark_down(0);
+        assert_eq!(drained, DrainedLoad { reqs: 1, tokens: 100 });
+        assert_eq!(r.inflight(0), (0, 0), "accounting drained, not leaked");
+        assert_eq!(r.health(0), Health::Unhealthy);
+        assert_eq!(r.drained, 1);
+        // A stale on_finish against the drained replica is a no-op.
+        r.on_finish(d0, 100);
+        assert_eq!(r.inflight(0), (0, 0));
+    }
+
+    #[test]
+    fn recovered_replica_is_dispatchable_again() {
+        let mut r = Router::new(Policy::RoundRobin, &[1, 0]).unwrap();
+        let _ = r.route(10, None).unwrap(); // replica 0 at cap 1
+        r.mark_down(0);
+        // While down, everything lands on replica 1.
+        for _ in 0..3 {
+            assert_eq!(r.route(10, None).unwrap().replica, 1);
+        }
+        r.set_healthy(0, true);
+        assert_eq!(r.health(0), Health::Healthy);
+        // The drained slot freed the cap: replica 0 takes traffic again.
+        assert_eq!(r.route(10, None).unwrap().replica, 0);
+    }
+
+    #[test]
+    fn probe_ramp_graduates_after_configured_successes() {
+        let mut r = Router::new(Policy::LeastLoaded, &[0, 0])
+            .unwrap()
+            .with_probe_successes(2);
+        let _ = r.route(50, None).unwrap();
+        r.mark_down(0);
+        assert!(r.route(1, None).unwrap().replica == 1, "down replica skipped");
+        r.begin_probe(0);
+        assert_eq!(r.health(0), Health::Probing);
+        // Probing admits one canary at a time even though cap is
+        // unlimited; least-loaded prefers the empty probing replica.
+        let probe1 = r.route(1, None).unwrap();
+        assert_eq!(probe1.replica, 0);
+        assert!(
+            r.route(1, None).unwrap().replica == 1,
+            "second request must not pile onto the probing replica"
+        );
+        r.on_finish(probe1, 1);
+        r.probe_result(0, true);
+        assert_eq!(r.health(0), Health::Probing, "one success of two");
+        let probe2 = r.route(1, None).unwrap();
+        assert_eq!(probe2.replica, 0);
+        r.on_finish(probe2, 1);
+        r.probe_result(0, true);
+        assert_eq!(r.health(0), Health::Healthy, "graduated after 2 successes");
+    }
+
+    #[test]
+    fn failed_probe_returns_to_unhealthy() {
+        let mut r = Router::new(Policy::RoundRobin, &[0, 0]).unwrap();
+        r.mark_down(0);
+        r.begin_probe(0);
+        let d = r.route(5, None).unwrap();
+        assert_eq!(d.replica, 0);
+        r.probe_result(0, false);
+        assert_eq!(r.health(0), Health::Unhealthy);
+        assert_eq!(r.inflight(0), (0, 0), "failed probe re-drains");
+        // begin_probe is a no-op on healthy replicas.
+        r.begin_probe(1);
+        assert_eq!(r.health(1), Health::Healthy);
+    }
+
+    #[test]
+    fn tp_group_mark_down_drains_every_rank() {
+        let mut r = Router::new_tp(Policy::TpGroup, &[0, 0, 0, 0], 2).unwrap();
+        let d = r.route(100, None).unwrap();
+        assert_eq!(d.replica, 0);
+        let drained = r.mark_down(1); // any rank takes the group down
+        assert_eq!(drained, DrainedLoad { reqs: 1, tokens: 100 });
+        assert_eq!(r.inflight(0), (0, 0));
+        assert_eq!(r.inflight(1), (0, 0));
+        assert_eq!(r.health(0), Health::Unhealthy);
+        assert_eq!(r.route(10, None).unwrap().replica, 2);
     }
 
     #[test]

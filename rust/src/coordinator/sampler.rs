@@ -49,6 +49,7 @@ pub fn sample(logits: &[f32], temperature: Option<f32>, rng: &mut Rng) -> i32 {
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used)]
     use super::*;
 
     #[test]

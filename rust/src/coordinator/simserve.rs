@@ -21,6 +21,8 @@
 use std::collections::VecDeque;
 use std::sync::OnceLock;
 
+use anyhow::{anyhow, Context, Result};
+
 use crate::gpusim::kernel_model::{model_gemm, Calib, KernelKind};
 use crate::gpusim::DeviceSpec;
 use crate::model::LlmSpec;
@@ -143,13 +145,17 @@ struct RunningSeq {
 }
 
 /// Materialize the first `n` synthetic token ids of a request's stream.
-fn context_ids(req: &Request, n: u64) -> Vec<i32> {
+pub(crate) fn context_ids(req: &Request, n: u64) -> Vec<i32> {
     (0..n).map(|p| req.token_at(p)).collect()
 }
 
 /// Append one token's KV slot, reclaiming an idle cached block on demand
 /// (eviction stands in for the free list the cache withholds).
-fn append_with_reclaim(kv: &mut KvBlockManager, cache: &mut PrefixCache, id: u64) -> bool {
+pub(crate) fn append_with_reclaim(
+    kv: &mut KvBlockManager,
+    cache: &mut PrefixCache,
+    id: u64,
+) -> bool {
     if kv.append_token(id).is_ok() {
         return true;
     }
@@ -157,14 +163,31 @@ fn append_with_reclaim(kv: &mut KvBlockManager, cache: &mut PrefixCache, id: u64
 }
 
 /// Publish a sequence's full blocks into the prefix cache, then release it.
-fn register_and_free(kv: &mut KvBlockManager, cache: &mut PrefixCache, req: &Request) {
-    let stored = kv.table(req.id).map(|t| t.tokens).unwrap_or(0);
-    let _ = cache.register(kv, req.id, &context_ids(req, stored));
-    kv.free_seq(req.id).expect("live sequence has blocks");
+///
+/// A sequence stored at a precision other than the pool's (graceful
+/// degradation, `coordinator::faults`) is freed without registering: the
+/// cache pairs whole slabs with token runs of the *pool* precision's
+/// per-block length, so a mixed-precision table cannot be shared.
+pub(crate) fn register_and_free(
+    kv: &mut KvBlockManager,
+    cache: &mut PrefixCache,
+    req: &Request,
+) -> Result<()> {
+    let (stored, same_precision) = match kv.table(req.id) {
+        Some(t) => (t.tokens, t.precision == kv.precision()),
+        None => (0, true),
+    };
+    if same_precision {
+        let _ = cache.register(kv, req.id, &context_ids(req, stored));
+    }
+    match kv.free_seq(req.id) {
+        Ok(_) => Ok(()),
+        Err(e) => Err(anyhow!("releasing KV of live sequence {}: {e}", req.id)),
+    }
 }
 
 /// Latency of a (possibly batched) prefill totalling `tokens` prompt tokens.
-fn prefill_latency(
+pub(crate) fn prefill_latency(
     dev: &DeviceSpec,
     spec: &LlmSpec,
     kind: KernelKind,
@@ -185,7 +208,7 @@ fn prefill_latency(
     t + attn_flops / (dev.tc_tflops * 1e12 * calib.mma_eff)
 }
 
-fn decode_latency(
+pub(crate) fn decode_latency(
     dev: &DeviceSpec,
     spec: &LlmSpec,
     kind: KernelKind,
@@ -213,7 +236,7 @@ fn kv_pool_blocks(
 /// TP group offers the scheduler is the per-rank block count — every rank
 /// admits and evicts the same logical blocks in lockstep. `tp = 1`
 /// reproduces the single-GPU pool bit-exactly.
-fn tp_kv_pool_blocks(
+pub(crate) fn tp_kv_pool_blocks(
     dev: &DeviceSpec,
     spec: &LlmSpec,
     kind: KernelKind,
@@ -236,6 +259,10 @@ fn tp_kv_pool_blocks(
 
 /// Run the continuous-batching simulation over an offline workload (all
 /// requests queued at t=0, like vLLM's throughput benchmark).
+///
+/// Errors only on internal accounting violations (a live sequence whose
+/// KV blocks cannot be released); an undersized device is reported via
+/// [`SimResult::oom`], not an error.
 pub fn simulate_serving(
     dev: &DeviceSpec,
     spec: &LlmSpec,
@@ -243,10 +270,10 @@ pub fn simulate_serving(
     requests: &[Request],
     policy: &SimPolicy,
     calib: &Calib,
-) -> SimResult {
+) -> Result<SimResult> {
     let blocks = kv_pool_blocks(dev, spec, kind, policy.block_size, policy.headroom_frac);
     if blocks == 0 {
-        return SimResult { oom: true, ..Default::default() };
+        return Ok(SimResult { oom: true, ..Default::default() });
     }
 
     let mut kv = KvBlockManager::new(blocks, policy.block_size, policy.watermark_frac);
@@ -311,8 +338,7 @@ pub fn simulate_serving(
             }
             // Workload item larger than the whole pool: drop it (vLLM
             // would reject it too).
-            let r = waiting.pop_front().unwrap();
-            let _ = r;
+            waiting.pop_front();
             continue;
         }
 
@@ -336,7 +362,7 @@ pub fn simulate_serving(
             if generated >= req.gen_tokens {
                 // Finished: leave the context's full blocks warm for the
                 // conversation's next turn.
-                register_and_free(&mut kv, &mut cache, &req);
+                register_and_free(&mut kv, &mut cache, &req)?;
                 finished += 1;
                 running.swap_remove(i);
                 continue;
@@ -346,7 +372,7 @@ pub fn simulate_serving(
                 // computed full blocks stay cached, so the re-prefill is
                 // discounted on re-admission — and requeue.
                 let victim = running.swap_remove(i);
-                register_and_free(&mut kv, &mut cache, &victim.req);
+                register_and_free(&mut kv, &mut cache, &victim.req)?;
                 preemptions += 1;
                 let mut back = victim.req;
                 back.gen_tokens -= victim.generated.min(back.gen_tokens - 1);
@@ -357,7 +383,7 @@ pub fn simulate_serving(
         }
     }
 
-    SimResult {
+    Ok(SimResult {
         finished,
         wall_s: clock,
         prompt_tokens,
@@ -376,15 +402,29 @@ pub fn simulate_serving(
         prefix_misses: cache.stats.misses,
         prefix_tokens_skipped: cache.stats.tokens_skipped,
         prefix_evictions: cache.stats.evictions,
-    }
+    })
 }
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used)]
     use super::*;
     use crate::gpusim::Gpu;
     use crate::model::Model;
     use crate::workload::{ShareGptLike, SharedPrefixWorkload};
+
+    /// Test-local shadow of [`super::simulate_serving`]: same signature,
+    /// unwrapped result.
+    fn simulate_serving(
+        dev: &DeviceSpec,
+        spec: &LlmSpec,
+        kind: KernelKind,
+        requests: &[Request],
+        policy: &SimPolicy,
+        calib: &Calib,
+    ) -> SimResult {
+        super::simulate_serving(dev, spec, kind, requests, policy, calib).unwrap()
+    }
 
     fn run(kind: KernelKind, model: Model) -> SimResult {
         let reqs = ShareGptLike::new().offline(300, 42);
@@ -560,7 +600,7 @@ impl OnlineResult {
             return 0.0;
         }
         let mut xs: Vec<f64> = self.latencies.iter().map(|l| l.e2e_s).collect();
-        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        xs.sort_by(f64::total_cmp);
         let idx = (q.clamp(0.0, 1.0) * (xs.len() - 1) as f64).round() as usize;
         xs[idx]
     }
@@ -578,6 +618,9 @@ impl OnlineResult {
 /// as [`simulate_serving`] (including the automatic prefix cache). Used
 /// for latency-vs-load curves (not a paper figure — an extension the
 /// serving community expects; see `quick-infer loadtest`).
+///
+/// Errors only on internal KV-accounting violations; an undersized
+/// device is reported via [`OnlineResult::oom`].
 pub fn simulate_online(
     dev: &DeviceSpec,
     spec: &LlmSpec,
@@ -585,10 +628,10 @@ pub fn simulate_online(
     requests: &[Request],
     policy: &SimPolicy,
     calib: &Calib,
-) -> OnlineResult {
+) -> Result<OnlineResult> {
     let blocks = kv_pool_blocks(dev, spec, kind, policy.block_size, policy.headroom_frac);
     if blocks == 0 {
-        return OnlineResult { oom: true, ..Default::default() };
+        return Ok(OnlineResult { oom: true, ..Default::default() });
     }
     let mut kv = KvBlockManager::new(blocks, policy.block_size, policy.watermark_frac);
     let mut cache = PrefixCache::new(policy.block_size as usize, policy.enable_prefix_cache);
@@ -602,8 +645,12 @@ pub fn simulate_online(
 
     loop {
         // Move arrived requests into the queue.
-        while pending.front().is_some_and(|r| r.arrival_s() <= clock) {
-            waiting.push_back(pending.pop_front().unwrap());
+        while let Some(&r) = pending.front() {
+            if r.arrival_s() > clock {
+                break;
+            }
+            pending.pop_front();
+            waiting.push_back(r);
         }
         if waiting.is_empty() && running.is_empty() {
             match pending.front() {
@@ -664,7 +711,7 @@ pub fn simulate_online(
             let req = running[i].req;
             let generated = running[i].generated;
             if generated >= req.gen_tokens {
-                register_and_free(&mut kv, &mut cache, &req);
+                register_and_free(&mut kv, &mut cache, &req)?;
                 latencies.push(OnlineLatency {
                     request_id: req.id,
                     e2e_s: clock - req.arrival_s(),
@@ -674,7 +721,7 @@ pub fn simulate_online(
             }
             if !append_with_reclaim(&mut kv, &mut cache, req.id) {
                 let victim = running.swap_remove(i);
-                register_and_free(&mut kv, &mut cache, &victim.req);
+                register_and_free(&mut kv, &mut cache, &victim.req)?;
                 let mut back = victim.req;
                 back.gen_tokens -= victim.generated.min(back.gen_tokens - 1);
                 waiting.push_back(back);
@@ -684,7 +731,7 @@ pub fn simulate_online(
         }
     }
 
-    OnlineResult {
+    Ok(OnlineResult {
         finished: latencies.len(),
         wall_s: clock,
         gen_tok_per_s: gen_tokens as f64 / clock.max(1e-9),
@@ -694,15 +741,29 @@ pub fn simulate_online(
         prefix_hits: cache.stats.hits,
         prefix_tokens_skipped: cache.stats.tokens_skipped,
         prefix_evictions: cache.stats.evictions,
-    }
+    })
 }
 
 #[cfg(test)]
 mod online_tests {
+    #![allow(clippy::unwrap_used)]
     use super::*;
     use crate::gpusim::Gpu;
     use crate::model::Model;
     use crate::workload::{ShareGptLike, SharedPrefixWorkload};
+
+    /// Test-local shadow of [`super::simulate_online`]: same signature,
+    /// unwrapped result.
+    fn simulate_online(
+        dev: &DeviceSpec,
+        spec: &LlmSpec,
+        kind: KernelKind,
+        requests: &[Request],
+        policy: &SimPolicy,
+        calib: &Calib,
+    ) -> OnlineResult {
+        super::simulate_online(dev, spec, kind, requests, policy, calib).unwrap()
+    }
 
     fn run_online(rate: f64, kind: KernelKind) -> OnlineResult {
         let reqs = ShareGptLike::new().online(150, rate, 11);
@@ -790,8 +851,6 @@ mod online_tests {
 // Continuous batching with chunked prefill (the token-budget scheduler) and
 // the static prefill-then-decode wave baseline it replaces.
 // ---------------------------------------------------------------------------
-
-use anyhow::Result;
 
 use super::batcher::{ChunkPolicy, ContinuousScheduler};
 use super::measured::{MeasuredEngine, MeasuredStats};
@@ -958,7 +1017,7 @@ pub fn simulate_continuous(
     requests: &[Request],
     policy: &ContinuousPolicy,
     calib: &Calib,
-) -> ContinuousResult {
+) -> Result<ContinuousResult> {
     run_continuous(dev, spec, kind, requests, policy, calib, 1, None)
 }
 
@@ -1004,7 +1063,7 @@ pub fn simulate_tp(
     policy: &ContinuousPolicy,
     tp_degree: u64,
     calib: &Calib,
-) -> ContinuousResult {
+) -> Result<ContinuousResult> {
     let tp = tp_degree.max(1);
     let scaled = ContinuousPolicy {
         token_budget: tp_scaled_token_budget(dev, spec, kind, policy, tp, calib),
@@ -1030,11 +1089,11 @@ fn run_continuous(
     calib: &Calib,
     tp_degree: u64,
     mut measured: Option<&mut MeasuredEngine>,
-) -> ContinuousResult {
+) -> Result<ContinuousResult> {
     let blocks =
         tp_kv_pool_blocks(dev, spec, kind, policy.block_size, policy.headroom_frac, tp_degree);
     if blocks == 0 {
-        return ContinuousResult { oom: true, ..Default::default() };
+        return Ok(ContinuousResult { oom: true, ..Default::default() });
     }
     let mut kv = KvBlockManager::new(blocks, policy.block_size, policy.watermark_frac)
         .with_precision(policy.kv_precision);
@@ -1072,8 +1131,11 @@ fn run_continuous(
     let mut ttft = Histogram::new();
 
     loop {
-        while pending.front().is_some_and(|r| r.arrival_s() <= clock) {
-            let r = pending.pop_front().unwrap();
+        while let Some(&r) = pending.front() {
+            if r.arrival_s() > clock {
+                break;
+            }
+            pending.pop_front();
             let sid = sched.submit(r.id, r.prompt_tokens, r.gen_tokens);
             debug_assert_eq!(sid, slot_req.len());
             slot_ids.push(context_ids(&r, r.prompt_tokens));
@@ -1198,7 +1260,7 @@ fn run_continuous(
                 sim_ttft_hist().record_s(dt);
                 let s = sched.seq(c.seq);
                 if s.generated >= s.gen_budget {
-                    register_and_free(&mut kv, &mut cache, &req);
+                    register_and_free(&mut kv, &mut cache, &req)?;
                     sched.finish(c.seq);
                     finished += 1;
                     continue;
@@ -1206,7 +1268,7 @@ fn run_continuous(
                 // The first token's KV slot is subject to the same pool
                 // pressure as decode appends: preempt on exhaustion.
                 if !append_with_reclaim(&mut kv, &mut cache, req.id) {
-                    register_and_free(&mut kv, &mut cache, &req);
+                    register_and_free(&mut kv, &mut cache, &req)?;
                     sched.preempt(c.seq);
                     preemptions += 1;
                 }
@@ -1219,20 +1281,20 @@ fn run_continuous(
             let done = sched.commit_decode(sid);
             let req = slot_req[sid];
             if done {
-                register_and_free(&mut kv, &mut cache, &req);
+                register_and_free(&mut kv, &mut cache, &req)?;
                 sched.finish(sid);
                 finished += 1;
                 continue;
             }
             if !append_with_reclaim(&mut kv, &mut cache, req.id) {
-                register_and_free(&mut kv, &mut cache, &req);
+                register_and_free(&mut kv, &mut cache, &req)?;
                 sched.preempt(sid);
                 preemptions += 1;
             }
         }
     }
 
-    ContinuousResult {
+    Ok(ContinuousResult {
         finished,
         wall_s: clock,
         prompt_tokens,
@@ -1250,7 +1312,7 @@ fn run_continuous(
         prefix_misses: cache.stats.misses,
         prefix_tokens_skipped: cache.stats.tokens_skipped,
         prefix_evictions: cache.stats.evictions,
-    }
+    })
 }
 
 /// The scheduler the continuous batcher replaces: static
@@ -1269,7 +1331,7 @@ pub fn simulate_static_wave(
     requests: &[Request],
     policy: &ContinuousPolicy,
     calib: &Calib,
-) -> ContinuousResult {
+) -> Result<ContinuousResult> {
     run_static_wave(dev, spec, kind, requests, policy, calib, None)
 }
 
@@ -1285,10 +1347,10 @@ fn run_static_wave(
     policy: &ContinuousPolicy,
     calib: &Calib,
     mut measured: Option<&mut MeasuredEngine>,
-) -> ContinuousResult {
+) -> Result<ContinuousResult> {
     let blocks = kv_pool_blocks(dev, spec, kind, policy.block_size, policy.headroom_frac);
     if blocks == 0 {
-        return ContinuousResult { oom: true, ..Default::default() };
+        return Ok(ContinuousResult { oom: true, ..Default::default() });
     }
     let mut kv = KvBlockManager::new(blocks, policy.block_size, policy.watermark_frac)
         .with_precision(policy.kv_precision);
@@ -1306,8 +1368,12 @@ fn run_static_wave(
     let mut ttft = Histogram::new();
 
     loop {
-        while pending.front().is_some_and(|r| r.arrival_s() <= clock) {
-            waiting.push_back(pending.pop_front().unwrap());
+        while let Some(&r) = pending.front() {
+            if r.arrival_s() > clock {
+                break;
+            }
+            pending.pop_front();
+            waiting.push_back(r);
         }
         if waiting.is_empty() {
             match pending.front() {
@@ -1386,12 +1452,13 @@ fn run_static_wave(
             }
         }
         for s in &wave {
-            kv.free_seq(s.req.id).expect("wave sequence has blocks");
+            kv.free_seq(s.req.id)
+                .map_err(|e| anyhow!("releasing KV of wave sequence {}: {e}", s.req.id))?;
             finished += 1;
         }
     }
 
-    ContinuousResult {
+    Ok(ContinuousResult {
         finished,
         wall_s: clock,
         prompt_tokens,
@@ -1409,7 +1476,7 @@ fn run_static_wave(
         prefix_misses: 0,
         prefix_tokens_skipped: 0,
         prefix_evictions: 0,
-    }
+    })
 }
 
 // ---------------------------------------------------------------------------
@@ -1515,7 +1582,8 @@ pub fn simulate_tp_measured(
         scaled.kv_precision,
         calib,
     )?;
-    let result = run_continuous(dev, spec, kind, requests, &scaled, calib, tp, Some(&mut eng));
+    let result = run_continuous(dev, spec, kind, requests, &scaled, calib, tp, Some(&mut eng))
+        .context("measured continuous run")?;
     Ok(MeasuredRun { result, stats: eng.stats })
 }
 
@@ -1544,12 +1612,14 @@ pub fn simulate_static_wave_measured(
         calib,
     )?;
     let kind = backend.kernel_kind();
-    let result = run_static_wave(dev, spec, kind, requests, policy, calib, Some(&mut eng));
+    let result = run_static_wave(dev, spec, kind, requests, policy, calib, Some(&mut eng))
+        .context("measured wave run")?;
     Ok(MeasuredRun { result, stats: eng.stats })
 }
 
 #[cfg(test)]
 mod continuous_tests {
+    #![allow(clippy::unwrap_used)]
     use super::*;
     use crate::gpusim::Gpu;
     use crate::model::Model;
@@ -1557,6 +1627,43 @@ mod continuous_tests {
 
     fn a6000_vicuna() -> (DeviceSpec, LlmSpec) {
         (Gpu::RtxA6000.spec(), Model::Vicuna13B.spec())
+    }
+
+    /// Test-local shadows of the public simulators: same signatures,
+    /// unwrapped results.
+    fn simulate_continuous(
+        dev: &DeviceSpec,
+        spec: &LlmSpec,
+        kind: KernelKind,
+        requests: &[Request],
+        policy: &ContinuousPolicy,
+        calib: &Calib,
+    ) -> ContinuousResult {
+        super::simulate_continuous(dev, spec, kind, requests, policy, calib).unwrap()
+    }
+
+    fn simulate_static_wave(
+        dev: &DeviceSpec,
+        spec: &LlmSpec,
+        kind: KernelKind,
+        requests: &[Request],
+        policy: &ContinuousPolicy,
+        calib: &Calib,
+    ) -> ContinuousResult {
+        super::simulate_static_wave(dev, spec, kind, requests, policy, calib).unwrap()
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn simulate_tp(
+        dev: &DeviceSpec,
+        spec: &LlmSpec,
+        kind: KernelKind,
+        requests: &[Request],
+        policy: &ContinuousPolicy,
+        tp_degree: u64,
+        calib: &Calib,
+    ) -> ContinuousResult {
+        super::simulate_tp(dev, spec, kind, requests, policy, tp_degree, calib).unwrap()
     }
 
     #[test]

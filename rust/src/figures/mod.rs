@@ -4,9 +4,14 @@
 //! `paper_figures` example, and the criterion benches.
 
 use std::io::Write;
+use std::sync::Mutex;
 
-use anyhow::Result;
+use anyhow::{ensure, Result};
 
+use crate::coordinator::faults::{
+    run_chaos, ChaosPolicy, ChaosResult, FaultEvent, FaultKind, FaultPlan, Scenario, ShedPolicy,
+    SloSpec,
+};
 use crate::coordinator::measured::{measured_bursty, measured_shared_prefix};
 use crate::coordinator::simserve::{
     simulate_continuous, simulate_continuous_measured, simulate_serving, simulate_static_wave,
@@ -207,9 +212,9 @@ pub fn table1(out: &mut impl Write) -> Result<Vec<Table1Row>> {
     for model in [Model::Vicuna13B, Model::Llama2_70B] {
         let spec = model.spec();
         let run = |kind| simulate_serving(&dev, &spec, kind, &reqs, &policy, &calib);
-        let fp = run(KernelKind::Fp16);
-        let awq = run(KernelKind::Awq);
-        let quick = run(KernelKind::Quick);
+        let fp = run(KernelKind::Fp16)?;
+        let awq = run(KernelKind::Awq)?;
+        let quick = run(KernelKind::Quick)?;
         // vLLM's benchmark_throughput reports *total* token throughput
         // (prompt + generated) — the convention Table 1's absolute numbers
         // follow; our simulated absolutes land close to the paper's under
@@ -268,10 +273,10 @@ pub fn prefix_cache(out: &mut impl Write) -> Result<PrefixCacheReport> {
         simulate_serving(&dev, &spec, KernelKind::Quick, reqs, policy, &calib)
     };
     let report = PrefixCacheReport {
-        shared_on: run(&shared, &on_policy),
-        shared_off: run(&shared, &off_policy),
-        disjoint_on: run(&disjoint, &on_policy),
-        disjoint_off: run(&disjoint, &off_policy),
+        shared_on: run(&shared, &on_policy)?,
+        shared_off: run(&shared, &off_policy)?,
+        disjoint_on: run(&disjoint, &on_policy)?,
+        disjoint_off: run(&disjoint, &off_policy)?,
     };
 
     writeln!(
@@ -330,10 +335,10 @@ pub fn continuous_batching(out: &mut impl Write) -> Result<ContinuousBatchingRep
     let run_wave = |kind| simulate_static_wave(&dev, &spec, kind, &reqs, &policy, &calib);
     let run_cont = |kind| simulate_continuous(&dev, &spec, kind, &reqs, &policy, &calib);
     let mut report = ContinuousBatchingReport {
-        wave_awq: run_wave(KernelKind::Awq),
-        cont_awq: run_cont(KernelKind::Awq),
-        wave_quick: run_wave(KernelKind::Quick),
-        cont_quick: run_cont(KernelKind::Quick),
+        wave_awq: run_wave(KernelKind::Awq)?,
+        cont_awq: run_cont(KernelKind::Awq)?,
+        wave_quick: run_wave(KernelKind::Quick)?,
+        cont_quick: run_cont(KernelKind::Quick)?,
         gap_rows: Vec::new(),
     };
 
@@ -379,8 +384,8 @@ pub fn continuous_batching(out: &mut impl Write) -> Result<ContinuousBatchingRep
     )?;
     for rate in [0.125, 0.25, 0.5, 1.0, 2.0] {
         let reqs = BurstyWorkload::default().online(200, rate, 7);
-        let a = simulate_continuous(&dev, &spec, KernelKind::Awq, &reqs, &policy, &calib);
-        let q = simulate_continuous(&dev, &spec, KernelKind::Quick, &reqs, &policy, &calib);
+        let a = simulate_continuous(&dev, &spec, KernelKind::Awq, &reqs, &policy, &calib)?;
+        let q = simulate_continuous(&dev, &spec, KernelKind::Quick, &reqs, &policy, &calib)?;
         writeln!(
             out,
             "{:>12.3} {:>12.1} {:>12.1} {:>9.2}x {:>12.1}",
@@ -1271,9 +1276,9 @@ pub fn kv_cache_quant(out: &mut impl Write) -> Result<KvCacheQuantReport> {
             &calib,
         )
     };
-    let f16 = run(KvPrecision::F16);
-    let q8 = run(KvPrecision::Int8);
-    let q4 = run(KvPrecision::Int4);
+    let f16 = run(KvPrecision::F16)?;
+    let q8 = run(KvPrecision::Int8)?;
+    let q4 = run(KvPrecision::Int4)?;
     writeln!(
         out,
         "\n-- {} on {}, {} shared-prefix requests (modeled clock) --",
@@ -1375,8 +1380,8 @@ pub fn tensor_parallel(out: &mut impl Write) -> Result<TensorParallelReport> {
     let mut rows = Vec::new();
     let mut baseline = 0.0f64;
     for tp in TP_DEGREES {
-        let quick = simulate_tp(&dev, &spec, KernelKind::Quick, &reqs, &policy, tp, &calib);
-        let awq = simulate_tp(&dev, &spec, KernelKind::Awq, &reqs, &policy, tp, &calib);
+        let quick = simulate_tp(&dev, &spec, KernelKind::Quick, &reqs, &policy, tp, &calib)?;
+        let awq = simulate_tp(&dev, &spec, KernelKind::Awq, &reqs, &policy, tp, &calib)?;
         if tp == 1 {
             baseline = quick.total_tok_per_s;
         }
@@ -1592,7 +1597,7 @@ pub fn measured_serving(out: &mut impl Write, n_requests: usize) -> Result<Measu
     measured_row(out, "fused / continuous", &cont_fused)?;
     measured_row(out, "writeback / continuous", &cont_writeback)?;
     let modeled_twin =
-        simulate_continuous(&dev, &spec, KernelKind::Quick, &bursty, &policy, &calib);
+        simulate_continuous(&dev, &spec, KernelKind::Quick, &bursty, &policy, &calib)?;
     writeln!(
         out,
         "{:<22} {:>12.1}  (gpusim clock, same scheduler decisions)",
@@ -1757,6 +1762,259 @@ impl MeasuredTpReport {
     pub fn row(&self, tp_degree: u64) -> &MeasuredTpRow {
         self.rows.iter().find(|r| r.tp_degree == tp_degree).expect("degree not swept")
     }
+}
+
+/// One (kernel × shed policy) cell of [`chaos_serving`].
+#[derive(Debug, Clone)]
+pub struct ChaosCell {
+    /// Kernel family the replicas price their steps with.
+    pub kind: KernelKind,
+    /// Admission behavior under KV-pool pressure.
+    pub shed: ShedPolicy,
+    /// The chaos run's full result.
+    pub result: ChaosResult,
+}
+
+/// Everything [`chaos_serving`] ran, for the tests.
+#[derive(Debug, Clone)]
+pub struct ChaosServingReport {
+    /// Pressure-wave cells: (QUICK, AWQ) × (degrade, reject-only).
+    pub pressure: Vec<ChaosCell>,
+    /// Mixed-fault cells (crash + stall + pressure): QUICK and AWQ under
+    /// the degrade ladder. Empty when the sweep ran in quick mode.
+    pub mixed: Vec<ChaosCell>,
+}
+
+impl ChaosServingReport {
+    /// Pressure-wave result for `kind` under `shed` (panics if the sweep
+    /// did not run that cell).
+    pub fn pressure_cell(&self, kind: KernelKind, shed: ShedPolicy) -> &ChaosResult {
+        self.pressure
+            .iter()
+            .find(|c| c.kind == kind && c.shed == shed)
+            .map(|c| &c.result)
+            .expect("cell not swept")
+    }
+}
+
+/// Run one chaos cell per pool task and return the results in cell order.
+fn chaos_cells(
+    dev: &crate::gpusim::DeviceSpec,
+    spec: &crate::model::LlmSpec,
+    cells: &[(KernelKind, ShedPolicy)],
+    reqs: &[Request],
+    plan: &FaultPlan,
+    policy: &(dyn Fn(ShedPolicy) -> ChaosPolicy + Sync),
+    calib: &Calib,
+) -> Result<Vec<ChaosCell>> {
+    let slots: Mutex<Vec<Option<Result<ChaosResult>>>> =
+        Mutex::new(cells.iter().map(|_| None).collect());
+    WorkerPool::global().run(cells.len(), cells.len(), &|t, _slot| {
+        let (kind, shed) = cells[t];
+        let r = run_chaos(dev, spec, kind, reqs, plan, &policy(shed), calib);
+        slots.lock().unwrap_or_else(|e| e.into_inner())[t] = Some(r);
+    });
+    let mut ran = Vec::with_capacity(cells.len());
+    let drained = slots.into_inner().unwrap_or_else(|e| e.into_inner());
+    for ((kind, shed), slot) in cells.iter().copied().zip(drained) {
+        ran.push(ChaosCell { kind, shed, result: slot.expect("pool ran every cell")? });
+    }
+    Ok(ran)
+}
+
+/// Chaos serving sweep — goodput under deterministic fault schedules,
+/// QUICK vs AWQ (`simulate chaos`).
+///
+/// Two sections:
+///
+/// * **Pressure wave** (the acceptance cell): one replica whose KV pool
+///   loses 90% of its blocks for most of the horizon. The degrade
+///   ladder ([`ShedPolicy::DegradeThenReject`]: f16 → kv8 → kv4
+///   admission) runs against [`ShedPolicy::RejectOnly`] under the
+///   *same* schedule and SLO. The ladder must win strictly: kv4 packs
+///   ~3.3x more tokens per block, so it keeps admitting where
+///   reject-only sheds every in-window arrival on the TTFT deadline.
+/// * **Mixed faults** (skipped with `quick`): two replicas through a
+///   seeded crash/stall/pressure schedule — failover requeues in-flight
+///   work for KV recompute, the router ramps the recovered replica back
+///   through probing, and every request still terminates exactly once.
+pub fn chaos_serving(out: &mut impl Write, quick: bool) -> Result<ChaosServingReport> {
+    let dev = Gpu::RtxA6000.spec();
+    let spec = Model::Mistral7B.spec();
+    let calib = Calib::default();
+
+    // Pressure fixture: five requests arrive inside the pressure window,
+    // four after it lifts. A 220-token prompt against the 7 blocks a
+    // 90%-squeezed 64-block pool has left needs 15 blocks at f16
+    // (14 + watermark), 9 at kv8, 6 at kv4 — only the ladder's bottom
+    // rung fits, so reject-only can do nothing but shed.
+    let mut reqs: Vec<Request> = Vec::new();
+    for i in 0..5u64 {
+        reqs.push(Request {
+            id: 1 + i,
+            prompt_tokens: 220,
+            gen_tokens: 6,
+            arrival_s_micros: 100_000 + 250_000 * i,
+            sys_id: 0,
+            sys_tokens: 0,
+            stream_id: 1 + i,
+        });
+    }
+    for i in 0..4u64 {
+        reqs.push(Request {
+            id: 11 + i,
+            prompt_tokens: 220,
+            gen_tokens: 6,
+            arrival_s_micros: 1_700_000 + 50_000 * i,
+            sys_id: 0,
+            sys_tokens: 0,
+            stream_id: 11 + i,
+        });
+    }
+    let plan = FaultPlan {
+        seed: 0,
+        scenario: Scenario::PressureWave,
+        events: vec![
+            FaultEvent { at_s: 0.0, kind: FaultKind::PressureStart { replica: 0, frac: 0.9 } },
+            FaultEvent { at_s: 1.5, kind: FaultKind::PressureEnd { replica: 0 } },
+        ],
+    };
+    let policy = |shed: ShedPolicy| ChaosPolicy {
+        serve: ContinuousPolicy { max_num_seqs: 8, ..ContinuousPolicy::default() },
+        n_replicas: 1,
+        slo: SloSpec { ttft_s: 0.3, tpot_s: 1.0 },
+        shed,
+        pool_blocks: Some(64),
+        ..ChaosPolicy::default()
+    };
+    let cells = [
+        (KernelKind::Quick, ShedPolicy::DegradeThenReject),
+        (KernelKind::Quick, ShedPolicy::RejectOnly),
+        (KernelKind::Awq, ShedPolicy::DegradeThenReject),
+        (KernelKind::Awq, ShedPolicy::RejectOnly),
+    ];
+    let pressure = chaos_cells(&dev, &spec, &cells, &reqs, &plan, &policy, &calib)?;
+
+    writeln!(
+        out,
+        "\n== Chaos serving: goodput under faults ({} on {}) ==",
+        spec.name, dev.name
+    )?;
+    writeln!(out, "-- pressure wave: 90% of a 64-block pool held 0.0-1.5s, TTFT SLO 0.3s --")?;
+    writeln!(
+        out,
+        "{:6} {:12} {:>8} {:>8} {:>8} {:>8} {:>12}",
+        "kernel", "shed", "finished", "shed", "kv8", "kv4", "goodput t/s"
+    )?;
+    for c in &pressure {
+        writeln!(
+            out,
+            "{:6} {:12} {:>8} {:>8} {:>8} {:>8} {:>12.1}",
+            c.kind.label(),
+            c.shed.label(),
+            c.result.finished,
+            c.result.rejected,
+            c.result.degraded_int8,
+            c.result.degraded_int4,
+            c.result.goodput_tok_per_s
+        )?;
+    }
+    let report = ChaosServingReport { pressure, mixed: Vec::new() };
+    for kind in [KernelKind::Quick, KernelKind::Awq] {
+        let d = report.pressure_cell(kind, ShedPolicy::DegradeThenReject);
+        let r = report.pressure_cell(kind, ShedPolicy::RejectOnly);
+        ensure!(
+            d.degraded_int8 + d.degraded_int4 > 0,
+            "{}: the degrade ladder never engaged under pressure",
+            kind.label()
+        );
+        ensure!(
+            r.rejected_slo > 0,
+            "{}: reject-only shed nothing — the pressure window has no teeth",
+            kind.label()
+        );
+        ensure!(
+            d.goodput_tok_per_s > r.goodput_tok_per_s,
+            "{}: degrade goodput {:.1} not strictly above reject-only {:.1}",
+            kind.label(),
+            d.goodput_tok_per_s,
+            r.goodput_tok_per_s
+        );
+    }
+    let dq = report.pressure_cell(KernelKind::Quick, ShedPolicy::DegradeThenReject);
+    let rq = report.pressure_cell(KernelKind::Quick, ShedPolicy::RejectOnly);
+    writeln!(
+        out,
+        "degrade ladder sustains {:.1} tok/s vs {:.1} reject-only under the same schedule (QUICK)",
+        dq.goodput_tok_per_s, rq.goodput_tok_per_s
+    )?;
+    if quick {
+        return Ok(report);
+    }
+
+    // Mixed faults: a seeded crash + stall + pressure schedule over two
+    // replicas, arrivals spanning the whole horizon so the crash lands
+    // on live work and failover has something to recompute.
+    let mixed_plan = FaultPlan::generate(42, Scenario::Mixed, 2, 6.0);
+    let mixed_reqs: Vec<Request> = (0..48u64)
+        .map(|i| Request {
+            id: 100 + i,
+            prompt_tokens: 160 + (i * 37) % 220,
+            gen_tokens: 12 + (i % 21),
+            arrival_s_micros: i * 120_000,
+            sys_id: 0,
+            sys_tokens: 0,
+            stream_id: 100 + i,
+        })
+        .collect();
+    let mixed_policy = |shed: ShedPolicy| ChaosPolicy {
+        serve: ContinuousPolicy { max_num_seqs: 32, ..ContinuousPolicy::default() },
+        n_replicas: 2,
+        slo: SloSpec { ttft_s: 5.0, tpot_s: 0.5 },
+        shed,
+        pool_blocks: Some(256),
+        ..ChaosPolicy::default()
+    };
+    let mixed_cells = [
+        (KernelKind::Quick, ShedPolicy::DegradeThenReject),
+        (KernelKind::Awq, ShedPolicy::DegradeThenReject),
+    ];
+    let mixed =
+        chaos_cells(&dev, &spec, &mixed_cells, &mixed_reqs, &mixed_plan, &mixed_policy, &calib)?;
+    writeln!(out, "-- mixed faults: seeded crash + stall + pressure, 2 replicas, 48 requests --")?;
+    writeln!(
+        out,
+        "{:6} {:>8} {:>8} {:>8} {:>9} {:>9} {:>12}",
+        "kernel", "finished", "shed", "crashes", "requeues", "degraded", "goodput t/s"
+    )?;
+    for c in &mixed {
+        writeln!(
+            out,
+            "{:6} {:>8} {:>8} {:>8} {:>9} {:>9} {:>12.1}",
+            c.kind.label(),
+            c.result.finished,
+            c.result.rejected,
+            c.result.crashes,
+            c.result.failover_requeues,
+            c.result.degraded_int8 + c.result.degraded_int4,
+            c.result.goodput_tok_per_s
+        )?;
+        ensure!(
+            c.result.finished + c.result.rejected == mixed_reqs.len(),
+            "{}: {} finished + {} shed != {} submitted",
+            c.kind.label(),
+            c.result.finished,
+            c.result.rejected,
+            mixed_reqs.len()
+        );
+        ensure!(c.result.crashes == 1, "{}: mixed plan must crash once", c.kind.label());
+        ensure!(
+            c.result.phantom_guard_violations == 0,
+            "{}: phantom prefix hits survived a crash",
+            c.kind.label()
+        );
+    }
+    Ok(ChaosServingReport { mixed, ..report })
 }
 
 #[cfg(test)]
@@ -2037,6 +2295,36 @@ mod tests {
         // Calibration: a positive measured wall fit to a consumable Calib.
         assert!(r.measured_attn_s > 0.0);
         assert!(r.calibrated.kv_attn_scale >= 0.0 && r.calibrated.kv_attn_scale <= 1024.0);
+    }
+
+    #[test]
+    fn chaos_serving_degrade_beats_reject_only() {
+        let r = chaos_serving(&mut std::io::sink(), true).unwrap();
+        assert_eq!(r.pressure.len(), 4);
+        assert!(r.mixed.is_empty(), "quick mode skips the mixed sweep");
+        for kind in [KernelKind::Quick, KernelKind::Awq] {
+            let d = r.pressure_cell(kind, ShedPolicy::DegradeThenReject);
+            let rj = r.pressure_cell(kind, ShedPolicy::RejectOnly);
+            // The five in-window arrivals only fit at kv4; reject-only
+            // sheds all of them on the 0.3s TTFT deadline.
+            assert_eq!(d.finished, 9, "{:?}", kind);
+            assert_eq!(d.degraded_int4, 5, "{:?}", kind);
+            assert_eq!(rj.finished, 4, "{:?}", kind);
+            assert_eq!(rj.rejected_slo, 5, "{:?}", kind);
+            assert!(d.goodput_tok_per_s > rj.goodput_tok_per_s, "{:?}", kind);
+        }
+    }
+
+    #[test]
+    fn chaos_serving_mixed_sweep_conserves_requests() {
+        let r = chaos_serving(&mut std::io::sink(), false).unwrap();
+        assert_eq!(r.mixed.len(), 2);
+        for c in &r.mixed {
+            assert_eq!(c.result.crashes, 1, "{:?}", c.kind);
+            assert_eq!(c.result.recoveries, 1, "{:?}", c.kind);
+            assert_eq!(c.result.finished + c.result.rejected, 48, "{:?}", c.kind);
+            assert_eq!(c.result.phantom_guard_violations, 0, "{:?}", c.kind);
+        }
     }
 
     #[test]

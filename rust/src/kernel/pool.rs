@@ -33,11 +33,29 @@
 //! interleaves their GEMM jobs, and the resulting group wall time is the
 //! ranks-share-one-CPU stand-in `coordinator::measured` reports.
 
-use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
 use crate::obs::{trace, Counter, Gauge, Registry};
+
+/// Lock `m`, ignoring poisoning. A panicking task body is caught in
+/// [`participate`] and re-raised on the submitting caller
+/// ([`WorkerPool::run`]'s scope-join semantics) — but that re-raise
+/// unwinds through `run` while the submit guard is still live, which
+/// poisons the mutex. Every critical section here leaves the state
+/// consistent before any panic can fire (the claim/done protocol never
+/// unwinds mid-update), so the poison bit carries no information;
+/// honoring it would brick the pool for every job after a caught panic.
+fn lock_ignore_poison<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// [`Condvar::wait`] with the same poison-ignoring contract as
+/// [`lock_ignore_poison`].
+fn wait_ignore_poison<'a, T>(cv: &Condvar, guard: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    cv.wait(guard).unwrap_or_else(|e| e.into_inner())
+}
 
 /// A task body: `(task_index, slot)` where `slot < threads` identifies
 /// the participant (stable per participant within one job — used to
@@ -189,7 +207,7 @@ impl WorkerPool {
             }
             return;
         }
-        let _submission = self.submit.lock().unwrap();
+        let _submission = lock_ignore_poison(&self.submit);
         let _span =
             trace::span2("pool.run", "pool", "tasks", tasks as f64, "threads", slots as f64);
         metrics().jobs.inc();
@@ -203,7 +221,7 @@ impl WorkerPool {
         let body_static: &'static Task<'static> =
             unsafe { std::mem::transmute::<&Task<'_>, &'static Task<'static>>(body) };
         let epoch = {
-            let mut st = self.shared.state.lock().unwrap();
+            let mut st = lock_ignore_poison(&self.shared.state);
             st.epoch += 1;
             st.body = Some(body_static);
             st.tasks = tasks;
@@ -216,9 +234,9 @@ impl WorkerPool {
         };
         self.shared.work_cv.notify_all();
         participate(&self.shared, epoch, body, 0);
-        let mut st = self.shared.state.lock().unwrap();
+        let mut st = lock_ignore_poison(&self.shared.state);
         while st.done < st.tasks {
-            st = self.shared.done_cv.wait(st).unwrap();
+            st = wait_ignore_poison(&self.shared.done_cv, st);
         }
         st.body = None;
         let payload = st.panic_payload.take();
@@ -236,7 +254,7 @@ impl WorkerPool {
 impl Drop for WorkerPool {
     fn drop(&mut self) {
         {
-            let mut st = self.shared.state.lock().unwrap();
+            let mut st = lock_ignore_poison(&self.shared.state);
             st.shutdown = true;
         }
         self.shared.work_cv.notify_all();
@@ -257,7 +275,7 @@ fn participate(shared: &Shared, epoch: u64, body: &Task<'_>, slot: usize) {
     let mut claimed = 0u64;
     loop {
         let t = {
-            let mut st = shared.state.lock().unwrap();
+            let mut st = lock_ignore_poison(&shared.state);
             if st.epoch != epoch || st.next >= st.tasks {
                 break;
             }
@@ -268,7 +286,7 @@ fn participate(shared: &Shared, epoch: u64, body: &Task<'_>, slot: usize) {
         claimed += 1;
         metrics().queue_depth.add(-1);
         let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| body(t, slot)));
-        let mut st = shared.state.lock().unwrap();
+        let mut st = lock_ignore_poison(&shared.state);
         if st.epoch == epoch {
             if let Err(payload) = outcome {
                 st.panic_payload.get_or_insert(payload);
@@ -292,7 +310,7 @@ fn worker_loop(shared: &Shared) {
     let mut last_epoch = 0u64;
     loop {
         let (epoch, body, slot) = {
-            let mut st = shared.state.lock().unwrap();
+            let mut st = lock_ignore_poison(&shared.state);
             loop {
                 if st.shutdown {
                     return;
@@ -311,7 +329,7 @@ fn worker_loop(shared: &Shared) {
                     }
                 }
                 metrics().parks.inc();
-                st = shared.work_cv.wait(st).unwrap();
+                st = wait_ignore_poison(&shared.work_cv, st);
                 metrics().wakes.inc();
             }
         };
@@ -391,6 +409,31 @@ mod tests {
             sum.fetch_add(t, Ordering::Relaxed);
         });
         assert_eq!(sum.load(Ordering::Relaxed), 6);
+    }
+
+    #[test]
+    fn pool_is_not_poisoned_by_a_panicking_job() {
+        // The re-raised panic unwinds through `run` with the submit
+        // guard live, poisoning the mutex; before the poison-ignoring
+        // locks, every job after the first panic died at `lock()` with
+        // a PoisonError instead of running. Several rounds, so a panic
+        // landing on either side of the submit guard is covered.
+        let pool = WorkerPool::new(2);
+        for round in 0..3usize {
+            let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                pool.run(8, 3, &|t, _| {
+                    if t == round {
+                        panic!("boom {round}");
+                    }
+                });
+            }));
+            assert!(caught.is_err(), "round {round}: the panic must surface");
+            let sum = AtomicUsize::new(0);
+            pool.run(16, 3, &|t, _| {
+                sum.fetch_add(t, Ordering::Relaxed);
+            });
+            assert_eq!(sum.load(Ordering::Relaxed), 120, "round {round}: pool must stay usable");
+        }
     }
 
     #[test]

@@ -1,0 +1,199 @@
+//! Validation for the `BENCH_kernels.json` perf-trajectory snapshot —
+//! the library half of `quick-infer bench check`, shared with the
+//! failure-injection tests so corrupt artifacts are provably rejected
+//! without shelling out to the CLI.
+//!
+//! Beyond structural checks (runs present, differential gate recorded),
+//! the validator hardens against *numerically* corrupt snapshots: JSON
+//! has no `NaN` literal (a writer interpolating one fails at parse),
+//! but `1e999` parses to `+inf` and a sign flip parses fine — both are
+//! broken writers, and a `NaN`/`inf` gate value must never read as "the
+//! gate passed".
+
+use anyhow::{ensure, Result};
+
+use super::json::Json;
+
+/// What a validated snapshot contained; the CLI prints from this.
+#[derive(Debug, Clone, Default)]
+pub struct BenchSummary {
+    /// The file was a committed placeholder with no measured runs.
+    pub placeholder: bool,
+    /// Measured runs recorded.
+    pub runs: usize,
+    /// Decode-sweep rows, when that sweep is present.
+    pub decode_rows: Option<usize>,
+    /// Attention-sweep rows, when that sweep is present.
+    pub attn_rows: Option<usize>,
+    /// Differential-gate keys present, with their relative errors.
+    pub gate: Vec<(String, f64)>,
+    /// Gate tolerance.
+    pub tolerance: f64,
+    /// `(runtime_speedup_at_max_m, min_fused_over_writeback)` from the
+    /// informational acceptance block, when present.
+    pub acceptance: Option<(f64, f64)>,
+}
+
+/// Reject any non-finite number anywhere in `v`. `NaN` never survives
+/// [`Json::parse`], but `1e999`-style infinities do, and a comparison
+/// like `e <= tol` is silently false-shaped for both.
+fn ensure_finite(v: &Json, path: &str) -> Result<()> {
+    match v {
+        Json::Num(n) => ensure!(n.is_finite(), "non-finite number at {path}: {n}"),
+        Json::Arr(items) => {
+            for (i, x) in items.iter().enumerate() {
+                ensure_finite(x, &format!("{path}[{i}]"))?;
+            }
+        }
+        Json::Obj(m) => {
+            for (k, x) in m {
+                ensure_finite(x, &format!("{path}.{k}"))?;
+            }
+        }
+        _ => {}
+    }
+    Ok(())
+}
+
+/// Sweep rows hold only magnitudes (gflops, nanoseconds, shapes, error
+/// ratios): a negative field is a corrupt or hand-edited snapshot.
+fn ensure_nonneg_fields(row: &Json, path: &str) -> Result<()> {
+    for (k, v) in row.as_obj()? {
+        if let Json::Num(n) = v {
+            ensure!(*n >= 0.0, "negative field at {path}.{k}: {n}");
+        }
+    }
+    Ok(())
+}
+
+/// Validate a `BENCH_kernels.json` document.
+///
+/// `strict` is the CI mode (the bench just ran): placeholders are
+/// rejected, and the snapshot must be full — all three differential-gate
+/// keys plus both the decode and attention sweeps.
+pub fn check_bench_json(text: &str, strict: bool) -> Result<BenchSummary> {
+    let doc = Json::parse(text.trim())?;
+    // The committed trajectory file may be an explicit placeholder from
+    // an environment that never ran the bench (no toolchain). That is a
+    // documented state, not a broken artifact.
+    if matches!(doc.get("placeholder"), Some(Json::Bool(true))) {
+        ensure!(
+            !strict,
+            "snapshot is a placeholder (no measured runs) but --strict requires a real one"
+        );
+        return Ok(BenchSummary { placeholder: true, ..Default::default() });
+    }
+    ensure_finite(&doc, "$")?;
+    let runs = doc.req("runs")?.as_arr()?;
+    ensure!(!runs.is_empty(), "bench JSON records no runs");
+    let gate = doc.req("differential_gate")?;
+    let tol = gate.req("tolerance")?.as_f64()?;
+    ensure!(tol > 0.0, "differential gate tolerance {tol} must be positive");
+    // A partial run (--decode-sweep / --attention) records only its own
+    // gate keys; validate every key present and require at least one.
+    let mut checked: Vec<(String, f64)> = Vec::new();
+    for key in ["fused_rel_err", "writeback_rel_err", "attn_rel_err"] {
+        if let Some(v) = gate.get(key) {
+            let e = v.as_f64()?;
+            ensure!(e >= 0.0, "negative differential-gate error {key}: {e} — a broken writer");
+            ensure!(e <= tol, "differential gate failed: {key} {e:.2e} vs tolerance {tol:.0e}");
+            checked.push((key.to_string(), e));
+        }
+    }
+    ensure!(!checked.is_empty(), "differential gate records no error keys");
+    ensure!(
+        !strict || checked.len() == 3,
+        "--strict requires all three gate keys (fused/write-back/attention), found {:?}",
+        checked.iter().map(|(k, _)| k.as_str()).collect::<Vec<_>>()
+    );
+    let decode_rows = doc.get("decode_sweep").map(Json::as_arr).transpose()?;
+    if let Some(rows) = decode_rows {
+        ensure!(!rows.is_empty(), "decode sweep is empty");
+        for (i, row) in rows.iter().enumerate() {
+            ensure_nonneg_fields(row, &format!("decode_sweep[{i}]"))?;
+        }
+    }
+    let attn_rows = doc.get("attention_sweep").map(Json::as_arr).transpose()?;
+    if let Some(rows) = attn_rows {
+        ensure!(!rows.is_empty(), "attention sweep is empty");
+        for (i, row) in rows.iter().enumerate() {
+            ensure_nonneg_fields(row, &format!("attention_sweep[{i}]"))?;
+        }
+    }
+    ensure!(
+        !strict || (decode_rows.is_some() && attn_rows.is_some()),
+        "--strict requires both the decode and attention sweeps in the snapshot"
+    );
+    let acceptance = match doc.get("acceptance") {
+        Some(acc) => Some((
+            acc.req("runtime_speedup_at_max_m")?.as_f64()?,
+            acc.req("min_fused_over_writeback")?.as_f64()?,
+        )),
+        None => None,
+    };
+    Ok(BenchSummary {
+        placeholder: false,
+        runs: runs.len(),
+        decode_rows: decode_rows.map(<[Json]>::len),
+        attn_rows: attn_rows.map(<[Json]>::len),
+        gate: checked,
+        tolerance: tol,
+        acceptance,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const OK: &str = r#"{
+        "runs": [{"m": 1, "gflops": 2.5}],
+        "differential_gate": {"tolerance": 1e-4, "fused_rel_err": 1e-6,
+                              "writeback_rel_err": 2e-6, "attn_rel_err": 3e-6},
+        "decode_sweep": [{"m": 1, "fused_pool_simd_gflops": 3.0}],
+        "attention_sweep": [{"ctx": 16, "q4_gflops": 1.0}]
+    }"#;
+
+    #[test]
+    fn full_snapshot_passes_strict() {
+        let s = check_bench_json(OK, true).unwrap();
+        assert!(!s.placeholder);
+        assert_eq!(s.runs, 1);
+        assert_eq!(s.gate.len(), 3);
+        assert_eq!(s.decode_rows, Some(1));
+        assert_eq!(s.attn_rows, Some(1));
+    }
+
+    #[test]
+    fn placeholder_passes_lenient_fails_strict() {
+        let doc = r#"{"placeholder": true, "runs": []}"#;
+        assert!(check_bench_json(doc, false).unwrap().placeholder);
+        assert!(check_bench_json(doc, true).is_err());
+    }
+
+    #[test]
+    fn gate_over_tolerance_fails() {
+        let doc = OK.replace("\"fused_rel_err\": 1e-6", "\"fused_rel_err\": 1e-3");
+        let err = check_bench_json(&doc, false).err().expect("must fail");
+        assert!(format!("{err:#}").contains("gate failed"), "{err:#}");
+    }
+
+    #[test]
+    fn infinity_and_negative_fields_fail() {
+        let inf = OK.replace("\"fused_rel_err\": 1e-6", "\"fused_rel_err\": 1e999");
+        let err = check_bench_json(&inf, false).err().expect("must fail");
+        assert!(format!("{err:#}").contains("non-finite"), "{err:#}");
+        let neg = OK.replace("\"fused_rel_err\": 1e-6", "\"fused_rel_err\": -1e-6");
+        let err = check_bench_json(&neg, false).err().expect("must fail");
+        assert!(format!("{err:#}").contains("negative"), "{err:#}");
+        let row = OK.replace("\"fused_pool_simd_gflops\": 3.0", "\"fused_pool_simd_gflops\": -3.0");
+        let err = check_bench_json(&row, false).err().expect("must fail");
+        assert!(format!("{err:#}").contains("negative field"), "{err:#}");
+    }
+
+    #[test]
+    fn nan_literal_fails_at_parse() {
+        let doc = OK.replace("\"fused_rel_err\": 1e-6", "\"fused_rel_err\": NaN");
+        assert!(check_bench_json(&doc, false).is_err());
+    }
+}

@@ -1,0 +1,107 @@
+//! Golden-fixture parsing: the `# comment` / `key value`-per-line text
+//! format `python/tests/gen_golden_fixtures.py` emits, shared by the
+//! differential tests and the failure-injection suite. Every parser is
+//! `Result`-returning so a truncated or garbled fixture fails with a
+//! description of the bad line instead of a panic mid-assertion.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+/// Parse a fixture file's text into its key → value map. Blank lines
+/// and `#` comments are skipped; every other line must be `key value`.
+pub fn parse_fixture(text: &str) -> Result<HashMap<String, String>> {
+    let mut fields = HashMap::new();
+    for (lineno, line) in text.lines().enumerate() {
+        if line.starts_with('#') || line.trim().is_empty() {
+            continue;
+        }
+        let Some((key, value)) = line.split_once(' ') else {
+            let head: String = line.chars().take(32).collect();
+            bail!("fixture line {}: expected `key value`, got {head:?} — truncated?", lineno + 1);
+        };
+        ensure!(
+            !value.trim().is_empty(),
+            "fixture line {}: key '{key}' has an empty value — truncated?",
+            lineno + 1
+        );
+        fields.insert(key.to_string(), value.to_string());
+    }
+    ensure!(!fields.is_empty(), "fixture holds no `key value` lines");
+    Ok(fields)
+}
+
+/// Look up `key` in a parsed fixture, with a fixture-shaped error when
+/// absent (truncation drops trailing fields).
+pub fn req<'a>(fields: &'a HashMap<String, String>, key: &str) -> Result<&'a str> {
+    match fields.get(key) {
+        Some(v) => Ok(v.as_str()),
+        None => bail!("fixture is missing field '{key}' — truncated fixture?"),
+    }
+}
+
+/// Parse a packed-nibble field: one hex digit per 4-bit code.
+pub fn parse_nibbles(s: &str) -> Result<Vec<i32>> {
+    s.chars()
+        .map(|c| {
+            c.to_digit(16)
+                .map(|d| d as i32)
+                .ok_or_else(|| anyhow!("bad nibble digit {c:?} — garbled fixture?"))
+        })
+        .collect()
+}
+
+/// Parse a whitespace-separated list of 8-hex-digit `u32` words.
+pub fn parse_words(s: &str) -> Result<Vec<u32>> {
+    s.split_whitespace()
+        .map(|w| {
+            u32::from_str_radix(w, 16).with_context(|| {
+                let head: String = w.chars().take(16).collect();
+                format!("bad hex word {head:?} — garbled fixture?")
+            })
+        })
+        .collect()
+}
+
+/// f32 buffers travel as IEEE-754 bit patterns — the parse is bit-exact
+/// against what the Python reference saw.
+pub fn parse_f32_words(s: &str) -> Result<Vec<f32>> {
+    Ok(parse_words(s)?.into_iter().map(f32::from_bits).collect())
+}
+
+/// Parse a whitespace-separated decimal integer list (permutations).
+pub fn parse_ints(s: &str) -> Result<Vec<i64>> {
+    s.split_whitespace()
+        .map(|p| p.parse::<i64>().with_context(|| format!("bad integer {p:?} — garbled fixture?")))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_comments_blanks_and_fields() {
+        let f = parse_fixture("# header\n\nk 16\ncodes 0f0f\n").unwrap();
+        assert_eq!(req(&f, "k").unwrap(), "16");
+        assert_eq!(parse_nibbles(req(&f, "codes").unwrap()).unwrap(), vec![0, 15, 0, 15]);
+        assert!(req(&f, "perm").is_err());
+    }
+
+    #[test]
+    fn truncated_and_garbled_lines_fail_cleanly() {
+        assert!(parse_fixture("k 16\ncodes").is_err());
+        assert!(parse_fixture("k \n").is_err());
+        assert!(parse_fixture("# only comments\n").is_err());
+        assert!(parse_nibbles("01xz").is_err());
+        assert!(parse_words("deadbeef nothex!").is_err());
+        assert!(parse_ints("3 1 four").is_err());
+    }
+
+    #[test]
+    fn f32_words_round_trip_bit_patterns() {
+        let one = 1.0f32.to_bits();
+        let v = parse_f32_words(&format!("{one:08x}")).unwrap();
+        assert_eq!(v, vec![1.0f32]);
+    }
+}

@@ -1,10 +1,13 @@
 //! std-only infrastructure substrates (the offline build has no external
 //! crates beyond `xla` + `anyhow`): JSON parsing, deterministic RNG +
-//! distributions, a bench harness, a property-testing helper, and an
+//! distributions, a bench harness, a property-testing helper, validators
+//! for the bench-trajectory JSON and golden fixtures, and an
 //! allocation-counting global allocator for zero-alloc hot-path gates.
 
 pub mod alloc;
 pub mod bench;
+pub mod benchjson;
+pub mod fixture;
 pub mod json;
 pub mod proptest;
 pub mod rng;

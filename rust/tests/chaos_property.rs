@@ -1,0 +1,119 @@
+//! Property tests for the chaos-serving harness: over many seeded fault
+//! plans, every request must terminate exactly once — finished or
+//! rejected with a reason code — with no phantom prefix hits, and the
+//! whole run must replay bit-identically from its seed.
+//!
+//! `CHAOS_SEED` rotates the base seed (the CI matrix sets it);
+//! `QUICK_PROPTEST_CASES` scales case count.
+
+use quick_infer::coordinator::faults::{
+    run_chaos, ChaosPolicy, FaultPlan, Outcome, Scenario, ShedPolicy, SloSpec,
+};
+use quick_infer::coordinator::simserve::ContinuousPolicy;
+use quick_infer::gpusim::kernel_model::{Calib, KernelKind};
+use quick_infer::gpusim::Gpu;
+use quick_infer::model::Model;
+use quick_infer::util::{proptest, Rng};
+use quick_infer::workload::Request;
+
+fn base_seed() -> u64 {
+    std::env::var("CHAOS_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(0xC0FF_EE00)
+}
+
+/// 8–16 small requests with randomized arrivals; ~1 in 10 workloads gets
+/// a prompt too large for any pool in this test's range, exercising the
+/// `Oversized` reject path.
+fn random_requests(rng: &mut Rng) -> Vec<Request> {
+    let n = rng.range_usize(8, 16);
+    let oversized_at = if rng.f64() < 0.1 { Some(rng.range_usize(0, n - 1)) } else { None };
+    let mut reqs: Vec<Request> = (0..n)
+        .map(|i| Request {
+            id: i as u64 + 1,
+            prompt_tokens: if oversized_at == Some(i) { 6000 } else { rng.range_u64(16, 100) },
+            gen_tokens: rng.range_u64(1, 24),
+            arrival_s_micros: rng.range_u64(0, 2_000_000),
+            sys_id: 0,
+            sys_tokens: 0,
+            stream_id: i as u64 + 1,
+        })
+        .collect();
+    reqs.sort_by_key(|r| r.arrival_s_micros);
+    reqs
+}
+
+fn random_policy(rng: &mut Rng, n_replicas: usize) -> ChaosPolicy {
+    ChaosPolicy {
+        serve: ContinuousPolicy { max_num_seqs: 8, token_budget: 128, ..Default::default() },
+        n_replicas,
+        slo: SloSpec { ttft_s: rng.range_f64(0.2, 5.0), tpot_s: rng.range_f64(0.05, 1.0) },
+        shed: if rng.f64() < 0.5 { ShedPolicy::DegradeThenReject } else { ShedPolicy::RejectOnly },
+        max_retries: rng.range_u64(0, 3) as u32,
+        pool_blocks: Some(rng.range_u64(24, 96)),
+        ..Default::default()
+    }
+}
+
+#[test]
+fn every_request_terminates_exactly_once_under_any_fault_plan() {
+    let (dev, spec) = (Gpu::RtxA6000.spec(), Model::Mistral7B.spec());
+    proptest::check("chaos-conservation", base_seed(), 128, |rng| {
+        let seed = rng.next_u64();
+        let scenario = Scenario::ALL[(seed % Scenario::ALL.len() as u64) as usize];
+        let n_replicas = rng.range_usize(1, 4);
+        let plan = FaultPlan::generate(seed, scenario, n_replicas, 4.0);
+        let reqs = random_requests(rng);
+        let policy = random_policy(rng, n_replicas);
+        let res =
+            run_chaos(&dev, &spec, KernelKind::Quick, &reqs, &plan, &policy, &Calib::default())
+                .unwrap_or_else(|e| panic!("{} seed {seed:#x}: {e:#}", scenario.label()));
+
+        // Exactly-once termination: one outcome per request, ids match.
+        assert_eq!(res.outcomes.len(), reqs.len(), "{} seed {seed:#x}", scenario.label());
+        let mut got: Vec<u64> = res.outcomes.iter().map(|(id, _)| *id).collect();
+        got.sort_unstable();
+        let mut want: Vec<u64> = reqs.iter().map(|r| r.id).collect();
+        want.sort_unstable();
+        assert_eq!(got, want, "{} seed {seed:#x}: outcome ids drift", scenario.label());
+
+        // Every outcome is Finished or Rejected(reason) — and the tallies
+        // agree with the outcome list.
+        let fin = res.outcomes.iter().filter(|(_, o)| *o == Outcome::Finished).count();
+        assert_eq!(fin, res.finished, "{} seed {seed:#x}", scenario.label());
+        assert_eq!(res.finished + res.rejected, reqs.len(), "{} seed {seed:#x}", scenario.label());
+        for (id, o) in &res.outcomes {
+            if let Outcome::Rejected(reason) = o {
+                assert!(!reason.label().is_empty(), "request {id} rejected without a reason");
+            }
+        }
+
+        // KV-state correctness across crashes: a recomputed request must
+        // never claim prefix blocks from a pool that died.
+        assert_eq!(
+            res.phantom_guard_violations,
+            0,
+            "{} seed {seed:#x}: phantom prefix hit after crash",
+            scenario.label()
+        );
+    });
+}
+
+#[test]
+fn chaos_runs_replay_bit_identically_from_their_seed() {
+    let (dev, spec) = (Gpu::RtxA6000.spec(), Model::Mistral7B.spec());
+    let mut rng = Rng::seed_from_u64(base_seed() ^ 0xD1CE);
+    let n_replicas = 3;
+    let plan = FaultPlan::generate(rng.next_u64(), Scenario::Mixed, n_replicas, 4.0);
+    let reqs = random_requests(&mut rng);
+    let policy = random_policy(&mut rng, n_replicas);
+    let run =
+        || run_chaos(&dev, &spec, KernelKind::Quick, &reqs, &plan, &policy, &Calib::default());
+    let (a, b) = (run().unwrap(), run().unwrap());
+    assert_eq!(a.outcomes, b.outcomes);
+    assert_eq!(a.finished, b.finished);
+    assert_eq!(a.rejected, b.rejected);
+    assert_eq!(a.gen_tokens, b.gen_tokens);
+    assert_eq!(a.steps, b.steps);
+    assert_eq!(a.failover_requeues, b.failover_requeues);
+    assert_eq!(a.degraded_int8 + a.degraded_int4, b.degraded_int8 + b.degraded_int4);
+    assert!((a.wall_s - b.wall_s).abs() == 0.0, "wall clock must replay exactly");
+}

@@ -28,8 +28,9 @@ fn quick_continuous_beats_wave_by_1_3x() {
     // the bursty workload.
     let (dev, spec, policy, calib) = setup();
     let reqs = BurstyWorkload::default().online(250, 1.0, 42);
-    let wave = simulate_static_wave(&dev, &spec, KernelKind::Quick, &reqs, &policy, &calib);
-    let cont = simulate_continuous(&dev, &spec, KernelKind::Quick, &reqs, &policy, &calib);
+    let wave =
+        simulate_static_wave(&dev, &spec, KernelKind::Quick, &reqs, &policy, &calib).unwrap();
+    let cont = simulate_continuous(&dev, &spec, KernelKind::Quick, &reqs, &policy, &calib).unwrap();
     assert!(!wave.oom && !cont.oom);
     assert_eq!(wave.finished, 250);
     assert_eq!(cont.finished, 250);
@@ -59,8 +60,9 @@ fn quick_awq_gap_widens_with_offered_load() {
     let (dev, spec, policy, calib) = setup();
     let gap_at = |rate: f64| -> (f64, ContinuousResult) {
         let reqs = BurstyWorkload::default().online(200, rate, 7);
-        let a = simulate_continuous(&dev, &spec, KernelKind::Awq, &reqs, &policy, &calib);
-        let q = simulate_continuous(&dev, &spec, KernelKind::Quick, &reqs, &policy, &calib);
+        let a = simulate_continuous(&dev, &spec, KernelKind::Awq, &reqs, &policy, &calib).unwrap();
+        let q =
+            simulate_continuous(&dev, &spec, KernelKind::Quick, &reqs, &policy, &calib).unwrap();
         assert!(!a.oom && !q.oom);
         assert_eq!(a.finished, 200);
         assert_eq!(q.finished, 200);
@@ -101,8 +103,9 @@ fn wave_and_continuous_agree_on_work_done() {
     // in *when* compute happens, not how much generation is produced.
     let (dev, spec, policy, calib) = setup();
     let reqs = BurstyWorkload::default().offline(120, 5);
-    let wave = simulate_static_wave(&dev, &spec, KernelKind::Quick, &reqs, &policy, &calib);
-    let cont = simulate_continuous(&dev, &spec, KernelKind::Quick, &reqs, &policy, &calib);
+    let wave =
+        simulate_static_wave(&dev, &spec, KernelKind::Quick, &reqs, &policy, &calib).unwrap();
+    let cont = simulate_continuous(&dev, &spec, KernelKind::Quick, &reqs, &policy, &calib).unwrap();
     let want_gen: u64 = reqs.iter().map(|r| r.gen_tokens).sum();
     assert_eq!(wave.gen_tokens, want_gen);
     // Continuous may regenerate a handful of tokens across preemptions.
@@ -120,7 +123,8 @@ fn budget_sweep_is_stable() {
     let mut worst = f64::INFINITY;
     for budget in [256u64, 512, 1024] {
         let policy = ContinuousPolicy { token_budget: budget, ..Default::default() };
-        let r = simulate_continuous(&dev, &spec, KernelKind::Quick, &reqs, &policy, &calib);
+        let r =
+            simulate_continuous(&dev, &spec, KernelKind::Quick, &reqs, &policy, &calib).unwrap();
         assert_eq!(r.finished, 100);
         best = best.max(r.total_tok_per_s);
         worst = worst.min(r.total_tok_per_s);

@@ -14,6 +14,7 @@ use quick_infer::quant::{
     apply_word_perm, ldmatrix_fragment_perm, pack_awq, pack_linear, pack_quick,
     pack_quick_dequant_order, pack_qzeros, unpack_awq, unpack_quick, PACK_FACTOR,
 };
+use quick_infer::util::fixture;
 
 struct Fixture {
     k: usize,
@@ -32,42 +33,32 @@ fn fixtures_dir() -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests").join("fixtures")
 }
 
+// The parsing itself lives in `quick_infer::util::fixture` (shared with
+// the failure-injection suite, which proves truncated/garbled fixtures
+// fail cleanly); these wrappers just turn its errors into test panics.
 fn parse_nibbles(s: &str) -> Vec<i32> {
-    s.chars()
-        .map(|c| c.to_digit(16).expect("nibble hex digit") as i32)
-        .collect()
+    fixture::parse_nibbles(s).unwrap_or_else(|e| panic!("{e:#}"))
 }
 
 fn parse_words(s: &str) -> Vec<u32> {
-    s.split_whitespace()
-        .map(|w| u32::from_str_radix(w, 16).expect("8-hex-digit word"))
-        .collect()
+    fixture::parse_words(s).unwrap_or_else(|e| panic!("{e:#}"))
 }
 
 /// f32 buffers travel as IEEE-754 bit patterns — parsing is bit-exact.
 fn parse_f32_words(s: &str) -> Vec<f32> {
-    parse_words(s).into_iter().map(f32::from_bits).collect()
+    fixture::parse_f32_words(s).unwrap_or_else(|e| panic!("{e:#}"))
 }
 
 fn load_fields(name: &str) -> HashMap<String, String> {
     let path = fixtures_dir().join(name);
     let text = std::fs::read_to_string(&path)
         .unwrap_or_else(|e| panic!("fixture {} unreadable: {e}", path.display()));
-    let mut fields = HashMap::new();
-    for line in text.lines() {
-        if line.starts_with('#') || line.trim().is_empty() {
-            continue;
-        }
-        let (key, value) = line.split_once(' ').expect("`key value` line");
-        fields.insert(key.to_string(), value.to_string());
-    }
-    fields
+    fixture::parse_fixture(&text).unwrap_or_else(|e| panic!("fixture {}: {e:#}", path.display()))
 }
 
 fn load_fixture(name: &str) -> Fixture {
     let fields = load_fields(name);
-    let get =
-        |key: &str| fields.get(key).unwrap_or_else(|| panic!("missing field {key}")).as_str();
+    let get = |key: &str| fixture::req(&fields, key).unwrap_or_else(|e| panic!("{name}: {e:#}"));
     Fixture {
         k: get("k").parse().unwrap(),
         n: get("n").parse().unwrap(),
@@ -78,7 +69,7 @@ fn load_fixture(name: &str) -> Fixture {
         awq: parse_words(get("awq")),
         quick: parse_words(get("quick")),
         qzeros: parse_words(get("qzeros")),
-        perm: get("perm").split_whitespace().map(|p| p.parse().unwrap()).collect(),
+        perm: fixture::parse_ints(get("perm")).unwrap_or_else(|e| panic!("{name}: {e:#}")),
     }
 }
 
@@ -114,8 +105,7 @@ struct KvFixture {
 
 fn load_kv_fixture(name: &str) -> KvFixture {
     let fields = load_fields(name);
-    let get =
-        |key: &str| fields.get(key).unwrap_or_else(|| panic!("missing field {key}")).as_str();
+    let get = |key: &str| fixture::req(&fields, key).unwrap_or_else(|e| panic!("{name}: {e:#}"));
     KvFixture {
         seq: get("seq").parse().unwrap(),
         d: get("d").parse().unwrap(),

@@ -1,12 +1,14 @@
 //! Failure-injection tests: corrupted manifests, missing/truncated
-//! artifacts and golden files must surface as clean errors, never panics
-//! or silent wrong answers.
+//! artifacts, golden fixtures, and bench-trajectory snapshots must
+//! surface as clean errors, never panics or silent wrong answers.
 
 use std::fs;
 use std::path::PathBuf;
 
 use quick_infer::runtime::manifest::Manifest;
 use quick_infer::runtime::Runtime;
+use quick_infer::util::benchjson::check_bench_json;
+use quick_infer::util::fixture;
 
 struct TempDir(PathBuf);
 
@@ -115,4 +117,85 @@ fn wrong_arg_dtype_rejected_by_runtime_validation() {
     // Wrong shape, right dtype:
     let bad_shape = quick_infer::runtime::HostTensor::F32(vec![0.0; 512], vec![1, 512]);
     assert!(rt.execute("gemm_quick_m1", &[bad_shape]).is_err());
+}
+
+// -- golden fixtures ---------------------------------------------------
+
+const GOLDEN: &str = "# golden fixture\nk 16\nn 64\ncodes 0123abcd\nperm 3 1 0 2\n";
+
+#[test]
+fn truncated_golden_fixture_is_clean_error() {
+    let fields = fixture::parse_fixture(GOLDEN).expect("intact fixture parses");
+    assert_eq!(fixture::req(&fields, "k").unwrap(), "16");
+    // Cut mid-line: the dangling `codes` key has no value separator.
+    let cut = &GOLDEN[..GOLDEN.find("codes").unwrap() + 5];
+    let err = fixture::parse_fixture(cut).err().expect("must fail");
+    assert!(format!("{err:#}").contains("truncated"), "{err:#}");
+    // A trailing field dropped whole by truncation is a clean lookup
+    // error naming the missing key, not an unwrap panic.
+    let cut_fields = fixture::parse_fixture(&GOLDEN[..GOLDEN.find("perm").unwrap()]).unwrap();
+    let err = fixture::req(&cut_fields, "perm").err().expect("must fail");
+    assert!(format!("{err:#}").contains("perm"), "{err:#}");
+}
+
+#[test]
+fn garbled_golden_fixture_is_clean_error() {
+    let fields = fixture::parse_fixture(GOLDEN).unwrap();
+    assert_eq!(fixture::parse_nibbles(fixture::req(&fields, "codes").unwrap()).unwrap().len(), 8);
+    // Bit rot in the hex payloads surfaces as a described parse error.
+    let err = fixture::parse_nibbles("0123abXd").err().expect("must fail");
+    assert!(format!("{err:#}").contains("nibble"), "{err:#}");
+    let err = fixture::parse_words("deadbeef nothex!!").err().expect("must fail");
+    assert!(format!("{err:#}").contains("hex word"), "{err:#}");
+    let err = fixture::parse_ints("3 1 four 2").err().expect("must fail");
+    assert!(format!("{err:#}").contains("integer"), "{err:#}");
+    // An empty value and an all-comment file are rejected, not returned
+    // as silently-empty maps.
+    assert!(fixture::parse_fixture("k \n").is_err());
+    assert!(fixture::parse_fixture("# nothing else\n").is_err());
+}
+
+// -- bench trajectory snapshots ---------------------------------------
+
+const BENCH_OK: &str = r#"{
+    "runs": [{"m": 1, "gflops": 2.5}],
+    "differential_gate": {"tolerance": 1e-4, "fused_rel_err": 1e-6},
+    "decode_sweep": [{"m": 1, "fused_pool_simd_gflops": 3.0}]
+}"#;
+
+#[test]
+fn bench_check_rejects_nan_and_infinite_fields() {
+    assert!(check_bench_json(BENCH_OK, false).is_ok());
+    // JSON has no NaN literal: a writer interpolating one must die at
+    // parse, never sail through as a silently-passing gate value.
+    let nan = BENCH_OK.replace("1e-6", "NaN");
+    assert!(check_bench_json(&nan, false).is_err());
+    // 1e999 parses to +inf — the finiteness walk rejects it wherever it
+    // hides, including inside sweep rows.
+    let inf = BENCH_OK.replace("\"fused_rel_err\": 1e-6", "\"fused_rel_err\": 1e999");
+    let err = check_bench_json(&inf, false).err().expect("must fail");
+    assert!(format!("{err:#}").contains("non-finite"), "{err:#}");
+    let inf_row = BENCH_OK.replace("\"gflops\": 2.5", "\"gflops\": 1e999");
+    let err = check_bench_json(&inf_row, false).err().expect("must fail");
+    assert!(format!("{err:#}").contains("non-finite"), "{err:#}");
+}
+
+#[test]
+fn bench_check_rejects_negative_fields() {
+    // A sign flip on a gate error or a sweep magnitude is a corrupt
+    // artifact, not a very good benchmark result.
+    let neg_gate = BENCH_OK.replace("\"fused_rel_err\": 1e-6", "\"fused_rel_err\": -1e-6");
+    let err = check_bench_json(&neg_gate, false).err().expect("must fail");
+    assert!(format!("{err:#}").contains("negative"), "{err:#}");
+    let neg_row = BENCH_OK.replace("3.0", "-3.0");
+    let err = check_bench_json(&neg_row, false).err().expect("must fail");
+    assert!(format!("{err:#}").contains("negative field"), "{err:#}");
+}
+
+#[test]
+fn bench_check_rejects_truncated_json() {
+    assert!(check_bench_json(&BENCH_OK[..BENCH_OK.len() / 2], false).is_err());
+    assert!(check_bench_json("", false).is_err());
+    // Structurally fine but semantically empty snapshots fail too.
+    assert!(check_bench_json(r#"{"runs": []}"#, false).is_err());
 }

@@ -200,9 +200,11 @@ fn modeled_twin_is_undisturbed_by_the_measured_path() {
     let (spec, policy, calib) = setup();
     let dev = Gpu::RtxA6000.spec();
     let reqs = measured_bursty(6, 606);
-    let before = simulate_continuous(&dev, &spec, KernelKind::Quick, &reqs, &policy, &calib);
+    let before =
+        simulate_continuous(&dev, &spec, KernelKind::Quick, &reqs, &policy, &calib).unwrap();
     let run = cont(StepBackend::Fused, &reqs, &policy);
-    let after = simulate_continuous(&dev, &spec, KernelKind::Quick, &reqs, &policy, &calib);
+    let after =
+        simulate_continuous(&dev, &spec, KernelKind::Quick, &reqs, &policy, &calib).unwrap();
     // The modeled twin stays bit-identical around a measured run…
     assert_eq!(before.wall_s.to_bits(), after.wall_s.to_bits());
     assert_eq!(before.total_tok_per_s.to_bits(), after.total_tok_per_s.to_bits());

@@ -115,7 +115,7 @@ fn prefix_hit_rate_is_precision_invariant_on_shared_prefix_traffic() {
     let spec = Model::Vicuna13B.spec();
     let base = ContinuousPolicy::default();
     let calib = Calib::default();
-    let f16 = simulate_continuous(&dev, &spec, KernelKind::Quick, &reqs, &base, &calib);
+    let f16 = simulate_continuous(&dev, &spec, KernelKind::Quick, &reqs, &base, &calib).unwrap();
     let q4 = simulate_continuous(
         &dev,
         &spec,
@@ -123,7 +123,8 @@ fn prefix_hit_rate_is_precision_invariant_on_shared_prefix_traffic() {
         &reqs,
         &ContinuousPolicy { kv_precision: KvPrecision::Int4, ..base },
         &calib,
-    );
+    )
+    .unwrap();
     assert!(!f16.oom && !q4.oom);
     assert_eq!(f16.finished, reqs.len());
     assert_eq!(q4.finished, reqs.len());

@@ -25,7 +25,7 @@ fn quick_throughput_monotone_in_tp_degree() {
     let policy = ContinuousPolicy::default();
     let calib = Calib::default();
     let reqs = BurstyWorkload::default().offline(80, 31);
-    let run = |tp| simulate_tp(&dev, &spec, KernelKind::Quick, &reqs, &policy, tp, &calib);
+    let run = |tp| simulate_tp(&dev, &spec, KernelKind::Quick, &reqs, &policy, tp, &calib).unwrap();
     let (t1, t2, t4) = (run(1), run(2), run(4));
     for (tp, r) in [(1u64, &t1), (2, &t2), (4, &t4)] {
         assert!(!r.oom, "tp={tp} oom");
@@ -55,8 +55,8 @@ fn tp_sim_baseline_equals_continuous_sim() {
     let policy = ContinuousPolicy::default();
     let calib = Calib::default();
     let reqs = BurstyWorkload::default().online(60, 1.0, 5);
-    let base = simulate_continuous(&dev, &spec, KernelKind::Quick, &reqs, &policy, &calib);
-    let tp1 = simulate_tp(&dev, &spec, KernelKind::Quick, &reqs, &policy, 1, &calib);
+    let base = simulate_continuous(&dev, &spec, KernelKind::Quick, &reqs, &policy, &calib).unwrap();
+    let tp1 = simulate_tp(&dev, &spec, KernelKind::Quick, &reqs, &policy, 1, &calib).unwrap();
     assert_eq!(base.wall_s, tp1.wall_s, "tp=1 must be a bit-exact baseline");
     assert_eq!(base.steps, tp1.steps);
     assert_eq!(base.gen_tokens, tp1.gen_tokens);
