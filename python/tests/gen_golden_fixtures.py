@@ -50,6 +50,34 @@ KV_CASES = [
     dict(seq=9, d=64, group=64, kbits=8, vbits=4, m=3, seed=103),
 ]
 
+# LUT-decode cases (``rust/src/quant/codebook.rs`` + the LUT decoders in
+# ``rust/src/quant/decode.rs``): groupwise quantization onto a 16-entry
+# codebook and the shared decode affine ``(table[q] - z) * s``. The
+# decimal strings below are the shortest reprs of the exact f32 constants
+# the Rust tables carry — both languages parse them to identical bits.
+LUT_TABLES = {
+    "int4": np.arange(16, dtype=np.float32),
+    "nf4": np.array(
+        [
+            -1.0, -0.6961928, -0.52507305, -0.3949175, -0.28444138, -0.18477343,
+            -0.091050036, 0.0, 0.0795803, 0.1609302, 0.2461123, 0.33791524,
+            0.44070983, 0.562617, 0.72295684, 1.0,
+        ],
+        dtype=np.float32,
+    ),
+    "mxfp4": np.array(
+        [0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0,
+         -0.0, -0.5, -1.0, -1.5, -2.0, -3.0, -4.0, -6.0],
+        dtype=np.float32,
+    ),
+}
+
+LUT_CASES = [
+    dict(codebook="int4", k=32, n=32, group_size=16, seed=201),
+    dict(codebook="nf4", k=64, n=32, group_size=32, seed=202),
+    dict(codebook="mxfp4", k=32, n=64, group_size=16, seed=203),
+]
+
 
 def words_hex(a: np.ndarray) -> str:
     return " ".join(f"{w:08x}" for w in np.asarray(a, dtype=np.uint32).reshape(-1))
@@ -103,6 +131,45 @@ def dequantize_kv_np(words, scales, zeros, seq, d, group, bits):
     return (q - zeros[:, gi]) * scales[:, gi]
 
 
+def quantize_groupwise_np(w: np.ndarray, gs: int):
+    """Bit-exact numpy mirror of Rust ``quant::quantize_groupwise``
+    (asymmetric min/max affine on the uniform INT4 grid). All arithmetic
+    stays in float32; ``np.rint`` rounds half-to-even like Rust's
+    ``round_ties_even``."""
+    k, n = w.shape
+    qmax = np.float32(15.0)
+    g = w.reshape(k // gs, gs, n)
+    lo = g.min(axis=1)
+    hi = g.max(axis=1)
+    s = ((hi - lo) / qmax).astype(np.float32)
+    s = np.where(s <= np.float32(0.0), np.float32(1.0), s).astype(np.float32)
+    z = np.clip(np.rint(-lo / s), np.float32(0.0), qmax).astype(np.float32)
+    q = np.clip(np.rint(g / s[:, None, :]) + z[:, None, :], np.float32(0.0), qmax)
+    return q.reshape(k, n).astype(np.int32), s, z
+
+
+def quantize_codebook_np(w: np.ndarray, gs: int, table: np.ndarray):
+    """Bit-exact numpy mirror of Rust
+    ``quant::quantize_groupwise_codebook`` on a non-uniform grid:
+    absmax-scaled nearest-entry rounding with zero zero-points; the first
+    minimizing entry wins ties (``np.argmin`` == Rust's strict ``<``)."""
+    k, n = w.shape
+    absmax = np.abs(w).reshape(k // gs, gs, n).max(axis=1)
+    s = (absmax / np.float32(np.abs(table).max())).astype(np.float32)
+    s = np.where(s <= np.float32(0.0), np.float32(1.0), s).astype(np.float32)
+    t = (w / np.repeat(s, gs, axis=0)).astype(np.float32)
+    codes = np.argmin(np.abs(t[:, :, None] - table[None, None, :]), axis=2)
+    return codes.astype(np.int32), s, np.zeros_like(s)
+
+
+def lut_dequantize_np(codes, s, z, gs, table):
+    """Numpy mirror of the Rust LUT decode affine ``(table[q] - z) * s``
+    (``quant::dequantize_into`` / the LUT decoders)."""
+    se = np.repeat(s, gs, axis=0)
+    ze = np.repeat(z, gs, axis=0)
+    return ((table[codes] - ze) * se).astype(np.float32)
+
+
 def naive_attention_np(q, k, v, scale):
     """f64 reference: ``softmax(q k^T * scale) v``, cast to f32 at the end
     (mirrors Rust ``kernel::naive_attention`` up to f64 summation order)."""
@@ -148,6 +215,43 @@ def main(out_dir: str) -> None:
             f.write(f"quick {words_hex(quick)}\n")
             f.write(f"qzeros {words_hex(qzeros)}\n")
             f.write(f"perm {' '.join(str(int(p)) for p in perm)}\n")
+        print(f"wrote {path}")
+
+    for c in LUT_CASES:
+        cb, k, n, gs, seed = c["codebook"], c["k"], c["n"], c["group_size"], c["seed"]
+        table = LUT_TABLES[cb]
+        rng = np.random.default_rng(seed)
+        w = rng.uniform(-1.0, 1.0, size=(k, n)).astype(np.float32)
+        # Pin the degenerate path: an all-equal (uniform) / all-zero
+        # (non-uniform) first group quantizes with s = 1.
+        w[:gs, 0] = np.float32(0.5) if cb == "int4" else np.float32(0.0)
+
+        if cb == "int4":
+            codes, s, z = quantize_groupwise_np(w, gs)
+        else:
+            codes, s, z = quantize_codebook_np(w, gs, table)
+        dq = lut_dequantize_np(codes, s, z, gs, table)
+        quick, _ = pack.pack_quick(codes)
+
+        assert codes.min() >= 0 and codes.max() <= 15
+        np.testing.assert_array_equal(pack.unpack_quick(quick, k, n), codes)
+
+        path = out / f"lut_{cb}_k{k}_n{n}.txt"
+        with open(path, "w") as f:
+            f.write("# golden LUT-decode vectors — generated by "
+                    "python/tests/gen_golden_fixtures.py\n")
+            f.write("# f32 buffers are IEEE-754 bit patterns; do not edit by hand\n")
+            f.write(f"codebook {cb}\n")
+            f.write(f"k {k}\n")
+            f.write(f"n {n}\n")
+            f.write(f"group_size {gs}\n")
+            f.write(f"seed {seed}\n")
+            f.write(f"w {f32_words_hex(w)}\n")
+            f.write(f"codes {nibbles_hex(codes)}\n")
+            f.write(f"quick {words_hex(quick)}\n")
+            f.write(f"scales {f32_words_hex(s)}\n")
+            f.write(f"zeros {f32_words_hex(z)}\n")
+            f.write(f"dequant {f32_words_hex(dq)}\n")
         print(f"wrote {path}")
 
     for c in KV_CASES:

@@ -144,6 +144,31 @@ fn bench_obs(b: &Bench) {
     trace::disable();
 }
 
+fn bench_decoder_dispatch(b: &Bench) {
+    use quick_infer::obs::trace;
+    use quick_infer::quant::{
+        select_awq_decoder, select_awq_lut_decoder, select_quick_decoder, select_quick_lut_decoder,
+    };
+    println!("-- decoder selection (memoized CPU-feature probe) --");
+    // Warm every OnceLock first, so each timed call below is the
+    // steady-state dispatch (one atomic load), never the first-call
+    // CPUID probe.
+    let _ = (select_quick_decoder(true), select_awq_decoder(true));
+    let _ = (select_quick_lut_decoder(true), select_awq_lut_decoder(true));
+    b.run("select_quick_decoder (memoized)", || select_quick_decoder(true) as usize);
+    b.run("select_awq_decoder (memoized)", || select_awq_decoder(true) as usize);
+    b.run("select_quick_lut_decoder (memoized)", || select_quick_lut_decoder(true) as usize);
+    b.run("select_awq_lut_decoder (memoized)", || select_awq_lut_decoder(true) as usize);
+    // The same dispatch with the span tracer live: selection + one span
+    // is the whole per-GEMM decode-dispatch tax the obs layer can see.
+    trace::enable();
+    b.run("select_quick_decoder (memoized, traced)", || {
+        let _s = trace::span("decode.select", "bench");
+        select_quick_decoder(true) as usize
+    });
+    trace::disable();
+}
+
 fn bench_kv(b: &Bench) {
     println!("-- kv block manager --");
     b.run("alloc_append_free_churn (256 seqs)", || {
@@ -214,6 +239,7 @@ fn main() {
     bench_quant(&b);
     bench_kernel(&b);
     bench_obs(&b);
+    bench_decoder_dispatch(&b);
     bench_kv(&b);
     bench_batcher(&b);
     bench_bank(&b);

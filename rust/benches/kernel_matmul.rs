@@ -35,4 +35,21 @@ fn main() {
         decode.fused_rel_err,
         decode.writeback_rel_err
     );
+    // LUT decoder sweep on the same layer: shift-mask vs byte-shuffle
+    // LUT on identical INT4 bits, plus the NF4/MXFP4 codebooks only the
+    // LUT tier can expand.
+    let lut = figures::lut_sweep_with(
+        &mut std::io::stdout(),
+        1024,
+        1024,
+        128,
+        &figures::DECODE_SWEEP_BATCHES,
+        &quick_infer::util::Bench::fast(),
+    )
+    .expect("lut_sweep");
+    assert!(
+        lut.within_tolerance(),
+        "lut-sweep divergence vs naive reference: {:.2e}",
+        lut.lut_rel_err
+    );
 }

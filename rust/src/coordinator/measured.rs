@@ -44,7 +44,7 @@ use std::time::Instant;
 use crate::gpusim::{tp_step_comm_s, Calib, DeviceSpec};
 use crate::kernel::{Blocking, StepBackend, StepExecutor};
 use crate::model::LlmSpec;
-use crate::quant::KvPrecision;
+use crate::quant::{CodebookKind, KvPrecision};
 use crate::workload::{BurstyWorkload, Request, SharedPrefixWorkload};
 
 /// Representative decode context length (KV rows per lane) the measured
@@ -123,6 +123,37 @@ impl MeasuredEngine {
         kv_precision: KvPrecision,
         calib: &Calib,
     ) -> Result<MeasuredEngine> {
+        Self::new_codebook(
+            dev,
+            spec,
+            backend,
+            tp,
+            group_size,
+            m_max,
+            seed,
+            kv_precision,
+            calib,
+            CodebookKind::Int4Uniform,
+        )
+    }
+
+    /// [`MeasuredEngine::new`] with the weight codebook chosen per run:
+    /// non-uniform grids (NF4/MXFP4) force every rank's executor onto
+    /// the LUT decode tier, so a measured serving run prices exactly the
+    /// decoder a non-uniform checkpoint would pay.
+    #[allow(clippy::too_many_arguments)]
+    pub fn new_codebook(
+        dev: &DeviceSpec,
+        spec: &LlmSpec,
+        backend: StepBackend,
+        tp: u64,
+        group_size: usize,
+        m_max: usize,
+        seed: u64,
+        kv_precision: KvPrecision,
+        calib: &Calib,
+        codebook: CodebookKind,
+    ) -> Result<MeasuredEngine> {
         anyhow::ensure!(tp >= 1, "tp must be >= 1, got {tp}");
         anyhow::ensure!(
             spec.n_heads % tp == 0 && spec.kv_heads % tp == 0,
@@ -134,9 +165,17 @@ impl MeasuredEngine {
         let mut ranks = Vec::with_capacity(tp as usize);
         for rank in 0..tp {
             let mut e = if tp == 1 {
-                StepExecutor::new(spec, backend, Blocking::default(), group_size, m_max, seed)?
+                StepExecutor::new_codebook(
+                    spec,
+                    backend,
+                    Blocking::default(),
+                    group_size,
+                    m_max,
+                    seed,
+                    codebook,
+                )?
             } else {
-                StepExecutor::new_tp(
+                StepExecutor::new_tp_codebook(
                     spec,
                     tp,
                     backend,
@@ -144,6 +183,7 @@ impl MeasuredEngine {
                     group_size,
                     m_max,
                     seed + rank,
+                    codebook,
                 )?
             };
             e.enable_drift(dev, calib);
@@ -294,6 +334,31 @@ mod tests {
         assert_eq!(eng.stats.comm_s, 0.0, "tp=1 has no collectives");
         assert!((eng.stats.modeled_s - 1e-3).abs() < 1e-15);
         assert!(eng.stats.modeled_over_measured().is_some());
+    }
+
+    #[test]
+    fn nonuniform_codebook_forces_lut_on_every_rank() {
+        use crate::quant::DecoderKind;
+        let dev = Gpu::RtxA6000.spec();
+        let spec = Model::Tiny.spec();
+        let mut eng = MeasuredEngine::new_codebook(
+            &dev,
+            &spec,
+            StepBackend::Fused,
+            2,
+            128,
+            8,
+            7,
+            KvPrecision::F16,
+            &Calib::default(),
+            CodebookKind::Nf4,
+        )
+        .unwrap();
+        for r in &eng.ranks {
+            assert_eq!(r.codebook(), CodebookKind::Nf4);
+            assert_eq!(r.decoder_kind(), DecoderKind::Lut, "non-uniform grid must decode via LUT");
+        }
+        assert!(eng.execute(4, 0.0) > 0.0, "LUT-decoded step executes");
     }
 
     #[test]

@@ -856,7 +856,7 @@ use super::batcher::{ChunkPolicy, ContinuousScheduler};
 use super::measured::{MeasuredEngine, MeasuredStats};
 use crate::gpusim::tp_step_latency;
 use crate::kernel::StepBackend;
-use crate::quant::KvPrecision;
+use crate::quant::{CodebookKind, KvPrecision};
 
 /// Policy for [`simulate_continuous`] / [`simulate_static_wave`].
 #[derive(Debug, Clone, Copy)]
@@ -883,6 +883,11 @@ pub struct ContinuousPolicy {
     /// (~3.4x more at 4-bit). `F16` reproduces the historical block math
     /// bit-for-bit.
     pub kv_precision: KvPrecision,
+    /// Weight codebook the *measured* twins quantize against. Non-uniform
+    /// grids (NF4/MXFP4) force the LUT decode tier in every rank's
+    /// executor; the modeled simulators ignore this field (their dequant
+    /// pricing comes from [`Calib::dequant_scale`]).
+    pub codebook: CodebookKind,
 }
 
 impl Default for ContinuousPolicy {
@@ -896,6 +901,7 @@ impl Default for ContinuousPolicy {
             enable_prefix_cache: true,
             wave_prefill_tokens: 4096,
             kv_precision: KvPrecision::F16,
+            codebook: CodebookKind::Int4Uniform,
         }
     }
 }
@@ -1571,7 +1577,7 @@ pub fn simulate_tp_measured(
         token_budget: tp_scaled_token_budget(dev, spec, kind, policy, tp, calib),
         ..*policy
     };
-    let mut eng = MeasuredEngine::new(
+    let mut eng = MeasuredEngine::new_codebook(
         dev,
         spec,
         backend,
@@ -1581,6 +1587,7 @@ pub fn simulate_tp_measured(
         seed,
         scaled.kv_precision,
         calib,
+        scaled.codebook,
     )?;
     let result = run_continuous(dev, spec, kind, requests, &scaled, calib, tp, Some(&mut eng))
         .context("measured continuous run")?;
@@ -1600,7 +1607,7 @@ pub fn simulate_static_wave_measured(
     group_size: usize,
     seed: u64,
 ) -> Result<MeasuredRun> {
-    let mut eng = MeasuredEngine::new(
+    let mut eng = MeasuredEngine::new_codebook(
         dev,
         spec,
         backend,
@@ -1610,6 +1617,7 @@ pub fn simulate_static_wave_measured(
         seed,
         policy.kv_precision,
         calib,
+        policy.codebook,
     )?;
     let kind = backend.kernel_kind();
     let result = run_static_wave(dev, spec, kind, requests, policy, calib, Some(&mut eng))

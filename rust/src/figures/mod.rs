@@ -32,7 +32,10 @@ use crate::kernel::{
 };
 use crate::model::Model;
 use crate::obs::DriftAccountant;
-use crate::quant::{dequantize_kv, quantize_groupwise, quantize_kv, KvPrecision, KV_GROUP};
+use crate::quant::{
+    dequantize_kv, quantize_groupwise, quantize_groupwise_codebook, quantize_kv, CodebookKind,
+    DecoderKind, KvPrecision, KV_GROUP,
+};
 use crate::util::{Bench, Rng};
 use crate::workload::{BurstyWorkload, Request, ShareGptLike, SharedPrefixWorkload};
 
@@ -841,6 +844,191 @@ pub fn decode_sweep_with(
     })
 }
 
+/// One decode-batch point of the LUT-vs-shift-mask decoder sweep: the
+/// fused path on the uniform INT4 grid under both decode tiers, plus the
+/// non-uniform codebooks (NF4 / MXFP4), which only the LUT tier can
+/// decode.
+#[derive(Debug, Clone, Copy)]
+pub struct LutSweepRow {
+    /// GEMM M (decode batch).
+    pub m: usize,
+    /// Uniform INT4, arithmetic shift-mask decoder (the incumbent).
+    pub shift_mask_gflops: f64,
+    /// Uniform INT4 through the byte-shuffle LUT decoder — same bits in,
+    /// same floats out, different expansion engine.
+    pub lut_int4_gflops: f64,
+    /// NF4 codebook through the LUT decoder.
+    pub lut_nf4_gflops: f64,
+    /// MXFP4 codebook through the LUT decoder.
+    pub lut_mxfp4_gflops: f64,
+}
+
+impl LutSweepRow {
+    /// LUT-INT4 over shift-mask on identical weights — the tentpole's
+    /// "LUT does not regress the uniform path" ratio (bar 1.0x).
+    pub fn lut_over_shift(&self) -> f64 {
+        self.lut_int4_gflops / self.shift_mask_gflops.max(1e-12)
+    }
+
+    /// Worst non-uniform codebook over LUT-INT4 at this batch: the table
+    /// contents must not change the decode cost (bar 0.95x).
+    pub fn nonuniform_over_int4(&self) -> f64 {
+        self.lut_nf4_gflops.min(self.lut_mxfp4_gflops) / self.lut_int4_gflops.max(1e-12)
+    }
+}
+
+/// Result set of [`lut_sweep`].
+#[derive(Debug, Clone)]
+pub struct LutSweepReport {
+    /// Weight in-features (reduction axis).
+    pub k: usize,
+    /// Weight out-features.
+    pub n: usize,
+    /// Quantization group length along K.
+    pub group_size: usize,
+    /// SIMD tier the sweep ran at (`avx2`/`neon`/`scalar`).
+    pub simd_level: &'static str,
+    /// One row per swept batch, ascending.
+    pub rows: Vec<LutSweepRow>,
+    /// Max relative error of the fused LUT path vs naive-on-dequantized,
+    /// taken over all three codebooks at the largest swept batch.
+    pub lut_rel_err: f64,
+}
+
+impl LutSweepReport {
+    /// The differential gate: every LUT decode path within 1e-4 of the
+    /// naive reference on its own codebook.
+    pub fn within_tolerance(&self) -> bool {
+        self.lut_rel_err <= 1e-4
+    }
+
+    /// The row for batch `m` (panics if the batch was not swept).
+    pub fn row(&self, m: usize) -> &LutSweepRow {
+        self.rows.iter().find(|r| r.m == m).unwrap_or_else(|| panic!("batch {m} not swept"))
+    }
+
+    /// LUT-INT4 over shift-mask at the largest swept batch — the
+    /// acceptance ratio `bench check` gates on.
+    pub fn lut_speedup(&self) -> f64 {
+        self.rows.last().map(LutSweepRow::lut_over_shift).unwrap_or(0.0)
+    }
+
+    /// Min over the sweep of the worst non-uniform/INT4-LUT ratio: NF4
+    /// and MXFP4 must track uniform-INT4 LUT throughput.
+    pub fn min_nonuniform_over_int4(&self) -> f64 {
+        self.rows.iter().map(LutSweepRow::nonuniform_over_int4).fold(f64::INFINITY, f64::min)
+    }
+}
+
+/// LUT-vs-shift-mask decoder sweep (`bench kernels --lut`): the fused
+/// path at M ∈ {1, 2, 4, 8} on one uniform-INT4 layer under both decode
+/// tiers, and on NF4/MXFP4 re-quantizations of the same weights under
+/// the LUT tier, with a differential gate per codebook. Default
+/// 4096x4096 g128 layer.
+pub fn lut_sweep(out: &mut impl Write) -> Result<LutSweepReport> {
+    lut_sweep_with(out, 4096, 4096, 128, &DECODE_SWEEP_BATCHES, &Bench::fast())
+}
+
+/// [`lut_sweep`] with explicit layer shape, batch list, and bench
+/// configuration (CLI and CI smoke pass smaller ones).
+pub fn lut_sweep_with(
+    out: &mut impl Write,
+    k: usize,
+    n: usize,
+    group_size: usize,
+    batches: &[usize],
+    bench: &Bench,
+) -> Result<LutSweepReport> {
+    anyhow::ensure!(!batches.is_empty(), "batch list must be non-empty");
+    writeln!(
+        out,
+        "\n== LUT decoder sweep: {k}x{n} g{group_size}, simd tier '{}' (this CPU) ==",
+        simd_level()
+    )?;
+    let mut rng = Rng::seed_from_u64(0x10D4);
+    let w: Vec<f32> = (0..k * n).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect();
+    // One tensor per codebook. INT4 shift-mask and INT4 LUT share bits —
+    // only the Blocking's decoder differs — so any throughput delta is
+    // the expansion engine, not the data.
+    let tensors = [
+        quantize_groupwise_codebook(&w, k, n, group_size, CodebookKind::Int4Uniform),
+        quantize_groupwise_codebook(&w, k, n, group_size, CodebookKind::Nf4),
+        quantize_groupwise_codebook(&w, k, n, group_size, CodebookKind::Mxfp4),
+    ];
+    drop(w);
+    let weights: Vec<QuickWeights> = tensors.iter().map(QuickWeights::from_quantized).collect();
+
+    let shift_b = Blocking::default();
+    let lut_b = Blocking { decoder: DecoderKind::Lut, ..Blocking::default() };
+
+    // Differential gate: each codebook's fused LUT path vs the naive
+    // reference on that codebook's own dequantized weights, at the
+    // largest swept batch.
+    let gate_m = batches.iter().copied().max().unwrap_or(1);
+    let x_gate: Vec<f32> = (0..gate_m * k).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect();
+    let mut lut_rel_err = 0.0f64;
+    for (t, qw) in tensors.iter().zip(&weights) {
+        let naive = NaiveBackend::from_quantized(t);
+        let mut y_ref = vec![0f32; gate_m * n];
+        let mut y_opt = vec![0f32; gate_m * n];
+        naive.gemm(&x_gate, gate_m, &mut y_ref);
+        gemm_quick_fused(&x_gate, gate_m, qw, &lut_b, &mut y_opt)?;
+        lut_rel_err = lut_rel_err.max(max_rel_err(&y_opt, &y_ref));
+    }
+    writeln!(
+        out,
+        "differential gate vs naive (m={gate_m}, all codebooks): lut {lut_rel_err:.2e} (bar 1e-4)"
+    )?;
+
+    writeln!(
+        out,
+        "{:>4} {:>11} {:>11} {:>11} {:>11} {:>9} {:>9}",
+        "m", "shift-mask", "lut int4", "lut nf4", "lut mxfp4", "lut/shft", "nonuni x"
+    )?;
+    let mut rows = Vec::new();
+    for &m in batches {
+        let x: Vec<f32> = (0..m * k).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect();
+        let mut y = vec![0f32; m * n];
+        let flops = 2.0 * m as f64 * n as f64 * k as f64;
+        let mut gf = |name: &str, qw: &QuickWeights, b: &Blocking| -> Result<f64> {
+            let r = bench.run(&format!("lut sweep {name} {k}x{n} m{m}"), || {
+                gemm_quick_fused(&x, m, qw, b, &mut y).expect("fused gemm");
+                y[0]
+            });
+            Ok(flops / r.median_ns)
+        };
+        let row = LutSweepRow {
+            m,
+            shift_mask_gflops: gf("shift int4", &weights[0], &shift_b)?,
+            lut_int4_gflops: gf("lut int4", &weights[0], &lut_b)?,
+            lut_nf4_gflops: gf("lut nf4", &weights[1], &lut_b)?,
+            lut_mxfp4_gflops: gf("lut mxfp4", &weights[2], &lut_b)?,
+        };
+        writeln!(
+            out,
+            "{:>4} {:>11.2} {:>11.2} {:>11.2} {:>11.2} {:>8.2}x {:>8.2}x",
+            m,
+            row.shift_mask_gflops,
+            row.lut_int4_gflops,
+            row.lut_nf4_gflops,
+            row.lut_mxfp4_gflops,
+            row.lut_over_shift(),
+            row.nonuniform_over_int4(),
+        )?;
+        rows.push(row);
+    }
+    let report = LutSweepReport { k, n, group_size, simd_level: simd_level(), rows, lut_rel_err };
+    writeln!(
+        out,
+        "lut/shift-mask at m={}: {:.2}x (bar 1.0x); worst nonuniform/int4-lut over \
+         sweep: {:.2}x (bar 0.95x)",
+        report.rows.last().map(|r| r.m).unwrap_or(0),
+        report.lut_speedup(),
+        report.min_nonuniform_over_int4()
+    )?;
+    Ok(report)
+}
+
 /// One batch point of the measured end-to-end step sweep.
 #[derive(Debug, Clone, Copy)]
 pub struct StepThroughputRow {
@@ -893,30 +1081,56 @@ impl StepThroughputReport {
 /// write-back penalty to the measured *step* gap — the first measured
 /// end-to-end number `gpusim`/`simserve` can calibrate against.
 pub fn step_throughput(out: &mut impl Write, model: Model) -> Result<StepThroughputReport> {
-    step_throughput_with(out, model, 128, &DECODE_SWEEP_BATCHES, &Bench::fast())
+    step_throughput_with(
+        out,
+        model,
+        128,
+        &DECODE_SWEEP_BATCHES,
+        &Bench::fast(),
+        CodebookKind::Int4Uniform,
+    )
 }
 
-/// [`step_throughput`] with explicit group size, batch list, and bench
-/// configuration.
+/// [`step_throughput`] with explicit group size, batch list, bench
+/// configuration, and weight codebook (`simulate step --codebook nf4`
+/// runs the whole GEMM stream through the LUT decode tier).
 pub fn step_throughput_with(
     out: &mut impl Write,
     model: Model,
     group_size: usize,
     batches: &[usize],
     bench: &Bench,
+    codebook: CodebookKind,
 ) -> Result<StepThroughputReport> {
     anyhow::ensure!(!batches.is_empty(), "batch list must be non-empty");
     let spec = model.spec();
     let m_max = batches.iter().copied().max().unwrap_or(1);
     writeln!(
         out,
-        "\n== Measured decode step: {} ({} weight GEMMs/step, g{group_size}, this CPU) ==",
+        "\n== Measured decode step: {} ({} weight GEMMs/step, g{group_size}, {} weights, this CPU) ==",
         spec.name,
-        spec.gemms().iter().map(|g| g.count).sum::<u64>()
+        spec.gemms().iter().map(|g| g.count).sum::<u64>(),
+        codebook.label()
     )?;
     let b = Blocking::default();
-    let mut fused = StepExecutor::new(&spec, StepBackend::Fused, b, group_size, m_max, 0x57E9)?;
-    let mut wb = StepExecutor::new(&spec, StepBackend::Writeback, b, group_size, m_max, 0x57E9)?;
+    let mut fused = StepExecutor::new_codebook(
+        &spec,
+        StepBackend::Fused,
+        b,
+        group_size,
+        m_max,
+        0x57E9,
+        codebook,
+    )?;
+    let mut wb = StepExecutor::new_codebook(
+        &spec,
+        StepBackend::Writeback,
+        b,
+        group_size,
+        m_max,
+        0x57E9,
+        codebook,
+    )?;
     // Drift accountant: every measured GEMM also records its
     // gpusim-modeled latency, so `report obs` can surface the running
     // modeled/measured ratio per shape.
@@ -1551,15 +1765,23 @@ fn measured_row(out: &mut impl Write, label: &str, r: &MeasuredRun) -> std::io::
 /// throughput is wall-clock tokens/sec of the fused/write-back kernels,
 /// the modeled twin runs side by side, and every step feeds the global
 /// drift ledger (printed at the end).
-pub fn measured_serving(out: &mut impl Write, n_requests: usize) -> Result<MeasuredServingReport> {
+pub fn measured_serving(
+    out: &mut impl Write,
+    n_requests: usize,
+    codebook: CodebookKind,
+) -> Result<MeasuredServingReport> {
     let calib = Calib::default();
     let dev = Gpu::RtxA6000.spec();
     let spec = Model::Tiny.spec();
-    let policy = ContinuousPolicy::measured_default();
+    let policy = ContinuousPolicy { codebook, ..ContinuousPolicy::measured_default() };
     writeln!(
         out,
-        "\n== Measured serving: {} on this CPU's native runtime ({} requests; {} prices KV/comm) ==",
-        spec.name, n_requests, dev.name
+        "\n== Measured serving: {} on this CPU's native runtime ({} requests, {} weights; \
+         {} prices KV/comm) ==",
+        spec.name,
+        n_requests,
+        codebook.label(),
+        dev.name
     )?;
     writeln!(
         out,
@@ -2184,12 +2406,32 @@ mod tests {
     }
 
     #[test]
+    fn lut_sweep_smoke_is_consistent() {
+        // Tiny shape + smoke bench: both decode tiers on INT4 plus the
+        // two non-uniform codebooks, with the per-codebook differential
+        // gate. Ratios are positive but not gated here — throughput
+        // claims belong to `bench kernels` on a quiet machine.
+        let b = Bench::smoke().silent();
+        let r = lut_sweep_with(&mut std::io::sink(), 64, 48, 32, &[1, 2], &b).unwrap();
+        assert_eq!(r.rows.len(), 2);
+        assert!(r.within_tolerance(), "lut {:.2e} off the naive reference", r.lut_rel_err);
+        for row in &r.rows {
+            assert!(row.shift_mask_gflops > 0.0 && row.lut_int4_gflops > 0.0);
+            assert!(row.lut_nf4_gflops > 0.0 && row.lut_mxfp4_gflops > 0.0);
+            assert!(row.lut_over_shift() > 0.0 && row.nonuniform_over_int4() > 0.0);
+        }
+        assert!(r.lut_speedup() > 0.0 && r.min_nonuniform_over_int4() > 0.0);
+        assert_eq!(r.row(2).m, 2);
+        assert!(lut_sweep_with(&mut std::io::sink(), 64, 48, 32, &[], &b).is_err());
+    }
+
+    #[test]
     fn measured_serving_smoke_runs_real_steps() {
         // Tiny request count: the point is that every run actually drove
         // the native runtime (executed tokens, non-empty drift ledger)
         // and the prefix cache kept real compute off the GEMM stream —
         // the timing claims live in tests/measured_serving.rs.
-        let r = measured_serving(&mut std::io::sink(), 3).unwrap();
+        let r = measured_serving(&mut std::io::sink(), 3, CodebookKind::Int4Uniform).unwrap();
         for (label, run) in [
             ("wave fused", &r.wave_fused),
             ("cont fused", &r.cont_fused),
@@ -2229,7 +2471,15 @@ mod tests {
     #[test]
     fn step_throughput_smoke_on_tiny() {
         let b = Bench::smoke().silent();
-        let r = step_throughput_with(&mut std::io::sink(), Model::Tiny, 128, &[1, 2], &b).unwrap();
+        let r = step_throughput_with(
+            &mut std::io::sink(),
+            Model::Tiny,
+            128,
+            &[1, 2],
+            &b,
+            CodebookKind::Int4Uniform,
+        )
+        .unwrap();
         assert_eq!(r.rows.len(), 2);
         for row in &r.rows {
             assert!(row.fused_tok_s > 0.0 && row.writeback_tok_s > 0.0, "m={}", row.m);

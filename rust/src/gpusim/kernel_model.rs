@@ -27,6 +27,7 @@ use super::bank::BankCounter;
 use super::gpu::DeviceSpec;
 use super::occupancy::{latency_hiding, occupancy, BlockResources};
 use super::trace;
+use crate::quant::DecoderKind;
 
 /// Which kernel is being modeled.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -98,6 +99,17 @@ pub struct Calib {
     /// attention wall time *measured* by the fused dequant-attention
     /// kernel (`kernel::attn_quant_fused` via `StepExecutor`).
     pub kv_attn_scale: f64,
+    /// Multiplier on the dequant term when the kernel runs the
+    /// shift-mask nibble decoder ([`DecoderKind::ShiftMask`]). `1.0` =
+    /// the stock ~4-ops-per-element estimate ([`Calib::dequant_ops`]).
+    pub dequant_scale_shift: f64,
+    /// Multiplier on the dequant term when the kernel runs the 16-entry
+    /// codebook LUT decoder ([`DecoderKind::Lut`]) — byte shuffle +
+    /// affine rather than AND/SHR/sub/FMA. `1.0` = priced identically
+    /// to shift-mask; [`calibrate_dequant`] fits it so the modeled
+    /// LUT/shift-mask latency ratio matches the ratio *measured* by the
+    /// native decoders (`bench kernels --lut`).
+    pub dequant_scale_lut: f64,
 }
 
 impl Default for Calib {
@@ -110,6 +122,19 @@ impl Default for Calib {
             swizzle_span: 8,
             writeback_scale: 1.0,
             kv_attn_scale: 1.0,
+            dequant_scale_shift: 1.0,
+            dequant_scale_lut: 1.0,
+        }
+    }
+}
+
+impl Calib {
+    /// The dequant-term multiplier for `decoder` — the key the drift
+    /// accountant and [`calibrate_dequant`] price decoders by.
+    pub fn dequant_scale(&self, decoder: DecoderKind) -> f64 {
+        match decoder {
+            DecoderKind::ShiftMask => self.dequant_scale_shift,
+            DecoderKind::Lut => self.dequant_scale_lut,
         }
     }
 }
@@ -188,7 +213,8 @@ fn writeback_conflicts(t: &TileConfig, blocks: u64, k_iters: u64) -> (u64, f64) 
     (total.conflicts, per_tile.multiplier())
 }
 
-/// Model one GEMM: `y(M,N) = x(M,K) @ w(K,N)` on `dev` with kernel `kind`.
+/// Model one GEMM: `y(M,N) = x(M,K) @ w(K,N)` on `dev` with kernel `kind`
+/// (shift-mask decoder — see [`model_gemm_decoder`] for the LUT tier).
 pub fn model_gemm(
     dev: &DeviceSpec,
     kind: KernelKind,
@@ -197,10 +223,27 @@ pub fn model_gemm(
     k: u64,
     calib: &Calib,
 ) -> KernelPerf {
+    model_gemm_decoder(dev, kind, DecoderKind::ShiftMask, m, n, k, calib)
+}
+
+/// Like [`model_gemm`], but price the dequant term for a specific nibble
+/// decoder: the per-element cost is `dequant_ops * dequant_scale(decoder)`
+/// ops, so shift-mask and LUT kernels model separately once
+/// [`calibrate_dequant`] has fit the LUT scale. With the default `Calib`
+/// both decoders price identically.
+pub fn model_gemm_decoder(
+    dev: &DeviceSpec,
+    kind: KernelKind,
+    decoder: DecoderKind,
+    m: u64,
+    n: u64,
+    k: u64,
+    calib: &Calib,
+) -> KernelPerf {
     assert!(m > 0 && n > 0 && k > 0);
     let mut best: Option<KernelPerf> = None;
     for t in tile_candidates(kind) {
-        let perf = model_with_tile(dev, kind, m, n, k, &t, calib);
+        let perf = model_with_tile(dev, kind, decoder, m, n, k, &t, calib);
         if best.as_ref().map_or(true, |b| perf.latency_s < b.latency_s) {
             best = Some(perf);
         }
@@ -211,6 +254,7 @@ pub fn model_gemm(
 fn model_with_tile(
     dev: &DeviceSpec,
     kind: KernelKind,
+    decoder: DecoderKind,
     m: u64,
     n: u64,
     k: u64,
@@ -261,8 +305,8 @@ fn model_with_tile(
         // Every M-block pass dequantizes the full K x N weight strip.
         _ => (k * n) as f64 * tm as f64,
     };
-    let dequant_time =
-        calib.dequant_ops * dequant_elems / (dev.fp16_alu_tflops * 1e12 * hiding);
+    let dequant_time = calib.dequant_ops * calib.dequant_scale(decoder) * dequant_elems
+        / (dev.fp16_alu_tflops * 1e12 * hiding);
 
     // --- shared-memory write-back (baseline only), conflict-serialized ---
     let (conflicts, mult, wb_bytes, wb_time) = match kind {
@@ -395,16 +439,23 @@ pub fn calibrate_step_writeback(
 /// reaches `target`, clamped to `[0, 1024]` with nearest-achievable
 /// fallback at either end.
 fn fit_writeback_scale(target: f64, base: &Calib, ratio: impl Fn(f64) -> f64) -> Calib {
+    Calib { writeback_scale: fit_scale(target, &ratio), ..*base }
+}
+
+/// Generic monotone-bisection core shared by the calibration hooks: the
+/// scale in `[0, 1024]` at which `ratio(scale)` (monotone non-decreasing)
+/// reaches `target`, with nearest-achievable fallback at either end.
+fn fit_scale(target: f64, ratio: &impl Fn(f64) -> f64) -> f64 {
     let (mut lo, mut hi) = (0.0f64, 1.0f64);
     while ratio(hi) < target && hi < 1024.0 {
         hi *= 2.0;
     }
     if ratio(lo) >= target {
-        // Measured gap at or below the write-back-free floor.
-        return Calib { writeback_scale: lo, ..*base };
+        // Measured gap at or below the scale-free floor.
+        return lo;
     }
     if ratio(hi) < target {
-        return Calib { writeback_scale: hi, ..*base };
+        return hi;
     }
     for _ in 0..64 {
         let mid = 0.5 * (lo + hi);
@@ -414,7 +465,52 @@ fn fit_writeback_scale(target: f64, base: &Calib, ratio: impl Fn(f64) -> f64) ->
             hi = mid;
         }
     }
-    Calib { writeback_scale: 0.5 * (lo + hi), ..*base }
+    0.5 * (lo + hi)
+}
+
+/// Calibrate the LUT decoder's modeled dequant cost from *measured*
+/// native decode-tier costs (the engine hook behind `bench kernels
+/// --lut`): returns a `Calib` whose [`Calib::dequant_scale_lut`] makes
+/// the modeled LUT/shift-mask latency ratio of kernel `kind` at
+/// `(m, n, k)` on `dev` match the measured ratio from running the same
+/// GEMM through [`crate::kernel`] with each [`DecoderKind`]. The
+/// shift-mask scale is left at `base`'s (the shift-mask tier is the
+/// reference the stock `dequant_ops` estimate was built for), so after
+/// calibration the cost model prices the two decoders separately.
+///
+/// Same bisection and clamping semantics as [`calibrate_writeback`]:
+/// the fitted scale lives in `[0, 1024]`; targets outside the model's
+/// reachable ratio band (e.g. a DRAM-bound shape where dequant time is
+/// fully hidden) return the nearest achievable scale. A LUT tier
+/// measured *faster* than shift-mask fits a scale below
+/// `dequant_scale_shift`; slower fits one above.
+///
+/// # Panics
+///
+/// Panics unless both measured latencies are positive and `kind` is a
+/// quantized kernel (fp16 has no dequant term to scale).
+pub fn calibrate_dequant(
+    dev: &DeviceSpec,
+    kind: KernelKind,
+    m: u64,
+    n: u64,
+    k: u64,
+    measured_shift_s: f64,
+    measured_lut_s: f64,
+    base: &Calib,
+) -> Calib {
+    assert!(
+        measured_shift_s > 0.0 && measured_lut_s > 0.0,
+        "measured decoder latencies must be positive"
+    );
+    assert!(kind != KernelKind::Fp16, "fp16 has no dequant term to calibrate");
+    let target = measured_lut_s / measured_shift_s;
+    let shift_s = model_gemm_decoder(dev, kind, DecoderKind::ShiftMask, m, n, k, base).latency_s;
+    let scale = fit_scale(target, &|s| {
+        let c = Calib { dequant_scale_lut: s, ..*base };
+        model_gemm_decoder(dev, kind, DecoderKind::Lut, m, n, k, &c).latency_s / shift_s
+    });
+    Calib { dequant_scale_lut: scale, ..*base }
 }
 
 #[cfg(test)]
@@ -572,6 +668,53 @@ mod tests {
         assert!(floor.writeback_scale < 0.05);
         // Non-writeback fields pass through untouched.
         assert_eq!(calib.dram_eff, base.dram_eff);
+    }
+
+    #[test]
+    fn default_calib_prices_decoders_identically() {
+        let dev = Gpu::A100.spec();
+        let calib = Calib::default();
+        for kind in [KernelKind::Awq, KernelKind::Quick] {
+            let shift = model_gemm(&dev, kind, 64, 8192, 8192, &calib);
+            let lut =
+                model_gemm_decoder(&dev, kind, DecoderKind::Lut, 64, 8192, 8192, &calib);
+            assert_eq!(shift.latency_s, lut.latency_s, "{kind:?}: default scales are 1.0");
+        }
+    }
+
+    #[test]
+    fn lut_scale_moves_only_the_lut_tier() {
+        let dev = Gpu::A100.spec();
+        let scaled = Calib { dequant_scale_lut: 32.0, ..Calib::default() };
+        let shift = model_gemm(&dev, KernelKind::Quick, 256, 8192, 8192, &scaled);
+        let base = model_gemm(&dev, KernelKind::Quick, 256, 8192, 8192, &Calib::default());
+        assert_eq!(shift.latency_s, base.latency_s, "shift-mask tier must be unaffected");
+        let lut =
+            model_gemm_decoder(&dev, KernelKind::Quick, DecoderKind::Lut, 256, 8192, 8192, &scaled);
+        assert!(lut.latency_s > shift.latency_s, "scaled LUT dequant must cost more");
+    }
+
+    #[test]
+    fn calibrate_dequant_matches_measured_ratio() {
+        let dev = Gpu::A100.spec();
+        let base = Calib::default();
+        // LUT tier measured 30% slower than shift-mask on this shape.
+        let calib =
+            calibrate_dequant(&dev, KernelKind::Quick, 256, 8192, 8192, 1.0e-3, 1.3e-3, &base);
+        let shift = model_gemm(&dev, KernelKind::Quick, 256, 8192, 8192, &calib);
+        let lut =
+            model_gemm_decoder(&dev, KernelKind::Quick, DecoderKind::Lut, 256, 8192, 8192, &calib);
+        let ratio = lut.latency_s / shift.latency_s;
+        assert!((ratio - 1.3).abs() < 0.03, "calibrated ratio {ratio:.3} != 1.3");
+        assert!(calib.dequant_scale_lut > calib.dequant_scale_shift);
+        // A LUT tier measured well below the dequant-free floor clamps
+        // the fitted scale to (near) zero.
+        let floor =
+            calibrate_dequant(&dev, KernelKind::Quick, 256, 8192, 8192, 1.0e-3, 0.5e-3, &base);
+        assert!(floor.dequant_scale_lut < 0.05, "floor scale {}", floor.dequant_scale_lut);
+        // Non-dequant fields pass through untouched.
+        assert_eq!(calib.writeback_scale, base.writeback_scale);
+        assert_eq!(calib.mma_eff, base.mma_eff);
     }
 
     #[test]

@@ -54,6 +54,6 @@ pub use e2e::{
 };
 pub use gpu::{DeviceSpec, Gpu};
 pub use kernel_model::{
-    calibrate_step_writeback, calibrate_writeback, model_step_gemms, Calib, KernelKind,
-    KernelPerf, TileConfig,
+    calibrate_dequant, calibrate_step_writeback, calibrate_writeback, model_gemm_decoder,
+    model_step_gemms, Calib, KernelKind, KernelPerf, TileConfig,
 };

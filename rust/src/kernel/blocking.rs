@@ -14,7 +14,7 @@
 
 use anyhow::Result;
 
-use crate::quant::{MMA_K, PACK_FACTOR};
+use crate::quant::{DecoderKind, MMA_K, PACK_FACTOR};
 
 /// Cache-blocking configuration for the native kernel backends.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -44,6 +44,13 @@ pub struct Blocking {
     /// [`super::WorkerPool`] (`false` reverts to PR 4's spawn-per-call
     /// scoped threads — the bench comparison rows).
     pub pool: bool,
+    /// Which nibble-decode tier the GEMM runs: the shift-mask expansion
+    /// or the 16-entry codebook table lookup. Part of the plan-cache
+    /// key (via `Blocking`'s `Hash`), so the decoder choice is priced
+    /// and planned per shape like every other knob. Weights carrying a
+    /// non-uniform codebook force the LUT tier regardless of this
+    /// setting (the shift-mask tier cannot decode them).
+    pub decoder: DecoderKind,
 }
 
 impl Default for Blocking {
@@ -51,7 +58,15 @@ impl Default for Blocking {
         // mc 64 x kc 256 keeps the x strip (~64 KiB) L2-resident; nc 16
         // words = 128 columns gives the write-back path a 128 KiB scratch
         // tile, the same order as the smem staging the AWQ kernel pays.
-        Blocking { mc: 64, kc: 256, nc_words: 16, threads: 0, simd: true, pool: true }
+        Blocking {
+            mc: 64,
+            kc: 256,
+            nc_words: 16,
+            threads: 0,
+            simd: true,
+            pool: true,
+            decoder: DecoderKind::ShiftMask,
+        }
     }
 }
 

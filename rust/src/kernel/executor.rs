@@ -35,15 +35,19 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::gpusim::kernel_model::model_gemm;
+use crate::gpusim::kernel_model::model_gemm_decoder;
 use crate::gpusim::{kv_attn_term, Calib, DeviceSpec, KernelKind};
 use crate::model::{GemmShape, LlmSpec};
 use crate::obs::{trace, Counter, DriftAccountant, Registry};
-use crate::quant::{quantize_groupwise, quantize_kv, KvPrecision, QuantizedKv, KV_GROUP};
+use crate::quant::{
+    quantize_groupwise_codebook, quantize_kv, CodebookKind, DecoderKind, KvPrecision, QuantizedKv,
+    KV_GROUP,
+};
 use crate::util::Rng;
 
 use super::attention::{attn_dense_tiled, attn_quant_fused, AttnConfig};
 use super::blocking::Blocking;
+use super::fused::effective_decoder;
 use super::{AwqWritebackBackend, KernelBackend, NaiveBackend, QuickFusedBackend};
 
 /// Registry handles for the executor's step counters, resolved once.
@@ -68,6 +72,10 @@ fn exec_metrics() -> &'static ExecMetrics {
 struct DriftConfig {
     dev: DeviceSpec,
     kind: KernelKind,
+    /// Nibble-decode tier the executor's weights actually run, so the
+    /// modeled twin prices the same decoder
+    /// ([`crate::gpusim::Calib::dequant_scale`]).
+    decoder: DecoderKind,
     calib: Calib,
     /// Memoized modeled latency per `(m, gemm_index)` — `model_gemm`
     /// allocates while searching tile candidates, so the model is
@@ -193,6 +201,12 @@ impl StepResult {
 pub struct StepExecutor {
     name: &'static str,
     backend: StepBackend,
+    /// 16-entry grid the step's weights were quantized on.
+    codebook: CodebookKind,
+    /// Nibble-decode tier the quantized backends resolve to (the
+    /// requested [`Blocking::decoder`], forced to LUT by a non-uniform
+    /// codebook) — what drift accounting prices the modeled twin with.
+    decoder: DecoderKind,
     m_max: usize,
     gemms: Vec<StepGemm>,
     /// One activation buffer per distinct reduction dimension
@@ -226,7 +240,41 @@ impl StepExecutor {
         m_max: usize,
         seed: u64,
     ) -> Result<StepExecutor> {
-        Self::from_gemms(spec.name, &spec.gemms(), backend, blocking, group_size, m_max, seed)
+        Self::new_codebook(
+            spec,
+            backend,
+            blocking,
+            group_size,
+            m_max,
+            seed,
+            CodebookKind::Int4Uniform,
+        )
+    }
+
+    /// [`StepExecutor::new`] with the weights quantized on an arbitrary
+    /// 16-entry grid — the entry point non-uniform 4-bit models (NF4,
+    /// MXFP4) take into measured serving. Non-uniform grids force the
+    /// LUT decode tier regardless of [`Blocking::decoder`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn new_codebook(
+        spec: &LlmSpec,
+        backend: StepBackend,
+        blocking: Blocking,
+        group_size: usize,
+        m_max: usize,
+        seed: u64,
+        codebook: CodebookKind,
+    ) -> Result<StepExecutor> {
+        Self::from_gemms_codebook(
+            spec.name,
+            &spec.gemms(),
+            backend,
+            blocking,
+            group_size,
+            m_max,
+            seed,
+            codebook,
+        )
     }
 
     /// Prepare one rank's share of a `tp`-way tensor-parallel step
@@ -241,7 +289,41 @@ impl StepExecutor {
         m_max: usize,
         seed: u64,
     ) -> Result<StepExecutor> {
-        Self::from_gemms(spec.name, &spec.tp_gemms(tp), backend, blocking, group_size, m_max, seed)
+        Self::new_tp_codebook(
+            spec,
+            tp,
+            backend,
+            blocking,
+            group_size,
+            m_max,
+            seed,
+            CodebookKind::Int4Uniform,
+        )
+    }
+
+    /// [`StepExecutor::new_tp`] on an arbitrary 16-entry grid (see
+    /// [`StepExecutor::new_codebook`]).
+    #[allow(clippy::too_many_arguments)]
+    pub fn new_tp_codebook(
+        spec: &LlmSpec,
+        tp: u64,
+        backend: StepBackend,
+        blocking: Blocking,
+        group_size: usize,
+        m_max: usize,
+        seed: u64,
+        codebook: CodebookKind,
+    ) -> Result<StepExecutor> {
+        Self::from_gemms_codebook(
+            spec.name,
+            &spec.tp_gemms(tp),
+            backend,
+            blocking,
+            group_size,
+            m_max,
+            seed,
+            codebook,
+        )
     }
 
     /// Prepare an arbitrary GEMM list (the entry point the spec wrappers
@@ -254,6 +336,31 @@ impl StepExecutor {
         group_size: usize,
         m_max: usize,
         seed: u64,
+    ) -> Result<StepExecutor> {
+        Self::from_gemms_codebook(
+            name,
+            shapes,
+            backend,
+            blocking,
+            group_size,
+            m_max,
+            seed,
+            CodebookKind::Int4Uniform,
+        )
+    }
+
+    /// [`StepExecutor::from_gemms`] with the weights quantized on an
+    /// arbitrary 16-entry grid (see [`StepExecutor::new_codebook`]).
+    #[allow(clippy::too_many_arguments)]
+    pub fn from_gemms_codebook(
+        name: &'static str,
+        shapes: &[GemmShape],
+        backend: StepBackend,
+        blocking: Blocking,
+        group_size: usize,
+        m_max: usize,
+        seed: u64,
+        codebook: CodebookKind,
     ) -> Result<StepExecutor> {
         anyhow::ensure!(!shapes.is_empty(), "step needs at least one GEMM");
         anyhow::ensure!(m_max > 0, "m_max must be > 0");
@@ -268,7 +375,7 @@ impl StepExecutor {
                 g.name
             );
             let w: Vec<f32> = (0..k * n).map(|_| rng.range_f64(-0.5, 0.5) as f32).collect();
-            let t = quantize_groupwise(&w, k, n, group_size);
+            let t = quantize_groupwise_codebook(&w, k, n, group_size, codebook);
             let be: Box<dyn KernelBackend> = match backend {
                 StepBackend::Naive => Box::new(NaiveBackend::from_quantized(&t)),
                 StepBackend::Fused => Box::new(QuickFusedBackend::new(&t, blocking)),
@@ -287,6 +394,8 @@ impl StepExecutor {
         Ok(StepExecutor {
             name,
             backend,
+            codebook,
+            decoder: effective_decoder(blocking.decoder, codebook),
             m_max,
             gemms,
             xs,
@@ -307,6 +416,7 @@ impl StepExecutor {
         self.drift = Some(DriftConfig {
             dev: *dev,
             kind: self.backend.kernel_kind(),
+            decoder: self.decoder,
             calib: *calib,
             modeled_s: HashMap::new(),
         });
@@ -406,6 +516,19 @@ impl StepExecutor {
         self.backend
     }
 
+    /// The 16-entry grid the step's weights were quantized on.
+    pub fn codebook(&self) -> CodebookKind {
+        self.codebook
+    }
+
+    /// The nibble-decode tier the quantized backends resolve to (the
+    /// requested [`Blocking::decoder`], forced to LUT when
+    /// [`StepExecutor::codebook`] is non-uniform). Drift accounting
+    /// prices the modeled twin with this decoder.
+    pub fn decoder_kind(&self) -> DecoderKind {
+        self.decoder
+    }
+
     /// Largest batch [`StepExecutor::step`] accepts.
     pub fn m_max(&self) -> usize {
         self.m_max
@@ -456,9 +579,10 @@ impl StepExecutor {
             }
             if let Some(drift) = &mut self.drift {
                 let modeled_call = *drift.modeled_s.entry((m, gi)).or_insert_with(|| {
-                    model_gemm(
+                    model_gemm_decoder(
                         &drift.dev,
                         drift.kind,
+                        drift.decoder,
                         m as u64,
                         g.n as u64,
                         g.k as u64,
@@ -606,6 +730,40 @@ mod tests {
             let err = max_rel_err(fused.output(gi, 3), naive.output(gi, 3));
             assert!(err <= 1e-4, "gemm {gi} ({}): {err}", naive.gemms()[gi].name);
         }
+    }
+
+    #[test]
+    fn nonuniform_step_matches_naive_step_and_forces_lut() {
+        let spec = Model::Tiny.spec();
+        let b = Blocking::default();
+        for cb in [CodebookKind::Nf4, CodebookKind::Mxfp4] {
+            let mut naive =
+                StepExecutor::new_codebook(&spec, StepBackend::Naive, b, 128, 2, 11, cb).unwrap();
+            let mut fused =
+                StepExecutor::new_codebook(&spec, StepBackend::Fused, b, 128, 2, 11, cb).unwrap();
+            assert_eq!(fused.codebook(), cb);
+            // ShiftMask was requested (default Blocking) but a
+            // non-uniform grid cannot run it.
+            assert_eq!(fused.decoder_kind(), DecoderKind::Lut, "{cb:?}");
+            naive.step(2).unwrap();
+            fused.step(2).unwrap();
+            for gi in 0..naive.gemms().len() {
+                let err = max_rel_err(fused.output(gi, 2), naive.output(gi, 2));
+                assert!(err <= 1e-4, "{cb:?} gemm {gi}: {err}");
+            }
+        }
+    }
+
+    #[test]
+    fn uniform_step_honors_the_requested_decoder() {
+        let spec = Model::Tiny.spec();
+        let shift = StepExecutor::new(&spec, StepBackend::Fused, Blocking::default(), 128, 2, 3)
+            .unwrap();
+        assert_eq!(shift.codebook(), CodebookKind::Int4Uniform);
+        assert_eq!(shift.decoder_kind(), DecoderKind::ShiftMask);
+        let b = Blocking { decoder: DecoderKind::Lut, ..Blocking::default() };
+        let lut = StepExecutor::new(&spec, StepBackend::Fused, b, 128, 2, 3).unwrap();
+        assert_eq!(lut.decoder_kind(), DecoderKind::Lut);
     }
 
     #[test]

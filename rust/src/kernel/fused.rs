@@ -23,8 +23,11 @@
 
 use anyhow::Result;
 
-use crate::quant::decode::{select_quick_decoder, TILE_COLS, TILE_ROWS};
-use crate::quant::{pack_quick, QuantizedTensor, PACK_FACTOR};
+use crate::quant::decode::{
+    select_quick_decoder, select_quick_lut_decoder, DecodeQuickFn, DecodeQuickLutFn, TILE_COLS,
+    TILE_ROWS,
+};
+use crate::quant::{pack_quick, Codebook, CodebookKind, DecoderKind, QuantizedTensor, PACK_FACTOR};
 
 use super::blocking::Blocking;
 use super::microkernel;
@@ -46,10 +49,14 @@ pub struct QuickWeights {
     pub n: usize,
     /// Quantization group length along K.
     pub group_size: usize,
+    /// The 16-entry grid the stream's nibbles index. Non-uniform grids
+    /// (NF4/MXFP4) force the LUT decode tier in [`gemm_quick_fused`].
+    pub codebook: CodebookKind,
 }
 
 impl QuickWeights {
-    /// Pack a logical quantized tensor into the QUICK layout.
+    /// Pack a logical quantized tensor into the QUICK layout
+    /// (the tensor's codebook rides along).
     ///
     /// # Panics
     ///
@@ -62,6 +69,57 @@ impl QuickWeights {
             k: t.k,
             n: t.n,
             group_size: t.group_size,
+            codebook: t.codebook,
+        }
+    }
+}
+
+/// The decode tier a GEMM call actually runs: the blocking's request,
+/// upgraded to [`DecoderKind::Lut`] whenever the weights carry a
+/// non-uniform codebook (shift-mask arithmetic cannot decode those).
+pub(crate) fn effective_decoder(requested: DecoderKind, codebook: CodebookKind) -> DecoderKind {
+    if codebook.is_uniform() {
+        requested
+    } else {
+        DecoderKind::Lut
+    }
+}
+
+/// A resolved quick-run decode tier: one enum dispatch per 16-word run,
+/// function pointers and the codebook bound once per GEMM call.
+pub(crate) enum QuickDecode {
+    /// Shift-mask expansion (uniform INT4 only).
+    Shift(DecodeQuickFn),
+    /// Codebook table lookup.
+    Lut(DecodeQuickLutFn, &'static Codebook),
+}
+
+impl QuickDecode {
+    /// Resolve the decode tier for `(blocking, weights-codebook)`.
+    pub(crate) fn resolve(simd: bool, requested: DecoderKind, codebook: CodebookKind) -> Self {
+        match effective_decoder(requested, codebook) {
+            DecoderKind::ShiftMask => QuickDecode::Shift(select_quick_decoder(simd)),
+            DecoderKind::Lut => QuickDecode::Lut(select_quick_lut_decoder(simd), codebook.table()),
+        }
+    }
+
+    /// Decode one 16-word run (the [`select_quick_decoder`] contract).
+    #[inline]
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn run(
+        &self,
+        run: &[u32],
+        row0: usize,
+        col0: usize,
+        scales: &[f32],
+        zeros: &[f32],
+        n: usize,
+        group_size: usize,
+        frag: &mut [f32],
+    ) {
+        match self {
+            QuickDecode::Shift(f) => f(run, row0, col0, scales, zeros, n, group_size, frag),
+            QuickDecode::Lut(f, cb) => f(run, row0, col0, scales, zeros, n, group_size, cb, frag),
         }
     }
 }
@@ -105,7 +163,7 @@ pub fn gemm_quick_fused_planned(
     anyhow::ensure!(y.len() == m * w.n, "y holds {} values, needs {}", y.len(), m * w.n);
     let b = plan.blocking;
     let kern = microkernel::select(b.simd);
-    let decode = select_quick_decoder(b.simd);
+    let decode = QuickDecode::resolve(b.simd, b.decoder, w.codebook);
     plan.execute(y, &|panel, out, ldy, out_c0, scratch| {
         // The K-strip fragment panel: kc x 8 f32 (8 KiB at the default
         // blocking), resident in the plan's per-slot scratch and refilled
@@ -123,7 +181,7 @@ pub fn gemm_quick_fused_planned(
                     for kt_rel in 0..kc_len / TILE_ROWS {
                         let row0 = kb0 + kt_rel * TILE_ROWS;
                         let off = plan.run_offset(row0 / TILE_ROWS, wj);
-                        decode(
+                        decode.run(
                             &w.stream[off..off + TILE_ROWS],
                             row0,
                             wj * PACK_FACTOR,
@@ -233,6 +291,46 @@ mod tests {
         let sb = Blocking { threads: 1, simd: false, ..Blocking::default() };
         gemm_quick_fused(&x, m, &w, &sb, &mut scalar).unwrap();
         assert!(max_rel_err(&simd, &scalar) <= 1e-5);
+    }
+
+    #[test]
+    fn lut_decoder_on_uniform_weights_is_bit_identical() {
+        // Same identity table, same affine, no FMA in the decoders:
+        // switching `Blocking::decoder` must not change a single bit.
+        use crate::quant::DecoderKind;
+        let (k, n, g, m) = (96, 40, 32, 7);
+        let (x, t) = rand_case(k, n, g, m, 63);
+        let w = QuickWeights::from_quantized(&t);
+        let shift = Blocking { threads: 1, ..Blocking::default() };
+        let lut = Blocking { threads: 1, decoder: DecoderKind::Lut, ..Blocking::default() };
+        let mut a = vec![0f32; m * n];
+        let mut b = vec![0f32; m * n];
+        gemm_quick_fused(&x, m, &w, &shift, &mut a).unwrap();
+        gemm_quick_fused(&x, m, &w, &lut, &mut b).unwrap();
+        assert!(a.iter().zip(&b).all(|(p, q)| p.to_bits() == q.to_bits()));
+    }
+
+    #[test]
+    fn nonuniform_codebooks_match_naive_reference() {
+        // NF4/MXFP4 weights force the LUT tier; the fused output must
+        // agree with naive-on-dequantized at the kernel bar.
+        use crate::quant::{quantize_groupwise_codebook, CodebookKind};
+        let (k, n, g, m) = (64, 48, 32, 5);
+        let mut rng = Rng::seed_from_u64(77);
+        let wf: Vec<f32> = (0..k * n).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect();
+        let x: Vec<f32> = (0..m * k).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect();
+        for kind in [CodebookKind::Nf4, CodebookKind::Mxfp4] {
+            let t = quantize_groupwise_codebook(&wf, k, n, g, kind);
+            let naive = NaiveBackend::from_quantized(&t);
+            let mut want = vec![0f32; m * n];
+            naive.gemm(&x, m, &mut want);
+            let w = QuickWeights::from_quantized(&t);
+            assert_eq!(w.codebook, kind);
+            let mut got = vec![f32::NAN; m * n];
+            gemm_quick_fused(&x, m, &w, &Blocking::default(), &mut got).unwrap();
+            let err = max_rel_err(&got, &want);
+            assert!(err <= 1e-4, "{kind:?}: rel err {err}");
+        }
     }
 
     #[test]

@@ -19,10 +19,13 @@
 
 use anyhow::Result;
 
-use crate::quant::decode::select_awq_decoder;
-use crate::quant::{pack_awq, QuantizedTensor, PACK_FACTOR};
+use crate::quant::decode::{
+    select_awq_decoder, select_awq_lut_decoder, DecodeAwqFn, DecodeAwqLutFn,
+};
+use crate::quant::{pack_awq, Codebook, CodebookKind, DecoderKind, QuantizedTensor, PACK_FACTOR};
 
 use super::blocking::Blocking;
+use super::fused::effective_decoder;
 use super::microkernel;
 use super::plan::{GemmPlan, PlanCache};
 
@@ -42,10 +45,14 @@ pub struct AwqWeights {
     pub n: usize,
     /// Quantization group length along K.
     pub group_size: usize,
+    /// The 16-entry grid the words' nibbles index. Non-uniform grids
+    /// (NF4/MXFP4) force the LUT decode tier in [`gemm_awq_writeback`].
+    pub codebook: CodebookKind,
 }
 
 impl AwqWeights {
-    /// Pack a logical quantized tensor into the stock AWQ layout.
+    /// Pack a logical quantized tensor into the stock AWQ layout
+    /// (the tensor's codebook rides along).
     ///
     /// # Panics
     ///
@@ -58,6 +65,33 @@ impl AwqWeights {
             k: t.k,
             n: t.n,
             group_size: t.group_size,
+            codebook: t.codebook,
+        }
+    }
+}
+
+/// The AWQ twin of `fused::QuickDecode`: one enum dispatch per word,
+/// function pointers and codebook bound once per GEMM call.
+enum AwqDecode {
+    /// Shift-mask expansion (uniform INT4 only).
+    Shift(DecodeAwqFn),
+    /// Codebook table lookup.
+    Lut(DecodeAwqLutFn, &'static Codebook),
+}
+
+impl AwqDecode {
+    fn resolve(simd: bool, requested: DecoderKind, codebook: CodebookKind) -> Self {
+        match effective_decoder(requested, codebook) {
+            DecoderKind::ShiftMask => AwqDecode::Shift(select_awq_decoder(simd)),
+            DecoderKind::Lut => AwqDecode::Lut(select_awq_lut_decoder(simd), codebook.table()),
+        }
+    }
+
+    #[inline]
+    fn word(&self, word: u32, s8: &[f32], z8: &[f32], out: &mut [f32]) {
+        match self {
+            AwqDecode::Shift(f) => f(word, s8, z8, out),
+            AwqDecode::Lut(f, cb) => f(word, s8, z8, cb, out),
         }
     }
 }
@@ -99,7 +133,7 @@ pub fn gemm_awq_writeback_planned(
     anyhow::ensure!(y.len() == m * w.n, "y holds {} values, needs {}", y.len(), m * w.n);
     let b = plan.blocking;
     let kern = microkernel::select(b.simd);
-    let decode = select_awq_decoder(b.simd);
+    let decode = AwqDecode::resolve(b.simd, b.decoder, w.codebook);
     let w_total = w.n / PACK_FACTOR;
     plan.execute(y, &|panel, out, ldy, out_c0, scratch| {
         // The write-back staging tile (kc x nc f32, 16x the fused
@@ -120,7 +154,7 @@ pub fn gemm_awq_writeback_planned(
                     let gbase = (row / w.group_size) * w.n;
                     for wj in panel.wj0..panel.wj1 {
                         let c0 = wj * PACK_FACTOR;
-                        decode(
+                        decode.word(
                             w.qweight[row * w_total + wj],
                             &w.scales[gbase + c0..gbase + c0 + PACK_FACTOR],
                             &w.zeros[gbase + c0..gbase + c0 + PACK_FACTOR],
@@ -211,6 +245,40 @@ mod tests {
             let mut multi = vec![0f32; m * n];
             gemm_awq_writeback(&x, m, &w, &b, &mut multi).unwrap();
             assert_eq!(single, multi, "pool={pool}");
+        }
+    }
+
+    #[test]
+    fn lut_decoder_on_uniform_weights_is_bit_identical() {
+        let (k, n, g, m) = (96, 40, 32, 7);
+        let (x, t) = rand_case(k, n, g, m, 64);
+        let w = AwqWeights::from_quantized(&t);
+        let shift = Blocking { threads: 1, ..Blocking::default() };
+        let lut = Blocking { threads: 1, decoder: DecoderKind::Lut, ..Blocking::default() };
+        let mut a = vec![0f32; m * n];
+        let mut b = vec![0f32; m * n];
+        gemm_awq_writeback(&x, m, &w, &shift, &mut a).unwrap();
+        gemm_awq_writeback(&x, m, &w, &lut, &mut b).unwrap();
+        assert!(a.iter().zip(&b).all(|(p, q)| p.to_bits() == q.to_bits()));
+    }
+
+    #[test]
+    fn nonuniform_codebooks_match_naive_reference() {
+        use crate::quant::quantize_groupwise_codebook;
+        let (k, n, g, m) = (64, 48, 32, 5);
+        let mut rng = Rng::seed_from_u64(78);
+        let wf: Vec<f32> = (0..k * n).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect();
+        let x: Vec<f32> = (0..m * k).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect();
+        for kind in [CodebookKind::Nf4, CodebookKind::Mxfp4] {
+            let t = quantize_groupwise_codebook(&wf, k, n, g, kind);
+            let naive = NaiveBackend::from_quantized(&t);
+            let mut want = vec![0f32; m * n];
+            naive.gemm(&x, m, &mut want);
+            let w = AwqWeights::from_quantized(&t);
+            let mut got = vec![f32::NAN; m * n];
+            gemm_awq_writeback(&x, m, &w, &Blocking::default(), &mut got).unwrap();
+            let err = max_rel_err(&got, &want);
+            assert!(err <= 1e-4, "{kind:?}: rel err {err}");
         }
     }
 

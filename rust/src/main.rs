@@ -56,7 +56,8 @@ USAGE:
         Defaults: --artifacts artifacts, --kernel quick, --requests 32, --seed 0.
 
     quick-infer simulate [fig3|fig7|fig8|table1|prefix|continuous|tp|kernel-matmul|step|kv|chaos|all]
-                         [--model M] [--trace PATH] [--measured] [--quick]
+                         [--model M] [--codebook int4|nf4|mxfp4] [--trace PATH]
+                         [--measured] [--quick]
         Regenerate one experiment from the gpusim cost model (default: all).
           fig3        smem bank conflicts per kernel
           fig7        GEMM TOPS vs batch on all four devices
@@ -68,7 +69,9 @@ USAGE:
                       StepExecutor runtime instead of the cost model:
                       real GEMM streams per mixed prefill/decode step,
                       prefix hits skip real compute, drift ledger
-                      populated per shape (--quick shrinks the workload)
+                      populated per shape (--quick shrinks the workload;
+                      --codebook nf4|mxfp4 serves non-uniform 4-bit
+                      weights through the LUT decode tier)
           tp          tensor-parallel scaling sweep, tp 1|2|4|8 (extension);
                       --measured runs tp ranks concurrently on the
                       native runtime with gpusim-priced ring collectives
@@ -79,7 +82,10 @@ USAGE:
           step        *measured* end-to-end decode step tokens/s: every
                       weight GEMM of --model (default tiny) through the
                       native runtime at M in {1, 2, 4, 8}, plus the
-                      step-fitted gpusim calibration (not part of 'all')
+                      step-fitted gpusim calibration; --codebook
+                      int4|nf4|mxfp4 (default int4) picks the weight
+                      grid — non-uniform grids decode via the LUT tier
+                      (not part of 'all')
           kv          quantized KV cache: per-precision density table
                       (f16/kv8/kv4 bytes per token, tokens per block),
                       shared-prefix serving under memory pressure at each
@@ -95,18 +101,21 @@ USAGE:
 
     quick-infer bench    [kernels|check] [--k K] [--n N] [--group-size G]
                          [--json PATH] [--quick] [--decode-sweep] [--attention]
-                         [--strict] [--trace PATH]
+                         [--lut] [--strict] [--trace PATH]
         Run a measured native-kernel benchmark and append a structured
         JSON point to the perf trajectory (default target: kernels).
           kernels     fused-from-interleaved vs dequant-to-scratch GEMM,
                       M in {1, 8, 32, 128, 256}, plus the decode-shape
                       runtime sweep (M in {1, 2, 4, 8}: pool-vs-spawn,
-                      SIMD-vs-scalar, dispatch overhead) and the fused
+                      SIMD-vs-scalar, dispatch overhead), the LUT decoder
+                      sweep (shift-mask vs byte-shuffle LUT on INT4, plus
+                      NF4/MXFP4 codebooks), and the fused
                       dequant-attention KV sweep (kv4/kv8 vs dense over
                       context x batch); exits non-zero if any path
                       diverges from the naive reference (>1e-4 rel).
                       --decode-sweep runs only the decode sweep;
-                      --attention runs only the attention sweep.
+                      --attention runs only the attention sweep;
+                      --lut runs only the LUT decoder sweep.
           check       parse a previously written BENCH_kernels.json and
                       exit non-zero unless it is well-formed and its
                       differential gate passed (CI post-step). A
@@ -122,8 +131,10 @@ USAGE:
           obs         run a short instrumented workload, then print the
                       metrics-registry snapshot (pool, plan cache,
                       executor, scheduler, prefix cache, latency
-                      histograms) and the per-GEMM-shape modeled vs
-                      measured drift ratios
+                      histograms), the per-GEMM-shape modeled vs
+                      measured drift ratios, and the measured
+                      per-decoder dequant calibration (shift-mask vs
+                      LUT fit via calibrate_dequant)
           trace       parse a Chrome-trace JSON written by --trace and
                       exit non-zero unless it holds >= --min-spans spans
                       (default 1) from >= --min-threads threads
@@ -163,7 +174,7 @@ struct Args {
 }
 
 /// Flags that take no value (presence means `true`).
-const BOOL_FLAGS: [&str; 5] = ["quick", "decode-sweep", "attention", "measured", "strict"];
+const BOOL_FLAGS: [&str; 6] = ["quick", "decode-sweep", "attention", "lut", "measured", "strict"];
 
 impl Args {
     fn parse(argv: &[String]) -> Result<Args> {
@@ -256,6 +267,14 @@ fn main() -> Result<()> {
     }
 }
 
+/// Parse the `--codebook` flag (default `int4`) into a weight grid;
+/// unknown names list the valid ones.
+fn parse_codebook(args: &Args) -> Result<quick_infer::quant::CodebookKind> {
+    let name = args.get("codebook", "int4");
+    quick_infer::quant::CodebookKind::parse(&name)
+        .ok_or_else(|| anyhow::anyhow!("unknown codebook '{name}' (int4|nf4|mxfp4)"))
+}
+
 /// Run `f` with the span tracer on when `--trace PATH` was given,
 /// writing the Chrome-trace JSON and a one-line summary afterwards.
 fn with_trace(path: Option<&String>, f: impl FnOnce() -> Result<()>) -> Result<()> {
@@ -312,6 +331,7 @@ fn report_obs() -> Result<()> {
         128,
         &[1, 4],
         &Bench::smoke().silent(),
+        quick_infer::quant::CodebookKind::Int4Uniform,
     )?;
     // Small simulated serving runs: continuous scheduler + prefix cache.
     let dev = Gpu::RtxA6000.spec();
@@ -401,6 +421,47 @@ fn report_obs() -> Result<()> {
     println!("{}", Registry::global().report());
     println!();
     println!("{}", DriftAccountant::global().report());
+
+    // Per-decoder dequant calibration: time one uniform-INT4 layer under
+    // both nibble-decode tiers (same bits, decoder flipped via Blocking),
+    // then fit the LUT tier's dequant scale so the cost model's
+    // shift-mask/LUT latency ratio matches what this CPU measured.
+    use quick_infer::gpusim::calibrate_dequant;
+    use quick_infer::kernel::{gemm_quick_fused, Blocking, QuickWeights};
+    use quick_infer::quant::{quantize_groupwise, DecoderKind};
+    use quick_infer::util::rng::Rng;
+    let (ck, cn, cg, cm) = (512usize, 512usize, 128usize, 8usize);
+    let mut rng = Rng::seed_from_u64(0xD0C0);
+    let w: Vec<f32> = (0..ck * cn).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect();
+    let qw = QuickWeights::from_quantized(&quantize_groupwise(&w, ck, cn, cg));
+    let x: Vec<f32> = (0..cm * ck).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect();
+    let mut y = vec![0f32; cm * cn];
+    let cbench = Bench::smoke().silent();
+    let mut time_decoder = |b: &Blocking, label: &str| -> anyhow::Result<f64> {
+        let r = cbench.run(&format!("obs decoder {label}"), || {
+            gemm_quick_fused(&x, cm, &qw, b, &mut y).expect("fused gemm");
+            y[0]
+        });
+        Ok(r.median_ns / 1e9)
+    };
+    let shift_s = time_decoder(&Blocking::default(), "shift-mask")?;
+    let lut_s = time_decoder(&Blocking { decoder: DecoderKind::Lut, ..Blocking::default() }, "lut")?;
+    let fitted =
+        calibrate_dequant(&dev, KernelKind::Quick, cm as u64, cn as u64, ck as u64, shift_s, lut_s, &calib);
+    println!("\n-- decoder calibration ({ck}x{cn} g{cg} m{cm}, measured on this CPU) --");
+    println!("{:<12} {:>13} {:>14}", "decoder", "measured s", "dequant scale");
+    for (label, s, d) in [
+        ("shift-mask", shift_s, DecoderKind::ShiftMask),
+        ("lut", lut_s, DecoderKind::Lut),
+    ] {
+        println!("{label:<12} {s:>13.3e} {:>14.3}", fitted.dequant_scale(d));
+    }
+    println!(
+        "measured lut/shift-mask gap: {:.2}x -> calibrated dequant_scale_lut {:.3} (default 1.0)",
+        lut_s / shift_s.max(1e-12),
+        fitted.dequant_scale(DecoderKind::Lut)
+    );
+
     anyhow::ensure!(
         !DriftAccountant::global().is_empty(),
         "drift ledger is empty after a measured run — the modeled-vs-measured seam is dark"
@@ -507,7 +568,7 @@ fn simulate(which: &str, args: &Args) -> Result<()> {
         "continuous" => {
             if args.flags.contains_key("measured") {
                 let n = if args.flags.contains_key("quick") { 16 } else { 48 };
-                figures::measured_serving(out, n)?;
+                figures::measured_serving(out, n, parse_codebook(args)?)?;
             } else {
                 figures::continuous_batching(out)?;
             }
@@ -537,7 +598,14 @@ fn simulate(which: &str, args: &Args) -> Result<()> {
             let name = args.get("model", "tiny");
             let model = quick_infer::model::Model::parse(&name)
                 .ok_or_else(|| anyhow::anyhow!("unknown model '{name}' (try 'tiny')"))?;
-            figures::step_throughput(out, model)?;
+            figures::step_throughput_with(
+                out,
+                model,
+                128,
+                &figures::DECODE_SWEEP_BATCHES,
+                &quick_infer::util::Bench::fast(),
+                parse_codebook(args)?,
+            )?;
         }
         "all" => {
             figures::fig3(out)?;
@@ -567,6 +635,7 @@ fn bench_cmd(target: &str, args: &Args) -> Result<()> {
             args.flags.contains_key("quick"),
             args.flags.contains_key("decode-sweep"),
             args.flags.contains_key("attention"),
+            args.flags.contains_key("lut"),
         ),
         "check" => bench_check(
             args.positional.get(1).map(String::as_str),
@@ -607,11 +676,12 @@ fn bench_kernels(
     quick: bool,
     decode_only: bool,
     attention_only: bool,
+    lut_only: bool,
 ) -> Result<()> {
     use quick_infer::util::{Bench, Json};
     anyhow::ensure!(
-        !(decode_only && attention_only),
-        "--decode-sweep and --attention are mutually exclusive"
+        [decode_only, attention_only, lut_only].iter().filter(|b| **b).count() <= 1,
+        "--decode-sweep, --attention, and --lut are mutually exclusive"
     );
     let (k, n, bench) = if quick {
         (512.min(k), 512.min(n), Bench::smoke())
@@ -619,7 +689,7 @@ fn bench_kernels(
         (k, n, Bench::fast())
     };
     let out = &mut std::io::stdout();
-    let report = if decode_only || attention_only {
+    let report = if decode_only || attention_only || lut_only {
         None
     } else {
         Some(figures::kernel_matmul_with(
@@ -631,10 +701,25 @@ fn bench_kernels(
             &bench,
         )?)
     };
-    let decode = if attention_only {
+    let decode = if attention_only || lut_only {
         None
     } else {
         Some(figures::decode_sweep_with(
+            out,
+            k,
+            n,
+            group_size,
+            &figures::DECODE_SWEEP_BATCHES,
+            &bench,
+        )?)
+    };
+    // LUT decoder sweep: part of every default run (including --quick CI
+    // smoke — `bench check --strict` requires its rows and gate key),
+    // skipped only when another sweep was requested alone.
+    let lut = if decode_only || attention_only {
+        None
+    } else {
+        Some(figures::lut_sweep_with(
             out,
             k,
             n,
@@ -651,7 +736,7 @@ fn bench_kernels(
     } else {
         (&figures::ATTN_SWEEP_SEQS, &figures::ATTN_SWEEP_BATCHES)
     };
-    let attn = if decode_only {
+    let attn = if decode_only || lut_only {
         None
     } else {
         Some(figures::attention_sweep_with(
@@ -722,6 +807,22 @@ fn bench_kernels(
             })
             .collect(),
     );
+    let lut_rows = Json::Arr(
+        lut.iter()
+            .flat_map(|l| l.rows.iter())
+            .map(|r| {
+                let mut o = std::collections::BTreeMap::new();
+                o.insert("m".to_string(), Json::Num(r.m as f64));
+                o.insert("shift_mask_gflops".to_string(), Json::Num(r.shift_mask_gflops));
+                o.insert("lut_int4_gflops".to_string(), Json::Num(r.lut_int4_gflops));
+                o.insert("lut_nf4_gflops".to_string(), Json::Num(r.lut_nf4_gflops));
+                o.insert("lut_mxfp4_gflops".to_string(), Json::Num(r.lut_mxfp4_gflops));
+                o.insert("lut_over_shift".to_string(), Json::Num(r.lut_over_shift()));
+                o.insert("nonuniform_over_int4".to_string(), Json::Num(r.nonuniform_over_int4()));
+                Json::Obj(o)
+            })
+            .collect(),
+    );
     let attn_rows = Json::Arr(
         attn.iter()
             .flat_map(|a| a.rows.iter())
@@ -750,6 +851,7 @@ fn bench_kernels(
         wb_err = Some(wb_err.unwrap_or(0.0).max(rep.writeback_rel_err));
     }
     let attn_err = attn.as_ref().map(|a| a.q4_rel_err.max(a.q8_rel_err).max(a.dense_rel_err));
+    let lut_err = lut.as_ref().map(|l| l.lut_rel_err);
     let mut gate = std::collections::BTreeMap::new();
     if let Some(e) = fused_err {
         gate.insert("fused_rel_err".to_string(), Json::Num(e));
@@ -760,6 +862,9 @@ fn bench_kernels(
     if let Some(e) = attn_err {
         gate.insert("attn_rel_err".to_string(), Json::Num(e));
     }
+    if let Some(e) = lut_err {
+        gate.insert("lut_rel_err".to_string(), Json::Num(e));
+    }
     gate.insert("tolerance".to_string(), Json::Num(1e-4));
     let mut extra = vec![
         ("bench", Json::Str("kernels".to_string())),
@@ -768,8 +873,12 @@ fn bench_kernels(
         ("rows", rows),
         ("differential_gate", Json::Obj(gate)),
     ];
+    if let Some(level) = decode.as_ref().map(|d| d.simd_level).or(lut.as_ref().map(|l| l.simd_level))
+    {
+        extra.push(("simd_level", Json::Str(level.to_string())));
+    }
+    let mut acceptance = std::collections::BTreeMap::new();
     if let Some(d) = &decode {
-        extra.push(("simd_level", Json::Str(d.simd_level.to_string())));
         extra.push(("decode_sweep", decode_rows));
         let last = d.rows.last().expect("non-empty decode sweep");
         let min_gap = d
@@ -777,12 +886,21 @@ fn bench_kernels(
             .iter()
             .map(figures::DecodeSweepRow::fused_over_writeback)
             .fold(f64::INFINITY, f64::min);
-        let mut acceptance = std::collections::BTreeMap::new();
         acceptance
             .insert("runtime_speedup_at_max_m".to_string(), Json::Num(last.runtime_speedup()));
         acceptance.insert("runtime_speedup_bar".to_string(), Json::Num(1.5));
         acceptance.insert("min_fused_over_writeback".to_string(), Json::Num(min_gap));
         acceptance.insert("fused_over_writeback_bar".to_string(), Json::Num(1.0));
+    }
+    if let Some(l) = &lut {
+        extra.push(("lut_sweep", lut_rows));
+        acceptance.insert("lut_speedup".to_string(), Json::Num(l.lut_speedup()));
+        acceptance.insert("lut_speedup_bar".to_string(), Json::Num(1.0));
+        acceptance
+            .insert("min_nonuniform_over_int4".to_string(), Json::Num(l.min_nonuniform_over_int4()));
+        acceptance.insert("nonuniform_over_int4_bar".to_string(), Json::Num(0.95));
+    }
+    if !acceptance.is_empty() {
         extra.push(("acceptance", Json::Obj(acceptance)));
     }
     if attn.is_some() {
@@ -796,7 +914,12 @@ fn bench_kernels(
 
     // CI gate: structured output above, hard failure below — a diverging
     // kernel must fail the job even though the artifact was written.
-    for (label, err) in [("fused", fused_err), ("write-back", wb_err), ("attention", attn_err)] {
+    for (label, err) in [
+        ("fused", fused_err),
+        ("write-back", wb_err),
+        ("attention", attn_err),
+        ("lut", lut_err),
+    ] {
         if let Some(e) = err {
             anyhow::ensure!(e <= 1e-4, "kernel divergence: {label} {e:.2e} vs naive exceeds 1e-4");
         }
@@ -836,17 +959,24 @@ fn bench_check(path: Option<&str>, strict: bool) -> Result<()> {
         .collect::<Vec<_>>()
         .join(", ");
     println!(
-        "bench JSON ok: {} runs, {} decode-sweep rows, {} attention rows, gate [{gate_summary}] \
-         (tol {:.0e})",
+        "bench JSON ok: {} runs, {} decode-sweep rows, {} attention rows, {} lut rows, \
+         gate [{gate_summary}] (tol {:.0e})",
         summary.runs,
         summary.decode_rows.unwrap_or(0),
         summary.attn_rows.unwrap_or(0),
+        summary.lut_rows.unwrap_or(0),
         summary.tolerance
     );
     if let Some((speedup, gap)) = summary.acceptance {
         println!(
             "acceptance (informational): runtime speedup {speedup:.2}x (bar 1.5x), \
              min fused/wb {gap:.2}x (bar 1.0x)"
+        );
+    }
+    if let Some((lut_speedup, nonuniform)) = summary.lut_acceptance {
+        println!(
+            "lut acceptance (informational): lut/shift-mask {lut_speedup:.2}x (bar 1.0x), \
+             min nonuniform/int4-lut {nonuniform:.2}x (bar 0.95x)"
         );
     }
     Ok(())

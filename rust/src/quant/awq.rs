@@ -2,6 +2,13 @@
 //!
 //! Matrices are row-major `(K, N)` — `K` in-features (reduction axis, groups
 //! run along it), `N` out-features — multiplied as `y = x @ w`.
+//!
+//! Codes may index any 16-entry [`Codebook`] grid
+//! ([`quantize_groupwise_codebook`]); the stock path
+//! ([`quantize_groupwise`]) is the uniform INT4 grid, for which decode
+//! `(table[q] - z) * s` degenerates to the classic `(q - z) * s`.
+
+use super::codebook::{nearest_code, CodebookKind};
 
 /// Quantization bit width.
 pub const QBITS: u32 = 4;
@@ -20,6 +27,9 @@ pub struct QuantizedTensor {
     pub k: usize,
     pub n: usize,
     pub group_size: usize,
+    /// Which 16-entry grid the codes index (uniform INT4 for the stock
+    /// AWQ path; NF4/MXFP4 decode through the LUT tier).
+    pub codebook: CodebookKind,
 }
 
 impl QuantizedTensor {
@@ -84,11 +94,77 @@ pub fn quantize_groupwise(w: &[f32], k: usize, n: usize, group_size: usize) -> Q
             }
         }
     }
-    QuantizedTensor { codes, scales, zeros, k, n, group_size }
+    QuantizedTensor { codes, scales, zeros, k, n, group_size, codebook: CodebookKind::Int4Uniform }
 }
 
-/// Dequantize back to f32: `(q - z) * s` per group. Inverse of
-/// [`quantize_groupwise`] up to quantization error.
+/// Quantize `w` onto an arbitrary 16-entry codebook grid.
+///
+/// For [`CodebookKind::Int4Uniform`] this is exactly
+/// [`quantize_groupwise`] (asymmetric min/max affine). The non-uniform
+/// grids (NF4, MXFP4) are symmetric, so the zero-points are all `0.0`
+/// and the per-`(group, column)` scale is `absmax / max|table|`;
+/// codes are nearest-entry in code space (`w / s`), first minimizer
+/// winning ties — the `np.argmin` convention the Python golden-fixture
+/// mirror uses.
+pub fn quantize_groupwise_codebook(
+    w: &[f32],
+    k: usize,
+    n: usize,
+    group_size: usize,
+    kind: CodebookKind,
+) -> QuantizedTensor {
+    if kind.is_uniform() {
+        return quantize_groupwise(w, k, n, group_size);
+    }
+    assert_eq!(w.len(), k * n, "weight buffer size mismatch");
+    assert!(
+        group_size > 0 && k % group_size == 0,
+        "K={k} not divisible by group_size={group_size}"
+    );
+    let cb = kind.table();
+    let cb_max = cb.absmax();
+    let g = k / group_size;
+    let mut scales = vec![0f32; g * n];
+    let zeros = vec![0f32; g * n];
+    let mut codes = vec![0i32; k * n];
+    // Same row-major streaming passes as the uniform path: absmax per
+    // column, then a code pass over the group's rows.
+    let mut wabs = vec![0f32; n];
+    for gi in 0..g {
+        let base = gi * group_size * n;
+        wabs.iter_mut().zip(&w[base..base + n]).for_each(|(a, &v)| *a = v.abs());
+        for r in 1..group_size {
+            let row = &w[base + r * n..base + (r + 1) * n];
+            for col in 0..n {
+                let v = row[col].abs();
+                if v > wabs[col] {
+                    wabs[col] = v;
+                }
+            }
+        }
+        let srow = &mut scales[gi * n..(gi + 1) * n];
+        for col in 0..n {
+            let mut s = wabs[col] / cb_max;
+            if s <= 0.0 {
+                s = 1.0; // degenerate all-zero group (uniform-path guard)
+            }
+            srow[col] = s;
+        }
+        for r in 0..group_size {
+            let off = base + r * n;
+            let (wrow, crow) = (&w[off..off + n], &mut codes[off..off + n]);
+            for col in 0..n {
+                crow[col] = nearest_code(cb, wrow[col] / srow[col]);
+            }
+        }
+    }
+    QuantizedTensor { codes, scales, zeros, k, n, group_size, codebook: kind }
+}
+
+/// Dequantize back to f32: `(table[q] - z) * s` per group (plain
+/// `(q - z) * s` on the uniform grid). Inverse of
+/// [`quantize_groupwise`] / [`quantize_groupwise_codebook`] up to
+/// quantization error.
 ///
 /// Allocates a fresh buffer per call; hot loops (the write-back kernel's
 /// scratch pass, the hotpath bench) should reuse one via
@@ -115,6 +191,10 @@ pub fn dequantize_into(t: &QuantizedTensor, out: &mut [f32]) {
         t.n,
         t.k * t.n
     );
+    // The table walk covers the uniform grid too (identity table), and
+    // `table[q] - z` there is exactly `q as f32 - z`: bit-identical to
+    // the historical formula.
+    let lut = &t.codebook.table().values;
     for row in 0..t.k {
         let gi = row / t.group_size;
         let srow = &t.scales[gi * t.n..(gi + 1) * t.n];
@@ -122,7 +202,7 @@ pub fn dequantize_into(t: &QuantizedTensor, out: &mut [f32]) {
         let crow = &t.codes[row * t.n..(row + 1) * t.n];
         let orow = &mut out[row * t.n..(row + 1) * t.n];
         for col in 0..t.n {
-            orow[col] = (crow[col] as f32 - zrow[col]) * srow[col];
+            orow[col] = (lut[crow[col] as usize & 0xF] - zrow[col]) * srow[col];
         }
     }
 }
@@ -196,6 +276,56 @@ mod tests {
         // The buffer really is reused: a second pass overwrites in place.
         dequantize_into(&t, &mut reused);
         assert_eq!(fresh, reused);
+    }
+
+    #[test]
+    fn codebook_roundtrip_error_bounded_by_grid_gap() {
+        // Nearest-entry rounding: per element the reconstruction error
+        // is at most half the widest adjacent gap of the grid, scaled.
+        let (k, n, g) = (96, 24, 32);
+        let w = rand_w(k, n, 13);
+        for kind in [CodebookKind::Nf4, CodebookKind::Mxfp4] {
+            let cb = kind.table();
+            let mut sorted = cb.values;
+            sorted.sort_by(f32::total_cmp);
+            let half_gap =
+                sorted.windows(2).map(|p| (p[1] - p[0]) / 2.0).fold(0f32, f32::max);
+            let t = quantize_groupwise_codebook(&w, k, n, g, kind);
+            assert_eq!(t.codebook, kind);
+            assert!(t.zeros.iter().all(|&z| z == 0.0), "{kind:?} grids are symmetric");
+            assert!(t.codes.iter().all(|&c| (0..=QMAX).contains(&c)));
+            let back = dequantize(&t);
+            for row in 0..k {
+                let gi = row / g;
+                for col in 0..n {
+                    let err = (w[row * n + col] - back[row * n + col]).abs();
+                    let bound = t.scales[gi * n + col] * half_gap + 1e-5;
+                    assert!(err <= bound, "{kind:?} ({row},{col}): {err} > {bound}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn codebook_uniform_delegates_to_stock_path() {
+        let (k, n, g) = (64, 16, 32);
+        let w = rand_w(k, n, 29);
+        let a = quantize_groupwise(&w, k, n, g);
+        let b = quantize_groupwise_codebook(&w, k, n, g, CodebookKind::Int4Uniform);
+        assert_eq!(a, b);
+        assert_eq!(b.codebook, CodebookKind::Int4Uniform);
+    }
+
+    #[test]
+    fn codebook_degenerate_group_has_unit_scale() {
+        let w = vec![0f32; 32 * 8];
+        for kind in [CodebookKind::Nf4, CodebookKind::Mxfp4] {
+            let t = quantize_groupwise_codebook(&w, 32, 8, 32, kind);
+            assert!(t.scales.iter().all(|&s| s == 1.0));
+            // An all-zero group decodes back to exact zeros (both grids
+            // contain 0.0).
+            assert!(dequantize(&t).iter().all(|&v| v == 0.0));
+        }
     }
 
     #[test]

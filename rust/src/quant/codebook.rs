@@ -1,0 +1,236 @@
+//! 16-entry decode codebooks for non-uniform 4-bit weight formats.
+//!
+//! The shift-mask decoders in [`super::decode`] hard-code the uniform
+//! INT4 grid: a nibble `q` decodes to `(q - zero) * scale`. FLUTE-style
+//! table-lookup decode generalizes the grid to an arbitrary 16-entry
+//! [`Codebook`]: `q` indexes a value table and the decode becomes
+//! `(table[q] - zero) * scale` — the *same* affine, so uniform INT4 is
+//! the identity codebook (`table[q] == q as f32`, bit-identical to the
+//! shift-mask path) while NF4 (QLoRA's normal-float grid) and MXFP4
+//! (the OCP microscaling E2M1 grid) ride through the very same kernels
+//! at the very same speed: the lookup is an in-register byte shuffle
+//! (`vpermps` pair on AVX2, `tbl` on NEON, a scalar table walk in the
+//! portable fallback), not a gather.
+//!
+//! Quantization onto a non-uniform codebook is absmax-scaled
+//! nearest-entry rounding with a zero zero-point (both NF4 and MXFP4
+//! are symmetric grids): `scale = absmax / max|table|` per
+//! `(group, column)`, `code = argmin_q |w / scale - table[q]|` with the
+//! first minimizing entry winning ties — exactly NumPy's `argmin`
+//! convention, which the golden-fixture mirror in
+//! `python/tests/gen_golden_fixtures.py` relies on.
+
+/// Which 16-entry value grid a 4-bit tensor's codes index.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum CodebookKind {
+    /// The uniform grid `table[q] = q` — stock AWQ/QUICK INT4. Decodes
+    /// bit-identically through the shift-mask and LUT tiers.
+    #[default]
+    Int4Uniform,
+    /// QLoRA's NormalFloat-4 grid (quantiles of a standard normal,
+    /// normalized to `[-1, 1]`).
+    Nf4,
+    /// OCP microscaling FP4 (E2M1): `±{0, 0.5, 1, 1.5, 2, 3, 4, 6}`
+    /// with the nibble's bit 3 as the sign.
+    Mxfp4,
+}
+
+/// Every built-in codebook, in CLI/bench display order.
+pub const CODEBOOKS: [CodebookKind; 3] =
+    [CodebookKind::Int4Uniform, CodebookKind::Nf4, CodebookKind::Mxfp4];
+
+impl CodebookKind {
+    /// Short stable label used in bench rows, JSON keys, and fixtures.
+    pub fn label(self) -> &'static str {
+        match self {
+            CodebookKind::Int4Uniform => "int4",
+            CodebookKind::Nf4 => "nf4",
+            CodebookKind::Mxfp4 => "mxfp4",
+        }
+    }
+
+    /// Parse a CLI `--codebook` argument (the [`Self::label`] strings).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "int4" => Some(CodebookKind::Int4Uniform),
+            "nf4" => Some(CodebookKind::Nf4),
+            "mxfp4" => Some(CodebookKind::Mxfp4),
+            _ => None,
+        }
+    }
+
+    /// The 16-entry value table for this grid.
+    pub fn table(self) -> &'static Codebook {
+        match self {
+            CodebookKind::Int4Uniform => &INT4_UNIFORM,
+            CodebookKind::Nf4 => &NF4,
+            CodebookKind::Mxfp4 => &MXFP4,
+        }
+    }
+
+    /// Whether codes on this grid decode identically through the
+    /// shift-mask tier (only the uniform grid does; everything else
+    /// requires the LUT decoders).
+    pub fn is_uniform(self) -> bool {
+        self == CodebookKind::Int4Uniform
+    }
+}
+
+/// Which nibble-decode tier a GEMM call runs: the original shift-mask
+/// arithmetic expansion or the codebook table lookup. Part of
+/// [`crate::kernel::Blocking`], so it flows into `GemmPlan`/`PlanCache`
+/// keys; a non-uniform [`CodebookKind`] on the weights forces
+/// [`DecoderKind::Lut`] regardless of this knob.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum DecoderKind {
+    /// `(q - z) * s` via shift + mask + int→float convert (PR 5 tier).
+    #[default]
+    ShiftMask,
+    /// `(table[q] - z) * s` via in-register 16-entry table shuffle.
+    Lut,
+}
+
+/// Both decode tiers, in display order.
+pub const DECODERS: [DecoderKind; 2] = [DecoderKind::ShiftMask, DecoderKind::Lut];
+
+impl DecoderKind {
+    /// Short stable label used in bench rows and the calibration table.
+    pub fn label(self) -> &'static str {
+        match self {
+            DecoderKind::ShiftMask => "shift-mask",
+            DecoderKind::Lut => "lut",
+        }
+    }
+}
+
+/// A 16-entry lookup table mapping a nibble code to its decoded value.
+///
+/// Decode applies the shared affine `(values[q] - zero) * scale`; for
+/// the built-in non-uniform grids the zero-points are all `0.0` (the
+/// grids are symmetric), for [`CodebookKind::Int4Uniform`] the table is
+/// the identity and the stock asymmetric zero-points apply unchanged.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Codebook {
+    /// The grid this table belongs to.
+    pub kind: CodebookKind,
+    /// `values[q]` = decoded value of nibble code `q`.
+    pub values: [f32; 16],
+}
+
+impl Codebook {
+    /// Largest magnitude on the grid — the absmax quantization divisor.
+    pub fn absmax(&self) -> f32 {
+        self.values.iter().fold(0f32, |m, v| m.max(v.abs()))
+    }
+}
+
+/// The identity grid: `values[q] = q as f32`.
+pub static INT4_UNIFORM: Codebook = Codebook {
+    kind: CodebookKind::Int4Uniform,
+    values: [
+        0.0, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 9.0, 10.0, 11.0, 12.0, 13.0, 14.0, 15.0,
+    ],
+};
+
+/// QLoRA's NF4 grid (Dettmers et al., exact bitsandbytes constants).
+pub static NF4: Codebook = Codebook {
+    kind: CodebookKind::Nf4,
+    values: [
+        -1.0,
+        -0.696_192_8,
+        -0.525_073_05,
+        -0.394_917_5,
+        -0.284_441_38,
+        -0.184_773_43,
+        -0.091_050_036,
+        0.0,
+        0.079_580_3,
+        0.160_930_2,
+        0.246_112_3,
+        0.337_915_24,
+        0.440_709_83,
+        0.562_617,
+        0.722_956_84,
+        1.0,
+    ],
+};
+
+/// OCP MXFP4 (E2M1): sign in nibble bit 3, magnitudes
+/// `{0, 0.5, 1, 1.5, 2, 3, 4, 6}` in bits 0-2.
+pub static MXFP4: Codebook = Codebook {
+    kind: CodebookKind::Mxfp4,
+    values: [
+        0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0, -0.0, -0.5, -1.0, -1.5, -2.0, -3.0, -4.0, -6.0,
+    ],
+};
+
+/// Nearest grid entry for `t` (in code space, i.e. already divided by
+/// the group scale): first minimizing index wins ties, matching
+/// `np.argmin` in the Python fixture mirror.
+pub fn nearest_code(cb: &Codebook, t: f32) -> i32 {
+    let mut best = 0usize;
+    let mut best_d = (t - cb.values[0]).abs();
+    for (q, &v) in cb.values.iter().enumerate().skip(1) {
+        let d = (t - v).abs();
+        if d < best_d {
+            best_d = d;
+            best = q;
+        }
+    }
+    best as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn int4_uniform_is_identity() {
+        for q in 0..16 {
+            assert_eq!(INT4_UNIFORM.values[q], q as f32);
+        }
+        assert_eq!(INT4_UNIFORM.absmax(), 15.0);
+    }
+
+    #[test]
+    fn nonuniform_grids_are_symmetric_with_zero() {
+        for cb in [&NF4, &MXFP4] {
+            assert!(cb.values.contains(&0.0), "{:?} lacks exact zero", cb.kind);
+            assert_eq!(cb.values.len(), 16);
+        }
+        assert_eq!(NF4.absmax(), 1.0);
+        assert_eq!(MXFP4.absmax(), 6.0);
+        // MXFP4 sign structure: bit 3 flips the sign of the magnitude.
+        for q in 0..8 {
+            assert_eq!(MXFP4.values[q + 8], -MXFP4.values[q]);
+        }
+    }
+
+    #[test]
+    fn nf4_is_strictly_increasing() {
+        for q in 1..16 {
+            assert!(NF4.values[q] > NF4.values[q - 1]);
+        }
+    }
+
+    #[test]
+    fn nearest_code_picks_first_on_tie() {
+        // Midpoint between uniform entries 3 and 4 rounds to 3 (first
+        // minimizer), the NumPy argmin convention.
+        assert_eq!(nearest_code(&INT4_UNIFORM, 3.5), 3);
+        assert_eq!(nearest_code(&INT4_UNIFORM, -10.0), 0);
+        assert_eq!(nearest_code(&INT4_UNIFORM, 99.0), 15);
+        assert_eq!(nearest_code(&NF4, -1.0), 0);
+        assert_eq!(nearest_code(&NF4, 1.0), 15);
+        assert_eq!(nearest_code(&MXFP4, -5.9), 15);
+    }
+
+    #[test]
+    fn labels_parse_back() {
+        for kind in CODEBOOKS {
+            assert_eq!(CodebookKind::parse(kind.label()), Some(kind));
+            assert_eq!(kind.table().kind, kind);
+        }
+        assert_eq!(CodebookKind::parse("fp8"), None);
+    }
+}

@@ -32,6 +32,9 @@
 //! kernel layer pins either path via `Blocking::simd`
 //! ([`select_quick_decoder`] / [`select_awq_decoder`]).
 
+use std::sync::OnceLock;
+
+use super::codebook::Codebook;
 use super::interleave::MMA_K;
 use super::pack::{FT_ORDER, PACK_FACTOR};
 
@@ -48,26 +51,81 @@ pub type DecodeQuickFn = fn(&[u32], usize, usize, &[f32], &[f32], usize, usize, 
 /// [`decode_awq_word_into`] for the argument contract.
 pub type DecodeAwqFn = fn(u32, &[f32], &[f32], &mut [f32]);
 
+/// Signature shared by the LUT quick-run decoders: the
+/// [`decode_quick_run_into`] contract plus the 16-entry [`Codebook`]
+/// whose values the nibbles index (`(table[q] - z) * s`).
+pub type DecodeQuickLutFn =
+    fn(&[u32], usize, usize, &[f32], &[f32], usize, usize, &Codebook, &mut [f32]);
+
+/// Signature shared by the LUT AWQ word decoders: the
+/// [`decode_awq_word_into`] contract plus the [`Codebook`].
+pub type DecodeAwqLutFn = fn(u32, &[f32], &[f32], &Codebook, &mut [f32]);
+
+/// Resolve a function pointer once per process: the first call probes
+/// the CPU-feature tier, every later call is a single atomic load — the
+/// per-GEMM dispatch does no repeated feature detection.
+macro_rules! memoized_tier {
+    ($simd:expr, $cache:ident : $ty:ty, $fast:expr, $slow:expr) => {{
+        #[cfg(target_arch = "x86_64")]
+        {
+            static $cache: OnceLock<$ty> = OnceLock::new();
+            if $simd {
+                return *$cache.get_or_init(|| if avx2_available() { $fast } else { $slow });
+            }
+        }
+        let _ = $simd;
+        $slow
+    }};
+}
+
 /// Pick the quick-run decoder: SIMD when requested and supported, the
 /// scalar loop otherwise. The two are bit-identical (same `(q - z) * s`
-/// f32 arithmetic, no FMA), so this is a pure speed knob.
+/// f32 arithmetic, no FMA), so this is a pure speed knob. The feature
+/// probe is memoized behind a `OnceLock` function pointer: per-call
+/// dispatch is one atomic load, never a repeated CPUID.
 pub fn select_quick_decoder(simd: bool) -> DecodeQuickFn {
-    #[cfg(target_arch = "x86_64")]
-    if simd && avx2_available() {
-        return decode_quick_run_into_avx2;
-    }
-    let _ = simd;
-    decode_quick_run_into_scalar
+    memoized_tier!(
+        simd,
+        QUICK_SIMD: DecodeQuickFn,
+        decode_quick_run_into_avx2,
+        decode_quick_run_into_scalar
+    )
 }
 
 /// Pick the AWQ word decoder (same contract as [`select_quick_decoder`]).
 pub fn select_awq_decoder(simd: bool) -> DecodeAwqFn {
-    #[cfg(target_arch = "x86_64")]
-    if simd && avx2_available() {
-        return decode_awq_word_into_avx2;
-    }
-    let _ = simd;
-    decode_awq_word_into_scalar
+    memoized_tier!(
+        simd,
+        AWQ_SIMD: DecodeAwqFn,
+        decode_awq_word_into_avx2,
+        decode_awq_word_into_scalar
+    )
+}
+
+/// Pick the LUT quick-run decoder (FLUTE-style table shuffle): SIMD
+/// expands the lookup as a `vpermps` pair over the codebook halves with
+/// a sign-bit blend; scalar walks the 16-entry table. With the
+/// [`CodebookKind::Int4Uniform`](super::CodebookKind::Int4Uniform)
+/// table both are bit-identical to the shift-mask tier (the table is
+/// the identity and the affine is the same `(v - z) * s`, no FMA).
+pub fn select_quick_lut_decoder(simd: bool) -> DecodeQuickLutFn {
+    memoized_tier!(
+        simd,
+        QUICK_LUT_SIMD: DecodeQuickLutFn,
+        decode_quick_run_into_lut_avx2,
+        decode_quick_run_into_lut_scalar
+    )
+}
+
+/// Pick the LUT AWQ word decoder (same tiering as
+/// [`select_quick_lut_decoder`], still paying the FT-order unscramble).
+pub fn select_awq_lut_decoder(simd: bool) -> DecodeAwqLutFn {
+    memoized_tier!(
+        simd,
+        AWQ_LUT_SIMD: DecodeAwqLutFn,
+        decode_awq_word_into_lut_avx2,
+        decode_awq_word_into_lut_scalar
+    )
 }
 
 /// One-time cached CPUID probe for the "avx2" runtime tier — AVX2 *and*
@@ -266,10 +324,175 @@ unsafe fn decode_awq_word_into_avx2_body(word: u32, s8: &[f32], z8: &[f32], out:
     _mm256_storeu_ps(out.as_mut_ptr(), _mm256_mul_ps(_mm256_sub_ps(ql, z), s));
 }
 
+/// LUT tier of [`decode_quick_run_into`]: decode one interleaved
+/// 16-word run against a 16-entry [`Codebook`], `frag[r*8+p] =
+/// (cb.values[q] - z) * s`. Same argument contract, tile order, and
+/// group-metadata addressing as the shift-mask tier; with the uniform
+/// INT4 table the output is bit-identical to it.
+///
+/// Portable scalar implementation — also the reference the SIMD
+/// variant is property-tested against (bit-identical).
+#[inline]
+#[allow(clippy::too_many_arguments)]
+pub fn decode_quick_run_into_lut_scalar(
+    run: &[u32],
+    row0: usize,
+    col0: usize,
+    scales: &[f32],
+    zeros: &[f32],
+    n: usize,
+    group_size: usize,
+    cb: &Codebook,
+    frag: &mut [f32],
+) {
+    debug_assert_eq!(run.len(), TILE_ROWS);
+    debug_assert!(frag.len() >= TILE_ROWS * TILE_COLS);
+    let lut = &cb.values;
+    for (r, &word) in run.iter().enumerate() {
+        let gbase = ((row0 + r) / group_size) * n + col0;
+        let s = &scales[gbase..gbase + TILE_COLS];
+        let z = &zeros[gbase..gbase + TILE_COLS];
+        let out = &mut frag[r * TILE_COLS..(r + 1) * TILE_COLS];
+        for p in 0..TILE_COLS {
+            let q = ((word >> (4 * p)) & 0xF) as usize;
+            out[p] = (lut[q] - z[p]) * s[p];
+        }
+    }
+}
+
+/// AVX2 implementation of the LUT quick-run decode: the 16-entry table
+/// lives in two `ymm` registers for the whole run; each word's 8
+/// nibbles index both halves via `vpermps` (which reads only the low 3
+/// index bits, so no mask is needed) and nibble bit 3 — shifted into
+/// the sign position — blends the halves. No gather, no table memory
+/// traffic after the two initial loads.
+#[cfg(target_arch = "x86_64")]
+#[allow(clippy::too_many_arguments)]
+fn decode_quick_run_into_lut_avx2(
+    run: &[u32],
+    row0: usize,
+    col0: usize,
+    scales: &[f32],
+    zeros: &[f32],
+    n: usize,
+    group_size: usize,
+    cb: &Codebook,
+    frag: &mut [f32],
+) {
+    assert_eq!(run.len(), TILE_ROWS);
+    assert!(frag.len() >= TILE_ROWS * TILE_COLS);
+    let last_gbase = ((row0 + TILE_ROWS - 1) / group_size) * n + col0;
+    assert!(scales.len() >= last_gbase + TILE_COLS && zeros.len() >= last_gbase + TILE_COLS);
+    // SAFETY: AVX2 presence was checked by `select_quick_lut_decoder`;
+    // the asserts above bound every load/store offset in the body.
+    unsafe {
+        decode_quick_run_into_lut_avx2_body(run, row0, col0, scales, zeros, n, group_size, cb, frag)
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn decode_quick_run_into_lut_avx2_body(
+    run: &[u32],
+    row0: usize,
+    col0: usize,
+    scales: &[f32],
+    zeros: &[f32],
+    n: usize,
+    group_size: usize,
+    cb: &Codebook,
+    frag: &mut [f32],
+) {
+    use std::arch::x86_64::*;
+    let shifts = _mm256_setr_epi32(0, 4, 8, 12, 16, 20, 24, 28);
+    let lo = _mm256_loadu_ps(cb.values.as_ptr());
+    let hi = _mm256_loadu_ps(cb.values.as_ptr().add(8));
+    let fp = frag.as_mut_ptr();
+    for (r, &word) in run.iter().enumerate() {
+        let gbase = ((row0 + r) / group_size) * n + col0;
+        let s = _mm256_loadu_ps(scales.as_ptr().add(gbase));
+        let z = _mm256_loadu_ps(zeros.as_ptr().add(gbase));
+        // Lane p holds the word shifted right by 4p: nibble p in bits
+        // 0-3 with the higher nibbles as garbage above — harmless,
+        // because vpermps reads only bits 0-2 and the sign-select shift
+        // below discards everything past bit 3.
+        let q = _mm256_srlv_epi32(_mm256_set1_epi32(word as i32), shifts);
+        let vlo = _mm256_permutevar8x32_ps(lo, q);
+        let vhi = _mm256_permutevar8x32_ps(hi, q);
+        let sel = _mm256_castsi256_ps(_mm256_slli_epi32(q, 28));
+        let v = _mm256_blendv_ps(vlo, vhi, sel);
+        _mm256_storeu_ps(fp.add(r * TILE_COLS), _mm256_mul_ps(_mm256_sub_ps(v, z), s));
+    }
+}
+
+/// LUT tier of [`decode_awq_word_into`]: decode one stock-AWQ word
+/// against a [`Codebook`], still scattering through [`FT_ORDER`] to
+/// recover logical column order. Portable scalar implementation — the
+/// bit-identical reference for the SIMD variant.
+#[inline]
+pub fn decode_awq_word_into_lut_scalar(
+    word: u32,
+    s8: &[f32],
+    z8: &[f32],
+    cb: &Codebook,
+    out: &mut [f32],
+) {
+    debug_assert!(s8.len() >= TILE_COLS && z8.len() >= TILE_COLS && out.len() >= TILE_COLS);
+    let lut = &cb.values;
+    for (p, &dst) in FT_ORDER.iter().enumerate() {
+        let q = ((word >> (4 * p)) & 0xF) as usize;
+        out[dst] = (lut[q] - z8[dst]) * s8[dst];
+    }
+}
+
+/// AVX2 implementation of the LUT AWQ word decode: table shuffle as in
+/// the quick variant, then the FT-order unscramble as a `vpermps` —
+/// the baseline still pays its runtime permutation on top of the LUT.
+#[cfg(target_arch = "x86_64")]
+fn decode_awq_word_into_lut_avx2(word: u32, s8: &[f32], z8: &[f32], cb: &Codebook, out: &mut [f32]) {
+    assert!(s8.len() >= TILE_COLS && z8.len() >= TILE_COLS && out.len() >= TILE_COLS);
+    // SAFETY: AVX2 presence was checked by `select_awq_lut_decoder`;
+    // the assert above bounds the 8-float loads/stores.
+    unsafe { decode_awq_word_into_lut_avx2_body(word, s8, z8, cb, out) }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn decode_awq_word_into_lut_avx2_body(
+    word: u32,
+    s8: &[f32],
+    z8: &[f32],
+    cb: &Codebook,
+    out: &mut [f32],
+) {
+    use std::arch::x86_64::*;
+    let shifts = _mm256_setr_epi32(0, 4, 8, 12, 16, 20, 24, 28);
+    let perm = _mm256_setr_epi32(
+        FT_INV[0], FT_INV[1], FT_INV[2], FT_INV[3], FT_INV[4], FT_INV[5], FT_INV[6], FT_INV[7],
+    );
+    let lo = _mm256_loadu_ps(cb.values.as_ptr());
+    let hi = _mm256_loadu_ps(cb.values.as_ptr().add(8));
+    let q = _mm256_srlv_epi32(_mm256_set1_epi32(word as i32), shifts);
+    let vlo = _mm256_permutevar8x32_ps(lo, q);
+    let vhi = _mm256_permutevar8x32_ps(hi, q);
+    let sel = _mm256_castsi256_ps(_mm256_slli_epi32(q, 28));
+    let v = _mm256_blendv_ps(vlo, vhi, sel);
+    // Unscramble FT slot order -> logical column order, then the affine
+    // with straight (logical-order) metadata loads.
+    let vl = _mm256_permutevar8x32_ps(v, perm);
+    let s = _mm256_loadu_ps(s8.as_ptr());
+    let z = _mm256_loadu_ps(z8.as_ptr());
+    _mm256_storeu_ps(out.as_mut_ptr(), _mm256_mul_ps(_mm256_sub_ps(vl, z), s));
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::quant::{dequantize, pack_awq, pack_quick, quantize_groupwise};
+    use crate::quant::{
+        dequantize, pack_awq, pack_quick, quantize_groupwise, quantize_groupwise_codebook,
+        CodebookKind, CODEBOOKS,
+    };
 
     fn rand_w(k: usize, n: usize, seed: u64) -> Vec<f32> {
         let mut s = seed.wrapping_mul(0x9E3779B97F4A7C15) | 1;
@@ -387,6 +610,153 @@ mod tests {
         #[cfg(target_arch = "x86_64")]
         for (p, &dst) in FT_ORDER.iter().enumerate() {
             assert_eq!(FT_INV[dst] as usize, p);
+        }
+    }
+
+    #[test]
+    fn lut_int4_is_bit_identical_to_shift_mask() {
+        // The identity codebook must reproduce the shift-mask tier
+        // *bit*-for-bit, in every (SIMD, scalar) pairing, both layouts.
+        let (k, n, g) = (64, 40, 32);
+        let t = quantize_groupwise(&rand_w(k, n, 23), k, n, g);
+        let cb = CodebookKind::Int4Uniform.table();
+        let stream = pack_quick(&t.codes, k, n);
+        let words = pack_awq(&t.codes, k, n);
+        let w_total = n / TILE_COLS;
+        let mut a = [0f32; TILE_ROWS * TILE_COLS];
+        let mut b = [0f32; TILE_ROWS * TILE_COLS];
+        for simd in [false, true] {
+            let shift = select_quick_decoder(simd);
+            let lut = select_quick_lut_decoder(simd);
+            for kt in 0..k / TILE_ROWS {
+                for wj in 0..w_total {
+                    let off = quick_run_offset(kt, wj, w_total);
+                    let run = &stream[off..off + TILE_ROWS];
+                    shift(run, kt * TILE_ROWS, wj * TILE_COLS, &t.scales, &t.zeros, n, g, &mut a);
+                    lut(run, kt * TILE_ROWS, wj * TILE_COLS, &t.scales, &t.zeros, n, g, cb, &mut b);
+                    for (x, y) in a.iter().zip(&b) {
+                        assert_eq!(x.to_bits(), y.to_bits(), "simd={simd} kt={kt} wj={wj}");
+                    }
+                }
+            }
+            let shift_awq = select_awq_decoder(simd);
+            let lut_awq = select_awq_lut_decoder(simd);
+            let (mut ra, mut rb) = (vec![0f32; TILE_COLS], vec![0f32; TILE_COLS]);
+            for r in 0..k {
+                let gbase = (r / g) * n;
+                for wj in 0..w_total {
+                    let c0 = wj * TILE_COLS;
+                    let s8 = &t.scales[gbase + c0..gbase + c0 + TILE_COLS];
+                    let z8 = &t.zeros[gbase + c0..gbase + c0 + TILE_COLS];
+                    shift_awq(words[r * w_total + wj], s8, z8, &mut ra);
+                    lut_awq(words[r * w_total + wj], s8, z8, cb, &mut rb);
+                    for (x, y) in ra.iter().zip(&rb) {
+                        assert_eq!(x.to_bits(), y.to_bits(), "awq simd={simd} r={r} wj={wj}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lut_simd_is_bit_identical_to_lut_scalar_every_codebook() {
+        let (k, n, g) = (48, 24, 16);
+        for kind in CODEBOOKS {
+            let t = quantize_groupwise_codebook(&rand_w(k, n, 31), k, n, g, kind);
+            let cb = kind.table();
+            let stream = pack_quick(&t.codes, k, n);
+            let words = pack_awq(&t.codes, k, n);
+            let w_total = n / TILE_COLS;
+            let quick_simd = select_quick_lut_decoder(true);
+            let awq_simd = select_awq_lut_decoder(true);
+            let mut a = [0f32; TILE_ROWS * TILE_COLS];
+            let mut b = [0f32; TILE_ROWS * TILE_COLS];
+            for kt in 0..k / TILE_ROWS {
+                for wj in 0..w_total {
+                    let off = quick_run_offset(kt, wj, w_total);
+                    let run = &stream[off..off + TILE_ROWS];
+                    decode_quick_run_into_lut_scalar(
+                        run,
+                        kt * TILE_ROWS,
+                        wj * TILE_COLS,
+                        &t.scales,
+                        &t.zeros,
+                        n,
+                        g,
+                        cb,
+                        &mut a,
+                    );
+                    quick_simd(
+                        run,
+                        kt * TILE_ROWS,
+                        wj * TILE_COLS,
+                        &t.scales,
+                        &t.zeros,
+                        n,
+                        g,
+                        cb,
+                        &mut b,
+                    );
+                    for (x, y) in a.iter().zip(&b) {
+                        assert_eq!(x.to_bits(), y.to_bits(), "{kind:?} kt={kt} wj={wj}");
+                    }
+                }
+            }
+            let (mut ra, mut rb) = (vec![0f32; TILE_COLS], vec![0f32; TILE_COLS]);
+            for r in 0..k {
+                let gbase = (r / g) * n;
+                for wj in 0..w_total {
+                    let c0 = wj * TILE_COLS;
+                    let s8 = &t.scales[gbase + c0..gbase + c0 + TILE_COLS];
+                    let z8 = &t.zeros[gbase + c0..gbase + c0 + TILE_COLS];
+                    decode_awq_word_into_lut_scalar(words[r * w_total + wj], s8, z8, cb, &mut ra);
+                    awq_simd(words[r * w_total + wj], s8, z8, cb, &mut rb);
+                    for (x, y) in ra.iter().zip(&rb) {
+                        assert_eq!(x.to_bits(), y.to_bits(), "{kind:?} awq r={r} wj={wj}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lut_decode_matches_codebook_dequantize() {
+        // Decoding the interleaved stream through the LUT tier must
+        // reproduce `dequantize` exactly for the non-uniform grids.
+        let (k, n, g) = (32, 16, 16);
+        for kind in [CodebookKind::Nf4, CodebookKind::Mxfp4] {
+            let t = quantize_groupwise_codebook(&rand_w(k, n, 41), k, n, g, kind);
+            let reference = dequantize(&t);
+            let stream = pack_quick(&t.codes, k, n);
+            let w_total = n / TILE_COLS;
+            let decode = select_quick_lut_decoder(true);
+            let mut frag = [0f32; TILE_ROWS * TILE_COLS];
+            for kt in 0..k / TILE_ROWS {
+                for wj in 0..w_total {
+                    let off = quick_run_offset(kt, wj, w_total);
+                    decode(
+                        &stream[off..off + TILE_ROWS],
+                        kt * TILE_ROWS,
+                        wj * TILE_COLS,
+                        &t.scales,
+                        &t.zeros,
+                        n,
+                        g,
+                        kind.table(),
+                        &mut frag,
+                    );
+                    for r in 0..TILE_ROWS {
+                        for p in 0..TILE_COLS {
+                            let want = reference[(kt * TILE_ROWS + r) * n + wj * TILE_COLS + p];
+                            assert_eq!(
+                                frag[r * TILE_COLS + p],
+                                want,
+                                "{kind:?} kt={kt} wj={wj} r={r} p={p}"
+                            );
+                        }
+                    }
+                }
+            }
         }
     }
 

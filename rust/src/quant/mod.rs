@@ -21,6 +21,7 @@
 //! independently — the interleaved stream itself cannot be sliced.
 
 mod awq;
+pub mod codebook;
 pub mod decode;
 mod interleave;
 pub mod kv;
@@ -28,11 +29,22 @@ mod pack;
 mod search;
 pub mod shard;
 
-pub use awq::{dequantize, dequantize_into, quantize_groupwise, QuantizedTensor, QBITS, QMAX};
+pub use awq::{
+    dequantize, dequantize_into, quantize_groupwise, quantize_groupwise_codebook, QuantizedTensor,
+    QBITS, QMAX,
+};
+pub use codebook::{
+    nearest_code, Codebook, CodebookKind, DecoderKind, CODEBOOKS, DECODERS, INT4_UNIFORM, MXFP4,
+    NF4,
+};
 pub use kv::{
     dequantize_kv, quantize_kv, select_kv_decoder, KvDecodeFn, KvPrecision, QuantizedKv, KV_GROUP,
 };
-pub use decode::{decode_awq_word_into, decode_quick_run_into, quick_run_offset};
+pub use decode::{
+    decode_awq_word_into, decode_quick_run_into, quick_run_offset, select_awq_decoder,
+    select_awq_lut_decoder, select_quick_decoder, select_quick_lut_decoder, DecodeAwqFn,
+    DecodeAwqLutFn, DecodeQuickFn, DecodeQuickLutFn,
+};
 pub use interleave::{
     apply_word_perm, invert_perm, ldmatrix_fragment_perm, ldmatrix_fragment_perm_memo,
     try_ldmatrix_fragment_perm, unapply_word_perm, MMA_K, MMA_M, MMA_N, WARP_LANES,

@@ -25,6 +25,8 @@ pub struct BenchSummary {
     pub decode_rows: Option<usize>,
     /// Attention-sweep rows, when that sweep is present.
     pub attn_rows: Option<usize>,
+    /// LUT-decoder-sweep rows, when that sweep is present.
+    pub lut_rows: Option<usize>,
     /// Differential-gate keys present, with their relative errors.
     pub gate: Vec<(String, f64)>,
     /// Gate tolerance.
@@ -32,6 +34,9 @@ pub struct BenchSummary {
     /// `(runtime_speedup_at_max_m, min_fused_over_writeback)` from the
     /// informational acceptance block, when present.
     pub acceptance: Option<(f64, f64)>,
+    /// `(lut_speedup, min_nonuniform_over_int4)` from the acceptance
+    /// block, when the LUT sweep ran.
+    pub lut_acceptance: Option<(f64, f64)>,
 }
 
 /// Reject any non-finite number anywhere in `v`. `NaN` never survives
@@ -69,8 +74,9 @@ fn ensure_nonneg_fields(row: &Json, path: &str) -> Result<()> {
 /// Validate a `BENCH_kernels.json` document.
 ///
 /// `strict` is the CI mode (the bench just ran): placeholders are
-/// rejected, and the snapshot must be full — all three differential-gate
-/// keys plus both the decode and attention sweeps.
+/// rejected, and the snapshot must be full — all four differential-gate
+/// keys plus the decode, attention, and LUT-decoder sweeps (with the
+/// `lut_speedup` acceptance ratio).
 pub fn check_bench_json(text: &str, strict: bool) -> Result<BenchSummary> {
     let doc = Json::parse(text.trim())?;
     // The committed trajectory file may be an explicit placeholder from
@@ -92,7 +98,7 @@ pub fn check_bench_json(text: &str, strict: bool) -> Result<BenchSummary> {
     // A partial run (--decode-sweep / --attention) records only its own
     // gate keys; validate every key present and require at least one.
     let mut checked: Vec<(String, f64)> = Vec::new();
-    for key in ["fused_rel_err", "writeback_rel_err", "attn_rel_err"] {
+    for key in ["fused_rel_err", "writeback_rel_err", "attn_rel_err", "lut_rel_err"] {
         if let Some(v) = gate.get(key) {
             let e = v.as_f64()?;
             ensure!(e >= 0.0, "negative differential-gate error {key}: {e} — a broken writer");
@@ -102,8 +108,8 @@ pub fn check_bench_json(text: &str, strict: bool) -> Result<BenchSummary> {
     }
     ensure!(!checked.is_empty(), "differential gate records no error keys");
     ensure!(
-        !strict || checked.len() == 3,
-        "--strict requires all three gate keys (fused/write-back/attention), found {:?}",
+        !strict || checked.len() == 4,
+        "--strict requires all four gate keys (fused/write-back/attention/lut), found {:?}",
         checked.iter().map(|(k, _)| k.as_str()).collect::<Vec<_>>()
     );
     let decode_rows = doc.get("decode_sweep").map(Json::as_arr).transpose()?;
@@ -120,25 +126,46 @@ pub fn check_bench_json(text: &str, strict: bool) -> Result<BenchSummary> {
             ensure_nonneg_fields(row, &format!("attention_sweep[{i}]"))?;
         }
     }
+    let lut_rows = doc.get("lut_sweep").map(Json::as_arr).transpose()?;
+    if let Some(rows) = lut_rows {
+        ensure!(!rows.is_empty(), "lut sweep is empty");
+        for (i, row) in rows.iter().enumerate() {
+            ensure_nonneg_fields(row, &format!("lut_sweep[{i}]"))?;
+        }
+    }
     ensure!(
-        !strict || (decode_rows.is_some() && attn_rows.is_some()),
-        "--strict requires both the decode and attention sweeps in the snapshot"
+        !strict || (decode_rows.is_some() && attn_rows.is_some() && lut_rows.is_some()),
+        "--strict requires the decode, attention, and lut sweeps in the snapshot"
     );
-    let acceptance = match doc.get("acceptance") {
-        Some(acc) => Some((
-            acc.req("runtime_speedup_at_max_m")?.as_f64()?,
-            acc.req("min_fused_over_writeback")?.as_f64()?,
+    let acc = doc.get("acceptance");
+    let acceptance = match acc {
+        Some(a) if a.get("runtime_speedup_at_max_m").is_some() => Some((
+            a.req("runtime_speedup_at_max_m")?.as_f64()?,
+            a.req("min_fused_over_writeback")?.as_f64()?,
         )),
-        None => None,
+        _ => None,
     };
+    let lut_acceptance = match acc {
+        Some(a) if a.get("lut_speedup").is_some() => Some((
+            a.req("lut_speedup")?.as_f64()?,
+            a.req("min_nonuniform_over_int4")?.as_f64()?,
+        )),
+        _ => None,
+    };
+    ensure!(
+        !strict || lut_acceptance.is_some(),
+        "--strict requires the lut_speedup acceptance ratio in the snapshot"
+    );
     Ok(BenchSummary {
         placeholder: false,
         runs: runs.len(),
         decode_rows: decode_rows.map(<[Json]>::len),
         attn_rows: attn_rows.map(<[Json]>::len),
+        lut_rows: lut_rows.map(<[Json]>::len),
         gate: checked,
         tolerance: tol,
         acceptance,
+        lut_acceptance,
     })
 }
 
@@ -149,9 +176,13 @@ mod tests {
     const OK: &str = r#"{
         "runs": [{"m": 1, "gflops": 2.5}],
         "differential_gate": {"tolerance": 1e-4, "fused_rel_err": 1e-6,
-                              "writeback_rel_err": 2e-6, "attn_rel_err": 3e-6},
+                              "writeback_rel_err": 2e-6, "attn_rel_err": 3e-6,
+                              "lut_rel_err": 4e-6},
         "decode_sweep": [{"m": 1, "fused_pool_simd_gflops": 3.0}],
-        "attention_sweep": [{"ctx": 16, "q4_gflops": 1.0}]
+        "attention_sweep": [{"ctx": 16, "q4_gflops": 1.0}],
+        "lut_sweep": [{"m": 1, "shift_mask_gflops": 2.0, "lut_int4_gflops": 2.1}],
+        "acceptance": {"runtime_speedup_at_max_m": 2.0, "min_fused_over_writeback": 1.2,
+                       "lut_speedup": 1.05, "min_nonuniform_over_int4": 0.99}
     }"#;
 
     #[test]
@@ -159,9 +190,43 @@ mod tests {
         let s = check_bench_json(OK, true).unwrap();
         assert!(!s.placeholder);
         assert_eq!(s.runs, 1);
-        assert_eq!(s.gate.len(), 3);
+        assert_eq!(s.gate.len(), 4);
         assert_eq!(s.decode_rows, Some(1));
         assert_eq!(s.attn_rows, Some(1));
+        assert_eq!(s.lut_rows, Some(1));
+        assert_eq!(s.acceptance, Some((2.0, 1.2)));
+        assert_eq!(s.lut_acceptance, Some((1.05, 0.99)));
+    }
+
+    /// A pre-LUT snapshot: no `lut_rel_err` gate key, no `lut_sweep`
+    /// rows, no `lut_speedup` acceptance ratio.
+    const LEGACY: &str = r#"{
+        "runs": [{"m": 1, "gflops": 2.5}],
+        "differential_gate": {"tolerance": 1e-4, "fused_rel_err": 1e-6,
+                              "writeback_rel_err": 2e-6, "attn_rel_err": 3e-6},
+        "decode_sweep": [{"m": 1, "fused_pool_simd_gflops": 3.0}],
+        "attention_sweep": [{"ctx": 16, "q4_gflops": 1.0}],
+        "acceptance": {"runtime_speedup_at_max_m": 2.0, "min_fused_over_writeback": 1.2}
+    }"#;
+
+    #[test]
+    fn missing_lut_pieces_pass_lenient_fail_strict() {
+        // The legacy shape stays a valid lenient artifact but can no
+        // longer satisfy CI's --strict.
+        let s = check_bench_json(LEGACY, false).unwrap();
+        assert_eq!(s.gate.len(), 3);
+        assert_eq!(s.lut_rows, None);
+        assert_eq!(s.acceptance, Some((2.0, 1.2)));
+        assert_eq!(s.lut_acceptance, None);
+        let err = check_bench_json(LEGACY, true).err().expect("strict must fail");
+        assert!(format!("{err:#}").contains("four gate keys"), "{err:#}");
+    }
+
+    #[test]
+    fn lut_gate_over_tolerance_fails() {
+        let doc = OK.replace("\"lut_rel_err\": 4e-6", "\"lut_rel_err\": 2e-4");
+        let err = check_bench_json(&doc, false).err().expect("must fail");
+        assert!(format!("{err:#}").contains("lut_rel_err"), "{err:#}");
     }
 
     #[test]

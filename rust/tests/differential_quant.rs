@@ -129,6 +129,44 @@ fn load_kv_fixture(name: &str) -> KvFixture {
 const KV_FIXTURES: [&str; 3] =
     ["kv_s40_d64_b44.txt", "kv_s24_d32_b88.txt", "kv_s9_d64_b84.txt"];
 
+/// A LUT-decode golden case: dense f32 source weights (as bit patterns,
+/// so the Rust side requantizes the *exact* floats Python saw), the
+/// expected codes / packed stream / group metadata, and Python's decoded
+/// values through the shared `(table[q] - z) * s` affine.
+struct LutFixture {
+    codebook: quick_infer::quant::CodebookKind,
+    k: usize,
+    n: usize,
+    group_size: usize,
+    w: Vec<f32>,
+    codes: Vec<i32>,
+    quick: Vec<u32>,
+    scales: Vec<f32>,
+    zeros: Vec<f32>,
+    dequant: Vec<f32>,
+}
+
+fn load_lut_fixture(name: &str) -> LutFixture {
+    let fields = load_fields(name);
+    let get = |key: &str| fixture::req(&fields, key).unwrap_or_else(|e| panic!("{name}: {e:#}"));
+    LutFixture {
+        codebook: quick_infer::quant::CodebookKind::parse(get("codebook"))
+            .unwrap_or_else(|| panic!("{name}: unknown codebook {}", get("codebook"))),
+        k: get("k").parse().unwrap(),
+        n: get("n").parse().unwrap(),
+        group_size: get("group_size").parse().unwrap(),
+        w: parse_f32_words(get("w")),
+        codes: parse_nibbles(get("codes")),
+        quick: parse_words(get("quick")),
+        scales: parse_f32_words(get("scales")),
+        zeros: parse_f32_words(get("zeros")),
+        dequant: parse_f32_words(get("dequant")),
+    }
+}
+
+const LUT_FIXTURES: [&str; 3] =
+    ["lut_int4_k32_n32.txt", "lut_nf4_k64_n32.txt", "lut_mxfp4_k32_n64.txt"];
+
 #[test]
 fn fixtures_are_well_formed() {
     for name in FIXTURES {
@@ -210,7 +248,7 @@ fn tp_degree_one_shard_matches_python_stream() {
     // to the unsharded Python-generated QUICK stream and qzeros — the
     // differential anchor that sharding introduces no layout drift.
     use quick_infer::quant::{
-        shard_then_pack_quick, try_shard_plan, QuantizedTensor, TpPartition,
+        shard_then_pack_quick, try_shard_plan, CodebookKind, QuantizedTensor, TpPartition,
     };
     for name in FIXTURES {
         let f = load_fixture(name);
@@ -222,6 +260,7 @@ fn tp_degree_one_shard_matches_python_stream() {
             k: f.k,
             n: f.n,
             group_size: f.group_size,
+            codebook: CodebookKind::Int4Uniform,
         };
         for partition in [TpPartition::Column, TpPartition::Row] {
             let plan = try_shard_plan(partition, f.k, f.n, f.group_size, 1)
@@ -244,7 +283,7 @@ fn kernel_backends_match_python_fixture_weights() {
     use quick_infer::kernel::{
         max_rel_err, AwqWritebackBackend, Blocking, KernelBackend, QuickFusedBackend,
     };
-    use quick_infer::quant::{dequantize, QuantizedTensor};
+    use quick_infer::quant::{dequantize, CodebookKind, QuantizedTensor};
     use quick_infer::util::Rng;
     for name in FIXTURES {
         let f = load_fixture(name);
@@ -256,6 +295,7 @@ fn kernel_backends_match_python_fixture_weights() {
             k: f.k,
             n: f.n,
             group_size: f.group_size,
+            codebook: CodebookKind::Int4Uniform,
         };
         let fused = QuickFusedBackend::new(&t, Blocking::default());
         assert_eq!(fused.weights.stream, f.quick, "{name}: fused stream drift");
@@ -359,6 +399,101 @@ fn kv_attention_matches_python_reference() {
             attn_quant_fused(&f.q, &kq, &vq, f.m, scale, &cfg, &mut got).unwrap();
             let e = max_rel_err(&got, &f.attn);
             assert!(e <= 1e-4, "{name} cfg={cfg:?}: fused vs python reference {e:.2e}");
+        }
+    }
+}
+
+#[test]
+fn lut_fixtures_are_well_formed() {
+    use quick_infer::quant::CodebookKind;
+    let mut seen = Vec::new();
+    for name in LUT_FIXTURES {
+        let f = load_lut_fixture(name);
+        seen.push(f.codebook);
+        let groups = f.k / f.group_size;
+        assert_eq!(f.w.len(), f.k * f.n, "{name}: w size");
+        assert_eq!(f.codes.len(), f.k * f.n, "{name}: codes size");
+        assert_eq!(f.quick.len(), f.k * f.n / PACK_FACTOR, "{name}: quick size");
+        assert_eq!(f.scales.len(), groups * f.n, "{name}: scales size");
+        assert_eq!(f.zeros.len(), groups * f.n, "{name}: zeros size");
+        assert_eq!(f.dequant.len(), f.k * f.n, "{name}: dequant size");
+        assert!(f.codes.iter().all(|&c| (0..=15).contains(&c)), "{name}: code range");
+    }
+    // All three built-in grids are pinned by a fixture.
+    for kind in [CodebookKind::Int4Uniform, CodebookKind::Nf4, CodebookKind::Mxfp4] {
+        assert!(seen.contains(&kind), "{kind:?} has no LUT fixture");
+    }
+}
+
+#[test]
+fn lut_quantization_matches_python_word_exact() {
+    // Requantizing the fixture's exact f32 weights onto each codebook
+    // must reproduce Python's codes (and their packed QUICK stream)
+    // word-exactly, and the group metadata bit for bit.
+    use quick_infer::quant::{pack_quick, quantize_groupwise_codebook};
+    let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+    for name in LUT_FIXTURES {
+        let f = load_lut_fixture(name);
+        let t = quantize_groupwise_codebook(&f.w, f.k, f.n, f.group_size, f.codebook);
+        assert_eq!(t.codes, f.codes, "{name}: codes drift");
+        assert_eq!(pack_quick(&t.codes, f.k, f.n), f.quick, "{name}: packed stream drift");
+        assert_eq!(bits(&t.scales), bits(&f.scales), "{name}: scales drift");
+        assert_eq!(bits(&t.zeros), bits(&f.zeros), "{name}: zeros drift");
+    }
+}
+
+#[test]
+fn lut_decode_matches_python_reference() {
+    // The Rust decode of the fixture's codes — the table-walk dequantize
+    // and the LUT word decoders at both SIMD tiers — must land within
+    // 1e-6 of Python's `(table[q] - z) * s` reference values.
+    use quick_infer::quant::{
+        dequantize, pack_awq, select_awq_lut_decoder, QuantizedTensor,
+    };
+    for name in LUT_FIXTURES {
+        let f = load_lut_fixture(name);
+        let t = QuantizedTensor {
+            codes: f.codes.clone(),
+            scales: f.scales.clone(),
+            zeros: f.zeros.clone(),
+            k: f.k,
+            n: f.n,
+            group_size: f.group_size,
+            codebook: f.codebook,
+        };
+        let got = dequantize(&t);
+        for (i, (a, b)) in got.iter().zip(&f.dequant).enumerate() {
+            assert!((a - b).abs() <= 1e-6, "{name} dequantize [{i}]: {a} vs {b}");
+        }
+        let words = pack_awq(&f.codes, f.k, f.n);
+        let wn = f.n / PACK_FACTOR;
+        let cb = f.codebook.table();
+        for simd in [false, true] {
+            let decode = select_awq_lut_decoder(simd);
+            let mut out = [0f32; PACK_FACTOR];
+            for row in 0..f.k {
+                let gi = row / f.group_size;
+                let srow = &f.scales[gi * f.n..(gi + 1) * f.n];
+                let zrow = &f.zeros[gi * f.n..(gi + 1) * f.n];
+                for wj in 0..wn {
+                    let cols = wj * PACK_FACTOR..(wj + 1) * PACK_FACTOR;
+                    decode(
+                        words[row * wn + wj],
+                        &srow[cols.clone()],
+                        &zrow[cols.clone()],
+                        cb,
+                        &mut out,
+                    );
+                    for (c, &gotv) in out.iter().enumerate() {
+                        let want = f.dequant[row * f.n + wj * PACK_FACTOR + c];
+                        assert!(
+                            (gotv - want).abs() <= 1e-6,
+                            "{name} simd={simd} ({row},{}): {gotv} vs {want}",
+                            wj * PACK_FACTOR + c
+                        );
+                    }
+                }
+            }
         }
     }
 }

@@ -480,6 +480,7 @@ fn prop_simd_runtime_equals_scalar_runtime() {
             threads: rng.range_usize(1, 3),
             simd: true,
             pool: rng.range_usize(0, 1) == 0,
+            ..Blocking::default()
         };
         let scalar = Blocking { simd: false, ..base };
         let qw = QuickWeights::from_quantized(&t);
@@ -692,6 +693,106 @@ fn prop_attn_quant_fused_matches_naive_reference() {
         assert!(
             got.iter().zip(&again).all(|(x, y)| x.to_bits() == y.to_bits()),
             "parent pass disturbed by the fork's divergence"
+        );
+    });
+}
+
+#[test]
+fn prop_lut_int4_decode_bit_identical_to_shift_mask() {
+    // The uniform-INT4 codebook's table is the identity grid, so the LUT
+    // decode tier must reproduce the shift-mask tier *bit for bit* —
+    // word-level (AWQ FT-order words with random group metadata) and
+    // GEMM-level (the fused path with `Blocking::decoder` flipped) alike,
+    // at every SIMD tier the host has.
+    use quick_infer::kernel::{gemm_quick_fused, Blocking, QuickWeights};
+    use quick_infer::quant::{
+        select_awq_decoder, select_awq_lut_decoder, CodebookKind, DecoderKind,
+    };
+    check("lut-int4-vs-shift-mask", 0x10D4, default_cases(), |rng| {
+        let cb = CodebookKind::Int4Uniform.table();
+        let word = rng.next_u64() as u32;
+        let s8: Vec<f32> = (0..8).map(|_| (rng.f64() * 2.0 + 0.01) as f32).collect();
+        let z8: Vec<f32> = (0..8).map(|_| (rng.f64() * 15.0) as f32).collect();
+        for simd in [false, true] {
+            let mut shift = [0f32; 8];
+            let mut lut = [0f32; 8];
+            select_awq_decoder(simd)(word, &s8, &z8, &mut shift);
+            select_awq_lut_decoder(simd)(word, &s8, &z8, cb, &mut lut);
+            assert_eq!(
+                shift.map(f32::to_bits),
+                lut.map(f32::to_bits),
+                "simd={simd} word={word:#010x}"
+            );
+        }
+        let g = [32usize, 64][rng.range_usize(0, 1)];
+        let k = g * rng.range_usize(1, 2);
+        let n = rng.range_usize(1, 10) * 8;
+        let m = rng.range_usize(1, 6);
+        let w: Vec<f32> = (0..k * n).map(|_| (rng.f64() * 2.0 - 1.0) as f32).collect();
+        let t = quant::quantize_groupwise(&w, k, n, g);
+        let x: Vec<f32> = (0..m * k).map(|_| (rng.f64() * 2.0 - 1.0) as f32).collect();
+        let shift_b = Blocking {
+            kc: [16usize, 64][rng.range_usize(0, 1)],
+            nc_words: [1usize, 3][rng.range_usize(0, 1)],
+            threads: rng.range_usize(1, 3),
+            simd: rng.f64() < 0.5,
+            ..Blocking::default()
+        };
+        let lut_b = Blocking { decoder: DecoderKind::Lut, ..shift_b };
+        let qw = QuickWeights::from_quantized(&t);
+        let mut y_shift = vec![0f32; m * n];
+        let mut y_lut = vec![0f32; m * n];
+        gemm_quick_fused(&x, m, &qw, &shift_b, &mut y_shift).unwrap();
+        gemm_quick_fused(&x, m, &qw, &lut_b, &mut y_lut).unwrap();
+        assert!(
+            y_shift.iter().zip(&y_lut).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "k={k} n={n} g={g} m={m} {shift_b:?}: LUT-INT4 diverged from shift-mask"
+        );
+    });
+}
+
+#[test]
+fn prop_nonuniform_codebook_gemm_matches_naive() {
+    // Fused (and write-back) GEMMs on NF4/MXFP4-quantized weights — which
+    // force the LUT decode tier — must match the naive
+    // dequantize-then-triple-loop reference within the kernel
+    // differential bar over random shapes, blockings, and thread counts.
+    use quick_infer::kernel::{
+        max_rel_err, AwqWritebackBackend, Blocking, KernelBackend, NaiveBackend,
+        QuickFusedBackend,
+    };
+    use quick_infer::quant::CodebookKind;
+    check("codebook-gemm-vs-naive", 0xC0DE4, default_cases(), |rng| {
+        let cb = [CodebookKind::Nf4, CodebookKind::Mxfp4][rng.range_usize(0, 1)];
+        let g = [32usize, 64][rng.range_usize(0, 1)];
+        let k = g * rng.range_usize(1, 3);
+        let n = rng.range_usize(1, 12) * 8;
+        let m = rng.range_usize(1, 9);
+        let w: Vec<f32> = (0..k * n).map(|_| (rng.f64() * 2.0 - 1.0) as f32).collect();
+        let t = quant::quantize_groupwise_codebook(&w, k, n, g, cb);
+        let x: Vec<f32> = (0..m * k).map(|_| (rng.f64() * 2.0 - 1.0) as f32).collect();
+        let blocking = Blocking {
+            mc: [3usize, 16, 64][rng.range_usize(0, 2)],
+            kc: [16usize, 64][rng.range_usize(0, 1)],
+            nc_words: [1usize, 2, 16][rng.range_usize(0, 2)],
+            threads: rng.range_usize(1, 3),
+            simd: rng.f64() < 0.5,
+            ..Blocking::default()
+        };
+        let naive = NaiveBackend::from_quantized(&t);
+        let fused = QuickFusedBackend::new(&t, blocking);
+        let writeback = AwqWritebackBackend::new(&t, blocking);
+        let mut y_ref = vec![0f32; m * n];
+        let mut y_fused = vec![0f32; m * n];
+        let mut y_wb = vec![0f32; m * n];
+        naive.gemm(&x, m, &mut y_ref);
+        fused.gemm(&x, m, &mut y_fused);
+        writeback.gemm(&x, m, &mut y_wb);
+        let ef = max_rel_err(&y_fused, &y_ref);
+        let ew = max_rel_err(&y_wb, &y_ref);
+        assert!(
+            ef <= 1e-4 && ew <= 1e-4,
+            "{cb:?} k={k} n={n} g={g} m={m} {blocking:?}: fused {ef:.2e} wb {ew:.2e}"
         );
     });
 }
